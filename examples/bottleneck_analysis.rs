@@ -1,0 +1,77 @@
+//! Scenario: architecture bottleneck analysis (the paper's Figure-2
+//! study). For a chosen workload, show per-layer bottlenecks, the
+//! congested bisection, and how the picture changes between the
+//! layer-sequential baseline and the SA-optimized mapping.
+//!
+//! Run: `cargo run --release --example bottleneck_analysis [workload]`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::nop::NopModel;
+use wisper::report;
+use wisper::sim::{characterize, COMPONENTS};
+
+fn main() -> anyhow::Result<()> {
+    let workload = std::env::args().nth(1).unwrap_or_else(|| "densenet".into());
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg)?;
+
+    println!("== bottleneck analysis: {workload} ==\n");
+    let mut rows = Vec::new();
+    let mut stacked = Vec::new();
+    for (label, optimize) in [("layer-sequential", false), ("SA-optimized", true)] {
+        let prep = coord.prepare(&workload, optimize)?;
+        stacked.push((label.to_string(), prep.wired.shares));
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4e}", prep.wired.total_s),
+            COMPONENTS[prep
+                .wired
+                .shares
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0]
+                .to_string(),
+        ]);
+
+        // Worst layers by latency.
+        if optimize {
+            println!("top-5 slowest layers (SA mapping):");
+            let mut idx: Vec<usize> = (0..prep.wired.layer_latency.len()).collect();
+            idx.sort_by(|&a, &b| {
+                prep.wired.layer_latency[b]
+                    .partial_cmp(&prep.wired.layer_latency[a])
+                    .unwrap()
+            });
+            for &i in idx.iter().take(5) {
+                println!(
+                    "  {:<24} {:>10.2} us  bottleneck={}",
+                    prep.workload.layers[i].name,
+                    prep.wired.layer_latency[i] * 1e6,
+                    COMPONENTS[prep.wired.bottleneck[i]]
+                );
+            }
+
+            // Bisection pressure (the congested cut the paper blames).
+            let traffic = characterize(&prep.workload, &prep.mapping, &coord.pkg)?;
+            let nop = NopModel::new(coord.pkg.clone());
+            let mut bisection = 0.0;
+            for t in &traffic {
+                bisection += nop.bisection_load(&t.flows)?;
+            }
+            println!(
+                "\nbisection-crossing volume: {:.1} Mb per inference",
+                bisection / 1e6
+            );
+        }
+    }
+    println!("\n{}", report::stacked_shares(&stacked));
+    print!(
+        "{}",
+        report::table(&["mapping", "total (s)", "dominant"], &rows)
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md records this run).
+//!
+//! Exercises every layer of the stack on the full paper workload suite:
+//!   1. builds all 15 DNN benchmarks,
+//!   2. SA-maps each onto the 3x3 144-TOPS package (L3 mapper),
+//!   3. extracts cost tensors and sweeps the full wireless grid through
+//!      the AOT-compiled cost model (L2/L1 artifact via PJRT),
+//!   4. cross-validates the expected-value artifact against the
+//!      stochastic per-message simulator,
+//!   5. runs the adaptive load-balance search (the paper's future-work
+//!      mechanism) and compares it with the static grid,
+//!   6. reports Fig.2 / Fig.4-style aggregates + energy/EDP and writes
+//!      CSVs under results/.
+//!
+//! Run: `cargo run --release --example load_balance`
+
+use std::time::Instant;
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::loadbalance::adaptive_search;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+use wisper::util::stats;
+use wisper::workloads::WORKLOAD_NAMES;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg)?;
+    let rt = coord.runtime()?;
+    println!(
+        "package: 3x3 x {:.0} TOPS, runtime backend: {:?}, workers: {}\n",
+        coord.pkg.cfg.peak_tops(),
+        rt.backend(),
+        coord.workers()
+    );
+
+    // 1-2. Build + map everything (parallel across workloads).
+    let prepared = coord.prepare_all(true)?;
+    println!("mapped {} workloads in {:.2?}\n", prepared.len(), t0.elapsed());
+
+    // 3. Full grid sweeps at both paper bandwidths.
+    let fig4 = coord.fig4(&rt, &prepared)?;
+    let mut rows = Vec::new();
+    let mut gains64 = Vec::new();
+    let mut gains96 = Vec::new();
+    for (row, prep) in fig4.iter().zip(&prepared) {
+        let c64 = &row.per_bw[0];
+        let c96 = &row.per_bw[1];
+        gains64.push((c64.speedup - 1.0) * 100.0);
+        gains96.push((c96.speedup - 1.0) * 100.0);
+
+        // 4. Artifact vs stochastic cross-check at the 64 Gb/s best.
+        let w = WirelessConfig {
+            bandwidth_bits: 64e9,
+            distance_threshold: c64.threshold,
+            injection_prob: c64.pinj,
+            ..Default::default()
+        };
+        let (exp, stoch) = coord.validate_stochastic(prep, &w, 4)?;
+        let valid = (exp - stoch).abs() / exp.max(1e-30);
+
+        // 5. Adaptive search vs the static grid.
+        let ada = adaptive_search(&prep.tensors, 64e9, 4, 0.05)?;
+
+        // 6. Energy/EDP at the best 64 Gb/s point.
+        let (we, he, tw, th) = coord.energy(prep, &w)?;
+        let edp_gain = we.edp(tw) / he.edp(th);
+
+        rows.push(vec![
+            row.workload.clone(),
+            format!("{:+.1}%", (c64.speedup - 1.0) * 100.0),
+            format!("{:+.1}%", (c96.speedup - 1.0) * 100.0),
+            format!("{:+.1}%", (ada.speedup - 1.0) * 100.0),
+            format!("{}", ada.evaluations),
+            format!("{:.1}%", valid * 100.0),
+            format!("{:.2}x", edp_gain),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["workload", "64G grid", "96G grid", "adaptive", "evals", "stoch.err", "EDP gain"],
+            &rows
+        )
+    );
+
+    println!(
+        "\n64 Gb/s: avg {:+.1}% max {:+.1}%   (paper: ~7.5% avg, ~20% max)",
+        stats::mean(&gains64),
+        stats::max(&gains64)
+    );
+    println!(
+        "96 Gb/s: avg {:+.1}% max {:+.1}%   (paper: ~10%  avg, ~20% max)",
+        stats::mean(&gains96),
+        stats::max(&gains96)
+    );
+    println!("\nelapsed: {:.2?}", t0.elapsed());
+
+    let path = report::results_dir().join("e2e_load_balance.csv");
+    report::write_csv(
+        &path,
+        &["workload", "g64", "g96", "adaptive", "evals", "stocherr", "edp"],
+        &rows,
+    )?;
+    println!("wrote {}", path.display());
+    let _ = WORKLOAD_NAMES;
+    Ok(())
+}

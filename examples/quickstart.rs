@@ -1,0 +1,59 @@
+//! Quickstart: the whole public API in ~40 lines.
+//!
+//! Build one workload, map it onto the default 3x3 144-TOPS package,
+//! evaluate the wired baseline, switch the wireless plane on, and print
+//! the speedup.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::Coordinator;
+use wisper::sim::{evaluate_expected, COMPONENTS};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration (paper Table-1 defaults; tweak anything here).
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg)?;
+    println!("{}", coord.pkg.draw());
+
+    // 2. Build + SA-map a workload, producing its cost tensors.
+    let prep = coord.prepare("googlenet", true)?;
+    println!(
+        "googlenet: {} layers, {:.2} GMACs, wired latency {:.3} ms",
+        prep.workload.layers.len(),
+        prep.workload.total_macs() as f64 / 1e9,
+        prep.wired.total_s * 1e3
+    );
+    for (k, name) in COMPONENTS.iter().enumerate() {
+        println!("  {name:<9} bottleneck share: {:>5.1}%", prep.wired.shares[k] * 100.0);
+    }
+
+    // 3. Switch the wireless plane on at one configuration...
+    let w = WirelessConfig {
+        bandwidth_bits: 64e9,
+        distance_threshold: 2,
+        injection_prob: 0.4,
+        ..Default::default()
+    };
+    let hybrid = evaluate_expected(&prep.tensors, &w);
+    println!(
+        "\nwireless @ 64 Gb/s (d=2, p=0.40): {:.3} ms -> {:+.1}%",
+        hybrid.total_s * 1e3,
+        (prep.wired.total_s / hybrid.total_s - 1.0) * 100.0
+    );
+
+    // 4. ...or sweep the whole grid through the AOT-compiled cost model
+    // (one PJRT call for all 60 configurations). The runtime compiles the
+    // artifact once; reuse it across sweeps.
+    let rt = coord.runtime()?;
+    let sweep = coord.fig5(&rt, &prep, 64e9)?;
+    let best = sweep.best_point();
+    println!(
+        "best of 60-point sweep: d={} pinj={:.2} -> {:+.1}%",
+        best.threshold,
+        best.pinj,
+        (best.speedup - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+"""AOT export: lower the L2 cost model to HLO *text* for the Rust runtime.
+
+HLO text (NOT `lowered.compile()`/`.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).
+The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/gen_hlo.py for the reference wiring.
+
+Usage (from the Makefile):
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Also writes `<out>.meta` describing the contract (shapes, component
+order) so the Rust side can sanity-check at load time.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from .model import cost_model, cost_model_jnp
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_specs():
+    """ShapeDtypeStructs fixing the artifact ABI (see constants.py)."""
+    f32 = jnp.float32
+    L, H, Cn = C.MAX_LAYERS, C.HOP_BUCKETS, C.NUM_CONFIGS
+    return (
+        jax.ShapeDtypeStruct((L,), f32),  # t_comp
+        jax.ShapeDtypeStruct((L,), f32),  # t_dram
+        jax.ShapeDtypeStruct((L,), f32),  # t_noc
+        jax.ShapeDtypeStruct((L,), f32),  # nop_vh
+        jax.ShapeDtypeStruct((L, H), f32),  # elig_vh
+        jax.ShapeDtypeStruct((L, H), f32),  # elig_v
+        jax.ShapeDtypeStruct((Cn,), f32),  # thresh
+        jax.ShapeDtypeStruct((Cn,), f32),  # pinj
+        jax.ShapeDtypeStruct((Cn,), f32),  # wl_bw
+        jax.ShapeDtypeStruct((), f32),  # nop_bw
+    )
+
+
+def meta_text() -> str:
+    return (
+        f"max_layers={C.MAX_LAYERS}\n"
+        f"hop_buckets={C.HOP_BUCKETS}\n"
+        f"num_configs={C.NUM_CONFIGS}\n"
+        f"num_components={C.NUM_COMPONENTS}\n"
+        f"components={','.join(C.COMPONENT_NAMES)}\n"
+        "outputs=total,shares,wl_vol,speedup,t_wired\n"
+    )
+
+
+def export(out_path: str, use_jnp_fallback: bool = False) -> str:
+    fn = cost_model_jnp if use_jnp_fallback else cost_model
+    lowered = jax.jit(fn).lower(*example_specs())
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write(text)
+    with open(out_path + ".meta", "w") as f:
+        f.write(meta_text())
+    return text
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument(
+        "--jnp",
+        action="store_true",
+        help="lower the pure-jnp twin instead of the Pallas kernel path",
+    )
+    args = ap.parse_args()
+    text = export(args.out, use_jnp_fallback=args.jnp)
+    print(f"wrote {len(text)} chars to {args.out} (+ .meta)")
+
+
+if __name__ == "__main__":
+    main()

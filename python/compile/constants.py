@@ -1,0 +1,34 @@
+"""Shared AOT-contract constants for the wisper cost-model artifact.
+
+These fix the static shapes the artifact is lowered with. The Rust
+runtime (rust/src/runtime/contract.rs) mirrors them; keep in sync.
+
+Component order (K axis) is part of the contract:
+    0 = compute, 1 = dram, 2 = noc, 3 = nop (wired), 4 = wireless
+"""
+
+# Maximum number of workload layers the artifact accepts (zero-padded).
+# GNMT's unrolled encoder/decoder stack is the deepest paper workload at
+# 369 layers.
+MAX_LAYERS = 512
+
+# Hop-distance buckets for wireless eligibility: bucket i covers messages
+# whose max source->destination NoP hop distance is exactly i+1 hops.
+# A 3x3 chiplet mesh plus edge DRAMs tops out at 4-5 hops; 8 leaves
+# headroom for larger grids without relowering.
+HOP_BUCKETS = 8
+
+# Number of (distance threshold, injection probability, wireless bw)
+# configurations evaluated per artifact call. The paper's grid is
+# 4 thresholds x 15 probabilities = 60; padded to 64 for lane alignment.
+NUM_CONFIGS = 64
+
+# Bottleneck components tracked per layer.
+NUM_COMPONENTS = 5
+
+COMPONENT_NAMES = ("compute", "dram", "noc", "nop", "wireless")
+
+# Pallas block size along the config axis (NUM_CONFIGS must divide evenly).
+CONFIG_BLOCK = 8
+
+assert NUM_CONFIGS % CONFIG_BLOCK == 0

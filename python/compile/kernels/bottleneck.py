@@ -1,0 +1,175 @@
+"""L1 Pallas kernel: fused wireless-offload + bottleneck reduction.
+
+This is the compute hot-spot of the whole exploration loop: for every
+(distance threshold, injection probability, wireless bandwidth) config in
+the sweep grid, offload the eligible traffic, rebuild the per-layer
+component latencies, take the per-layer bottleneck max, and reduce to the
+per-config totals and bottleneck shares — in one pass.
+
+TPU mapping (DESIGN.md "Hardware-Adaptation"):
+  * the grid walks the config axis in blocks of CONFIG_BLOCK; each step
+    streams one [Cb, L, K] latency block through VMEM (Cb=8, L=256, K=5
+    -> ~40 KiB of f32 intermediates, comfortably double-bufferable);
+  * criterion-2 masking is an iota compare (dense, VPU-friendly), not a
+    gather;
+  * the [Cb,H] x [H,L] offload contraction is a small matmul that lands
+    on the MXU on real hardware;
+  * the K-axis max/argmax and L-axis sums vectorize on the VPU.
+
+interpret=True is mandatory on this CPU image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. The kernel is
+structured for TPU anyway; see DESIGN.md section 5 for the VMEM estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..constants import CONFIG_BLOCK, NUM_COMPONENTS
+
+
+def _kernel(
+    t_comp_ref,
+    t_dram_ref,
+    t_noc_ref,
+    nop_vh_ref,
+    elig_vh_ref,
+    elig_v_ref,
+    thresh_ref,
+    pinj_ref,
+    wl_bw_ref,
+    nop_bw_ref,
+    total_ref,
+    shares_ref,
+    wl_vol_ref,
+    t_wired_ref,
+):
+    t_comp = t_comp_ref[...]  # [L]
+    t_dram = t_dram_ref[...]
+    t_noc = t_noc_ref[...]
+    nop_vh = nop_vh_ref[...]
+    elig_vh = elig_vh_ref[...]  # [L,H]
+    elig_v = elig_v_ref[...]
+    thresh = thresh_ref[...]  # [Cb]
+    pinj = pinj_ref[...]
+    wl_bw = wl_bw_ref[...]
+    nop_bw = nop_bw_ref[0]
+
+    inv_nop = jnp.where(nop_bw > 0.0, 1.0 / jnp.maximum(nop_bw, 1e-30), 0.0)
+
+    # Criterion 2 (distance threshold) as an iota mask — dense compare, no
+    # gather, so the whole kernel stays on the vector units.
+    hops = jnp.arange(1, elig_vh.shape[1] + 1, dtype=jnp.float32)
+    mask = (hops[None, :] >= thresh[:, None]).astype(jnp.float32)  # [Cb,H]
+
+    # Criterion 3 (injection probability) in expectation. The [Cb,H]x[H,L]
+    # contraction is the MXU-friendly part on real TPUs.
+    moved_vh = pinj[:, None] * jnp.dot(mask, elig_vh.T)  # [Cb,L]
+    moved_v = pinj[:, None] * jnp.dot(mask, elig_v.T)  # [Cb,L]
+
+    t_nop = jnp.maximum(nop_vh[None, :] - moved_vh, 0.0) * inv_nop
+    t_wl = jnp.where(
+        moved_v > 0.0, moved_v / jnp.maximum(wl_bw[:, None], 1e-30), 0.0
+    )
+
+    cb = thresh.shape[0]
+    comp = jnp.broadcast_to(t_comp[None, :], (cb, t_comp.shape[0]))
+    dram = jnp.broadcast_to(t_dram[None, :], comp.shape)
+    noc = jnp.broadcast_to(t_noc[None, :], comp.shape)
+    lat_k = jnp.stack([comp, dram, noc, t_nop, t_wl], axis=-1)  # [Cb,L,K]
+
+    lat = jnp.max(lat_k, axis=-1)  # [Cb,L]
+    total_ref[...] = jnp.sum(lat, axis=-1)
+
+    who = jnp.argmax(lat_k, axis=-1)  # [Cb,L]
+    k_iota = jnp.arange(NUM_COMPONENTS, dtype=jnp.int32)
+    claimed = (who[:, :, None] == k_iota[None, None, :]).astype(
+        jnp.float32
+    ) * lat[:, :, None]
+    denom = jnp.maximum(jnp.sum(lat, axis=-1), 1e-30)
+    shares_ref[...] = jnp.sum(claimed, axis=1) / denom[:, None]
+
+    wl_vol_ref[...] = jnp.sum(moved_v, axis=-1)
+
+    # Wired-only baseline — identical for every grid step, so the
+    # redundant writes are idempotent and fuse away.
+    t_nop_wired = nop_vh * inv_nop
+    lat_wired = jnp.max(
+        jnp.stack([t_comp, t_dram, t_noc, t_nop_wired], axis=-1), axis=-1
+    )
+    t_wired_ref[...] = jnp.sum(lat_wired)[None]
+
+
+def _config_block(C: int) -> int:
+    """Largest power-of-two block <= CONFIG_BLOCK that divides C."""
+    cb = CONFIG_BLOCK
+    while cb > 1 and C % cb != 0:
+        cb //= 2
+    return cb
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cost_model_kernel(
+    t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+):
+    """Run the fused kernel over the full config grid.
+
+    Shapes are inferred from the inputs (the AOT artifact pins them to
+    python/compile/constants.py, but tests sweep them). Returns
+    (total [C], shares [C,K], wl_vol [C], t_wired []).
+    """
+    L = t_comp.shape[0]
+    H = elig_vh.shape[1]
+    C = thresh.shape[0]
+    K = NUM_COMPONENTS
+    cb = _config_block(C)
+    grid = (C // cb,)
+
+    full_l = pl.BlockSpec((L,), lambda i: (0,))
+    full_lh = pl.BlockSpec((L, H), lambda i: (0, 0))
+    cfg = pl.BlockSpec((cb,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+
+    total, shares, wl_vol, t_wired = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            full_l,  # t_comp
+            full_l,  # t_dram
+            full_l,  # t_noc
+            full_l,  # nop_vh
+            full_lh,  # elig_vh
+            full_lh,  # elig_v
+            cfg,  # thresh
+            cfg,  # pinj
+            cfg,  # wl_bw
+            scalar,  # nop_bw
+        ],
+        out_specs=[
+            cfg,  # total
+            pl.BlockSpec((cb, K), lambda i: (i, 0)),  # shares
+            cfg,  # wl_vol
+            scalar,  # t_wired
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((C, K), jnp.float32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        t_comp,
+        t_dram,
+        t_noc,
+        nop_vh,
+        elig_vh,
+        elig_v,
+        thresh,
+        pinj,
+        wl_bw,
+        jnp.reshape(nop_bw, (1,)),
+    )
+    return total, shares, wl_vol, t_wired[0]

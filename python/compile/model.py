@@ -1,0 +1,51 @@
+"""L2: the batched GEMINI-with-wireless cost model (build-time JAX).
+
+`cost_model` is the function that gets AOT-lowered to HLO text by
+`aot.py` and executed from the Rust hot path via PJRT. It wraps the L1
+Pallas kernel (`kernels.bottleneck.cost_model_kernel`) and adds the
+derived per-config metrics the coordinator consumes directly:
+
+    speedup[c] = t_wired / total[c]
+
+The pure-jnp twin (`cost_model_jnp`) exists for cross-checking the kernel
+and for HLO cost analysis in the perf pass; it must produce identical
+results (pytest enforces).
+
+Parameter order here *is* the artifact ABI — the Rust runtime feeds
+literals positionally. Keep in sync with rust/src/runtime/contract.rs.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.bottleneck import cost_model_kernel
+from .kernels import ref
+
+
+def _derived(total, shares, wl_vol, t_wired):
+    # Padded config rows carry pinj=0 so total == t_wired there; the guard
+    # only protects against an all-zero workload.
+    speedup = jnp.where(total > 0.0, t_wired / jnp.maximum(total, 1e-30), 0.0)
+    return total, shares, wl_vol, speedup, jnp.reshape(t_wired, (1,))
+
+
+def cost_model(
+    t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+):
+    """The AOT entry point. Returns a 5-tuple:
+
+    total [C], shares [C,K], wl_vol [C], speedup [C], t_wired [1].
+    """
+    total, shares, wl_vol, t_wired = cost_model_kernel(
+        t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+    )
+    return _derived(total, shares, wl_vol, t_wired)
+
+
+def cost_model_jnp(
+    t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+):
+    """Pure-jnp twin of `cost_model` (no Pallas). Same ABI."""
+    total, shares, wl_vol, t_wired = ref.cost_model_ref(
+        t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+    )
+    return _derived(total, shares, wl_vol, t_wired)

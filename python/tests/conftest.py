@@ -1,0 +1,81 @@
+"""Shared fixtures + input generators for the wisper python tests."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is run from python/ (the Makefile
+# does `cd python && pytest tests/`).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def make_inputs(
+    seed: int,
+    L: int,
+    H: int,
+    C: int,
+    *,
+    scale: float = 1.0,
+    active_layers: int | None = None,
+    dtype=np.float32,
+):
+    """Random but physically-plausible cost-model inputs.
+
+    elig_v is a fraction of nop volume; elig_vh = elig_v * hop-distance,
+    so moved volume.hops never exceeds the wired NoP total (matching what
+    the Rust traffic characterizer produces).
+    """
+    rng = np.random.default_rng(seed)
+    active = L if active_layers is None else active_layers
+
+    def padded(shape_active, shape_full):
+        a = rng.uniform(0.0, scale, size=shape_active).astype(dtype)
+        out = np.zeros(shape_full, dtype=dtype)
+        out[tuple(slice(0, s) for s in shape_active)] = a
+        return out
+
+    t_comp = padded((active,), (L,))
+    t_dram = padded((active,), (L,))
+    t_noc = padded((active,), (L,))
+
+    nop_bw = np.asarray(rng.uniform(0.5, 2.0) * scale, dtype=dtype)
+    nop_vh = padded((active,), (L,)) * float(nop_bw)  # keep times ~O(scale)
+
+    # Split a random fraction of each layer's NoP volume.hops across hop
+    # buckets; derive raw volume as vh / hops.
+    frac = rng.uniform(0.0, 1.0, size=(L, H)).astype(dtype)
+    frac /= np.maximum(frac.sum(axis=1, keepdims=True), 1e-9)
+    elig_share = rng.uniform(0.0, 0.9, size=(L, 1)).astype(dtype)
+    elig_vh = nop_vh[:, None] * elig_share * frac
+    hops = np.arange(1, H + 1, dtype=dtype)
+    elig_v = elig_vh / hops[None, :]
+    elig_vh[active:] = 0.0
+    elig_v[active:] = 0.0
+
+    thresh = rng.integers(1, H + 1, size=C).astype(dtype)
+    pinj = rng.uniform(0.0, 1.0, size=C).astype(dtype)
+    wl_bw = rng.uniform(0.1, 3.0, size=C).astype(dtype) * scale
+
+    return (
+        t_comp,
+        t_dram,
+        t_noc,
+        nop_vh.astype(dtype),
+        elig_vh.astype(dtype),
+        elig_v.astype(dtype),
+        thresh,
+        pinj,
+        wl_bw,
+        nop_bw,
+    )
+
+
+@pytest.fixture
+def contract_inputs():
+    from compile import constants as Cc
+
+    return make_inputs(
+        7, Cc.MAX_LAYERS, Cc.HOP_BUCKETS, Cc.NUM_CONFIGS, active_layers=120
+    )

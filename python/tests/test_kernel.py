@@ -1,0 +1,153 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes and input regimes; targeted tests pin down the
+semantics the Rust side depends on (pinj=0 == wired, threshold masking,
+share normalization, padding neutrality).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bottleneck import cost_model_kernel, _config_block
+from compile.kernels.ref import cost_model_ref, hop_mask
+from tests.conftest import make_inputs
+
+RTOL = 1e-5
+ATOL = 1e-6
+
+
+def run_both(inputs):
+    got = cost_model_kernel(*inputs)
+    want = cost_model_ref(*inputs)
+    return got, want
+
+
+def assert_match(inputs):
+    got, want = run_both(inputs)
+    names = ["total", "shares", "wl_vol", "t_wired"]
+    for g, w, n in zip(got, want, names):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=RTOL, atol=ATOL, err_msg=n
+        )
+
+
+# ---------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    L=st.sampled_from([1, 8, 32, 256]),
+    H=st.sampled_from([1, 4, 8]),
+    C=st.sampled_from([1, 4, 8, 60, 64]),
+    scale=st.sampled_from([1e-6, 1.0, 1e6]),
+)
+def test_kernel_matches_ref_random(seed, L, H, C, scale):
+    assert_match(make_inputs(seed, L, H, C, scale=scale))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), active=st.integers(0, 512))
+def test_kernel_matches_ref_padded(seed, active):
+    assert_match(make_inputs(seed, 512, 8, 64, active_layers=active))
+
+
+# ------------------------------------------------------------------ semantics
+
+
+def test_pinj_zero_is_wired(contract_inputs):
+    (t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw) = (
+        contract_inputs
+    )
+    pinj = np.zeros_like(pinj)
+    total, shares, wl_vol, t_wired = cost_model_kernel(
+        t_comp, t_dram, t_noc, nop_vh, elig_vh, elig_v, thresh, pinj, wl_bw, nop_bw
+    )
+    np.testing.assert_allclose(np.asarray(total), float(t_wired), rtol=RTOL)
+    assert float(np.asarray(wl_vol).max()) == 0.0
+    # No layer may be attributed to the wireless component.
+    assert float(np.asarray(shares)[:, 4].max()) == 0.0
+
+
+def test_threshold_above_max_hops_disables_offload(contract_inputs):
+    ins = list(contract_inputs)
+    H = ins[4].shape[1]
+    ins[6] = np.full_like(ins[6], H + 1)  # thresh beyond every bucket
+    total, shares, wl_vol, t_wired = cost_model_kernel(*ins)
+    np.testing.assert_allclose(np.asarray(total), float(t_wired), rtol=RTOL)
+    assert float(np.asarray(wl_vol).max()) == 0.0
+
+
+def test_threshold_one_offloads_everything(contract_inputs):
+    ins = list(contract_inputs)
+    ins[6] = np.ones_like(ins[6])  # thresh = 1
+    ins[7] = np.ones_like(ins[7])  # pinj = 1
+    _, _, wl_vol, _ = cost_model_kernel(*ins)
+    expect = ins[5].sum()  # all eligible volume moves
+    np.testing.assert_allclose(np.asarray(wl_vol), expect, rtol=RTOL)
+
+
+def test_shares_sum_to_one(contract_inputs):
+    _, shares, _, _ = cost_model_kernel(*contract_inputs)
+    np.testing.assert_allclose(
+        np.asarray(shares).sum(axis=1), 1.0, rtol=1e-4, atol=1e-4
+    )
+
+
+def test_monotone_in_wireless_bandwidth(contract_inputs):
+    ins = list(contract_inputs)
+    ins[8] = np.full_like(ins[8], 0.5)
+    lo, *_ = cost_model_kernel(*ins)
+    ins[8] = np.full_like(ins[8], 5.0)
+    hi, *_ = cost_model_kernel(*ins)
+    assert np.all(np.asarray(hi) <= np.asarray(lo) + 1e-9)
+
+
+def test_offload_never_hurts_nop_component(contract_inputs):
+    """Offloading strictly reduces the wired NoP time; any slowdown must
+    come from the wireless component itself becoming the bottleneck."""
+    ins = list(contract_inputs)
+    ins[8] = np.full_like(ins[8], 1e12)  # infinite wireless bandwidth
+    ins[7] = np.ones_like(ins[7])
+    total, _, _, t_wired = cost_model_kernel(*ins)
+    assert np.all(np.asarray(total) <= float(t_wired) + 1e-9)
+
+
+def test_all_zero_workload():
+    ins = make_inputs(3, 64, 8, 16, active_layers=0)
+    total, shares, wl_vol, t_wired = cost_model_kernel(*ins)
+    assert float(np.asarray(total).max()) == 0.0
+    assert float(t_wired) == 0.0
+    assert float(np.asarray(wl_vol).max()) == 0.0
+
+
+def test_hop_mask_semantics():
+    m = np.asarray(hop_mask(np.array([1.0, 3.0, 9.0], np.float32), 8))
+    assert m[0].tolist() == [1] * 8  # thresh 1: all distances qualify
+    assert m[1].tolist() == [0, 0, 1, 1, 1, 1, 1, 1]  # thresh 3: hops>=3
+    assert m[2].tolist() == [0] * 8  # thresh 9: nothing qualifies
+
+
+def test_config_block_divides():
+    for c in [1, 2, 3, 5, 8, 60, 64, 100]:
+        cb = _config_block(c)
+        assert c % cb == 0 and 1 <= cb <= 8
+
+
+def test_bottleneck_attribution_order():
+    """Ties resolve to the lowest component index (compute first)."""
+    L, H, C = 4, 8, 8
+    z = np.zeros((L,), np.float32)
+    ones = np.ones((L,), np.float32)
+    elig = np.zeros((L, H), np.float32)
+    thresh = np.ones((C,), np.float32)
+    pinj = np.zeros((C,), np.float32)
+    wl = np.ones((C,), np.float32)
+    # compute == dram == 1.0, others 0 -> compute claims everything.
+    total, shares, _, _ = cost_model_kernel(
+        ones, ones, z, z, elig, elig, thresh, pinj, wl, np.float32(1.0)
+    )
+    np.testing.assert_allclose(np.asarray(shares)[:, 0], 1.0, rtol=RTOL)
+    np.testing.assert_allclose(np.asarray(shares)[:, 1:], 0.0, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(total), float(L), rtol=RTOL)

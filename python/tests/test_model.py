@@ -1,0 +1,44 @@
+"""L2 model tests: ABI shape checks, kernel-vs-jnp twin equality, and the
+derived speedup metric the Rust coordinator consumes."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile.model import cost_model, cost_model_jnp
+from tests.conftest import make_inputs
+
+
+def test_output_shapes(contract_inputs):
+    total, shares, wl_vol, speedup, t_wired = cost_model(*contract_inputs)
+    assert total.shape == (C.NUM_CONFIGS,)
+    assert shares.shape == (C.NUM_CONFIGS, C.NUM_COMPONENTS)
+    assert wl_vol.shape == (C.NUM_CONFIGS,)
+    assert speedup.shape == (C.NUM_CONFIGS,)
+    assert t_wired.shape == (1,)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pallas_path_equals_jnp_path(seed):
+    ins = make_inputs(seed, C.MAX_LAYERS, C.HOP_BUCKETS, C.NUM_CONFIGS)
+    got = cost_model(*ins)
+    want = cost_model_jnp(*ins)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-6)
+
+
+def test_speedup_definition(contract_inputs):
+    total, _, _, speedup, t_wired = cost_model(*contract_inputs)
+    np.testing.assert_allclose(
+        np.asarray(speedup),
+        float(t_wired[0]) / np.maximum(np.asarray(total), 1e-30),
+        rtol=1e-5,
+    )
+
+
+def test_speedup_is_one_when_disabled(contract_inputs):
+    ins = list(contract_inputs)
+    ins[7] = np.zeros_like(ins[7])  # pinj = 0 everywhere
+    _, _, _, speedup, _ = cost_model(*ins)
+    np.testing.assert_allclose(np.asarray(speedup), 1.0, rtol=1e-5)

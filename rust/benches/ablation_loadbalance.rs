@@ -1,0 +1,62 @@
+//! Ablation: the paper's future-work load-balancing mechanisms vs the
+//! static grid sweep — adaptive hill-climb search (offline profiling)
+//! and the proportional injection controller.
+//! Run: `cargo bench --bench ablation_loadbalance`
+
+use wisper::config::Config;
+use wisper::coordinator::loadbalance::{adaptive_search, balance_controller};
+use wisper::coordinator::Coordinator;
+use wisper::report;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg).unwrap();
+    let rt = coord.runtime().unwrap();
+    let bw = 64e9;
+
+    println!("=== Ablation: static grid vs adaptive load balancing (64 Gb/s) ===\n");
+    let mut rows = Vec::new();
+    for name in ["googlenet", "densenet", "zfnet", "resnet152", "transformer_cell"] {
+        let prep = coord.prepare(name, true).unwrap();
+        let grid = coord.fig5(&rt, &prep, bw).unwrap();
+        let gbest = grid.best_point();
+        let ada = adaptive_search(&prep.tensors, bw, 4, 0.05).unwrap();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:+.1}%", (gbest.speedup - 1.0) * 100.0),
+            "60".into(),
+            format!("{:+.1}%", (ada.speedup - 1.0) * 100.0),
+            ada.evaluations.to_string(),
+            format!("d={} p={:.2}", ada.threshold, ada.pinj),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["workload", "grid best", "evals", "adaptive", "evals", "adaptive cfg"],
+            &rows
+        )
+    );
+
+    println!("\n=== Proportional controller trajectory (zfnet, target 30% wl share) ===\n");
+    let prep = coord.prepare("zfnet", true).unwrap();
+    let traj = balance_controller(&prep.tensors, bw, 1, 0.3, 12);
+    let mut trows = Vec::new();
+    for (i, (pinj, speedup, share)) in traj.iter().enumerate() {
+        trows.push(vec![
+            i.to_string(),
+            format!("{pinj:.3}"),
+            format!("{:+.2}%", (speedup - 1.0) * 100.0),
+            format!("{:.1}%", share * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(&["step", "pinj", "gain", "wireless share"], &trows)
+    );
+    let path = report::results_dir().join("ablation_loadbalance.csv");
+    report::write_csv(&path, &["workload", "grid", "gevals", "adaptive", "aevals", "cfg"], &rows)
+        .unwrap();
+    println!("\nwrote {}", path.display());
+}

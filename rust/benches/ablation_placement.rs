@@ -1,0 +1,48 @@
+//! Ablation: architecture geometry — grid size and DRAM count. The
+//! paper fixes 3x3 + 4 DRAMs (Fig. 1); this bench shows how the wireless
+//! advantage scales with package size (bigger meshes = longer wired
+//! paths = more threshold-eligible traffic).
+//! Run: `cargo bench --bench ablation_placement`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+
+fn main() {
+    println!("=== Ablation: package geometry vs wireless gain (googlenet, 64 Gb/s) ===\n");
+    let mut rows = Vec::new();
+    for (gr, gc, drams) in [(2usize, 2usize, 2usize), (3, 3, 4), (4, 4, 4), (5, 5, 4)] {
+        let mut cfg = Config::default();
+        cfg.arch.grid = (gr, gc);
+        cfg.arch.dram_chiplets = drams;
+        cfg.mapper.sa_iters = 200;
+        let coord = Coordinator::new(cfg).unwrap();
+        let prep = coord.prepare("googlenet", true).unwrap();
+        let rt = coord.runtime().unwrap();
+        let sweep = coord.fig5(&rt, &prep, 64e9).unwrap();
+        let best = sweep.best_point();
+        rows.push(vec![
+            format!("{gr}x{gc}+{drams}D"),
+            format!("{:.1}", coord.pkg.cfg.peak_tops()),
+            format!("{}", coord.pkg.max_nop_hops()),
+            format!("{:.3e}", prep.wired.total_s),
+            format!("{:+.1}%", (best.speedup - 1.0) * 100.0),
+            format!("d={} p={:.2}", best.threshold, best.pinj),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["package", "TOPS", "maxhops", "t_wired(s)", "best gain", "best cfg"],
+            &rows
+        )
+    );
+    let path = report::results_dir().join("ablation_placement.csv");
+    report::write_csv(
+        &path,
+        &["package", "tops", "maxhops", "t_wired", "gain", "cfg"],
+        &rows,
+    )
+    .unwrap();
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,56 @@
+//! Figure 2 regeneration: percentage of time each element of the 3x3
+//! 144-TOPS accelerator is the per-layer bottleneck, for all 15
+//! workloads, plus pipeline timing.
+//! Run: `cargo bench --bench fig2_bottleneck`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+use wisper::sim::COMPONENTS;
+use wisper::util::benchkit::{bb, bench, report as breport};
+use wisper::workloads::WORKLOAD_NAMES;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg).unwrap();
+
+    println!("=== Figure 2: wired bottleneck shares (optimally mapped) ===\n");
+    let prepared = coord.prepare_all(true).unwrap();
+    let rows = coord.fig2(&prepared);
+    print!("{}", report::stacked_shares(&rows));
+
+    let mut trows = Vec::new();
+    let mut csv = Vec::new();
+    for (name, shares) in &rows {
+        let mut r = vec![name.clone()];
+        r.extend(shares.iter().map(|s| format!("{:>5.1}%", s * 100.0)));
+        trows.push(r);
+        let mut c = vec![name.clone()];
+        c.extend(shares.iter().map(|s| format!("{s:.4}")));
+        csv.push(c);
+    }
+    let headers: Vec<&str> = std::iter::once("workload")
+        .chain(COMPONENTS.iter().copied())
+        .collect();
+    print!("\n{}", report::table(&headers, &trows));
+    let path = report::results_dir().join("fig2_bottleneck.csv");
+    report::write_csv(&path, &headers, &csv).unwrap();
+    println!("\nwrote {}\n", path.display());
+
+    // Pipeline micro-timings (one representative workload).
+    let ms = vec![
+        bench("prepare_baseline(googlenet)", 1, 10, || {
+            bb(coord.prepare("googlenet", false).unwrap())
+        }),
+        bench("prepare_sa300(googlenet)", 0, 3, || {
+            bb(coord.prepare("googlenet", true).unwrap())
+        }),
+        bench("fig2_all15_baseline", 0, 3, || {
+            let p = coord.prepare_all(false).unwrap();
+            bb(coord.fig2(&p))
+        }),
+    ];
+    breport(&ms);
+    let _ = WORKLOAD_NAMES;
+}

@@ -1,0 +1,73 @@
+//! Figure 4 regeneration: best hybrid speedup over the wired baseline
+//! per workload at 64 and 96 Gb/s wireless bandwidth, sweeping the
+//! (distance threshold x injection probability) grid per the paper.
+//! Run: `cargo bench --bench fig4_speedup`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+use wisper::util::benchkit::{bb, bench, report as breport};
+use wisper::util::{eng, stats};
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg).unwrap();
+
+    println!("=== Figure 4: hybrid speedup over wired baseline ===\n");
+    let prepared = coord.prepare_all(true).unwrap();
+    let rt = coord.runtime().unwrap();
+    let rows = coord.fig4(&rt, &prepared).unwrap();
+
+    let mut bars64 = Vec::new();
+    let mut bars96 = Vec::new();
+    let mut csv = Vec::new();
+    for row in &rows {
+        bars64.push((row.workload.clone(), (row.per_bw[0].speedup - 1.0) * 100.0));
+        bars96.push((row.workload.clone(), (row.per_bw[1].speedup - 1.0) * 100.0));
+        for cell in &row.per_bw {
+            csv.push(vec![
+                row.workload.clone(),
+                format!("{}", cell.wl_bw),
+                format!("{:.6}", cell.speedup),
+                cell.threshold.to_string(),
+                format!("{:.2}", cell.pinj),
+            ]);
+        }
+    }
+    println!("-- {} --", eng(64e9, "b/s"));
+    print!("{}", report::bar_chart(&bars64, 25.0, "%"));
+    println!("\n-- {} --", eng(96e9, "b/s"));
+    print!("{}", report::bar_chart(&bars96, 25.0, "%"));
+
+    for (label, bars) in [("64 Gb/s", &bars64), ("96 Gb/s", &bars96)] {
+        let gains: Vec<f64> = bars.iter().map(|(_, g)| *g).collect();
+        println!(
+            "\n{label}: average {:+.1}%, max {:+.1}% (paper: ~7.5-10% avg, ~20% max)",
+            stats::mean(&gains),
+            stats::max(&gains)
+        );
+    }
+    let path = report::results_dir().join("fig4_speedup.csv");
+    report::write_csv(
+        &path,
+        &["workload", "wl_bw", "speedup", "threshold", "pinj"],
+        &csv,
+    )
+    .unwrap();
+    println!("wrote {}\n", path.display());
+
+    // Sweep-engine timing: one grid through the (AOT or native) runtime.
+    let prep = &prepared[0];
+    let ms = vec![bench("sweep_60cfg_grid", 2, 20, || {
+        bb(wisper::dse::sweep_grid(
+            &rt,
+            &prep.tensors,
+            &coord.cfg.sweep.thresholds,
+            &coord.cfg.sweep.injection_probs,
+            64e9,
+        )
+        .unwrap())
+    })];
+    breport(&ms);
+}

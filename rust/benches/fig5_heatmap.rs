@@ -1,0 +1,61 @@
+//! Figure 5 regeneration: zfnet speedup/degradation heatmap over the
+//! (distance threshold x injection probability) plane at 64 Gb/s.
+//! Run: `cargo bench --bench fig5_heatmap`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+use wisper::util::benchkit::{bb, bench, report as breport};
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 300;
+    let coord = Coordinator::new(cfg).unwrap();
+    let prep = coord.prepare("zfnet", true).unwrap();
+    let rt = coord.runtime().unwrap();
+
+    for bw in [64e9, 96e9] {
+        println!(
+            "=== Figure 5: zfnet speedup heatmap @ {} Gb/s ===\n",
+            bw / 1e9
+        );
+        let sweep = coord.fig5(&rt, &prep, bw).unwrap();
+        let th = &coord.cfg.sweep.thresholds;
+        let pi = &coord.cfg.sweep.injection_probs;
+        let hm = sweep.heatmap(th, pi);
+        let rl: Vec<String> = th.iter().map(|t| format!("d={t}")).collect();
+        let cl: Vec<String> = pi.iter().map(|p| format!("{:.0}%", p * 100.0)).collect();
+        print!("{}", report::heatmap(&rl, &cl, &hm));
+        let best = sweep.best_point();
+        println!(
+            "\nbest: d={} pinj={:.2} -> {:+.1}%\n",
+            best.threshold,
+            best.pinj,
+            (best.speedup - 1.0) * 100.0
+        );
+
+        let mut csv = Vec::new();
+        for pt in &sweep.points {
+            csv.push(vec![
+                pt.threshold.to_string(),
+                format!("{:.2}", pt.pinj),
+                format!("{:.6}", pt.speedup),
+                format!("{:.4e}", pt.wl_bits),
+            ]);
+        }
+        let path = report::results_dir()
+            .join(format!("fig5_heatmap_zfnet_{}g.csv", (bw / 1e9) as u64));
+        report::write_csv(&path, &["threshold", "pinj", "speedup", "wl_bits"], &csv)
+            .unwrap();
+        println!("wrote {}\n", path.display());
+    }
+
+    let ms = vec![bench("fig5_full_grid", 2, 20, || {
+        bb(coord.fig5(&rt, &prep, 64e9).unwrap())
+    }),
+    bench("runtime_single_eval", 2, 20, || {
+        let input = wisper::runtime::pack_input(&prep.tensors, &[(1, 0.5, 64e9)]).unwrap();
+        bb(rt.evaluate(&input).unwrap())
+    })];
+    breport(&ms);
+}

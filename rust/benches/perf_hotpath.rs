@@ -1,0 +1,78 @@
+//! §Perf microbenches: the hot paths of the exploration loop, for the
+//! optimization pass (EXPERIMENTS.md §Perf records before/after).
+//! Run: `cargo bench --bench perf_hotpath`
+
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::Coordinator;
+use wisper::mapping::layer_sequential;
+use wisper::runtime::{pack_input, Runtime};
+use wisper::sim::cost::build_tensors;
+use wisper::sim::{characterize, evaluate_expected, evaluate_wired};
+use wisper::util::benchkit::{bb, bench, report as breport};
+use wisper::util::threadpool::parallel_map;
+
+fn main() {
+    let cfg = Config::default();
+    let coord = Coordinator::new(cfg).unwrap();
+    let wl = wisper::workloads::build("resnet152").unwrap(); // deepest CNN
+    let mapping = layer_sequential(&wl, &coord.pkg);
+    let elig = WirelessConfig::default();
+    let tensors = build_tensors(&wl, &mapping, &coord.pkg, &elig).unwrap();
+    let w = WirelessConfig {
+        injection_prob: 0.4,
+        ..Default::default()
+    };
+
+    let native = Runtime::native();
+    let pjrt = Runtime::auto(None).unwrap();
+    let grid: Vec<(u32, f64, f64)> = (0..60)
+        .map(|i| (1 + (i as u32 % 4), 0.10 + 0.05 * (i % 15) as f64, 64e9))
+        .collect();
+    let input = pack_input(&tensors, &grid).unwrap();
+
+    let mut ms = vec![
+        bench("traffic_characterize(resnet152)", 3, 30, || {
+            bb(characterize(&wl, &mapping, &coord.pkg).unwrap())
+        }),
+        bench("build_tensors(resnet152)", 3, 30, || {
+            bb(build_tensors(&wl, &mapping, &coord.pkg, &elig).unwrap())
+        }),
+        bench("evaluate_wired", 10, 200, || bb(evaluate_wired(&tensors))),
+        bench("evaluate_expected", 10, 200, || {
+            bb(evaluate_expected(&tensors, &w))
+        }),
+        bench("native_grid_eval_60cfg", 3, 50, || {
+            bb(native.evaluate(&input).unwrap())
+        }),
+        bench(
+            &format!("runtime_grid_eval_60cfg[{:?}]", pjrt.backend()),
+            3,
+            50,
+            || bb(pjrt.evaluate(&input).unwrap()),
+        ),
+        bench("sa_cost_eval(1 mapping)", 2, 20, || {
+            bb(build_tensors(&wl, &mapping, &coord.pkg, &elig)
+                .map(|t| evaluate_wired(&t).total_s)
+                .unwrap())
+        }),
+    ];
+
+    // Thread-pool scaling on the 15-workload preparation fan-out.
+    for workers in [1usize, 4, 8] {
+        ms.push(bench(
+            &format!("prepare15_baseline_w{workers}"),
+            0,
+            3,
+            || {
+                bb(parallel_map(15, workers, |i| {
+                    coord
+                        .prepare(wisper::workloads::WORKLOAD_NAMES[i], false)
+                        .unwrap()
+                        .wired
+                        .total_s
+                }))
+            },
+        ));
+    }
+    breport(&ms);
+}

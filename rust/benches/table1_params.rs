@@ -1,0 +1,21 @@
+//! Table 1 regeneration + config-system microbenches.
+//! Run: `cargo bench --bench table1_params`
+
+use wisper::config::Config;
+use wisper::report;
+use wisper::util::benchkit::{bb, bench, report as breport};
+
+fn main() {
+    println!("=== Table 1: simulation parameters ===\n");
+    let cfg = Config::default();
+    let rows: Vec<Vec<String>> = cfg.table1().into_iter().map(|(k, v)| vec![k, v]).collect();
+    print!("{}", report::table(&["parameter", "value"], &rows));
+
+    let toml = "[arch]\ngrid_rows = 3\ngrid_cols = 3\n\n[wireless]\nbandwidth_bits = 96e9\n\n[sweep]\nthresholds = [1, 2, 3, 4]\n";
+    let ms = vec![
+        bench("config_parse", 10, 200, || bb(Config::from_str(toml).unwrap())),
+        bench("table1_render", 10, 200, || bb(Config::default().table1())),
+    ];
+    println!();
+    breport(&ms);
+}

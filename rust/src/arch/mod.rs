@@ -1,0 +1,357 @@
+//! Package-level architecture model (paper Fig. 1): a grid of compute
+//! chiplets, DRAM chiplets on the package sides, XY-mesh NoP between
+//! them, an XY-mesh NoC inside each chiplet, and one antenna at the
+//! centre of every compute and DRAM chiplet.
+
+use crate::config::ArchConfig;
+use anyhow::{bail, Result};
+
+/// Node in the package-level NoP graph: a compute chiplet or a DRAM
+/// module. Chiplets are indexed row-major; DRAMs follow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum NodeId {
+    Chiplet(usize),
+    Dram(usize),
+}
+
+impl NodeId {
+    pub fn is_dram(&self) -> bool {
+        matches!(self, NodeId::Dram(_))
+    }
+}
+
+/// Integer grid position on the extended NoP mesh. Compute chiplets
+/// occupy (1..=rows, 1..=cols); DRAM modules sit one step outside the
+/// grid on their package side (Fig. 1 shows north/south/east/west).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Pos {
+    pub row: i64,
+    pub col: i64,
+}
+
+impl Pos {
+    pub fn manhattan(&self, other: &Pos) -> u32 {
+        ((self.row - other.row).abs() + (self.col - other.col).abs()) as u32
+    }
+}
+
+/// Physical mm coordinates of an antenna (used by the wireless model for
+/// the layout; latency is distance-independent at package scale).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AntennaSite {
+    pub node: NodeId,
+    pub x_mm: f64,
+    pub y_mm: f64,
+}
+
+/// Package sides for DRAM placement, in placement order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    North,
+    South,
+    West,
+    East,
+}
+
+pub const SIDES: [Side; 4] = [Side::North, Side::South, Side::West, Side::East];
+
+/// The instantiated package: geometry + derived link inventory.
+#[derive(Debug, Clone)]
+pub struct Package {
+    pub cfg: ArchConfig,
+    /// Grid position of every node on the extended NoP mesh.
+    positions: Vec<(NodeId, Pos)>,
+    /// Antenna sites (one per node), chiplet pitch = 10 mm.
+    antennas: Vec<AntennaSite>,
+}
+
+pub const CHIPLET_PITCH_MM: f64 = 10.0;
+
+impl Package {
+    pub fn new(cfg: ArchConfig) -> Result<Self> {
+        cfg.validate()?;
+        let (rows, cols) = cfg.grid;
+        let mut positions = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                positions.push((
+                    NodeId::Chiplet(r * cols + c),
+                    Pos {
+                        row: r as i64 + 1,
+                        col: c as i64 + 1,
+                    },
+                ));
+            }
+        }
+        // DRAM modules: one per package side (N, S, W, E), centred.
+        for d in 0..cfg.dram_chiplets {
+            let side = SIDES[d];
+            let pos = match side {
+                Side::North => Pos {
+                    row: 0,
+                    col: (cols as i64 + 1) / 2,
+                },
+                Side::South => Pos {
+                    row: rows as i64 + 1,
+                    col: (cols as i64 + 1) / 2,
+                },
+                Side::West => Pos {
+                    row: (rows as i64 + 1) / 2,
+                    col: 0,
+                },
+                Side::East => Pos {
+                    row: (rows as i64 + 1) / 2,
+                    col: cols as i64 + 1,
+                },
+            };
+            positions.push((NodeId::Dram(d), pos));
+        }
+        let antennas = positions
+            .iter()
+            .map(|(node, pos)| AntennaSite {
+                node: *node,
+                x_mm: pos.col as f64 * CHIPLET_PITCH_MM,
+                y_mm: pos.row as f64 * CHIPLET_PITCH_MM,
+            })
+            .collect();
+        Ok(Self {
+            cfg,
+            positions,
+            antennas,
+        })
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.cfg.num_chiplets()
+    }
+
+    pub fn num_drams(&self) -> usize {
+        self.cfg.dram_chiplets
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_chiplets() + self.num_drams()
+    }
+
+    pub fn pos(&self, node: NodeId) -> Result<Pos> {
+        self.positions
+            .iter()
+            .find(|(n, _)| *n == node)
+            .map(|(_, p)| *p)
+            .ok_or_else(|| anyhow::anyhow!("unknown node {node:?}"))
+    }
+
+    /// NoP hop distance between two nodes (XY routing == Manhattan).
+    pub fn nop_hops(&self, a: NodeId, b: NodeId) -> Result<u32> {
+        Ok(self.pos(a)?.manhattan(&self.pos(b)?))
+    }
+
+    /// Maximum possible NoP hop distance on this package.
+    pub fn max_nop_hops(&self) -> u32 {
+        let mut best = 0;
+        for (_, a) in &self.positions {
+            for (_, b) in &self.positions {
+                best = best.max(a.manhattan(b));
+            }
+        }
+        best
+    }
+
+    /// Antennas: the paper places one at the centre of every compute and
+    /// DRAM chiplet (total = chiplets + DRAMs).
+    pub fn antennas(&self) -> &[AntennaSite] {
+        &self.antennas
+    }
+
+    /// All nodes, chiplets first then DRAMs.
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.positions.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Directed wired NoP links: mesh neighbours among chiplets, plus
+    /// each DRAM attached to every chiplet adjacent to its side-centre
+    /// position (Manhattan distance 1 on the extended grid).
+    pub fn nop_links(&self) -> Vec<(NodeId, NodeId)> {
+        let mut links = Vec::new();
+        for (a, pa) in &self.positions {
+            for (b, pb) in &self.positions {
+                if a == b {
+                    continue;
+                }
+                if a.is_dram() && b.is_dram() {
+                    continue; // DRAMs never peer directly
+                }
+                if pa.manhattan(pb) == 1 {
+                    links.push((*a, *b));
+                }
+            }
+        }
+        links
+    }
+
+    /// Aggregate directed NoP bandwidth (bits/s): links x per-link bw.
+    /// GEMINI-style aggregated interconnect time divides total
+    /// volume.hops by this.
+    pub fn nop_aggregate_bw(&self) -> f64 {
+        self.nop_links().len() as f64 * self.cfg.nop_link_bw_bits
+    }
+
+    /// Aggregate directed NoC bandwidth inside ONE chiplet.
+    pub fn noc_aggregate_bw(&self) -> f64 {
+        let (pr, pc) = self.cfg.pe_grid;
+        // Directed mesh links in a pr x pc grid.
+        let undirected = pr * (pc - 1) + pc * (pr - 1);
+        (undirected * 2) as f64 * self.cfg.noc_link_bw_bits
+    }
+
+    /// Total DRAM bandwidth (bits/s).
+    pub fn dram_aggregate_bw(&self) -> f64 {
+        self.num_drams() as f64 * self.cfg.dram_bw_bytes * 8.0
+    }
+
+    /// Which DRAM serves a chiplet: the closest one (ties -> lowest id).
+    pub fn home_dram(&self, chiplet: usize) -> Result<NodeId> {
+        if chiplet >= self.num_chiplets() {
+            bail!("chiplet {chiplet} out of range");
+        }
+        let cpos = self.pos(NodeId::Chiplet(chiplet))?;
+        let mut best = (u32::MAX, 0usize);
+        for d in 0..self.num_drams() {
+            let hops = cpos.manhattan(&self.pos(NodeId::Dram(d))?);
+            if hops < best.0 {
+                best = (hops, d);
+            }
+        }
+        Ok(NodeId::Dram(best.1))
+    }
+
+    /// ASCII rendering of the package (Fig. 1 style), for `wisper arch`.
+    pub fn draw(&self) -> String {
+        let (rows, cols) = self.cfg.grid;
+        let mut grid: Vec<Vec<String>> =
+            vec![vec!["      ".into(); cols + 2]; rows + 2];
+        for (node, pos) in &self.positions {
+            let label = match node {
+                NodeId::Chiplet(i) => format!("[C{i:02}*]"),
+                NodeId::Dram(i) => format!("(D{i}**)"),
+            };
+            grid[pos.row as usize][pos.col as usize] = label;
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "package: {}x{} chiplets, {} DRAM modules, {} antennas (*)\n",
+            rows,
+            cols,
+            self.num_drams(),
+            self.antennas.len()
+        ));
+        for row in &grid {
+            out.push_str(&row.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkg() -> Package {
+        Package::new(ArchConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn node_counts_and_antennas() {
+        let p = pkg();
+        assert_eq!(p.num_chiplets(), 9);
+        assert_eq!(p.num_drams(), 4);
+        // Paper: antennas = chiplets + DRAMs.
+        assert_eq!(p.antennas().len(), 13);
+    }
+
+    #[test]
+    fn chiplet_positions_row_major() {
+        let p = pkg();
+        assert_eq!(p.pos(NodeId::Chiplet(0)).unwrap(), Pos { row: 1, col: 1 });
+        assert_eq!(p.pos(NodeId::Chiplet(8)).unwrap(), Pos { row: 3, col: 3 });
+        assert_eq!(p.pos(NodeId::Chiplet(4)).unwrap(), Pos { row: 2, col: 2 });
+    }
+
+    #[test]
+    fn drams_sit_outside_grid() {
+        let p = pkg();
+        assert_eq!(p.pos(NodeId::Dram(0)).unwrap(), Pos { row: 0, col: 2 }); // N
+        assert_eq!(p.pos(NodeId::Dram(1)).unwrap(), Pos { row: 4, col: 2 }); // S
+        assert_eq!(p.pos(NodeId::Dram(2)).unwrap(), Pos { row: 2, col: 0 }); // W
+        assert_eq!(p.pos(NodeId::Dram(3)).unwrap(), Pos { row: 2, col: 4 }); // E
+    }
+
+    #[test]
+    fn hop_distances() {
+        let p = pkg();
+        assert_eq!(p.nop_hops(NodeId::Chiplet(0), NodeId::Chiplet(0)).unwrap(), 0);
+        assert_eq!(p.nop_hops(NodeId::Chiplet(0), NodeId::Chiplet(1)).unwrap(), 1);
+        assert_eq!(p.nop_hops(NodeId::Chiplet(0), NodeId::Chiplet(8)).unwrap(), 4);
+        assert_eq!(p.nop_hops(NodeId::Chiplet(0), NodeId::Dram(0)).unwrap(), 2);
+        // Max: corner chiplet to opposite DRAM.
+        assert!(p.max_nop_hops() >= 4);
+        assert!(p.max_nop_hops() <= 8);
+    }
+
+    #[test]
+    fn link_inventory() {
+        let p = pkg();
+        let links = p.nop_links();
+        // 3x3 mesh: 12 undirected chiplet links = 24 directed; each
+        // side-centre DRAM is adjacent to exactly 1 chiplet (distance 1
+        // to edge-centre chiplet) = 8 directed DRAM links.
+        let chip_links = links
+            .iter()
+            .filter(|(a, b)| !a.is_dram() && !b.is_dram())
+            .count();
+        assert_eq!(chip_links, 24);
+        let dram_links = links.len() - chip_links;
+        assert_eq!(dram_links, 8);
+        // No DRAM-DRAM links.
+        assert!(links.iter().all(|(a, b)| !(a.is_dram() && b.is_dram())));
+        // Aggregate bandwidth follows the count.
+        assert_eq!(p.nop_aggregate_bw(), links.len() as f64 * 32.0e9);
+    }
+
+    #[test]
+    fn home_dram_is_closest() {
+        let p = pkg();
+        // Top-centre chiplet 1 -> north DRAM 0.
+        assert_eq!(p.home_dram(1).unwrap(), NodeId::Dram(0));
+        // Bottom-centre chiplet 7 -> south DRAM 1.
+        assert_eq!(p.home_dram(7).unwrap(), NodeId::Dram(1));
+        assert!(p.home_dram(99).is_err());
+    }
+
+    #[test]
+    fn bandwidth_aggregates() {
+        let p = pkg();
+        assert_eq!(p.dram_aggregate_bw(), 4.0 * 16.0e9 * 8.0);
+        // 16x16 PE mesh: 2*16*15 undirected = 960 directed links.
+        assert_eq!(p.noc_aggregate_bw(), 960.0 * 64.0e9);
+    }
+
+    #[test]
+    fn draw_contains_all_nodes() {
+        let p = pkg();
+        let s = p.draw();
+        assert!(s.contains("[C00*]"));
+        assert!(s.contains("[C08*]"));
+        assert!(s.contains("(D3**)"));
+    }
+
+    #[test]
+    fn non_square_grids_work() {
+        let mut cfg = ArchConfig::default();
+        cfg.grid = (2, 5);
+        let p = Package::new(cfg).unwrap();
+        assert_eq!(p.num_chiplets(), 10);
+        assert!(p.max_nop_hops() >= 5);
+    }
+}

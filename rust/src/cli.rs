@@ -1,0 +1,194 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `wisper <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may use `--key=value` or `--key value`. Unknown options error.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec: `name` without the leading `--`.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+#[derive(Debug, Default)]
+pub struct Parsed {
+    pub subcommand: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name}: expected a number, got {s:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an integer, got {s:?}")),
+        }
+    }
+}
+
+/// Parse `args` (without argv[0]) against the option specs.
+pub fn parse(args: &[String], specs: &[OptSpec]) -> Result<Parsed> {
+    let mut out = Parsed::default();
+    let mut it = args.iter().peekable();
+
+    if let Some(first) = it.peek() {
+        if !first.starts_with('-') {
+            out.subcommand = it.next().unwrap().clone();
+        }
+    }
+
+    while let Some(arg) = it.next() {
+        if let Some(stripped) = arg.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}"))?;
+            if spec.takes_value {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => match it.next() {
+                        Some(v) => v.clone(),
+                        None => bail!("--{name} requires a value"),
+                    },
+                };
+                out.options.insert(name.to_string(), val);
+            } else {
+                if inline_val.is_some() {
+                    bail!("--{name} does not take a value");
+                }
+                out.flags.push(name.to_string());
+            }
+        } else if arg.starts_with('-') && arg.len() > 1 {
+            bail!("short options are not supported: {arg}");
+        } else {
+            out.positionals.push(arg.clone());
+        }
+    }
+    Ok(out)
+}
+
+/// Render a help block from specs.
+pub fn render_help(program: &str, subcommands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut s = format!("usage: {program} <command> [options]\n\ncommands:\n");
+    for (name, help) in subcommands {
+        s.push_str(&format!("  {name:<14} {help}\n"));
+    }
+    s.push_str("\noptions:\n");
+    for spec in specs {
+        let tail = if spec.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{tail:<10} {}\n", spec.name, spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "workload",
+                takes_value: true,
+                help: "",
+            },
+            OptSpec {
+                name: "all",
+                takes_value: false,
+                help: "",
+            },
+            OptSpec {
+                name: "bw",
+                takes_value: true,
+                help: "",
+            },
+        ]
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let p = parse(
+            &sv(&["speedup", "--workload", "zfnet", "--all", "--bw=96e9", "extra"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(p.subcommand, "speedup");
+        assert_eq!(p.get("workload"), Some("zfnet"));
+        assert!(p.has_flag("all"));
+        assert_eq!(p.get_f64("bw").unwrap(), Some(96e9));
+        assert_eq!(p.positionals, vec!["extra"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(parse(&sv(&["x", "--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&sv(&["x", "--workload"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(parse(&sv(&["x", "--all=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let p = parse(&sv(&["x", "--bw", "abc"]), &specs()).unwrap();
+        assert!(p.get_f64("bw").is_err());
+    }
+
+    #[test]
+    fn no_subcommand_is_ok() {
+        let p = parse(&sv(&["--all"]), &specs()).unwrap();
+        assert_eq!(p.subcommand, "");
+        assert!(p.has_flag("all"));
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = render_help("wisper", &[("speedup", "fig 4")], &specs());
+        assert!(h.contains("speedup"));
+        assert!(h.contains("--workload"));
+    }
+}

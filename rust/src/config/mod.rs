@@ -1,0 +1,472 @@
+//! Typed configuration for the whole stack, with Table-1 defaults.
+//!
+//! Configs load from a TOML-subset file (see `toml.rs`) or CLI overrides;
+//! every field has the paper's default so `wisper <cmd>` works with no
+//! config file at all.
+
+pub mod toml;
+
+use crate::config::toml::TomlDoc;
+use anyhow::{bail, Context, Result};
+
+/// Architecture parameters (paper Table 1 + Fig. 1 defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// Chiplet grid (rows, cols) — Table 1: 3x3.
+    pub grid: (usize, usize),
+    /// PEs per chiplet (rows, cols) — 16x16 with `macs_per_pe` lanes
+    /// yields 16.4 TOPS/chiplet, 147.5 TOPS total ~= the paper's
+    /// "144-TOPS" 3x3 accelerator.
+    pub pe_grid: (usize, usize),
+    /// MAC lanes per PE.
+    pub macs_per_pe: usize,
+    /// Core clock in Hz.
+    pub freq_hz: f64,
+    /// Number of DRAM chiplets — Table 1: 4 (one per package side).
+    pub dram_chiplets: usize,
+    /// Per-DRAM-chiplet bandwidth, bytes/s — Table 1: 16 GB/s.
+    pub dram_bw_bytes: f64,
+    /// NoP (die-to-die) link bandwidth, bits/s per side — Table 1: 32 Gb/s.
+    pub nop_link_bw_bits: f64,
+    /// NoC link bandwidth, bits/s per port — Table 1: 64 Gb/s.
+    pub noc_link_bw_bits: f64,
+    /// Datum width in bits (int8 inference by default).
+    pub datum_bits: u64,
+    /// Inference batch size: streamed (non-resident) weights are fetched
+    /// once per batch, so their DRAM/NoP cost amortizes over `batch`
+    /// inferences (GEMINI's throughput-oriented execution).
+    pub batch: u64,
+    /// SRAM per chiplet in bytes (weights+activations working set).
+    pub sram_bytes: u64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        Self {
+            grid: (3, 3),
+            pe_grid: (16, 16),
+            macs_per_pe: 32,
+            freq_hz: 1.0e9,
+            dram_chiplets: 4,
+            dram_bw_bytes: 16.0e9,
+            nop_link_bw_bits: 32.0e9,
+            noc_link_bw_bits: 64.0e9,
+            datum_bits: 8,
+            batch: 16,
+            sram_bytes: 4 << 20,
+        }
+    }
+}
+
+impl ArchConfig {
+    pub fn num_chiplets(&self) -> usize {
+        self.grid.0 * self.grid.1
+    }
+
+    /// Peak TOPS of the whole package (2 ops per MAC).
+    pub fn peak_tops(&self) -> f64 {
+        let macs = (self.pe_grid.0 * self.pe_grid.1 * self.macs_per_pe) as f64;
+        2.0 * macs * self.freq_hz * self.num_chiplets() as f64 / 1e12
+    }
+
+    /// Peak MACs/s of one chiplet.
+    pub fn chiplet_macs_per_s(&self) -> f64 {
+        (self.pe_grid.0 * self.pe_grid.1 * self.macs_per_pe) as f64 * self.freq_hz
+    }
+
+    fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_usize("arch.grid_rows")? {
+            self.grid.0 = v;
+        }
+        if let Some(v) = doc.get_usize("arch.grid_cols")? {
+            self.grid.1 = v;
+        }
+        if let Some(v) = doc.get_usize("arch.pe_rows")? {
+            self.pe_grid.0 = v;
+        }
+        if let Some(v) = doc.get_usize("arch.pe_cols")? {
+            self.pe_grid.1 = v;
+        }
+        if let Some(v) = doc.get_usize("arch.macs_per_pe")? {
+            self.macs_per_pe = v;
+        }
+        if let Some(v) = doc.get_f64("arch.freq_hz")? {
+            self.freq_hz = v;
+        }
+        if let Some(v) = doc.get_usize("arch.dram_chiplets")? {
+            self.dram_chiplets = v;
+        }
+        if let Some(v) = doc.get_f64("arch.dram_bw_bytes")? {
+            self.dram_bw_bytes = v;
+        }
+        if let Some(v) = doc.get_f64("arch.nop_link_bw_bits")? {
+            self.nop_link_bw_bits = v;
+        }
+        if let Some(v) = doc.get_f64("arch.noc_link_bw_bits")? {
+            self.noc_link_bw_bits = v;
+        }
+        if let Some(v) = doc.get_u64("arch.datum_bits")? {
+            self.datum_bits = v;
+        }
+        if let Some(v) = doc.get_u64("arch.batch")? {
+            self.batch = v;
+        }
+        if let Some(v) = doc.get_u64("arch.sram_bytes")? {
+            self.sram_bytes = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.grid.0 == 0 || self.grid.1 == 0 {
+            bail!("chiplet grid must be non-empty");
+        }
+        if self.pe_grid.0 == 0 || self.pe_grid.1 == 0 || self.macs_per_pe == 0 {
+            bail!("PE array must be non-empty");
+        }
+        if self.freq_hz <= 0.0
+            || self.dram_bw_bytes <= 0.0
+            || self.nop_link_bw_bits <= 0.0
+            || self.noc_link_bw_bits <= 0.0
+        {
+            bail!("bandwidths and frequency must be positive");
+        }
+        if self.dram_chiplets == 0 || self.dram_chiplets > 4 {
+            bail!("dram_chiplets must be 1..=4 (one per package side)");
+        }
+        if self.datum_bits == 0 {
+            bail!("datum_bits must be positive");
+        }
+        if self.batch == 0 {
+            bail!("batch must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Wireless-plane parameters (paper §III-B, Table 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WirelessConfig {
+    /// Whether the wireless plane exists at all.
+    pub enabled: bool,
+    /// Shared-medium bandwidth in bits/s — Table 1: 64 or 96 Gb/s.
+    pub bandwidth_bits: f64,
+    /// Decision criterion 2: minimum NoP hops to prefer wireless (1..=4).
+    pub distance_threshold: u32,
+    /// Decision criterion 3: probability a qualifying message actually
+    /// takes the wireless path (0.10..=0.80 in the paper's sweep).
+    pub injection_prob: f64,
+    /// Transceiver energy per bit (J) — ~1 pJ/bit per refs [20]-[22].
+    pub energy_per_bit: f64,
+    /// Whether criterion 1 (multi-chip multicast) is required; the
+    /// decision-criteria ablation turns this off to send any cross-chip
+    /// message wirelessly.
+    pub multicast_only: bool,
+}
+
+impl Default for WirelessConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            bandwidth_bits: 64.0e9,
+            distance_threshold: 1,
+            injection_prob: 0.4,
+            energy_per_bit: 1.0e-12,
+            multicast_only: true,
+        }
+    }
+}
+
+impl WirelessConfig {
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            ..Self::default()
+        }
+    }
+
+    fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_bool("wireless.enabled")? {
+            self.enabled = v;
+        }
+        if let Some(v) = doc.get_f64("wireless.bandwidth_bits")? {
+            self.bandwidth_bits = v;
+        }
+        if let Some(v) = doc.get_u64("wireless.distance_threshold")? {
+            self.distance_threshold = v as u32;
+        }
+        if let Some(v) = doc.get_f64("wireless.injection_prob")? {
+            self.injection_prob = v;
+        }
+        if let Some(v) = doc.get_f64("wireless.energy_per_bit")? {
+            self.energy_per_bit = v;
+        }
+        if let Some(v) = doc.get_bool("wireless.multicast_only")? {
+            self.multicast_only = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.enabled && self.bandwidth_bits <= 0.0 {
+            bail!("wireless bandwidth must be positive when enabled");
+        }
+        if !(0.0..=1.0).contains(&self.injection_prob) {
+            bail!("injection_prob must be in [0,1]");
+        }
+        if self.distance_threshold == 0 {
+            bail!("distance_threshold counts NoP hops and must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Sweep grid (paper Table 1: thresholds 1..4, pinj 10..80% step 5%).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    pub thresholds: Vec<u32>,
+    pub injection_probs: Vec<f64>,
+    pub bandwidths_bits: Vec<f64>,
+    /// Worker threads for the sweep engine (0 = auto).
+    pub workers: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            thresholds: vec![1, 2, 3, 4],
+            injection_probs: (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+            bandwidths_bits: vec![64.0e9, 96.0e9],
+            workers: 0,
+        }
+    }
+}
+
+impl SweepConfig {
+    pub fn grid_size(&self) -> usize {
+        self.thresholds.len() * self.injection_probs.len()
+    }
+
+    fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_list_f64("sweep.thresholds")? {
+            self.thresholds = v.into_iter().map(|x| x as u32).collect();
+        }
+        if let Some(v) = doc.get_list_f64("sweep.injection_probs")? {
+            self.injection_probs = v;
+        }
+        if let Some(v) = doc.get_list_f64("sweep.bandwidths_bits")? {
+            self.bandwidths_bits = v;
+        }
+        if let Some(v) = doc.get_usize("sweep.workers")? {
+            self.workers = v;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.thresholds.is_empty() || self.injection_probs.is_empty() {
+            bail!("sweep grid must be non-empty");
+        }
+        if self
+            .injection_probs
+            .iter()
+            .any(|p| !(0.0..=1.0).contains(p))
+        {
+            bail!("sweep injection probabilities must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+/// Mapper knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapperConfig {
+    /// Simulated-annealing iterations.
+    pub sa_iters: usize,
+    /// SA initial temperature (relative to initial cost).
+    pub sa_temp: f64,
+    /// RNG seed for the mapper and the stochastic injection mode.
+    pub seed: u64,
+}
+
+impl Default for MapperConfig {
+    fn default() -> Self {
+        Self {
+            sa_iters: 600,
+            sa_temp: 0.25,
+            seed: 0xC0DE,
+        }
+    }
+}
+
+impl MapperConfig {
+    fn apply(&mut self, doc: &TomlDoc) -> Result<()> {
+        if let Some(v) = doc.get_usize("mapper.sa_iters")? {
+            self.sa_iters = v;
+        }
+        if let Some(v) = doc.get_f64("mapper.sa_temp")? {
+            self.sa_temp = v;
+        }
+        if let Some(v) = doc.get_u64("mapper.seed")? {
+            self.seed = v;
+        }
+        Ok(())
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub arch: ArchConfig,
+    pub wireless: WirelessConfig,
+    pub sweep: SweepConfig,
+    pub mapper: MapperConfig,
+}
+
+impl Config {
+    pub fn from_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).context("parsing config")?;
+        let mut cfg = Config::default();
+        cfg.arch.apply(&doc)?;
+        cfg.wireless.apply(&doc)?;
+        cfg.sweep.apply(&doc)?;
+        cfg.mapper.apply(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        Self::from_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.arch.validate()?;
+        self.wireless.validate()?;
+        self.sweep.validate()?;
+        Ok(())
+    }
+
+    /// Render the Table-1 style parameter listing.
+    pub fn table1(&self) -> Vec<(String, String)> {
+        use crate::util::eng;
+        vec![
+            (
+                "Number of Chiplets".into(),
+                format!("{} x {}", self.arch.grid.0, self.arch.grid.1),
+            ),
+            (
+                "DRAM Configuration".into(),
+                format!(
+                    "{} chiplets, {} per chiplet",
+                    self.arch.dram_chiplets,
+                    eng(self.arch.dram_bw_bytes, "B/s")
+                ),
+            ),
+            (
+                "NoP Configuration".into(),
+                format!("XY mesh, {} per side", eng(self.arch.nop_link_bw_bits, "b/s")),
+            ),
+            (
+                "NoC Configuration".into(),
+                format!("XY mesh, {} per port", eng(self.arch.noc_link_bw_bits, "b/s")),
+            ),
+            (
+                "Wireless Bandwidth".into(),
+                self.sweep
+                    .bandwidths_bits
+                    .iter()
+                    .map(|b| eng(*b, "b/s"))
+                    .collect::<Vec<_>>()
+                    .join(", "),
+            ),
+            (
+                "Distance Threshold".into(),
+                self.sweep
+                    .thresholds
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+                    + " NoP hops",
+            ),
+            (
+                "Injection Probability".into(),
+                format!(
+                    "{:.0}% to {:.0}% step {:.0}%",
+                    self.sweep.injection_probs.first().unwrap_or(&0.0) * 100.0,
+                    self.sweep.injection_probs.last().unwrap_or(&0.0) * 100.0,
+                    (self.sweep.injection_probs.get(1).unwrap_or(&0.0)
+                        - self.sweep.injection_probs.first().unwrap_or(&0.0))
+                        * 100.0
+                ),
+            ),
+            ("Peak Throughput".into(), format!("{:.1} TOPS", self.arch.peak_tops())),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = Config::default();
+        assert_eq!(c.arch.grid, (3, 3));
+        assert_eq!(c.arch.dram_chiplets, 4);
+        assert_eq!(c.arch.dram_bw_bytes, 16.0e9);
+        assert_eq!(c.arch.nop_link_bw_bits, 32.0e9);
+        assert_eq!(c.arch.noc_link_bw_bits, 64.0e9);
+        assert_eq!(c.sweep.thresholds, vec![1, 2, 3, 4]);
+        assert_eq!(c.sweep.injection_probs.len(), 15);
+        assert!((c.sweep.injection_probs[0] - 0.10).abs() < 1e-12);
+        assert!((c.sweep.injection_probs[14] - 0.80).abs() < 1e-12);
+        assert_eq!(c.sweep.bandwidths_bits, vec![64.0e9, 96.0e9]);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn peak_tops_is_near_144() {
+        let c = ArchConfig::default();
+        let tops = c.peak_tops();
+        assert!(
+            (140.0..155.0).contains(&tops),
+            "expected ~144 TOPS, got {tops}"
+        );
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let cfg = Config::from_str(
+            "[arch]\ngrid_rows = 4\ngrid_cols = 4\n\n[wireless]\nbandwidth_bits = 96e9\ninjection_prob = 0.5\n\n[sweep]\nthresholds = [1, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.arch.grid, (4, 4));
+        assert_eq!(cfg.wireless.bandwidth_bits, 96.0e9);
+        assert_eq!(cfg.sweep.thresholds, vec![1, 2]);
+        // untouched fields keep defaults
+        assert_eq!(cfg.arch.dram_chiplets, 4);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Config::from_str("[wireless]\ninjection_prob = 1.5\n").is_err());
+        assert!(Config::from_str("[arch]\ngrid_rows = 0\n").is_err());
+        assert!(Config::from_str("[wireless]\ndistance_threshold = 0\n").is_err());
+    }
+
+    #[test]
+    fn table1_mentions_key_params() {
+        let rows = Config::default().table1();
+        let text: String = rows
+            .iter()
+            .map(|(k, v)| format!("{k}: {v}\n"))
+            .collect();
+        assert!(text.contains("3 x 3"));
+        assert!(text.contains("64.000 Gb/s"));
+        assert!(text.contains("96.000 Gb/s"));
+        assert!(text.contains("10% to 80% step 5%"));
+    }
+}

@@ -1,0 +1,240 @@
+//! Minimal TOML-subset parser — enough for wisper config files.
+//!
+//! Supported: `[section]` headers, `key = value` with values being
+//! integers, floats (incl. `64e9`), booleans, quoted strings, and flat
+//! arrays of numbers. Comments with `#`. Nested tables, dates and
+//! multi-line strings are out of scope (serde/toml are not in the
+//! offline registry).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<f64>),
+}
+
+/// A parsed document: flat map of `section.key` -> Value.
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, Value>,
+}
+
+fn parse_scalar(raw: &str) -> Result<Value> {
+    let s = raw.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    // ints first (no dot/exponent), then floats
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains(['e', 'E']) {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value: {raw:?}")
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw_line) in text.lines().enumerate() {
+            let line = match raw_line.find('#') {
+                // Keep '#' inside quoted strings.
+                Some(idx) if !raw_line[..idx].contains('"') => &raw_line[..idx],
+                _ => raw_line,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    bail!("line {}: malformed section header {line:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value, got {line:?}", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let v = value.trim();
+            let parsed = if v.starts_with('[') {
+                if !v.ends_with(']') {
+                    bail!("line {}: unterminated array", lineno + 1);
+                }
+                let inner = &v[1..v.len() - 1];
+                let mut items = Vec::new();
+                for part in inner.split(',') {
+                    let p = part.trim();
+                    if p.is_empty() {
+                        continue;
+                    }
+                    match parse_scalar(p)? {
+                        Value::Int(i) => items.push(i as f64),
+                        Value::Float(f) => items.push(f),
+                        other => bail!(
+                            "line {}: arrays may only hold numbers, got {other:?}",
+                            lineno + 1
+                        ),
+                    }
+                }
+                Value::List(items)
+            } else {
+                parse_scalar(v)
+                    .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?
+            };
+            doc.values.insert(full_key, parsed);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)),
+            Some(other) => bail!("{key}: expected number, got {other:?}"),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Int(i)) if *i >= 0 => Ok(Some(*i as u64)),
+            Some(Value::Float(f)) if *f >= 0.0 && f.fract() == 0.0 => {
+                Ok(Some(*f as u64))
+            }
+            Some(other) => bail!("{key}: expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        Ok(self.get_u64(key)?.map(|v| v as usize))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(other) => bail!("{key}: expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<Option<&str>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s)),
+            Some(other) => bail!("{key}: expected string, got {other:?}"),
+        }
+    }
+
+    pub fn get_list_f64(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::List(v)) => Ok(Some(v.clone())),
+            Some(other) => bail!("{key}: expected array, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = 2\ny = 3.5\nz = 64e9\nflag = true\nname = \"hello\"\nlist = [1, 2.5, 3e3]\n\n[b]\nx = 9\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_u64("top").unwrap(), Some(1));
+        assert_eq!(doc.get_u64("a.x").unwrap(), Some(2));
+        assert_eq!(doc.get_f64("a.y").unwrap(), Some(3.5));
+        assert_eq!(doc.get_f64("a.z").unwrap(), Some(64e9));
+        assert_eq!(doc.get_bool("a.flag").unwrap(), Some(true));
+        assert_eq!(doc.get_str("a.name").unwrap(), Some("hello"));
+        assert_eq!(
+            doc.get_list_f64("a.list").unwrap(),
+            Some(vec![1.0, 2.5, 3000.0])
+        );
+        assert_eq!(doc.get_u64("b.x").unwrap(), Some(9));
+        assert_eq!(doc.get("nope"), None);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc =
+            TomlDoc::parse("# header\n\n[s]  # trailing\nk = 5 # value comment\n").unwrap();
+        assert_eq!(doc.get_u64("s.k").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let doc = TomlDoc::parse("x = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_u64("x").unwrap(), Some(1_000_000));
+    }
+
+    #[test]
+    fn type_mismatches_error() {
+        let doc = TomlDoc::parse("x = true\ny = \"s\"\n").unwrap();
+        assert!(doc.get_f64("x").is_err());
+        assert!(doc.get_u64("y").is_err());
+        assert!(doc.get_bool("y").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("k = [true]\n").is_err());
+    }
+
+    #[test]
+    fn negative_int_rejected_for_u64() {
+        let doc = TomlDoc::parse("x = -5\n").unwrap();
+        assert!(doc.get_u64("x").is_err());
+        assert_eq!(doc.get_f64("x").unwrap(), Some(-5.0));
+    }
+}

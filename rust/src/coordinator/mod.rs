@@ -1,0 +1,327 @@
+//! End-to-end orchestration: build workload -> SA-map it (wired cost)
+//! -> extract cost tensors -> sweep the wireless grid via the AOT
+//! runtime -> aggregate paper-figure data.
+//!
+//! This is the leader process of the stack: it owns the package model,
+//! the mapper, the runtime handle and the worker pool, and exposes one
+//! entry point per experiment (Fig. 2 / Fig. 4 / Fig. 5 + ablations).
+
+pub mod loadbalance;
+
+use crate::arch::Package;
+use crate::config::{Config, WirelessConfig};
+use crate::dse::{sweep_bandwidths, sweep_grid, SweepResult};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::mapping::mapper::{anneal, SaOptions};
+use crate::mapping::{layer_sequential, Mapping};
+use crate::runtime::Runtime;
+use crate::sim::cost::{build_tensors, CostTensors};
+use crate::sim::{evaluate_wired, stochastic, EvalResult};
+use crate::util::threadpool::{default_workers, parallel_map};
+use crate::workloads::{build, Workload, WORKLOAD_NAMES};
+use anyhow::Result;
+
+/// A workload prepared for experiments: mapped and tensorized.
+#[derive(Debug, Clone)]
+pub struct Prepared {
+    pub workload: Workload,
+    pub mapping: Mapping,
+    pub tensors: CostTensors,
+    pub wired: EvalResult,
+    pub sa_initial_cost: f64,
+}
+
+/// The experiment coordinator.
+pub struct Coordinator {
+    pub cfg: Config,
+    pub pkg: Package,
+    artifact_path: Option<String>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: Config) -> Result<Self> {
+        let pkg = Package::new(cfg.arch.clone())?;
+        Ok(Self {
+            cfg,
+            pkg,
+            artifact_path: None,
+        })
+    }
+
+    pub fn with_artifact(mut self, path: Option<String>) -> Self {
+        self.artifact_path = path;
+        self
+    }
+
+    pub fn runtime(&self) -> Result<Runtime> {
+        Runtime::auto(self.artifact_path.as_deref())
+    }
+
+    fn eligibility(&self) -> WirelessConfig {
+        // Criterion 1 only (threshold/pinj live in the config grid).
+        WirelessConfig {
+            enabled: true,
+            multicast_only: self.cfg.wireless.multicast_only,
+            distance_threshold: 1,
+            injection_prob: 1.0,
+            ..self.cfg.wireless.clone()
+        }
+    }
+
+    /// SA-map a workload against the wired cost model and build its
+    /// tensors. `optimize=false` keeps the layer-sequential baseline
+    /// (for mapping ablations).
+    pub fn prepare(&self, name: &str, optimize: bool) -> Result<Prepared> {
+        let workload = build(name)?;
+        let elig = self.eligibility();
+        let (mapping, sa_initial_cost) = if optimize {
+            let opts = SaOptions {
+                iters: self.cfg.mapper.sa_iters,
+                temp_frac: self.cfg.mapper.sa_temp,
+                seed: self.cfg.mapper.seed,
+            };
+            let pkg = &self.pkg;
+            let wl = &workload;
+            let r = anneal(wl, pkg, &opts, |m| {
+                build_tensors(wl, m, pkg, &elig)
+                    .map(|t| evaluate_wired(&t).total_s)
+                    .unwrap_or(f64::INFINITY)
+            });
+            (r.mapping, r.initial_cost)
+        } else {
+            (layer_sequential(&workload, &self.pkg), 0.0)
+        };
+        let tensors = build_tensors(&workload, &mapping, &self.pkg, &elig)?;
+        let wired = evaluate_wired(&tensors);
+        Ok(Prepared {
+            workload,
+            mapping,
+            tensors,
+            wired,
+            sa_initial_cost,
+        })
+    }
+
+    /// Prepare all 15 paper workloads in parallel.
+    pub fn prepare_all(&self, optimize: bool) -> Result<Vec<Prepared>> {
+        let workers = self.workers();
+        let results = parallel_map(WORKLOAD_NAMES.len(), workers, |i| {
+            self.prepare(WORKLOAD_NAMES[i], optimize)
+        });
+        results.into_iter().collect()
+    }
+
+    pub fn workers(&self) -> usize {
+        if self.cfg.sweep.workers > 0 {
+            self.cfg.sweep.workers
+        } else {
+            default_workers()
+        }
+    }
+
+    /// Figure 2: per-workload wired bottleneck shares.
+    pub fn fig2(&self, prepared: &[Prepared]) -> Vec<(String, [f64; 5])> {
+        prepared
+            .iter()
+            .map(|p| (p.workload.name.clone(), p.wired.shares))
+            .collect()
+    }
+
+    /// Figure 4: per-workload best speedup at each sweep bandwidth.
+    /// Pass the `Runtime` in (compile the artifact once, sweep many) —
+    /// see `runtime()`.
+    pub fn fig4(&self, rt: &Runtime, prepared: &[Prepared]) -> Result<Vec<Fig4Row>> {
+        let mut rows = Vec::with_capacity(prepared.len());
+        for p in prepared {
+            let sweeps = sweep_bandwidths(
+                rt,
+                &p.tensors,
+                &self.cfg.sweep.thresholds,
+                &self.cfg.sweep.injection_probs,
+                &self.cfg.sweep.bandwidths_bits,
+            )?;
+            let per_bw = sweeps
+                .into_iter()
+                .map(|(bw, r)| {
+                    let b = r.best_point();
+                    Fig4Cell {
+                        wl_bw: bw,
+                        speedup: b.speedup,
+                        threshold: b.threshold,
+                        pinj: b.pinj,
+                        total_s: b.total_s,
+                    }
+                })
+                .collect();
+            rows.push(Fig4Row {
+                workload: p.workload.name.clone(),
+                t_wired: p.wired.total_s,
+                per_bw,
+            });
+        }
+        Ok(rows)
+    }
+
+    /// Figure 5: full (threshold x pinj) heatmap for one workload at one
+    /// bandwidth. Pass the `Runtime` in (compile once, sweep many).
+    pub fn fig5(&self, rt: &Runtime, prepared: &Prepared, wl_bw: f64) -> Result<SweepResult> {
+        sweep_grid(
+            rt,
+            &prepared.tensors,
+            &self.cfg.sweep.thresholds,
+            &self.cfg.sweep.injection_probs,
+            wl_bw,
+        )
+    }
+
+    /// Cross-validate the expected-value artifact path against the
+    /// stochastic per-message mode; returns (expected_s, stochastic_s).
+    pub fn validate_stochastic(
+        &self,
+        p: &Prepared,
+        w: &WirelessConfig,
+        seeds: u64,
+    ) -> Result<(f64, f64)> {
+        let expected = crate::sim::evaluate_expected(&p.tensors, w);
+        let mut acc = 0.0;
+        for s in 0..seeds.max(1) {
+            acc += stochastic::simulate(&p.workload, &p.mapping, &self.pkg, w, s)?.total_s;
+        }
+        Ok((expected.total_s, acc / seeds.max(1) as f64))
+    }
+
+    /// Energy/EDP comparison for one workload at a wireless config.
+    pub fn energy(
+        &self,
+        p: &Prepared,
+        w: &WirelessConfig,
+    ) -> Result<(EnergyBreakdown, EnergyBreakdown, f64, f64)> {
+        let em = EnergyModel::default();
+        let traffic = crate::sim::characterize(&p.workload, &p.mapping, &self.pkg)?;
+        let dram_bits: f64 = traffic.iter().map(|t| t.dram_bits).sum();
+        let noc_bit_hops: f64 = traffic
+            .iter()
+            .map(|t| t.noc_bits_per_chiplet * 4.0)
+            .sum();
+        let hybrid_res = crate::sim::evaluate_expected(&p.tensors, w);
+        let wired_e = em.evaluate(
+            p.workload.total_macs(),
+            dram_bits,
+            noc_bit_hops,
+            &p.tensors,
+            &p.wired,
+        );
+        let hybrid_e = em.evaluate(
+            p.workload.total_macs(),
+            dram_bits,
+            noc_bit_hops,
+            &p.tensors,
+            &hybrid_res,
+        );
+        Ok((wired_e, hybrid_e, p.wired.total_s, hybrid_res.total_s))
+    }
+}
+
+/// One bandwidth's best point for a Fig.4 bar.
+#[derive(Debug, Clone)]
+pub struct Fig4Cell {
+    pub wl_bw: f64,
+    pub speedup: f64,
+    pub threshold: u32,
+    pub pinj: f64,
+    pub total_s: f64,
+}
+
+/// One workload row of Figure 4.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub workload: String,
+    pub t_wired: f64,
+    pub per_bw: Vec<Fig4Cell>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord() -> Coordinator {
+        let mut cfg = Config::default();
+        cfg.mapper.sa_iters = 40; // keep unit tests fast
+        Coordinator::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn prepare_baseline_and_optimized() {
+        let c = coord();
+        let base = c.prepare("zfnet", false).unwrap();
+        let opt = c.prepare("zfnet", true).unwrap();
+        assert_eq!(base.workload.layers.len(), opt.workload.layers.len());
+        // SA must never end worse than its own start.
+        assert!(opt.wired.total_s <= opt.sa_initial_cost + 1e-12);
+        assert!(opt.wired.total_s > 0.0);
+    }
+
+    #[test]
+    fn fig2_shares_normalized() {
+        let c = coord();
+        let p = vec![c.prepare("googlenet", false).unwrap()];
+        let rows = c.fig2(&p);
+        assert_eq!(rows.len(), 1);
+        let sum: f64 = rows[0].1.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        // Wired baseline: wireless share must be zero.
+        assert_eq!(rows[0].1[crate::sim::COMP_WIRELESS], 0.0);
+    }
+
+    #[test]
+    fn fig4_row_contains_both_bandwidths() {
+        let c = coord();
+        let p = vec![c.prepare("googlenet", false).unwrap()];
+        let rt = c.runtime().unwrap();
+        let rows = c.fig4(&rt, &p).unwrap();
+        assert_eq!(rows[0].per_bw.len(), 2);
+        assert_eq!(rows[0].per_bw[0].wl_bw, 64e9);
+        assert_eq!(rows[0].per_bw[1].wl_bw, 96e9);
+        // Speedups never below 1: the sweep includes near-wired points
+        // and best-of-grid can always fall back to tiny pinj.
+        for cell in &rows[0].per_bw {
+            assert!(cell.speedup >= 0.99, "{}", cell.speedup);
+        }
+    }
+
+    #[test]
+    fn fig5_heatmap_dimensions() {
+        let c = coord();
+        let p = c.prepare("zfnet", false).unwrap();
+        let rt = c.runtime().unwrap();
+        let sweep = c.fig5(&rt, &p, 64e9).unwrap();
+        let hm = sweep.heatmap(&c.cfg.sweep.thresholds, &c.cfg.sweep.injection_probs);
+        assert_eq!(hm.len(), 4);
+        assert_eq!(hm[0].len(), 15);
+    }
+
+    #[test]
+    fn stochastic_validation_close() {
+        let c = coord();
+        let p = c.prepare("googlenet", false).unwrap();
+        let w = WirelessConfig {
+            injection_prob: 0.4,
+            distance_threshold: 1,
+            ..Default::default()
+        };
+        let (exp, stoch) = c.validate_stochastic(&p, &w, 6).unwrap();
+        let rel = (exp - stoch).abs() / exp.max(1e-30);
+        assert!(rel < 0.08, "expected {exp} vs stochastic {stoch}");
+    }
+
+    #[test]
+    fn energy_breakdowns_positive() {
+        let c = coord();
+        let p = c.prepare("zfnet", false).unwrap();
+        let w = WirelessConfig::default();
+        let (we, he, tw, th) = c.energy(&p, &w).unwrap();
+        assert!(we.total_j() > 0.0);
+        assert!(he.total_j() > 0.0);
+        assert!(tw > 0.0 && th > 0.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Design-space exploration engine: sweep the wireless configuration
+//! grid (distance threshold x injection probability x bandwidth) for a
+//! mapped workload and pick the near-optimal point — the paper's §IV
+//! methodology ("we sweep the distance threshold and injection
+//! probability parameters until finding a near-optimal value for each
+//! workload").
+//!
+//! One `Runtime::evaluate` call covers a whole (threshold x pinj) grid
+//! for one bandwidth — the batching the AOT artifact exists for.
+
+use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
+use crate::sim::cost::CostTensors;
+use crate::util::threadpool::parallel_map;
+use anyhow::Result;
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub threshold: u32,
+    pub pinj: f64,
+    pub wl_bw: f64,
+    pub total_s: f64,
+    pub speedup: f64,
+    pub shares: [f64; 5],
+    pub wl_bits: f64,
+}
+
+/// Full sweep output for one workload at one bandwidth.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub points: Vec<SweepPoint>,
+    pub t_wired: f64,
+    /// Index of the best (max-speedup) point.
+    pub best: usize,
+}
+
+impl SweepResult {
+    pub fn best_point(&self) -> &SweepPoint {
+        &self.points[self.best]
+    }
+
+    /// Heatmap rows: for each threshold (ascending), speedups over the
+    /// pinj axis (ascending) — Figure 5's layout.
+    pub fn heatmap(&self, thresholds: &[u32], pinjs: &[f64]) -> Vec<Vec<f64>> {
+        thresholds
+            .iter()
+            .map(|&t| {
+                pinjs
+                    .iter()
+                    .map(|&p| {
+                        self.points
+                            .iter()
+                            .find(|pt| {
+                                pt.threshold == t && (pt.pinj - p).abs() < 1e-9
+                            })
+                            .map(|pt| pt.speedup)
+                            .unwrap_or(f64::NAN)
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+/// Sweep a (threshold x pinj) grid at a single wireless bandwidth.
+pub fn sweep_grid(
+    runtime: &Runtime,
+    tensors: &CostTensors,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    wl_bw: f64,
+) -> Result<SweepResult> {
+    let mut configs: Vec<(u32, f64, f64)> = Vec::new();
+    for &t in thresholds {
+        for &p in pinjs {
+            configs.push((t, p, wl_bw));
+        }
+    }
+    let mut points = Vec::with_capacity(configs.len());
+    let mut t_wired = 0.0;
+    for chunk in configs.chunks(NUM_CONFIGS) {
+        let input = pack_input(tensors, chunk)?;
+        let out = runtime.evaluate(&input)?;
+        t_wired = out.t_wired as f64;
+        for (i, &(t, p, bw)) in chunk.iter().enumerate() {
+            let mut shares = [0.0; 5];
+            for (k, s) in shares.iter_mut().enumerate() {
+                *s = out.share(i, k) as f64;
+            }
+            points.push(SweepPoint {
+                threshold: t,
+                pinj: p,
+                wl_bw: bw,
+                total_s: out.total[i] as f64,
+                speedup: out.speedup[i] as f64,
+                shares,
+                wl_bits: out.wl_vol[i] as f64,
+            });
+        }
+    }
+    let best = points
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.speedup.partial_cmp(&b.1.speedup).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(SweepResult {
+        points,
+        t_wired,
+        best,
+    })
+}
+
+/// Best point per bandwidth — the per-workload bars of Figure 4.
+pub fn sweep_bandwidths(
+    runtime: &Runtime,
+    tensors: &CostTensors,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    bandwidths: &[f64],
+) -> Result<Vec<(f64, SweepResult)>> {
+    bandwidths
+        .iter()
+        .map(|&bw| Ok((bw, sweep_grid(runtime, tensors, thresholds, pinjs, bw)?)))
+        .collect()
+}
+
+/// Parallel sweep across many workloads' tensors. `runtimes` are
+/// per-thread (PJRT executables are not Sync); use `make_runtime` to
+/// construct one per worker.
+pub fn sweep_many<F>(
+    tensors: &[CostTensors],
+    thresholds: &[u32],
+    pinjs: &[f64],
+    wl_bw: f64,
+    workers: usize,
+    make_runtime: F,
+) -> Result<Vec<SweepResult>>
+where
+    F: Fn() -> Runtime + Sync,
+{
+    let results = parallel_map(tensors.len(), workers, |i| {
+        let rt = make_runtime();
+        sweep_grid(&rt, &tensors[i], thresholds, pinjs, wl_bw)
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::sim::cost::LayerCosts;
+
+    fn tensors() -> CostTensors {
+        let mut l0 = LayerCosts {
+            t_comp: 1.0e-6,
+            nop_vol_hops: 4.0e6,
+            ..Default::default()
+        };
+        l0.elig_vol_hops[3] = 3.0e6;
+        l0.elig_vol[3] = 0.1e6;
+        let l1 = LayerCosts {
+            t_comp: 2.0e-6,
+            nop_vol_hops: 1.0e6,
+            ..Default::default()
+        };
+        CostTensors {
+            layers: vec![l0, l1],
+            nop_agg_bw: 1.0e12,
+        }
+    }
+
+    fn paper_grid() -> (Vec<u32>, Vec<f64>) {
+        (
+            vec![1, 2, 3, 4],
+            (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+        )
+    }
+
+    #[test]
+    fn grid_has_sixty_points() {
+        let (t, p) = paper_grid();
+        let rt = Runtime::native();
+        let r = sweep_grid(&rt, &tensors(), &t, &p, 64e9).unwrap();
+        assert_eq!(r.points.len(), 60);
+        assert!(r.t_wired > 0.0);
+        // One artifact call covers the whole grid.
+        assert_eq!(rt.calls.get(), 1);
+    }
+
+    #[test]
+    fn best_point_maximizes_speedup() {
+        let (t, p) = paper_grid();
+        let rt = Runtime::native();
+        let r = sweep_grid(&rt, &tensors(), &t, &p, 64e9).unwrap();
+        let best = r.best_point();
+        for pt in &r.points {
+            assert!(pt.speedup <= best.speedup + 1e-12);
+        }
+        // The NoP-bound tensor set must benefit from offload.
+        assert!(best.speedup > 1.0);
+    }
+
+    #[test]
+    fn heatmap_layout() {
+        let (t, p) = paper_grid();
+        let rt = Runtime::native();
+        let r = sweep_grid(&rt, &tensors(), &t, &p, 64e9).unwrap();
+        let hm = r.heatmap(&t, &p);
+        assert_eq!(hm.len(), 4);
+        assert_eq!(hm[0].len(), 15);
+        assert!(hm.iter().flatten().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bandwidths_sweep() {
+        let (t, p) = paper_grid();
+        let rt = Runtime::native();
+        let rs = sweep_bandwidths(&rt, &tensors(), &t, &p, &[64e9, 96e9]).unwrap();
+        assert_eq!(rs.len(), 2);
+        // More bandwidth can only help (same grid, lower wireless time).
+        assert!(rs[1].1.best_point().speedup >= rs[0].1.best_point().speedup - 1e-9);
+    }
+
+    #[test]
+    fn many_workloads_parallel() {
+        let (t, p) = paper_grid();
+        let ts = vec![tensors(), tensors(), tensors()];
+        let rs = sweep_many(&ts, &t, &p, 64e9, 2, Runtime::native).unwrap();
+        assert_eq!(rs.len(), 3);
+        let s0 = rs[0].best_point().speedup;
+        assert!(rs.iter().all(|r| (r.best_point().speedup - s0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn oversize_grid_chunks() {
+        // 4 thresholds x 20 pinj = 80 > 64: must chunk into 2 calls.
+        let t = vec![1, 2, 3, 4];
+        let p: Vec<f64> = (0..20).map(|i| 0.04 * (i + 1) as f64).collect();
+        let rt = Runtime::native();
+        let r = sweep_grid(&rt, &tensors(), &t, &p, 64e9).unwrap();
+        assert_eq!(r.points.len(), 80);
+        assert_eq!(rt.calls.get(), 2);
+    }
+}

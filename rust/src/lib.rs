@@ -1,0 +1,36 @@
+//! # wisper — Wireless-enabled Multi-Chip AI Accelerator Exploration
+//!
+//! A from-scratch reproduction of *"Exploring the Potential of
+//! Wireless-enabled Multi-Chip AI Accelerators"* (Irabor et al., CS.AR
+//! 2025): a GEMINI-style analytical simulator for chiplet-based DNN
+//! accelerators, extended with a reconfigurable wireless NoP plane, an
+//! SA mapping search, and a batched design-space exploration engine
+//! whose cost-model hot path runs as an AOT-compiled XLA artifact
+//! (JAX/Pallas at build time, PJRT from Rust at run time).
+//!
+//! Layer map (DESIGN.md):
+//! * L3 (this crate): workloads, mapping, NoC/NoP/wireless models, the
+//!   analytical engine, the sweep engine and the CLI.
+//! * L2 (`python/compile/model.py`): the batched cost model, lowered
+//!   once to `artifacts/model.hlo.txt`.
+//! * L1 (`python/compile/kernels/bottleneck.py`): the fused offload +
+//!   bottleneck Pallas kernel inside that artifact.
+
+pub mod arch;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod energy;
+pub mod mapping;
+pub mod noc;
+pub mod nop;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod wireless;
+pub mod workloads;
+
+pub use config::Config;
+pub use coordinator::Coordinator;

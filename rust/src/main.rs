@@ -1,0 +1,414 @@
+//! `wisper` CLI — leader entrypoint.
+//!
+//! Subcommands map 1:1 to the paper's artifacts (DESIGN.md §3):
+//!   params      Table 1        simulation parameters
+//!   arch        Figure 1       package schematic
+//!   bottleneck  Figure 2       wired bottleneck shares
+//!   speedup     Figure 4       best hybrid speedup per workload
+//!   heatmap     Figure 5       threshold x pinj sweep for one workload
+//!   workloads                  the 15 benchmark networks
+//!   simulate                   one wireless config end to end
+//!   validate                   expected-value vs stochastic cross-check
+//!   balance                    adaptive load-balance search (future work)
+
+use anyhow::{bail, Result};
+use wisper::cli::{parse, render_help, OptSpec};
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::loadbalance;
+use wisper::coordinator::Coordinator;
+use wisper::report;
+use wisper::sim::COMPONENTS;
+use wisper::util::eng;
+use wisper::workloads::WORKLOAD_NAMES;
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", takes_value: true, help: "TOML config file" },
+        OptSpec { name: "workload", takes_value: true, help: "workload name (see `wisper workloads`)" },
+        OptSpec { name: "all", takes_value: false, help: "run every paper workload" },
+        OptSpec { name: "bw", takes_value: true, help: "wireless bandwidth in bits/s (e.g. 64e9)" },
+        OptSpec { name: "threshold", takes_value: true, help: "distance threshold in NoP hops" },
+        OptSpec { name: "pinj", takes_value: true, help: "injection probability [0,1]" },
+        OptSpec { name: "seeds", takes_value: true, help: "stochastic seeds to average" },
+        OptSpec { name: "sa-iters", takes_value: true, help: "simulated-annealing iterations" },
+        OptSpec { name: "no-opt", takes_value: false, help: "layer-sequential mapping (skip SA)" },
+        OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
+        OptSpec { name: "csv", takes_value: false, help: "also write CSVs under results/" },
+        OptSpec { name: "draw", takes_value: false, help: "ASCII-render (arch)" },
+    ]
+}
+
+const SUBCOMMANDS: [(&str, &str); 9] = [
+    ("params", "print Table 1 (simulation parameters)"),
+    ("arch", "describe the package (Figure 1)"),
+    ("workloads", "list the 15 benchmark workloads"),
+    ("bottleneck", "Figure 2: wired bottleneck breakdown"),
+    ("speedup", "Figure 4: hybrid speedup per workload"),
+    ("heatmap", "Figure 5: threshold x pinj heatmap"),
+    ("simulate", "evaluate one wireless configuration"),
+    ("validate", "expected-value vs stochastic cross-check"),
+    ("balance", "adaptive load-balance search (future work)"),
+];
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print!("{}", render_help("wisper", &SUBCOMMANDS, &specs()));
+        return Ok(());
+    }
+    let p = parse(&args, &specs())?;
+
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::default(),
+    };
+    if let Some(iters) = p.get_usize("sa-iters")? {
+        cfg.mapper.sa_iters = iters;
+    }
+    let coord =
+        Coordinator::new(cfg.clone())?.with_artifact(p.get("artifact").map(String::from));
+    let optimize = !p.has_flag("no-opt");
+
+    let names: Vec<String> = if p.has_flag("all") || p.get("workload").is_none() {
+        WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![p.get("workload").unwrap().to_string()]
+    };
+
+    match p.subcommand.as_str() {
+        "params" => cmd_params(&cfg),
+        "arch" => cmd_arch(&coord),
+        "workloads" => cmd_workloads(),
+        "bottleneck" => cmd_bottleneck(&coord, &names, optimize, p.has_flag("csv")),
+        "speedup" => cmd_speedup(&coord, &names, optimize, p.has_flag("csv")),
+        "heatmap" => {
+            let wl = p.get_or("workload", "zfnet").to_string();
+            let bw = p.get_f64("bw")?.unwrap_or(64e9);
+            cmd_heatmap(&coord, &wl, bw, optimize, p.has_flag("csv"))
+        }
+        "simulate" => {
+            let w = wireless_from(&cfg, &p)?;
+            cmd_simulate(&coord, &names, optimize, &w)
+        }
+        "validate" => {
+            let w = wireless_from(&cfg, &p)?;
+            let seeds = p.get_usize("seeds")?.unwrap_or(8) as u64;
+            cmd_validate(&coord, &names, optimize, &w, seeds)
+        }
+        "balance" => {
+            let bw = p.get_f64("bw")?.unwrap_or(64e9);
+            cmd_balance(&coord, &names, optimize, bw)
+        }
+        other => bail!("unknown command {other:?}; try `wisper help`"),
+    }
+}
+
+fn wireless_from(cfg: &Config, p: &wisper::cli::Parsed) -> Result<WirelessConfig> {
+    let mut w = cfg.wireless.clone();
+    if let Some(bw) = p.get_f64("bw")? {
+        w.bandwidth_bits = bw;
+    }
+    if let Some(t) = p.get_usize("threshold")? {
+        w.distance_threshold = t as u32;
+    }
+    if let Some(pi) = p.get_f64("pinj")? {
+        w.injection_prob = pi;
+    }
+    w.validate()?;
+    Ok(w)
+}
+
+fn cmd_params(cfg: &Config) -> Result<()> {
+    println!("Table 1: simulation parameters\n");
+    let rows: Vec<Vec<String>> = cfg
+        .table1()
+        .into_iter()
+        .map(|(k, v)| vec![k, v])
+        .collect();
+    print!("{}", report::table(&["parameter", "value"], &rows));
+    Ok(())
+}
+
+fn cmd_arch(coord: &Coordinator) -> Result<()> {
+    println!("{}", coord.pkg.draw());
+    println!("peak throughput : {:.1} TOPS", coord.pkg.cfg.peak_tops());
+    println!("NoP aggregate   : {}", eng(coord.pkg.nop_aggregate_bw(), "b/s"));
+    println!("NoC aggregate   : {}", eng(coord.pkg.noc_aggregate_bw(), "b/s"));
+    println!("DRAM aggregate  : {}", eng(coord.pkg.dram_aggregate_bw(), "b/s"));
+    println!("max NoP hops    : {}", coord.pkg.max_nop_hops());
+    Ok(())
+}
+
+fn cmd_workloads() -> Result<()> {
+    let mut rows = Vec::new();
+    for name in WORKLOAD_NAMES {
+        let w = wisper::workloads::build(name)?;
+        rows.push(vec![
+            name.to_string(),
+            w.layers.len().to_string(),
+            format!("{:.2}", w.total_macs() as f64 / 1e9),
+            format!("{:.1}", w.total_weight_datums() as f64 / 1e6),
+            format!("{:.0}%", w.branch_fraction() * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["workload", "layers", "GMACs", "Mparams", "branchy"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_bottleneck(
+    coord: &Coordinator,
+    names: &[String],
+    optimize: bool,
+    csv: bool,
+) -> Result<()> {
+    println!("Figure 2: wired bottleneck shares (% of execution time)\n");
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for name in names {
+        let prep = coord.prepare(name, optimize)?;
+        rows.push((name.clone(), prep.wired.shares));
+        let mut r = vec![name.clone()];
+        r.extend(prep.wired.shares.iter().map(|s| format!("{:.4}", s)));
+        r.push(format!("{:.6e}", prep.wired.total_s));
+        csv_rows.push(r);
+    }
+    print!("{}", report::stacked_shares(&rows));
+    let mut trows = Vec::new();
+    for (name, shares) in &rows {
+        let mut r = vec![name.clone()];
+        r.extend(shares.iter().map(|s| format!("{:>5.1}%", s * 100.0)));
+        trows.push(r);
+    }
+    let headers: Vec<&str> = std::iter::once("workload")
+        .chain(COMPONENTS.iter().copied())
+        .collect();
+    print!("\n{}", report::table(&headers, &trows));
+    if csv {
+        let path = report::results_dir().join("fig2_bottleneck.csv");
+        let headers = ["workload", "compute", "dram", "noc", "nop", "wireless", "total_s"];
+        report::write_csv(&path, &headers, &csv_rows)?;
+        println!("\nwrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_speedup(
+    coord: &Coordinator,
+    names: &[String],
+    optimize: bool,
+    csv: bool,
+) -> Result<()> {
+    println!("Figure 4: best hybrid speedup over the wired baseline\n");
+    let prepared: Result<Vec<_>> = names.iter().map(|n| coord.prepare(n, optimize)).collect();
+    let prepared = prepared?;
+    let rt = coord.runtime()?;
+    let rows = coord.fig4(&rt, &prepared)?;
+
+    let mut trows = Vec::new();
+    let mut csv_rows = Vec::new();
+    let mut per_bw_gains: Vec<Vec<f64>> = vec![];
+    for row in &rows {
+        let mut r = vec![row.workload.clone()];
+        for (i, cell) in row.per_bw.iter().enumerate() {
+            r.push(format!("{:+.1}%", (cell.speedup - 1.0) * 100.0));
+            r.push(format!("d={} p={:.2}", cell.threshold, cell.pinj));
+            if per_bw_gains.len() <= i {
+                per_bw_gains.push(vec![]);
+            }
+            per_bw_gains[i].push(cell.speedup);
+            csv_rows.push(vec![
+                row.workload.clone(),
+                format!("{}", cell.wl_bw),
+                format!("{:.6}", cell.speedup),
+                format!("{}", cell.threshold),
+                format!("{:.2}", cell.pinj),
+                format!("{:.6e}", row.t_wired),
+                format!("{:.6e}", cell.total_s),
+            ]);
+        }
+        trows.push(r);
+    }
+    let mut headers: Vec<String> = vec!["workload".into()];
+    if let Some(first) = rows.first() {
+        for cell in &first.per_bw {
+            headers.push(format!("{} gain", eng(cell.wl_bw, "b/s")));
+            headers.push("best cfg".into());
+        }
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print!("{}", report::table(&hrefs, &trows));
+
+    for (i, gains) in per_bw_gains.iter().enumerate() {
+        let bw = rows[0].per_bw[i].wl_bw;
+        let mean = wisper::util::stats::mean(
+            &gains.iter().map(|s| (s - 1.0) * 100.0).collect::<Vec<_>>(),
+        );
+        let max = wisper::util::stats::max(
+            &gains.iter().map(|s| (s - 1.0) * 100.0).collect::<Vec<_>>(),
+        );
+        println!(
+            "\n{}: average speedup {:+.1}%, max {:+.1}%",
+            eng(bw, "b/s"),
+            mean,
+            max
+        );
+    }
+    if csv {
+        let path = report::results_dir().join("fig4_speedup.csv");
+        report::write_csv(
+            &path,
+            &["workload", "wl_bw", "speedup", "threshold", "pinj", "t_wired", "t_hybrid"],
+            &csv_rows,
+        )?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_heatmap(
+    coord: &Coordinator,
+    workload: &str,
+    bw: f64,
+    optimize: bool,
+    csv: bool,
+) -> Result<()> {
+    println!(
+        "Figure 5: {} speedup (%) vs distance threshold x injection probability @ {}\n",
+        workload,
+        eng(bw, "b/s")
+    );
+    let prep = coord.prepare(workload, optimize)?;
+    let rt = coord.runtime()?;
+    let sweep = coord.fig5(&rt, &prep, bw)?;
+    let th = &coord.cfg.sweep.thresholds;
+    let pi = &coord.cfg.sweep.injection_probs;
+    let hm = sweep.heatmap(th, pi);
+    let rl: Vec<String> = th.iter().map(|t| format!("d={t}")).collect();
+    let cl: Vec<String> = pi.iter().map(|p| format!("{:.0}%", p * 100.0)).collect();
+    print!("{}", report::heatmap(&rl, &cl, &hm));
+    let best = sweep.best_point();
+    println!(
+        "\nbest: d={} pinj={:.2} -> {:+.1}%",
+        best.threshold,
+        best.pinj,
+        (best.speedup - 1.0) * 100.0
+    );
+    if csv {
+        let mut rows = Vec::new();
+        for pt in &sweep.points {
+            rows.push(vec![
+                workload.to_string(),
+                pt.threshold.to_string(),
+                format!("{:.2}", pt.pinj),
+                format!("{:.6}", pt.speedup),
+            ]);
+        }
+        let path = report::results_dir().join(format!("fig5_heatmap_{workload}.csv"));
+        report::write_csv(&path, &["workload", "threshold", "pinj", "speedup"], &rows)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(
+    coord: &Coordinator,
+    names: &[String],
+    optimize: bool,
+    w: &WirelessConfig,
+) -> Result<()> {
+    println!(
+        "hybrid simulation @ {} (d={}, pinj={:.2})\n",
+        eng(w.bandwidth_bits, "b/s"),
+        w.distance_threshold,
+        w.injection_prob
+    );
+    let mut rows = Vec::new();
+    for name in names {
+        let prep = coord.prepare(name, optimize)?;
+        let hybrid = wisper::sim::evaluate_expected(&prep.tensors, w);
+        let (we, he, _, _) = coord.energy(&prep, w)?;
+        rows.push(vec![
+            name.clone(),
+            format!("{:.3e}", prep.wired.total_s),
+            format!("{:.3e}", hybrid.total_s),
+            format!("{:+.1}%", (prep.wired.total_s / hybrid.total_s - 1.0) * 100.0),
+            format!("{:.3e}", we.edp(prep.wired.total_s)),
+            format!("{:.3e}", he.edp(hybrid.total_s)),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["workload", "t_wired(s)", "t_hybrid(s)", "gain", "EDP_wired", "EDP_hybrid"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_validate(
+    coord: &Coordinator,
+    names: &[String],
+    optimize: bool,
+    w: &WirelessConfig,
+    seeds: u64,
+) -> Result<()> {
+    println!(
+        "expected-value artifact model vs stochastic per-message mode ({seeds} seeds)\n"
+    );
+    let mut rows = Vec::new();
+    for name in names {
+        let prep = coord.prepare(name, optimize)?;
+        let (exp, stoch) = coord.validate_stochastic(&prep, w, seeds)?;
+        let rel = (exp - stoch).abs() / exp.max(1e-30);
+        rows.push(vec![
+            name.clone(),
+            format!("{exp:.4e}"),
+            format!("{stoch:.4e}"),
+            format!("{:.2}%", rel * 100.0),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(&["workload", "expected(s)", "stochastic(s)", "rel.err"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_balance(
+    coord: &Coordinator,
+    names: &[String],
+    optimize: bool,
+    bw: f64,
+) -> Result<()> {
+    println!("adaptive wired/wireless load balancing @ {}\n", eng(bw, "b/s"));
+    let rt = coord.runtime()?;
+    let mut rows = Vec::new();
+    for name in names {
+        let prep = coord.prepare(name, optimize)?;
+        let grid = coord.fig5(&rt, &prep, bw)?;
+        let adaptive = loadbalance::adaptive_search(&prep.tensors, bw, 4, 0.05)?;
+        rows.push(vec![
+            name.clone(),
+            format!("{:+.1}%", (grid.best_point().speedup - 1.0) * 100.0),
+            format!("60"),
+            format!("{:+.1}%", (adaptive.speedup - 1.0) * 100.0),
+            adaptive.evaluations.to_string(),
+            format!("d={} p={:.2}", adaptive.threshold, adaptive.pinj),
+        ]);
+    }
+    print!(
+        "{}",
+        report::table(
+            &["workload", "grid best", "grid evals", "adaptive", "evals", "adaptive cfg"],
+            &rows
+        )
+    );
+    Ok(())
+}

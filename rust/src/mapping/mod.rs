@@ -1,0 +1,256 @@
+//! GEMINI/SET-style spatial-temporal mapping: which chiplets run each
+//! layer and how the layer is partitioned across them.
+//!
+//! GEMINI's mapper (built on SET) explores layer-pipeline segmentations
+//! and spatial partitions; we reproduce the decision space that matters
+//! to the cost model — per-layer chiplet regions and partition
+//! strategies — and search it with simulated annealing against the full
+//! analytical cost (the same cost used for the paper's experiments, so
+//! wired and wireless runs share one "optimally mapped" baseline).
+
+pub mod mapper;
+
+use crate::arch::Package;
+use crate::workloads::Workload;
+use anyhow::{bail, Result};
+
+/// How a layer is split across its assigned chiplets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Output channels sharded; every chiplet needs the FULL input
+    /// activation (input is multicast to the region) but only its weight
+    /// shard.
+    OutputChannel,
+    /// Spatial tiling; every chiplet needs the FULL weights (weights are
+    /// multicast from DRAM) but only its activation tile.
+    Spatial,
+    /// Input channels sharded; weights and inputs sharded, but partial
+    /// sums must be reduced across the region afterwards.
+    InputChannel,
+}
+
+pub const PARTITIONS: [Partition; 3] = [
+    Partition::OutputChannel,
+    Partition::Spatial,
+    Partition::InputChannel,
+];
+
+/// Placement of one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerPlacement {
+    /// Compute chiplet ids (row-major) running this layer.
+    pub chiplets: Vec<usize>,
+    pub partition: Partition,
+}
+
+impl LayerPlacement {
+    pub fn n(&self) -> usize {
+        self.chiplets.len()
+    }
+}
+
+/// A full mapping of a workload onto a package.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    pub placements: Vec<LayerPlacement>,
+}
+
+impl Mapping {
+    pub fn validate(&self, wl: &Workload, pkg: &Package) -> Result<()> {
+        if self.placements.len() != wl.layers.len() {
+            bail!(
+                "mapping has {} placements for {} layers",
+                self.placements.len(),
+                wl.layers.len()
+            );
+        }
+        for (i, p) in self.placements.iter().enumerate() {
+            if p.chiplets.is_empty() {
+                bail!("layer {i} has no chiplets");
+            }
+            for &c in &p.chiplets {
+                if c >= pkg.num_chiplets() {
+                    bail!("layer {i} uses chiplet {c} out of range");
+                }
+            }
+            let mut sorted = p.chiplets.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            if sorted.len() != p.chiplets.len() {
+                bail!("layer {i} has duplicate chiplets");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compact contiguous region of `n` chiplets starting at grid offset
+/// `(r0, c0)`, filling row-major within a bounding box as square as
+/// possible. Compactness keeps NoP hop counts representative of real
+/// placements.
+pub fn compact_region(pkg: &Package, n: usize, r0: usize, c0: usize) -> Vec<usize> {
+    let (rows, cols) = pkg.cfg.grid;
+    let n = n.clamp(1, rows * cols);
+    // Choose box dims: the most square factor pair covering n.
+    let mut best = (1usize, n);
+    let mut best_score = usize::MAX;
+    for h in 1..=rows {
+        let w = n.div_ceil(h);
+        if w <= cols {
+            let score = (h * w - n) * 10 + h.abs_diff(w);
+            if score < best_score {
+                best_score = score;
+                best = (h, w);
+            }
+        }
+    }
+    let (h, w) = best;
+    let r0 = r0.min(rows - h);
+    let c0 = c0.min(cols - w);
+    let mut out = Vec::with_capacity(n);
+    'fill: for r in r0..r0 + h {
+        for c in c0..c0 + w {
+            out.push(r * cols + c);
+            if out.len() == n {
+                break 'fill;
+            }
+        }
+    }
+    out
+}
+
+/// Heuristic default partition for a layer: weight-heavy layers shard
+/// weights (OutputChannel); activation-heavy layers tile spatially.
+pub fn default_partition(weight_datums: u64, out_datums: u64) -> Partition {
+    if weight_datums > out_datums {
+        Partition::OutputChannel
+    } else {
+        Partition::Spatial
+    }
+}
+
+/// Layer-sequential baseline (SIMBA-style): every layer uses the whole
+/// package with the heuristic partition.
+pub fn layer_sequential(wl: &Workload, pkg: &Package) -> Mapping {
+    let all: Vec<usize> = (0..pkg.num_chiplets()).collect();
+    let placements = wl
+        .layers
+        .iter()
+        .map(|l| LayerPlacement {
+            chiplets: all.clone(),
+            partition: default_partition(l.weight_datums, l.out_datums),
+        })
+        .collect();
+    Mapping { placements }
+}
+
+/// Greedy sized mapping: each layer gets a chiplet count proportional to
+/// its MAC share (at least 1), in a compact region anchored to balance
+/// load across the grid. This is the SA search's starting point.
+pub fn greedy_sized(wl: &Workload, pkg: &Package) -> Mapping {
+    let total = pkg.num_chiplets();
+    let max_macs = wl.layers.iter().map(|l| l.macs).max().unwrap_or(1).max(1);
+    let mut anchor = 0usize;
+    let (rows, cols) = pkg.cfg.grid;
+    let placements = wl
+        .layers
+        .iter()
+        .map(|l| {
+            let frac = l.macs as f64 / max_macs as f64;
+            let n = ((frac * total as f64).ceil() as usize).clamp(1, total);
+            let r0 = (anchor / cols) % rows;
+            let c0 = anchor % cols;
+            anchor = (anchor + n) % total;
+            LayerPlacement {
+                chiplets: compact_region(pkg, n, r0, c0),
+                partition: default_partition(l.weight_datums, l.out_datums),
+            }
+        })
+        .collect();
+    Mapping { placements }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::workloads::build;
+
+    fn pkg() -> Package {
+        Package::new(ArchConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn compact_regions_are_compact_and_sized() {
+        let p = pkg();
+        for n in 1..=9 {
+            let region = compact_region(&p, n, 0, 0);
+            assert_eq!(region.len(), n, "n={n}");
+            let mut sorted = region.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), n);
+        }
+        // 4 chiplets from origin: 2x2 block = ids 0,1,3,4.
+        assert_eq!(compact_region(&p, 4, 0, 0), vec![0, 1, 3, 4]);
+        // 9 = whole grid.
+        assert_eq!(compact_region(&p, 9, 0, 0), (0..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn region_offset_clamps() {
+        let p = pkg();
+        let r = compact_region(&p, 4, 2, 2); // would overflow; clamped
+        assert_eq!(r.len(), 4);
+        assert!(r.iter().all(|&c| c < 9));
+    }
+
+    #[test]
+    fn layer_sequential_uses_all_chiplets() {
+        let p = pkg();
+        let wl = build("zfnet").unwrap();
+        let m = layer_sequential(&wl, &p);
+        m.validate(&wl, &p).unwrap();
+        assert!(m.placements.iter().all(|pl| pl.n() == 9));
+    }
+
+    #[test]
+    fn greedy_sizes_by_macs() {
+        let p = pkg();
+        let wl = build("vgg").unwrap();
+        let m = greedy_sized(&wl, &p);
+        m.validate(&wl, &p).unwrap();
+        // The biggest conv should get more chiplets than the tiny fc8.
+        let biggest = wl
+            .layers
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, l)| l.macs)
+            .unwrap()
+            .0;
+        let last = wl.layers.len() - 1;
+        assert!(m.placements[biggest].n() >= m.placements[last].n());
+    }
+
+    #[test]
+    fn default_partition_heuristic() {
+        assert_eq!(default_partition(100, 10), Partition::OutputChannel);
+        assert_eq!(default_partition(10, 100), Partition::Spatial);
+    }
+
+    #[test]
+    fn validate_catches_bad_mappings() {
+        let p = pkg();
+        let wl = build("zfnet").unwrap();
+        let mut m = layer_sequential(&wl, &p);
+        m.placements[0].chiplets = vec![];
+        assert!(m.validate(&wl, &p).is_err());
+        let mut m2 = layer_sequential(&wl, &p);
+        m2.placements[0].chiplets = vec![0, 0];
+        assert!(m2.validate(&wl, &p).is_err());
+        let mut m3 = layer_sequential(&wl, &p);
+        m3.placements[0].chiplets = vec![42];
+        assert!(m3.validate(&wl, &p).is_err());
+        let m4 = Mapping { placements: vec![] };
+        assert!(m4.validate(&wl, &p).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Intra-chiplet Network-on-Chip model (XY mesh over the PE array).
+//!
+//! GEMINI aggregates NoC time per layer as total volume.hops divided by
+//! the mesh's aggregate bandwidth; we follow that (no router contention,
+//! per paper §III-C). What this module contributes on top is the hop
+//! expectation math for the traffic patterns the mapper produces and the
+//! central-router detour for wireless messages (§III-B1: wireless
+//! messages route through the NoC to the central router first).
+
+use crate::config::ArchConfig;
+
+/// NoC geometry of one chiplet.
+#[derive(Debug, Clone)]
+pub struct NocModel {
+    pub rows: usize,
+    pub cols: usize,
+    pub link_bw_bits: f64,
+}
+
+impl NocModel {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self {
+            rows: cfg.pe_grid.0,
+            cols: cfg.pe_grid.1,
+            link_bw_bits: cfg.noc_link_bw_bits,
+        }
+    }
+
+    pub fn num_pes(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Directed mesh links.
+    pub fn num_links(&self) -> usize {
+        2 * (self.rows * (self.cols - 1) + self.cols * (self.rows - 1))
+    }
+
+    /// Aggregate directed bandwidth (bits/s).
+    pub fn aggregate_bw(&self) -> f64 {
+        self.num_links() as f64 * self.link_bw_bits
+    }
+
+    /// Mean XY hop count between two uniformly random PEs:
+    /// E|dx| + E|dy| where E|d| = (n^2 - 1) / (3n) for n columns.
+    pub fn mean_unicast_hops(&self) -> f64 {
+        let e = |n: usize| {
+            let n = n as f64;
+            (n * n - 1.0) / (3.0 * n)
+        };
+        e(self.rows) + e(self.cols)
+    }
+
+    /// Hops from the edge injection port (memory/NoP interface, placed
+    /// at the mesh boundary centre) to a uniformly random PE.
+    pub fn mean_edge_to_pe_hops(&self) -> f64 {
+        // Row distance from edge row: mean of 0..rows-1; column distance
+        // from centre column: mean |c - cols/2|.
+        let row = (self.rows as f64 - 1.0) / 2.0;
+        let centre = (self.cols as f64 - 1.0) / 2.0;
+        let col = (0..self.cols)
+            .map(|c| (c as f64 - centre).abs())
+            .sum::<f64>()
+            / self.cols as f64;
+        row + col
+    }
+
+    /// Hops from the mesh centre (the wireless interface router per the
+    /// paper's antenna placement) to a uniformly random PE.
+    pub fn mean_centre_to_pe_hops(&self) -> f64 {
+        let mid_r = (self.rows as f64 - 1.0) / 2.0;
+        let mid_c = (self.cols as f64 - 1.0) / 2.0;
+        let mut sum = 0.0;
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                sum += (r as f64 - mid_r).abs() + (c as f64 - mid_c).abs();
+            }
+        }
+        sum / self.num_pes() as f64
+    }
+
+    /// Multicast from one source PE to `n` destination PEs: an XY tree
+    /// traverses at most (unique rows) + (spanning columns); we use the
+    /// standard estimate of mesh diameter scaled by coverage.
+    pub fn multicast_tree_hops(&self, n_dests: usize) -> f64 {
+        if n_dests == 0 {
+            return 0.0;
+        }
+        let cover = (n_dests as f64 / self.num_pes() as f64).min(1.0);
+        let full_tree = (self.rows * self.cols - 1) as f64; // spanning tree
+        let single = self.mean_unicast_hops();
+        // Interpolate between a unicast path and the full spanning tree.
+        single + (full_tree - single) * cover
+    }
+
+    /// Aggregated NoC time for a layer that moves `vol_bits` with mean
+    /// `hops` per bit (GEMINI-style).
+    pub fn time(&self, vol_bits: f64, hops: f64) -> f64 {
+        vol_bits * hops / self.aggregate_bw()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+
+    fn noc() -> NocModel {
+        NocModel::new(&ArchConfig::default())
+    }
+
+    #[test]
+    fn geometry() {
+        let m = noc();
+        assert_eq!(m.num_pes(), 256);
+        assert_eq!(m.num_links(), 960);
+        assert_eq!(m.aggregate_bw(), 960.0 * 64.0e9);
+    }
+
+    #[test]
+    fn mean_hops_sane() {
+        let m = noc();
+        // 16x16 mesh: E|d| per axis = (256-1)/48 ~= 5.3125; two axes.
+        assert!((m.mean_unicast_hops() - 2.0 * 255.0 / 48.0).abs() < 1e-9);
+        assert!(m.mean_centre_to_pe_hops() > 0.0);
+        assert!(m.mean_centre_to_pe_hops() < m.mean_unicast_hops() * 2.0);
+        assert!(m.mean_edge_to_pe_hops() > m.mean_centre_to_pe_hops());
+    }
+
+    #[test]
+    fn multicast_tree_monotone_in_dests() {
+        let m = noc();
+        let mut prev = 0.0;
+        for n in [1usize, 4, 16, 64, 256] {
+            let h = m.multicast_tree_hops(n);
+            assert!(h >= prev, "n={n}: {h} < {prev}");
+            prev = h;
+        }
+        // Full coverage approaches the spanning tree.
+        assert!((m.multicast_tree_hops(256) - 255.0).abs() < 1.0);
+        assert_eq!(m.multicast_tree_hops(0), 0.0);
+    }
+
+    #[test]
+    fn time_scales_linearly() {
+        let m = noc();
+        let t1 = m.time(1e9, 4.0);
+        let t2 = m.time(2e9, 4.0);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_mesh() {
+        let mut cfg = ArchConfig::default();
+        cfg.pe_grid = (2, 2);
+        let m = NocModel::new(&cfg);
+        assert_eq!(m.num_links(), 8);
+        assert!(m.mean_unicast_hops() > 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Package-level Network-on-Package model: XY routing, multicast trees,
+//! and the volume.hops accounting the cost model consumes.
+//!
+//! The key outputs per traffic flow are (a) its wired volume.hops — the
+//! quantity GEMINI divides by aggregate bandwidth — and (b) its max
+//! source->destination hop distance, which is what the wireless decision
+//! function thresholds on (paper §III-B2).
+
+use crate::arch::{NodeId, Package, Pos};
+use anyhow::Result;
+use std::collections::BTreeSet;
+
+/// A package-level traffic flow emitted by the traffic characterizer:
+/// one logical transfer of `vol_bits` from `src` to `dests`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Flow {
+    pub src: NodeId,
+    pub dests: Vec<NodeId>,
+    pub vol_bits: f64,
+    /// True when this is a collective (same data to all destinations);
+    /// false when `dests` receive distinct shards (unicast fan-out).
+    pub multicast: bool,
+}
+
+impl Flow {
+    pub fn unicast(src: NodeId, dst: NodeId, vol_bits: f64) -> Self {
+        Self {
+            src,
+            dests: vec![dst],
+            vol_bits,
+            multicast: false,
+        }
+    }
+
+    pub fn multicast(src: NodeId, dests: Vec<NodeId>, vol_bits: f64) -> Self {
+        Self {
+            src,
+            dests,
+            vol_bits,
+            multicast: true,
+        }
+    }
+
+    /// Does this flow leave its source chiplet? (criterion-1 component)
+    pub fn crosses_chip(&self) -> bool {
+        self.dests.iter().any(|d| *d != self.src)
+    }
+
+    /// Is it a cross-chip multicast (the paper's criterion 1)?
+    pub fn is_cross_chip_multicast(&self) -> bool {
+        self.multicast && self.dests.len() > 1 && self.crosses_chip()
+    }
+}
+
+/// Wired-path metrics for one flow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WiredPath {
+    /// Total volume.hops across the (tree of) links, in bit.hops.
+    pub vol_hops: f64,
+    /// Max source->destination XY hop distance.
+    pub max_hops: u32,
+}
+
+/// XY route: the ordered set of links from `a` to `b` (column-first then
+/// row, matching common D2D XY routers). Links are identified by the
+/// (from,to) grid positions they connect.
+pub fn xy_route(a: Pos, b: Pos) -> Vec<(Pos, Pos)> {
+    let mut links = Vec::new();
+    let mut cur = a;
+    while cur.col != b.col {
+        let step = if b.col > cur.col { 1 } else { -1 };
+        let next = Pos {
+            row: cur.row,
+            col: cur.col + step,
+        };
+        links.push((cur, next));
+        cur = next;
+    }
+    while cur.row != b.row {
+        let step = if b.row > cur.row { 1 } else { -1 };
+        let next = Pos {
+            row: cur.row + step,
+            col: cur.col,
+        };
+        links.push((cur, next));
+        cur = next;
+    }
+    links
+}
+
+/// NoP-level evaluator bound to a package.
+#[derive(Debug, Clone)]
+pub struct NopModel {
+    pkg: Package,
+}
+
+impl NopModel {
+    pub fn new(pkg: Package) -> Self {
+        Self { pkg }
+    }
+
+    pub fn package(&self) -> &Package {
+        &self.pkg
+    }
+
+    /// Wired metrics for a flow.
+    ///
+    /// Unicast fan-out: each destination gets its own shard, so
+    /// vol_hops = sum(shard * hops) with shard = vol / n_dests.
+    /// Multicast: an XY multicast tree (union of XY paths) carries the
+    /// full volume once per unique link.
+    pub fn wired_path(&self, flow: &Flow) -> Result<WiredPath> {
+        if flow.dests.is_empty() || flow.vol_bits <= 0.0 {
+            return Ok(WiredPath {
+                vol_hops: 0.0,
+                max_hops: 0,
+            });
+        }
+        let src = self.pkg.pos(flow.src)?;
+        let mut max_hops = 0u32;
+        let vol_hops = if flow.multicast && flow.dests.len() > 1 {
+            let mut tree: BTreeSet<(i64, i64, i64, i64)> = BTreeSet::new();
+            for d in &flow.dests {
+                let dp = self.pkg.pos(*d)?;
+                max_hops = max_hops.max(src.manhattan(&dp));
+                for (f, t) in xy_route(src, dp) {
+                    tree.insert((f.row, f.col, t.row, t.col));
+                }
+            }
+            tree.len() as f64 * flow.vol_bits
+        } else {
+            let shard = flow.vol_bits / flow.dests.len() as f64;
+            let mut acc = 0.0;
+            for d in &flow.dests {
+                let dp = self.pkg.pos(*d)?;
+                let hops = src.manhattan(&dp);
+                max_hops = max_hops.max(hops);
+                acc += shard * hops as f64;
+            }
+            acc
+        };
+        Ok(WiredPath { vol_hops, max_hops })
+    }
+
+    /// Aggregated wired NoP time for a set of flows (GEMINI semantics).
+    pub fn time(&self, flows: &[Flow]) -> Result<f64> {
+        let mut vh = 0.0;
+        for f in flows {
+            vh += self.wired_path(f)?.vol_hops;
+        }
+        Ok(vh / self.pkg.nop_aggregate_bw())
+    }
+
+    /// Bisection load analysis: volume crossing the vertical mid-line —
+    /// the congested cut the paper attributes multicast slowdowns to.
+    pub fn bisection_load(&self, flows: &[Flow]) -> Result<f64> {
+        let cols = self.pkg.cfg.grid.1 as i64;
+        let cut = (cols + 1) as f64 / 2.0;
+        let mut load = 0.0;
+        for f in flows {
+            let src = self.pkg.pos(f.src)?;
+            for d in &f.dests {
+                let dp = self.pkg.pos(*d)?;
+                let crosses =
+                    (src.col as f64 - cut).signum() != (dp.col as f64 - cut).signum();
+                if crosses {
+                    load += if f.multicast {
+                        f.vol_bits
+                    } else {
+                        f.vol_bits / f.dests.len() as f64
+                    };
+                    if f.multicast {
+                        break; // a tree crosses the cut once
+                    }
+                }
+            }
+        }
+        Ok(load)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Package;
+    use crate::config::ArchConfig;
+
+    fn model() -> NopModel {
+        NopModel::new(Package::new(ArchConfig::default()).unwrap())
+    }
+
+    #[test]
+    fn xy_route_lengths() {
+        let a = Pos { row: 1, col: 1 };
+        let b = Pos { row: 3, col: 3 };
+        let r = xy_route(a, b);
+        assert_eq!(r.len(), 4);
+        assert_eq!(xy_route(a, a).len(), 0);
+    }
+
+    #[test]
+    fn unicast_path_metrics() {
+        let m = model();
+        let f = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(8), 100.0);
+        let p = m.wired_path(&f).unwrap();
+        assert_eq!(p.max_hops, 4);
+        assert!((p.vol_hops - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unicast_fanout_shards() {
+        let m = model();
+        // Non-multicast fan-out: distinct shards to 2 dests at hops 1, 2.
+        let f = Flow {
+            src: NodeId::Chiplet(0),
+            dests: vec![NodeId::Chiplet(1), NodeId::Chiplet(2)],
+            vol_bits: 100.0,
+            multicast: false,
+        };
+        let p = m.wired_path(&f).unwrap();
+        assert!((p.vol_hops - (50.0 * 1.0 + 50.0 * 2.0)).abs() < 1e-9);
+        assert_eq!(p.max_hops, 2);
+    }
+
+    #[test]
+    fn multicast_tree_shares_links() {
+        let m = model();
+        // Multicast from corner to both (row-major ids): 0 -> 1, 2.
+        // XY col-first from (1,1): to (1,2) = 1 link; to (1,3) = 2 links
+        // sharing the first. Tree = 2 unique links.
+        let f = Flow::multicast(
+            NodeId::Chiplet(0),
+            vec![NodeId::Chiplet(1), NodeId::Chiplet(2)],
+            100.0,
+        );
+        let p = m.wired_path(&f).unwrap();
+        assert!((p.vol_hops - 200.0).abs() < 1e-9);
+        assert_eq!(p.max_hops, 2);
+        // The same flow as unicast fan-out would be 150 vol.hops but
+        // sends each dest only half the data. Multicast of the full
+        // payload to each dest separately would be 300: the tree wins.
+    }
+
+    #[test]
+    fn multicast_to_all_uses_fewer_hops_than_unicasts() {
+        let m = model();
+        let all: Vec<NodeId> = (1..9).map(NodeId::Chiplet).collect();
+        let mc = Flow::multicast(NodeId::Chiplet(0), all.clone(), 100.0);
+        let tree = m.wired_path(&mc).unwrap().vol_hops;
+        let mut individual = 0.0;
+        for d in &all {
+            individual += m
+                .wired_path(&Flow::unicast(NodeId::Chiplet(0), *d, 100.0))
+                .unwrap()
+                .vol_hops;
+        }
+        assert!(tree < individual, "tree {tree} vs unicasts {individual}");
+    }
+
+    #[test]
+    fn criterion1_classification() {
+        let local = Flow::multicast(NodeId::Chiplet(0), vec![NodeId::Chiplet(0)], 10.0);
+        assert!(!local.is_cross_chip_multicast());
+        let cross = Flow::multicast(
+            NodeId::Chiplet(0),
+            vec![NodeId::Chiplet(0), NodeId::Chiplet(5)],
+            10.0,
+        );
+        assert!(cross.is_cross_chip_multicast());
+        let uni = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(5), 10.0);
+        assert!(!uni.is_cross_chip_multicast());
+        assert!(uni.crosses_chip());
+    }
+
+    #[test]
+    fn dram_flows_route() {
+        let m = model();
+        let f = Flow::multicast(
+            NodeId::Dram(0),
+            (0..9).map(NodeId::Chiplet).collect(),
+            1000.0,
+        );
+        let p = m.wired_path(&f).unwrap();
+        assert!(p.vol_hops > 0.0);
+        assert!(p.max_hops >= 3);
+    }
+
+    #[test]
+    fn empty_flow_is_free() {
+        let m = model();
+        let f = Flow {
+            src: NodeId::Chiplet(0),
+            dests: vec![],
+            vol_bits: 100.0,
+            multicast: true,
+        };
+        let p = m.wired_path(&f).unwrap();
+        assert_eq!(p.vol_hops, 0.0);
+        assert_eq!(p.max_hops, 0);
+    }
+
+    #[test]
+    fn bisection_counts_crossing_flows() {
+        let m = model();
+        let crossing = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(2), 100.0);
+        let local = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(3), 100.0);
+        assert_eq!(m.bisection_load(&[crossing]).unwrap(), 100.0);
+        assert_eq!(m.bisection_load(&[local]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn aggregated_time_positive() {
+        let m = model();
+        let flows = vec![Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(8), 1e9)];
+        let t = m.time(&flows).unwrap();
+        assert!(t > 0.0);
+        // 4e9 bit.hops / (32 links * 32 Gb/s) = 4e9/1.024e12
+        assert!((t - 4e9 / m.package().nop_aggregate_bw()).abs() < 1e-15);
+    }
+}

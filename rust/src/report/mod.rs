@@ -1,0 +1,216 @@
+//! Report emitters: aligned ASCII tables, horizontal bar charts, signed
+//! heatmaps, and CSV files — the formats the paper-figure benches print
+//! and save under `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Render an aligned table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let mut line = String::new();
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(line, "{:<w$}  ", h, w = widths[i]);
+    }
+    out.push_str(line.trim_end());
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        let mut line = String::new();
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            let _ = write!(line, "{:<w$}  ", cell, w = widths[i]);
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+    }
+    out
+}
+
+/// Horizontal bar chart (used for Fig. 2 shares and Fig. 4 speedups).
+/// `scale_max` fixes the full-width value; bars are 40 chars wide.
+pub fn bar_chart(rows: &[(String, f64)], scale_max: f64, unit: &str) -> String {
+    const WIDTH: usize = 40;
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let max = if scale_max > 0.0 {
+        scale_max
+    } else {
+        rows.iter().map(|(_, v)| *v).fold(0.0, f64::max).max(1e-30)
+    };
+    let mut out = String::new();
+    for (label, value) in rows {
+        let filled = ((value / max).clamp(0.0, 1.0) * WIDTH as f64).round() as usize;
+        let _ = writeln!(
+            out,
+            "{label:<label_w$} |{}{}| {value:.3}{unit}",
+            "#".repeat(filled),
+            " ".repeat(WIDTH - filled),
+        );
+    }
+    out
+}
+
+/// Stacked-share chart for Fig. 2: one row per workload, segments per
+/// component (letters c/d/n/P/w), 50 cells wide.
+pub fn stacked_shares(rows: &[(String, [f64; 5])]) -> String {
+    const WIDTH: usize = 50;
+    const GLYPH: [char; 5] = ['c', 'd', 'n', 'P', 'w'];
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<label_w$}  [c]ompute [d]ram [n]oc [P=nop] [w]ireless",
+        "workload"
+    );
+    for (label, shares) in rows {
+        let mut bar = String::new();
+        let mut acc = 0.0;
+        let mut drawn = 0usize;
+        for (k, &s) in shares.iter().enumerate() {
+            acc += s;
+            let upto = (acc * WIDTH as f64).round() as usize;
+            for _ in drawn..upto.min(WIDTH) {
+                bar.push(GLYPH[k]);
+            }
+            drawn = drawn.max(upto.min(WIDTH));
+        }
+        while bar.len() < WIDTH {
+            bar.push(' ');
+        }
+        let _ = writeln!(out, "{label:<label_w$}  |{bar}|");
+    }
+    out
+}
+
+/// Signed heatmap for Fig. 5: values are speedups; cells show the gain
+/// (%) with heat glyphs (' ' cold .. '#' hot, '-' for degradation).
+pub fn heatmap(
+    row_labels: &[String],
+    col_labels: &[String],
+    values: &[Vec<f64>],
+) -> String {
+    let mut out = String::new();
+    let label_w = row_labels.iter().map(|l| l.len()).max().unwrap_or(4).max(6);
+    // Column header.
+    let _ = write!(out, "{:<label_w$}  ", "thr\\pinj");
+    for c in col_labels {
+        let _ = write!(out, "{c:>6} ");
+    }
+    out.push('\n');
+    let max_gain = values
+        .iter()
+        .flatten()
+        .map(|v| v - 1.0)
+        .fold(0.0f64, f64::max)
+        .max(1e-9);
+    for (r, row) in values.iter().enumerate() {
+        let _ = write!(out, "{:<label_w$}  ", row_labels[r]);
+        for v in row {
+            let gain = v - 1.0;
+            let cell = if gain < -1e-9 {
+                format!("{:>5.1}-", gain * 100.0)
+            } else {
+                let heat = (gain / max_gain * 4.0).round() as usize;
+                let glyph = [' ', '.', ':', '*', '#'][heat.min(4)];
+                format!("{:>5.1}{glyph}", gain * 100.0)
+            };
+            let _ = write!(out, "{cell} ");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows as CSV (no quoting needed for our numeric/label data).
+pub fn write_csv(
+    path: &Path,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Default results directory.
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("WISPER_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer".into(), "2.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+        assert!(lines[3].starts_with("longer"));
+    }
+
+    #[test]
+    fn bars_scale() {
+        let s = bar_chart(&[("x".into(), 1.0), ("y".into(), 0.5)], 1.0, "x");
+        let lines: Vec<&str> = s.lines().collect();
+        let hashes = |l: &str| l.chars().filter(|&c| c == '#').count();
+        assert_eq!(hashes(lines[0]), 40);
+        assert_eq!(hashes(lines[1]), 20);
+    }
+
+    #[test]
+    fn stacked_fills_width() {
+        let s = stacked_shares(&[("w".into(), [0.2, 0.2, 0.2, 0.2, 0.2])]);
+        let row = s.lines().nth(1).unwrap();
+        assert!(row.contains('c') && row.contains('d') && row.contains('w'));
+    }
+
+    #[test]
+    fn heatmap_marks_degradation() {
+        let hm = heatmap(
+            &["1".into()],
+            &["10".into(), "80".into()],
+            &[vec![1.10, 0.90]],
+        );
+        assert!(hm.contains('-'), "{hm}");
+        assert!(hm.contains("10.0"), "{hm}");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("wisper_test_csv");
+        let path = dir.join("out.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

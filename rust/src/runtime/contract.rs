@@ -1,0 +1,123 @@
+//! The AOT artifact ABI — mirrors python/compile/constants.py exactly.
+//! `aot.py` writes a `.meta` sidecar; `Runtime::load` checks it against
+//! these constants so a stale artifact fails loudly at load time.
+
+/// Maximum layers the artifact accepts (zero-padded). GNMT unrolls to
+/// 369 layers, the deepest of the 15 paper workloads.
+pub const MAX_LAYERS: usize = 512;
+/// Hop-distance buckets.
+pub const HOP_BUCKETS: usize = 8;
+/// Configurations per artifact call.
+pub const NUM_CONFIGS: usize = 64;
+/// Bottleneck components.
+pub const NUM_COMPONENTS: usize = 5;
+
+pub const COMPONENT_NAMES: [&str; NUM_COMPONENTS] =
+    ["compute", "dram", "noc", "nop", "wireless"];
+
+/// Flat input bundle in artifact parameter order.
+#[derive(Debug, Clone)]
+pub struct CostModelInput {
+    pub t_comp: Vec<f32>,   // [L]
+    pub t_dram: Vec<f32>,   // [L]
+    pub t_noc: Vec<f32>,    // [L]
+    pub nop_vh: Vec<f32>,   // [L]
+    pub elig_vh: Vec<f32>,  // [L*H] row-major
+    pub elig_v: Vec<f32>,   // [L*H]
+    pub thresh: Vec<f32>,   // [C]
+    pub pinj: Vec<f32>,     // [C]
+    pub wl_bw: Vec<f32>,    // [C]
+    pub nop_bw: f32,
+}
+
+impl CostModelInput {
+    pub fn zeroed() -> Self {
+        Self {
+            t_comp: vec![0.0; MAX_LAYERS],
+            t_dram: vec![0.0; MAX_LAYERS],
+            t_noc: vec![0.0; MAX_LAYERS],
+            nop_vh: vec![0.0; MAX_LAYERS],
+            elig_vh: vec![0.0; MAX_LAYERS * HOP_BUCKETS],
+            elig_v: vec![0.0; MAX_LAYERS * HOP_BUCKETS],
+            thresh: vec![f32::INFINITY; NUM_CONFIGS],
+            pinj: vec![0.0; NUM_CONFIGS],
+            wl_bw: vec![0.0; NUM_CONFIGS],
+            nop_bw: 1.0,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.t_comp.len() == MAX_LAYERS, "t_comp len");
+        anyhow::ensure!(self.t_dram.len() == MAX_LAYERS, "t_dram len");
+        anyhow::ensure!(self.t_noc.len() == MAX_LAYERS, "t_noc len");
+        anyhow::ensure!(self.nop_vh.len() == MAX_LAYERS, "nop_vh len");
+        anyhow::ensure!(
+            self.elig_vh.len() == MAX_LAYERS * HOP_BUCKETS,
+            "elig_vh len"
+        );
+        anyhow::ensure!(self.elig_v.len() == MAX_LAYERS * HOP_BUCKETS, "elig_v len");
+        anyhow::ensure!(self.thresh.len() == NUM_CONFIGS, "thresh len");
+        anyhow::ensure!(self.pinj.len() == NUM_CONFIGS, "pinj len");
+        anyhow::ensure!(self.wl_bw.len() == NUM_CONFIGS, "wl_bw len");
+        anyhow::ensure!(self.nop_bw > 0.0, "nop_bw must be positive");
+        Ok(())
+    }
+}
+
+/// Outputs in artifact order.
+#[derive(Debug, Clone)]
+pub struct CostModelOutput {
+    pub total: Vec<f32>,   // [C]
+    pub shares: Vec<f32>,  // [C*K] row-major
+    pub wl_vol: Vec<f32>,  // [C]
+    pub speedup: Vec<f32>, // [C]
+    pub t_wired: f32,
+}
+
+impl CostModelOutput {
+    pub fn share(&self, config: usize, component: usize) -> f32 {
+        self.shares[config * NUM_COMPONENTS + component]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_sim_constants() {
+        assert_eq!(HOP_BUCKETS, crate::sim::cost::HOP_BUCKETS);
+        assert_eq!(NUM_COMPONENTS, crate::sim::COMPONENTS.len());
+        for (a, b) in COMPONENT_NAMES.iter().zip(crate::sim::COMPONENTS) {
+            assert_eq!(*a, b);
+        }
+    }
+
+    #[test]
+    fn zeroed_validates() {
+        CostModelInput::zeroed().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_lengths_rejected() {
+        let mut i = CostModelInput::zeroed();
+        i.t_comp.pop();
+        assert!(i.validate().is_err());
+        let mut j = CostModelInput::zeroed();
+        j.nop_bw = 0.0;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn share_indexing() {
+        let out = CostModelOutput {
+            total: vec![0.0; NUM_CONFIGS],
+            shares: (0..NUM_CONFIGS * NUM_COMPONENTS).map(|i| i as f32).collect(),
+            wl_vol: vec![0.0; NUM_CONFIGS],
+            speedup: vec![0.0; NUM_CONFIGS],
+            t_wired: 0.0,
+        };
+        assert_eq!(out.share(0, 0), 0.0);
+        assert_eq!(out.share(1, 2), (NUM_COMPONENTS + 2) as f32);
+    }
+}

@@ -1,0 +1,299 @@
+//! PJRT runtime: load the AOT-compiled cost-model artifact (HLO text
+//! produced by python/compile/aot.py) and execute it from the Rust hot
+//! path. Python never runs at simulation time.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO *text* (not serialized
+//! proto — jax >= 0.5 emits 64-bit ids that xla_extension 0.5.1
+//! rejects), `HloModuleProto::from_text_file` -> `XlaComputation` ->
+//! `PjRtClient::compile` -> `execute`.
+
+pub mod contract;
+pub mod native;
+
+use crate::sim::cost::CostTensors;
+use anyhow::{bail, Context, Result};
+use contract::{
+    CostModelInput, CostModelOutput, HOP_BUCKETS, MAX_LAYERS, NUM_COMPONENTS, NUM_CONFIGS,
+};
+use std::path::{Path, PathBuf};
+
+/// Which evaluator backs a `Runtime`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifact on the PJRT CPU client.
+    Pjrt,
+    /// Pure-Rust twin (artifacts not built / not wanted).
+    Native,
+}
+
+/// Cost-model evaluator. Construction compiles the artifact once; every
+/// `evaluate` call is then a single PJRT execution over the full config
+/// grid.
+pub struct Runtime {
+    backend: Backend,
+    exe: Option<xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub calls: std::cell::Cell<u64>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("backend", &self.backend)
+            .field("calls", &self.calls.get())
+            .finish()
+    }
+}
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/model.hlo.txt";
+
+/// Locate the artifact: explicit path, `WISPER_ARTIFACT` env var, or the
+/// default repo-relative path (also tried against CARGO_MANIFEST_DIR so
+/// `cargo test` works from any cwd).
+pub fn find_artifact(explicit: Option<&str>) -> Option<PathBuf> {
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Some(p) = explicit {
+        candidates.push(PathBuf::from(p));
+    }
+    if let Ok(p) = std::env::var("WISPER_ARTIFACT") {
+        candidates.push(PathBuf::from(p));
+    }
+    candidates.push(PathBuf::from(DEFAULT_ARTIFACT));
+    candidates.push(
+        Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT),
+    );
+    candidates.into_iter().find(|p| p.exists())
+}
+
+fn check_meta(path: &Path) -> Result<()> {
+    let meta_path = path.with_extension("txt.meta");
+    let Ok(text) = std::fs::read_to_string(&meta_path) else {
+        return Ok(()); // no sidecar: trust the artifact
+    };
+    for line in text.lines() {
+        let Some((k, v)) = line.split_once('=') else {
+            continue;
+        };
+        let expect = match k {
+            "max_layers" => Some(MAX_LAYERS),
+            "hop_buckets" => Some(HOP_BUCKETS),
+            "num_configs" => Some(NUM_CONFIGS),
+            "num_components" => Some(NUM_COMPONENTS),
+            _ => None,
+        };
+        if let Some(e) = expect {
+            let got: usize = v.trim().parse().unwrap_or(0);
+            if got != e {
+                bail!(
+                    "artifact meta mismatch for {k}: artifact={got}, runtime={e} \
+                     (rebuild with `make artifacts`)"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+impl Runtime {
+    /// Load and compile the PJRT artifact.
+    pub fn load(path: &Path) -> Result<Self> {
+        check_meta(path)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .context("compiling cost-model artifact")?;
+        Ok(Self {
+            backend: Backend::Pjrt,
+            exe: Some(exe),
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Pure-Rust evaluator (no artifact needed).
+    pub fn native() -> Self {
+        Self {
+            backend: Backend::Native,
+            exe: None,
+            calls: std::cell::Cell::new(0),
+        }
+    }
+
+    /// Load the artifact if present, otherwise fall back to native.
+    pub fn auto(explicit: Option<&str>) -> Result<Self> {
+        match find_artifact(explicit) {
+            Some(p) => Runtime::load(&p),
+            None => Ok(Runtime::native()),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Evaluate the cost model over the full config grid.
+    pub fn evaluate(&self, input: &CostModelInput) -> Result<CostModelOutput> {
+        input.validate()?;
+        self.calls.set(self.calls.get() + 1);
+        match self.backend {
+            Backend::Native => Ok(native::evaluate(input)),
+            Backend::Pjrt => self.evaluate_pjrt(input),
+        }
+    }
+
+    fn evaluate_pjrt(&self, input: &CostModelInput) -> Result<CostModelOutput> {
+        let exe = self.exe.as_ref().expect("pjrt backend has executable");
+        let lit = |v: &[f32]| xla::Literal::vec1(v);
+        let l = MAX_LAYERS as i64;
+        let h = HOP_BUCKETS as i64;
+        let args = vec![
+            lit(&input.t_comp),
+            lit(&input.t_dram),
+            lit(&input.t_noc),
+            lit(&input.nop_vh),
+            lit(&input.elig_vh).reshape(&[l, h])?,
+            lit(&input.elig_v).reshape(&[l, h])?,
+            lit(&input.thresh),
+            lit(&input.pinj),
+            lit(&input.wl_bw),
+            xla::Literal::scalar(input.nop_bw),
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: a 5-tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        let mut it = parts.into_iter();
+        let total = it.next().unwrap().to_vec::<f32>()?;
+        let shares = it.next().unwrap().to_vec::<f32>()?;
+        let wl_vol = it.next().unwrap().to_vec::<f32>()?;
+        let speedup = it.next().unwrap().to_vec::<f32>()?;
+        let t_wired = it.next().unwrap().to_vec::<f32>()?[0];
+        anyhow::ensure!(total.len() == NUM_CONFIGS, "total shape");
+        anyhow::ensure!(shares.len() == NUM_CONFIGS * NUM_COMPONENTS, "shares shape");
+        Ok(CostModelOutput {
+            total,
+            shares,
+            wl_vol,
+            speedup,
+            t_wired,
+        })
+    }
+}
+
+/// Pack per-workload `CostTensors` plus a config grid into the artifact
+/// input layout (zero-padding layers, +inf/0 padding configs).
+pub fn pack_input(
+    tensors: &CostTensors,
+    configs: &[(u32, f64, f64)], // (threshold, pinj, wl_bw)
+) -> Result<CostModelInput> {
+    if tensors.layers.len() > MAX_LAYERS {
+        bail!(
+            "workload has {} layers; artifact supports {MAX_LAYERS} \
+             (raise MAX_LAYERS in python/compile/constants.py and rebuild)",
+            tensors.layers.len()
+        );
+    }
+    if configs.len() > NUM_CONFIGS {
+        bail!("{} configs exceed the grid size {NUM_CONFIGS}", configs.len());
+    }
+    let mut input = CostModelInput::zeroed();
+    for (i, lc) in tensors.layers.iter().enumerate() {
+        input.t_comp[i] = lc.t_comp as f32;
+        input.t_dram[i] = lc.t_dram as f32;
+        input.t_noc[i] = lc.t_noc as f32;
+        input.nop_vh[i] = lc.nop_vol_hops as f32;
+        for b in 0..HOP_BUCKETS {
+            input.elig_vh[i * HOP_BUCKETS + b] = lc.elig_vol_hops[b] as f32;
+            input.elig_v[i * HOP_BUCKETS + b] = lc.elig_vol[b] as f32;
+        }
+    }
+    for (c, &(thresh, pinj, bw)) in configs.iter().enumerate() {
+        input.thresh[c] = thresh as f32;
+        input.pinj[c] = pinj as f32;
+        input.wl_bw[c] = bw as f32;
+    }
+    // Padding configs keep thresh=+inf, pinj=0, wl_bw=0 from zeroed():
+    // they evaluate to the wired baseline.
+    input.nop_bw = tensors.nop_agg_bw as f32;
+    Ok(input)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::LayerCosts;
+
+    fn tensors() -> CostTensors {
+        let mut l = LayerCosts {
+            t_comp: 1e-6,
+            nop_vol_hops: 4e6,
+            ..Default::default()
+        };
+        l.elig_vol_hops[2] = 2e6;
+        l.elig_vol[2] = 0.5e6;
+        CostTensors {
+            layers: vec![l],
+            nop_agg_bw: 1e12,
+        }
+    }
+
+    #[test]
+    fn pack_layout() {
+        let t = tensors();
+        let input = pack_input(&t, &[(1, 0.5, 64e9)]).unwrap();
+        input.validate().unwrap();
+        assert_eq!(input.t_comp[0], 1e-6);
+        assert_eq!(input.elig_vh[2], 2e6);
+        assert_eq!(input.thresh[0], 1.0);
+        assert_eq!(input.pinj[0], 0.5);
+        // Pad configs: wired.
+        assert_eq!(input.pinj[1], 0.0);
+        assert!(input.thresh[1].is_infinite());
+    }
+
+    #[test]
+    fn pack_rejects_oversize() {
+        let t = CostTensors {
+            layers: vec![LayerCosts::default(); MAX_LAYERS + 1],
+            nop_agg_bw: 1.0,
+        };
+        assert!(pack_input(&t, &[]).is_err());
+        let t2 = tensors();
+        let many = vec![(1u32, 0.1f64, 1.0f64); NUM_CONFIGS + 1];
+        assert!(pack_input(&t2, &many).is_err());
+    }
+
+    #[test]
+    fn native_runtime_matches_sim_expected() {
+        use crate::config::WirelessConfig;
+        use crate::sim::{evaluate_expected, evaluate_wired};
+        let t = tensors();
+        let rt = Runtime::native();
+        let input = pack_input(&t, &[(1, 0.5, 64e9)]).unwrap();
+        let out = rt.evaluate(&input).unwrap();
+        let w = WirelessConfig {
+            distance_threshold: 1,
+            injection_prob: 0.5,
+            bandwidth_bits: 64e9,
+            ..Default::default()
+        };
+        let expect = evaluate_expected(&t, &w);
+        let wired = evaluate_wired(&t);
+        assert!((out.total[0] as f64 - expect.total_s).abs() < 1e-9);
+        assert!((out.t_wired as f64 - wired.total_s).abs() < 1e-9);
+        assert_eq!(rt.backend(), Backend::Native);
+        assert_eq!(rt.calls.get(), 1);
+    }
+
+    #[test]
+    fn auto_falls_back_when_missing() {
+        let rt = Runtime::auto(Some("/nonexistent/path.hlo.txt"));
+        // Either finds the repo artifact (if built) or falls back.
+        assert!(rt.is_ok());
+    }
+}

@@ -1,0 +1,164 @@
+//! Native (pure-Rust) twin of the AOT cost-model artifact.
+//!
+//! Exactly the semantics of python/compile/kernels/ref.py, over the same
+//! flat `CostModelInput`. Used (a) to cross-validate the PJRT path in
+//! tests, and (b) as a fallback evaluator when `artifacts/` has not been
+//! built. The runtime selects automatically; results must agree to f32
+//! tolerance (enforced in rust/tests/runtime_roundtrip.rs).
+
+use crate::runtime::contract::{
+    CostModelInput, CostModelOutput, HOP_BUCKETS, MAX_LAYERS, NUM_COMPONENTS, NUM_CONFIGS,
+};
+
+/// Evaluate the cost model natively. Mirrors ref.cost_model_ref + the
+/// model.py speedup derivation.
+pub fn evaluate(input: &CostModelInput) -> CostModelOutput {
+    let inv_nop = if input.nop_bw > 0.0 {
+        1.0 / input.nop_bw as f64
+    } else {
+        0.0
+    };
+
+    // Wired baseline total.
+    let mut t_wired = 0.0f64;
+    for l in 0..MAX_LAYERS {
+        let t_nop = input.nop_vh[l] as f64 * inv_nop;
+        let m = (input.t_comp[l] as f64)
+            .max(input.t_dram[l] as f64)
+            .max(input.t_noc[l] as f64)
+            .max(t_nop);
+        t_wired += m;
+    }
+
+    let mut total = vec![0.0f32; NUM_CONFIGS];
+    let mut shares = vec![0.0f32; NUM_CONFIGS * NUM_COMPONENTS];
+    let mut wl_vol = vec![0.0f32; NUM_CONFIGS];
+    let mut speedup = vec![0.0f32; NUM_CONFIGS];
+
+    for c in 0..NUM_CONFIGS {
+        let thresh = input.thresh[c] as f64;
+        let p = input.pinj[c] as f64;
+        let bw = input.wl_bw[c] as f64;
+        let mut tot = 0.0f64;
+        let mut claimed = [0.0f64; NUM_COMPONENTS];
+        let mut moved_total = 0.0f64;
+
+        for l in 0..MAX_LAYERS {
+            let (mut moved_vh, mut moved_v) = (0.0f64, 0.0f64);
+            for h in 0..HOP_BUCKETS {
+                if (h + 1) as f64 >= thresh {
+                    moved_vh += input.elig_vh[l * HOP_BUCKETS + h] as f64;
+                    moved_v += input.elig_v[l * HOP_BUCKETS + h] as f64;
+                }
+            }
+            moved_vh *= p;
+            moved_v *= p;
+            moved_total += moved_v;
+
+            let comps = [
+                input.t_comp[l] as f64,
+                input.t_dram[l] as f64,
+                input.t_noc[l] as f64,
+                (input.nop_vh[l] as f64 - moved_vh).max(0.0) * inv_nop,
+                if moved_v > 0.0 && bw > 0.0 {
+                    moved_v / bw
+                } else {
+                    0.0
+                },
+            ];
+            let mut k_best = 0;
+            for k in 1..NUM_COMPONENTS {
+                if comps[k] > comps[k_best] {
+                    k_best = k;
+                }
+            }
+            tot += comps[k_best];
+            claimed[k_best] += comps[k_best];
+        }
+
+        total[c] = tot as f32;
+        wl_vol[c] = moved_total as f32;
+        let denom = tot.max(1e-30);
+        for k in 0..NUM_COMPONENTS {
+            shares[c * NUM_COMPONENTS + k] = (claimed[k] / denom) as f32;
+        }
+        speedup[c] = if tot > 0.0 {
+            (t_wired / tot.max(1e-30)) as f32
+        } else {
+            0.0
+        };
+    }
+
+    CostModelOutput {
+        total,
+        shares,
+        wl_vol,
+        speedup,
+        t_wired: t_wired as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input_one_layer() -> CostModelInput {
+        let mut i = CostModelInput::zeroed();
+        i.t_comp[0] = 1.0;
+        i.nop_vh[0] = 4.0;
+        i.elig_vh[3] = 3.0; // hop bucket 4
+        i.elig_v[3] = 1.5;
+        i.nop_bw = 1.0;
+        i.thresh[0] = 1.0;
+        i.pinj[0] = 1.0;
+        i.wl_bw[0] = 1.0;
+        // config 1: disabled by pinj 0.
+        i.thresh[1] = 1.0;
+        i.pinj[1] = 0.0;
+        i.wl_bw[1] = 1.0;
+        i
+    }
+
+    #[test]
+    fn offload_math() {
+        let out = evaluate(&input_one_layer());
+        // wired: max(1, 4/1) = 4.
+        assert_eq!(out.t_wired, 4.0);
+        // config 0: nop -> (4-3)=1, wl = 1.5 -> max(1, 1, 1.5) = 1.5.
+        assert_eq!(out.total[0], 1.5);
+        assert!((out.speedup[0] - 4.0 / 1.5).abs() < 1e-6);
+        assert_eq!(out.wl_vol[0], 1.5);
+        assert_eq!(out.share(0, 4), 1.0);
+        // config 1: pinj 0 -> wired.
+        assert_eq!(out.total[1], 4.0);
+        assert_eq!(out.speedup[1], 1.0);
+        assert_eq!(out.wl_vol[1], 0.0);
+        assert_eq!(out.share(1, 3), 1.0);
+    }
+
+    #[test]
+    fn padded_configs_are_wired() {
+        let out = evaluate(&input_one_layer());
+        // zeroed() pads thresh with +inf and pinj 0: totals = wired.
+        for c in 2..NUM_CONFIGS {
+            assert_eq!(out.total[c], 4.0, "config {c}");
+            assert_eq!(out.wl_vol[c], 0.0);
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one_when_active() {
+        let out = evaluate(&input_one_layer());
+        for c in 0..4 {
+            let s: f32 = (0..NUM_COMPONENTS).map(|k| out.share(c, k)).sum();
+            assert!((s - 1.0).abs() < 1e-5, "config {c}: {s}");
+        }
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let out = evaluate(&CostModelInput::zeroed());
+        assert_eq!(out.t_wired, 0.0);
+        assert!(out.total.iter().all(|&t| t == 0.0));
+    }
+}

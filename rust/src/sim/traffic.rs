@@ -1,0 +1,445 @@
+//! Traffic characterization: turn (workload, mapping) into package-level
+//! flows, layer by layer.
+//!
+//! This is where the communication patterns the paper studies come from:
+//! weight distribution from DRAM (multicast when a partition replicates
+//! weights), activation movement between producer and consumer regions
+//! (multicast when a consumer partition replicates inputs, and when one
+//! producer feeds several branch consumers), partial-sum reductions for
+//! input-channel splits, and SRAM spills back to DRAM.
+
+use crate::arch::{NodeId, Package};
+use crate::mapping::{Mapping, Partition};
+use crate::nop::Flow;
+use crate::workloads::Workload;
+use anyhow::Result;
+
+/// Fraction of chiplet SRAM reserved for resident weights; the rest
+/// holds activations and double buffers.
+pub const WEIGHT_SRAM_FRACTION: f64 = 0.75;
+
+/// All flows of one layer, with the DRAM byte count for the memory-time
+/// model (which is bandwidth-limited at the DRAM chip, separate from the
+/// NoP transfer the same bits also generate).
+#[derive(Debug, Clone, Default)]
+pub struct LayerTraffic {
+    pub flows: Vec<Flow>,
+    pub dram_bits: f64,
+    /// Intra-chiplet NoC volume (bits moved inside each assigned
+    /// chiplet, averaged).
+    pub noc_bits_per_chiplet: f64,
+    /// Distinct DRAM modules adjacent to the region (memory parallelism
+    /// available to this layer).
+    pub dram_ports: usize,
+    /// Whether this layer's weights are pinned in SRAM (loaded once at
+    /// deployment, amortized across inferences -> no steady-state DRAM
+    /// or NoP weight traffic).
+    pub weights_resident: bool,
+}
+
+/// Decide which layers keep their weights resident: greedily pin the
+/// cheapest weight footprints until the package-wide weight budget is
+/// exhausted (maximizing the number of reuse-friendly layers, the
+/// SIMBA/GEMINI weight-stationary assumption).
+///
+/// The footprint is partition-aware: a `Spatial` layer replicates its
+/// full weight tensor on every chiplet of its region, so it charges
+/// n x weight_bits against the budget — which is why large spatially-
+/// tiled layers end up streaming (and multicasting) their weights.
+pub fn plan_weight_residency(wl: &Workload, mapping: &Mapping, pkg: &Package) -> Vec<bool> {
+    let datum_bits = pkg.cfg.datum_bits as f64;
+    let budget_bits = pkg.num_chiplets() as f64
+        * pkg.cfg.sram_bytes as f64
+        * 8.0
+        * WEIGHT_SRAM_FRACTION;
+    let footprint = |i: usize| {
+        let bits = wl.layers[i].weight_datums as f64 * datum_bits;
+        match mapping.placements[i].partition {
+            Partition::Spatial => bits * mapping.placements[i].chiplets.len() as f64,
+            _ => bits,
+        }
+    };
+    let mut order: Vec<usize> = (0..wl.layers.len()).collect();
+    order.sort_by(|&a, &b| footprint(a).partial_cmp(&footprint(b)).unwrap());
+    let mut resident = vec![false; wl.layers.len()];
+    let mut used = 0.0;
+    for i in order {
+        let bits = footprint(i);
+        if bits == 0.0 {
+            continue;
+        }
+        if used + bits <= budget_bits {
+            used += bits;
+            resident[i] = true;
+        }
+    }
+    resident
+}
+
+/// Traffic for every layer.
+pub fn characterize(
+    wl: &Workload,
+    mapping: &Mapping,
+    pkg: &Package,
+) -> Result<Vec<LayerTraffic>> {
+    mapping.validate(wl, pkg)?;
+    let consumers = wl.consumers();
+    let datum_bits = pkg.cfg.datum_bits as f64;
+    let resident = plan_weight_residency(wl, mapping, pkg);
+    let mut out = Vec::with_capacity(wl.layers.len());
+
+    for (i, layer) in wl.layers.iter().enumerate() {
+        let place = &mapping.placements[i];
+        let region = &place.chiplets;
+        let n = region.len() as f64;
+        let mut t = LayerTraffic::default();
+        t.weights_resident = resident[i];
+
+        let home = pkg.home_dram(region[0])?;
+        let mut homes: Vec<_> = region
+            .iter()
+            .map(|&c| pkg.home_dram(c))
+            .collect::<Result<Vec<_>>>()?;
+        homes.sort();
+        homes.dedup();
+        t.dram_ports = homes.len();
+
+        let weight_bits = layer.weight_datums as f64 * datum_bits;
+        let out_bits = layer.out_datums as f64 * datum_bits;
+
+        // --- Weights from DRAM (streaming layers only; resident weights
+        // are loaded once at deployment and amortized away). Streamed
+        // weights are fetched once per batch -> per-inference cost is
+        // weight_bits / batch. --------------------------------------------
+        if weight_bits > 0.0 && !resident[i] {
+            let w_bits = weight_bits / pkg.cfg.batch.max(1) as f64;
+            t.dram_bits += w_bits;
+            match place.partition {
+                Partition::Spatial => {
+                    // Replicated: one multicast of the full tensor.
+                    t.flows.push(Flow::multicast(
+                        home,
+                        region.iter().map(|&c| NodeId::Chiplet(c)).collect(),
+                        w_bits,
+                    ));
+                }
+                Partition::OutputChannel | Partition::InputChannel => {
+                    // Sharded: unicast fan-out of distinct slices.
+                    t.flows.push(Flow {
+                        src: home,
+                        dests: region.iter().map(|&c| NodeId::Chiplet(c)).collect(),
+                        vol_bits: w_bits,
+                        multicast: false,
+                    });
+                }
+            }
+        }
+
+        // --- Graph-input ingest from DRAM --------------------------------
+        let input_replicated = place.partition == Partition::OutputChannel;
+        if layer.inputs.is_empty() {
+            let in_bits = layer.out_datums as f64 * datum_bits; // ingest est.
+            t.dram_bits += in_bits;
+            if input_replicated && region.len() > 1 {
+                t.flows.push(Flow::multicast(
+                    home,
+                    region.iter().map(|&c| NodeId::Chiplet(c)).collect(),
+                    in_bits,
+                ));
+            } else {
+                t.flows.push(Flow {
+                    src: home,
+                    dests: region.iter().map(|&c| NodeId::Chiplet(c)).collect(),
+                    vol_bits: in_bits,
+                    multicast: false,
+                });
+            }
+        }
+
+        // --- Activation distribution to consumers ------------------------
+        // Production-time push (GEMINI/SET inter-layer pipelining): as a
+        // layer produces its output tiles, it streams them to every
+        // consumer. With >= 2 consumers (branches) or any
+        // input-replicating consumer, the same data goes to many
+        // chiplets at once -> a multicast per source chiplet, the
+        // criterion-1 traffic the wireless plane targets. A single
+        // input-sharded consumer degenerates to paired unicasts.
+        let cons = &consumers[i];
+        if !cons.is_empty() {
+            let shard = out_bits / n;
+            let needs_multicast = cons.len() >= 2
+                || cons.iter().any(|&c| {
+                    mapping.placements[c].partition == Partition::OutputChannel
+                        && mapping.placements[c].chiplets.len() > 1
+                });
+            if needs_multicast {
+                let mut union: Vec<usize> = cons
+                    .iter()
+                    .flat_map(|&c| mapping.placements[c].chiplets.iter().copied())
+                    .collect();
+                union.sort_unstable();
+                union.dedup();
+                for &sc in region {
+                    t.flows.push(Flow::multicast(
+                        NodeId::Chiplet(sc),
+                        union.iter().map(|&c| NodeId::Chiplet(c)).collect(),
+                        shard,
+                    ));
+                }
+            } else {
+                let cr = &mapping.placements[cons[0]].chiplets;
+                let per_dst = out_bits / cr.len() as f64;
+                for (j, &dc) in cr.iter().enumerate() {
+                    let sc = region[j % region.len()];
+                    t.flows
+                        .push(Flow::unicast(NodeId::Chiplet(sc), NodeId::Chiplet(dc), per_dst));
+                }
+            }
+        }
+
+        // --- Partial-sum reduction for input-channel splits --------------
+        if place.partition == Partition::InputChannel && region.len() > 1 {
+            let leader = region[0];
+            for &c in &region[1..] {
+                t.flows.push(Flow::unicast(
+                    NodeId::Chiplet(c),
+                    NodeId::Chiplet(leader),
+                    out_bits,
+                ));
+            }
+        }
+
+        // --- Graph outputs write back to DRAM ----------------------------
+        if consumers[i].is_empty() {
+            t.dram_bits += out_bits;
+            t.flows.push(Flow {
+                src: NodeId::Chiplet(region[0]),
+                dests: vec![home],
+                vol_bits: out_bits,
+                multicast: false,
+            });
+        }
+
+        // --- SRAM spill: activations must fit the non-weight SRAM share
+        // (streamed weights pass through double buffers and never spill).
+        let in_bits_total = wl.in_datums(i) as f64 * datum_bits;
+        let act_per_chiplet = (in_bits_total + out_bits) / n / 8.0; // bytes
+        let act_sram = pkg.cfg.sram_bytes as f64 * (1.0 - WEIGHT_SRAM_FRACTION);
+        if act_per_chiplet > act_sram {
+            let spill_bits = (act_per_chiplet - act_sram) * 8.0 * n;
+            t.dram_bits += 2.0 * spill_bits; // write + re-read
+            for &c in region {
+                t.flows.push(Flow::unicast(
+                    NodeId::Chiplet(c),
+                    home,
+                    2.0 * spill_bits / n,
+                ));
+            }
+        }
+
+        // --- Intra-chiplet NoC volume --------------------------------------
+        t.noc_bits_per_chiplet = (in_bits_total + weight_bits + out_bits) / n;
+
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchConfig;
+    use crate::mapping::{layer_sequential, LayerPlacement};
+    use crate::workloads::build;
+
+    fn setup(name: &str) -> (Workload, Mapping, Package) {
+        let pkg = Package::new(ArchConfig::default()).unwrap();
+        let wl = build(name).unwrap();
+        let m = layer_sequential(&wl, &pkg);
+        (wl, m, pkg)
+    }
+
+    #[test]
+    fn every_layer_gets_traffic() {
+        let (wl, m, pkg) = setup("resnet50");
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        assert_eq!(traffic.len(), wl.layers.len());
+        // Streaming (non-resident) weighted layers must pull weights
+        // from DRAM; resident ones must not pay per-inference.
+        let resident = plan_weight_residency(&wl, &m, &pkg);
+        for (i, l) in wl.layers.iter().enumerate() {
+            if l.weight_datums > 0 && !resident[i] {
+                assert!(traffic[i].dram_bits > 0.0, "layer {i} {}", l.name);
+                assert!(!traffic[i].flows.is_empty());
+            }
+            assert!(traffic[i].dram_ports >= 1);
+        }
+    }
+
+    #[test]
+    fn weight_residency_prefers_small_tensors() {
+        let pkg = Package::new(ArchConfig::default()).unwrap();
+        // resnet50 (25.5 MB int8) fits the 27 MB weight budget entirely;
+        // vgg (138 MB) cannot — its giant fc6 must stream.
+        let r50 = build("resnet50").unwrap();
+        let m50 = layer_sequential(&r50, &pkg);
+        let res = plan_weight_residency(&r50, &m50, &pkg);
+        assert!(res.iter().filter(|&&r| r).count() > 50);
+        let vgg = build("vgg").unwrap();
+        let mv = layer_sequential(&vgg, &pkg);
+        let res = plan_weight_residency(&vgg, &mv, &pkg);
+        let fc6 = vgg.layers.iter().position(|l| l.name == "fc6").unwrap();
+        assert!(!res[fc6], "fc6 (51 MB) cannot be resident");
+        // conv1_1 (1.7 kB) always is.
+        assert!(res[0]);
+    }
+
+    #[test]
+    fn spatial_partition_multicasts_weights() {
+        let (wl, mut m, pkg) = setup("vgg");
+        for p in &mut m.placements {
+            p.partition = Partition::Spatial;
+        }
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // A streaming layer's weights -> multicast flow from DRAM.
+        let resident = plan_weight_residency(&wl, &m, &pkg);
+        let stream_idx = wl
+            .layers
+            .iter()
+            .enumerate()
+            .position(|(i, l)| l.weight_datums > 0 && !resident[i])
+            .expect("vgg has streaming layers");
+        let wflow = traffic[stream_idx]
+            .flows
+            .iter()
+            .find(|f| f.src.is_dram() && f.multicast)
+            .expect("weight multicast");
+        assert_eq!(wflow.dests.len(), 9);
+    }
+
+    #[test]
+    fn output_channel_multicasts_activations() {
+        let (wl, mut m, pkg) = setup("vgg");
+        for p in &mut m.placements {
+            p.partition = Partition::OutputChannel;
+        }
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // conv1_1 (layer 0) pushes to its input-replicating consumer:
+        // one multicast per source chiplet, attributed at production.
+        let mc = traffic[0]
+            .flows
+            .iter()
+            .filter(|f| !f.src.is_dram() && f.multicast)
+            .count();
+        assert_eq!(mc, 9, "one multicast per source chiplet");
+    }
+
+    #[test]
+    fn branch_fanout_creates_multicast_even_when_sharded() {
+        let (wl, mut m, pkg) = setup("googlenet");
+        for p in &mut m.placements {
+            p.partition = Partition::Spatial; // sharded inputs
+        }
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // pool2 feeds 4 inception branches: its push must be multicast
+        // despite every consumer being input-sharded.
+        let p2 = wl.layers.iter().position(|l| l.name == "pool2").unwrap();
+        assert!(traffic[p2].flows.iter().any(|f| f.multicast && !f.src.is_dram()));
+        // A chain layer with one sharded consumer stays unicast.
+        let c1 = wl.layers.iter().position(|l| l.name == "conv2r").unwrap();
+        assert!(traffic[c1]
+            .flows
+            .iter()
+            .all(|f| f.src.is_dram() || !f.multicast));
+    }
+
+    #[test]
+    fn input_channel_adds_reduction() {
+        let (wl, mut m, pkg) = setup("zfnet");
+        for p in &mut m.placements {
+            p.partition = Partition::InputChannel;
+        }
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // 8 reduction unicasts (9 chiplets -> leader).
+        let red = traffic[2]
+            .flows
+            .iter()
+            .filter(|f| {
+                !f.multicast
+                    && !f.src.is_dram()
+                    && f.dests == vec![NodeId::Chiplet(m.placements[2].chiplets[0])]
+            })
+            .count();
+        assert!(red >= 8, "{red}");
+    }
+
+    #[test]
+    fn branchy_consumer_duplicates_producer_traffic() {
+        let (wl, m, pkg) = setup("googlenet");
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        let cons = wl.consumers();
+        // A branchy producer's output appears as input flows in several
+        // consumer layers.
+        let p2 = wl.layers.iter().position(|l| l.name == "pool2").unwrap();
+        assert!(cons[p2].len() >= 4);
+        for &c in &cons[p2] {
+            assert!(!traffic[c].flows.is_empty());
+        }
+    }
+
+    #[test]
+    fn single_chiplet_mapping_stays_mostly_local() {
+        let pkg = Package::new(ArchConfig::default()).unwrap();
+        let wl = build("zfnet").unwrap();
+        let placements = wl
+            .layers
+            .iter()
+            .map(|l| LayerPlacement {
+                chiplets: vec![4], // centre chiplet only
+                partition: crate::mapping::default_partition(l.weight_datums, l.out_datums),
+            })
+            .collect();
+        let m = Mapping { placements };
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // No flows between DIFFERENT chiplets (self-flows are free at
+        // 0 hops; DRAM traffic and spills are expected).
+        for t in &traffic {
+            for f in &t.flows {
+                let c2c = !f.src.is_dram()
+                    && f.dests.iter().any(|d| !d.is_dram() && *d != f.src);
+                assert!(!c2c, "unexpected chip-to-chip flow {f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_io_hits_dram() {
+        let (wl, m, pkg) = setup("vgg");
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        // First layer ingests from DRAM beyond its weights.
+        let w0 = wl.layers[0].weight_datums as f64 * 8.0;
+        assert!(traffic[0].dram_bits > w0);
+        // Last layer (fc8) writes its logits back.
+        let last = wl.layers.len() - 1;
+        let writeback = traffic[last]
+            .flows
+            .iter()
+            .any(|f| f.dests.iter().any(|d| d.is_dram()));
+        assert!(writeback);
+    }
+
+    #[test]
+    fn spill_emits_dram_flows() {
+        let mut cfg = ArchConfig::default();
+        cfg.sram_bytes = 1024; // pathologically small -> everything spills
+        let pkg = Package::new(cfg).unwrap();
+        let wl = build("zfnet").unwrap();
+        let m = layer_sequential(&wl, &pkg);
+        let traffic = characterize(&wl, &m, &pkg).unwrap();
+        let spilly = traffic
+            .iter()
+            .filter(|t| t.flows.iter().any(|f| f.dests.iter().any(|d| d.is_dram())))
+            .count();
+        assert!(spilly > wl.layers.len() / 2);
+    }
+}

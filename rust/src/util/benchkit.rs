@@ -1,0 +1,126 @@
+//! Micro-benchmark kit for the `harness = false` bench targets
+//! (criterion is not in the offline registry).
+//!
+//! Median-of-N timing with warmup, ns resolution, and a tabular reporter
+//! whose output the paper-figure benches also reuse.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured runs.
+pub fn bench<T, F: FnMut() -> T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        median_ns: median,
+        mean_ns: mean,
+        min_ns: samples[0],
+        max_ns: *samples.last().unwrap(),
+        iters: samples.len(),
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Print a criterion-like report block.
+pub fn report(ms: &[Measurement]) {
+    let w = ms.iter().map(|m| m.name.len()).max().unwrap_or(8).max(8);
+    println!(
+        "{:<w$}  {:>12}  {:>12}  {:>12}  {:>12}  {:>6}",
+        "bench", "median", "mean", "min", "max", "iters"
+    );
+    for m in ms {
+        println!(
+            "{:<w$}  {:>12}  {:>12}  {:>12}  {:>12}  {:>6}",
+            m.name,
+            fmt_ns(m.median_ns),
+            fmt_ns(m.mean_ns),
+            fmt_ns(m.min_ns),
+            fmt_ns(m.max_ns),
+            m.iters
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.min_ns <= m.median_ns && m.median_ns <= m.max_ns);
+        assert_eq!(m.iters, 5);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let m = Measurement {
+            name: "x".into(),
+            median_ns: 1e9,
+            mean_ns: 1e9,
+            min_ns: 1e9,
+            max_ns: 1e9,
+            iters: 1,
+        };
+        assert!((m.throughput(100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1.5e6), "1.500 ms");
+        assert_eq!(fmt_ns(2.5e9), "2.500 s");
+    }
+}

@@ -1,0 +1,76 @@
+//! Foundational substrates built in-house (the offline crates cache only
+//! carries the `xla` closure): deterministic RNG, statistics, a thread
+//! pool, a property-testing harness and a micro-benchmark kit.
+
+pub mod benchkit;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Clamp helper used across the analytical models.
+#[inline]
+pub fn clamp01(x: f64) -> f64 {
+    x.max(0.0).min(1.0)
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Human-readable engineering formatting for quantities (bits, seconds).
+pub fn eng(value: f64, unit: &str) -> String {
+    let (scaled, prefix) = if value == 0.0 {
+        (0.0, "")
+    } else {
+        let a = value.abs();
+        if a >= 1e12 {
+            (value / 1e12, "T")
+        } else if a >= 1e9 {
+            (value / 1e9, "G")
+        } else if a >= 1e6 {
+            (value / 1e6, "M")
+        } else if a >= 1e3 {
+            (value / 1e3, "k")
+        } else if a >= 1.0 {
+            (value, "")
+        } else if a >= 1e-3 {
+            (value * 1e3, "m")
+        } else if a >= 1e-6 {
+            (value * 1e6, "u")
+        } else {
+            (value * 1e9, "n")
+        }
+    };
+    format!("{scaled:.3} {prefix}{unit}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_rounds_up() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn clamp01_bounds() {
+        assert_eq!(clamp01(-1.0), 0.0);
+        assert_eq!(clamp01(0.5), 0.5);
+        assert_eq!(clamp01(2.0), 1.0);
+    }
+
+    #[test]
+    fn eng_prefixes() {
+        assert_eq!(eng(64e9, "b/s"), "64.000 Gb/s");
+        assert_eq!(eng(1.5e-3, "s"), "1.500 ms");
+        assert_eq!(eng(0.0, "s"), "0.000 s");
+    }
+}

@@ -1,0 +1,165 @@
+//! In-house scoped thread pool for the DSE sweep engine.
+//!
+//! tokio is not in the offline registry; the sweep workload is pure CPU
+//! fan-out anyway, so a work-queue + std::thread pool is the right tool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `f(i)` for every `i in 0..n` across `workers` threads, collecting
+/// results in order. Panics in a job propagate to the caller.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    // Lock-free result placement: each index is claimed by exactly one
+    // worker via the atomic counter and written exactly once; the scope
+    // joins every worker before `results` is read again. (The previous
+    // per-item mutex dominated runtime for fine-grained jobs.)
+    struct SyncPtr<T>(*mut Option<T>);
+    unsafe impl<T: Send> Send for SyncPtr<T> {}
+    unsafe impl<T: Send> Sync for SyncPtr<T> {}
+    let out_ptr = SyncPtr(results.as_mut_ptr());
+
+    thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| {
+                let ptr = &out_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = f(i);
+                    // SAFETY: i < n is in-bounds and claimed uniquely by
+                    // the fetch_add above; writes complete before the
+                    // scope joins.
+                    unsafe { *ptr.0.add(i) = Some(out) };
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|o| o.expect("job not run"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism minus one for the leader,
+/// at least 1.
+pub fn default_workers() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// A persistent leader/worker job queue used by the coordinator: jobs are
+/// boxed closures; `join` drains the queue.
+pub struct WorkQueue {
+    jobs: Arc<Mutex<Vec<Box<dyn FnOnce() + Send>>>>,
+}
+
+impl Default for WorkQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WorkQueue {
+    pub fn new() -> Self {
+        Self {
+            jobs: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn push<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.jobs.lock().unwrap().push(Box::new(job));
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run all queued jobs on `workers` threads; returns jobs executed.
+    pub fn join(&self, workers: usize) -> usize {
+        let jobs: Vec<_> = std::mem::take(&mut *self.jobs.lock().unwrap());
+        let n = jobs.len();
+        let queue = Mutex::new(jobs);
+        thread::scope(|scope| {
+            for _ in 0..workers.max(1).min(n.max(1)) {
+                scope.spawn(|| loop {
+                    let job = queue.lock().unwrap().pop();
+                    match job {
+                        Some(j) => j(),
+                        None => break,
+                    }
+                });
+            }
+        });
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(100, 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(3, 1, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn map_runs_each_exactly_once() {
+        let counter = AtomicU64::new(0);
+        parallel_map(1000, 8, |_| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn queue_drains() {
+        let q = WorkQueue::new();
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            q.push(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(q.len(), 50);
+        assert_eq!(q.join(4), 50);
+        assert!(q.is_empty());
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+}

@@ -1,0 +1,211 @@
+//! The wireless NoP plane (paper §III-B): antennas at every chiplet and
+//! DRAM centre, a shared broadcast medium, and the three-step decision
+//! function that arbitrates between the wired and wireless planes.
+
+use crate::config::WirelessConfig;
+use crate::nop::Flow;
+use crate::util::rng::Pcg32;
+
+/// Why a flow was (or wasn't) sent wirelessly — kept for reporting and
+/// the decision-criteria ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Took the wireless path.
+    Wireless,
+    /// Not a cross-chip multicast (criterion 1).
+    NotMulticast,
+    /// Under the distance threshold (criterion 2).
+    TooClose,
+    /// Lost the injection-probability coin flip (criterion 3).
+    CoinKeptWired,
+    /// Plane disabled.
+    Disabled,
+}
+
+impl Decision {
+    pub fn went_wireless(&self) -> bool {
+        matches!(self, Decision::Wireless)
+    }
+}
+
+/// The paper's three decision criteria, applied in order:
+/// 1. multi-chip multicast (configurable off for the ablation),
+/// 2. distance threshold on wired NoP hops,
+/// 3. injection probability.
+///
+/// `max_hops` is the flow's wired max source->dest hop distance;
+/// `coin` supplies criterion 3 — pass `None` for the expected-value
+/// analytical mode (the caller then weights volumes by `injection_prob`)
+/// or `Some(&mut rng)` for the stochastic per-message mode.
+pub fn decide(
+    cfg: &WirelessConfig,
+    flow: &Flow,
+    max_hops: u32,
+    coin: Option<&mut Pcg32>,
+) -> Decision {
+    if !cfg.enabled {
+        return Decision::Disabled;
+    }
+    if cfg.multicast_only {
+        if !flow.is_cross_chip_multicast() {
+            return Decision::NotMulticast;
+        }
+    } else if !flow.crosses_chip() {
+        return Decision::NotMulticast;
+    }
+    if max_hops < cfg.distance_threshold {
+        return Decision::TooClose;
+    }
+    match coin {
+        None => Decision::Wireless, // expectation handled by the caller
+        Some(rng) => {
+            if rng.coin(cfg.injection_prob) {
+                Decision::Wireless
+            } else {
+                Decision::CoinKeptWired
+            }
+        }
+    }
+}
+
+/// Shared-medium wireless channel. The paper models wireless time as
+/// total offloaded volume divided by the link bandwidth (one token-
+/// passing medium: transmissions serialize, reception is broadcast).
+#[derive(Debug, Clone)]
+pub struct Channel {
+    pub bandwidth_bits: f64,
+    /// Total bits transmitted (serialized on the medium).
+    pub tx_bits: f64,
+    /// Total bits received across all antennas (tx * n_dests).
+    pub rx_bits: f64,
+    /// Messages sent.
+    pub messages: u64,
+}
+
+impl Channel {
+    pub fn new(bandwidth_bits: f64) -> Self {
+        Self {
+            bandwidth_bits,
+            tx_bits: 0.0,
+            rx_bits: 0.0,
+            messages: 0,
+        }
+    }
+
+    /// Load a transmission onto the medium: one send, `n_dests`
+    /// deliveries (broadcast for free — the wireless advantage).
+    pub fn transmit(&mut self, vol_bits: f64, n_dests: usize) {
+        self.tx_bits += vol_bits;
+        self.rx_bits += vol_bits * n_dests as f64;
+        self.messages += 1;
+    }
+
+    /// Serialization time of everything loaded so far.
+    pub fn busy_time(&self) -> f64 {
+        if self.bandwidth_bits <= 0.0 {
+            return 0.0;
+        }
+        self.tx_bits / self.bandwidth_bits
+    }
+
+    /// Transceiver energy at `e_bit` J/bit, counting TX and RX sides.
+    pub fn energy(&self, e_bit: f64) -> f64 {
+        (self.tx_bits + self.rx_bits) * e_bit
+    }
+
+    pub fn reset(&mut self) {
+        self.tx_bits = 0.0;
+        self.rx_bits = 0.0;
+        self.messages = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::NodeId;
+
+    fn mc_flow() -> Flow {
+        Flow::multicast(
+            NodeId::Chiplet(0),
+            vec![NodeId::Chiplet(4), NodeId::Chiplet(8)],
+            1000.0,
+        )
+    }
+
+    #[test]
+    fn criterion_order() {
+        let cfg = WirelessConfig {
+            distance_threshold: 3,
+            injection_prob: 1.0,
+            ..Default::default()
+        };
+        // Criterion 1: unicast rejected even if far.
+        let uni = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(8), 10.0);
+        assert_eq!(decide(&cfg, &uni, 4, None), Decision::NotMulticast);
+        // Criterion 2: close multicast rejected.
+        assert_eq!(decide(&cfg, &mc_flow(), 2, None), Decision::TooClose);
+        // Passes both -> wireless in expectation mode.
+        assert_eq!(decide(&cfg, &mc_flow(), 4, None), Decision::Wireless);
+    }
+
+    #[test]
+    fn disabled_short_circuits() {
+        let cfg = WirelessConfig::disabled();
+        assert_eq!(decide(&cfg, &mc_flow(), 4, None), Decision::Disabled);
+    }
+
+    #[test]
+    fn multicast_only_off_admits_unicast() {
+        let cfg = WirelessConfig {
+            multicast_only: false,
+            distance_threshold: 1,
+            ..Default::default()
+        };
+        let uni = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(8), 10.0);
+        assert_eq!(decide(&cfg, &uni, 4, None), Decision::Wireless);
+        // But chip-local traffic never goes wireless.
+        let local = Flow::unicast(NodeId::Chiplet(0), NodeId::Chiplet(0), 10.0);
+        assert_eq!(decide(&cfg, &local, 0, None), Decision::NotMulticast);
+    }
+
+    #[test]
+    fn stochastic_coin_matches_probability() {
+        let cfg = WirelessConfig {
+            distance_threshold: 1,
+            injection_prob: 0.25,
+            ..Default::default()
+        };
+        let mut rng = Pcg32::seeded(99);
+        let n = 20_000;
+        let mut wl = 0;
+        for _ in 0..n {
+            if decide(&cfg, &mc_flow(), 3, Some(&mut rng)).went_wireless() {
+                wl += 1;
+            }
+        }
+        let p = wl as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.02, "p={p}");
+    }
+
+    #[test]
+    fn channel_accounting() {
+        let mut ch = Channel::new(64.0e9);
+        ch.transmit(64.0e9, 3); // one second of medium time
+        ch.transmit(64.0e9, 1);
+        assert_eq!(ch.messages, 2);
+        assert!((ch.busy_time() - 2.0).abs() < 1e-12);
+        assert_eq!(ch.rx_bits, 64.0e9 * 4.0);
+        // 1 pJ/bit over tx+rx.
+        let e = ch.energy(1e-12);
+        assert!((e - (128.0e9 + 256.0e9) * 1e-12).abs() < 1e-9);
+        ch.reset();
+        assert_eq!(ch.busy_time(), 0.0);
+    }
+
+    #[test]
+    fn zero_bandwidth_guard() {
+        let ch = Channel::new(0.0);
+        assert_eq!(ch.busy_time(), 0.0);
+    }
+}

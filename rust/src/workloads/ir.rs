@@ -1,0 +1,233 @@
+//! Layer-level intermediate representation for DNN inference workloads.
+//!
+//! GEMINI evaluates workloads layer by layer; what the cost model needs
+//! from each layer is its compute volume (MACs), its tensor footprints
+//! (weights, input activations, output activations) and the dependency
+//! graph (residual/inception/dense branches are what generate the
+//! multicast traffic the wireless plane targets).
+
+use anyhow::{bail, Result};
+
+/// Broad operator class — used for reporting and for utilization
+/// heuristics (dense matmul layers sustain higher PE utilization than
+/// elementwise/pool layers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    DepthwiseConv,
+    Fc,
+    Pool,
+    /// Elementwise add (residual join).
+    EltwiseAdd,
+    /// Channel concatenation (inception / dense join).
+    Concat,
+    /// Attention score+context matmuls.
+    Attention,
+    /// Recurrent cell (all gates of one timestep group).
+    Recurrent,
+    Embedding,
+    Softmax,
+    Norm,
+}
+
+impl LayerKind {
+    /// Fraction of peak MAC throughput this operator class sustains.
+    pub fn utilization(&self) -> f64 {
+        match self {
+            LayerKind::Conv => 0.85,
+            LayerKind::DepthwiseConv => 0.30,
+            LayerKind::Fc => 0.75,
+            LayerKind::Attention => 0.70,
+            LayerKind::Recurrent => 0.65,
+            LayerKind::Pool | LayerKind::Softmax | LayerKind::Norm => 0.25,
+            LayerKind::EltwiseAdd | LayerKind::Concat => 0.20,
+            LayerKind::Embedding => 0.10,
+        }
+    }
+
+    /// Whether the layer's weights are meaningful (pool/eltwise have none).
+    pub fn has_weights(&self) -> bool {
+        matches!(
+            self,
+            LayerKind::Conv
+                | LayerKind::DepthwiseConv
+                | LayerKind::Fc
+                | LayerKind::Attention
+                | LayerKind::Recurrent
+                | LayerKind::Embedding
+        )
+    }
+}
+
+/// One layer of a workload.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Multiply-accumulate operations.
+    pub macs: u64,
+    /// Parameter footprint in datums.
+    pub weight_datums: u64,
+    /// Output activation footprint in datums.
+    pub out_datums: u64,
+    /// Producer layer indices (empty = reads the network input).
+    pub inputs: Vec<usize>,
+}
+
+impl Layer {
+    pub fn new(
+        name: impl Into<String>,
+        kind: LayerKind,
+        macs: u64,
+        weight_datums: u64,
+        out_datums: u64,
+        inputs: Vec<usize>,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind,
+            macs,
+            weight_datums,
+            out_datums,
+            inputs,
+        }
+    }
+}
+
+/// A whole workload: a DAG of layers in topological order.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Result<Self> {
+        let w = Self {
+            name: name.into(),
+            layers,
+        };
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.layers.is_empty() {
+            bail!("workload {} has no layers", self.name);
+        }
+        for (i, layer) in self.layers.iter().enumerate() {
+            for &p in &layer.inputs {
+                if p >= i {
+                    bail!(
+                        "workload {}: layer {i} ({}) depends on later/own layer {p}",
+                        self.name,
+                        layer.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_weight_datums(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_datums).sum()
+    }
+
+    /// consumers[i] = indices of layers that read layer i's output.
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.layers.len()];
+        for (i, layer) in self.layers.iter().enumerate() {
+            for &p in &layer.inputs {
+                out[p].push(i);
+            }
+        }
+        out
+    }
+
+    /// Fraction of layers whose output fans out to more than one
+    /// consumer — the branchiness that drives multicast traffic.
+    pub fn branch_fraction(&self) -> f64 {
+        let cons = self.consumers();
+        let branchy = cons.iter().filter(|c| c.len() > 1).count();
+        branchy as f64 / self.layers.len() as f64
+    }
+
+    /// Input activation datums of layer `i` (sum over its producers; for
+    /// graph inputs use the layer's own output footprint as an estimate
+    /// of the ingested tensor).
+    pub fn in_datums(&self, i: usize) -> u64 {
+        let layer = &self.layers[i];
+        if layer.inputs.is_empty() {
+            layer.out_datums
+        } else {
+            layer.inputs.iter().map(|&p| self.layers[p].out_datums).sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Workload {
+        Workload::new(
+            "tiny",
+            vec![
+                Layer::new("a", LayerKind::Conv, 100, 10, 50, vec![]),
+                Layer::new("b", LayerKind::Conv, 200, 20, 50, vec![0]),
+                Layer::new("c", LayerKind::Conv, 200, 20, 50, vec![0]),
+                Layer::new("d", LayerKind::EltwiseAdd, 10, 0, 50, vec![1, 2]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn totals() {
+        let w = tiny();
+        assert_eq!(w.total_macs(), 510);
+        assert_eq!(w.total_weight_datums(), 50);
+    }
+
+    #[test]
+    fn consumers_and_branching() {
+        let w = tiny();
+        let cons = w.consumers();
+        assert_eq!(cons[0], vec![1, 2]); // layer a fans out
+        assert_eq!(cons[3], Vec::<usize>::new());
+        assert!((w.branch_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn in_datums_sums_producers() {
+        let w = tiny();
+        assert_eq!(w.in_datums(0), 50); // graph input estimate
+        assert_eq!(w.in_datums(3), 100); // b + c
+    }
+
+    #[test]
+    fn forward_reference_rejected() {
+        let r = Workload::new(
+            "bad",
+            vec![Layer::new("a", LayerKind::Conv, 1, 1, 1, vec![0])],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Workload::new("empty", vec![]).is_err());
+    }
+
+    #[test]
+    fn utilization_ordering() {
+        assert!(LayerKind::Conv.utilization() > LayerKind::Pool.utilization());
+        assert!(LayerKind::Fc.utilization() > LayerKind::EltwiseAdd.utilization());
+        assert!(!LayerKind::Pool.has_weights());
+        assert!(LayerKind::Conv.has_weights());
+    }
+}

@@ -1,0 +1,8 @@
+//! DNN workload models: layer IR, the 15 paper benchmarks, and a
+//! synthetic generator.
+
+pub mod builders;
+pub mod ir;
+
+pub use builders::{build, build_all, synthetic, WORKLOAD_NAMES};
+pub use ir::{Layer, LayerKind, Workload};

@@ -1,0 +1,127 @@
+//! Integration: the full coordinator pipeline (workload -> SA mapping ->
+//! tensors -> artifact-backed sweep -> figure data) composes correctly.
+
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::Coordinator;
+use wisper::runtime::Runtime;
+use wisper::sim::{evaluate_expected, COMP_WIRELESS};
+
+fn fast_coordinator() -> Coordinator {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 60;
+    Coordinator::new(cfg).unwrap()
+}
+
+#[test]
+fn prepare_map_simulate_sweep_roundtrip() {
+    let c = fast_coordinator();
+    let prep = c.prepare("googlenet", true).unwrap();
+    prep.mapping.validate(&prep.workload, &c.pkg).unwrap();
+    assert!(prep.wired.total_s > 0.0);
+    assert_eq!(prep.tensors.layers.len(), prep.workload.layers.len());
+
+    // Sweep through the runtime (artifact if built, else native).
+    let rt = c.runtime().unwrap();
+    let sweep = c.fig5(&rt, &prep, 64e9).unwrap();
+    assert_eq!(sweep.points.len(), 60);
+    // Wired baseline consistent between the sim and the runtime.
+    let rel = (sweep.t_wired - prep.wired.total_s).abs() / prep.wired.total_s;
+    assert!(rel < 1e-4, "t_wired mismatch: {rel}");
+}
+
+#[test]
+fn sweep_points_match_native_expected_evaluation() {
+    let c = fast_coordinator();
+    let prep = c.prepare("densenet", false).unwrap();
+    let rt = c.runtime().unwrap();
+    let sweep = c.fig5(&rt, &prep, 64e9).unwrap();
+    for pt in sweep.points.iter().step_by(7) {
+        let w = WirelessConfig {
+            enabled: true,
+            bandwidth_bits: pt.wl_bw,
+            distance_threshold: pt.threshold,
+            injection_prob: pt.pinj,
+            ..Default::default()
+        };
+        let expect = evaluate_expected(&prep.tensors, &w);
+        let rel = (pt.total_s - expect.total_s).abs() / expect.total_s.max(1e-30);
+        assert!(
+            rel < 1e-4,
+            "grid point (d={}, p={}) diverges: {} vs {}",
+            pt.threshold,
+            pt.pinj,
+            pt.total_s,
+            expect.total_s
+        );
+    }
+}
+
+#[test]
+fn optimized_mapping_not_worse_than_baseline() {
+    let c = fast_coordinator();
+    for name in ["zfnet", "googlenet"] {
+        let base = c.prepare(name, false).unwrap();
+        let opt = c.prepare(name, true).unwrap();
+        // SA starts from greedy (not layer-sequential), so compare
+        // against its own initial cost: it must never regress.
+        assert!(
+            opt.wired.total_s <= opt.sa_initial_cost * (1.0 + 1e-9),
+            "{name}: SA regressed"
+        );
+        // And the mapped run is within sane range of the baseline.
+        assert!(opt.wired.total_s <= base.wired.total_s * 3.0);
+    }
+}
+
+#[test]
+fn fig2_and_fig4_compose_for_multiple_workloads() {
+    let c = fast_coordinator();
+    let names = ["googlenet", "resnet50", "lstm"];
+    let prepared: Vec<_> = names
+        .iter()
+        .map(|n| c.prepare(n, false).unwrap())
+        .collect();
+
+    let fig2 = c.fig2(&prepared);
+    assert_eq!(fig2.len(), 3);
+    for (name, shares) in &fig2 {
+        let sum: f64 = shares.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "{name}: shares sum {sum}");
+        assert_eq!(shares[COMP_WIRELESS], 0.0, "{name}: wired baseline");
+    }
+
+    let rt = c.runtime().unwrap();
+    let fig4 = c.fig4(&rt, &prepared).unwrap();
+    assert_eq!(fig4.len(), 3);
+    for row in &fig4 {
+        assert_eq!(row.per_bw.len(), 2);
+        for cell in &row.per_bw {
+            assert!(cell.speedup > 0.99, "{}: {}", row.workload, cell.speedup);
+            assert!(cell.pinj >= 0.10 && cell.pinj <= 0.80);
+            assert!((1..=4).contains(&cell.threshold));
+        }
+    }
+}
+
+#[test]
+fn runtime_backend_report() {
+    // Whatever backend auto() picks must evaluate and count calls.
+    let rt = Runtime::auto(None).unwrap();
+    let input = wisper::runtime::contract::CostModelInput::zeroed();
+    let out = rt.evaluate(&input).unwrap();
+    assert_eq!(out.total.len(), wisper::runtime::contract::NUM_CONFIGS);
+    assert_eq!(rt.calls.get(), 1);
+}
+
+#[test]
+fn config_file_drives_coordinator() {
+    let toml = "[arch]\ngrid_rows = 2\ngrid_cols = 2\n\n[mapper]\nsa_iters = 10\n";
+    let cfg = Config::from_str(toml).unwrap();
+    let c = Coordinator::new(cfg).unwrap();
+    assert_eq!(c.pkg.num_chiplets(), 4);
+    let prep = c.prepare("zfnet", true).unwrap();
+    assert!(prep.wired.total_s > 0.0);
+    for p in &prep.mapping.placements {
+        assert!(p.chiplets.iter().all(|&c| c < 4));
+    }
+}

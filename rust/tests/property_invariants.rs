@@ -1,0 +1,250 @@
+//! Property-based invariants over the whole modelling stack, checked
+//! with the in-house `propcheck` harness against randomized synthetic
+//! workloads, mappings and wireless configurations.
+
+use wisper::arch::{NodeId, Package, Pos};
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::{compact_region, LayerPlacement, Mapping, PARTITIONS};
+use wisper::nop::{xy_route, Flow, NopModel};
+use wisper::sim::cost::{build_tensors, HOP_BUCKETS};
+use wisper::sim::{evaluate_expected, evaluate_wired};
+use wisper::util::propcheck::{ensure, ensure_close, run, Gen};
+use wisper::workloads::builders::synthetic;
+use wisper::workloads::Workload;
+
+fn random_package(g: &mut Gen) -> Package {
+    let mut cfg = ArchConfig::default();
+    cfg.grid = (g.usize_range(2, 4), g.usize_range(2, 4));
+    Package::new(cfg).unwrap()
+}
+
+fn random_workload(g: &mut Gen) -> Workload {
+    synthetic(&wisper::workloads::builders::synthetic_spec(
+        g.usize_range(2, 40),
+        g.f64_range(0.0, 0.8),
+        g.u64_range(0, u64::MAX),
+    ))
+    .unwrap()
+}
+
+fn random_mapping(g: &mut Gen, wl: &Workload, pkg: &Package) -> Mapping {
+    let placements = wl
+        .layers
+        .iter()
+        .map(|_| {
+            let n = g.usize_range(1, pkg.num_chiplets());
+            let r0 = g.usize_range(0, pkg.cfg.grid.0 - 1);
+            let c0 = g.usize_range(0, pkg.cfg.grid.1 - 1);
+            LayerPlacement {
+                chiplets: compact_region(pkg, n, r0, c0),
+                partition: *g.choose(&PARTITIONS),
+            }
+        })
+        .collect();
+    Mapping { placements }
+}
+
+#[test]
+fn xy_route_length_equals_manhattan() {
+    run(300, |g| {
+        let a = Pos {
+            row: g.u64_range(0, 6) as i64,
+            col: g.u64_range(0, 6) as i64,
+        };
+        let b = Pos {
+            row: g.u64_range(0, 6) as i64,
+            col: g.u64_range(0, 6) as i64,
+        };
+        let route = xy_route(a, b);
+        ensure(
+            route.len() as u32 == a.manhattan(&b),
+            "XY route length == Manhattan distance",
+        )?;
+        // Route is connected and ends at b.
+        let mut cur = a;
+        for (f, t) in &route {
+            ensure(*f == cur, "route is connected")?;
+            cur = *t;
+        }
+        ensure(route.is_empty() || cur == b, "route reaches destination")
+    });
+}
+
+#[test]
+fn multicast_tree_never_exceeds_sum_of_unicasts() {
+    run(150, |g| {
+        let pkg = random_package(g);
+        let nop = NopModel::new(pkg.clone());
+        let n_dest = g.usize_range(1, pkg.num_chiplets() - 1);
+        let src = NodeId::Chiplet(g.usize_range(0, pkg.num_chiplets() - 1));
+        let dests: Vec<NodeId> = (0..n_dest)
+            .map(|_| NodeId::Chiplet(g.usize_range(0, pkg.num_chiplets() - 1)))
+            .collect();
+        let vol = g.f64_range(1.0, 1e6);
+        let tree = nop
+            .wired_path(&Flow::multicast(src, dests.clone(), vol))
+            .unwrap();
+        let mut unicast_sum = 0.0;
+        let mut max_hops = 0;
+        for d in &dests {
+            let p = nop.wired_path(&Flow::unicast(src, *d, vol)).unwrap();
+            unicast_sum += p.vol_hops;
+            max_hops = max_hops.max(p.max_hops);
+        }
+        ensure(
+            tree.vol_hops <= unicast_sum + 1e-6,
+            "multicast tree <= sum of unicasts",
+        )?;
+        ensure(tree.max_hops == max_hops, "tree max hops == farthest dest")
+    });
+}
+
+#[test]
+fn eligible_traffic_is_subset_of_nop_traffic() {
+    run(60, |g| {
+        let pkg = random_package(g);
+        let wl = random_workload(g);
+        let m = random_mapping(g, &wl, &pkg);
+        let t = build_tensors(&wl, &m, &pkg, &WirelessConfig::default()).unwrap();
+        for (i, l) in t.layers.iter().enumerate() {
+            let elig: f64 = l.elig_vol_hops.iter().sum();
+            ensure(
+                elig <= l.nop_vol_hops * (1.0 + 1e-9) + 1e-6,
+                &format!("layer {i}: eligible vol.hops within NoP total"),
+            )?;
+            for b in 0..HOP_BUCKETS {
+                ensure(
+                    l.elig_vol[b] >= 0.0 && l.elig_vol_hops[b] >= 0.0,
+                    "buckets non-negative",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wireless_monotonicities() {
+    run(60, |g| {
+        let pkg = random_package(g);
+        let wl = random_workload(g);
+        let m = random_mapping(g, &wl, &pkg);
+        let t = build_tensors(&wl, &m, &pkg, &WirelessConfig::default()).unwrap();
+        let wired = evaluate_wired(&t);
+
+        let base = WirelessConfig {
+            enabled: true,
+            distance_threshold: g.usize_range(1, 4) as u32,
+            injection_prob: g.f64_range(0.05, 0.9),
+            bandwidth_bits: g.f64_range(16e9, 128e9),
+            ..Default::default()
+        };
+
+        // pinj = 0 -> exactly wired.
+        let zero = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                injection_prob: 0.0,
+                ..base.clone()
+            },
+        );
+        ensure_close(zero.total_s, wired.total_s, 1e-9, "pinj=0 == wired")?;
+
+        // Higher wireless bandwidth never hurts.
+        let hi_bw = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                bandwidth_bits: base.bandwidth_bits * 2.0,
+                ..base.clone()
+            },
+        );
+        let cur = evaluate_expected(&t, &base);
+        ensure(
+            hi_bw.total_s <= cur.total_s * (1.0 + 1e-9),
+            "total latency monotone non-increasing in wireless bandwidth",
+        )?;
+
+        // Threshold above the hop range -> wired.
+        let far = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                distance_threshold: HOP_BUCKETS as u32 + 1,
+                ..base.clone()
+            },
+        );
+        ensure_close(far.total_s, wired.total_s, 1e-9, "threshold beyond range == wired")?;
+
+        // Infinite bandwidth floor: offload can only remove NoP time.
+        let inf = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                bandwidth_bits: 1e18,
+                injection_prob: 1.0,
+                distance_threshold: 1,
+                ..base
+            },
+        );
+        ensure(
+            inf.total_s <= wired.total_s * (1.0 + 1e-9),
+            "infinite-bandwidth hybrid never slower than wired",
+        )
+    });
+}
+
+#[test]
+fn shares_always_normalized() {
+    run(60, |g| {
+        let pkg = random_package(g);
+        let wl = random_workload(g);
+        let m = random_mapping(g, &wl, &pkg);
+        let t = build_tensors(&wl, &m, &pkg, &WirelessConfig::default()).unwrap();
+        let w = WirelessConfig {
+            enabled: true,
+            distance_threshold: g.usize_range(1, 8) as u32,
+            injection_prob: g.f64_range(0.0, 1.0),
+            bandwidth_bits: g.f64_range(1e9, 1e12),
+            ..Default::default()
+        };
+        let r = evaluate_expected(&t, &w);
+        if r.total_s > 0.0 {
+            let sum: f64 = r.shares.iter().sum();
+            ensure_close(sum, 1.0, 1e-9, "bottleneck shares sum to 1")?;
+        }
+        ensure(r.wl_bits >= 0.0, "offloaded volume non-negative")
+    });
+}
+
+#[test]
+fn stochastic_converges_to_expected_from_above() {
+    // Smaller case count: each case runs several stochastic seeds.
+    run(8, |g| {
+        let pkg = Package::new(ArchConfig::default()).unwrap();
+        let wl = random_workload(g);
+        let m = random_mapping(g, &wl, &pkg);
+        let w = WirelessConfig {
+            enabled: true,
+            distance_threshold: g.usize_range(1, 3) as u32,
+            injection_prob: g.f64_range(0.2, 0.7),
+            bandwidth_bits: 64e9,
+            ..Default::default()
+        };
+        let t = build_tensors(&wl, &m, &pkg, &w).unwrap();
+        let expected = evaluate_expected(&t, &w);
+        let mut acc = 0.0;
+        let seeds = 6;
+        for s in 0..seeds {
+            acc += wisper::sim::stochastic::simulate(&wl, &m, &pkg, &w, s)
+                .unwrap()
+                .total_s;
+        }
+        let mean = acc / seeds as f64;
+        ensure(
+            mean >= expected.total_s * 0.995,
+            "expected-value model lower-bounds the stochastic mean",
+        )?;
+        ensure(
+            (mean - expected.total_s) / expected.total_s.max(1e-30) < 0.25,
+            "stochastic mean within 25% of expectation",
+        )
+    });
+}

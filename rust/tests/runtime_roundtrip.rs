@@ -1,0 +1,135 @@
+//! The interchange contract: the AOT artifact (jax/pallas -> HLO text ->
+//! PJRT) must compute exactly what the native Rust twin computes.
+//!
+//! Requires `make artifacts`; tests auto-skip (with a loud note) when
+//! the artifact has not been built.
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::runtime::{contract::*, find_artifact, native, pack_input, Backend, Runtime};
+use wisper::util::rng::Pcg32;
+
+fn pjrt() -> Option<Runtime> {
+    let path = find_artifact(None)?;
+    let rt = Runtime::load(&path).expect("artifact exists but failed to load");
+    assert_eq!(rt.backend(), Backend::Pjrt);
+    Some(rt)
+}
+
+fn random_input(seed: u64) -> CostModelInput {
+    let mut rng = Pcg32::seeded(seed);
+    let mut input = CostModelInput::zeroed();
+    for l in 0..200 {
+        input.t_comp[l] = rng.range_f64(0.0, 1e-5) as f32;
+        input.t_dram[l] = rng.range_f64(0.0, 1e-5) as f32;
+        input.t_noc[l] = rng.range_f64(0.0, 1e-5) as f32;
+        let vh = rng.range_f64(0.0, 1e7);
+        input.nop_vh[l] = vh as f32;
+        let mut remaining = vh * rng.next_f64();
+        for h in 0..HOP_BUCKETS {
+            let take = remaining * rng.next_f64() * 0.5;
+            input.elig_vh[l * HOP_BUCKETS + h] = take as f32;
+            input.elig_v[l * HOP_BUCKETS + h] = (take / (h + 1) as f64) as f32;
+            remaining -= take;
+        }
+    }
+    for c in 0..NUM_CONFIGS {
+        input.thresh[c] = (1 + (c % 4)) as f32;
+        input.pinj[c] = 0.10 + 0.05 * (c % 15) as f32;
+        input.wl_bw[c] = if c % 2 == 0 { 64e9 } else { 96e9 };
+    }
+    input.nop_bw = 5.12e11;
+    input
+}
+
+fn assert_outputs_close(a: &CostModelOutput, b: &CostModelOutput) {
+    let close = |x: f32, y: f32, what: &str| {
+        let scale = x.abs().max(y.abs()).max(1e-20);
+        assert!(
+            (x - y).abs() / scale < 2e-4,
+            "{what}: pjrt {x} vs native {y}"
+        );
+    };
+    close(a.t_wired, b.t_wired, "t_wired");
+    for c in 0..NUM_CONFIGS {
+        close(a.total[c], b.total[c], &format!("total[{c}]"));
+        close(a.wl_vol[c], b.wl_vol[c], &format!("wl_vol[{c}]"));
+        close(a.speedup[c], b.speedup[c], &format!("speedup[{c}]"));
+        // Bottleneck attribution: the argmax flips between the f32
+        // artifact and the f64 native twin when two components are
+        // within epsilon of each other (e.g. a config sitting exactly on
+        // the NoP/wireless balance point), so shares get an absolute
+        // tolerance; the per-config share vector must still be close in
+        // L1 and sum to 1.
+        let mut l1 = 0.0f32;
+        for k in 0..NUM_COMPONENTS {
+            l1 += (a.share(c, k) - b.share(c, k)).abs();
+        }
+        assert!(l1 < 0.12, "share[{c}] L1 distance {l1}");
+        let sum: f32 = (0..NUM_COMPONENTS).map(|k| a.share(c, k)).sum();
+        if a.total[c] > 0.0 {
+            assert!((sum - 1.0).abs() < 1e-3, "share[{c}] sum {sum}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_artifact_matches_native_twin_on_random_inputs() {
+    let Some(rt) = pjrt() else {
+        eprintln!("SKIP: artifacts/model.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    for seed in [1u64, 7, 42] {
+        let input = random_input(seed);
+        let got = rt.evaluate(&input).unwrap();
+        let want = native::evaluate(&input);
+        assert_outputs_close(&got, &want);
+    }
+}
+
+#[test]
+fn pjrt_artifact_matches_native_on_real_workload_tensors() {
+    let Some(rt) = pjrt() else {
+        eprintln!("SKIP: artifacts/model.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 40;
+    let coord = Coordinator::new(cfg).unwrap();
+    for name in ["googlenet", "zfnet", "transformer_cell"] {
+        let prep = coord.prepare(name, true).unwrap();
+        let configs: Vec<(u32, f64, f64)> = (0..NUM_CONFIGS)
+            .map(|i| (1 + (i as u32 % 4), 0.10 + 0.05 * (i % 15) as f64, 64e9))
+            .collect();
+        let input = pack_input(&prep.tensors, &configs).unwrap();
+        let got = rt.evaluate(&input).unwrap();
+        let want = native::evaluate(&input);
+        assert_outputs_close(&got, &want);
+    }
+}
+
+#[test]
+fn artifact_zero_input_is_quiet() {
+    let Some(rt) = pjrt() else {
+        eprintln!("SKIP: artifacts/model.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    let out = rt.evaluate(&CostModelInput::zeroed()).unwrap();
+    assert_eq!(out.t_wired, 0.0);
+    assert!(out.total.iter().all(|&t| t == 0.0));
+    assert!(out.wl_vol.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn repeated_execution_is_stable() {
+    let Some(rt) = pjrt() else {
+        eprintln!("SKIP: artifacts/model.hlo.txt not built (run `make artifacts`)");
+        return;
+    };
+    let input = random_input(99);
+    let a = rt.evaluate(&input).unwrap();
+    let b = rt.evaluate(&input).unwrap();
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.shares, b.shares);
+    assert_eq!(rt.calls.get(), 2);
+}
