@@ -1,0 +1,998 @@
+"""Python mirror of the wisper Rust cost pipeline (offline calibration).
+
+CAUTION: this mirrors rust/src (arch, mapping, traffic, nop, cost, sim,
+SA with bit-exact Pcg32, and workloads/builders.rs) in Python so the
+repo's quantitative test assertions can be checked without a Rust
+toolchain. If you change the Rust cost pipeline or the workload
+builders, update this mirror in the same PR or its verdicts are stale.
+"""
+import math
+from functools import lru_cache
+
+M64 = (1 << 64) - 1
+M32 = (1 << 32) - 1
+
+# ---------------------------------------------------------------- rng
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+
+def ror32(x, r):
+    r &= 31
+    return ((x >> r) | (x << (32 - r))) & M32
+
+
+class Pcg32:
+    def __init__(self, seed, stream):
+        self.inc = ((stream << 1) | 1) & M64
+        self.state = 0
+        self.next_u32()
+        self.state = (self.state + seed) & M64
+        self.next_u32()
+
+    @classmethod
+    def seeded(cls, seed):
+        sm = SplitMix64(seed)
+        s = sm.next_u64()
+        inc = sm.next_u64()
+        return cls(s, inc)
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * 6364136223846793005 + self.inc) & M64
+        xorshifted = (((old >> 18) ^ old) >> 27) & M32
+        rot = old >> 59
+        return ror32(xorshifted, rot)
+
+    def next_f64(self):
+        return self.next_u32() / 4294967296.0
+
+    def coin(self, p):
+        return self.next_f64() < p
+
+    def below(self, n):
+        return (self.next_u32() * n) >> 32
+
+    def range_f64(self, lo, hi):
+        return lo + self.next_f64() * (hi - lo)
+
+# ---------------------------------------------------------------- arch
+
+class Arch:
+    def __init__(self):
+        self.grid = (3, 3)
+        self.pe_grid = (16, 16)
+        self.macs_per_pe = 32
+        self.freq_hz = 1.0e9
+        self.dram_chiplets = 4
+        self.dram_bw_bytes = 16.0e9
+        self.nop_link_bw_bits = 32.0e9
+        self.noc_link_bw_bits = 64.0e9
+        self.datum_bits = 8
+        self.batch = 16
+        self.sram_bytes = 4 << 20
+
+    def num_chiplets(self):
+        return self.grid[0] * self.grid[1]
+
+    def chiplet_macs_per_s(self):
+        return self.pe_grid[0] * self.pe_grid[1] * self.macs_per_pe * self.freq_hz
+
+
+# NodeId: ('c', i) or ('d', i)
+
+class Package:
+    def __init__(self, cfg=None):
+        self.cfg = cfg or Arch()
+        rows, cols = self.cfg.grid
+        self.positions = {}
+        for r in range(rows):
+            for c in range(cols):
+                self.positions[('c', r * cols + c)] = (r + 1, c + 1)
+        sides = ['N', 'S', 'W', 'E']
+        for d in range(self.cfg.dram_chiplets):
+            side = sides[d]
+            if side == 'N':
+                pos = (0, (cols + 1) // 2)
+            elif side == 'S':
+                pos = (rows + 1, (cols + 1) // 2)
+            elif side == 'W':
+                pos = ((rows + 1) // 2, 0)
+            else:
+                pos = ((rows + 1) // 2, cols + 1)
+            self.positions[('d', d)] = pos
+        self._home = {}
+        self._tree_cache = {}
+
+    def num_chiplets(self):
+        return self.cfg.num_chiplets()
+
+    def nop_links(self):
+        links = 0
+        items = list(self.positions.items())
+        for a, pa in items:
+            for b, pb in items:
+                if a == b:
+                    continue
+                if a[0] == 'd' and b[0] == 'd':
+                    continue
+                if abs(pa[0] - pb[0]) + abs(pa[1] - pb[1]) == 1:
+                    links += 1
+        return links
+
+    def nop_aggregate_bw(self):
+        return self.nop_links() * self.cfg.nop_link_bw_bits
+
+    def noc_aggregate_bw(self):
+        pr, pc = self.cfg.pe_grid
+        und = pr * (pc - 1) + pc * (pr - 1)
+        return und * 2 * self.cfg.noc_link_bw_bits
+
+    def home_dram(self, chiplet):
+        if chiplet in self._home:
+            return self._home[chiplet]
+        cpos = self.positions[('c', chiplet)]
+        best = (1 << 32, 0)
+        for d in range(self.cfg.dram_chiplets):
+            dp = self.positions[('d', d)]
+            hops = abs(cpos[0] - dp[0]) + abs(cpos[1] - dp[1])
+            if hops < best[0]:
+                best = (hops, d)
+        self._home[chiplet] = ('d', best[1])
+        return self._home[chiplet]
+
+
+def xy_route(a, b):
+    links = []
+    cur = a
+    while cur[1] != b[1]:
+        step = 1 if b[1] > cur[1] else -1
+        nxt = (cur[0], cur[1] + step)
+        links.append((cur, nxt))
+        cur = nxt
+    while cur[0] != b[0]:
+        step = 1 if b[0] > cur[0] else -1
+        nxt = (cur[0] + step, cur[1])
+        links.append((cur, nxt))
+        cur = nxt
+    return links
+
+
+def wired_path(pkg, flow):
+    # flow: (src, dests tuple, vol_bits, multicast)
+    src, dests, vol, mc = flow
+    if not dests or vol <= 0.0:
+        return 0.0, 0
+    sp = pkg.positions[src]
+    max_hops = 0
+    if mc and len(dests) > 1:
+        key = (src, dests)
+        cached = pkg._tree_cache.get(key)
+        if cached is None:
+            tree = set()
+            mh = 0
+            for d in dests:
+                dp = pkg.positions[d]
+                mh = max(mh, abs(sp[0] - dp[0]) + abs(sp[1] - dp[1]))
+                for l in xy_route(sp, dp):
+                    tree.add(l)
+            cached = (len(tree), mh)
+            pkg._tree_cache[key] = cached
+        nlinks, max_hops = cached
+        return nlinks * vol, max_hops
+    else:
+        shard = vol / len(dests)
+        acc = 0.0
+        for d in dests:
+            dp = pkg.positions[d]
+            hops = abs(sp[0] - dp[0]) + abs(sp[1] - dp[1])
+            max_hops = max(max_hops, hops)
+            acc += shard * hops
+        return acc, max_hops
+
+# ---------------------------------------------------------------- workloads
+
+UTIL = {
+    'Conv': 0.85, 'DepthwiseConv': 0.30, 'Fc': 0.75, 'Attention': 0.70,
+    'Recurrent': 0.65, 'Pool': 0.25, 'Softmax': 0.25, 'Norm': 0.25,
+    'EltwiseAdd': 0.20, 'Concat': 0.20, 'Embedding': 0.10,
+}
+
+
+class Layer:
+    __slots__ = ('name', 'kind', 'macs', 'weight', 'out', 'inputs')
+
+    def __init__(self, name, kind, macs, weight, out, inputs):
+        self.name = name
+        self.kind = kind
+        self.macs = max(macs, 1)
+        self.weight = weight
+        self.out = max(out, 1)
+        self.inputs = inputs
+
+
+class Workload:
+    def __init__(self, name, layers):
+        self.name = name
+        self.layers = layers
+        for i, l in enumerate(layers):
+            for p in l.inputs:
+                assert p < i, f"{name}: layer {i} bad input {p}"
+        assert layers
+
+    def consumers(self):
+        out = [[] for _ in self.layers]
+        for i, l in enumerate(self.layers):
+            for p in l.inputs:
+                out[p].append(i)
+        return out
+
+    def total_macs(self):
+        return sum(l.macs for l in self.layers)
+
+    def total_weight_datums(self):
+        return sum(l.weight for l in self.layers)
+
+    def branch_fraction(self):
+        cons = self.consumers()
+        return sum(1 for c in cons if len(c) > 1) / len(self.layers)
+
+    def in_datums(self, i):
+        l = self.layers[i]
+        if not l.inputs:
+            return l.out
+        return sum(self.layers[p].out for p in l.inputs)
+
+
+class Net:
+    def __init__(self):
+        self.layers = []
+
+    def last(self):
+        return len(self.layers) - 1
+
+    def push(self, name, kind, macs, weight, out, inputs):
+        self.layers.append(Layer(name, kind, macs, weight, out, inputs))
+        return self.last()
+
+    def conv(self, name, hw, cout, k, cin, inputs):
+        out = hw * hw * cout
+        weight = k * k * cin * cout
+        return self.push(name, 'Conv', out * k * k * cin, weight, out, inputs)
+
+    def dwconv(self, name, hw, c, k, inp):
+        out = hw * hw * c
+        return self.push(name, 'DepthwiseConv', out * k * k, k * k * c, out, [inp])
+
+    def fc(self, name, cin, cout, inputs):
+        return self.push(name, 'Fc', cin * cout, cin * cout, cout, inputs)
+
+    def pool(self, name, hw, c, inp):
+        out = hw * hw * c
+        return self.push(name, 'Pool', out, 0, out, [inp])
+
+    def add(self, name, datums, inputs):
+        return self.push(name, 'EltwiseAdd', datums, 0, datums, inputs)
+
+    def concat(self, name, datums, inputs):
+        return self.push(name, 'Concat', datums, 0, datums, inputs)
+
+    def cell(self, name, x, h, inputs):
+        weight = 4 * h * (x + h)
+        return self.push(name, 'Recurrent', weight, weight, h, inputs)
+
+    def wl(self, name):
+        return Workload(name, self.layers)
+
+
+def zfnet():
+    n = Net()
+    c1 = n.conv("conv1", 55, 96, 7, 3, [])
+    p1 = n.pool("pool1", 27, 96, c1)
+    c2 = n.conv("conv2", 13, 256, 5, 96, [p1])
+    p2 = n.pool("pool2", 13, 256, c2)
+    c3 = n.conv("conv3", 13, 384, 3, 256, [p2])
+    c4 = n.conv("conv4", 13, 384, 3, 384, [c3])
+    c5 = n.conv("conv5", 13, 256, 3, 384, [c4])
+    p5 = n.pool("pool5", 6, 256, c5)
+    f6 = n.fc("fc6", 6 * 6 * 256, 4096, [p5])
+    f7 = n.fc("fc7", 4096, 4096, [f6])
+    n.fc("fc8", 4096, 1000, [f7])
+    return n.wl("zfnet")
+
+
+def alexnet():
+    n = Net()
+    c1 = n.conv("conv1", 55, 96, 11, 3, [])
+    p1 = n.pool("pool1", 27, 96, c1)
+    c2 = n.conv("conv2", 27, 256, 5, 48, [p1])
+    p2 = n.pool("pool2", 13, 256, c2)
+    c3 = n.conv("conv3", 13, 384, 3, 256, [p2])
+    c4 = n.conv("conv4", 13, 384, 3, 192, [c3])
+    c5 = n.conv("conv5", 13, 256, 3, 192, [c4])
+    p5 = n.pool("pool5", 6, 256, c5)
+    f6 = n.fc("fc6", 6 * 6 * 256, 4096, [p5])
+    f7 = n.fc("fc7", 4096, 4096, [f6])
+    n.fc("fc8", 4096, 1000, [f7])
+    return n.wl("alexnet")
+
+
+def vgg():
+    n = Net()
+    c11 = n.conv("conv1_1", 112, 64, 3, 3, [])
+    c12 = n.conv("conv1_2", 112, 64, 3, 64, [c11])
+    p1 = n.pool("pool1", 56, 64, c12)
+    c21 = n.conv("conv2_1", 56, 128, 3, 64, [p1])
+    c22 = n.conv("conv2_2", 56, 128, 3, 128, [c21])
+    p2 = n.pool("pool2", 28, 128, c22)
+    c31 = n.conv("conv3_1", 28, 256, 3, 128, [p2])
+    c32 = n.conv("conv3_2", 28, 256, 3, 256, [c31])
+    c33 = n.conv("conv3_3", 28, 256, 3, 256, [c32])
+    p3 = n.pool("pool3", 14, 256, c33)
+    c41 = n.conv("conv4_1", 14, 512, 3, 256, [p3])
+    c42 = n.conv("conv4_2", 14, 512, 3, 512, [c41])
+    c43 = n.conv("conv4_3", 14, 512, 3, 512, [c42])
+    p4 = n.pool("pool4", 7, 512, c43)
+    c51 = n.conv("conv5_1", 7, 512, 3, 512, [p4])
+    c52 = n.conv("conv5_2", 7, 512, 3, 512, [c51])
+    c53 = n.conv("conv5_3", 7, 512, 3, 512, [c52])
+    p5 = n.pool("pool5", 7, 256, c53)
+    f6 = n.fc("fc6", 7 * 7 * 256, 4096, [p5])
+    f7 = n.fc("fc7", 4096, 4096, [f6])
+    n.fc("fc8", 4096, 1000, [f7])
+    return n.wl("vgg")
+
+
+def darknet19():
+    n = Net()
+    c1 = n.conv("conv1", 112, 32, 3, 3, [])
+    p1 = n.pool("pool1", 56, 32, c1)
+    c2 = n.conv("conv2", 56, 64, 3, 32, [p1])
+    p2 = n.pool("pool2", 28, 64, c2)
+    c3 = n.conv("conv3", 28, 128, 3, 64, [p2])
+    c4 = n.conv("conv4", 28, 64, 1, 128, [c3])
+    c5 = n.conv("conv5", 28, 128, 3, 64, [c4])
+    p3 = n.pool("pool3", 14, 128, c5)
+    c6 = n.conv("conv6", 14, 256, 3, 128, [p3])
+    c7 = n.conv("conv7", 14, 128, 1, 256, [c6])
+    c8 = n.conv("conv8", 14, 256, 3, 128, [c7])
+    p4 = n.pool("pool4", 7, 256, c8)
+    c9 = n.conv("conv9", 7, 512, 3, 256, [p4])
+    c10 = n.conv("conv10", 7, 256, 1, 512, [c9])
+    c11 = n.conv("conv11", 7, 512, 3, 256, [c10])
+    c12 = n.conv("conv12", 7, 256, 1, 512, [c11])
+    c13 = n.conv("conv13", 7, 512, 3, 256, [c12])
+    p5 = n.pool("pool5", 4, 512, c13)
+    c14 = n.conv("conv14", 4, 1024, 3, 512, [p5])
+    c15 = n.conv("conv15", 4, 512, 1, 1024, [c14])
+    c16 = n.conv("conv16", 4, 1024, 3, 512, [c15])
+    c17 = n.conv("conv17", 4, 512, 1, 1024, [c16])
+    c18 = n.conv("conv18", 4, 1024, 3, 512, [c17])
+    c19 = n.conv("conv19", 4, 1000, 1, 1024, [c18])
+    n.pool("avgpool", 1, 1000, c19)
+    return n.wl("darknet19")
+
+
+def googlenet():
+    n = Net()
+    c1 = n.conv("conv1", 112, 64, 7, 3, [])
+    p1 = n.pool("pool1", 56, 64, c1)
+    c2r = n.conv("conv2r", 56, 64, 1, 64, [p1])
+    c2 = n.conv("conv2", 56, 192, 3, 64, [c2r])
+    p2 = n.pool("pool2", 28, 192, c2)
+    modules = [
+        ("3a", 28, [64, 96, 128, 16, 32, 32]),
+        ("3b", 28, [128, 128, 192, 32, 96, 64]),
+        ("4a", 14, [192, 96, 208, 16, 48, 64]),
+        ("4b", 14, [160, 112, 224, 24, 64, 64]),
+        ("4c", 14, [128, 128, 256, 24, 64, 64]),
+        ("4d", 14, [112, 144, 288, 32, 64, 64]),
+        ("4e", 14, [256, 160, 320, 32, 128, 128]),
+        ("5a", 7, [256, 160, 320, 32, 128, 128]),
+        ("5b", 7, [384, 192, 384, 48, 128, 128]),
+    ]
+    prev = p2
+    cin = 192
+    for tag, hw, (b1, b2r, b2, b3r, b3, bp) in modules:
+        l1 = n.conv(f"inc{tag}_1x1", hw, b1, 1, cin, [prev])
+        l2r = n.conv(f"inc{tag}_3x3r", hw, b2r, 1, cin, [prev])
+        l2 = n.conv(f"inc{tag}_3x3", hw, b2, 3, b2r, [l2r])
+        l3r = n.conv(f"inc{tag}_5x5r", hw, b3r, 1, cin, [prev])
+        l3 = n.conv(f"inc{tag}_5x5", hw, b3, 5, b3r, [l3r])
+        lp = n.pool(f"inc{tag}_pool", hw, cin, prev)
+        lpp = n.conv(f"inc{tag}_proj", hw, bp, 1, cin, [lp])
+        cin = b1 + b2 + b3 + bp
+        prev = n.concat(f"inc{tag}_cat", hw * hw * cin, [l1, l2, l3, lpp])
+    gap = n.pool("avgpool", 1, cin, prev)
+    n.fc("fc", cin, 1000, [gap])
+    return n.wl("googlenet")
+
+
+def densenet():
+    n = Net()
+    growth = 32
+    c1 = n.conv("conv1", 28, 64, 7, 3, [])
+    prev = n.pool("pool1", 14, 64, c1)
+    channels = 64
+    hw = 14
+    for bi, block_layers in enumerate([6, 12, 24, 16]):
+        front = prev
+        for li in range(block_layers):
+            b = n.conv(f"d{bi}_{li}_bottleneck", hw, 4 * growth, 1, channels, [front])
+            c = n.conv(f"d{bi}_{li}_conv", hw, growth, 3, 4 * growth, [b])
+            channels += growth
+            front = n.concat(f"d{bi}_{li}_cat", hw * hw * channels, [front, c])
+        prev = front
+        if bi < 3:
+            channels //= 2
+            t = n.conv(f"trans{bi}", hw, channels, 1, channels * 2, [prev])
+            hw //= 2
+            prev = n.pool(f"trans{bi}_pool", hw, channels, t)
+    gap = n.pool("avgpool", 1, channels, prev)
+    n.fc("fc", channels, 1000, [gap])
+    return n.wl("densenet")
+
+
+def resnet(depth):
+    blocks = [3, 4, 6, 3] if depth == 50 else [3, 8, 36, 3]
+    n = Net()
+    c1 = n.conv("conv1", 28, 64, 7, 3, [])
+    prev = n.pool("pool1", 14, 64, c1)
+    cin = 64
+    hw = 14
+    for si, nblocks in enumerate(blocks):
+        width = 64 << si
+        cout = width * 4
+        for b in range(nblocks):
+            if si > 0 and b == 0:
+                hw //= 2
+            if cin != cout:
+                skip = n.conv(f"s{si}b{b}_down", hw, cout, 1, cin, [prev])
+            else:
+                skip = prev
+            r = n.conv(f"s{si}b{b}_1x1a", hw, width, 1, cin, [prev])
+            c = n.conv(f"s{si}b{b}_3x3", hw, width, 3, width, [r])
+            e = n.conv(f"s{si}b{b}_1x1b", hw, cout, 1, width, [c])
+            prev = n.add(f"s{si}b{b}_add", hw * hw * cout, [skip, e])
+            cin = cout
+    gap = n.pool("avgpool", 1, cin, prev)
+    n.fc("fc", cin, 1000, [gap])
+    return n.wl(f"resnet{depth}")
+
+
+def resnext50():
+    n = Net()
+    c1 = n.conv("conv1", 28, 64, 7, 3, [])
+    prev = n.pool("pool1", 14, 64, c1)
+    cin = 64
+    hw = 14
+    for si, nblocks in enumerate([3, 4, 6, 3]):
+        width = 128 << si
+        cout = 256 << si
+        for b in range(nblocks):
+            if si > 0 and b == 0:
+                hw //= 2
+            if cin != cout:
+                skip = n.conv(f"s{si}b{b}_down", hw, cout, 1, cin, [prev])
+            else:
+                skip = prev
+            r = n.conv(f"s{si}b{b}_1x1a", hw, width, 1, cin, [prev])
+            g_out = hw * hw * width
+            g_w = 3 * 3 * width * width // 32
+            g = n.push(f"s{si}b{b}_g3x3", 'Conv', g_out * 9 * width // 32, g_w, g_out, [r])
+            e = n.conv(f"s{si}b{b}_1x1b", hw, cout, 1, width, [g])
+            prev = n.add(f"s{si}b{b}_add", hw * hw * cout, [skip, e])
+            cin = cout
+    gap = n.pool("avgpool", 1, cin, prev)
+    n.fc("fc", cin, 1000, [gap])
+    return n.wl("resnext50")
+
+
+def mobilenet():
+    n = Net()
+    prev = n.conv("conv1", 56, 32, 3, 3, [])
+    cin = 32
+    hw = 56
+    cfg = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+           (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    idx = 0
+    for t, cout, reps, stride in cfg:
+        for r in range(reps):
+            s = stride if r == 0 else 1
+            if s == 2:
+                hw //= 2
+            hidden = cin * t
+            e = n.conv(f"b{idx}_expand", hw, hidden, 1, cin, [prev]) if t > 1 else prev
+            d = n.dwconv(f"b{idx}_dw", hw, hidden, 3, e)
+            p = n.conv(f"b{idx}_project", hw, cout, 1, hidden, [d])
+            if s == 1 and cin == cout:
+                prev = n.add(f"b{idx}_add", hw * hw * cout, [prev, p])
+            else:
+                prev = p
+            cin = cout
+            idx += 1
+    head = n.conv("conv_head", hw, 1280, 1, cin, [prev])
+    gap = n.pool("avgpool", 1, 1280, head)
+    n.fc("fc", 1280, 1000, [gap])
+    return n.wl("mobilenet")
+
+
+def pnasnet():
+    n = Net()
+    stem = n.conv("stem", 28, 96, 3, 3, [])
+    prev2 = stem
+    prev1 = n.conv("stem2", 14, 128, 3, 96, [stem])
+    hw = 14
+    c = 128
+    for cell in range(6):
+        if cell in (2, 4):
+            hw //= 2
+            c *= 2
+        outs = []
+        for br in range(5):
+            a_in = prev1 if br % 2 == 0 else prev2
+            b_in = prev2 if br % 2 == 0 else prev1
+            a = n.dwconv(f"c{cell}_b{br}_sep", hw, c, 5, a_in)
+            ap = n.conv(f"c{cell}_b{br}_pw", hw, c // 4, 1, c, [a])
+            b = n.conv(f"c{cell}_b{br}_1x1", hw, c // 4, 1, c, [b_in])
+            outs.append(n.add(f"c{cell}_b{br}_join", hw * hw * c // 4, [ap, b]))
+        cat = n.concat(f"c{cell}_cat", hw * hw * (c // 4) * 5, outs)
+        prev2 = prev1
+        prev1 = n.conv(f"c{cell}_squeeze", hw, c, 1, (c // 4) * 5, [cat])
+    gap = n.pool("avgpool", 1, c, prev1)
+    n.fc("fc", c, 1000, [gap])
+    return n.wl("pnasnet")
+
+
+def lstm():
+    n = Net()
+    h = 1024
+    emb = n.push("embed", 'Embedding', h, 32000 * h // 64, h, [])
+    prev = emb
+    for t in range(20):
+        c1 = n.cell(f"t{t}_l0", h, h, [prev])
+        c2 = n.cell(f"t{t}_l1", h, h, [c1])
+        prev = c2
+    n.fc("logits", h, 32000 // 8, [prev])
+    return n.wl("lstm")
+
+
+def gnmt():
+    n = Net()
+    h = 512
+    enc_steps, dec_steps = 20, 23
+    emb = n.push("embed", 'Embedding', h, 32000 * h // 64, h, [])
+    carry = emb
+    for t in range(enc_steps):
+        x = carry
+        for l in range(8):
+            x = n.cell(f"enc_t{t}_l{l}", h, h, [x])
+        carry = x
+    for t in range(dec_steps):
+        att = n.push(f"dec_t{t}_att", 'Attention', enc_steps * h * 2, h * h // 4, h, [carry])
+        x = att
+        for l in range(8):
+            x = n.cell(f"dec_t{t}_l{l}", h, h, [x])
+        carry = x
+    n.fc("logits", h, 32000 // 8, [carry])
+    return n.wl("gnmt")
+
+
+def transformer():
+    n = Net()
+    seq, d, ffn = 64, 1024, 4096
+    tok = seq * d
+    emb = n.push("embed", 'Embedding', tok, 32000 * d // 64, tok, [])
+    prev = emb
+    for b in range(6):
+        qkv = n.push(f"blk{b}_qkv", 'Fc', seq * d * 3 * d, 3 * d * d, 3 * tok, [prev])
+        att = n.push(f"blk{b}_attn", 'Attention', seq * seq * d * 2, 0, tok, [qkv])
+        proj = n.push(f"blk{b}_proj", 'Fc', seq * d * d, d * d, tok, [att])
+        add1 = n.add(f"blk{b}_add1", tok, [prev, proj])
+        norm1 = n.push(f"blk{b}_norm1", 'Norm', tok, 0, tok, [add1])
+        f1 = n.push(f"blk{b}_ffn1", 'Fc', seq * d * ffn, d * ffn, seq * ffn, [norm1])
+        f2 = n.push(f"blk{b}_ffn2", 'Fc', seq * ffn * d, ffn * d, tok, [f1])
+        add2 = n.add(f"blk{b}_add2", tok, [norm1, f2])
+        prev = n.push(f"blk{b}_norm2", 'Norm', tok, 0, tok, [add2])
+    n.fc("logits", d, 32000 // 8, [prev])
+    return n.wl("transformer")
+
+
+def transformer_cell():
+    n = Net()
+    seq, d, ffn = 128, 512, 2048
+    tok = seq * d
+    inp = n.push("input", 'Norm', tok, 0, tok, [])
+    qkv = n.push("qkv", 'Fc', seq * d * 3 * d, 3 * d * d, 3 * tok, [inp])
+    att = n.push("attn", 'Attention', seq * seq * d * 2, 0, tok, [qkv])
+    proj = n.push("proj", 'Fc', seq * d * d, d * d, tok, [att])
+    add1 = n.add("add1", tok, [inp, proj])
+    norm1 = n.push("norm1", 'Norm', tok, 0, tok, [add1])
+    f1 = n.push("ffn1", 'Fc', seq * d * ffn, d * ffn, seq * ffn, [norm1])
+    f2 = n.push("ffn2", 'Fc', seq * ffn * d, ffn * d, tok, [f1])
+    add2 = n.add("add2", tok, [norm1, f2])
+    n.push("norm2", 'Norm', tok, 0, tok, [add2])
+    return n.wl("transformer_cell")
+
+
+BUILDERS = {
+    "alexnet": alexnet, "darknet19": darknet19, "densenet": densenet,
+    "gnmt": gnmt, "googlenet": googlenet, "lstm": lstm,
+    "mobilenet": mobilenet, "pnasnet": pnasnet,
+    "resnet50": lambda: resnet(50), "resnet152": lambda: resnet(152),
+    "resnext50": resnext50, "transformer": transformer,
+    "transformer_cell": transformer_cell, "vgg": vgg, "zfnet": zfnet,
+}
+WORKLOAD_NAMES = sorted(BUILDERS)
+
+
+def build(name):
+    return BUILDERS[name]()
+
+# ---------------------------------------------------------------- mapping
+
+OC, SP, IC = 'OutputChannel', 'Spatial', 'InputChannel'
+PARTITIONS = [OC, SP, IC]
+
+
+def default_partition(weight, out):
+    return OC if weight > out else SP
+
+
+def compact_region(pkg, nn, r0, c0):
+    rows, cols = pkg.cfg.grid
+    nn = min(max(nn, 1), rows * cols)
+    best = (1, nn)
+    best_score = 1 << 62
+    for h in range(1, rows + 1):
+        w = -(-nn // h)
+        if w <= cols:
+            score = (h * w - nn) * 10 + abs(h - w)
+            if score < best_score:
+                best_score = score
+                best = (h, w)
+    h, w = best
+    r0 = min(r0, rows - h)
+    c0 = min(c0, cols - w)
+    out = []
+    for r in range(r0, r0 + h):
+        for c in range(c0, c0 + w):
+            out.append(r * cols + c)
+            if len(out) == nn:
+                return out
+    return out
+
+
+def layer_sequential(wl, pkg):
+    allc = list(range(pkg.num_chiplets()))
+    return [(list(allc), default_partition(l.weight, l.out)) for l in wl.layers]
+
+
+def greedy_sized(wl, pkg):
+    total = pkg.num_chiplets()
+    max_macs = max(max((l.macs for l in wl.layers), default=1), 1)
+    anchor = 0
+    rows, cols = pkg.cfg.grid
+    placements = []
+    for l in wl.layers:
+        frac = l.macs / max_macs
+        nn = min(max(int(math.ceil(frac * total)), 1), total)
+        r0 = (anchor // cols) % rows
+        c0 = anchor % cols
+        anchor = (anchor + nn) % total
+        placements.append((compact_region(pkg, nn, r0, c0), default_partition(l.weight, l.out)))
+    return placements
+
+# ---------------------------------------------------------------- traffic
+
+WEIGHT_SRAM_FRACTION = 0.75
+NOC_HOTSPOT_FACTOR = 4.0
+NOP_CONGESTION_FACTOR = 2.0
+HOP_BUCKETS = 8
+
+
+def plan_weight_residency(wl, mapping, pkg):
+    datum_bits = float(pkg.cfg.datum_bits)
+    budget = pkg.num_chiplets() * pkg.cfg.sram_bytes * 8.0 * WEIGHT_SRAM_FRACTION
+
+    def footprint(i):
+        bits = wl.layers[i].weight * datum_bits
+        if mapping[i][1] == SP:
+            return bits * len(mapping[i][0])
+        return bits
+
+    order = sorted(range(len(wl.layers)), key=footprint)
+    resident = [False] * len(wl.layers)
+    used = 0.0
+    for i in order:
+        bits = footprint(i)
+        if bits == 0.0:
+            continue
+        if used + bits <= budget:
+            used += bits
+            resident[i] = True
+    return resident
+
+
+def characterize(wl, mapping, pkg):
+    consumers = wl.consumers()
+    datum_bits = float(pkg.cfg.datum_bits)
+    resident = plan_weight_residency(wl, mapping, pkg)
+    out = []
+    for i, layer in enumerate(wl.layers):
+        region, part = mapping[i]
+        nch = len(region)
+        flows = []
+        dram_bits = 0.0
+        home = pkg.home_dram(region[0])
+        homes = sorted(set(pkg.home_dram(c) for c in region))
+        dram_ports = len(homes)
+        weight_bits = layer.weight * datum_bits
+        out_bits = layer.out * datum_bits
+
+        if weight_bits > 0.0 and not resident[i]:
+            w_bits = weight_bits / max(pkg.cfg.batch, 1)
+            dram_bits += w_bits
+            if part == SP:
+                flows.append((home, tuple(('c', c) for c in region), w_bits, True))
+            else:
+                flows.append((home, tuple(('c', c) for c in region), w_bits, False))
+
+        input_replicated = part == OC
+        if not layer.inputs:
+            in_bits = layer.out * datum_bits
+            dram_bits += in_bits
+            if input_replicated and nch > 1:
+                flows.append((home, tuple(('c', c) for c in region), in_bits, True))
+            else:
+                flows.append((home, tuple(('c', c) for c in region), in_bits, False))
+
+        cons = consumers[i]
+        if cons:
+            shard = out_bits / nch
+            needs_mc = len(cons) >= 2 or any(
+                mapping[c][1] == OC and len(mapping[c][0]) > 1 for c in cons)
+            if needs_mc:
+                union = sorted(set(c for cc in cons for c in mapping[cc][0]))
+                udest = tuple(('c', c) for c in union)
+                for sc in region:
+                    flows.append((('c', sc), udest, shard, True))
+            else:
+                cr = mapping[cons[0]][0]
+                per_dst = out_bits / len(cr)
+                for j, dc in enumerate(cr):
+                    sc = region[j % nch]
+                    flows.append((('c', sc), (('c', dc),), per_dst, False))
+
+        if part == IC and nch > 1:
+            leader = region[0]
+            for c in region[1:]:
+                flows.append((('c', c), (('c', leader),), out_bits, False))
+
+        if not cons:
+            dram_bits += out_bits
+            flows.append((('c', region[0]), (home,), out_bits, False))
+
+        in_bits_total = wl.in_datums(i) * datum_bits
+        act_per_chiplet = (in_bits_total + out_bits) / nch / 8.0
+        act_sram = pkg.cfg.sram_bytes * (1.0 - WEIGHT_SRAM_FRACTION)
+        if act_per_chiplet > act_sram:
+            spill_bits = (act_per_chiplet - act_sram) * 8.0 * nch
+            dram_bits += 2.0 * spill_bits
+            for c in region:
+                flows.append((('c', c), (home,), 2.0 * spill_bits / nch, False))
+
+        noc_bpc = (in_bits_total + weight_bits + out_bits) / nch
+        out.append({
+            'flows': flows, 'dram_bits': dram_bits,
+            'noc_bits_per_chiplet': noc_bpc, 'dram_ports': dram_ports,
+            'weights_resident': resident[i],
+        })
+    return out
+
+# ---------------------------------------------------------------- cost
+
+def mean_edge_to_pe_hops(cfg):
+    rows, cols = cfg.pe_grid
+    row = (rows - 1) / 2.0
+    centre = (cols - 1) / 2.0
+    col = sum(abs(c - centre) for c in range(cols)) / cols
+    return row + col
+
+
+def is_cross_chip_multicast(flow):
+    src, dests, vol, mc = flow
+    crosses = any(d != src for d in dests)
+    return mc and len(dests) > 1 and crosses
+
+
+def crosses_chip(flow):
+    src, dests, vol, mc = flow
+    return any(d != src for d in dests)
+
+
+def decide_eligible(flow, max_hops, multicast_only=True, threshold=1):
+    # expected-value mode decide(): enabled, criterion1, threshold
+    if multicast_only:
+        if not is_cross_chip_multicast(flow):
+            return False
+    elif not crosses_chip(flow):
+        return False
+    return max_hops >= threshold
+
+
+def build_tensors(wl, mapping, pkg, multicast_only=True):
+    traffic = characterize(wl, mapping, pkg)
+    noc_bw = pkg.noc_aggregate_bw() / NOC_HOTSPOT_FACTOR
+    dram_bw_bits = pkg.cfg.dram_bw_bytes * 8.0
+    e2p = mean_edge_to_pe_hops(pkg.cfg)
+    layers = []
+    for i, layer in enumerate(wl.layers):
+        region, part = mapping[i]
+        nch = float(len(region))
+        t = traffic[i]
+        rate = pkg.cfg.chiplet_macs_per_s() * nch
+        util = UTIL[layer.kind] / (1.0 + 0.04 * (nch - 1.0))
+        t_comp = layer.macs / (rate * util)
+        t_dram = t['dram_bits'] / (dram_bw_bits * max(t['dram_ports'], 1))
+        t_noc = t['noc_bits_per_chiplet'] * e2p / noc_bw
+        nop_vol_hops = 0.0
+        elig_vh = [0.0] * HOP_BUCKETS
+        elig_v = [0.0] * HOP_BUCKETS
+        for flow in t['flows']:
+            vh, mh = wired_path(pkg, flow)
+            nop_vol_hops += vh
+            if mh == 0:
+                continue
+            if decide_eligible(flow, mh, multicast_only, 1):
+                b = min(mh, HOP_BUCKETS) - 1
+                elig_vh[b] += vh
+                elig_v[b] += flow[2]
+        layers.append({'t_comp': t_comp, 't_dram': t_dram, 't_noc': t_noc,
+                       'nop_vol_hops': nop_vol_hops,
+                       'elig_vol_hops': elig_vh, 'elig_vol': elig_v})
+    return {'layers': layers, 'nop_agg_bw': pkg.nop_aggregate_bw() / NOP_CONGESTION_FACTOR}
+
+# ---------------------------------------------------------------- sim
+
+COMPS = ['compute', 'dram', 'noc', 'nop', 'wireless']
+
+
+def from_layers(lat_k):
+    total = 0.0
+    shares = [0.0] * 5
+    bottleneck = []
+    for comps in lat_k:
+        k_best = 0
+        for k in range(1, 5):
+            if comps[k] > comps[k_best]:
+                k_best = k
+        lat = comps[k_best]
+        total += lat
+        shares[k_best] += lat
+        bottleneck.append(k_best)
+    if total > 0.0:
+        shares = [s / total for s in shares]
+    return {'total_s': total, 'shares': shares, 'bottleneck': bottleneck}
+
+
+def evaluate_wired(t):
+    lat_k = [[l['t_comp'], l['t_dram'], l['t_noc'],
+              l['nop_vol_hops'] / t['nop_agg_bw'], 0.0] for l in t['layers']]
+    return from_layers(lat_k)
+
+
+def evaluate_expected(t, threshold, pinj, bw):
+    d = max(int(threshold), 1)
+    wl_bits = 0.0
+    lat_k = []
+    for l in t['layers']:
+        moved_vh = 0.0
+        moved_v = 0.0
+        for h in range(d, HOP_BUCKETS + 1):
+            moved_vh += l['elig_vol_hops'][h - 1]
+            moved_v += l['elig_vol'][h - 1]
+        moved_vh *= pinj
+        moved_v *= pinj
+        wl_bits += moved_v
+        t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / t['nop_agg_bw']
+        t_wl = moved_v / bw if moved_v > 0.0 else 0.0
+        lat_k.append([l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl])
+    r = from_layers(lat_k)
+    r['wl_bits'] = wl_bits
+    return r
+
+# ---------------------------------------------------------------- SA
+
+def anneal(wl, pkg, iters, temp_frac, seed, cost):
+    rng = Pcg32.seeded(seed)
+    current = greedy_sized(wl, pkg)
+    current_cost = cost(current)
+    initial_cost = current_cost
+    best = [p for p in current]
+    best_cost = current_cost
+    accepted = 0
+    rows, cols = pkg.cfg.grid
+    t0 = max(initial_cost * temp_frac, 5e-324)
+    for i in range(iters):
+        temp = t0 * max(1.0 - i / max(iters, 1), 1e-3)
+        cand = [p for p in current]
+        # perturb
+        li = rng.below(len(cand))
+        region, part = cand[li]
+        choice = rng.below(3)
+        if choice == 0:
+            cur = len(region)
+            if rng.coin(0.5):
+                nxt = min(cur + 1, pkg.num_chiplets())
+            else:
+                nxt = max(cur - 1, 1)
+            r0 = rng.below(rows)
+            c0 = rng.below(cols)
+            cand[li] = (compact_region(pkg, nxt, r0, c0), part)
+        elif choice == 1:
+            r0 = rng.below(rows)
+            c0 = rng.below(cols)
+            cand[li] = (compact_region(pkg, len(region), r0, c0), part)
+        else:
+            cur = part
+            while True:
+                c = PARTITIONS[rng.below(3)]
+                if c != cur:
+                    cand[li] = (region, c)
+                    break
+        cand_cost = cost(cand)
+        delta = cand_cost - current_cost
+        if delta <= 0.0 or rng.coin(math.exp(-delta / temp)):
+            current = cand
+            current_cost = cand_cost
+            accepted += 1
+            if current_cost < best_cost:
+                best = current
+                best_cost = current_cost
+    return best, best_cost, initial_cost, accepted
+
+
+def prepare(name, optimize, pkg=None, iters=600, seed=0xC0DE, temp=0.25):
+    pkg = pkg or Package()
+    wl = build(name)
+    if optimize:
+        def cost(m):
+            t = build_tensors(wl, m, pkg)
+            return evaluate_wired(t)['total_s']
+        mapping, best_cost, initial, _ = anneal(wl, pkg, iters, temp, seed, cost)
+    else:
+        mapping = layer_sequential(wl, pkg)
+        initial = 0.0
+    t = build_tensors(wl, mapping, pkg)
+    wired = evaluate_wired(t)
+    return {'wl': wl, 'mapping': mapping, 'tensors': t, 'wired': wired,
+            'initial': initial}
+
+
+def sweep_best(t, bw, thresholds=range(1, 5), pinjs=None):
+    pinjs = pinjs or [0.10 + 0.05 * i for i in range(15)]
+    wired = evaluate_wired(t)['total_s']
+    best = (None, None, -1.0)
+    for d in thresholds:
+        for p in pinjs:
+            tot = evaluate_expected(t, d, p, bw)['total_s']
+            sp = wired / tot if tot > 0 else 1.0
+            if sp > best[2]:
+                best = (d, p, sp)
+    return best
+
+
+def heat_row(t, bw, d, pinjs=None):
+    pinjs = pinjs or [0.10 + 0.05 * i for i in range(15)]
+    wired = evaluate_wired(t)['total_s']
+    return [wired / evaluate_expected(t, d, p, bw)['total_s'] for p in pinjs]

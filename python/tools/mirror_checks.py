@@ -1,0 +1,138 @@
+"""Paper-shape / residency / fig2-fig5 assertions against the mirror.
+
+CAUTION: this mirrors rust/src (arch, mapping, traffic, nop, cost, sim,
+SA with bit-exact Pcg32, and workloads/builders.rs) in Python so the
+repo's quantitative test assertions can be checked without a Rust
+toolchain. If you change the Rust cost pipeline or the workload
+builders, update this mirror in the same PR or its verdicts are stale.
+"""
+import os, sys, time
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from cost_mirror import *
+
+pkg = Package()
+t0 = time.time()
+results = []
+
+def check(name, cond, detail=""):
+    results.append((name, bool(cond), detail))
+    mark = "PASS" if cond else "FAIL"
+    print(f"[{mark}] {name} {detail}")
+
+# ---- basic structure
+for name in WORKLOAD_NAMES:
+    w = build(name)
+    assert all(l.macs > 0 for l in w.layers), name
+check("15 workloads build", len(WORKLOAD_NAMES) == 15)
+g = build("gnmt")
+check("gnmt 369 layers", len(g.layers) == 369, f"{len(g.layers)}")
+r152 = build("resnet152")
+print("layer counts:", {n: len(build(n).layers) for n in WORKLOAD_NAMES})
+
+# ---- weight residency (traffic.rs tests)
+r50 = build("resnet50")
+m50 = layer_sequential(r50, pkg)
+res50 = plan_weight_residency(r50, m50, pkg)
+nres = sum(res50)
+check("resnet50 >50 resident", nres > 50, f"resident={nres}/{len(r50.layers)} weights={r50.total_weight_datums()/1e6:.1f}M")
+
+v = build("vgg")
+mv = layer_sequential(v, pkg)
+resv = plan_weight_residency(v, mv, pkg)
+fc6 = next(i for i, l in enumerate(v.layers) if l.name == "fc6")
+check("vgg fc6 streams", not resv[fc6])
+check("vgg conv1_1 resident", resv[0])
+
+# streaming layer exists for spatial_partition_multicasts_weights (all-Spatial)
+mv_sp = [(p[0], SP) for p in mv]
+resv_sp = plan_weight_residency(v, mv_sp, pkg)
+stream_idx = next((i for i, l in enumerate(v.layers) if l.weight > 0 and not resv_sp[i]), None)
+check("vgg all-Spatial has streaming layer", stream_idx is not None)
+
+# ---- chain_nets_have_little_eligible_traffic
+def elig_frac(name):
+    wl = build(name)
+    m = layer_sequential(wl, pkg)
+    t = build_tensors(wl, m, pkg)
+    e = sum(sum(l['elig_vol_hops']) for l in t['layers'])
+    n = sum(l['nop_vol_hops'] for l in t['layers'])
+    return e / max(n, 1.0)
+fg, fv = elig_frac("googlenet"), elig_frac("vgg")
+check("googlenet elig frac >= 0.5*vgg", fg >= fv * 0.5 and fg > 0, f"goog={fg:.3f} vgg={fv:.3f}")
+
+# ---- buckets range (cost.rs)
+tr = build_tensors(r50, m50, pkg)
+bad = any(l['elig_vol'][b] != 0.0 for l in tr['layers'] for b in range(6, 8))
+check("resnet50 buckets <=6 empty", not bad)
+
+# ---- fig2 (optimize=True, iters=150)
+print("\n-- fig2 shares (SA 150) --")
+shares = {}
+for name in ["googlenet", "densenet", "resnet50", "transformer", "zfnet"]:
+    p = prepare(name, True, pkg, iters=150)
+    shares[name] = p['wired']['shares']
+    lbl = {c: round(s, 3) for c, s in zip(COMPS, p['wired']['shares'])}
+    print(f"  {name:12s} {lbl} total={p['wired']['total_s']:.3e}")
+for name in ["googlenet", "densenet", "resnet50", "transformer"]:
+    check(f"fig2 {name} NoP>0.3", shares[name][3] > 0.3, f"{shares[name][3]:.3f}")
+check("fig2 zfnet non-NoP>0.3", 1.0 - shares["zfnet"][3] > 0.3, f"nop={shares['zfnet'][3]:.3f}")
+
+# ---- fig5 zfnet shape (optimize=False)
+pz = prepare("zfnet", False, pkg)
+row1 = heat_row(pz['tensors'], 64e9, 1)
+best_idx = max(range(len(row1)), key=lambda i: row1[i])
+check("fig5 knee interior", 0 < best_idx < len(row1) - 1, f"idx={best_idx} row={[round(x,4) for x in row1]}")
+rise = all(row1[i] >= row1[i-1] - 1e-9 for i in range(1, best_idx + 1))
+fall = all(row1[i] <= row1[i-1] + 1e-9 for i in range(best_idx + 1, len(row1)))
+check("fig5 rise+fall", rise and fall)
+check("fig5 post-knee erosion", row1[-1] < row1[best_idx] - 1e-6)
+row4 = heat_row(pz['tensors'], 64e9, 4)
+check("fig5 threshold relieves", row4[-1] >= row1[-1] - 1e-9, f"d4={row4[-1]:.4f} d1={row1[-1]:.4f}")
+
+# saturation at 16G
+row1_16 = heat_row(pz['tensors'], 16e9, 1)
+check("fig5 16G degrades at p=.8", row1_16[-1] < 1.0, f"{row1_16[-1]:.4f}")
+check("fig5 16G safe at p=.1", row1_16[0] >= 1.0 - 1e-9, f"{row1_16[0]:.6f}")
+
+# ---- fig4 (optimize=True, iters=120) over all 15
+print("\n-- fig4 (SA 120) --")
+gains64, gains96 = [], []
+for name in WORKLOAD_NAMES:
+    p = prepare(name, True, pkg, iters=120)
+    d64, p64, s64 = sweep_best(p['tensors'], 64e9)
+    d96, p96, s96 = sweep_best(p['tensors'], 96e9)
+    gains64.append(s64 - 1.0)
+    gains96.append(s96 - 1.0)
+    print(f"  {name:16s} 64G {100*(s64-1):+6.1f}% (d={d64} p={p64:.2f})   96G {100*(s96-1):+6.1f}%")
+avg64 = sum(gains64) / len(gains64)
+max64 = max(gains64)
+winners = sum(1 for g in gains64 if g > 0.02)
+min64 = min(gains64)
+check("fig4 no workload hurt", all(g >= -1e-6 for g in gains64))
+check("fig4 winners>=10", winners >= 10, f"{winners}")
+check("fig4 avg64 in (0.03,0.25)", 0.03 < avg64 < 0.25, f"{avg64:.3f}")
+check("fig4 max64 in (0.10,0.60)", 0.10 < max64 < 0.60, f"{max64:.3f}")
+check("fig4 mean96>mean64", sum(gains96)/len(gains96) > avg64)
+check("fig4 one insensitive", min64 < 0.02, f"{min64:.4f}")
+
+# ---- coordinator fig4 (optimize=False) speedups >= 0.99 for googlenet, resnet50, lstm
+for name in ["googlenet", "resnet50", "lstm"]:
+    p = prepare(name, False, pkg)
+    for bw in (64e9, 96e9):
+        d, pi, s = sweep_best(p['tensors'], bw)
+        check(f"fig4-noopt {name}@{bw/1e9:.0f}G >=0.99", s >= 0.99, f"{s:.4f}")
+
+# ---- integration: optimized <= 3x baseline (SA 60)
+for name in ["zfnet", "googlenet"]:
+    base = prepare(name, False, pkg)
+    opt = prepare(name, True, pkg, iters=60)
+    check(f"opt<=3x base {name}",
+          opt['wired']['total_s'] <= base['wired']['total_s'] * 3.0,
+          f"opt={opt['wired']['total_s']:.3e} base={base['wired']['total_s']:.3e}")
+    check(f"SA no regress {name}", opt['wired']['total_s'] <= opt['initial'] + 1e-12)
+
+print(f"\nelapsed {time.time()-t0:.1f}s")
+fails = [r for r in results if not r[1]]
+print(f"{len(results)-len(fails)}/{len(results)} passed")
+for name, _, detail in fails:
+    print("FAILED:", name, detail)

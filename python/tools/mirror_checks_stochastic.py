@@ -1,0 +1,260 @@
+"""Stochastic, propcheck and linklevel assertions against the mirror.
+
+CAUTION: this mirrors rust/src (arch, mapping, traffic, nop, cost, sim,
+SA with bit-exact Pcg32, and workloads/builders.rs) in Python so the
+repo's quantitative test assertions can be checked without a Rust
+toolchain. If you change the Rust cost pipeline or the workload
+builders, update this mirror in the same PR or its verdicts are stale.
+"""
+import os, sys, math, time
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from cost_mirror import *
+
+pkg = Package()
+t0 = time.time()
+MESSAGE_BITS = 8.0 * 1024.0
+results = []
+
+def check(name, cond, detail=""):
+    results.append((name, bool(cond), detail))
+    print(f"[{'PASS' if cond else 'FAIL'}] {name} {detail}")
+
+
+def simulate(wl, mapping, pkg, threshold, pinj, bw, seed, multicast_only=True):
+    traffic = characterize(wl, mapping, pkg)
+    base = build_tensors(wl, mapping, pkg, multicast_only)
+    rng = Pcg32.seeded(seed)
+    lat_k = []
+    total_wl_bits = 0.0
+    for i, t in enumerate(traffic):
+        nop_vol_hops = 0.0
+        wl_vol = 0.0
+        for flow in t['flows']:
+            vh, mh = wired_path(pkg, flow)
+            if mh == 0 or flow[2] <= 0.0:
+                nop_vol_hops += vh
+                continue
+            n_msgs = max(int(math.ceil(flow[2] / MESSAGE_BITS)), 1)
+            msg_bits = flow[2] / n_msgs
+            msg_vh = vh / n_msgs
+            wired_msgs = 0
+            # decide(): criterion 1 + threshold, coin only when both pass
+            if multicast_only:
+                elig = is_cross_chip_multicast(flow)
+            else:
+                elig = crosses_chip(flow)
+            elig = elig and mh >= threshold
+            if elig:
+                for _ in range(n_msgs):
+                    if rng.coin(pinj):
+                        wl_vol += msg_bits
+                    else:
+                        wired_msgs += 1
+            else:
+                wired_msgs = n_msgs
+            nop_vol_hops += msg_vh * wired_msgs
+        b = base['layers'][i]
+        t_nop = nop_vol_hops / base['nop_agg_bw']
+        t_wl = wl_vol / bw if bw > 0.0 else 0.0
+        total_wl_bits += wl_vol
+        lat_k.append([b['t_comp'], b['t_dram'], b['t_noc'], t_nop, t_wl])
+    r = from_layers(lat_k)
+    r['wl_bits'] = total_wl_bits
+    return r
+
+# ---- coordinator stochastic_validation_close: googlenet noopt, p=.4 d=1, 6 seeds, rel<0.08
+wl = build("googlenet")
+m = layer_sequential(wl, pkg)
+t = build_tensors(wl, m, pkg)
+exp = evaluate_expected(t, 1, 0.4, 64e9)['total_s']
+acc = sum(simulate(wl, m, pkg, 1, 0.4, 64e9, s)['total_s'] for s in range(6)) / 6
+rel = abs(exp - acc) / max(exp, 1e-30)
+check("coord stochastic rel<0.08", rel < 0.08, f"exp={exp:.4e} stoch={acc:.4e} rel={rel:.4f}")
+
+# ---- sim stochastic_close_to_expected: googlenet, p=.5 d=1, 8 seeds
+exp5 = evaluate_expected(t, 1, 0.5, 64e9)['total_s']
+mean8 = sum(simulate(wl, m, pkg, 1, 0.5, 64e9, s)['total_s'] for s in range(8)) / 8
+check("sim stoch lower-bound", mean8 >= exp5 * 0.999, f"mean={mean8:.4e} exp={exp5:.4e}")
+check("sim stoch rel<0.09", (mean8 - exp5) / exp5 < 0.09, f"rel={(mean8-exp5)/exp5:.4f}")
+
+# pinj 0: equals wired exactly (coin never fires since p=0 -> coin false)
+st0 = simulate(wl, m, pkg, 1, 0.0, 64e9, 1)
+wired = evaluate_wired(t)['total_s']
+check("sim stoch p=0 == wired", abs(st0['total_s'] - wired) < 1e-9 * wired, f"{st0['total_s']:.6e} vs {wired:.6e}")
+
+# deterministic per seed / higher pinj more bits
+a = simulate(wl, m, pkg, 1, 0.4, 64e9, 7)
+b = simulate(wl, m, pkg, 1, 0.4, 64e9, 7)
+check("sim stoch deterministic", a['total_s'] == b['total_s'])
+lo = simulate(wl, m, pkg, 1, 0.1, 64e9, 3)
+hi = simulate(wl, m, pkg, 1, 0.8, 64e9, 3)
+check("sim stoch monotone bits", hi['wl_bits'] > lo['wl_bits'])
+
+# ---- propcheck Gen mirror
+class Gen:
+    def __init__(self, seed, size):
+        self.rng = Pcg32.seeded(seed)
+        self.size = size
+
+    def u64_range(self, lo, hi):
+        span = (hi - lo) * self.size
+        span = math.ceil(span)
+        if span != span or span >= 2**64:  # saturating cast
+            span = M64
+        span = min(int(span), M32)
+        draw = 0 if span == 0 else self.rng.below(span + 1)
+        return min(lo + draw, hi)
+
+    def usize_range(self, lo, hi):
+        return self.u64_range(lo, hi)
+
+    def f64_range(self, lo, hi):
+        hi_eff = lo + (hi - lo) * self.size
+        return self.rng.range_f64(lo, max(hi_eff, lo))
+
+    def choose(self, xs):
+        return xs[self.rng.below(len(xs))]
+
+
+def synthetic_wl(n_layers, branchiness, seed):
+    n_layers = max(n_layers, 2)
+    rng = Pcg32.seeded(seed)
+    layers = [Layer("in0", 'Conv', 1 << 24, 1 << 12, 1 << 18, [])]
+    for i in range(1, n_layers):
+        recent = i - 1
+        inputs = [recent]
+        if i >= 2 and rng.coin(branchiness):
+            extra = rng.below(i)
+            if extra != recent:
+                inputs.append(extra)
+        kk = rng.below(5)
+        kind = {0: 'Conv', 1: 'Fc', 2: 'Pool', 3: 'EltwiseAdd'}.get(kk, 'Conv')
+        out = 1 << (14 + rng.below(6))
+        if kind == 'Conv':
+            macs, weight = out * 288, max(9 * (out >> 6), 64)
+        elif kind == 'Fc':
+            w = out * (1 << rng.below(8))
+            macs, weight = w, w
+        else:
+            macs, weight = out, 0
+        layers.append(Layer(f"l{i}_{kind}", kind, max(macs, 1), weight, out, inputs))
+    return Workload(f"synthetic{seed}", layers)
+
+
+def random_workload(g):
+    nl = g.usize_range(2, 40)
+    br = g.f64_range(0.0, 0.8)
+    sd = g.u64_range(0, M64)
+    return synthetic_wl(nl, br, sd)
+
+
+def random_mapping(g, wl, pkg):
+    placements = []
+    for _ in wl.layers:
+        nn = g.usize_range(1, pkg.num_chiplets())
+        r0 = g.usize_range(0, pkg.cfg.grid[0] - 1)
+        c0 = g.usize_range(0, pkg.cfg.grid[1] - 1)
+        part = g.choose(PARTITIONS)
+        placements.append((compact_region(pkg, nn, r0, c0), part))
+    return placements
+
+SEED0 = 0xD15EA5E57159A3B
+print("\n-- propcheck stochastic_converges_to_expected_from_above (8 cases) --")
+ok = True
+for case in range(8):
+    seed = SEED0 ^ ((case * 0x9E3779B97F4A7C15) & M64)
+    g = Gen(seed, 1.0)
+    wl_s = random_workload(g)
+    m_s = random_mapping(g, wl_s, pkg)
+    thr = g.usize_range(1, 3)
+    pi = g.f64_range(0.2, 0.7)
+    t_s = build_tensors(wl_s, m_s, pkg)
+    exp_s = evaluate_expected(t_s, thr, pi, 64e9)['total_s']
+    mean_s = sum(simulate(wl_s, m_s, pkg, thr, pi, 64e9, s)['total_s'] for s in range(6)) / 6
+    lb = mean_s >= exp_s * 0.995
+    rel_s = (mean_s - exp_s) / max(exp_s, 1e-30)
+    within = rel_s < 0.25
+    print(f"  case {case}: layers={len(wl_s.layers)} thr={thr} p={pi:.3f} exp={exp_s:.3e} mean={mean_s:.3e} rel={rel_s:.4f} lb={lb}")
+    ok = ok and lb and within
+check("prop stoch converges (8 cases)", ok)
+
+# also mirror 'eligible_traffic_is_subset' and 'wireless_monotonicities' quickly (60 cases each, structural but verify no assertion edge)
+print("\n-- propcheck wireless_monotonicities (60 cases) --")
+def random_package(g):
+    cfg = Arch()
+    cfg.grid = (g.usize_range(2, 4), g.usize_range(2, 4))
+    return Package(cfg)
+
+ok = True
+for case in range(60):
+    seed = SEED0 ^ ((case * 0x9E3779B97F4A7C15) & M64)
+    g = Gen(seed, 1.0)
+    pk = random_package(g)
+    wl_r = random_workload(g)
+    m_r = random_mapping(g, wl_r, pk)
+    t_r = build_tensors(wl_r, m_r, pk)
+    wired_r = evaluate_wired(t_r)['total_s']
+    thr = g.usize_range(1, 4)
+    pi = g.f64_range(0.05, 0.9)
+    bw = g.f64_range(16e9, 128e9)
+    zero = evaluate_expected(t_r, thr, 0.0, bw)['total_s']
+    c1 = abs(zero - wired_r) <= 1e-9 * max(abs(zero), abs(wired_r), 1.0)
+    hi_bw = evaluate_expected(t_r, thr, pi, bw * 2.0)['total_s']
+    cur = evaluate_expected(t_r, thr, pi, bw)['total_s']
+    c2 = hi_bw <= cur * (1.0 + 1e-9)
+    far = evaluate_expected(t_r, 9, pi, bw)['total_s']
+    c3 = abs(far - wired_r) <= 1e-9 * max(abs(far), abs(wired_r), 1.0)
+    inf = evaluate_expected(t_r, 1, 1.0, 1e18)['total_s']
+    c4 = inf <= wired_r * (1.0 + 1e-9)
+    if not (c1 and c2 and c3 and c4):
+        print(f"  case {case} FAIL {c1} {c2} {c3} {c4}")
+        ok = False
+check("prop wireless monotonicities", ok)
+
+# ---- linklevel congestion factors
+print("\n-- linklevel --")
+def linklevel_factor(name):
+    wl_l = build(name)
+    m_l = layer_sequential(wl_l, pkg)
+    traffic = characterize(wl_l, m_l, pkg)
+    agg_bw = pkg.nop_aggregate_bw()
+    link_bw = pkg.cfg.nop_link_bw_bits
+    agg_t, link_t = 0.0, 0.0
+    for t in traffic:
+        loads = {}
+        for flow in t['flows']:
+            src, dests, vol, mc = flow
+            if vol <= 0.0 or not dests:
+                continue
+            sp = pkg.positions[src]
+            if mc and len(dests) > 1:
+                seen = set()
+                for d in dests:
+                    for l in xy_route(sp, pkg.positions[d]):
+                        seen.add(l)
+                for k in seen:
+                    loads[k] = loads.get(k, 0.0) + vol
+            else:
+                shard = vol / len(dests)
+                for d in dests:
+                    for l in xy_route(sp, pkg.positions[d]):
+                        loads[l] = loads.get(l, 0.0) + shard
+        vol_hops = sum(loads.values())
+        agg_t += vol_hops / agg_bw
+        link_t += max(loads.values(), default=0.0) / link_bw
+    return link_t / agg_t if agg_t > 0 else 1.0
+
+factors = []
+for name in ["googlenet", "densenet", "resnet50", "transformer"]:
+    f = linklevel_factor(name)
+    factors.append(f)
+    print(f"  {name}: {f:.3f}")
+lo, hi = min(factors), max(factors)
+check("linklevel lo>1", lo > 1.0, f"lo={lo:.3f}")
+check("linklevel derate bracket", 0.2 * lo <= 2.0 <= 5.0 * hi, f"[{lo:.2f},{hi:.2f}]")
+
+print(f"\nelapsed {time.time()-t0:.1f}s")
+fails = [r for r in results if not r[1]]
+print(f"{len(results)-len(fails)}/{len(results)} passed")
+for name, _, detail in fails:
+    print("FAILED:", name, detail)

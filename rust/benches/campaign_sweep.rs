@@ -1,0 +1,75 @@
+//! Campaign engine benchmark: the full workload x bandwidth x grid
+//! cross-product at several worker counts, showing the parallel speedup
+//! of the work-unit fan-out over the sequential wrappers.
+//! Run: `cargo bench --bench campaign_sweep`
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::dse::{run_campaign, sweep_grid, CampaignSpec, CampaignWorkload};
+use wisper::runtime::Runtime;
+use wisper::util::benchkit::{bb, bench, report as breport};
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 0;
+    let coord = Coordinator::new(cfg).unwrap();
+
+    let names = ["googlenet", "densenet", "resnet50", "resnet152", "zfnet", "vgg"];
+    let prepared: Vec<_> = names
+        .iter()
+        .map(|n| coord.prepare(n, false).unwrap())
+        .collect();
+    let workloads: Vec<CampaignWorkload> = prepared
+        .iter()
+        .map(|p| CampaignWorkload {
+            name: p.workload.name.clone(),
+            tensors: &p.tensors,
+            t_wired: Some(p.wired.total_s),
+        })
+        .collect();
+
+    let mut spec = CampaignSpec::default();
+    println!(
+        "=== campaign: {} workloads x {} bandwidths x {} grid points ===\n",
+        workloads.len(),
+        spec.bandwidths.len(),
+        spec.grid_size()
+    );
+
+    // Sequential reference: one runtime, unit after unit.
+    let rt = Runtime::native();
+    let mut ms = vec![bench("sequential_sweep_grid", 1, 5, || {
+        let mut acc = 0.0;
+        for w in &workloads {
+            for &bw in &spec.bandwidths {
+                let r = sweep_grid(&rt, w.tensors, &spec.thresholds, &spec.pinjs, bw)
+                    .unwrap();
+                acc += r.best_point().speedup;
+            }
+        }
+        bb(acc)
+    })];
+
+    for workers in [1usize, 2, 4, 8] {
+        spec.workers = workers;
+        let s = spec.clone();
+        ms.push(bench(&format!("campaign_w{workers}"), 1, 5, || {
+            bb(run_campaign(&workloads, &s, Runtime::native).unwrap().units)
+        }));
+    }
+
+    // Refinement stage cost on top of the grid pass.
+    spec.workers = 0;
+    spec.refine = true;
+    let s = spec.clone();
+    ms.push(bench("campaign_refined", 1, 3, || {
+        bb(run_campaign(&workloads, &s, Runtime::native).unwrap().units)
+    }));
+
+    breport(&ms);
+    println!(
+        "\nunits are (workload, bandwidth) pairs; each batches its whole grid\n\
+         through one runtime call per 64-config chunk. Scaling flattens once\n\
+         units run out relative to workers."
+    );
+}

@@ -10,7 +10,10 @@ pub mod loadbalance;
 
 use crate::arch::Package;
 use crate::config::{Config, WirelessConfig};
-use crate::dse::{sweep_bandwidths, sweep_grid, SweepResult};
+use crate::dse::{
+    run_campaign, sweep_bandwidths, sweep_grid, CampaignResult, CampaignSpec,
+    CampaignWorkload, SweepResult,
+};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::mapping::mapper::{anneal, SaOptions};
 use crate::mapping::{layer_sequential, Mapping};
@@ -172,6 +175,56 @@ impl Coordinator {
             &self.cfg.sweep.injection_probs,
             wl_bw,
         )
+    }
+
+    /// Run a full sweep campaign over `names`: prepare every workload
+    /// (in parallel), then fan the workload x bandwidth x grid
+    /// cross-product out over the worker pool with one `Runtime` per
+    /// worker. See `dse::campaign` for the engine itself.
+    pub fn campaign(
+        &self,
+        names: &[String],
+        optimize: bool,
+        spec: &CampaignSpec,
+    ) -> Result<CampaignResult> {
+        // One worker count governs the whole pipeline: the spec's
+        // override when set, else the config's (which itself falls back
+        // to the machine default). Resolving here keeps `run_campaign`
+        // from re-resolving 0 differently.
+        let mut spec = spec.clone();
+        if spec.workers == 0 {
+            spec.workers = self.workers();
+        }
+        let prepared: Result<Vec<Prepared>> =
+            parallel_map(names.len(), spec.workers, |i| {
+                self.prepare(&names[i], optimize)
+            })
+            .into_iter()
+            .collect();
+        let prepared = prepared?;
+        let workloads: Vec<CampaignWorkload> = prepared
+            .iter()
+            .map(|p| CampaignWorkload {
+                name: p.workload.name.clone(),
+                tensors: &p.tensors,
+                t_wired: Some(p.wired.total_s),
+            })
+            .collect();
+        // Fail fast on an unusable artifact with a clean error, by
+        // constructing a runtime exactly the way each worker will (a
+        // cheaper validate-only probe would miss load failures). The
+        // resolved path is then pinned so every worker loads exactly
+        // what the probe validated: an artifact that disappears
+        // mid-campaign is a hard error (panic propagated by the pool),
+        // never a silent fall-back that would mix the PJRT and native
+        // backends within one campaign.
+        self.runtime()?;
+        let resolved = crate::runtime::find_artifact(self.artifact_path.as_deref());
+        run_campaign(&workloads, &spec, || match &resolved {
+            Some(p) => Runtime::load(p)
+                .expect("runtime construction failed after a successful probe"),
+            None => Runtime::native(),
+        })
     }
 
     /// Cross-validate the expected-value artifact path against the

@@ -1,0 +1,605 @@
+//! Campaign-scale sweep orchestration: the full cross-product of
+//! N workloads x M bandwidths x the (threshold x pinj) grid, evaluated
+//! in parallel and aggregated into paper-figure data.
+//!
+//! # Work-unit flattening
+//!
+//! A *work unit* is one (workload, bandwidth) pair; unit `u` maps to
+//! workload `u / M` and bandwidth `u % M`. Each unit batches its whole
+//! grid through `Runtime::evaluate` ([`eval_unit`], the one evaluation
+//! primitive every sweep in the crate shares), so the unit list is the
+//! natural parallel grain: coarse enough to amortize dispatch, fine
+//! enough to load-balance N x M over the worker pool.
+//!
+//! # Per-worker runtimes
+//!
+//! PJRT executables are not `Sync`, so the pool cannot share one
+//! `Runtime`. Instead [`run_campaign`] takes a runtime *factory* and
+//! hands it to `parallel_map_with`, which constructs one evaluator per
+//! worker thread — artifact compilation is amortized across all units a
+//! worker claims, not paid per unit.
+//!
+//! # Aggregation
+//!
+//! Units come back in deterministic (workload-major) order and are
+//! folded into one [`WorkloadCampaign`] per workload: the wired baseline
+//! is computed once per workload (not once per grid chunk), each
+//! bandwidth keeps its full [`SweepResult`] (so Fig. 5 heatmaps remain
+//! available), and the optional `coordinator::loadbalance` adaptive
+//! refinement rides along per (workload, bandwidth).
+
+use crate::config::SweepConfig;
+use crate::coordinator::loadbalance::{adaptive_search, AdaptiveResult};
+use crate::dse::{SweepPoint, SweepResult};
+use crate::report::Json;
+use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
+use crate::sim::cost::CostTensors;
+use crate::sim::evaluate_wired;
+use crate::util::threadpool::{default_workers, parallel_map_with};
+use anyhow::{bail, Result};
+
+/// What to sweep: the grid axes, the bandwidth list, and engine knobs.
+#[derive(Debug, Clone)]
+pub struct CampaignSpec {
+    /// Distance thresholds (NoP hops) — paper Table 1: 1..=4.
+    pub thresholds: Vec<u32>,
+    /// Injection probabilities — paper Table 1: 10%..80% step 5%.
+    pub pinjs: Vec<f64>,
+    /// Wireless bandwidths in bits/s — paper Table 1: 64e9, 96e9.
+    pub bandwidths: Vec<f64>,
+    /// Worker threads (0 = auto: physical parallelism minus one).
+    pub workers: usize,
+    /// Run the `loadbalance::adaptive_search` hill-climb per
+    /// (workload, bandwidth) after the grid pass.
+    pub refine: bool,
+    /// Max threshold for the refinement search.
+    pub refine_max_threshold: u32,
+    /// pinj step for the refinement search.
+    pub refine_pinj_step: f64,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            thresholds: vec![1, 2, 3, 4],
+            pinjs: (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+            bandwidths: vec![64.0e9, 96.0e9],
+            workers: 0,
+            refine: false,
+            refine_max_threshold: 4,
+            refine_pinj_step: 0.05,
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// Take the grid axes and worker count from a [`SweepConfig`].
+    pub fn from_sweep_config(cfg: &SweepConfig) -> Self {
+        Self {
+            thresholds: cfg.thresholds.clone(),
+            pinjs: cfg.injection_probs.clone(),
+            bandwidths: cfg.bandwidths_bits.clone(),
+            workers: cfg.workers,
+            ..Self::default()
+        }
+    }
+
+    /// Points per (workload, bandwidth) unit.
+    pub fn grid_size(&self) -> usize {
+        self.thresholds.len() * self.pinjs.len()
+    }
+
+    /// Work units for `n_workloads` workloads.
+    pub fn unit_count(&self, n_workloads: usize) -> usize {
+        n_workloads * self.bandwidths.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.thresholds.is_empty() || self.pinjs.is_empty() {
+            bail!(
+                "campaign grid is empty: {} thresholds x {} injection probabilities",
+                self.thresholds.len(),
+                self.pinjs.len()
+            );
+        }
+        if self.bandwidths.is_empty() {
+            bail!("campaign needs at least one wireless bandwidth");
+        }
+        if self.bandwidths.iter().any(|b| !b.is_finite() || *b <= 0.0) {
+            bail!("wireless bandwidths must be positive and finite");
+        }
+        if self.pinjs.iter().any(|p| !(0.0..=1.0).contains(p)) {
+            bail!("injection probabilities must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+/// One workload entering a campaign: a display name plus its prepared
+/// cost tensors (mapping already folded in).
+#[derive(Debug, Clone)]
+pub struct CampaignWorkload<'a> {
+    pub name: String,
+    pub tensors: &'a CostTensors,
+    /// Wired baseline, if the caller already evaluated it (the
+    /// coordinator's prepare stage does); `None` lets the campaign
+    /// compute it once during aggregation.
+    pub t_wired: Option<f64>,
+}
+
+/// One bandwidth's outcome for one workload.
+#[derive(Debug, Clone)]
+pub struct BandwidthResult {
+    pub bandwidth: f64,
+    pub sweep: SweepResult,
+    /// Adaptive hill-climb refinement (when `CampaignSpec::refine`).
+    ///
+    /// The refinement runs on the native f64 analytical model (it is
+    /// the paper's "offline profiling" step, deliberately off the
+    /// batched artifact path), while grid speedups round-trip the f32
+    /// artifact ABI. The comparison helpers below therefore only let a
+    /// refined point win when it beats the grid by more than f32
+    /// rounding noise.
+    pub refined: Option<AdaptiveResult>,
+}
+
+/// Margin a refined (f64) speedup must clear over the grid's f32-ABI
+/// speedup to count as a genuine win rather than a precision artifact.
+const REFINE_WIN_MARGIN: f64 = 1e-5;
+
+impl BandwidthResult {
+    /// Best of the grid pass and the refinement stage.
+    pub fn best_speedup(&self) -> f64 {
+        let grid = self.sweep.best_point().speedup;
+        match &self.refined {
+            Some(r) if r.speedup > grid * (1.0 + REFINE_WIN_MARGIN) => r.speedup,
+            _ => grid,
+        }
+    }
+
+    /// Best (threshold, pinj) across grid and refinement.
+    pub fn best_config(&self) -> (u32, f64) {
+        let b = self.sweep.best_point();
+        match &self.refined {
+            Some(r) if r.speedup > b.speedup * (1.0 + REFINE_WIN_MARGIN) => {
+                (r.threshold, r.pinj)
+            }
+            _ => (b.threshold, b.pinj),
+        }
+    }
+}
+
+/// Aggregated campaign outcome for one workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadCampaign {
+    pub name: String,
+    /// Wired baseline, computed once per workload.
+    pub t_wired: f64,
+    /// One entry per campaign bandwidth, in spec order.
+    pub per_bw: Vec<BandwidthResult>,
+}
+
+/// Full campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CampaignResult {
+    /// The spec the campaign ran with (axes kept for heatmap labels and
+    /// self-describing reports).
+    pub spec: CampaignSpec,
+    /// One aggregate per workload, in input order.
+    pub workloads: Vec<WorkloadCampaign>,
+    /// Work units executed (N workloads x M bandwidths).
+    pub units: usize,
+    /// Grid points evaluated across all units.
+    pub grid_evaluations: usize,
+}
+
+impl CampaignResult {
+    /// Fig. 4-style bars: for each workload, the best speedup per
+    /// bandwidth (refinement included when it wins).
+    pub fn speedup_bars(&self) -> Vec<(String, Vec<(f64, f64)>)> {
+        self.workloads
+            .iter()
+            .map(|w| {
+                (
+                    w.name.clone(),
+                    w.per_bw
+                        .iter()
+                        .map(|b| (b.bandwidth, b.best_speedup()))
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    /// Fig. 5-style heatmap for one (workload, bandwidth) cell, using
+    /// the campaign's own grid axes.
+    pub fn heatmap(&self, workload: usize, bandwidth: usize) -> Vec<Vec<f64>> {
+        self.workloads[workload].per_bw[bandwidth]
+            .sweep
+            .heatmap(&self.spec.thresholds, &self.spec.pinjs)
+    }
+
+    /// Serialize the campaign summary (per-workload baselines and best
+    /// points; not the raw per-point grids) as JSON.
+    pub fn to_json(&self) -> Json {
+        let workloads = self
+            .workloads
+            .iter()
+            .map(|w| {
+                let per_bw = w
+                    .per_bw
+                    .iter()
+                    .map(|b| {
+                        let best = b.sweep.best_point();
+                        let mut obj = vec![
+                            ("bandwidth_bits".into(), Json::Num(b.bandwidth)),
+                            (
+                                "best".into(),
+                                Json::Obj(vec![
+                                    ("threshold".into(), Json::Num(best.threshold as f64)),
+                                    ("pinj".into(), Json::Num(best.pinj)),
+                                    ("speedup".into(), Json::Num(best.speedup)),
+                                    ("total_s".into(), Json::Num(best.total_s)),
+                                    ("offloaded_bits".into(), Json::Num(best.wl_bits)),
+                                ]),
+                            ),
+                        ];
+                        obj.push((
+                            "refined".into(),
+                            match &b.refined {
+                                None => Json::Null,
+                                Some(r) => Json::Obj(vec![
+                                    ("threshold".into(), Json::Num(r.threshold as f64)),
+                                    ("pinj".into(), Json::Num(r.pinj)),
+                                    ("speedup".into(), Json::Num(r.speedup)),
+                                    (
+                                        "evaluations".into(),
+                                        Json::Num(r.evaluations as f64),
+                                    ),
+                                ]),
+                            },
+                        ));
+                        Json::Obj(obj)
+                    })
+                    .collect();
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(w.name.clone())),
+                    ("t_wired_s".into(), Json::Num(w.t_wired)),
+                    ("per_bandwidth".into(), Json::Arr(per_bw)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("units".into(), Json::Num(self.units as f64)),
+            (
+                "grid_evaluations".into(),
+                Json::Num(self.grid_evaluations as f64),
+            ),
+            (
+                "thresholds".into(),
+                Json::Arr(
+                    self.spec
+                        .thresholds
+                        .iter()
+                        .map(|t| Json::Num(*t as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "injection_probs".into(),
+                Json::Arr(self.spec.pinjs.iter().map(|p| Json::Num(*p)).collect()),
+            ),
+            (
+                "bandwidths_bits".into(),
+                Json::Arr(
+                    self.spec
+                        .bandwidths
+                        .iter()
+                        .map(|b| Json::Num(*b))
+                        .collect(),
+                ),
+            ),
+            ("workloads".into(), Json::Arr(workloads)),
+        ])
+    }
+}
+
+/// Evaluate one (workload, bandwidth) work unit: batch the whole
+/// (threshold x pinj) grid through the runtime in `NUM_CONFIGS`-sized
+/// chunks. This is the single evaluation primitive behind `sweep_grid`,
+/// `sweep_bandwidths`, `sweep_many` and the campaign engine.
+///
+/// Errors on an empty grid; best-point selection is NaN-safe (a NaN
+/// speedup never wins, via a total-order comparison over the rest).
+pub fn eval_unit(
+    runtime: &Runtime,
+    tensors: &CostTensors,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    wl_bw: f64,
+) -> Result<SweepResult> {
+    if thresholds.is_empty() || pinjs.is_empty() {
+        bail!(
+            "sweep grid is empty: {} thresholds x {} injection probabilities",
+            thresholds.len(),
+            pinjs.len()
+        );
+    }
+    let mut configs: Vec<(u32, f64, f64)> = Vec::with_capacity(thresholds.len() * pinjs.len());
+    for &t in thresholds {
+        for &p in pinjs {
+            configs.push((t, p, wl_bw));
+        }
+    }
+    let mut points = Vec::with_capacity(configs.len());
+    let mut t_wired = 0.0;
+    for chunk in configs.chunks(NUM_CONFIGS) {
+        let input = pack_input(tensors, chunk)?;
+        let out = runtime.evaluate(&input)?;
+        t_wired = out.t_wired as f64;
+        for (i, &(t, p, bw)) in chunk.iter().enumerate() {
+            let mut shares = [0.0; 5];
+            for (k, s) in shares.iter_mut().enumerate() {
+                *s = out.share(i, k) as f64;
+            }
+            points.push(SweepPoint {
+                threshold: t,
+                pinj: p,
+                wl_bw: bw,
+                total_s: out.total[i] as f64,
+                speedup: out.speedup[i] as f64,
+                shares,
+                wl_bits: out.wl_vol[i] as f64,
+            });
+        }
+    }
+    let best = match points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| !p.speedup.is_nan())
+        .max_by(|a, b| a.1.speedup.total_cmp(&b.1.speedup))
+        .map(|(i, _)| i)
+    {
+        Some(i) => i,
+        None => bail!(
+            "all {} grid points evaluated to NaN speedup (degenerate tensors?)",
+            points.len()
+        ),
+    };
+    Ok(SweepResult {
+        points,
+        t_wired,
+        best,
+    })
+}
+
+/// Run a full campaign: flatten the workload x bandwidth cross-product
+/// into work units, evaluate them across the pool (one `Runtime` per
+/// worker, from `make_runtime`), and aggregate per workload.
+///
+/// Results are deterministic and independent of `spec.workers`: units
+/// are self-contained and reassembled in workload-major order.
+pub fn run_campaign<F>(
+    workloads: &[CampaignWorkload],
+    spec: &CampaignSpec,
+    make_runtime: F,
+) -> Result<CampaignResult>
+where
+    F: Fn() -> Runtime + Sync,
+{
+    spec.validate()?;
+    let nb = spec.bandwidths.len();
+    let n_units = spec.unit_count(workloads.len());
+    let workers = if spec.workers == 0 {
+        default_workers()
+    } else {
+        spec.workers
+    };
+
+    let unit_results: Vec<Result<(SweepResult, Option<AdaptiveResult>)>> = parallel_map_with(
+        n_units,
+        workers,
+        &make_runtime,
+        |rt: &mut Runtime, u| {
+            let (wi, bi) = (u / nb, u % nb);
+            let bw = spec.bandwidths[bi];
+            let sweep = eval_unit(
+                rt,
+                workloads[wi].tensors,
+                &spec.thresholds,
+                &spec.pinjs,
+                bw,
+            )?;
+            let refined = if spec.refine {
+                Some(adaptive_search(
+                    workloads[wi].tensors,
+                    bw,
+                    spec.refine_max_threshold,
+                    spec.refine_pinj_step,
+                )?)
+            } else {
+                None
+            };
+            Ok((sweep, refined))
+        },
+    );
+
+    let mut units = unit_results.into_iter();
+    let mut aggregated = Vec::with_capacity(workloads.len());
+    for w in workloads {
+        // Wired baseline once per workload, in full f64 (the sweep's own
+        // t_wired is an f32 round-trip through the artifact ABI); reuse
+        // the caller's value when it already evaluated one.
+        let t_wired = w
+            .t_wired
+            .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
+        let mut per_bw = Vec::with_capacity(nb);
+        for &bw in &spec.bandwidths {
+            let (sweep, refined) = units
+                .next()
+                .expect("unit count matches cross-product")?;
+            per_bw.push(BandwidthResult {
+                bandwidth: bw,
+                sweep,
+                refined,
+            });
+        }
+        aggregated.push(WorkloadCampaign {
+            name: w.name.clone(),
+            t_wired,
+            per_bw,
+        });
+    }
+
+    Ok(CampaignResult {
+        spec: spec.clone(),
+        workloads: aggregated,
+        units: n_units,
+        grid_evaluations: n_units * spec.grid_size(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cost::LayerCosts;
+
+    fn tensors(scale: f64) -> CostTensors {
+        let mut l0 = LayerCosts {
+            t_comp: 1.0e-6 * scale,
+            nop_vol_hops: 4.0e6 * scale,
+            ..Default::default()
+        };
+        l0.elig_vol_hops[3] = 3.0e6 * scale;
+        l0.elig_vol[3] = 0.1e6 * scale;
+        let l1 = LayerCosts {
+            t_comp: 2.0e-6 * scale,
+            nop_vol_hops: 1.0e6 * scale,
+            ..Default::default()
+        };
+        CostTensors {
+            layers: vec![l0, l1],
+            nop_agg_bw: 1.0e12,
+        }
+    }
+
+    fn spec() -> CampaignSpec {
+        CampaignSpec {
+            workers: 2,
+            ..CampaignSpec::default()
+        }
+    }
+
+    #[test]
+    fn cross_product_unit_and_point_counts() {
+        let (ta, tb, tc) = (tensors(1.0), tensors(2.0), tensors(0.5));
+        let workloads = vec![
+            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None },
+            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None },
+            CampaignWorkload { name: "c".into(), tensors: &tc, t_wired: None },
+        ];
+        let s = spec();
+        let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
+        assert_eq!(r.units, 6); // 3 workloads x 2 bandwidths
+        assert_eq!(r.grid_evaluations, 6 * 60);
+        assert_eq!(r.workloads.len(), 3);
+        for w in &r.workloads {
+            assert_eq!(w.per_bw.len(), 2);
+            assert!(w.t_wired > 0.0);
+            for b in &w.per_bw {
+                assert_eq!(b.sweep.points.len(), s.grid_size());
+            }
+        }
+        // Input order is preserved.
+        let names: Vec<_> = r.workloads.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (ta, tb) = (tensors(1.0), tensors(3.0));
+        let workloads = vec![
+            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None },
+            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None },
+        ];
+        let mut s1 = spec();
+        s1.workers = 1;
+        let mut s4 = spec();
+        s4.workers = 4;
+        let r1 = run_campaign(&workloads, &s1, Runtime::native).unwrap();
+        let r4 = run_campaign(&workloads, &s4, Runtime::native).unwrap();
+        for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+            assert_eq!(a.t_wired, b.t_wired);
+            for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+                assert_eq!(x.sweep.best, y.sweep.best);
+                for (p, q) in x.sweep.points.iter().zip(&y.sweep.points) {
+                    assert_eq!(p.total_s, q.total_s);
+                    assert_eq!(p.speedup, q.speedup);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn campaign_best_matches_sequential_sweep_grid() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let s = spec();
+        let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
+        let rt = Runtime::native();
+        for (bi, &bw) in s.bandwidths.iter().enumerate() {
+            let reference =
+                crate::dse::sweep_grid(&rt, &ta, &s.thresholds, &s.pinjs, bw).unwrap();
+            let got = &r.workloads[0].per_bw[bi].sweep;
+            assert_eq!(got.best, reference.best);
+            assert_eq!(
+                got.best_point().speedup,
+                reference.best_point().speedup
+            );
+        }
+    }
+
+    #[test]
+    fn refinement_rides_along() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let mut s = spec();
+        s.refine = true;
+        let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
+        for b in &r.workloads[0].per_bw {
+            let refined = b.refined.as_ref().expect("refinement requested");
+            assert!(refined.speedup >= 1.0);
+            assert!(refined.evaluations > 0);
+            assert!(b.best_speedup() >= b.sweep.best_point().speedup);
+        }
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let mut empty_grid = spec();
+        empty_grid.thresholds.clear();
+        assert!(run_campaign(&workloads, &empty_grid, Runtime::native).is_err());
+        let mut no_bw = spec();
+        no_bw.bandwidths.clear();
+        assert!(run_campaign(&workloads, &no_bw, Runtime::native).is_err());
+        let mut bad_p = spec();
+        bad_p.pinjs = vec![1.5];
+        assert!(run_campaign(&workloads, &bad_p, Runtime::native).is_err());
+        let mut nan_bw = spec();
+        nan_bw.bandwidths = vec![64e9, f64::NAN];
+        assert!(run_campaign(&workloads, &nan_bw, Runtime::native).is_err());
+    }
+
+    #[test]
+    fn json_summary_shape() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let r = run_campaign(&workloads, &spec(), Runtime::native).unwrap();
+        let text = r.to_json().render();
+        assert!(text.contains("\"workloads\""));
+        assert!(text.contains("\"t_wired_s\""));
+        assert!(text.contains("\"refined\": null"));
+    }
+}

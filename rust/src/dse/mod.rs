@@ -1,17 +1,43 @@
 //! Design-space exploration engine: sweep the wireless configuration
-//! grid (distance threshold x injection probability x bandwidth) for a
-//! mapped workload and pick the near-optimal point — the paper's §IV
+//! grid (distance threshold x injection probability x bandwidth) for
+//! mapped workloads and pick near-optimal points — the paper's §IV
 //! methodology ("we sweep the distance threshold and injection
 //! probability parameters until finding a near-optimal value for each
 //! workload").
 //!
-//! One `Runtime::evaluate` call covers a whole (threshold x pinj) grid
-//! for one bandwidth — the batching the AOT artifact exists for.
+//! # Architecture: one evaluation pipeline
+//!
+//! Every sweep in the crate funnels through a single primitive,
+//! [`campaign::eval_unit`]: one (workload, bandwidth) *work unit* that
+//! batches the whole (threshold x pinj) grid through `Runtime::evaluate`
+//! in `NUM_CONFIGS`-sized chunks — the batching the AOT artifact exists
+//! for. On top of that primitive sit two layers:
+//!
+//! * the thin compatibility wrappers in this module —
+//!   [`sweep_grid`] (one unit), [`sweep_bandwidths`] (units over a
+//!   bandwidth list, sequential, caller-owned runtime) and
+//!   [`sweep_many`] (units over a workload list, parallel) — and
+//! * the [`campaign`] orchestrator, which flattens the full
+//!   N workloads x M bandwidths cross-product into work units, fans them
+//!   out over `util::threadpool::parallel_map_with` with one `Runtime`
+//!   per worker thread (PJRT executables are not `Sync`), and aggregates
+//!   per-workload wired baselines (computed once per workload), best
+//!   points, Fig. 4-style speedup bars and Fig. 5-style heatmaps into a
+//!   [`campaign::CampaignResult`].
+//!
+//! Empty grids are rejected with an error (never a panic), and
+//! best-point selection uses a NaN-safe total order.
 
-use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
+pub mod campaign;
+
+use crate::runtime::Runtime;
 use crate::sim::cost::CostTensors;
-use crate::util::threadpool::parallel_map;
 use anyhow::Result;
+
+pub use campaign::{
+    run_campaign, BandwidthResult, CampaignResult, CampaignSpec, CampaignWorkload,
+    WorkloadCampaign,
+};
 
 /// One evaluated grid point.
 #[derive(Debug, Clone)]
@@ -30,7 +56,8 @@ pub struct SweepPoint {
 pub struct SweepResult {
     pub points: Vec<SweepPoint>,
     pub t_wired: f64,
-    /// Index of the best (max-speedup) point.
+    /// Index of the best (max-speedup) point. Always in bounds:
+    /// construction fails on an empty grid.
     pub best: usize,
 }
 
@@ -63,6 +90,9 @@ impl SweepResult {
 }
 
 /// Sweep a (threshold x pinj) grid at a single wireless bandwidth.
+///
+/// Thin wrapper over the campaign pipeline's work-unit primitive
+/// ([`campaign::eval_unit`]). Errors on an empty grid.
 pub fn sweep_grid(
     runtime: &Runtime,
     tensors: &CostTensors,
@@ -70,48 +100,14 @@ pub fn sweep_grid(
     pinjs: &[f64],
     wl_bw: f64,
 ) -> Result<SweepResult> {
-    let mut configs: Vec<(u32, f64, f64)> = Vec::new();
-    for &t in thresholds {
-        for &p in pinjs {
-            configs.push((t, p, wl_bw));
-        }
-    }
-    let mut points = Vec::with_capacity(configs.len());
-    let mut t_wired = 0.0;
-    for chunk in configs.chunks(NUM_CONFIGS) {
-        let input = pack_input(tensors, chunk)?;
-        let out = runtime.evaluate(&input)?;
-        t_wired = out.t_wired as f64;
-        for (i, &(t, p, bw)) in chunk.iter().enumerate() {
-            let mut shares = [0.0; 5];
-            for (k, s) in shares.iter_mut().enumerate() {
-                *s = out.share(i, k) as f64;
-            }
-            points.push(SweepPoint {
-                threshold: t,
-                pinj: p,
-                wl_bw: bw,
-                total_s: out.total[i] as f64,
-                speedup: out.speedup[i] as f64,
-                shares,
-                wl_bits: out.wl_vol[i] as f64,
-            });
-        }
-    }
-    let best = points
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.speedup.partial_cmp(&b.1.speedup).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
-    Ok(SweepResult {
-        points,
-        t_wired,
-        best,
-    })
+    campaign::eval_unit(runtime, tensors, thresholds, pinjs, wl_bw)
 }
 
 /// Best point per bandwidth — the per-workload bars of Figure 4.
+///
+/// Sequential over `bandwidths` with a caller-owned runtime; use
+/// [`campaign::run_campaign`] to parallelize across workloads *and*
+/// bandwidths at once.
 pub fn sweep_bandwidths(
     runtime: &Runtime,
     tensors: &CostTensors,
@@ -121,13 +117,24 @@ pub fn sweep_bandwidths(
 ) -> Result<Vec<(f64, SweepResult)>> {
     bandwidths
         .iter()
-        .map(|&bw| Ok((bw, sweep_grid(runtime, tensors, thresholds, pinjs, bw)?)))
+        .map(|&bw| {
+            Ok((
+                bw,
+                campaign::eval_unit(runtime, tensors, thresholds, pinjs, bw)?,
+            ))
+        })
         .collect()
 }
 
-/// Parallel sweep across many workloads' tensors. `runtimes` are
-/// per-thread (PJRT executables are not Sync); use `make_runtime` to
-/// construct one per worker.
+/// Parallel sweep across many workloads' tensors at one bandwidth.
+///
+/// Thin wrapper over [`campaign::run_campaign`] with a single-bandwidth
+/// spec; `make_runtime` constructs one evaluator per worker thread (PJRT
+/// executables are not `Sync`). `workers == 0` runs sequentially (it is
+/// clamped to 1, matching this function's historical behavior — use a
+/// [`CampaignSpec`] directly for the auto worker count). Degenerate
+/// inputs (empty grid, non-positive bandwidth, pinj outside [0,1]) are
+/// errors.
 pub fn sweep_many<F>(
     tensors: &[CostTensors],
     thresholds: &[u32],
@@ -139,11 +146,28 @@ pub fn sweep_many<F>(
 where
     F: Fn() -> Runtime + Sync,
 {
-    let results = parallel_map(tensors.len(), workers, |i| {
-        let rt = make_runtime();
-        sweep_grid(&rt, &tensors[i], thresholds, pinjs, wl_bw)
-    });
-    results.into_iter().collect()
+    let workloads: Vec<CampaignWorkload> = tensors
+        .iter()
+        .enumerate()
+        .map(|(i, t)| CampaignWorkload {
+            name: format!("workload{i}"),
+            tensors: t,
+            t_wired: None,
+        })
+        .collect();
+    let spec = CampaignSpec {
+        thresholds: thresholds.to_vec(),
+        pinjs: pinjs.to_vec(),
+        bandwidths: vec![wl_bw],
+        workers: workers.max(1),
+        ..CampaignSpec::default()
+    };
+    let result = run_campaign(&workloads, &spec, make_runtime)?;
+    Ok(result
+        .workloads
+        .into_iter()
+        .map(|mut w| w.per_bw.remove(0).sweep)
+        .collect())
 }
 
 #[cfg(test)]
@@ -200,6 +224,20 @@ mod tests {
         }
         // The NoP-bound tensor set must benefit from offload.
         assert!(best.speedup > 1.0);
+    }
+
+    #[test]
+    fn empty_grid_is_an_error_not_a_panic() {
+        // Regression: an empty threshold or pinj axis used to produce a
+        // zero-point SweepResult whose best_point() indexed out of
+        // bounds.
+        let rt = Runtime::native();
+        let ts = tensors();
+        assert!(sweep_grid(&rt, &ts, &[], &[0.4], 64e9).is_err());
+        assert!(sweep_grid(&rt, &ts, &[1, 2], &[], 64e9).is_err());
+        assert!(sweep_grid(&rt, &ts, &[], &[], 64e9).is_err());
+        // No runtime call is made for a rejected grid.
+        assert_eq!(rt.calls.get(), 0);
     }
 
     #[test]

@@ -13,6 +13,7 @@
 
 use anyhow::{bail, Result};
 use wisper::cli::{parse, render_help, OptSpec};
+use wisper::dse::CampaignSpec;
 use wisper::config::{Config, WirelessConfig};
 use wisper::coordinator::loadbalance;
 use wisper::coordinator::Coordinator;
@@ -35,10 +36,15 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
         OptSpec { name: "csv", takes_value: false, help: "also write CSVs under results/" },
         OptSpec { name: "draw", takes_value: false, help: "ASCII-render (arch)" },
+        OptSpec { name: "workloads", takes_value: true, help: "comma-separated workload list (campaign)" },
+        OptSpec { name: "bws", takes_value: true, help: "comma-separated wireless bandwidths in bits/s (campaign)" },
+        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
+        OptSpec { name: "refine", takes_value: false, help: "adaptive per-workload refinement after the grid pass" },
+        OptSpec { name: "json", takes_value: false, help: "also write a JSON report under results/" },
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 9] = [
+const SUBCOMMANDS: [(&str, &str); 10] = [
     ("params", "print Table 1 (simulation parameters)"),
     ("arch", "describe the package (Figure 1)"),
     ("workloads", "list the 15 benchmark workloads"),
@@ -48,6 +54,7 @@ const SUBCOMMANDS: [(&str, &str); 9] = [
     ("simulate", "evaluate one wireless configuration"),
     ("validate", "expected-value vs stochastic cross-check"),
     ("balance", "adaptive load-balance search (future work)"),
+    ("campaign", "parallel sweep: N workloads x M bandwidths x grid"),
 ];
 
 fn main() -> Result<()> {
@@ -99,8 +106,39 @@ fn main() -> Result<()> {
             let bw = p.get_f64("bw")?.unwrap_or(64e9);
             cmd_balance(&coord, &names, optimize, bw)
         }
+        "campaign" => cmd_campaign(&coord, &names, optimize, &p),
         other => bail!("unknown command {other:?}; try `wisper help`"),
     }
+}
+
+/// Workload list for the campaign subcommand: `--workloads a,b,c`
+/// overrides the shared `--workload`/`--all` resolution.
+fn campaign_names(p: &wisper::cli::Parsed, shared: &[String]) -> Result<Vec<String>> {
+    match p.get("workloads") {
+        None => Ok(shared.to_vec()),
+        Some(list) => {
+            let names: Vec<String> = list
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if names.is_empty() {
+                bail!("--workloads: empty list");
+            }
+            Ok(names)
+        }
+    }
+}
+
+fn parse_bw_list(list: &str) -> Result<Vec<f64>> {
+    list.split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--bws: expected a number, got {s:?}"))
+        })
+        .collect()
 }
 
 fn wireless_from(cfg: &Config, p: &wisper::cli::Parsed) -> Result<WirelessConfig> {
@@ -397,7 +435,7 @@ fn cmd_balance(
         rows.push(vec![
             name.clone(),
             format!("{:+.1}%", (grid.best_point().speedup - 1.0) * 100.0),
-            format!("60"),
+            "60".to_string(),
             format!("{:+.1}%", (adaptive.speedup - 1.0) * 100.0),
             adaptive.evaluations.to_string(),
             format!("d={} p={:.2}", adaptive.threshold, adaptive.pinj),
@@ -410,5 +448,105 @@ fn cmd_balance(
             &rows
         )
     );
+    Ok(())
+}
+
+fn cmd_campaign(
+    coord: &Coordinator,
+    shared_names: &[String],
+    optimize: bool,
+    p: &wisper::cli::Parsed,
+) -> Result<()> {
+    let names = campaign_names(p, shared_names)?;
+    let mut spec = CampaignSpec::from_sweep_config(&coord.cfg.sweep);
+    if let Some(list) = p.get("bws") {
+        spec.bandwidths = parse_bw_list(list)?;
+    }
+    if let Some(w) = p.get_usize("workers")? {
+        spec.workers = w;
+    }
+    spec.refine = p.has_flag("refine");
+
+    println!(
+        "sweep campaign: {} workloads x {} bandwidths x {} grid points ({} units)\n",
+        names.len(),
+        spec.bandwidths.len(),
+        spec.grid_size(),
+        spec.unit_count(names.len()),
+    );
+    let result = coord.campaign(&names, optimize, &spec)?;
+
+    // Table cells, the per-bandwidth footer and the CSV's grid columns
+    // all agree: cells and footer report the campaign's best (grid, or
+    // refinement when it genuinely wins); the CSV keeps grid and
+    // refined speedups in separate, labeled columns.
+    let mut headers: Vec<String> = vec!["workload".into(), "t_wired(s)".into()];
+    for bw in &spec.bandwidths {
+        headers.push(format!("{} gain", eng(*bw, "b/s")));
+        headers.push("best cfg".into());
+    }
+    let mut trows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for w in &result.workloads {
+        let mut row = vec![w.name.clone(), format!("{:.4e}", w.t_wired)];
+        for b in &w.per_bw {
+            let grid_best = b.sweep.best_point();
+            let (bt, bp) = b.best_config();
+            row.push(format!("{:+.1}%", (b.best_speedup() - 1.0) * 100.0));
+            row.push(format!("d={bt} p={bp:.2}"));
+            csv_rows.push(vec![
+                w.name.clone(),
+                format!("{}", b.bandwidth),
+                format!("{}", grid_best.threshold),
+                format!("{:.2}", grid_best.pinj),
+                format!("{:.6}", grid_best.speedup),
+                format!("{:.6e}", grid_best.total_s),
+                format!("{:.6e}", w.t_wired),
+                b.refined
+                    .as_ref()
+                    .map(|r| format!("{:.6}", r.speedup))
+                    .unwrap_or_default(),
+            ]);
+        }
+        trows.push(row);
+    }
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    print!("{}", report::table(&hrefs, &trows));
+    println!(
+        "\n{} work units, {} grid points evaluated",
+        result.units, result.grid_evaluations
+    );
+
+    for (bi, bw) in spec.bandwidths.iter().enumerate() {
+        let gains: Vec<f64> = result
+            .workloads
+            .iter()
+            .map(|w| (w.per_bw[bi].best_speedup() - 1.0) * 100.0)
+            .collect();
+        println!(
+            "{}: average speedup {:+.1}%, max {:+.1}%",
+            eng(*bw, "b/s"),
+            wisper::util::stats::mean(&gains),
+            wisper::util::stats::max(&gains),
+        );
+    }
+
+    if p.has_flag("csv") {
+        let path = report::results_dir().join("campaign.csv");
+        report::write_csv(
+            &path,
+            &[
+                "workload", "wl_bw", "grid_threshold", "grid_pinj", "grid_speedup",
+                "grid_t_hybrid", "t_wired", "refined_speedup",
+            ],
+            &csv_rows,
+        )?;
+        println!("\nwrote {}", path.display());
+    }
+    if p.has_flag("json") {
+        let path = report::results_dir().join("campaign.json");
+        report::write_json(&path, &result.to_json())?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }

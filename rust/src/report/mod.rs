@@ -1,10 +1,115 @@
 //! Report emitters: aligned ASCII tables, horizontal bar charts, signed
-//! heatmaps, and CSV files — the formats the paper-figure benches print
-//! and save under `results/`.
+//! heatmaps, CSV files, and a minimal JSON value type — the formats the
+//! paper-figure benches and the campaign engine print and save under
+//! `results/`.
 
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
+
+/// A JSON value (serde is not in the offline registry). Numbers are f64;
+/// non-finite values serialize as `null` per RFC 8259.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Render with two-space indentation.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if !v.is_finite() {
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 9.0e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => write_json_string(out, s),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    item.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    out.push_str(&"  ".repeat(indent + 1));
+                    write_json_string(out, k);
+                    out.push_str(": ");
+                    v.write_into(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Write a JSON document (creating parent directories as needed).
+pub fn write_json(path: &Path, value: &Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(value.render().as_bytes())
+}
 
 /// Render an aligned table.
 pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -197,6 +302,38 @@ mod tests {
         );
         assert!(hm.contains('-'), "{hm}");
         assert!(hm.contains("10.0"), "{hm}");
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("a \"b\"\nc".into())),
+            ("n".into(), Json::Num(3.0)),
+            ("x".into(), Json::Num(0.25)),
+            ("nan".into(), Json::Num(f64::NAN)),
+            ("ok".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+            ("xs".into(), Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+            ("empty".into(), Json::Arr(vec![])),
+        ]);
+        let s = v.render();
+        assert!(s.contains("\"name\": \"a \\\"b\\\"\\nc\""));
+        assert!(s.contains("\"n\": 3"));
+        assert!(s.contains("\"x\": 0.25"));
+        assert!(s.contains("\"nan\": null"));
+        assert!(s.contains("\"ok\": true"));
+        assert!(s.contains("\"none\": null"));
+        assert!(s.contains("\"empty\": []"));
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = std::env::temp_dir().join("wisper_test_json");
+        let path = dir.join("out.json");
+        write_json(&path, &Json::Arr(vec![Json::Num(1.0)])).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "[\n  1\n]\n");
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

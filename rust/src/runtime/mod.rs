@@ -11,7 +11,9 @@ pub mod contract;
 pub mod native;
 
 use crate::sim::cost::CostTensors;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 use contract::{
     CostModelInput, CostModelOutput, HOP_BUCKETS, MAX_LAYERS, NUM_COMPONENTS, NUM_CONFIGS,
 };
@@ -28,9 +30,11 @@ pub enum Backend {
 
 /// Cost-model evaluator. Construction compiles the artifact once; every
 /// `evaluate` call is then a single PJRT execution over the full config
-/// grid.
+/// grid. Without the `pjrt` cargo feature only the pure-Rust native twin
+/// is available (the `xla` bindings crate is absent offline).
 pub struct Runtime {
     backend: Backend,
+    #[cfg(feature = "pjrt")]
     exe: Option<xla::PjRtLoadedExecutable>,
     /// Executions performed (metrics).
     pub calls: std::cell::Cell<u64>,
@@ -97,6 +101,7 @@ fn check_meta(path: &Path) -> Result<()> {
 
 impl Runtime {
     /// Load and compile the PJRT artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load(path: &Path) -> Result<Self> {
         check_meta(path)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -115,16 +120,32 @@ impl Runtime {
         })
     }
 
+    /// Load the PJRT artifact — unavailable without the `pjrt` feature.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(path: &Path) -> Result<Self> {
+        check_meta(path)?;
+        bail!(
+            "built without the `pjrt` feature: cannot load {path:?}; \
+             use Runtime::native() or rebuild with --features pjrt"
+        )
+    }
+
     /// Pure-Rust evaluator (no artifact needed).
     pub fn native() -> Self {
         Self {
             backend: Backend::Native,
+            #[cfg(feature = "pjrt")]
             exe: None,
             calls: std::cell::Cell::new(0),
         }
     }
 
     /// Load the artifact if present, otherwise fall back to native.
+    ///
+    /// An artifact that exists but cannot be loaded (corrupt, stale
+    /// meta, or a build without the `pjrt` feature) is a loud error,
+    /// never a silent native fallback — results must not be attributed
+    /// to an artifact that never executed.
     pub fn auto(explicit: Option<&str>) -> Result<Self> {
         match find_artifact(explicit) {
             Some(p) => Runtime::load(&p),
@@ -142,10 +163,14 @@ impl Runtime {
         self.calls.set(self.calls.get() + 1);
         match self.backend {
             Backend::Native => Ok(native::evaluate(input)),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt => self.evaluate_pjrt(input),
+            #[cfg(not(feature = "pjrt"))]
+            Backend::Pjrt => bail!("pjrt backend unavailable without the `pjrt` feature"),
         }
     }
 
+    #[cfg(feature = "pjrt")]
     fn evaluate_pjrt(&self, input: &CostModelInput) -> Result<CostModelOutput> {
         let exe = self.exe.as_ref().expect("pjrt backend has executable");
         let lit = |v: &[f32]| xla::Literal::vec1(v);

@@ -101,7 +101,11 @@ pub fn evaluate_expected(t: &CostTensors, w: &WirelessConfig) -> EvalResult {
     if !w.enabled {
         return evaluate_wired(t);
     }
-    let d = w.distance_threshold as usize;
+    // Buckets start at hop distance 1, so thresholds 0 and 1 admit the
+    // same traffic; clamping also guards the `h - 1` index below against
+    // an (invalid, but representable) zero threshold — see
+    // `WirelessConfig::validate`.
+    let d = (w.distance_threshold as usize).max(1);
     let p = w.injection_prob;
     let mut wl_bits = 0.0;
     let lat_k: Vec<[f64; 5]> = t
@@ -218,6 +222,34 @@ mod tests {
         let b = evaluate_wired(&t);
         assert!((a.total_s - b.total_s).abs() < 1e-18);
         assert_eq!(a.wl_bits, 0.0);
+    }
+
+    #[test]
+    fn threshold_zero_is_clamped_not_panicking() {
+        // Regression: distance_threshold == 0 used to underflow `h - 1`
+        // in the bucket loop (panic in debug, wrap in release). A zero
+        // threshold is rejected by WirelessConfig::validate, but the
+        // evaluator must stay total: it clamps to 1 (buckets start at
+        // hop distance 1, so 0 and 1 admit identical traffic).
+        let t = tensors();
+        let zero = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                distance_threshold: 0,
+                injection_prob: 0.4,
+                ..Default::default()
+            },
+        );
+        let one = evaluate_expected(
+            &t,
+            &WirelessConfig {
+                distance_threshold: 1,
+                injection_prob: 0.4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(zero.total_s, one.total_s);
+        assert_eq!(zero.wl_bits, one.wl_bits);
     }
 
     #[test]

@@ -14,12 +14,32 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_with(n, workers, || (), |(), i| f(i))
+}
+
+/// Like [`parallel_map`], but each worker thread owns a mutable state
+/// value built once by `init` and passed to every job it claims.
+///
+/// This is the campaign engine's hook for per-worker `Runtime` instances:
+/// a PJRT executable is not `Sync`, so it cannot be shared across the
+/// pool, and compiling one per *job* would swamp the sweep itself — one
+/// per *worker* amortizes construction over the whole work list. `init`
+/// runs on the worker thread, lazily on the worker's first claimed job
+/// (at most `workers` times; a worker that never wins a job never pays
+/// for state it would not use).
+pub fn parallel_map_with<S, T, I, F>(n: usize, workers: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
 
     let next = AtomicUsize::new(0);
@@ -38,12 +58,13 @@ where
         for _ in 0..workers {
             handles.push(scope.spawn(|| {
                 let ptr = &out_ptr;
+                let mut state: Option<S> = None;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let out = f(i);
+                    let out = f(state.get_or_insert_with(&init), i);
                     // SAFETY: i < n is in-bounds and claimed uniquely by
                     // the fetch_add above; writes complete before the
                     // scope joins.
@@ -145,6 +166,46 @@ mod tests {
             counter.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(counter.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn map_with_state_initializes_once_per_worker() {
+        let inits = AtomicU64::new(0);
+        let out = parallel_map_with(
+            64,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                0u64
+            },
+            |claimed, i| {
+                *claimed += 1;
+                i * 3
+            },
+        );
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+        let n_inits = inits.load(Ordering::Relaxed);
+        assert!(n_inits >= 1 && n_inits <= 4, "{n_inits} inits");
+    }
+
+    #[test]
+    fn map_with_single_worker_reuses_state() {
+        let inits = AtomicU64::new(0);
+        let out = parallel_map_with(
+            5,
+            1,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            },
+            |seen: &mut Vec<usize>, i| {
+                seen.push(i);
+                seen.len()
+            },
+        );
+        // One worker, one state: the running count accumulates.
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+        assert_eq!(inits.load(Ordering::Relaxed), 1);
     }
 
     #[test]

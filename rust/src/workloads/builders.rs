@@ -1,0 +1,790 @@
+//! The 15 paper benchmark networks plus a synthetic generator.
+//!
+//! The paper evaluates "15 DNN benchmarks covering a wide variety of
+//! models" (GEMINI/Tangram's suite): classic CNN chains, branchy
+//! inception/residual/dense topologies, and sequence models. Layer
+//! dimensions follow the published architectures closely enough to
+//! reproduce the communication *shapes* that matter to the cost model —
+//! chain nets move little cross-chip multicast traffic, branchy nets a
+//! lot, recurrent stacks are dominated by streamed weights.
+//!
+//! Every builder returns a validated [`Workload`] DAG in topological
+//! order. `macs` is never zero (pool/eltwise layers charge their datum
+//! movement as pseudo-MACs at their low utilization class).
+
+use super::ir::{Layer, LayerKind, Workload};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+
+/// The 15 paper workloads, alphabetical.
+pub const WORKLOAD_NAMES: [&str; 15] = [
+    "alexnet",
+    "darknet19",
+    "densenet",
+    "gnmt",
+    "googlenet",
+    "lstm",
+    "mobilenet",
+    "pnasnet",
+    "resnet50",
+    "resnet152",
+    "resnext50",
+    "transformer",
+    "transformer_cell",
+    "vgg",
+    "zfnet",
+];
+
+/// Build one of the paper workloads by name.
+pub fn build(name: &str) -> Result<Workload> {
+    match name {
+        "alexnet" => alexnet(),
+        "darknet19" => darknet19(),
+        "densenet" => densenet(),
+        "gnmt" => gnmt(),
+        "googlenet" => googlenet(),
+        "lstm" => lstm(),
+        "mobilenet" => mobilenet(),
+        "pnasnet" => pnasnet(),
+        "resnet50" => resnet(50),
+        "resnet152" => resnet(152),
+        "resnext50" => resnext50(),
+        "transformer" => transformer(),
+        "transformer_cell" => transformer_cell(),
+        "vgg" => vgg(),
+        "zfnet" => zfnet(),
+        other => bail!(
+            "unknown workload {other:?}; known: {}",
+            WORKLOAD_NAMES.join(", ")
+        ),
+    }
+}
+
+/// Build all 15 paper workloads.
+pub fn build_all() -> Result<Vec<Workload>> {
+    WORKLOAD_NAMES.iter().map(|n| build(n)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Layer construction helpers. All sizes in datums; MACs exact for dense
+// ops, movement-proportional for weightless ops.
+// ---------------------------------------------------------------------------
+
+struct Net {
+    layers: Vec<Layer>,
+}
+
+impl Net {
+    fn new() -> Self {
+        Self { layers: Vec::new() }
+    }
+
+    fn last(&self) -> usize {
+        self.layers.len() - 1
+    }
+
+    fn push(
+        &mut self,
+        name: impl Into<String>,
+        kind: LayerKind,
+        macs: u64,
+        weight: u64,
+        out: u64,
+        inputs: Vec<usize>,
+    ) -> usize {
+        self.layers
+            .push(Layer::new(name, kind, macs.max(1), weight, out.max(1), inputs));
+        self.last()
+    }
+
+    /// `hw x hw` conv, `cout` channels, `k x k` kernel over `cin`.
+    fn conv(
+        &mut self,
+        name: impl Into<String>,
+        hw: u64,
+        cout: u64,
+        k: u64,
+        cin: u64,
+        inputs: Vec<usize>,
+    ) -> usize {
+        let out = hw * hw * cout;
+        let weight = k * k * cin * cout;
+        self.push(name, LayerKind::Conv, out * k * k * cin, weight, out, inputs)
+    }
+
+    /// Depthwise `k x k` conv over `c` channels.
+    fn dwconv(&mut self, name: impl Into<String>, hw: u64, c: u64, k: u64, input: usize) -> usize {
+        let out = hw * hw * c;
+        self.push(
+            name,
+            LayerKind::DepthwiseConv,
+            out * k * k,
+            k * k * c,
+            out,
+            vec![input],
+        )
+    }
+
+    fn fc(&mut self, name: impl Into<String>, cin: u64, cout: u64, inputs: Vec<usize>) -> usize {
+        self.push(name, LayerKind::Fc, cin * cout, cin * cout, cout, inputs)
+    }
+
+    fn pool(&mut self, name: impl Into<String>, hw: u64, c: u64, input: usize) -> usize {
+        let out = hw * hw * c;
+        self.push(name, LayerKind::Pool, out, 0, out, vec![input])
+    }
+
+    fn add(&mut self, name: impl Into<String>, datums: u64, inputs: Vec<usize>) -> usize {
+        self.push(name, LayerKind::EltwiseAdd, datums, 0, datums, inputs)
+    }
+
+    fn concat(&mut self, name: impl Into<String>, datums: u64, inputs: Vec<usize>) -> usize {
+        self.push(name, LayerKind::Concat, datums, 0, datums, inputs)
+    }
+
+    /// Recurrent cell: all four gates of one timestep (`4 h (x + h)`
+    /// weights) producing a hidden state of `h` datums.
+    fn cell(&mut self, name: impl Into<String>, x: u64, h: u64, inputs: Vec<usize>) -> usize {
+        let weight = 4 * h * (x + h);
+        self.push(name, LayerKind::Recurrent, weight, weight, h, inputs)
+    }
+
+    fn into_workload(self, name: &str) -> Result<Workload> {
+        Workload::new(name, self.layers)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chain CNNs
+// ---------------------------------------------------------------------------
+
+/// ZFNet: the AlexNet-class 5-conv/3-fc chain the paper uses as its
+/// compute/DRAM-bound counterpoint to the branchy nets.
+fn zfnet() -> Result<Workload> {
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 55, 96, 7, 3, vec![]);
+    let p1 = n.pool("pool1", 27, 96, c1);
+    let c2 = n.conv("conv2", 13, 256, 5, 96, vec![p1]);
+    let p2 = n.pool("pool2", 13, 256, c2);
+    let c3 = n.conv("conv3", 13, 384, 3, 256, vec![p2]);
+    let c4 = n.conv("conv4", 13, 384, 3, 384, vec![c3]);
+    let c5 = n.conv("conv5", 13, 256, 3, 384, vec![c4]);
+    let p5 = n.pool("pool5", 6, 256, c5);
+    let f6 = n.fc("fc6", 6 * 6 * 256, 4096, vec![p5]);
+    let f7 = n.fc("fc7", 4096, 4096, vec![f6]);
+    n.fc("fc8", 4096, 1000, vec![f7]);
+    n.into_workload("zfnet")
+}
+
+/// AlexNet: the original 5-conv/3-fc chain (grouped convs folded in).
+fn alexnet() -> Result<Workload> {
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 55, 96, 11, 3, vec![]);
+    let p1 = n.pool("pool1", 27, 96, c1);
+    let c2 = n.conv("conv2", 27, 256, 5, 48, vec![p1]);
+    let p2 = n.pool("pool2", 13, 256, c2);
+    let c3 = n.conv("conv3", 13, 384, 3, 256, vec![p2]);
+    let c4 = n.conv("conv4", 13, 384, 3, 192, vec![c3]);
+    let c5 = n.conv("conv5", 13, 256, 3, 192, vec![c4]);
+    let p5 = n.pool("pool5", 6, 256, c5);
+    let f6 = n.fc("fc6", 6 * 6 * 256, 4096, vec![p5]);
+    let f7 = n.fc("fc7", 4096, 4096, vec![f6]);
+    n.fc("fc8", 4096, 1000, vec![f7]);
+    n.into_workload("alexnet")
+}
+
+/// VGG-16: the heavyweight conv/fc chain (its giant fc6 cannot stay
+/// SRAM-resident and must stream per batch).
+fn vgg() -> Result<Workload> {
+    let mut n = Net::new();
+    let c11 = n.conv("conv1_1", 112, 64, 3, 3, vec![]);
+    let c12 = n.conv("conv1_2", 112, 64, 3, 64, vec![c11]);
+    let p1 = n.pool("pool1", 56, 64, c12);
+    let c21 = n.conv("conv2_1", 56, 128, 3, 64, vec![p1]);
+    let c22 = n.conv("conv2_2", 56, 128, 3, 128, vec![c21]);
+    let p2 = n.pool("pool2", 28, 128, c22);
+    let c31 = n.conv("conv3_1", 28, 256, 3, 128, vec![p2]);
+    let c32 = n.conv("conv3_2", 28, 256, 3, 256, vec![c31]);
+    let c33 = n.conv("conv3_3", 28, 256, 3, 256, vec![c32]);
+    let p3 = n.pool("pool3", 14, 256, c33);
+    let c41 = n.conv("conv4_1", 14, 512, 3, 256, vec![p3]);
+    let c42 = n.conv("conv4_2", 14, 512, 3, 512, vec![c41]);
+    let c43 = n.conv("conv4_3", 14, 512, 3, 512, vec![c42]);
+    let p4 = n.pool("pool4", 7, 512, c43);
+    let c51 = n.conv("conv5_1", 7, 512, 3, 512, vec![p4]);
+    let c52 = n.conv("conv5_2", 7, 512, 3, 512, vec![c51]);
+    let c53 = n.conv("conv5_3", 7, 512, 3, 512, vec![c52]);
+    let p5 = n.pool("pool5", 7, 256, c53);
+    let f6 = n.fc("fc6", 7 * 7 * 256, 4096, vec![p5]);
+    let f7 = n.fc("fc7", 4096, 4096, vec![f6]);
+    n.fc("fc8", 4096, 1000, vec![f7]);
+    n.into_workload("vgg")
+}
+
+/// DarkNet-19 (YOLO backbone): a 19-conv chain with 1x1 bottlenecks.
+fn darknet19() -> Result<Workload> {
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 112, 32, 3, 3, vec![]);
+    let p1 = n.pool("pool1", 56, 32, c1);
+    let c2 = n.conv("conv2", 56, 64, 3, 32, vec![p1]);
+    let p2 = n.pool("pool2", 28, 64, c2);
+    let c3 = n.conv("conv3", 28, 128, 3, 64, vec![p2]);
+    let c4 = n.conv("conv4", 28, 64, 1, 128, vec![c3]);
+    let c5 = n.conv("conv5", 28, 128, 3, 64, vec![c4]);
+    let p3 = n.pool("pool3", 14, 128, c5);
+    let c6 = n.conv("conv6", 14, 256, 3, 128, vec![p3]);
+    let c7 = n.conv("conv7", 14, 128, 1, 256, vec![c6]);
+    let c8 = n.conv("conv8", 14, 256, 3, 128, vec![c7]);
+    let p4 = n.pool("pool4", 7, 256, c8);
+    let c9 = n.conv("conv9", 7, 512, 3, 256, vec![p4]);
+    let c10 = n.conv("conv10", 7, 256, 1, 512, vec![c9]);
+    let c11 = n.conv("conv11", 7, 512, 3, 256, vec![c10]);
+    let c12 = n.conv("conv12", 7, 256, 1, 512, vec![c11]);
+    let c13 = n.conv("conv13", 7, 512, 3, 256, vec![c12]);
+    let p5 = n.pool("pool5", 4, 512, c13);
+    let c14 = n.conv("conv14", 4, 1024, 3, 512, vec![p5]);
+    let c15 = n.conv("conv15", 4, 512, 1, 1024, vec![c14]);
+    let c16 = n.conv("conv16", 4, 1024, 3, 512, vec![c15]);
+    let c17 = n.conv("conv17", 4, 512, 1, 1024, vec![c16]);
+    let c18 = n.conv("conv18", 4, 1024, 3, 512, vec![c17]);
+    let c19 = n.conv("conv19", 4, 1000, 1, 1024, vec![c18]);
+    n.pool("avgpool", 1, 1000, c19);
+    n.into_workload("darknet19")
+}
+
+// ---------------------------------------------------------------------------
+// Branchy CNNs
+// ---------------------------------------------------------------------------
+
+/// GoogLeNet: stem + 9 inception modules. Every module fans its input
+/// out to four branches — the cross-chip multicast traffic the wireless
+/// plane targets.
+fn googlenet() -> Result<Workload> {
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 112, 64, 7, 3, vec![]);
+    let p1 = n.pool("pool1", 56, 64, c1);
+    let c2r = n.conv("conv2r", 56, 64, 1, 64, vec![p1]);
+    let c2 = n.conv("conv2", 56, 192, 3, 64, vec![c2r]);
+    let p2 = n.pool("pool2", 28, 192, c2);
+
+    // (tag, spatial size, [b1, b2r, b2, b3r, b3, pool_proj]) per module.
+    let modules: [(&str, u64, [u64; 6]); 9] = [
+        ("3a", 28, [64, 96, 128, 16, 32, 32]),
+        ("3b", 28, [128, 128, 192, 32, 96, 64]),
+        ("4a", 14, [192, 96, 208, 16, 48, 64]),
+        ("4b", 14, [160, 112, 224, 24, 64, 64]),
+        ("4c", 14, [128, 128, 256, 24, 64, 64]),
+        ("4d", 14, [112, 144, 288, 32, 64, 64]),
+        ("4e", 14, [256, 160, 320, 32, 128, 128]),
+        ("5a", 7, [256, 160, 320, 32, 128, 128]),
+        ("5b", 7, [384, 192, 384, 48, 128, 128]),
+    ];
+    let mut prev = p2;
+    let mut cin: u64 = 192;
+    for (tag, hw, [b1, b2r, b2, b3r, b3, bp]) in modules {
+        let l1 = n.conv(format!("inc{tag}_1x1"), hw, b1, 1, cin, vec![prev]);
+        let l2r = n.conv(format!("inc{tag}_3x3r"), hw, b2r, 1, cin, vec![prev]);
+        let l2 = n.conv(format!("inc{tag}_3x3"), hw, b2, 3, b2r, vec![l2r]);
+        let l3r = n.conv(format!("inc{tag}_5x5r"), hw, b3r, 1, cin, vec![prev]);
+        let l3 = n.conv(format!("inc{tag}_5x5"), hw, b3, 5, b3r, vec![l3r]);
+        let lp = n.pool(format!("inc{tag}_pool"), hw, cin, prev);
+        let lpp = n.conv(format!("inc{tag}_proj"), hw, bp, 1, cin, vec![lp]);
+        cin = b1 + b2 + b3 + bp;
+        prev = n.concat(format!("inc{tag}_cat"), hw * hw * cin, vec![l1, l2, l3, lpp]);
+    }
+    let gap = n.pool("avgpool", 1, cin, prev);
+    n.fc("fc", cin, 1000, vec![gap]);
+    n.into_workload("googlenet")
+}
+
+/// DenseNet: dense blocks where every layer's output feeds all later
+/// layers in its block — the branchiest topology of the suite.
+fn densenet() -> Result<Workload> {
+    let mut n = Net::new();
+    let growth: u64 = 32;
+    let c1 = n.conv("conv1", 28, 64, 7, 3, vec![]);
+    let mut prev = n.pool("pool1", 14, 64, c1);
+    let mut channels: u64 = 64;
+    let mut hw: u64 = 14;
+    for (bi, block_layers) in [6u64, 12, 24, 16].iter().enumerate() {
+        // Block inputs: the running concat front. Each dense layer reads
+        // the concat of everything before it in the block.
+        let mut front = prev;
+        for li in 0..*block_layers {
+            let b = n.conv(
+                format!("d{bi}_{li}_bottleneck"),
+                hw,
+                4 * growth,
+                1,
+                channels,
+                vec![front],
+            );
+            let c = n.conv(format!("d{bi}_{li}_conv"), hw, growth, 3, 4 * growth, vec![b]);
+            channels += growth;
+            front = n.concat(format!("d{bi}_{li}_cat"), hw * hw * channels, vec![front, c]);
+        }
+        prev = front;
+        if bi < 3 {
+            channels /= 2;
+            let t = n.conv(format!("trans{bi}"), hw, channels, 1, channels * 2, vec![prev]);
+            hw /= 2;
+            prev = n.pool(format!("trans{bi}_pool"), hw, channels, t);
+        }
+    }
+    let gap = n.pool("avgpool", 1, channels, prev);
+    n.fc("fc", channels, 1000, vec![gap]);
+    n.into_workload("densenet")
+}
+
+/// ResNet bottleneck stack (50 or 152 layers deep). Residual joins give
+/// every block input two consumers: the conv path and the skip add.
+fn resnet(depth: u64) -> Result<Workload> {
+    let blocks: [u64; 4] = match depth {
+        50 => [3, 4, 6, 3],
+        152 => [3, 8, 36, 3],
+        _ => [3, 4, 6, 3],
+    };
+    let name = format!("resnet{depth}");
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 28, 64, 7, 3, vec![]);
+    let mut prev = n.pool("pool1", 14, 64, c1);
+    let mut cin: u64 = 64;
+    let mut hw: u64 = 14;
+    for (si, nblocks) in blocks.iter().enumerate() {
+        let width: u64 = 64 << si;
+        let cout = width * 4;
+        for b in 0..*nblocks {
+            if si > 0 && b == 0 {
+                hw /= 2;
+            }
+            let skip = if cin != cout {
+                n.conv(format!("s{si}b{b}_down"), hw, cout, 1, cin, vec![prev])
+            } else {
+                prev
+            };
+            let r = n.conv(format!("s{si}b{b}_1x1a"), hw, width, 1, cin, vec![prev]);
+            let c = n.conv(format!("s{si}b{b}_3x3"), hw, width, 3, width, vec![r]);
+            let e = n.conv(format!("s{si}b{b}_1x1b"), hw, cout, 1, width, vec![c]);
+            prev = n.add(format!("s{si}b{b}_add"), hw * hw * cout, vec![skip, e]);
+            cin = cout;
+        }
+    }
+    let gap = n.pool("avgpool", 1, cin, prev);
+    n.fc("fc", cin, 1000, vec![gap]);
+    n.into_workload(&name)
+}
+
+/// ResNeXt-50 (32x4d): the ResNet-50 skeleton with wider grouped 3x3
+/// convs (grouping divides the 3x3 weight/MAC volume by 32).
+fn resnext50() -> Result<Workload> {
+    let mut n = Net::new();
+    let c1 = n.conv("conv1", 28, 64, 7, 3, vec![]);
+    let mut prev = n.pool("pool1", 14, 64, c1);
+    let mut cin: u64 = 64;
+    let mut hw: u64 = 14;
+    for (si, nblocks) in [3u64, 4, 6, 3].iter().enumerate() {
+        let width: u64 = 128 << si;
+        let cout: u64 = 256 << si;
+        for b in 0..*nblocks {
+            if si > 0 && b == 0 {
+                hw /= 2;
+            }
+            let skip = if cin != cout {
+                n.conv(format!("s{si}b{b}_down"), hw, cout, 1, cin, vec![prev])
+            } else {
+                prev
+            };
+            let r = n.conv(format!("s{si}b{b}_1x1a"), hw, width, 1, cin, vec![prev]);
+            // Grouped 3x3: weights and MACs divided by the 32 groups.
+            let g_out = hw * hw * width;
+            let g_w = 3 * 3 * width * width / 32;
+            let g = n.push(
+                format!("s{si}b{b}_g3x3"),
+                LayerKind::Conv,
+                g_out * 9 * width / 32,
+                g_w,
+                g_out,
+                vec![r],
+            );
+            let e = n.conv(format!("s{si}b{b}_1x1b"), hw, cout, 1, width, vec![g]);
+            prev = n.add(format!("s{si}b{b}_add"), hw * hw * cout, vec![skip, e]);
+            cin = cout;
+        }
+    }
+    let gap = n.pool("avgpool", 1, cin, prev);
+    n.fc("fc", cin, 1000, vec![gap]);
+    n.into_workload("resnext50")
+}
+
+/// MobileNetV2: inverted residual blocks (expand 1x1, depthwise 3x3,
+/// project 1x1) with skip adds on the stride-1 blocks.
+fn mobilenet() -> Result<Workload> {
+    let mut n = Net::new();
+    let mut prev = n.conv("conv1", 56, 32, 3, 3, vec![]);
+    let mut cin: u64 = 32;
+    let mut hw: u64 = 56;
+    // (expansion, out_channels, repeats, first_stride)
+    let cfg: [(u64, u64, u64, u64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut idx = 0;
+    for (t, cout, reps, stride) in cfg {
+        for r in 0..reps {
+            let s = if r == 0 { stride } else { 1 };
+            if s == 2 {
+                hw /= 2;
+            }
+            let hidden = cin * t;
+            let e = if t > 1 {
+                n.conv(format!("b{idx}_expand"), hw, hidden, 1, cin, vec![prev])
+            } else {
+                prev
+            };
+            let d = n.dwconv(format!("b{idx}_dw"), hw, hidden, 3, e);
+            let p = n.conv(format!("b{idx}_project"), hw, cout, 1, hidden, vec![d]);
+            prev = if s == 1 && cin == cout {
+                n.add(format!("b{idx}_add"), hw * hw * cout, vec![prev, p])
+            } else {
+                p
+            };
+            cin = cout;
+            idx += 1;
+        }
+    }
+    let head = n.conv("conv_head", hw, 1280, 1, cin, vec![prev]);
+    let gap = n.pool("avgpool", 1, 1280, head);
+    n.fc("fc", 1280, 1000, vec![gap]);
+    n.into_workload("mobilenet")
+}
+
+/// PNASNet-style cell stack: each cell combines five branch pairs over
+/// the two previous cell outputs — heavy multi-consumer fan-out.
+fn pnasnet() -> Result<Workload> {
+    let mut n = Net::new();
+    let stem = n.conv("stem", 28, 96, 3, 3, vec![]);
+    let mut prev2 = stem;
+    let mut prev1 = n.conv("stem2", 14, 128, 3, 96, vec![stem]);
+    let mut hw: u64 = 14;
+    let mut c: u64 = 128;
+    for cell in 0..6 {
+        if cell == 2 || cell == 4 {
+            hw /= 2;
+            c *= 2;
+        }
+        let mut outs = Vec::new();
+        for br in 0..5 {
+            // Each branch: separable conv on one input, 1x1 on the other.
+            let a_in = if br % 2 == 0 { prev1 } else { prev2 };
+            let b_in = if br % 2 == 0 { prev2 } else { prev1 };
+            let a = n.dwconv(format!("c{cell}_b{br}_sep"), hw, c, 5, a_in);
+            let ap = n.conv(format!("c{cell}_b{br}_pw"), hw, c / 4, 1, c, vec![a]);
+            let b = n.conv(format!("c{cell}_b{br}_1x1"), hw, c / 4, 1, c, vec![b_in]);
+            outs.push(n.add(format!("c{cell}_b{br}_join"), hw * hw * c / 4, vec![ap, b]));
+        }
+        let cat = n.concat(format!("c{cell}_cat"), hw * hw * (c / 4) * 5, outs);
+        prev2 = prev1;
+        prev1 = n.conv(format!("c{cell}_squeeze"), hw, c, 1, (c / 4) * 5, vec![cat]);
+    }
+    let gap = n.pool("avgpool", 1, c, prev1);
+    n.fc("fc", c, 1000, vec![gap]);
+    n.into_workload("pnasnet")
+}
+
+// ---------------------------------------------------------------------------
+// Sequence models
+// ---------------------------------------------------------------------------
+
+/// Two-layer LSTM language model unrolled over 20 timesteps: a pure
+/// recurrent chain whose streamed weights dwarf its tiny activations.
+fn lstm() -> Result<Workload> {
+    let mut n = Net::new();
+    let h: u64 = 1024;
+    let emb = n.push("embed", LayerKind::Embedding, h, 32_000 * h / 64, h, vec![]);
+    let mut prev = emb;
+    for t in 0..20 {
+        let c1 = n.cell(format!("t{t}_l0"), h, h, vec![prev]);
+        let c2 = n.cell(format!("t{t}_l1"), h, h, vec![c1]);
+        prev = c2;
+    }
+    n.fc("logits", h, 32_000 / 8, vec![prev]);
+    n.into_workload("lstm")
+}
+
+/// GNMT: 8-layer encoder + 8-layer decoder with attention, unrolled to
+/// the paper's 369 layers — the deepest workload of the suite.
+fn gnmt() -> Result<Workload> {
+    let mut n = Net::new();
+    let h: u64 = 512;
+    let (enc_steps, dec_steps): (u64, u64) = (20, 23);
+    let emb = n.push("embed", LayerKind::Embedding, h, 32_000 * h / 64, h, vec![]);
+    // Encoder: 8 stacked cells per timestep, chained across time by
+    // folding the stack output forward.
+    let mut carry = emb;
+    for t in 0..enc_steps {
+        let mut x = carry;
+        for l in 0..8 {
+            x = n.cell(format!("enc_t{t}_l{l}"), h, h, vec![x]);
+        }
+        carry = x;
+    }
+    // Decoder: attention over the encoder carry + 8 stacked cells.
+    for t in 0..dec_steps {
+        let att = n.push(
+            format!("dec_t{t}_att"),
+            LayerKind::Attention,
+            enc_steps * h * 2,
+            h * h / 4,
+            h,
+            vec![carry],
+        );
+        let mut x = att;
+        for l in 0..8 {
+            x = n.cell(format!("dec_t{t}_l{l}"), h, h, vec![x]);
+        }
+        carry = x;
+    }
+    n.fc("logits", h, 32_000 / 8, vec![carry]);
+    // 1 embed + 20*8 enc + 23*(1+8) dec + 1 fc = 369 layers — the
+    // deepest of the 15 paper workloads (runtime contract MAX_LAYERS).
+    n.into_workload("gnmt")
+}
+
+/// Transformer encoder (6 blocks): attention + FFN with residual joins —
+/// branchy like the paper's best-gaining workloads.
+fn transformer() -> Result<Workload> {
+    let mut n = Net::new();
+    let (seq, d, ffn): (u64, u64, u64) = (64, 1024, 4096);
+    let tok = seq * d;
+    let emb = n.push("embed", LayerKind::Embedding, tok, 32_000 * d / 64, tok, vec![]);
+    let mut prev = emb;
+    for b in 0..6 {
+        let qkv = n.push(
+            format!("blk{b}_qkv"),
+            LayerKind::Fc,
+            seq * d * 3 * d,
+            3 * d * d,
+            3 * tok,
+            vec![prev],
+        );
+        let att = n.push(
+            format!("blk{b}_attn"),
+            LayerKind::Attention,
+            seq * seq * d * 2,
+            0,
+            tok,
+            vec![qkv],
+        );
+        let proj = n.push(
+            format!("blk{b}_proj"),
+            LayerKind::Fc,
+            seq * d * d,
+            d * d,
+            tok,
+            vec![att],
+        );
+        let add1 = n.add(format!("blk{b}_add1"), tok, vec![prev, proj]);
+        let norm1 = n.push(format!("blk{b}_norm1"), LayerKind::Norm, tok, 0, tok, vec![add1]);
+        let f1 = n.push(
+            format!("blk{b}_ffn1"),
+            LayerKind::Fc,
+            seq * d * ffn,
+            d * ffn,
+            seq * ffn,
+            vec![norm1],
+        );
+        let f2 = n.push(
+            format!("blk{b}_ffn2"),
+            LayerKind::Fc,
+            seq * ffn * d,
+            ffn * d,
+            tok,
+            vec![f1],
+        );
+        let add2 = n.add(format!("blk{b}_add2"), tok, vec![norm1, f2]);
+        prev = n.push(format!("blk{b}_norm2"), LayerKind::Norm, tok, 0, tok, vec![add2]);
+    }
+    n.fc("logits", d, 32_000 / 8, vec![prev]);
+    n.into_workload("transformer")
+}
+
+/// One transformer block in isolation (GEMINI's "Transformer_cell").
+fn transformer_cell() -> Result<Workload> {
+    let mut n = Net::new();
+    let (seq, d, ffn): (u64, u64, u64) = (128, 512, 2048);
+    let tok = seq * d;
+    let inp = n.push("input", LayerKind::Norm, tok, 0, tok, vec![]);
+    let qkv = n.push("qkv", LayerKind::Fc, seq * d * 3 * d, 3 * d * d, 3 * tok, vec![inp]);
+    let att = n.push("attn", LayerKind::Attention, seq * seq * d * 2, 0, tok, vec![qkv]);
+    let proj = n.push("proj", LayerKind::Fc, seq * d * d, d * d, tok, vec![att]);
+    let add1 = n.add("add1", tok, vec![inp, proj]);
+    let norm1 = n.push("norm1", LayerKind::Norm, tok, 0, tok, vec![add1]);
+    let f1 = n.push("ffn1", LayerKind::Fc, seq * d * ffn, d * ffn, seq * ffn, vec![norm1]);
+    let f2 = n.push("ffn2", LayerKind::Fc, seq * ffn * d, ffn * d, tok, vec![f1]);
+    let add2 = n.add("add2", tok, vec![norm1, f2]);
+    n.push("norm2", LayerKind::Norm, tok, 0, tok, vec![add2]);
+    n.into_workload("transformer_cell")
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic generator (property tests)
+// ---------------------------------------------------------------------------
+
+/// Specification for a random synthetic workload.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub n_layers: usize,
+    /// Fraction of layers whose output fans out to several consumers.
+    pub branchiness: f64,
+    pub seed: u64,
+}
+
+/// Convenience constructor (the property tests' entry point).
+pub fn synthetic_spec(n_layers: usize, branchiness: f64, seed: u64) -> SyntheticSpec {
+    SyntheticSpec {
+        n_layers,
+        branchiness,
+        seed,
+    }
+}
+
+/// Generate a random-but-valid synthetic workload: a topologically
+/// ordered DAG with conv/fc/pool/add layers, sized so flows are large
+/// relative to the stochastic message granularity.
+pub fn synthetic(spec: &SyntheticSpec) -> Result<Workload> {
+    let n_layers = spec.n_layers.max(2);
+    let mut rng = Pcg32::seeded(spec.seed);
+    let mut layers: Vec<Layer> = Vec::with_capacity(n_layers);
+    layers.push(Layer::new(
+        "in0",
+        LayerKind::Conv,
+        1 << 24,
+        1 << 12,
+        1 << 18,
+        vec![],
+    ));
+    for i in 1..n_layers {
+        // Pick 1-2 producers, biased toward recent layers; the
+        // branchiness knob re-reads older outputs, creating fan-out.
+        let recent = i - 1;
+        let mut inputs = vec![recent];
+        if i >= 2 && rng.coin(spec.branchiness) {
+            let extra = rng.below(i as u64) as usize;
+            if extra != recent {
+                inputs.push(extra);
+            }
+        }
+        let kind = match rng.below(5) {
+            0 => LayerKind::Conv,
+            1 => LayerKind::Fc,
+            2 => LayerKind::Pool,
+            3 => LayerKind::EltwiseAdd,
+            _ => LayerKind::Conv,
+        };
+        let out: u64 = 1 << (14 + rng.below(6)); // 16 Kd .. 512 Kd
+        let (macs, weight) = match kind {
+            LayerKind::Conv => (out * 288, 9 * (out >> 6).max(64)),
+            LayerKind::Fc => {
+                let w = out * (1 << rng.below(8));
+                (w, w)
+            }
+            _ => (out, 0),
+        };
+        layers.push(Layer::new(
+            format!("l{i}_{kind:?}"),
+            kind,
+            macs.max(1),
+            weight,
+            out,
+            inputs,
+        ));
+    }
+    Workload::new(format!("synthetic{}", spec.seed), layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_fifteen_build_and_validate() {
+        let all = build_all().unwrap();
+        assert_eq!(all.len(), 15);
+        for w in &all {
+            w.validate().unwrap();
+            assert!(w.total_macs() > 0, "{}", w.name);
+            assert!(w.layers.len() <= 512, "{}: {} layers", w.name, w.layers.len());
+            assert!(w.layers.iter().all(|l| l.macs > 0), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("nope").is_err());
+    }
+
+    #[test]
+    fn gnmt_is_deepest_at_369_layers() {
+        let gnmt = build("gnmt").unwrap();
+        assert_eq!(gnmt.layers.len(), 369);
+        for name in WORKLOAD_NAMES {
+            let w = build(name).unwrap();
+            assert!(w.layers.len() <= gnmt.layers.len(), "{name} deeper than gnmt");
+        }
+    }
+
+    #[test]
+    fn resnet152_is_deepest_cnn() {
+        let r152 = build("resnet152").unwrap();
+        let r50 = build("resnet50").unwrap();
+        assert!(r152.layers.len() > r50.layers.len());
+        for name in ["vgg", "googlenet", "densenet", "pnasnet", "mobilenet"] {
+            assert!(build(name).unwrap().layers.len() < r152.layers.len(), "{name}");
+        }
+    }
+
+    #[test]
+    fn branchy_nets_are_branchier_than_chains() {
+        let frac = |n: &str| build(n).unwrap().branch_fraction();
+        for branchy in ["googlenet", "densenet", "resnet50", "transformer"] {
+            for chain in ["vgg", "zfnet", "lstm", "darknet19"] {
+                assert!(
+                    frac(branchy) > frac(chain),
+                    "{branchy} ({}) vs {chain} ({})",
+                    frac(branchy),
+                    frac(chain)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn named_layers_exist() {
+        let vgg = build("vgg").unwrap();
+        assert_eq!(vgg.layers[0].name, "conv1_1");
+        assert!(vgg.layers.iter().any(|l| l.name == "fc6"));
+        assert_eq!(vgg.layers.last().unwrap().name, "fc8");
+        let goog = build("googlenet").unwrap();
+        let p2 = goog.layers.iter().position(|l| l.name == "pool2").unwrap();
+        assert!(goog.consumers()[p2].len() >= 4);
+        let c2r = goog.layers.iter().position(|l| l.name == "conv2r").unwrap();
+        assert_eq!(goog.consumers()[c2r].len(), 1);
+    }
+
+    #[test]
+    fn synthetic_respects_spec() {
+        let w = synthetic(&synthetic_spec(30, 0.5, 42)).unwrap();
+        assert_eq!(w.layers.len(), 30);
+        w.validate().unwrap();
+        let chain = synthetic(&synthetic_spec(30, 0.0, 42)).unwrap();
+        assert!(w.branch_fraction() >= chain.branch_fraction());
+        // Deterministic per seed.
+        let w2 = synthetic(&synthetic_spec(30, 0.5, 42)).unwrap();
+        assert_eq!(w.total_macs(), w2.total_macs());
+    }
+}

@@ -1,0 +1,177 @@
+//! Campaign engine integration: the full coordinator -> campaign path
+//! over real workloads, cross-checked against the sequential sweep
+//! wrappers it subsumes.
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::dse::{run_campaign, sweep_grid, CampaignSpec, CampaignWorkload};
+use wisper::runtime::Runtime;
+
+fn coordinator() -> Coordinator {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 0; // deterministic layer-sequential mappings
+    Coordinator::new(cfg).unwrap()
+}
+
+fn names(list: &[&str]) -> Vec<String> {
+    list.iter().map(|s| s.to_string()).collect()
+}
+
+/// Paper-shapes style: >=2 workloads x >=2 bandwidths in one campaign,
+/// aggregates keyed and ordered correctly.
+#[test]
+fn campaign_over_two_workloads_and_bandwidths() {
+    let c = coordinator();
+    let spec = CampaignSpec::from_sweep_config(&c.cfg.sweep);
+    let result = c
+        .campaign(&names(&["zfnet", "googlenet"]), false, &spec)
+        .unwrap();
+
+    assert_eq!(result.units, 4); // 2 workloads x 2 bandwidths
+    assert_eq!(result.grid_evaluations, 4 * 60);
+    assert_eq!(result.workloads.len(), 2);
+    assert_eq!(result.workloads[0].name, "zfnet");
+    assert_eq!(result.workloads[1].name, "googlenet");
+    for w in &result.workloads {
+        assert!(w.t_wired > 0.0);
+        assert_eq!(w.per_bw.len(), 2);
+        assert_eq!(w.per_bw[0].bandwidth, 64e9);
+        assert_eq!(w.per_bw[1].bandwidth, 96e9);
+        for b in &w.per_bw {
+            assert_eq!(b.sweep.points.len(), 60);
+            assert!(b.refined.is_none());
+            // Best grid point never loses to the wired baseline by more
+            // than noise: the grid includes near-harmless low-pinj points.
+            assert!(b.sweep.best_point().speedup >= 0.99);
+        }
+        // More wireless bandwidth never hurts the best point.
+        assert!(
+            w.per_bw[1].best_speedup() >= w.per_bw[0].best_speedup() - 1e-9
+        );
+    }
+    // The branchy workload gains more than the fc-heavy chain.
+    let z = result.workloads[0].per_bw[0].best_speedup();
+    let g = result.workloads[1].per_bw[0].best_speedup();
+    assert!(g > z, "googlenet {g} vs zfnet {z}");
+}
+
+/// The campaign's per-(workload, bandwidth) sweeps must be identical to
+/// sequential `sweep_grid` runs — one evaluation pipeline.
+#[test]
+fn campaign_matches_sequential_sweep_grid() {
+    let c = coordinator();
+    let spec = CampaignSpec {
+        workers: 3,
+        ..CampaignSpec::from_sweep_config(&c.cfg.sweep)
+    };
+    let wl_names = names(&["googlenet", "densenet"]);
+    let result = c.campaign(&wl_names, false, &spec).unwrap();
+
+    let rt = Runtime::native();
+    for (wi, name) in wl_names.iter().enumerate() {
+        let prep = c.prepare(name, false).unwrap();
+        for (bi, &bw) in spec.bandwidths.iter().enumerate() {
+            let reference = sweep_grid(
+                &rt,
+                &prep.tensors,
+                &spec.thresholds,
+                &spec.pinjs,
+                bw,
+            )
+            .unwrap();
+            let got = &result.workloads[wi].per_bw[bi].sweep;
+            assert_eq!(got.best, reference.best, "{name}@{bw}");
+            assert_eq!(got.points.len(), reference.points.len());
+            for (a, b) in got.points.iter().zip(&reference.points) {
+                assert_eq!(a.total_s, b.total_s, "{name}@{bw}");
+                assert_eq!(a.speedup, b.speedup);
+            }
+        }
+    }
+}
+
+/// Worker count must not change results, only wall-clock.
+#[test]
+fn campaign_deterministic_across_worker_counts() {
+    let c = coordinator();
+    let prep: Vec<_> = ["zfnet", "resnet50", "lstm"]
+        .iter()
+        .map(|n| c.prepare(n, false).unwrap())
+        .collect();
+    let workloads: Vec<CampaignWorkload> = prep
+        .iter()
+        .map(|p| CampaignWorkload {
+            name: p.workload.name.clone(),
+            tensors: &p.tensors,
+            t_wired: Some(p.wired.total_s),
+        })
+        .collect();
+    let base = CampaignSpec::default();
+    let r1 = run_campaign(
+        &workloads,
+        &CampaignSpec { workers: 1, ..base.clone() },
+        Runtime::native,
+    )
+    .unwrap();
+    let r4 = run_campaign(
+        &workloads,
+        &CampaignSpec { workers: 4, ..base },
+        Runtime::native,
+    )
+    .unwrap();
+    for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.t_wired, b.t_wired);
+        for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+            assert_eq!(x.sweep.best, y.sweep.best);
+            for (p, q) in x.sweep.points.iter().zip(&y.sweep.points) {
+                assert_eq!(p.total_s, q.total_s);
+                assert_eq!(p.speedup, q.speedup);
+                assert_eq!(p.wl_bits, q.wl_bits);
+            }
+        }
+    }
+}
+
+/// The adaptive refinement stage rides along per (workload, bandwidth)
+/// and never makes the reported best worse than the grid best.
+#[test]
+fn campaign_refinement_stage() {
+    let c = coordinator();
+    let spec = CampaignSpec {
+        refine: true,
+        ..CampaignSpec::from_sweep_config(&c.cfg.sweep)
+    };
+    let result = c.campaign(&names(&["googlenet"]), false, &spec).unwrap();
+    let w = &result.workloads[0];
+    for b in &w.per_bw {
+        let refined = b.refined.as_ref().expect("refinement requested");
+        assert!(refined.evaluations > 0);
+        assert!(refined.evaluations < 60, "hill-climb should beat the grid");
+        assert!(b.best_speedup() >= b.sweep.best_point().speedup);
+        // The hill climb lands near the grid optimum on this workload.
+        assert!(
+            refined.speedup >= 0.9 * b.sweep.best_point().speedup,
+            "adaptive {} vs grid {}",
+            refined.speedup,
+            b.sweep.best_point().speedup
+        );
+    }
+}
+
+/// Campaign-level JSON summary is written through the report module.
+#[test]
+fn campaign_json_report() {
+    let c = coordinator();
+    let spec = CampaignSpec::from_sweep_config(&c.cfg.sweep);
+    let result = c.campaign(&names(&["zfnet"]), false, &spec).unwrap();
+    let json = result.to_json().render();
+    assert!(json.contains("\"workloads\""));
+    assert!(json.contains("\"zfnet\""));
+    assert!(json.contains("\"bandwidth_bits\": 64000000000"));
+    let dir = std::env::temp_dir().join("wisper_campaign_json");
+    let path = dir.join("campaign.json");
+    wisper::report::write_json(&path, &result.to_json()).unwrap();
+    assert!(std::fs::read_to_string(&path).unwrap().contains("zfnet"));
+    let _ = std::fs::remove_dir_all(dir);
+}

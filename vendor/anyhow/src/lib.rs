@@ -1,0 +1,219 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment for this repository has no crates.io access, so
+//! the workspace vendors the subset of `anyhow` the codebase uses: the
+//! dynamic [`Error`] type, [`Result`], the `anyhow!` / `bail!` /
+//! `ensure!` macros, and the [`Context`] extension trait for `Result`
+//! and `Option`. Semantics follow upstream anyhow for this subset:
+//! context wraps the underlying error and both are shown by `Display`
+//! (`{context}: {source}`), and any `std::error::Error` converts into
+//! [`Error`] via `?`.
+
+use std::fmt;
+
+/// A dynamic error: a message plus an optional chain of wrapped causes.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with additional context (outermost first, like
+    /// upstream anyhow).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (without the cause chain).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = vec![self.msg.as_str()];
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = &e.source;
+        }
+        items.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.source;
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = &e.source;
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error` (same as
+// upstream anyhow), which keeps this blanket conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().unwrap());
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+/// `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_joins_context_chain() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(e.to_string(), "reading config: no such file");
+        assert_eq!(e.message(), "reading config");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        fn f(x: usize) -> Result<()> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert!(e.to_string().starts_with("ctx: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+
+        // Context on an already-anyhow Result (Into<Error> identity).
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.context("outer").unwrap_err();
+        assert_eq!(e2.to_string(), "outer: inner");
+    }
+}
