@@ -2,7 +2,13 @@
 //!
 //! Grammar: `wisper <subcommand> [--flag] [--key value] [positional...]`.
 //! Flags may use `--key=value` or `--key value`. Unknown options error.
+//!
+//! Also home to the shared comma-list parsers used by `--workloads`,
+//! `--bws` and `--experiments` (and by scenario files): items are
+//! trimmed, empty entries and trailing commas are hard errors, and
+//! duplicates are dropped while preserving first-seen order.
 
+use crate::workloads::WORKLOAD_NAMES;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -101,6 +107,63 @@ pub fn parse(args: &[String], specs: &[OptSpec]) -> Result<Parsed> {
     Ok(out)
 }
 
+/// Parse a comma-separated list: trim items, reject empty entries (so
+/// `a,,b` and trailing commas error instead of silently shrinking),
+/// dedupe while preserving first-seen order. `ctx` labels the source
+/// in errors (`--workloads` for the CLI, `scenario.workloads` for
+/// TOML).
+pub fn parse_comma_list(ctx: &str, raw: &str) -> Result<Vec<String>> {
+    if raw.trim().is_empty() {
+        bail!("{ctx}: empty list");
+    }
+    let mut out: Vec<String> = Vec::new();
+    for item in raw.split(',') {
+        let t = item.trim();
+        if t.is_empty() {
+            bail!(
+                "{ctx}: empty entry in {raw:?} (doubled or trailing comma?)"
+            );
+        }
+        if !out.iter().any(|x| x == t) {
+            out.push(t.to_string());
+        }
+    }
+    Ok(out)
+}
+
+/// [`parse_comma_list`] + validation against the paper workload set;
+/// an unknown name errors listing every valid workload.
+pub fn parse_workload_list(ctx: &str, raw: &str) -> Result<Vec<String>> {
+    let names = parse_comma_list(ctx, raw)?;
+    validate_workload_names(ctx, &names)?;
+    Ok(names)
+}
+
+/// Validate already-split workload names. `ctx` labels the source in
+/// errors (`--workloads` for the CLI, `scenario.workloads` for TOML).
+pub fn validate_workload_names(ctx: &str, names: &[String]) -> Result<()> {
+    for n in names {
+        if !WORKLOAD_NAMES.contains(&n.as_str()) {
+            bail!(
+                "{ctx}: unknown workload {n:?}; valid workloads: {}",
+                WORKLOAD_NAMES.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+/// [`parse_comma_list`] for numeric options like `--bws 64e9,96e9`.
+pub fn parse_f64_list(ctx: &str, raw: &str) -> Result<Vec<f64>> {
+    parse_comma_list(ctx, raw)?
+        .into_iter()
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("{ctx}: expected a number, got {s:?}"))
+        })
+        .collect()
+}
+
 /// Render a help block from specs.
 pub fn render_help(program: &str, subcommands: &[(&str, &str)], specs: &[OptSpec]) -> String {
     let mut s = format!("usage: {program} <command> [options]\n\ncommands:\n");
@@ -183,6 +246,43 @@ mod tests {
         let p = parse(&sv(&["--all"]), &specs()).unwrap();
         assert_eq!(p.subcommand, "");
         assert!(p.has_flag("all"));
+    }
+
+    #[test]
+    fn comma_list_trims_and_dedupes_in_order() {
+        let v = parse_comma_list("workloads", " b , a ,b, c ").unwrap();
+        assert_eq!(v, vec!["b", "a", "c"]);
+    }
+
+    #[test]
+    fn comma_list_rejects_empty_entries() {
+        assert!(parse_comma_list("workloads", "").is_err());
+        assert!(parse_comma_list("workloads", "   ").is_err());
+        assert!(parse_comma_list("workloads", "a,,b").is_err());
+        assert!(parse_comma_list("workloads", "a,b,").is_err());
+        assert!(parse_comma_list("workloads", ",a").is_err());
+    }
+
+    #[test]
+    fn workload_list_validates_names() {
+        let v = parse_workload_list("workloads", "zfnet,googlenet").unwrap();
+        assert_eq!(v, vec!["zfnet", "googlenet"]);
+        let err = parse_workload_list("workloads", "zfnet,nope")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope"), "{err}");
+        // The error teaches the valid set.
+        assert!(err.contains("zfnet") && err.contains("transformer"), "{err}");
+    }
+
+    #[test]
+    fn f64_list_parses_and_rejects() {
+        assert_eq!(
+            parse_f64_list("bws", "64e9, 96e9").unwrap(),
+            vec![64e9, 96e9]
+        );
+        assert!(parse_f64_list("bws", "64e9,abc").is_err());
+        assert!(parse_f64_list("bws", "64e9,").is_err());
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //!
 //! Supported: `[section]` headers, `key = value` with values being
 //! integers, floats (incl. `64e9`), booleans, quoted strings, and flat
-//! arrays of numbers. Comments with `#`. Nested tables, dates and
-//! multi-line strings are out of scope (serde/toml are not in the
-//! offline registry).
+//! arrays of numbers or of quoted strings (no commas inside the
+//! strings). Comments with `#`. Nested tables, dates and multi-line
+//! strings are out of scope (serde/toml are not in the offline
+//! registry).
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -16,6 +17,7 @@ pub enum Value {
     Bool(bool),
     Str(String),
     List(Vec<f64>),
+    StrList(Vec<String>),
 }
 
 /// A parsed document: flat map of `section.key` -> Value.
@@ -95,22 +97,34 @@ impl TomlDoc {
                     bail!("line {}: unterminated array", lineno + 1);
                 }
                 let inner = &v[1..v.len() - 1];
-                let mut items = Vec::new();
+                let mut nums = Vec::new();
+                let mut strs = Vec::new();
                 for part in inner.split(',') {
                     let p = part.trim();
                     if p.is_empty() {
                         continue;
                     }
                     match parse_scalar(p)? {
-                        Value::Int(i) => items.push(i as f64),
-                        Value::Float(f) => items.push(f),
+                        Value::Int(i) => nums.push(i as f64),
+                        Value::Float(f) => nums.push(f),
+                        Value::Str(s) => strs.push(s),
                         other => bail!(
-                            "line {}: arrays may only hold numbers, got {other:?}",
+                            "line {}: arrays may only hold numbers or strings, got {other:?}",
                             lineno + 1
                         ),
                     }
                 }
-                Value::List(items)
+                if !strs.is_empty() && !nums.is_empty() {
+                    bail!(
+                        "line {}: arrays may not mix numbers and strings",
+                        lineno + 1
+                    );
+                }
+                if strs.is_empty() {
+                    Value::List(nums)
+                } else {
+                    Value::StrList(strs)
+                }
             } else {
                 parse_scalar(v)
                     .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?
@@ -175,6 +189,20 @@ impl TomlDoc {
             Some(other) => bail!("{key}: expected array, got {other:?}"),
         }
     }
+
+    /// A list of strings: either a `["a", "b"]` array or a single
+    /// `"a,b"` comma-separated string (both spellings are accepted so
+    /// scenario files can stay terse). The string form goes through
+    /// the same shared parser as the CLI's comma lists, so empty
+    /// entries and trailing commas are hard errors here too.
+    pub fn get_list_str(&self, key: &str) -> Result<Option<Vec<String>>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::StrList(v)) => Ok(Some(v.clone())),
+            Some(Value::Str(s)) => crate::cli::parse_comma_list(key, s).map(Some),
+            Some(other) => bail!("{key}: expected array of strings, got {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +248,31 @@ mod tests {
         assert!(doc.get_f64("x").is_err());
         assert!(doc.get_u64("y").is_err());
         assert!(doc.get_bool("y").is_err());
+    }
+
+    #[test]
+    fn string_arrays_parse() {
+        let doc = TomlDoc::parse(
+            "a = [\"x\", \"y\"]\nb = \"p, q\"\nc = [1, 2]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get_list_str("a").unwrap(),
+            Some(vec!["x".to_string(), "y".to_string()])
+        );
+        // Comma-separated string accepted as a string list too.
+        assert_eq!(
+            doc.get_list_str("b").unwrap(),
+            Some(vec!["p".to_string(), "q".to_string()])
+        );
+        assert!(doc.get_list_str("c").is_err());
+        assert!(doc.get_list_f64("a").is_err());
+        assert!(TomlDoc::parse("m = [1, \"x\"]\n").is_err());
+        // The comma-string spelling shares the CLI parser's contract:
+        // doubled/trailing commas are hard errors, not silent shrinks.
+        let sloppy = TomlDoc::parse("n = \"a,,b\"\nt = \"a,b,\"\n").unwrap();
+        assert!(sloppy.get_list_str("n").is_err());
+        assert!(sloppy.get_list_str("t").is_err());
     }
 
     #[test]

@@ -1,28 +1,33 @@
-//! End-to-end orchestration: build workload -> SA-map it (wired cost)
-//! -> extract cost tensors -> sweep the wireless grid via the AOT
-//! runtime -> aggregate paper-figure data.
+//! Execution substrate for experiments: build workload -> SA-map it
+//! (wired cost) -> extract cost tensors -> hand the result to the
+//! sweep/campaign engines.
 //!
-//! This is the leader process of the stack: it owns the package model,
-//! the mapper, the runtime handle and the worker pool, and exposes one
-//! entry point per experiment (Fig. 2 / Fig. 4 / Fig. 5 + ablations).
+//! The `Coordinator` owns the package model, the mapper, the runtime
+//! handle and the worker pool. The paper experiments themselves live in
+//! [`crate::experiment`] (one [`crate::experiment::Experiment`] impl
+//! per evaluation, driven by a declarative
+//! [`crate::experiment::Scenario`]); the `fig2`/`fig4`/`fig5`/
+//! `energy`/`validate_stochastic` methods below survive only as thin
+//! compatibility shims over [`crate::experiment::figures`] — prefer the
+//! experiment registry for new code.
 
 pub mod loadbalance;
 
 use crate::arch::Package;
 use crate::config::{Config, WirelessConfig};
-use crate::dse::{
-    run_campaign, sweep_bandwidths, sweep_grid, CampaignResult, CampaignSpec,
-    CampaignWorkload, SweepResult,
-};
-use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::dse::{run_campaign, CampaignResult, CampaignSpec, CampaignWorkload, SweepResult};
+use crate::energy::EnergyBreakdown;
+use crate::experiment::figures;
 use crate::mapping::mapper::{anneal, SaOptions};
 use crate::mapping::{layer_sequential, Mapping};
 use crate::runtime::Runtime;
 use crate::sim::cost::{build_tensors, CostTensors};
-use crate::sim::{evaluate_wired, stochastic, EvalResult};
+use crate::sim::{evaluate_wired, EvalResult};
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workloads::{build, Workload, WORKLOAD_NAMES};
 use anyhow::Result;
+
+pub use crate::experiment::figures::{Fig4Cell, Fig4Row};
 
 /// A workload prepared for experiments: mapped and tensorized.
 #[derive(Debug, Clone)]
@@ -54,6 +59,12 @@ impl Coordinator {
     pub fn with_artifact(mut self, path: Option<String>) -> Self {
         self.artifact_path = path;
         self
+    }
+
+    /// The explicit artifact path override, if any (the runtime layer
+    /// falls back to `WISPER_ARTIFACT` / the default location).
+    pub fn artifact(&self) -> Option<&str> {
+        self.artifact_path.as_deref()
     }
 
     pub fn runtime(&self) -> Result<Runtime> {
@@ -123,54 +134,40 @@ impl Coordinator {
     }
 
     /// Figure 2: per-workload wired bottleneck shares.
+    ///
+    /// Deprecated shim over [`figures::fig2_shares`]; prefer the
+    /// `fig2` experiment in [`crate::experiment`].
     pub fn fig2(&self, prepared: &[Prepared]) -> Vec<(String, [f64; 5])> {
-        prepared
-            .iter()
-            .map(|p| (p.workload.name.clone(), p.wired.shares))
-            .collect()
+        figures::fig2_shares(prepared)
     }
 
     /// Figure 4: per-workload best speedup at each sweep bandwidth.
     /// Pass the `Runtime` in (compile the artifact once, sweep many) —
     /// see `runtime()`.
+    ///
+    /// Deprecated shim over [`figures::fig4_rows`] with this config's
+    /// sweep axes; prefer the `fig4` experiment in
+    /// [`crate::experiment`].
     pub fn fig4(&self, rt: &Runtime, prepared: &[Prepared]) -> Result<Vec<Fig4Row>> {
-        let mut rows = Vec::with_capacity(prepared.len());
-        for p in prepared {
-            let sweeps = sweep_bandwidths(
-                rt,
-                &p.tensors,
-                &self.cfg.sweep.thresholds,
-                &self.cfg.sweep.injection_probs,
-                &self.cfg.sweep.bandwidths_bits,
-            )?;
-            let per_bw = sweeps
-                .into_iter()
-                .map(|(bw, r)| {
-                    let b = r.best_point();
-                    Fig4Cell {
-                        wl_bw: bw,
-                        speedup: b.speedup,
-                        threshold: b.threshold,
-                        pinj: b.pinj,
-                        total_s: b.total_s,
-                    }
-                })
-                .collect();
-            rows.push(Fig4Row {
-                workload: p.workload.name.clone(),
-                t_wired: p.wired.total_s,
-                per_bw,
-            });
-        }
-        Ok(rows)
+        figures::fig4_rows(
+            rt,
+            prepared,
+            &self.cfg.sweep.thresholds,
+            &self.cfg.sweep.injection_probs,
+            &self.cfg.sweep.bandwidths_bits,
+        )
     }
 
     /// Figure 5: full (threshold x pinj) heatmap for one workload at one
     /// bandwidth. Pass the `Runtime` in (compile once, sweep many).
+    ///
+    /// Deprecated shim over [`figures::fig5_grid`] with this config's
+    /// sweep axes; prefer the `fig5` experiment in
+    /// [`crate::experiment`].
     pub fn fig5(&self, rt: &Runtime, prepared: &Prepared, wl_bw: f64) -> Result<SweepResult> {
-        sweep_grid(
+        figures::fig5_grid(
             rt,
-            &prepared.tensors,
+            prepared,
             &self.cfg.sweep.thresholds,
             &self.cfg.sweep.injection_probs,
             wl_bw,
@@ -178,9 +175,7 @@ impl Coordinator {
     }
 
     /// Run a full sweep campaign over `names`: prepare every workload
-    /// (in parallel), then fan the workload x bandwidth x grid
-    /// cross-product out over the worker pool with one `Runtime` per
-    /// worker. See `dse::campaign` for the engine itself.
+    /// (in parallel), then hand off to [`Self::campaign_prepared`].
     pub fn campaign(
         &self,
         names: &[String],
@@ -201,7 +196,21 @@ impl Coordinator {
             })
             .into_iter()
             .collect();
-        let prepared = prepared?;
+        self.campaign_prepared(&prepared?, &spec)
+    }
+
+    /// Fan the workload x bandwidth x grid cross-product of
+    /// already-prepared workloads out over the worker pool with one
+    /// `Runtime` per worker. See `dse::campaign` for the engine itself.
+    pub fn campaign_prepared(
+        &self,
+        prepared: &[Prepared],
+        spec: &CampaignSpec,
+    ) -> Result<CampaignResult> {
+        let mut spec = spec.clone();
+        if spec.workers == 0 {
+            spec.workers = self.workers();
+        }
         let workloads: Vec<CampaignWorkload> = prepared
             .iter()
             .map(|p| CampaignWorkload {
@@ -229,68 +238,29 @@ impl Coordinator {
 
     /// Cross-validate the expected-value artifact path against the
     /// stochastic per-message mode; returns (expected_s, stochastic_s).
+    ///
+    /// Deprecated shim over [`figures::expected_vs_stochastic`]; prefer
+    /// the `stochastic-validation` experiment in [`crate::experiment`].
     pub fn validate_stochastic(
         &self,
         p: &Prepared,
         w: &WirelessConfig,
         seeds: u64,
     ) -> Result<(f64, f64)> {
-        let expected = crate::sim::evaluate_expected(&p.tensors, w);
-        let mut acc = 0.0;
-        for s in 0..seeds.max(1) {
-            acc += stochastic::simulate(&p.workload, &p.mapping, &self.pkg, w, s)?.total_s;
-        }
-        Ok((expected.total_s, acc / seeds.max(1) as f64))
+        figures::expected_vs_stochastic(p, &self.pkg, w, seeds)
     }
 
     /// Energy/EDP comparison for one workload at a wireless config.
+    ///
+    /// Deprecated shim over [`figures::energy_breakdown`]; prefer the
+    /// `energy` experiment in [`crate::experiment`].
     pub fn energy(
         &self,
         p: &Prepared,
         w: &WirelessConfig,
     ) -> Result<(EnergyBreakdown, EnergyBreakdown, f64, f64)> {
-        let em = EnergyModel::default();
-        let traffic = crate::sim::characterize(&p.workload, &p.mapping, &self.pkg)?;
-        let dram_bits: f64 = traffic.iter().map(|t| t.dram_bits).sum();
-        let noc_bit_hops: f64 = traffic
-            .iter()
-            .map(|t| t.noc_bits_per_chiplet * 4.0)
-            .sum();
-        let hybrid_res = crate::sim::evaluate_expected(&p.tensors, w);
-        let wired_e = em.evaluate(
-            p.workload.total_macs(),
-            dram_bits,
-            noc_bit_hops,
-            &p.tensors,
-            &p.wired,
-        );
-        let hybrid_e = em.evaluate(
-            p.workload.total_macs(),
-            dram_bits,
-            noc_bit_hops,
-            &p.tensors,
-            &hybrid_res,
-        );
-        Ok((wired_e, hybrid_e, p.wired.total_s, hybrid_res.total_s))
+        figures::energy_breakdown(p, &self.pkg, w)
     }
-}
-
-/// One bandwidth's best point for a Fig.4 bar.
-#[derive(Debug, Clone)]
-pub struct Fig4Cell {
-    pub wl_bw: f64,
-    pub speedup: f64,
-    pub threshold: u32,
-    pub pinj: f64,
-    pub total_s: f64,
-}
-
-/// One workload row of Figure 4.
-#[derive(Debug, Clone)]
-pub struct Fig4Row {
-    pub workload: String,
-    pub t_wired: f64,
-    pub per_bw: Vec<Fig4Cell>,
 }
 
 #[cfg(test)]

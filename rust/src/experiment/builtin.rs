@@ -1,0 +1,687 @@
+//! The built-in experiments: each paper evaluation implemented once
+//! against the [`Experiment`](super::Experiment) trait, so every entry
+//! point (CLI, scenario files, library callers) drives them through the
+//! same registry.
+
+use super::figures;
+use super::{CsvTable, Experiment, ExperimentCtx, ExperimentOutput};
+use crate::config::WirelessConfig;
+use crate::dse::CampaignSpec;
+use crate::report::{self, Json};
+use crate::sim::COMPONENTS;
+use crate::util::eng;
+use crate::util::threadpool::parallel_map;
+use anyhow::Result;
+
+/// Stable metric-key spelling of a bandwidth (`64000000000`, not a
+/// display string), so cross-run compare keys never drift.
+fn bw_key(bw: f64) -> String {
+    format!("{bw}")
+}
+
+/// Figure 2: wired bottleneck shares per workload.
+pub struct Fig2Bottleneck;
+
+impl Experiment for Fig2Bottleneck {
+    fn name(&self) -> &'static str {
+        "fig2"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Figure 2: wired bottleneck breakdown (% of execution time) per workload"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let rows = figures::fig2_shares(ctx.prepared);
+
+        let mut text = String::from(
+            "Figure 2: wired bottleneck shares (% of execution time)\n\n",
+        );
+        text.push_str(&report::stacked_shares(&rows));
+        let mut trows = Vec::new();
+        for (name, shares) in &rows {
+            let mut r = vec![name.clone()];
+            r.extend(shares.iter().map(|s| format!("{:>5.1}%", s * 100.0)));
+            trows.push(r);
+        }
+        let headers: Vec<&str> = std::iter::once("workload")
+            .chain(COMPONENTS.iter().copied())
+            .collect();
+        text.push('\n');
+        text.push_str(&report::table(&headers, &trows));
+
+        let mut csv_rows = Vec::new();
+        let mut json_workloads = Vec::new();
+        let mut metrics = Vec::new();
+        for ((name, shares), p) in rows.iter().zip(ctx.prepared) {
+            let mut r = vec![name.clone()];
+            r.extend(shares.iter().map(|s| format!("{s:.4}")));
+            r.push(format!("{:.6e}", p.wired.total_s));
+            csv_rows.push(r);
+            json_workloads.push(Json::Obj(vec![
+                ("name".into(), Json::Str(name.clone())),
+                (
+                    "shares".into(),
+                    Json::Arr(shares.iter().map(|s| Json::Num(*s)).collect()),
+                ),
+                ("t_wired_s".into(), Json::Num(p.wired.total_s)),
+            ]));
+            metrics.push((format!("{name}/t_wired_s"), p.wired.total_s));
+        }
+        let csv_headers: Vec<String> = std::iter::once("workload".to_string())
+            .chain(COMPONENTS.iter().map(|c| c.to_string()))
+            .chain(std::iter::once("total_s".to_string()))
+            .collect();
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![(
+                "workloads".into(),
+                Json::Arr(json_workloads),
+            )]),
+            csvs: vec![CsvTable {
+                name: "fig2_bottleneck".into(),
+                headers: csv_headers,
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Figure 4: best hybrid speedup per workload at each bandwidth.
+pub struct Fig4Speedup;
+
+impl Experiment for Fig4Speedup {
+    fn name(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Figure 4: best hybrid speedup over the wired baseline per workload and bandwidth"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        // The ctx's memoized sweeps feed the shared row builder, so
+        // fig5/energy reuse the same grids.
+        let rows = figures::fig4_rows_with(ctx.prepared, &s.bandwidths, |i, bw| {
+            ctx.sweep(i, bw)
+        })?;
+
+        let mut headers: Vec<String> = vec!["workload".into()];
+        for bw in &s.bandwidths {
+            headers.push(format!("{} gain", eng(*bw, "b/s")));
+            headers.push("best cfg".into());
+        }
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for row in &rows {
+            let mut r = vec![row.workload.clone()];
+            let mut json_bw = Vec::new();
+            for cell in &row.per_bw {
+                r.push(format!("{:+.1}%", (cell.speedup - 1.0) * 100.0));
+                r.push(format!("d={} p={:.2}", cell.threshold, cell.pinj));
+                csv_rows.push(vec![
+                    row.workload.clone(),
+                    format!("{}", cell.wl_bw),
+                    format!("{:.6}", cell.speedup),
+                    format!("{}", cell.threshold),
+                    format!("{:.2}", cell.pinj),
+                    format!("{:.6e}", row.t_wired),
+                    format!("{:.6e}", cell.total_s),
+                ]);
+                json_bw.push(Json::Obj(vec![
+                    ("bandwidth_bits".into(), Json::Num(cell.wl_bw)),
+                    ("speedup".into(), Json::Num(cell.speedup)),
+                    ("threshold".into(), Json::Num(cell.threshold as f64)),
+                    ("pinj".into(), Json::Num(cell.pinj)),
+                    ("total_s".into(), Json::Num(cell.total_s)),
+                ]));
+                metrics.push((
+                    format!("{}/{}/best_speedup", row.workload, bw_key(cell.wl_bw)),
+                    cell.speedup,
+                ));
+            }
+            metrics.push((format!("{}/t_wired_s", row.workload), row.t_wired));
+            json_rows.push(Json::Obj(vec![
+                ("name".into(), Json::Str(row.workload.clone())),
+                ("t_wired_s".into(), Json::Num(row.t_wired)),
+                ("per_bandwidth".into(), Json::Arr(json_bw)),
+            ]));
+            trows.push(r);
+        }
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut text =
+            String::from("Figure 4: best hybrid speedup over the wired baseline\n\n");
+        text.push_str(&report::table(&hrefs, &trows));
+        for (i, bw) in s.bandwidths.iter().enumerate() {
+            let gains: Vec<f64> = rows
+                .iter()
+                .map(|r| (r.per_bw[i].speedup - 1.0) * 100.0)
+                .collect();
+            text.push_str(&format!(
+                "\n{}: average speedup {:+.1}%, max {:+.1}%",
+                eng(*bw, "b/s"),
+                crate::util::stats::mean(&gains),
+                crate::util::stats::max(&gains),
+            ));
+        }
+        text.push('\n');
+
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![("workloads".into(), Json::Arr(json_rows))]),
+            csvs: vec![CsvTable {
+                name: "fig4_speedup".into(),
+                headers: [
+                    "workload", "wl_bw", "speedup", "threshold", "pinj", "t_wired",
+                    "t_hybrid",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Figure 5: full (threshold x pinj) heatmap per workload and bandwidth.
+pub struct Fig5Heatmap;
+
+impl Experiment for Fig5Heatmap {
+    fn name(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn describe(&self) -> &'static str {
+        "Figure 5: threshold x injection-probability speedup heatmap per workload"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        let rl: Vec<String> = s.thresholds.iter().map(|t| format!("d={t}")).collect();
+        let cl: Vec<String> = s
+            .injection_probs
+            .iter()
+            .map(|p| format!("{:.0}%", p * 100.0))
+            .collect();
+
+        let mut text = String::new();
+        let mut csv_rows = Vec::new();
+        let mut json_cells = Vec::new();
+        let mut metrics = Vec::new();
+        for (i, p) in ctx.prepared.iter().enumerate() {
+            for &bw in &s.bandwidths {
+                let sweep = ctx.sweep(i, bw)?;
+                let hm = sweep.heatmap(&s.thresholds, &s.injection_probs);
+                text.push_str(&format!(
+                    "Figure 5: {} speedup (%) vs threshold x pinj @ {}\n",
+                    p.workload.name,
+                    eng(bw, "b/s")
+                ));
+                text.push_str(&report::heatmap(&rl, &cl, &hm));
+                let best = sweep.best_point();
+                text.push_str(&format!(
+                    "best: d={} pinj={:.2} -> {:+.1}%\n\n",
+                    best.threshold,
+                    best.pinj,
+                    (best.speedup - 1.0) * 100.0
+                ));
+                for pt in &sweep.points {
+                    csv_rows.push(vec![
+                        p.workload.name.clone(),
+                        format!("{bw}"),
+                        pt.threshold.to_string(),
+                        format!("{:.2}", pt.pinj),
+                        format!("{:.6}", pt.speedup),
+                    ]);
+                }
+                metrics.push((
+                    format!("{}/{}/best_speedup", p.workload.name, bw_key(bw)),
+                    best.speedup,
+                ));
+                json_cells.push(Json::Obj(vec![
+                    ("name".into(), Json::Str(p.workload.name.clone())),
+                    ("bandwidth_bits".into(), Json::Num(bw)),
+                    (
+                        "heatmap".into(),
+                        Json::Arr(
+                            hm.iter()
+                                .map(|row| {
+                                    Json::Arr(
+                                        row.iter().map(|v| Json::Num(*v)).collect(),
+                                    )
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "best".into(),
+                        Json::Obj(vec![
+                            ("threshold".into(), Json::Num(best.threshold as f64)),
+                            ("pinj".into(), Json::Num(best.pinj)),
+                            ("speedup".into(), Json::Num(best.speedup)),
+                        ]),
+                    ),
+                ]));
+            }
+        }
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![
+                (
+                    "thresholds".into(),
+                    Json::Arr(
+                        s.thresholds.iter().map(|t| Json::Num(*t as f64)).collect(),
+                    ),
+                ),
+                (
+                    "injection_probs".into(),
+                    Json::Arr(
+                        s.injection_probs.iter().map(|p| Json::Num(*p)).collect(),
+                    ),
+                ),
+                ("cells".into(), Json::Arr(json_cells)),
+            ]),
+            csvs: vec![CsvTable {
+                name: "fig5_heatmap".into(),
+                headers: ["workload", "wl_bw", "threshold", "pinj", "speedup"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Campaign: the parallel cross-product sweep engine as an experiment.
+pub struct Campaign;
+
+impl Experiment for Campaign {
+    fn name(&self) -> &'static str {
+        "campaign"
+    }
+
+    fn describe(&self) -> &'static str {
+        "parallel sweep campaign: workloads x bandwidths x grid, with optional refinement"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        let spec = CampaignSpec {
+            thresholds: s.thresholds.clone(),
+            pinjs: s.injection_probs.clone(),
+            bandwidths: s.bandwidths.clone(),
+            workers: s.resolved_workers(ctx.coord),
+            refine: s.refine,
+            ..CampaignSpec::default()
+        };
+        let result = ctx.coord.campaign_prepared(ctx.prepared, &spec)?;
+
+        let mut headers: Vec<String> = vec!["workload".into(), "t_wired(s)".into()];
+        for bw in &spec.bandwidths {
+            headers.push(format!("{} gain", eng(*bw, "b/s")));
+            headers.push("best cfg".into());
+        }
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for w in &result.workloads {
+            let mut row = vec![w.name.clone(), format!("{:.4e}", w.t_wired)];
+            metrics.push((format!("{}/t_wired_s", w.name), w.t_wired));
+            for b in &w.per_bw {
+                let grid_best = b.sweep.best_point();
+                let (bt, bp) = b.best_config();
+                row.push(format!("{:+.1}%", (b.best_speedup() - 1.0) * 100.0));
+                row.push(format!("d={bt} p={bp:.2}"));
+                metrics.push((
+                    format!("{}/{}/best_speedup", w.name, bw_key(b.bandwidth)),
+                    b.best_speedup(),
+                ));
+                csv_rows.push(vec![
+                    w.name.clone(),
+                    format!("{}", b.bandwidth),
+                    format!("{}", grid_best.threshold),
+                    format!("{:.2}", grid_best.pinj),
+                    format!("{:.6}", grid_best.speedup),
+                    format!("{:.6e}", grid_best.total_s),
+                    format!("{:.6e}", w.t_wired),
+                    b.refined
+                        .as_ref()
+                        .map(|r| format!("{:.6}", r.speedup))
+                        .unwrap_or_default(),
+                ]);
+            }
+            trows.push(row);
+        }
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut text = format!(
+            "sweep campaign: {} workloads x {} bandwidths x {} grid points ({} units)\n\n",
+            result.workloads.len(),
+            spec.bandwidths.len(),
+            spec.grid_size(),
+            result.units,
+        );
+        text.push_str(&report::table(&hrefs, &trows));
+        text.push_str(&format!(
+            "\n{} work units, {} grid points evaluated\n",
+            result.units, result.grid_evaluations
+        ));
+        for (bi, bw) in spec.bandwidths.iter().enumerate() {
+            let gains: Vec<f64> = result
+                .workloads
+                .iter()
+                .map(|w| (w.per_bw[bi].best_speedup() - 1.0) * 100.0)
+                .collect();
+            text.push_str(&format!(
+                "{}: average speedup {:+.1}%, max {:+.1}%\n",
+                eng(*bw, "b/s"),
+                crate::util::stats::mean(&gains),
+                crate::util::stats::max(&gains),
+            ));
+        }
+
+        Ok(ExperimentOutput {
+            text,
+            json: result.to_json(),
+            csvs: vec![CsvTable {
+                name: "campaign".into(),
+                headers: [
+                    "workload",
+                    "wl_bw",
+                    "grid_threshold",
+                    "grid_pinj",
+                    "grid_speedup",
+                    "grid_t_hybrid",
+                    "t_wired",
+                    "refined_speedup",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Energy/EDP at the best grid point per (workload, bandwidth).
+pub struct Energy;
+
+impl Experiment for Energy {
+    fn name(&self) -> &'static str {
+        "energy"
+    }
+
+    fn describe(&self) -> &'static str {
+        "energy and EDP, wired vs hybrid at the best grid configuration"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for (i, p) in ctx.prepared.iter().enumerate() {
+            for &bw in &s.bandwidths {
+                let sweep = ctx.sweep(i, bw)?;
+                let best = sweep.best_point();
+                let w = WirelessConfig {
+                    bandwidth_bits: bw,
+                    distance_threshold: best.threshold,
+                    injection_prob: best.pinj,
+                    ..ctx.coord.cfg.wireless.clone()
+                };
+                let (we, he, tw, th) =
+                    figures::energy_breakdown(p, &ctx.coord.pkg, &w)?;
+                let name = &p.workload.name;
+                trows.push(vec![
+                    name.clone(),
+                    eng(bw, "b/s"),
+                    format!("{:.3e}", we.total_j()),
+                    format!("{:.3e}", he.total_j()),
+                    format!("{:.3e}", we.edp(tw)),
+                    format!("{:.3e}", he.edp(th)),
+                    format!("{:+.1}%", (we.edp(tw) / he.edp(th) - 1.0) * 100.0),
+                ]);
+                csv_rows.push(vec![
+                    name.clone(),
+                    format!("{bw}"),
+                    format!("{}", best.threshold),
+                    format!("{:.2}", best.pinj),
+                    format!("{:.6e}", we.total_j()),
+                    format!("{:.6e}", he.total_j()),
+                    format!("{:.6e}", we.edp(tw)),
+                    format!("{:.6e}", he.edp(th)),
+                    format!("{:.6e}", tw),
+                    format!("{:.6e}", th),
+                ]);
+                json_rows.push(Json::Obj(vec![
+                    ("name".into(), Json::Str(name.clone())),
+                    ("bandwidth_bits".into(), Json::Num(bw)),
+                    ("threshold".into(), Json::Num(best.threshold as f64)),
+                    ("pinj".into(), Json::Num(best.pinj)),
+                    ("energy_wired_j".into(), Json::Num(we.total_j())),
+                    ("energy_hybrid_j".into(), Json::Num(he.total_j())),
+                    ("edp_wired".into(), Json::Num(we.edp(tw))),
+                    ("edp_hybrid".into(), Json::Num(he.edp(th))),
+                    ("t_wired_s".into(), Json::Num(tw)),
+                    ("t_hybrid_s".into(), Json::Num(th)),
+                ]));
+                let bk = bw_key(bw);
+                metrics.push((format!("{name}/{bk}/edp_wired"), we.edp(tw)));
+                metrics.push((format!("{name}/{bk}/edp_hybrid"), he.edp(th)));
+                metrics.push((
+                    format!("{name}/{bk}/energy_hybrid_j"),
+                    he.total_j(),
+                ));
+            }
+        }
+        let mut text = String::from(
+            "energy/EDP at each (workload, bandwidth)'s best grid point\n\n",
+        );
+        text.push_str(&report::table(
+            &[
+                "workload",
+                "wl_bw",
+                "E_wired(J)",
+                "E_hybrid(J)",
+                "EDP_wired",
+                "EDP_hybrid",
+                "EDP gain",
+            ],
+            &trows,
+        ));
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![("rows".into(), Json::Arr(json_rows))]),
+            csvs: vec![CsvTable {
+                name: "energy".into(),
+                headers: [
+                    "workload",
+                    "wl_bw",
+                    "threshold",
+                    "pinj",
+                    "e_wired_j",
+                    "e_hybrid_j",
+                    "edp_wired",
+                    "edp_hybrid",
+                    "t_wired_s",
+                    "t_hybrid_s",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Expected-value artifact model vs stochastic per-message simulation.
+pub struct StochasticValidation;
+
+impl Experiment for StochasticValidation {
+    fn name(&self) -> &'static str {
+        "stochastic-validation"
+    }
+
+    fn describe(&self) -> &'static str {
+        "expected-value model vs stochastic per-message mode, averaged over seeds"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        // Validate at the first scenario bandwidth with the configured
+        // decision criteria (the validation is about the two engines
+        // agreeing, not about finding the best point).
+        let w = WirelessConfig {
+            bandwidth_bits: s.bandwidths[0],
+            ..ctx.coord.cfg.wireless.clone()
+        };
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for p in ctx.prepared {
+            let (exp, stoch) =
+                figures::expected_vs_stochastic(p, &ctx.coord.pkg, &w, s.seeds)?;
+            let rel = (exp - stoch).abs() / exp.max(1e-30);
+            let name = &p.workload.name;
+            trows.push(vec![
+                name.clone(),
+                format!("{exp:.4e}"),
+                format!("{stoch:.4e}"),
+                format!("{:.2}%", rel * 100.0),
+            ]);
+            csv_rows.push(vec![
+                name.clone(),
+                format!("{exp:.6e}"),
+                format!("{stoch:.6e}"),
+                format!("{rel:.6e}"),
+                format!("{}", s.seeds),
+            ]);
+            json_rows.push(Json::Obj(vec![
+                ("name".into(), Json::Str(name.clone())),
+                ("expected_s".into(), Json::Num(exp)),
+                ("stochastic_s".into(), Json::Num(stoch)),
+                ("rel_err".into(), Json::Num(rel)),
+            ]));
+            metrics.push((format!("{name}/rel_err"), rel));
+        }
+        let mut text = format!(
+            "expected-value artifact model vs stochastic per-message mode ({} seeds)\n\n",
+            s.seeds
+        );
+        text.push_str(&report::table(
+            &["workload", "expected(s)", "stochastic(s)", "rel.err"],
+            &trows,
+        ));
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![
+                ("seeds".into(), Json::Num(s.seeds as f64)),
+                ("rows".into(), Json::Arr(json_rows)),
+            ]),
+            csvs: vec![CsvTable {
+                name: "stochastic_validation".into(),
+                headers: ["workload", "expected_s", "stochastic_s", "rel_err", "seeds"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Mapping ablation: SA-optimized vs layer-sequential wired baselines.
+pub struct MappingAblation;
+
+impl Experiment for MappingAblation {
+    fn name(&self) -> &'static str {
+        "mapping-ablation"
+    }
+
+    fn describe(&self) -> &'static str {
+        "SA-optimized vs layer-sequential mapping: wired-baseline ablation"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        // ctx.prepared already holds the arm matching the scenario's
+        // optimize flag; only the other arm is new work, fanned out
+        // over the pool like every other prepare path.
+        let coord = ctx.coord;
+        let names = &ctx.scenario.workloads;
+        let flip = !ctx.scenario.optimize;
+        let workers = ctx.scenario.resolved_workers(coord);
+        let others: Result<Vec<_>> =
+            parallel_map(names.len(), workers, |i| coord.prepare(&names[i], flip))
+                .into_iter()
+                .collect();
+        let others = others?;
+
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for (i, name) in ctx.scenario.workloads.iter().enumerate() {
+            let (seq, sa) = if ctx.scenario.optimize {
+                (&others[i], &ctx.prepared[i])
+            } else {
+                (&ctx.prepared[i], &others[i])
+            };
+            let gain = (seq.wired.total_s / sa.wired.total_s - 1.0) * 100.0;
+            trows.push(vec![
+                name.clone(),
+                format!("{:.4e}", seq.wired.total_s),
+                format!("{:.4e}", sa.wired.total_s),
+                format!("{gain:+.1}%"),
+            ]);
+            csv_rows.push(vec![
+                name.clone(),
+                format!("{:.6e}", seq.wired.total_s),
+                format!("{:.6e}", sa.wired.total_s),
+                format!("{gain:.6}"),
+            ]);
+            json_rows.push(Json::Obj(vec![
+                ("name".into(), Json::Str(name.clone())),
+                ("t_seq_s".into(), Json::Num(seq.wired.total_s)),
+                ("t_sa_s".into(), Json::Num(sa.wired.total_s)),
+                ("sa_gain_pct".into(), Json::Num(gain)),
+            ]));
+            metrics.push((format!("{name}/t_sa_s"), sa.wired.total_s));
+            metrics.push((format!("{name}/sa_gain_pct"), gain));
+        }
+        let mut text = String::from(
+            "mapping ablation: layer-sequential vs SA-optimized wired baselines\n\n",
+        );
+        text.push_str(&report::table(
+            &["workload", "t_seq(s)", "t_sa(s)", "SA gain"],
+            &trows,
+        ));
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![("rows".into(), Json::Arr(json_rows))]),
+            csvs: vec![CsvTable {
+                name: "mapping_ablation".into(),
+                headers: ["workload", "t_seq_s", "t_sa_s", "sa_gain_pct"]
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}

@@ -1,0 +1,149 @@
+//! Paper-figure computation helpers: the implementations that used to
+//! live as bespoke `Coordinator` methods (`fig2`/`fig4`/`fig5`/
+//! `energy`/`validate_stochastic`), now free functions shared by the
+//! [`Experiment`](super::Experiment) implementations in
+//! [`super::builtin`] and by the thin compatibility shims the
+//! `Coordinator` still exposes.
+
+use crate::arch::Package;
+use crate::config::WirelessConfig;
+use crate::coordinator::Prepared;
+use crate::dse::{sweep_grid, SweepResult};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::runtime::Runtime;
+use crate::sim::stochastic;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// One bandwidth's best point for a Fig. 4 bar.
+#[derive(Debug, Clone)]
+pub struct Fig4Cell {
+    pub wl_bw: f64,
+    pub speedup: f64,
+    pub threshold: u32,
+    pub pinj: f64,
+    pub total_s: f64,
+}
+
+/// One workload row of Figure 4.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub workload: String,
+    pub t_wired: f64,
+    pub per_bw: Vec<Fig4Cell>,
+}
+
+/// Figure 2: per-workload wired bottleneck shares.
+pub fn fig2_shares(prepared: &[Prepared]) -> Vec<(String, [f64; 5])> {
+    prepared
+        .iter()
+        .map(|p| (p.workload.name.clone(), p.wired.shares))
+        .collect()
+}
+
+/// Figure 4 rows from an arbitrary sweep source: `sweep(i, bw)` yields
+/// the grid for `prepared[i]` at `bw`. The one place best points turn
+/// into Fig. 4 cells — both [`fig4_rows`] and the `fig4` experiment's
+/// memoized-cache path feed through here.
+pub fn fig4_rows_with<F>(
+    prepared: &[Prepared],
+    bandwidths: &[f64],
+    mut sweep: F,
+) -> Result<Vec<Fig4Row>>
+where
+    F: FnMut(usize, f64) -> Result<Rc<SweepResult>>,
+{
+    let mut rows = Vec::with_capacity(prepared.len());
+    for (i, p) in prepared.iter().enumerate() {
+        let mut per_bw = Vec::with_capacity(bandwidths.len());
+        for &bw in bandwidths {
+            let r = sweep(i, bw)?;
+            let b = r.best_point();
+            per_bw.push(Fig4Cell {
+                wl_bw: bw,
+                speedup: b.speedup,
+                threshold: b.threshold,
+                pinj: b.pinj,
+                total_s: b.total_s,
+            });
+        }
+        rows.push(Fig4Row {
+            workload: p.workload.name.clone(),
+            t_wired: p.wired.total_s,
+            per_bw,
+        });
+    }
+    Ok(rows)
+}
+
+/// Figure 4: per-workload best speedup at each sweep bandwidth. Pass
+/// the `Runtime` in (compile the artifact once, sweep many).
+pub fn fig4_rows(
+    rt: &Runtime,
+    prepared: &[Prepared],
+    thresholds: &[u32],
+    pinjs: &[f64],
+    bandwidths: &[f64],
+) -> Result<Vec<Fig4Row>> {
+    fig4_rows_with(prepared, bandwidths, |i, bw| {
+        sweep_grid(rt, &prepared[i].tensors, thresholds, pinjs, bw).map(Rc::new)
+    })
+}
+
+/// Figure 5: full (threshold x pinj) heatmap for one workload at one
+/// bandwidth — a named alias of the one sweep primitive.
+pub fn fig5_grid(
+    rt: &Runtime,
+    prepared: &Prepared,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    wl_bw: f64,
+) -> Result<SweepResult> {
+    sweep_grid(rt, &prepared.tensors, thresholds, pinjs, wl_bw)
+}
+
+/// Cross-validate the expected-value artifact path against the
+/// stochastic per-message mode; returns (expected_s, stochastic_s
+/// averaged over `seeds` seeds).
+pub fn expected_vs_stochastic(
+    p: &Prepared,
+    pkg: &Package,
+    w: &WirelessConfig,
+    seeds: u64,
+) -> Result<(f64, f64)> {
+    let expected = crate::sim::evaluate_expected(&p.tensors, w);
+    let mut acc = 0.0;
+    for s in 0..seeds.max(1) {
+        acc += stochastic::simulate(&p.workload, &p.mapping, pkg, w, s)?.total_s;
+    }
+    Ok((expected.total_s, acc / seeds.max(1) as f64))
+}
+
+/// Energy/EDP comparison for one workload at a wireless config:
+/// (wired breakdown, hybrid breakdown, t_wired_s, t_hybrid_s).
+pub fn energy_breakdown(
+    p: &Prepared,
+    pkg: &Package,
+    w: &WirelessConfig,
+) -> Result<(EnergyBreakdown, EnergyBreakdown, f64, f64)> {
+    let em = EnergyModel::default();
+    let traffic = crate::sim::characterize(&p.workload, &p.mapping, pkg)?;
+    let dram_bits: f64 = traffic.iter().map(|t| t.dram_bits).sum();
+    let noc_bit_hops: f64 = traffic.iter().map(|t| t.noc_bits_per_chiplet * 4.0).sum();
+    let hybrid_res = crate::sim::evaluate_expected(&p.tensors, w);
+    let wired_e = em.evaluate(
+        p.workload.total_macs(),
+        dram_bits,
+        noc_bit_hops,
+        &p.tensors,
+        &p.wired,
+    );
+    let hybrid_e = em.evaluate(
+        p.workload.total_macs(),
+        dram_bits,
+        noc_bit_hops,
+        &p.tensors,
+        &hybrid_res,
+    );
+    Ok((wired_e, hybrid_e, p.wired.total_s, hybrid_res.total_s))
+}

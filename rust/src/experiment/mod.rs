@@ -1,0 +1,229 @@
+//! Unified experiment API: declarative scenarios, a registry of
+//! experiments, and a persisted run store.
+//!
+//! The paper's evaluation is a *family* of experiments (Fig. 2
+//! bottleneck shares, Fig. 4 speedup bars, Fig. 5 heatmaps, energy/EDP,
+//! stochastic validation) over many workloads and bandwidths. Instead
+//! of one bespoke coordinator method + CLI arm + report path per
+//! experiment, everything funnels through three pieces:
+//!
+//! * [`Experiment`] — one trait (`name`/`describe`/`run`) implemented
+//!   by every evaluation; [`registry`] lists the built-ins (`fig2`,
+//!   `fig4`, `fig5`, `campaign`, `energy`, `stochastic-validation`,
+//!   `mapping-ablation`). Adding a scenario to the repo means
+//!   implementing this trait once, not threading a method through five
+//!   layers.
+//! * [`Scenario`] — the declarative spec of *what* to evaluate
+//!   (workloads, bandwidths, grid, seeds, optimize flag, experiment
+//!   list), built fluently in code ([`Scenario::builder`]) or parsed
+//!   from a `[scenario]` TOML section ([`Scenario::from_file`]).
+//! * [`store::RunStore`] — every run persists
+//!   `results/<run-id>/manifest.json` plus per-experiment JSON/CSVs,
+//!   and `wisper compare` diffs two manifests' metric summaries
+//!   ([`store::compare_manifests`]).
+//!
+//! Workloads are prepared once per scenario (in parallel) and shared by
+//! every experiment via [`ExperimentCtx`].
+
+pub mod builtin;
+pub mod figures;
+pub mod scenario;
+pub mod store;
+
+use crate::coordinator::{Coordinator, Prepared};
+use crate::dse::SweepResult;
+use crate::report::Json;
+use crate::runtime::{Backend, Runtime};
+use crate::util::threadpool::parallel_map;
+use anyhow::{bail, Result};
+use std::cell::{OnceCell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+pub use scenario::{Scenario, ScenarioBuilder, DEFAULT_EXPERIMENTS};
+pub use store::{compare_manifests, CompareReport, RunRecord, RunStore};
+
+/// Everything an experiment needs: the coordinator (package model,
+/// config, runtime factory), the scenario being run, and the workloads
+/// already prepared (mapped + tensorized) per the scenario's
+/// `optimize` flag, in scenario order. One `Runtime` and a memoized
+/// per-(workload, bandwidth) grid sweep are shared across the
+/// scenario's experiments, so fig4/fig5/energy don't re-pay artifact
+/// compilation or grid evaluation for the same cell. (The `campaign`
+/// experiment keeps its own per-worker runtimes — it is the parallel
+/// engine and cannot share this single-threaded cache.)
+pub struct ExperimentCtx<'a> {
+    pub coord: &'a Coordinator,
+    pub scenario: &'a Scenario,
+    pub prepared: &'a [Prepared],
+    /// Lazily constructed: scenarios whose experiments never sweep
+    /// (fig2-only, validation-only) pay no artifact discovery/compile
+    /// and gain no new failure path.
+    runtime: OnceCell<Runtime>,
+    sweep_cache: RefCell<HashMap<(usize, u64), Rc<SweepResult>>>,
+}
+
+impl<'a> ExperimentCtx<'a> {
+    pub fn new(
+        coord: &'a Coordinator,
+        scenario: &'a Scenario,
+        prepared: &'a [Prepared],
+    ) -> Self {
+        Self {
+            coord,
+            scenario,
+            prepared,
+            runtime: OnceCell::new(),
+            sweep_cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// The scenario-wide shared runtime, constructed on first use
+    /// (artifact compilation happens here, once — not per experiment).
+    pub fn runtime(&self) -> Result<&Runtime> {
+        if self.runtime.get().is_none() {
+            let rt = self.coord.runtime()?;
+            let _ = self.runtime.set(rt);
+        }
+        Ok(self.runtime.get().expect("runtime initialized above"))
+    }
+
+    /// Which backend this scenario's sweeps used (recorded in the run
+    /// manifest). When no experiment touched the shared runtime
+    /// (fig2-only, validation-only, or campaign, which builds its own
+    /// per-worker evaluators), derive what a sweep would load from
+    /// artifact discovery alone — no compilation.
+    pub fn backend_name(&self) -> &'static str {
+        match self.runtime.get().map(Runtime::backend) {
+            Some(Backend::Native) => "native",
+            Some(Backend::Pjrt) => "pjrt",
+            None => match crate::runtime::find_artifact(self.coord.artifact()) {
+                Some(_) => "pjrt",
+                None => "native",
+            },
+        }
+    }
+
+    /// Full (threshold x pinj) grid sweep for `prepared[i]` at `bw`,
+    /// memoized across this scenario's experiments.
+    pub fn sweep(&self, i: usize, bw: f64) -> Result<Rc<SweepResult>> {
+        let key = (i, bw.to_bits());
+        if let Some(r) = self.sweep_cache.borrow().get(&key) {
+            return Ok(Rc::clone(r));
+        }
+        let s = self.scenario;
+        let r = Rc::new(figures::fig5_grid(
+            self.runtime()?,
+            &self.prepared[i],
+            &s.thresholds,
+            &s.injection_probs,
+            bw,
+        )?);
+        self.sweep_cache.borrow_mut().insert(key, Rc::clone(&r));
+        Ok(r)
+    }
+}
+
+/// One CSV table an experiment wants persisted (`<name>.csv`).
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub name: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+/// What an experiment produces: a human-readable rendering (the CLI
+/// prints it), a machine-readable JSON document (persisted as
+/// `<name>.json`), CSV tables, and a flat metric summary embedded in
+/// the run manifest for `wisper compare`.
+#[derive(Debug, Clone)]
+pub struct ExperimentOutput {
+    pub text: String,
+    pub json: Json,
+    pub csvs: Vec<CsvTable>,
+    /// `key -> value` pairs diffed across runs; keys must be stable
+    /// (workload/bandwidth spellings, not display strings).
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// One runnable evaluation over a prepared scenario.
+pub trait Experiment: Sync {
+    /// Registry name (`wisper run --experiments <name>`).
+    fn name(&self) -> &'static str;
+    /// One-line description for `wisper list-experiments`.
+    fn describe(&self) -> &'static str;
+    /// Execute over the scenario's prepared workloads.
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput>;
+}
+
+/// All built-in experiments, in presentation order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(builtin::Fig2Bottleneck),
+        Box::new(builtin::Fig4Speedup),
+        Box::new(builtin::Fig5Heatmap),
+        Box::new(builtin::Campaign),
+        Box::new(builtin::Energy),
+        Box::new(builtin::StochasticValidation),
+        Box::new(builtin::MappingAblation),
+    ]
+}
+
+/// Registry names, in presentation order.
+pub fn experiment_names() -> Vec<&'static str> {
+    registry().iter().map(|e| e.name()).collect()
+}
+
+/// Look an experiment up by registry name.
+pub fn find(name: &str) -> Option<Box<dyn Experiment>> {
+    registry().into_iter().find(|e| e.name() == name)
+}
+
+/// Outcome of executing a scenario: which backend evaluated it, and
+/// one output per experiment in execution order.
+pub struct ScenarioRun {
+    pub backend: &'static str,
+    pub outputs: Vec<(String, ExperimentOutput)>,
+}
+
+/// Run every experiment of a scenario: prepare the workloads once (in
+/// parallel), build the shared [`ExperimentCtx`], then execute the
+/// scenario's experiment list in order.
+pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<ScenarioRun> {
+    let workers = scenario.resolved_workers(coord);
+    let prepared: Result<Vec<Prepared>> =
+        parallel_map(scenario.workloads.len(), workers, |i| {
+            coord.prepare(&scenario.workloads[i], scenario.optimize)
+        })
+        .into_iter()
+        .collect();
+    let prepared = prepared?;
+    let ctx = ExperimentCtx::new(coord, scenario, &prepared);
+    let mut outputs = Vec::with_capacity(scenario.experiments.len());
+    for name in &scenario.experiments {
+        let exp = match find(name) {
+            Some(e) => e,
+            None => bail!(
+                "unknown experiment {name:?}; valid experiments: {}",
+                experiment_names().join(", ")
+            ),
+        };
+        outputs.push((name.clone(), exp.run(&ctx)?));
+    }
+    Ok(ScenarioRun {
+        backend: ctx.backend_name(),
+        outputs,
+    })
+}
+
+/// [`run_scenario`] + persist the run record through `store`. Returns
+/// the saved record and the outputs (for printing).
+pub fn run_and_store(
+    coord: &Coordinator,
+    scenario: &Scenario,
+    store: &RunStore,
+) -> Result<(RunRecord, Vec<(String, ExperimentOutput)>)> {
+    let run = run_scenario(coord, scenario)?;
+    let record = store.save(scenario, run.backend, &run.outputs)?;
+    Ok((record, run.outputs))
+}

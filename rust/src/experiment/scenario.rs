@@ -1,0 +1,357 @@
+//! Declarative scenario spec: *what* to evaluate (workloads,
+//! bandwidths, grid, seeds, optimize flag) and *which* experiments to
+//! run over it. Constructible from a builder in code or from a
+//! `[scenario]` TOML section, so adding a new evaluation campaign is a
+//! config file, not a new CLI arm.
+//!
+//! ```toml
+//! [scenario]
+//! name = "paper-eval"
+//! workloads = ["zfnet", "googlenet"]      # or "zfnet,googlenet", or ["all"]
+//! experiments = ["fig4", "campaign"]      # `wisper list-experiments` names
+//! bandwidths = [64e9, 96e9]
+//! thresholds = [1, 2, 3, 4]
+//! injection_probs = [0.1, 0.2, 0.4]
+//! seeds = 8
+//! optimize = true
+//! refine = false
+//! workers = 0
+//! ```
+//!
+//! The same file may carry the usual `[arch]`/`[wireless]`/`[sweep]`/
+//! `[mapper]` sections; `wisper run --scenario` feeds it through
+//! [`Config`] too.
+
+use crate::cli;
+use crate::config::{toml::TomlDoc, Config};
+use crate::report::Json;
+use crate::workloads::WORKLOAD_NAMES;
+use anyhow::{bail, Context as _, Result};
+
+/// A fully-resolved experiment scenario. Construct via
+/// [`Scenario::builder`], [`Scenario::from_toml_str`] or
+/// [`Scenario::from_file`]; `Default` mirrors the paper's evaluation
+/// (all 15 workloads, Table-1 grid, the five paper experiments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Display name recorded in run manifests.
+    pub name: String,
+    /// Workload names (see `wisper workloads`).
+    pub workloads: Vec<String>,
+    /// Wireless bandwidths in bits/s.
+    pub bandwidths: Vec<f64>,
+    /// Distance-threshold axis of the sweep grid (NoP hops).
+    pub thresholds: Vec<u32>,
+    /// Injection-probability axis of the sweep grid.
+    pub injection_probs: Vec<f64>,
+    /// Stochastic-validation seeds to average.
+    pub seeds: u64,
+    /// SA-optimize mappings (false = layer-sequential baseline).
+    pub optimize: bool,
+    /// Adaptive refinement stage after campaign grid passes.
+    pub refine: bool,
+    /// Worker threads (0 = auto).
+    pub workers: usize,
+    /// Experiment names to run, in order (registry names).
+    pub experiments: Vec<String>,
+}
+
+/// The experiments `Default`/`run` execute when none are named: the
+/// five paper evaluations.
+pub const DEFAULT_EXPERIMENTS: [&str; 5] =
+    ["fig2", "fig4", "fig5", "energy", "stochastic-validation"];
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self::from_config(&Config::default())
+    }
+}
+
+impl Scenario {
+    /// Paper-default scenario with grid axes/workers from `cfg.sweep`.
+    pub fn from_config(cfg: &Config) -> Self {
+        Self {
+            name: "adhoc".to_string(),
+            workloads: WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect(),
+            bandwidths: cfg.sweep.bandwidths_bits.clone(),
+            thresholds: cfg.sweep.thresholds.clone(),
+            injection_probs: cfg.sweep.injection_probs.clone(),
+            seeds: 8,
+            optimize: true,
+            refine: false,
+            workers: cfg.sweep.workers,
+            experiments: DEFAULT_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Fluent in-code construction; `build()` validates.
+    pub fn builder(cfg: &Config) -> ScenarioBuilder {
+        ScenarioBuilder {
+            scenario: Self::from_config(cfg),
+        }
+    }
+
+    /// Read the `[scenario]` section of a TOML document (grid axes and
+    /// workers default from `cfg.sweep` when absent). Errors if the
+    /// document has no `[scenario]` keys at all — a typo'd section name
+    /// must not silently run the full default evaluation.
+    pub fn from_toml_doc(doc: &TomlDoc, cfg: &Config) -> Result<Self> {
+        if !doc.keys().any(|k| k.starts_with("scenario.")) {
+            bail!(
+                "no [scenario] section found (expected keys like \
+                 scenario.workloads, scenario.experiments)"
+            );
+        }
+        let mut s = Self::from_config(cfg);
+        if let Some(v) = doc.get_str("scenario.name")? {
+            s.name = v.to_string();
+        }
+        if let Some(v) = doc.get_list_str("scenario.workloads")? {
+            s.workloads = v;
+        }
+        if let Some(v) = doc.get_list_str("scenario.experiments")? {
+            s.experiments = v;
+        }
+        if let Some(v) = doc.get_list_f64("scenario.bandwidths")? {
+            s.bandwidths = v;
+        }
+        if let Some(v) = doc.get_list_f64("scenario.thresholds")? {
+            let mut ts = Vec::with_capacity(v.len());
+            for x in v {
+                if x.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&x) {
+                    bail!(
+                        "scenario.thresholds: expected whole NoP hop counts, got {x}"
+                    );
+                }
+                ts.push(x as u32);
+            }
+            s.thresholds = ts;
+        }
+        if let Some(v) = doc.get_list_f64("scenario.injection_probs")? {
+            s.injection_probs = v;
+        }
+        if let Some(v) = doc.get_u64("scenario.seeds")? {
+            s.seeds = v;
+        }
+        if let Some(v) = doc.get_bool("scenario.optimize")? {
+            s.optimize = v;
+        }
+        if let Some(v) = doc.get_bool("scenario.refine")? {
+            s.refine = v;
+        }
+        if let Some(v) = doc.get_usize("scenario.workers")? {
+            s.workers = v;
+        }
+        s.normalize_and_validate()?;
+        Ok(s)
+    }
+
+    pub fn from_toml_str(text: &str, cfg: &Config) -> Result<Self> {
+        let doc = TomlDoc::parse(text).context("parsing scenario TOML")?;
+        Self::from_toml_doc(&doc, cfg)
+    }
+
+    pub fn from_file(path: &str, cfg: &Config) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario file {path}"))?;
+        Self::from_toml_str(&text, cfg)
+    }
+
+    /// Expand `"all"`, dedupe lists (order-preserving) and validate
+    /// every axis. Called by every constructor that takes user input.
+    pub fn normalize_and_validate(&mut self) -> Result<()> {
+        if self.workloads.iter().any(|w| w == "all") {
+            self.workloads = WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect();
+        }
+        self.workloads = dedupe(std::mem::take(&mut self.workloads));
+        self.experiments = dedupe(std::mem::take(&mut self.experiments));
+        if self.workloads.is_empty() {
+            bail!("scenario.workloads: empty list");
+        }
+        cli::validate_workload_names("scenario.workloads", &self.workloads)?;
+        if self.experiments.is_empty() {
+            bail!("scenario.experiments: empty list");
+        }
+        let known = super::experiment_names();
+        for e in &self.experiments {
+            if !known.contains(&e.as_str()) {
+                bail!(
+                    "scenario.experiments: unknown experiment {e:?}; \
+                     valid experiments: {}",
+                    known.join(", ")
+                );
+            }
+        }
+        if self.bandwidths.is_empty() {
+            bail!("scenario.bandwidths: empty list");
+        }
+        if self.bandwidths.iter().any(|b| !b.is_finite() || *b <= 0.0) {
+            bail!("scenario.bandwidths must be positive and finite");
+        }
+        if self.thresholds.is_empty() || self.injection_probs.is_empty() {
+            bail!(
+                "scenario grid is empty: {} thresholds x {} injection probabilities",
+                self.thresholds.len(),
+                self.injection_probs.len()
+            );
+        }
+        if self.thresholds.iter().any(|t| *t == 0) {
+            bail!("scenario.thresholds count NoP hops and must be >= 1");
+        }
+        if self
+            .injection_probs
+            .iter()
+            .any(|p| !(0.0..=1.0).contains(p))
+        {
+            bail!("scenario.injection_probs must be in [0,1]");
+        }
+        if self.seeds == 0 {
+            bail!("scenario.seeds must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Worker threads for this scenario: its own override when set,
+    /// else the coordinator's (config override or machine default).
+    /// The one resolution rule every fan-out in a run shares.
+    pub fn resolved_workers(&self, coord: &crate::coordinator::Coordinator) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            coord.workers()
+        }
+    }
+
+    /// Serialize for the run manifest.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            (
+                "workloads".into(),
+                Json::Arr(
+                    self.workloads
+                        .iter()
+                        .map(|w| Json::Str(w.clone()))
+                        .collect(),
+                ),
+            ),
+            (
+                "bandwidths_bits".into(),
+                Json::Arr(self.bandwidths.iter().map(|b| Json::Num(*b)).collect()),
+            ),
+            (
+                "thresholds".into(),
+                Json::Arr(
+                    self.thresholds
+                        .iter()
+                        .map(|t| Json::Num(*t as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "injection_probs".into(),
+                Json::Arr(
+                    self.injection_probs
+                        .iter()
+                        .map(|p| Json::Num(*p))
+                        .collect(),
+                ),
+            ),
+            ("seeds".into(), Json::Num(self.seeds as f64)),
+            ("optimize".into(), Json::Bool(self.optimize)),
+            ("refine".into(), Json::Bool(self.refine)),
+            ("workers".into(), Json::Num(self.workers as f64)),
+            (
+                "experiments".into(),
+                Json::Arr(
+                    self.experiments
+                        .iter()
+                        .map(|e| Json::Str(e.clone()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn dedupe(items: Vec<String>) -> Vec<String> {
+    let mut out: Vec<String> = Vec::with_capacity(items.len());
+    for item in items {
+        if !out.contains(&item) {
+            out.push(item);
+        }
+    }
+    out
+}
+
+/// Fluent constructor for [`Scenario`].
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    scenario: Scenario,
+}
+
+impl ScenarioBuilder {
+    pub fn name(mut self, name: &str) -> Self {
+        self.scenario.name = name.to_string();
+        self
+    }
+
+    pub fn workloads<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.scenario.workloads = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn experiments<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.scenario.experiments = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn bandwidths(mut self, bws: &[f64]) -> Self {
+        self.scenario.bandwidths = bws.to_vec();
+        self
+    }
+
+    pub fn thresholds(mut self, ts: &[u32]) -> Self {
+        self.scenario.thresholds = ts.to_vec();
+        self
+    }
+
+    pub fn injection_probs(mut self, ps: &[f64]) -> Self {
+        self.scenario.injection_probs = ps.to_vec();
+        self
+    }
+
+    pub fn seeds(mut self, seeds: u64) -> Self {
+        self.scenario.seeds = seeds;
+        self
+    }
+
+    pub fn optimize(mut self, optimize: bool) -> Self {
+        self.scenario.optimize = optimize;
+        self
+    }
+
+    pub fn refine(mut self, refine: bool) -> Self {
+        self.scenario.refine = refine;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.scenario.workers = workers;
+        self
+    }
+
+    /// Validate and return the scenario.
+    pub fn build(mut self) -> Result<Scenario> {
+        self.scenario.normalize_and_validate()?;
+        Ok(self.scenario)
+    }
+}

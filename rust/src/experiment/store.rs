@@ -1,0 +1,438 @@
+//! Persisted run records: every `wisper run` writes
+//! `results/<run-id>/` containing `manifest.json` (scenario, backend,
+//! git-describable build metadata, per-experiment metric summaries),
+//! one `<experiment>.json` per experiment, and the experiments' CSV
+//! tables. Manifests are read back through `report::Json::parse` so
+//! `wisper compare <run-a> <run-b>` can diff best-speedups and
+//! baselines across runs without any external JSON dependency.
+//!
+//! The store root is `report::results_dir()` by default, so tests and
+//! CI can redirect all writes with `WISPER_RESULTS_DIR`.
+
+use super::{ExperimentOutput, Scenario};
+use crate::report::{self, Json};
+use anyhow::{bail, Context as _, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Handle on a directory of run records.
+#[derive(Debug, Clone)]
+pub struct RunStore {
+    root: PathBuf,
+}
+
+/// A saved run: its id, directory and parsed manifest.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub run_id: String,
+    pub dir: PathBuf,
+    pub manifest: Json,
+}
+
+impl RunStore {
+    /// Store rooted at [`report::results_dir`] (honors
+    /// `WISPER_RESULTS_DIR`).
+    pub fn open_default() -> Self {
+        Self {
+            root: report::results_dir(),
+        }
+    }
+
+    /// Store rooted at an explicit directory (tests, tools).
+    pub fn at<P: Into<PathBuf>>(root: P) -> Self {
+        Self { root: root.into() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Persist one scenario run: per-experiment JSON + CSVs plus the
+    /// manifest tying them together.
+    pub fn save(
+        &self,
+        scenario: &Scenario,
+        backend: &str,
+        outputs: &[(String, ExperimentOutput)],
+    ) -> Result<RunRecord> {
+        let run_id = self.fresh_run_id()?;
+        let dir = self.root.join(&run_id);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating run dir {}", dir.display()))?;
+
+        let mut entries = Vec::with_capacity(outputs.len());
+        for (name, out) in outputs {
+            let json_file = format!("{name}.json");
+            report::write_json(&dir.join(&json_file), &out.json)?;
+            let mut csv_files = Vec::new();
+            for csv in &out.csvs {
+                let file = format!("{}.csv", csv.name);
+                let headers: Vec<&str> =
+                    csv.headers.iter().map(|s| s.as_str()).collect();
+                report::write_csv(&dir.join(&file), &headers, &csv.rows)?;
+                csv_files.push(Json::Str(file));
+            }
+            entries.push(Json::Obj(vec![
+                ("name".into(), Json::Str(name.clone())),
+                ("json".into(), Json::Str(json_file)),
+                ("csv".into(), Json::Arr(csv_files)),
+                (
+                    "metrics".into(),
+                    Json::Obj(
+                        out.metrics
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+
+        let manifest = Json::Obj(vec![
+            ("run_id".into(), Json::Str(run_id.clone())),
+            ("created_unix".into(), Json::Num(unix_now())),
+            (
+                "version".into(),
+                Json::Str(env!("CARGO_PKG_VERSION").to_string()),
+            ),
+            (
+                "git".into(),
+                match git_describe() {
+                    Some(d) => Json::Str(d),
+                    None => Json::Null,
+                },
+            ),
+            ("backend".into(), Json::Str(backend.to_string())),
+            ("scenario".into(), scenario.to_json()),
+            ("experiments".into(), Json::Arr(entries)),
+        ]);
+        report::write_json(&dir.join("manifest.json"), &manifest)?;
+        Ok(RunRecord {
+            run_id,
+            dir,
+            manifest,
+        })
+    }
+
+    /// Resolve a run reference: an explicit directory path (with or
+    /// without the trailing `manifest.json`) or a run id under the
+    /// store root.
+    pub fn resolve(&self, run_ref: &str) -> PathBuf {
+        let p = Path::new(run_ref);
+        if p.file_name().map(|f| f == "manifest.json").unwrap_or(false) {
+            return p.parent().unwrap_or(Path::new(".")).to_path_buf();
+        }
+        if p.is_dir() {
+            return p.to_path_buf();
+        }
+        self.root.join(run_ref)
+    }
+
+    /// Load and parse a run's manifest.
+    pub fn load_manifest(&self, run_ref: &str) -> Result<Json> {
+        let dir = self.resolve(run_ref);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} (known runs: {})",
+                path.display(),
+                match self.list_runs() {
+                    Ok(runs) if !runs.is_empty() => runs.join(", "),
+                    _ => "none".to_string(),
+                }
+            )
+        })?;
+        Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Run ids under the root (directories holding a manifest.json),
+    /// sorted so newest timestamp-prefixed ids come last.
+    pub fn list_runs(&self) -> Result<Vec<String>> {
+        let mut runs = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(runs), // no results dir yet: no runs
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() && path.join("manifest.json").is_file() {
+                if let Some(name) = path.file_name().and_then(|n| n.to_str()) {
+                    runs.push(name.to_string());
+                }
+            }
+        }
+        runs.sort();
+        Ok(runs)
+    }
+
+    /// A run id that does not collide with an existing record:
+    /// `run-<unix-secs>-<pid>`, with a `-N` suffix under contention.
+    fn fresh_run_id(&self) -> Result<String> {
+        let base = format!("run-{}-{}", unix_now() as u64, std::process::id());
+        if !self.root.join(&base).exists() {
+            return Ok(base);
+        }
+        for n in 2..10_000u32 {
+            let candidate = format!("{base}-{n}");
+            if !self.root.join(&candidate).exists() {
+                return Ok(candidate);
+            }
+        }
+        bail!("could not allocate a fresh run id under {}", self.root.display());
+    }
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0)
+}
+
+/// `git describe --always --dirty` when a git checkout and binary are
+/// available; `None` otherwise (the manifest records null).
+fn git_describe() -> Option<String> {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty", "--tags"])
+        .output()
+        .ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let s = String::from_utf8(out.stdout).ok()?;
+    let s = s.trim();
+    if s.is_empty() {
+        None
+    } else {
+        Some(s.to_string())
+    }
+}
+
+/// One metric's cross-run delta.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    /// `experiment/metric` key.
+    pub key: String,
+    pub a: Option<f64>,
+    pub b: Option<f64>,
+    /// `(b - a) / |a|`, or the absolute delta `b - a` when `a == 0`;
+    /// `None` when either side is missing.
+    pub rel_delta: Option<f64>,
+    /// Whether run B is worse than run A on this metric (speedups that
+    /// fell; wired baselines / EDPs that grew).
+    pub regression: bool,
+}
+
+impl MetricDiff {
+    /// Did this metric move beyond the compare tolerance (one-sided
+    /// metrics always count as moved)?
+    pub fn moved(&self) -> bool {
+        match self.rel_delta {
+            Some(rel) => rel.abs() > COMPARE_TOLERANCE,
+            None => true,
+        }
+    }
+}
+
+/// Relative change, falling back to the absolute delta at `a == 0`.
+fn rel_change(a: f64, b: f64) -> f64 {
+    if a != 0.0 {
+        (b - a) / a.abs()
+    } else {
+        b - a
+    }
+}
+
+/// Cross-run diff of two manifests' metric summaries.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub run_a: String,
+    pub run_b: String,
+    pub diffs: Vec<MetricDiff>,
+    pub regressions: usize,
+}
+
+/// Flatten a manifest's per-experiment metric objects into
+/// `experiment/metric` -> value pairs.
+pub fn manifest_metrics(manifest: &Json) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let experiments = manifest
+        .get("experiments")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    for exp in experiments {
+        let name = exp.get("name").and_then(Json::as_str).unwrap_or("?");
+        if let Some(metrics) = exp.get("metrics").and_then(Json::as_obj) {
+            for (k, v) in metrics {
+                if let Some(x) = v.as_f64() {
+                    out.push((format!("{name}/{k}"), x));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn manifest_run_id(manifest: &Json) -> String {
+    manifest
+        .get("run_id")
+        .and_then(Json::as_str)
+        .unwrap_or("?")
+        .to_string()
+}
+
+/// Relative change below which two runs count as identical (grid
+/// speedups round-trip an f32 artifact ABI; don't flag its noise).
+const COMPARE_TOLERANCE: f64 = 1e-6;
+
+/// Is the change worse for this metric? Higher-is-better for
+/// speedups; lower-is-better for wired baselines, hybrid times and EDP.
+fn is_regression(key: &str, rel: f64) -> bool {
+    if key.contains("speedup") {
+        rel < -COMPARE_TOLERANCE
+    } else if key.contains("t_wired") || key.contains("edp") || key.contains("total_s")
+    {
+        rel > COMPARE_TOLERANCE
+    } else {
+        false
+    }
+}
+
+/// Diff two parsed manifests metric-by-metric.
+pub fn compare_manifests(a: &Json, b: &Json) -> CompareReport {
+    let ma = manifest_metrics(a);
+    let mb = manifest_metrics(b);
+    let mut diffs = Vec::new();
+    let mut regressions = 0usize;
+    for (key, va) in &ma {
+        match mb.iter().find(|(k, _)| k == key).map(|(_, v)| *v) {
+            Some(vb) => {
+                let rel = rel_change(*va, vb);
+                let regression = is_regression(key, rel);
+                if regression {
+                    regressions += 1;
+                }
+                diffs.push(MetricDiff {
+                    key: key.clone(),
+                    a: Some(*va),
+                    b: Some(vb),
+                    rel_delta: Some(rel),
+                    regression,
+                });
+            }
+            None => diffs.push(MetricDiff {
+                key: key.clone(),
+                a: Some(*va),
+                b: None,
+                rel_delta: None,
+                regression: false,
+            }),
+        }
+    }
+    for (key, vb) in &mb {
+        if !ma.iter().any(|(k, _)| k == key) {
+            diffs.push(MetricDiff {
+                key: key.clone(),
+                a: None,
+                b: Some(*vb),
+                rel_delta: None,
+                regression: false,
+            });
+        }
+    }
+    CompareReport {
+        run_a: manifest_run_id(a),
+        run_b: manifest_run_id(b),
+        diffs,
+        regressions,
+    }
+}
+
+impl CompareReport {
+    /// How many metrics actually moved (beyond f32-ABI noise) or exist
+    /// on only one side.
+    pub fn changed(&self) -> usize {
+        self.diffs.iter().filter(|d| d.moved()).count()
+    }
+
+    /// Human-readable diff: changed metrics (and one-sided ones), with
+    /// regressions flagged; identical metrics are summarized, not
+    /// listed.
+    pub fn render(&self) -> String {
+        let mut rows = Vec::new();
+        for d in &self.diffs {
+            if !d.moved() {
+                continue;
+            }
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => format!("{x:.6e}"),
+                None => "-".to_string(),
+            };
+            rows.push(vec![
+                d.key.clone(),
+                fmt(d.a),
+                fmt(d.b),
+                match d.rel_delta {
+                    Some(r) => format!("{:+.3}%", r * 100.0),
+                    None => "-".to_string(),
+                },
+                (if d.regression { "REGRESSION" } else { "" }).to_string(),
+            ]);
+        }
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "comparing {} (A) vs {} (B): {} metrics, {} changed, {} regressions\n",
+            self.run_a,
+            self.run_b,
+            self.diffs.len(),
+            self.changed(),
+            self.regressions,
+        );
+        if rows.is_empty() {
+            out.push_str("no metric moved beyond tolerance: runs are equivalent\n");
+        } else {
+            out.push_str(&report::table(
+                &["metric", "run A", "run B", "delta", ""],
+                &rows,
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("run_a".into(), Json::Str(self.run_a.clone())),
+            ("run_b".into(), Json::Str(self.run_b.clone())),
+            ("regressions".into(), Json::Num(self.regressions as f64)),
+            ("changed".into(), Json::Num(self.changed() as f64)),
+            (
+                "metrics".into(),
+                Json::Arr(
+                    self.diffs
+                        .iter()
+                        .map(|d| {
+                            Json::Obj(vec![
+                                ("key".into(), Json::Str(d.key.clone())),
+                                (
+                                    "a".into(),
+                                    d.a.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "b".into(),
+                                    d.b.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "rel_delta".into(),
+                                    d.rel_delta.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                ("regression".into(), Json::Bool(d.regression)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}

@@ -10,11 +10,21 @@
 //!
 //! Layer map (DESIGN.md):
 //! * L3 (this crate): workloads, mapping, NoC/NoP/wireless models, the
-//!   analytical engine, the sweep engine and the CLI.
+//!   analytical engine, the sweep engine, the experiment registry and
+//!   the CLI.
 //! * L2 (`python/compile/model.py`): the batched cost model, lowered
 //!   once to `artifacts/model.hlo.txt`.
 //! * L1 (`python/compile/kernels/bottleneck.py`): the fused offload +
 //!   bottleneck Pallas kernel inside that artifact.
+//!
+//! The evaluation surface is the [`experiment`] subsystem: a declarative
+//! [`experiment::Scenario`] (builder or `[scenario]` TOML) names the
+//! workloads, bandwidths, sweep grid and experiments; the
+//! [`experiment::Experiment`] registry runs them; and every run
+//! persists `results/<run-id>/manifest.json` through
+//! [`experiment::RunStore`] so `wisper compare` can diff runs. Adding a
+//! new evaluation means implementing one trait, not threading a method
+//! through coordinator, CLI and report layers.
 
 pub mod arch;
 pub mod cli;
@@ -22,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dse;
 pub mod energy;
+pub mod experiment;
 pub mod mapping;
 pub mod noc;
 pub mod nop;
@@ -34,3 +45,4 @@ pub mod workloads;
 
 pub use config::Config;
 pub use coordinator::Coordinator;
+pub use experiment::{Experiment, Scenario};

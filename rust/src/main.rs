@@ -1,147 +1,290 @@
 //! `wisper` CLI — leader entrypoint.
 //!
-//! Subcommands map 1:1 to the paper's artifacts (DESIGN.md §3):
-//!   params      Table 1        simulation parameters
-//!   arch        Figure 1       package schematic
-//!   bottleneck  Figure 2       wired bottleneck shares
-//!   speedup     Figure 4       best hybrid speedup per workload
-//!   heatmap     Figure 5       threshold x pinj sweep for one workload
-//!   workloads                  the 15 benchmark networks
-//!   simulate                   one wireless config end to end
-//!   validate                   expected-value vs stochastic cross-check
-//!   balance                    adaptive load-balance search (future work)
+//! The evaluation surface is the experiment registry (DESIGN.md §3):
+//!   run               execute a scenario (TOML file or flags) through
+//!                     the registry; persists results/<run-id>/
+//!   list-experiments  what the registry offers (fig2, fig4, fig5,
+//!                     campaign, energy, stochastic-validation, ...)
+//!   compare           diff two persisted runs' metric summaries
+//!   params/arch/workloads   static descriptions (Table 1, Figure 1)
+//!   simulate/balance        one-config utilities
+//!
+//! Legacy per-figure subcommands (`bottleneck`, `speedup`, `heatmap`,
+//! `validate`, `campaign`, `energy`) survive as aliases that route
+//! through the same registry.
 
 use anyhow::{bail, Result};
-use wisper::cli::{parse, render_help, OptSpec};
-use wisper::dse::CampaignSpec;
+use wisper::cli::{self, parse, render_help, OptSpec, Parsed};
 use wisper::config::{Config, WirelessConfig};
 use wisper::coordinator::loadbalance;
 use wisper::coordinator::Coordinator;
+use wisper::experiment::{self, figures, RunStore, Scenario};
 use wisper::report;
-use wisper::sim::COMPONENTS;
 use wisper::util::eng;
 use wisper::workloads::WORKLOAD_NAMES;
 
 fn specs() -> Vec<OptSpec> {
     vec![
-        OptSpec { name: "config", takes_value: true, help: "TOML config file" },
+        OptSpec { name: "config", takes_value: true, help: "TOML config file ([arch]/[wireless]/[sweep]/[mapper])" },
+        OptSpec { name: "scenario", takes_value: true, help: "scenario TOML file with a [scenario] section (run)" },
+        OptSpec { name: "experiments", takes_value: true, help: "comma-separated experiment list (see list-experiments)" },
+        OptSpec { name: "name", takes_value: true, help: "scenario name recorded in the run manifest" },
         OptSpec { name: "workload", takes_value: true, help: "workload name (see `wisper workloads`)" },
+        OptSpec { name: "workloads", takes_value: true, help: "comma-separated workload list" },
         OptSpec { name: "all", takes_value: false, help: "run every paper workload" },
         OptSpec { name: "bw", takes_value: true, help: "wireless bandwidth in bits/s (e.g. 64e9)" },
+        OptSpec { name: "bws", takes_value: true, help: "comma-separated wireless bandwidths in bits/s" },
         OptSpec { name: "threshold", takes_value: true, help: "distance threshold in NoP hops" },
         OptSpec { name: "pinj", takes_value: true, help: "injection probability [0,1]" },
         OptSpec { name: "seeds", takes_value: true, help: "stochastic seeds to average" },
         OptSpec { name: "sa-iters", takes_value: true, help: "simulated-annealing iterations" },
         OptSpec { name: "no-opt", takes_value: false, help: "layer-sequential mapping (skip SA)" },
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
-        OptSpec { name: "csv", takes_value: false, help: "also write CSVs under results/" },
-        OptSpec { name: "draw", takes_value: false, help: "ASCII-render (arch)" },
-        OptSpec { name: "workloads", takes_value: true, help: "comma-separated workload list (campaign)" },
-        OptSpec { name: "bws", takes_value: true, help: "comma-separated wireless bandwidths in bits/s (campaign)" },
         OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
-        OptSpec { name: "refine", takes_value: false, help: "adaptive per-workload refinement after the grid pass" },
-        OptSpec { name: "json", takes_value: false, help: "also write a JSON report under results/" },
+        OptSpec { name: "refine", takes_value: false, help: "adaptive refinement after campaign grid passes" },
+        OptSpec { name: "csv", takes_value: false, help: "(legacy; ignored — run records always include CSVs)" },
+        OptSpec { name: "json", takes_value: false, help: "(legacy; ignored — run records always include JSON)" },
+        OptSpec { name: "draw", takes_value: false, help: "(legacy; ignored — arch always draws)" },
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 10] = [
+const SUBCOMMANDS: [(&str, &str); 8] = [
+    ("run", "execute a scenario through the experiment registry"),
+    ("list-experiments", "list the registered experiments"),
+    ("compare", "diff two persisted runs: compare <run-a> <run-b>"),
     ("params", "print Table 1 (simulation parameters)"),
     ("arch", "describe the package (Figure 1)"),
     ("workloads", "list the 15 benchmark workloads"),
-    ("bottleneck", "Figure 2: wired bottleneck breakdown"),
-    ("speedup", "Figure 4: hybrid speedup per workload"),
-    ("heatmap", "Figure 5: threshold x pinj heatmap"),
     ("simulate", "evaluate one wireless configuration"),
-    ("validate", "expected-value vs stochastic cross-check"),
     ("balance", "adaptive load-balance search (future work)"),
-    ("campaign", "parallel sweep: N workloads x M bandwidths x grid"),
+];
+
+/// Legacy subcommand -> experiment-registry spelling.
+const LEGACY_ALIASES: [(&str, &str); 6] = [
+    ("bottleneck", "fig2"),
+    ("speedup", "fig4"),
+    ("heatmap", "fig5"),
+    ("validate", "stochastic-validation"),
+    ("campaign", "campaign"),
+    ("energy", "energy"),
 ];
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() || args[0] == "--help" || args[0] == "help" {
         print!("{}", render_help("wisper", &SUBCOMMANDS, &specs()));
+        println!("\nlegacy aliases (all route through the registry):");
+        for (old, exp) in LEGACY_ALIASES {
+            println!("  {old:<14} = run --experiments {exp}");
+        }
         return Ok(());
     }
     let p = parse(&args, &specs())?;
 
-    let mut cfg = match p.get("config") {
-        Some(path) => Config::from_file(path)?,
-        None => Config::default(),
+    if p.has_flag("csv") || p.has_flag("json") {
+        eprintln!(
+            "note: --csv/--json are legacy no-ops; every run persists CSV+JSON \
+             under results/<run-id>/"
+        );
+    }
+
+    match p.subcommand.as_str() {
+        "run" => cmd_run(&p, None),
+        "list-experiments" => cmd_list_experiments(),
+        "compare" => cmd_compare(&p),
+        "params" => cmd_params(&load_config(&p)?),
+        "arch" => {
+            let (_, coord) = coordinator(&p)?;
+            cmd_arch(&coord)
+        }
+        "workloads" => cmd_workloads(),
+        "simulate" => cmd_simulate(&p),
+        "balance" => cmd_balance(&p),
+        other => match LEGACY_ALIASES.iter().find(|(old, _)| *old == other) {
+            Some(&(old, exp)) => {
+                eprintln!(
+                    "note: `wisper {old}` is a legacy alias for \
+                     `wisper run --experiments {exp}`"
+                );
+                cmd_run(&p, Some((old, exp)))
+            }
+            None => bail!("unknown command {other:?}; try `wisper help`"),
+        },
+    }
+}
+
+/// Load the `Config`: `--config` file, else (for `run --scenario`) the
+/// scenario file's own config sections, else defaults. `--sa-iters`,
+/// `--threshold` and `--pinj` override on top (the latter two set the
+/// wireless decision criteria the `simulate` path and the
+/// `stochastic-validation`/`energy` experiments read).
+fn load_config(p: &Parsed) -> Result<Config> {
+    let mut cfg = match (p.get("config"), p.get("scenario")) {
+        (Some(path), _) => Config::from_file(path)?,
+        (None, Some(path)) => Config::from_file(path)?,
+        (None, None) => Config::default(),
     };
     if let Some(iters) = p.get_usize("sa-iters")? {
         cfg.mapper.sa_iters = iters;
     }
+    if let Some(t) = p.get_usize("threshold")? {
+        cfg.wireless.distance_threshold = t as u32;
+    }
+    if let Some(pi) = p.get_f64("pinj")? {
+        cfg.wireless.injection_prob = pi;
+    }
+    cfg.wireless.validate()?;
+    Ok(cfg)
+}
+
+fn coordinator(p: &Parsed) -> Result<(Config, Coordinator)> {
+    let cfg = load_config(p)?;
     let coord =
         Coordinator::new(cfg.clone())?.with_artifact(p.get("artifact").map(String::from));
-    let optimize = !p.has_flag("no-opt");
+    Ok((cfg, coord))
+}
 
-    let names: Vec<String> = if p.has_flag("all") || p.get("workload").is_none() {
-        WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect()
-    } else {
-        vec![p.get("workload").unwrap().to_string()]
+/// Workloads from the shared flags: `--workloads a,b,c` (validated
+/// list; `all` expands to the full set) > `--workload x` >
+/// `--all`/default (every paper workload).
+fn flag_workloads(p: &Parsed) -> Result<Option<Vec<String>>> {
+    if let Some(list) = p.get("workloads") {
+        let names = cli::parse_comma_list("--workloads", list)?;
+        if names.iter().any(|n| n == "all") {
+            return Ok(Some(
+                WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect(),
+            ));
+        }
+        cli::validate_workload_names("--workloads", &names)?;
+        return Ok(Some(names));
+    }
+    if p.has_flag("all") {
+        return Ok(Some(
+            WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect(),
+        ));
+    }
+    Ok(p.get("workload").map(|w| vec![w.to_string()]))
+}
+
+/// Layer CLI flags onto a scenario (file- or default-derived). Boolean
+/// flags only override in their given direction — absence keeps the
+/// scenario's setting.
+fn apply_flag_overrides(
+    s: &mut Scenario,
+    p: &Parsed,
+    forced_experiments: &Option<Vec<String>>,
+) -> Result<()> {
+    if let Some(n) = p.get("name") {
+        s.name = n.to_string();
+    }
+    if let Some(ws) = flag_workloads(p)? {
+        s.workloads = ws;
+    }
+    if let Some(list) = p.get("bws") {
+        s.bandwidths = cli::parse_f64_list("--bws", list)?;
+    } else if let Some(bw) = p.get_f64("bw")? {
+        s.bandwidths = vec![bw];
+    }
+    if let Some(exps) = forced_experiments {
+        s.experiments = exps.clone();
+    } else if let Some(list) = p.get("experiments") {
+        s.experiments = cli::parse_comma_list("--experiments", list)?;
+    }
+    if let Some(seeds) = p.get_usize("seeds")? {
+        s.seeds = seeds as u64;
+    }
+    if let Some(w) = p.get_usize("workers")? {
+        s.workers = w;
+    }
+    if p.has_flag("no-opt") {
+        s.optimize = false;
+    }
+    if p.has_flag("refine") {
+        s.refine = true;
+    }
+    Ok(())
+}
+
+/// `wisper run`: scenario from `--scenario file.toml` or from flags,
+/// executed through the registry; every run persists a run record.
+/// `legacy` carries the (old subcommand, experiment) pair when invoked
+/// through a compatibility alias.
+fn cmd_run(p: &Parsed, legacy: Option<(&str, &str)>) -> Result<()> {
+    let cfg = load_config(p)?;
+    let forced_experiments = legacy.map(|(_, exp)| vec![exp.to_string()]);
+    let mut scenario = match p.get("scenario") {
+        Some(path) => Scenario::from_file(path, &cfg)?,
+        None => {
+            let mut s = Scenario::from_config(&cfg);
+            s.name = "cli".to_string();
+            s
+        }
     };
-
-    match p.subcommand.as_str() {
-        "params" => cmd_params(&cfg),
-        "arch" => cmd_arch(&coord),
-        "workloads" => cmd_workloads(),
-        "bottleneck" => cmd_bottleneck(&coord, &names, optimize, p.has_flag("csv")),
-        "speedup" => cmd_speedup(&coord, &names, optimize, p.has_flag("csv")),
-        "heatmap" => {
-            let wl = p.get_or("workload", "zfnet").to_string();
-            let bw = p.get_f64("bw")?.unwrap_or(64e9);
-            cmd_heatmap(&coord, &wl, bw, optimize, p.has_flag("csv"))
+    apply_flag_overrides(&mut scenario, p, &forced_experiments)?;
+    if let (Some(("heatmap", _)), None) = (legacy, p.get("scenario")) {
+        // `wisper heatmap` historically meant ONE workload at ONE
+        // bandwidth (zfnet @ 64e9); keep that scope unless flags or an
+        // explicit scenario file widen it.
+        if flag_workloads(p)?.is_none() {
+            scenario.workloads = vec!["zfnet".to_string()];
         }
-        "simulate" => {
-            let w = wireless_from(&cfg, &p)?;
-            cmd_simulate(&coord, &names, optimize, &w)
-        }
-        "validate" => {
-            let w = wireless_from(&cfg, &p)?;
-            let seeds = p.get_usize("seeds")?.unwrap_or(8) as u64;
-            cmd_validate(&coord, &names, optimize, &w, seeds)
-        }
-        "balance" => {
-            let bw = p.get_f64("bw")?.unwrap_or(64e9);
-            cmd_balance(&coord, &names, optimize, bw)
-        }
-        "campaign" => cmd_campaign(&coord, &names, optimize, &p),
-        other => bail!("unknown command {other:?}; try `wisper help`"),
-    }
-}
-
-/// Workload list for the campaign subcommand: `--workloads a,b,c`
-/// overrides the shared `--workload`/`--all` resolution.
-fn campaign_names(p: &wisper::cli::Parsed, shared: &[String]) -> Result<Vec<String>> {
-    match p.get("workloads") {
-        None => Ok(shared.to_vec()),
-        Some(list) => {
-            let names: Vec<String> = list
-                .split(',')
-                .map(|s| s.trim().to_string())
-                .filter(|s| !s.is_empty())
-                .collect();
-            if names.is_empty() {
-                bail!("--workloads: empty list");
-            }
-            Ok(names)
+        if p.get("bws").is_none() && p.get_f64("bw")?.is_none() {
+            scenario.bandwidths = vec![64e9];
         }
     }
+    scenario.normalize_and_validate()?;
+    let coord =
+        Coordinator::new(cfg)?.with_artifact(p.get("artifact").map(String::from));
+
+    println!(
+        "scenario {:?}: {} workloads x {} bandwidths, experiments: {}\n",
+        scenario.name,
+        scenario.workloads.len(),
+        scenario.bandwidths.len(),
+        scenario.experiments.join(", "),
+    );
+    let store = RunStore::open_default();
+    let (record, outputs) = experiment::run_and_store(&coord, &scenario, &store)?;
+    for (name, out) in &outputs {
+        println!("== {name} ==");
+        println!("{}", out.text);
+    }
+    println!(
+        "run record: {} (manifest.json, {} experiment outputs)",
+        record.dir.display(),
+        outputs.len()
+    );
+    Ok(())
 }
 
-fn parse_bw_list(list: &str) -> Result<Vec<f64>> {
-    list.split(',')
-        .map(|s| s.trim())
-        .filter(|s| !s.is_empty())
-        .map(|s| {
-            s.parse::<f64>()
-                .map_err(|_| anyhow::anyhow!("--bws: expected a number, got {s:?}"))
-        })
-        .collect()
+fn cmd_list_experiments() -> Result<()> {
+    let rows: Vec<Vec<String>> = experiment::registry()
+        .iter()
+        .map(|e| vec![e.name().to_string(), e.describe().to_string()])
+        .collect();
+    print!("{}", report::table(&["experiment", "description"], &rows));
+    println!(
+        "\nrun with: wisper run --experiments <names> [--workloads ...] [--bws ...]"
+    );
+    Ok(())
 }
 
-fn wireless_from(cfg: &Config, p: &wisper::cli::Parsed) -> Result<WirelessConfig> {
+fn cmd_compare(p: &Parsed) -> Result<()> {
+    if p.positionals.len() != 2 {
+        bail!(
+            "usage: wisper compare <run-a> <run-b> (run ids under {} or paths)",
+            RunStore::open_default().root().display()
+        );
+    }
+    let store = RunStore::open_default();
+    let a = store.load_manifest(&p.positionals[0])?;
+    let b = store.load_manifest(&p.positionals[1])?;
+    let cmp = experiment::compare_manifests(&a, &b);
+    print!("{}", cmp.render());
+    Ok(())
+}
+
+fn wireless_from(cfg: &Config, p: &Parsed) -> Result<WirelessConfig> {
     let mut w = cfg.wireless.clone();
     if let Some(bw) = p.get_f64("bw")? {
         w.bandwidth_bits = bw;
@@ -199,167 +342,12 @@ fn cmd_workloads() -> Result<()> {
     Ok(())
 }
 
-fn cmd_bottleneck(
-    coord: &Coordinator,
-    names: &[String],
-    optimize: bool,
-    csv: bool,
-) -> Result<()> {
-    println!("Figure 2: wired bottleneck shares (% of execution time)\n");
-    let mut rows = Vec::new();
-    let mut csv_rows = Vec::new();
-    for name in names {
-        let prep = coord.prepare(name, optimize)?;
-        rows.push((name.clone(), prep.wired.shares));
-        let mut r = vec![name.clone()];
-        r.extend(prep.wired.shares.iter().map(|s| format!("{:.4}", s)));
-        r.push(format!("{:.6e}", prep.wired.total_s));
-        csv_rows.push(r);
-    }
-    print!("{}", report::stacked_shares(&rows));
-    let mut trows = Vec::new();
-    for (name, shares) in &rows {
-        let mut r = vec![name.clone()];
-        r.extend(shares.iter().map(|s| format!("{:>5.1}%", s * 100.0)));
-        trows.push(r);
-    }
-    let headers: Vec<&str> = std::iter::once("workload")
-        .chain(COMPONENTS.iter().copied())
-        .collect();
-    print!("\n{}", report::table(&headers, &trows));
-    if csv {
-        let path = report::results_dir().join("fig2_bottleneck.csv");
-        let headers = ["workload", "compute", "dram", "noc", "nop", "wireless", "total_s"];
-        report::write_csv(&path, &headers, &csv_rows)?;
-        println!("\nwrote {}", path.display());
-    }
-    Ok(())
-}
-
-fn cmd_speedup(
-    coord: &Coordinator,
-    names: &[String],
-    optimize: bool,
-    csv: bool,
-) -> Result<()> {
-    println!("Figure 4: best hybrid speedup over the wired baseline\n");
-    let prepared: Result<Vec<_>> = names.iter().map(|n| coord.prepare(n, optimize)).collect();
-    let prepared = prepared?;
-    let rt = coord.runtime()?;
-    let rows = coord.fig4(&rt, &prepared)?;
-
-    let mut trows = Vec::new();
-    let mut csv_rows = Vec::new();
-    let mut per_bw_gains: Vec<Vec<f64>> = vec![];
-    for row in &rows {
-        let mut r = vec![row.workload.clone()];
-        for (i, cell) in row.per_bw.iter().enumerate() {
-            r.push(format!("{:+.1}%", (cell.speedup - 1.0) * 100.0));
-            r.push(format!("d={} p={:.2}", cell.threshold, cell.pinj));
-            if per_bw_gains.len() <= i {
-                per_bw_gains.push(vec![]);
-            }
-            per_bw_gains[i].push(cell.speedup);
-            csv_rows.push(vec![
-                row.workload.clone(),
-                format!("{}", cell.wl_bw),
-                format!("{:.6}", cell.speedup),
-                format!("{}", cell.threshold),
-                format!("{:.2}", cell.pinj),
-                format!("{:.6e}", row.t_wired),
-                format!("{:.6e}", cell.total_s),
-            ]);
-        }
-        trows.push(r);
-    }
-    let mut headers: Vec<String> = vec!["workload".into()];
-    if let Some(first) = rows.first() {
-        for cell in &first.per_bw {
-            headers.push(format!("{} gain", eng(cell.wl_bw, "b/s")));
-            headers.push("best cfg".into());
-        }
-    }
-    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    print!("{}", report::table(&hrefs, &trows));
-
-    for (i, gains) in per_bw_gains.iter().enumerate() {
-        let bw = rows[0].per_bw[i].wl_bw;
-        let mean = wisper::util::stats::mean(
-            &gains.iter().map(|s| (s - 1.0) * 100.0).collect::<Vec<_>>(),
-        );
-        let max = wisper::util::stats::max(
-            &gains.iter().map(|s| (s - 1.0) * 100.0).collect::<Vec<_>>(),
-        );
-        println!(
-            "\n{}: average speedup {:+.1}%, max {:+.1}%",
-            eng(bw, "b/s"),
-            mean,
-            max
-        );
-    }
-    if csv {
-        let path = report::results_dir().join("fig4_speedup.csv");
-        report::write_csv(
-            &path,
-            &["workload", "wl_bw", "speedup", "threshold", "pinj", "t_wired", "t_hybrid"],
-            &csv_rows,
-        )?;
-        println!("wrote {}", path.display());
-    }
-    Ok(())
-}
-
-fn cmd_heatmap(
-    coord: &Coordinator,
-    workload: &str,
-    bw: f64,
-    optimize: bool,
-    csv: bool,
-) -> Result<()> {
-    println!(
-        "Figure 5: {} speedup (%) vs distance threshold x injection probability @ {}\n",
-        workload,
-        eng(bw, "b/s")
-    );
-    let prep = coord.prepare(workload, optimize)?;
-    let rt = coord.runtime()?;
-    let sweep = coord.fig5(&rt, &prep, bw)?;
-    let th = &coord.cfg.sweep.thresholds;
-    let pi = &coord.cfg.sweep.injection_probs;
-    let hm = sweep.heatmap(th, pi);
-    let rl: Vec<String> = th.iter().map(|t| format!("d={t}")).collect();
-    let cl: Vec<String> = pi.iter().map(|p| format!("{:.0}%", p * 100.0)).collect();
-    print!("{}", report::heatmap(&rl, &cl, &hm));
-    let best = sweep.best_point();
-    println!(
-        "\nbest: d={} pinj={:.2} -> {:+.1}%",
-        best.threshold,
-        best.pinj,
-        (best.speedup - 1.0) * 100.0
-    );
-    if csv {
-        let mut rows = Vec::new();
-        for pt in &sweep.points {
-            rows.push(vec![
-                workload.to_string(),
-                pt.threshold.to_string(),
-                format!("{:.2}", pt.pinj),
-                format!("{:.6}", pt.speedup),
-            ]);
-        }
-        let path = report::results_dir().join(format!("fig5_heatmap_{workload}.csv"));
-        report::write_csv(&path, &["workload", "threshold", "pinj", "speedup"], &rows)?;
-        println!("wrote {}", path.display());
-    }
-    Ok(())
-}
-
-fn cmd_simulate(
-    coord: &Coordinator,
-    names: &[String],
-    optimize: bool,
-    w: &WirelessConfig,
-) -> Result<()> {
+fn cmd_simulate(p: &Parsed) -> Result<()> {
+    let (cfg, coord) = coordinator(p)?;
+    let w = wireless_from(&cfg, p)?;
+    let names = flag_workloads(p)?
+        .unwrap_or_else(|| WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect());
+    let optimize = !p.has_flag("no-opt");
     println!(
         "hybrid simulation @ {} (d={}, pinj={:.2})\n",
         eng(w.bandwidth_bits, "b/s"),
@@ -367,10 +355,10 @@ fn cmd_simulate(
         w.injection_prob
     );
     let mut rows = Vec::new();
-    for name in names {
+    for name in &names {
         let prep = coord.prepare(name, optimize)?;
-        let hybrid = wisper::sim::evaluate_expected(&prep.tensors, w);
-        let (we, he, _, _) = coord.energy(&prep, w)?;
+        let hybrid = wisper::sim::evaluate_expected(&prep.tensors, &w);
+        let (we, he, _, _) = figures::energy_breakdown(&prep, &coord.pkg, &w)?;
         rows.push(vec![
             name.clone(),
             format!("{:.3e}", prep.wired.total_s),
@@ -390,52 +378,29 @@ fn cmd_simulate(
     Ok(())
 }
 
-fn cmd_validate(
-    coord: &Coordinator,
-    names: &[String],
-    optimize: bool,
-    w: &WirelessConfig,
-    seeds: u64,
-) -> Result<()> {
-    println!(
-        "expected-value artifact model vs stochastic per-message mode ({seeds} seeds)\n"
-    );
-    let mut rows = Vec::new();
-    for name in names {
-        let prep = coord.prepare(name, optimize)?;
-        let (exp, stoch) = coord.validate_stochastic(&prep, w, seeds)?;
-        let rel = (exp - stoch).abs() / exp.max(1e-30);
-        rows.push(vec![
-            name.clone(),
-            format!("{exp:.4e}"),
-            format!("{stoch:.4e}"),
-            format!("{:.2}%", rel * 100.0),
-        ]);
-    }
-    print!(
-        "{}",
-        report::table(&["workload", "expected(s)", "stochastic(s)", "rel.err"], &rows)
-    );
-    Ok(())
-}
-
-fn cmd_balance(
-    coord: &Coordinator,
-    names: &[String],
-    optimize: bool,
-    bw: f64,
-) -> Result<()> {
+fn cmd_balance(p: &Parsed) -> Result<()> {
+    let (cfg, coord) = coordinator(p)?;
+    let bw = p.get_f64("bw")?.unwrap_or(64e9);
+    let names = flag_workloads(p)?
+        .unwrap_or_else(|| WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect());
+    let optimize = !p.has_flag("no-opt");
     println!("adaptive wired/wireless load balancing @ {}\n", eng(bw, "b/s"));
     let rt = coord.runtime()?;
     let mut rows = Vec::new();
-    for name in names {
+    for name in &names {
         let prep = coord.prepare(name, optimize)?;
-        let grid = coord.fig5(&rt, &prep, bw)?;
+        let grid = figures::fig5_grid(
+            &rt,
+            &prep,
+            &cfg.sweep.thresholds,
+            &cfg.sweep.injection_probs,
+            bw,
+        )?;
         let adaptive = loadbalance::adaptive_search(&prep.tensors, bw, 4, 0.05)?;
         rows.push(vec![
             name.clone(),
             format!("{:+.1}%", (grid.best_point().speedup - 1.0) * 100.0),
-            "60".to_string(),
+            format!("{}", cfg.sweep.grid_size()),
             format!("{:+.1}%", (adaptive.speedup - 1.0) * 100.0),
             adaptive.evaluations.to_string(),
             format!("d={} p={:.2}", adaptive.threshold, adaptive.pinj),
@@ -448,105 +413,5 @@ fn cmd_balance(
             &rows
         )
     );
-    Ok(())
-}
-
-fn cmd_campaign(
-    coord: &Coordinator,
-    shared_names: &[String],
-    optimize: bool,
-    p: &wisper::cli::Parsed,
-) -> Result<()> {
-    let names = campaign_names(p, shared_names)?;
-    let mut spec = CampaignSpec::from_sweep_config(&coord.cfg.sweep);
-    if let Some(list) = p.get("bws") {
-        spec.bandwidths = parse_bw_list(list)?;
-    }
-    if let Some(w) = p.get_usize("workers")? {
-        spec.workers = w;
-    }
-    spec.refine = p.has_flag("refine");
-
-    println!(
-        "sweep campaign: {} workloads x {} bandwidths x {} grid points ({} units)\n",
-        names.len(),
-        spec.bandwidths.len(),
-        spec.grid_size(),
-        spec.unit_count(names.len()),
-    );
-    let result = coord.campaign(&names, optimize, &spec)?;
-
-    // Table cells, the per-bandwidth footer and the CSV's grid columns
-    // all agree: cells and footer report the campaign's best (grid, or
-    // refinement when it genuinely wins); the CSV keeps grid and
-    // refined speedups in separate, labeled columns.
-    let mut headers: Vec<String> = vec!["workload".into(), "t_wired(s)".into()];
-    for bw in &spec.bandwidths {
-        headers.push(format!("{} gain", eng(*bw, "b/s")));
-        headers.push("best cfg".into());
-    }
-    let mut trows = Vec::new();
-    let mut csv_rows = Vec::new();
-    for w in &result.workloads {
-        let mut row = vec![w.name.clone(), format!("{:.4e}", w.t_wired)];
-        for b in &w.per_bw {
-            let grid_best = b.sweep.best_point();
-            let (bt, bp) = b.best_config();
-            row.push(format!("{:+.1}%", (b.best_speedup() - 1.0) * 100.0));
-            row.push(format!("d={bt} p={bp:.2}"));
-            csv_rows.push(vec![
-                w.name.clone(),
-                format!("{}", b.bandwidth),
-                format!("{}", grid_best.threshold),
-                format!("{:.2}", grid_best.pinj),
-                format!("{:.6}", grid_best.speedup),
-                format!("{:.6e}", grid_best.total_s),
-                format!("{:.6e}", w.t_wired),
-                b.refined
-                    .as_ref()
-                    .map(|r| format!("{:.6}", r.speedup))
-                    .unwrap_or_default(),
-            ]);
-        }
-        trows.push(row);
-    }
-    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    print!("{}", report::table(&hrefs, &trows));
-    println!(
-        "\n{} work units, {} grid points evaluated",
-        result.units, result.grid_evaluations
-    );
-
-    for (bi, bw) in spec.bandwidths.iter().enumerate() {
-        let gains: Vec<f64> = result
-            .workloads
-            .iter()
-            .map(|w| (w.per_bw[bi].best_speedup() - 1.0) * 100.0)
-            .collect();
-        println!(
-            "{}: average speedup {:+.1}%, max {:+.1}%",
-            eng(*bw, "b/s"),
-            wisper::util::stats::mean(&gains),
-            wisper::util::stats::max(&gains),
-        );
-    }
-
-    if p.has_flag("csv") {
-        let path = report::results_dir().join("campaign.csv");
-        report::write_csv(
-            &path,
-            &[
-                "workload", "wl_bw", "grid_threshold", "grid_pinj", "grid_speedup",
-                "grid_t_hybrid", "t_wired", "refined_speedup",
-            ],
-            &csv_rows,
-        )?;
-        println!("\nwrote {}", path.display());
-    }
-    if p.has_flag("json") {
-        let path = report::results_dir().join("campaign.json");
-        report::write_json(&path, &result.to_json())?;
-        println!("wrote {}", path.display());
-    }
     Ok(())
 }

@@ -1,8 +1,10 @@
 //! Report emitters: aligned ASCII tables, horizontal bar charts, signed
-//! heatmaps, CSV files, and a minimal JSON value type — the formats the
-//! paper-figure benches and the campaign engine print and save under
-//! `results/`.
+//! heatmaps, CSV files, and a minimal JSON value type (writer *and*
+//! reader) — the formats the paper-figure experiments and the campaign
+//! engine print and save under `results/`, and that the run store
+//! ([`crate::experiment::store`]) reads back for cross-run comparison.
 
+use anyhow::{bail, Result};
 use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
@@ -20,6 +22,65 @@ pub enum Json {
 }
 
 impl Json {
+    /// Parse a JSON document (the subset this module emits, which is all
+    /// of RFC 8259 minus exotic number forms). Used by the run store to
+    /// read manifests back for `wisper compare`.
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos, 0)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing data at byte {pos} after JSON value");
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (None for non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(fields) => Some(fields),
+            _ => None,
+        }
+    }
+
     /// Render with two-space indentation.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -81,6 +142,191 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r')
+    {
+        *pos += 1;
+    }
+}
+
+fn expect_literal(bytes: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected {lit:?} at byte {}", *pos);
+    }
+}
+
+/// Nesting bound for the recursive-descent parser: a hostile
+/// `[[[[...` document must error, not overflow the stack.
+const MAX_JSON_DEPTH: usize = 128;
+
+fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json> {
+    if depth > MAX_JSON_DEPTH {
+        bail!("JSON nested deeper than {MAX_JSON_DEPTH} levels");
+    }
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => bail!("unexpected end of JSON input"),
+        Some(b'n') => {
+            expect_literal(bytes, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some(b't') => {
+            expect_literal(bytes, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(b'f') => {
+            expect_literal(bytes, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos, depth + 1)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                if bytes.get(*pos) != Some(&b':') {
+                    bail!("expected ':' at byte {}", *pos);
+                }
+                *pos += 1;
+                let value = parse_value(bytes, pos, depth + 1)?;
+                fields.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    if bytes.get(*pos) != Some(&b'"') {
+        bail!("expected '\"' at byte {}", *pos);
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => bail!("unterminated JSON string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000c}'),
+                    Some(b'u') => {
+                        let code = parse_hex4(bytes, *pos + 1)?;
+                        *pos += 4;
+                        // Combine a UTF-16 surrogate pair when present.
+                        let c = if (0xD800..0xDC00).contains(&code) {
+                            if bytes.get(*pos + 1) == Some(&b'\\')
+                                && bytes.get(*pos + 2) == Some(&b'u')
+                            {
+                                let lo = parse_hex4(bytes, *pos + 3)?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate \\u{lo:04x}");
+                                }
+                                *pos += 6;
+                                0x10000
+                                    + ((code - 0xD800) << 10)
+                                    + (lo - 0xDC00)
+                            } else {
+                                bail!("lone high surrogate \\u{code:04x}");
+                            }
+                        } else {
+                            code
+                        };
+                        match char::from_u32(c) {
+                            Some(c) => out.push(c),
+                            None => bail!("invalid unicode escape \\u{c:04x}"),
+                        }
+                    }
+                    other => bail!("invalid escape {other:?}"),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one complete UTF-8 scalar.
+                let rest = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| anyhow::anyhow!("invalid UTF-8 in JSON string"))?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], at: usize) -> Result<u32> {
+    let chunk = bytes
+        .get(at..at + 4)
+        .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+    let s = std::str::from_utf8(chunk)
+        .map_err(|_| anyhow::anyhow!("invalid \\u escape"))?;
+    u32::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("invalid \\u escape {s:?}"))
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&bytes[start..*pos]).unwrap_or("");
+    match s.parse::<f64>() {
+        Ok(v) => Ok(Json::Num(v)),
+        Err(_) => bail!("invalid JSON number {s:?} at byte {start}"),
     }
 }
 
@@ -251,9 +497,12 @@ pub fn write_csv(
     Ok(())
 }
 
-/// Default results directory.
+/// Default results directory. `WISPER_RESULTS_DIR` overrides it (so
+/// tests and CI can redirect run-store writes to a temp dir); the older
+/// `WISPER_RESULTS` spelling is still honored, then `results/`.
 pub fn results_dir() -> std::path::PathBuf {
-    std::env::var("WISPER_RESULTS")
+    std::env::var("WISPER_RESULTS_DIR")
+        .or_else(|_| std::env::var("WISPER_RESULTS"))
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("results"))
 }
@@ -324,6 +573,97 @@ mod tests {
         assert!(s.contains("\"ok\": true"));
         assert!(s.contains("\"none\": null"));
         assert!(s.contains("\"empty\": []"));
+    }
+
+    #[test]
+    fn json_nonfinite_and_empty_containers() {
+        // RFC 8259 has no NaN/Inf: all non-finite numbers emit null.
+        assert_eq!(Json::Num(f64::NAN).render(), "null\n");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null\n");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).render(), "null\n");
+        assert_eq!(Json::Arr(vec![]).render(), "[]\n");
+        assert_eq!(Json::Obj(vec![]).render(), "{}\n");
+        // Nested empties stay compact.
+        let v = Json::Obj(vec![("a".into(), Json::Arr(vec![]))]);
+        assert!(v.render().contains("\"a\": []"));
+    }
+
+    #[test]
+    fn json_control_chars_escape_and_roundtrip() {
+        let s = "quote\" back\\ nl\n cr\r tab\t bell\u{0007} nul\u{0000}";
+        let rendered = Json::Str(s.into()).render();
+        assert!(rendered.contains("\\\""));
+        assert!(rendered.contains("\\\\"));
+        assert!(rendered.contains("\\n"));
+        assert!(rendered.contains("\\r"));
+        assert!(rendered.contains("\\t"));
+        assert!(rendered.contains("\\u0007"));
+        assert!(rendered.contains("\\u0000"));
+        let back = Json::parse(&rendered).unwrap();
+        assert_eq!(back, Json::Str(s.into()));
+    }
+
+    #[test]
+    fn json_parse_roundtrip_nested() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("zfnet".into())),
+            ("speedup".into(), Json::Num(1.0625)),
+            ("count".into(), Json::Num(64e9)),
+            ("neg".into(), Json::Num(-3.5e-7)),
+            ("flag".into(), Json::Bool(false)),
+            ("missing".into(), Json::Null),
+            ("empty_arr".into(), Json::Arr(vec![])),
+            ("empty_obj".into(), Json::Obj(vec![])),
+            (
+                "rows".into(),
+                Json::Arr(vec![
+                    Json::Obj(vec![("x".into(), Json::Num(1.0))]),
+                    Json::Arr(vec![Json::Num(2.0), Json::Str("s".into())]),
+                ]),
+            ),
+        ]);
+        let back = Json::parse(&v.render()).unwrap();
+        assert_eq!(back, v);
+        // Accessors walk the parsed tree.
+        assert_eq!(back.get("name").and_then(Json::as_str), Some("zfnet"));
+        assert_eq!(back.get("speedup").and_then(Json::as_f64), Some(1.0625));
+        assert_eq!(back.get("flag").and_then(Json::as_bool), Some(false));
+        assert_eq!(back.get("rows").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert!(back.get("nope").is_none());
+    }
+
+    #[test]
+    fn json_parse_unicode_escapes() {
+        assert_eq!(
+            Json::parse("\"a\\u00e9b\"").unwrap(),
+            Json::Str("a\u{e9}b".into())
+        );
+        // Surrogate pair (U+1F600).
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".into())
+        );
+        // Raw multi-byte UTF-8 passes through.
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+        assert!(Json::parse("\"\\ud83d\"").is_err()); // lone surrogate
+    }
+
+    #[test]
+    fn json_parse_rejects_malformed() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("[1] trailing").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("+-3").is_err());
+        // Hostile nesting errors instead of overflowing the stack.
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

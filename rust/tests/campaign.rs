@@ -119,15 +119,27 @@ fn campaign_deterministic_across_worker_counts() {
         Runtime::native,
     )
     .unwrap();
-    for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+    for (wi, (a, b)) in r1.workloads.iter().zip(&r4.workloads).enumerate() {
         assert_eq!(a.name, b.name);
         assert_eq!(a.t_wired, b.t_wired);
-        for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+        for (bi, (x, y)) in a.per_bw.iter().zip(&b.per_bw).enumerate() {
+            // Best points are bit-identical regardless of worker
+            // interleaving...
             assert_eq!(x.sweep.best, y.sweep.best);
+            assert_eq!(x.best_speedup(), y.best_speedup());
+            assert_eq!(x.best_config(), y.best_config());
             for (p, q) in x.sweep.points.iter().zip(&y.sweep.points) {
                 assert_eq!(p.total_s, q.total_s);
                 assert_eq!(p.speedup, q.speedup);
                 assert_eq!(p.wl_bits, q.wl_bits);
+            }
+            // ...and so are the full Fig. 5 heatmaps (row/col layout
+            // must not depend on unit completion order).
+            let h1 = r1.heatmap(wi, bi);
+            let h4 = r4.heatmap(wi, bi);
+            assert_eq!(h1.len(), h4.len());
+            for (row1, row4) in h1.iter().zip(&h4) {
+                assert_eq!(row1, row4, "{}@bw{}", a.name, bi);
             }
         }
     }

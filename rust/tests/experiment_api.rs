@@ -1,0 +1,336 @@
+//! Unified experiment API integration: scenario TOML parsing, registry
+//! execution, run-store round-trip, and cross-run comparison.
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::experiment::{
+    self, compare_manifests, ExperimentOutput, RunStore, Scenario,
+};
+use wisper::report::Json;
+
+fn coordinator() -> Coordinator {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 0; // deterministic layer-sequential mappings
+    Coordinator::new(cfg).unwrap()
+}
+
+/// A small, fast scenario over real workloads.
+fn small_scenario(experiments: &[&str]) -> Scenario {
+    Scenario::builder(&Config::default())
+        .name("itest")
+        .workloads(["zfnet", "googlenet"])
+        .bandwidths(&[64e9])
+        .thresholds(&[1, 2])
+        .injection_probs(&[0.2, 0.4])
+        .seeds(2)
+        .optimize(false)
+        .experiments(experiments.iter().copied())
+        .build()
+        .unwrap()
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wisper_expapi_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn registry_lists_all_builtins() {
+    let names = experiment::experiment_names();
+    for expected in [
+        "fig2",
+        "fig4",
+        "fig5",
+        "campaign",
+        "energy",
+        "stochastic-validation",
+        "mapping-ablation",
+    ] {
+        assert!(names.contains(&expected), "{expected} missing from {names:?}");
+    }
+    // Every registry entry self-describes.
+    for e in experiment::registry() {
+        assert!(!e.describe().is_empty(), "{} has no description", e.name());
+    }
+}
+
+#[test]
+fn scenario_toml_round_trip() {
+    let cfg = Config::default();
+    let s = Scenario::from_toml_str(
+        "[scenario]\n\
+         name = \"paper-eval\"\n\
+         workloads = [\"zfnet\", \"googlenet\", \"zfnet\"]\n\
+         experiments = \"fig4, campaign\"\n\
+         bandwidths = [64e9, 96e9]\n\
+         thresholds = [1, 2]\n\
+         injection_probs = [0.1, 0.2, 0.4]\n\
+         seeds = 4\n\
+         optimize = false\n\
+         refine = true\n\
+         workers = 2\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(s.name, "paper-eval");
+    // Duplicates dropped, order preserved.
+    assert_eq!(s.workloads, vec!["zfnet", "googlenet"]);
+    assert_eq!(s.experiments, vec!["fig4", "campaign"]);
+    assert_eq!(s.bandwidths, vec![64e9, 96e9]);
+    assert_eq!(s.thresholds, vec![1, 2]);
+    assert_eq!(s.injection_probs, vec![0.1, 0.2, 0.4]);
+    assert_eq!(s.seeds, 4);
+    assert!(!s.optimize);
+    assert!(s.refine);
+    assert_eq!(s.workers, 2);
+    // Serialization carries the whole spec into the manifest.
+    let js = s.to_json().render();
+    assert!(js.contains("\"paper-eval\""));
+    assert!(js.contains("\"googlenet\""));
+    assert!(js.contains("\"fig4\""));
+}
+
+#[test]
+fn scenario_defaults_from_config_sweep() {
+    let mut cfg = Config::default();
+    cfg.sweep.thresholds = vec![1, 3];
+    cfg.sweep.bandwidths_bits = vec![32e9];
+    let s = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(s.thresholds, vec![1, 3]);
+    assert_eq!(s.bandwidths, vec![32e9]);
+    // Unlisted experiments default to the five paper evaluations.
+    assert_eq!(s.experiments.len(), 5);
+    assert!(s.experiments.iter().any(|e| e == "stochastic-validation"));
+}
+
+#[test]
+fn scenario_all_expands_and_errors_teach() {
+    let cfg = Config::default();
+    let s = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"all\"]\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(s.workloads.len(), 15);
+
+    // No [scenario] section: hard error, not a silent default run.
+    assert!(Scenario::from_toml_str("[sweep]\nworkers = 1\n", &cfg).is_err());
+
+    // Unknown workload: error lists the valid set.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"nope\"]\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("nope") && err.contains("zfnet"), "{err}");
+
+    // Unknown experiment: error lists the registry.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nexperiments = [\"figZ\"]\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("figZ") && err.contains("fig4"), "{err}");
+
+    // Degenerate axes rejected.
+    assert!(Scenario::from_toml_str(
+        "[scenario]\ninjection_probs = [1.5]\n",
+        &cfg
+    )
+    .is_err());
+    assert!(Scenario::from_toml_str(
+        "[scenario]\nbandwidths = [-64e9]\n",
+        &cfg
+    )
+    .is_err());
+    assert!(Scenario::from_toml_str("[scenario]\nthresholds = [0]\n", &cfg).is_err());
+    // Fractional thresholds are a confused axis, not a truncation.
+    assert!(Scenario::from_toml_str("[scenario]\nthresholds = [2.7]\n", &cfg).is_err());
+    assert!(Scenario::from_toml_str("[scenario]\nseeds = 0\n", &cfg).is_err());
+    // Sloppy comma-string lists are hard errors, same as the CLI.
+    assert!(Scenario::from_toml_str(
+        "[scenario]\nworkloads = \"zfnet,,googlenet\"\n",
+        &cfg
+    )
+    .is_err());
+}
+
+/// The five paper experiments plus campaign/ablation all execute
+/// through the trait over one prepared scenario, and each reports
+/// manifest metrics.
+#[test]
+fn run_scenario_executes_all_experiments() {
+    let coord = coordinator();
+    let mut scenario = small_scenario(&[
+        "fig2",
+        "fig4",
+        "fig5",
+        "campaign",
+        "energy",
+        "stochastic-validation",
+        "mapping-ablation",
+    ]);
+    scenario.workloads = vec!["zfnet".to_string()];
+    scenario.normalize_and_validate().unwrap();
+    let run = experiment::run_scenario(&coord, &scenario).unwrap();
+    assert_eq!(run.backend, "native");
+    let outputs = run.outputs;
+    assert_eq!(outputs.len(), 7);
+    for (name, out) in &outputs {
+        assert!(!out.text.is_empty(), "{name} produced no text");
+        assert!(!out.metrics.is_empty(), "{name} produced no metrics");
+        // Every metric value is finite and keyed by workload.
+        for (k, v) in &out.metrics {
+            assert!(v.is_finite(), "{name}/{k} = {v}");
+            assert!(k.starts_with("zfnet/"), "{name} metric key {k}");
+        }
+        // JSON renders and parses back.
+        let parsed = Json::parse(&out.json.render()).unwrap();
+        assert_eq!(&parsed, &out.json);
+    }
+    // fig4 and campaign agree on the best speedup (one sweep pipeline).
+    let metric = "zfnet/64000000000/best_speedup";
+    let find = |exp: &str| {
+        outputs
+            .iter()
+            .find(|(n, _)| n == exp)
+            .and_then(|(_, o)| {
+                o.metrics.iter().find(|(k, _)| k == metric).map(|(_, v)| *v)
+            })
+            .unwrap()
+    };
+    assert_eq!(find("fig4"), find("campaign"));
+}
+
+#[test]
+fn store_round_trip_and_self_compare() {
+    let coord = coordinator();
+    let scenario = small_scenario(&["fig4"]);
+    let dir = tmpdir("roundtrip");
+    let store = RunStore::at(&dir);
+
+    let (rec_a, outputs) =
+        experiment::run_and_store(&coord, &scenario, &store).unwrap();
+    let (rec_b, _) = experiment::run_and_store(&coord, &scenario, &store).unwrap();
+    assert_ne!(rec_a.run_id, rec_b.run_id);
+
+    // The record directory holds manifest + per-experiment JSON + CSVs.
+    assert!(rec_a.dir.join("manifest.json").is_file());
+    assert!(rec_a.dir.join("fig4.json").is_file());
+    assert!(rec_a.dir.join("fig4_speedup.csv").is_file());
+    let csv = std::fs::read_to_string(rec_a.dir.join("fig4_speedup.csv")).unwrap();
+    assert!(csv.starts_with("workload,wl_bw,speedup"));
+    assert!(csv.contains("zfnet"));
+
+    // Manifest parses back and self-describes.
+    let manifest = store.load_manifest(&rec_a.run_id).unwrap();
+    assert_eq!(
+        manifest.get("run_id").and_then(Json::as_str),
+        Some(rec_a.run_id.as_str())
+    );
+    assert_eq!(manifest.get("backend").and_then(Json::as_str), Some("native"));
+    let sc = manifest.get("scenario").unwrap();
+    assert_eq!(sc.get("name").and_then(Json::as_str), Some("itest"));
+    assert_eq!(
+        sc.get("workloads").and_then(Json::as_arr).map(|a| a.len()),
+        Some(2)
+    );
+
+    // Both runs list under the store, and an identical scenario diff
+    // is equivalent: no changes, no regressions.
+    let runs = store.list_runs().unwrap();
+    assert!(runs.contains(&rec_a.run_id) && runs.contains(&rec_b.run_id));
+    let other = store.load_manifest(&rec_b.run_id).unwrap();
+    let cmp = compare_manifests(&manifest, &other);
+    assert!(!outputs.is_empty());
+    assert_eq!(cmp.regressions, 0, "{}", cmp.render());
+    assert_eq!(cmp.changed(), 0, "{}", cmp.render());
+    assert!(cmp.render().contains("equivalent"));
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Compare flags best-speedup drops and baseline growth as
+/// regressions, and reports one-sided metrics without flagging them.
+#[test]
+fn compare_flags_regressions() {
+    let dir = tmpdir("regress");
+    let store = RunStore::at(&dir);
+    let scenario = small_scenario(&["fig4"]);
+    let out = |speedup: f64, t_wired: f64, extra: bool| {
+        let mut metrics = vec![
+            ("zfnet/64000000000/best_speedup".to_string(), speedup),
+            ("zfnet/t_wired_s".to_string(), t_wired),
+        ];
+        if extra {
+            metrics.push(("googlenet/t_wired_s".to_string(), 1.0));
+        }
+        vec![(
+            "fig4".to_string(),
+            ExperimentOutput {
+                text: String::new(),
+                json: Json::Null,
+                csvs: vec![],
+                metrics,
+            },
+        )]
+    };
+    let rec_a = store
+        .save(&scenario, "native", &out(1.10, 1.0e-3, true))
+        .unwrap();
+    let rec_b = store
+        .save(&scenario, "native", &out(1.05, 2.0e-3, false))
+        .unwrap();
+    let a = store.load_manifest(&rec_a.run_id).unwrap();
+    let b = store.load_manifest(&rec_b.run_id).unwrap();
+    let cmp = compare_manifests(&a, &b);
+    // Speedup fell AND wired baseline grew: two regressions.
+    assert_eq!(cmp.regressions, 2, "{}", cmp.render());
+    let rendered = cmp.render();
+    assert!(rendered.contains("REGRESSION"), "{rendered}");
+    // The metric present only in run A is reported as changed but not
+    // a regression.
+    let one_sided = cmp
+        .diffs
+        .iter()
+        .find(|d| d.key == "fig4/googlenet/t_wired_s")
+        .unwrap();
+    assert!(one_sided.b.is_none() && !one_sided.regression);
+    // Reversed direction: B improves on A, zero regressions.
+    let cmp_rev = compare_manifests(&b, &a);
+    assert_eq!(cmp_rev.regressions, 0, "{}", cmp_rev.render());
+    // JSON form renders.
+    assert!(cmp.to_json().render().contains("best_speedup"));
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The scenario builder and the TOML path produce identical specs.
+#[test]
+fn builder_matches_toml() {
+    let cfg = Config::default();
+    let from_builder = Scenario::builder(&cfg)
+        .name("same")
+        .workloads(["zfnet"])
+        .experiments(["fig2"])
+        .bandwidths(&[96e9])
+        .seeds(3)
+        .optimize(false)
+        .build()
+        .unwrap();
+    let from_toml = Scenario::from_toml_str(
+        "[scenario]\nname = \"same\"\nworkloads = [\"zfnet\"]\n\
+         experiments = [\"fig2\"]\nbandwidths = [96e9]\nseeds = 3\noptimize = false\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(from_builder, from_toml);
+}

@@ -1,0 +1,29 @@
+//! `WISPER_RESULTS_DIR` redirection. Kept in its own integration
+//! binary: env vars are process-global, so these mutations must not
+//! race other tests' `results_dir()` reads.
+
+use std::path::PathBuf;
+
+#[test]
+fn results_dir_honors_env_overrides() {
+    let dir = std::env::temp_dir()
+        .join(format!("wisper_results_env_{}", std::process::id()));
+
+    // New spelling wins.
+    std::env::set_var("WISPER_RESULTS_DIR", &dir);
+    std::env::set_var("WISPER_RESULTS", "legacy");
+    assert_eq!(wisper::report::results_dir(), dir);
+    // The default run store follows it.
+    let store = wisper::experiment::RunStore::open_default();
+    assert_eq!(store.root(), dir.as_path());
+    // No runs yet: empty listing, not an error.
+    assert_eq!(store.list_runs().unwrap(), Vec::<String>::new());
+
+    // Legacy spelling still honored as a fallback.
+    std::env::remove_var("WISPER_RESULTS_DIR");
+    assert_eq!(wisper::report::results_dir(), PathBuf::from("legacy"));
+
+    // Default when neither is set.
+    std::env::remove_var("WISPER_RESULTS");
+    assert_eq!(wisper::report::results_dir(), PathBuf::from("results"));
+}
