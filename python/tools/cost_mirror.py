@@ -979,6 +979,193 @@ def prepare(name, optimize, pkg=None, iters=600, seed=0xC0DE, temp=0.25):
             'initial': initial}
 
 
+# ---------------------------------------------------------------- policies
+# Mirror of rust/src/sim/policy.rs — bit-exact: same arithmetic, same
+# iteration order, same tie-breaks. Checked by mirror_checks_policy.py.
+
+POLICY_NAMES = ['static', 'greedy', 'controller', 'oracle']
+
+
+def _clamp(x, lo, hi):
+    # f64::clamp semantics.
+    if x < lo:
+        return lo
+    if x > hi:
+        return hi
+    return x
+
+
+def checked_speedup(wired_s, hybrid_s):
+    if hybrid_s <= 0.0:
+        raise ValueError(f"non-positive total time {hybrid_s}")
+    return wired_s / hybrid_s
+
+
+def eligible_suffix(l, threshold):
+    """Wireless-eligible (vol_hops, vol) a threshold admits: suffix sums
+    of the eligibility buckets, zero-threshold clamped. The ONE
+    accumulation the evaluator and every closed-form policy share —
+    bit-exact parity hinges on this summation order (mirror of
+    sim::policy::eligible_suffix)."""
+    d = max(int(threshold), 1)
+    e_vh = 0.0
+    e_v = 0.0
+    for h in range(d, HOP_BUCKETS + 1):
+        e_vh += l['elig_vol_hops'][h - 1]
+        e_v += l['elig_vol'][h - 1]
+    return e_vh, e_v
+
+
+def layer_outcome(l, threshold, pinj, nop_agg_bw, wl_bw):
+    """(latency, offloaded bits) of one layer under one decision."""
+    moved_vh, moved_v = eligible_suffix(l, threshold)
+    moved_vh *= pinj
+    moved_v *= pinj
+    t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / nop_agg_bw
+    t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+    lat = max(l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl)
+    return lat, moved_v
+
+
+def evaluate_policy(t, decisions, wl_bw):
+    """Per-layer decision vector evaluation; decisions is a list of
+    (threshold, pinj) pairs, one per layer. With a uniform vector this
+    is bit-for-bit evaluate_expected."""
+    assert len(decisions) == len(t['layers'])
+    wl_bits = 0.0
+    lat_k = []
+    for l, (threshold, pinj) in zip(t['layers'], decisions):
+        moved_vh, moved_v = eligible_suffix(l, threshold)
+        moved_vh *= pinj
+        moved_v *= pinj
+        wl_bits += moved_v
+        t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / t['nop_agg_bw']
+        t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+        lat_k.append([l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl])
+    r = from_layers(lat_k)
+    r['wl_bits'] = wl_bits
+    return r
+
+
+def greedy_layer(l, nop_agg_bw, wl_bw, max_threshold):
+    """Closed-form water-filling for one layer (GreedyPerLayer)."""
+    t_other = max(l['t_comp'], l['t_dram'], l['t_noc'])
+    t_nop0 = l['nop_vol_hops'] / nop_agg_bw
+    no_offload = (1, 0.0)
+    if t_nop0 <= t_other:
+        return no_offload
+    best = no_offload
+    best_lat = max(t_nop0, t_other)
+    best_wl = 0.0
+    max_d = min(max(int(max_threshold), 1), HOP_BUCKETS)
+    for d in range(1, max_d + 1):
+        e_vh, e_v = eligible_suffix(l, d)
+        if e_vh <= 0.0:
+            continue
+        if e_v > 0.0:
+            p_eq = (l['nop_vol_hops'] * wl_bw) / (e_v * nop_agg_bw + e_vh * wl_bw)
+        else:
+            p_eq = 1.0
+        p_fill = (l['nop_vol_hops'] - t_other * nop_agg_bw) / e_vh
+        p = _clamp(min(p_eq, p_fill), 0.0, 1.0)
+        lat, wl = layer_outcome(l, d, p, nop_agg_bw, wl_bw)
+        if lat < best_lat or (lat == best_lat and wl < best_wl):
+            best = (d, p)
+            best_lat = lat
+            best_wl = wl
+    return best
+
+
+def greedy_decisions(t, wl_bw, max_threshold):
+    return [greedy_layer(l, t['nop_agg_bw'], wl_bw, max_threshold)
+            for l in t['layers']]
+
+
+def oracle_decisions(t, wl_bw, thresholds, pinjs):
+    """Per-layer exhaustive over the grid plus the greedy candidate
+    (OraclePerLayer)."""
+    max_t = max(thresholds)
+    out = []
+    for l in t['layers']:
+        best = (1, 0.0)
+        best_lat, best_wl = layer_outcome(l, 1, 0.0, t['nop_agg_bw'], wl_bw)
+        cands = [(d, p) for d in thresholds for p in pinjs]
+        cands.append(greedy_layer(l, t['nop_agg_bw'], wl_bw, max_t))
+        for cand in cands:
+            lat, wl = layer_outcome(l, cand[0], cand[1], t['nop_agg_bw'], wl_bw)
+            if lat < best_lat or (lat == best_lat and wl < best_wl):
+                best = cand
+                best_lat = lat
+                best_wl = wl
+        out.append(best)
+    return out
+
+
+def best_static_pair(t, wl_bw, thresholds, pinjs):
+    """Best uniform pair over the grid, threshold-major, strictly-greater
+    replacement (ties keep the earliest grid point)."""
+    wired = evaluate_wired(t)['total_s']
+    best = None
+    for d in thresholds:
+        for p in pinjs:
+            decisions = [(d, p)] * len(t['layers'])
+            r = evaluate_policy(t, decisions, wl_bw)
+            s = checked_speedup(wired, r['total_s'])
+            if best is None or s > best[0]:
+                best = (s, d, p)
+    return best[1], best[2]
+
+
+def controller_trajectory(t, wl_bw, threshold, target_wl_share, steps):
+    """Proportional controller (ControllerPolicy / balance_controller)."""
+    wired = evaluate_wired(t)['total_s']
+    pinj = 0.4
+    gain = 0.5
+    traj = []
+    for _ in range(steps):
+        decisions = [(threshold, pinj)] * len(t['layers'])
+        r = evaluate_policy(t, decisions, wl_bw)
+        speedup = checked_speedup(wired, r['total_s'])
+        wl_share = r['shares'][4]
+        traj.append((pinj, speedup, wl_share))
+        pinj = _clamp(pinj + gain * (target_wl_share - wl_share) * max(pinj, 0.05),
+                      0.02, 0.95)
+    return traj
+
+
+def controller_decision(t, wl_bw, thresholds, target_wl_share=0.3, steps=25):
+    best = None
+    for d in thresholds:
+        for p, s, _share in controller_trajectory(t, wl_bw, d, target_wl_share, steps):
+            if best is None or s > best[0]:
+                best = (s, (d, p))
+    return best[1]
+
+
+def evaluate_policies(t, wl_bw, specs, thresholds, pinjs):
+    """Decide and price every named policy; returns a list of dicts in
+    specs order (mirror of sim::policy::evaluate_policies)."""
+    max_t = max(thresholds)
+    wired = evaluate_wired(t)['total_s']
+    out = []
+    for spec in specs:
+        if spec == 'static':
+            d, p = best_static_pair(t, wl_bw, thresholds, pinjs)
+            decisions = [(d, p)] * len(t['layers'])
+        elif spec == 'greedy':
+            decisions = greedy_decisions(t, wl_bw, max_t)
+        elif spec == 'controller':
+            decisions = [controller_decision(t, wl_bw, thresholds)] * len(t['layers'])
+        elif spec == 'oracle':
+            decisions = oracle_decisions(t, wl_bw, thresholds, pinjs)
+        else:
+            raise ValueError(f"unknown policy {spec!r}")
+        r = evaluate_policy(t, decisions, wl_bw)
+        out.append({'policy': spec, 'decisions': decisions, 'result': r,
+                    'speedup': checked_speedup(wired, r['total_s'])})
+    return out
+
+
 def sweep_best(t, bw, thresholds=range(1, 5), pinjs=None):
     pinjs = pinjs or [0.10 + 0.05 * i for i in range(15)]
     wired = evaluate_wired(t)['total_s']

@@ -1,0 +1,136 @@
+"""Policy-subsystem assertions against the mirror (rust/src/sim/policy.rs).
+
+Verifies, without a Rust toolchain, the policy-engine acceptance
+criteria:
+  * StaticPolicy through evaluate_policy reproduces evaluate_expected
+    bit-exactly (total_s, shares, wl_bits) on all 15 paper workloads,
+  * the policy ablation orders OraclePerLayer >= GreedyPerLayer >=
+    StaticPolicy per workload (oracle dominance is exact by
+    construction; greedy vs static within 1e-9),
+  * GreedyPerLayer never loses to the wired baseline,
+  * the controller trajectory stays in its clamp range.
+
+CAUTION: this mirrors rust/src/sim/policy.rs in Python. If you change
+the Rust policy engine, update cost_mirror.py in the same PR or these
+verdicts are stale.
+"""
+import os, sys, time
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from cost_mirror import *
+
+pkg = Package()
+t0 = time.time()
+results = []
+
+def check(name, cond, detail=""):
+    results.append((name, bool(cond), detail))
+    mark = "PASS" if cond else "FAIL"
+    print(f"[{mark}] {name} {detail}")
+
+GRID_T = [1, 2, 3, 4]
+GRID_P = [0.10 + 0.05 * i for i in range(15)]
+BWS = (64e9, 96e9)
+
+tensors = {}
+for name in WORKLOAD_NAMES:
+    wl = build(name)
+    m = layer_sequential(wl, pkg)
+    tensors[name] = build_tensors(wl, m, pkg)
+
+# ---- static parity: uniform decisions == evaluate_expected, bit-exact
+pairs = [(1, 0.4), (2, 0.25), (4, 0.8), (1, 0.1), (3, 0.55)]
+for bw in BWS:
+    ok = True
+    worst = ""
+    for name, t in tensors.items():
+        for d, p in pairs:
+            ref = evaluate_expected(t, d, p, bw)
+            got = evaluate_policy(t, [(d, p)] * len(t['layers']), bw)
+            if (got['total_s'] != ref['total_s']
+                    or got['shares'] != ref['shares']
+                    or got['wl_bits'] != ref['wl_bits']):
+                ok = False
+                worst = f"{name} d={d} p={p}"
+    check(f"static parity bit-exact @ {bw/1e9:.0f}G (15 workloads x {len(pairs)} pairs)",
+          ok, worst)
+
+# the grid-best static pair is also bit-exact through the policy path
+ok = True
+for name, t in tensors.items():
+    d, p = best_static_pair(t, 64e9, GRID_T, GRID_P)
+    ref = evaluate_expected(t, d, p, 64e9)
+    got = evaluate_policy(t, [(d, p)] * len(t['layers']), 64e9)
+    ok = ok and got['total_s'] == ref['total_s'] and got['wl_bits'] == ref['wl_bits']
+check("static parity at each workload's grid-best pair", ok)
+
+# ---- zero injection is the wired baseline, exactly
+ok = True
+for name, t in tensors.items():
+    r = evaluate_policy(t, [(1, 0.0)] * len(t['layers']), 64e9)
+    ok = ok and r['total_s'] == evaluate_wired(t)['total_s'] and r['wl_bits'] == 0.0
+check("zero-pinj policy == wired (bit-exact)", ok)
+
+# ---- ablation ordering per workload: oracle >= greedy >= static
+print("\n-- policy ablation (layer-sequential mappings) --")
+for bw in BWS:
+    ord_exact = True
+    ord_greedy = True
+    ge_one = True
+    details = []
+    for name, t in tensors.items():
+        evals = evaluate_policies(t, bw, POLICY_NAMES, GRID_T, GRID_P)
+        s = {e['policy']: e['speedup'] for e in evals}
+        if bw == 64e9:
+            print(f"  {name:16s} static {s['static']:.4f}  greedy {s['greedy']:.4f}"
+                  f"  controller {s['controller']:.4f}  oracle {s['oracle']:.4f}")
+        # Oracle candidates contain the uniform grid and the greedy
+        # decisions: dominance must be exact, not approximate.
+        if not (s['oracle'] >= s['greedy'] and s['oracle'] >= s['static']):
+            ord_exact = False
+            details.append(f"{name}@{bw:.0e} oracle")
+        if not s['greedy'] >= s['static'] - 1e-9:
+            ord_greedy = False
+            details.append(f"{name}@{bw:.0e} greedy {s['greedy']} < static {s['static']}")
+        if not s['greedy'] >= 1.0 - 1e-12:
+            ge_one = False
+            details.append(f"{name}@{bw:.0e} greedy<1")
+    check(f"oracle >= greedy and oracle >= static (exact) @ {bw/1e9:.0f}G",
+          ord_exact, "; ".join(details))
+    check(f"greedy >= static - 1e-9 @ {bw/1e9:.0f}G", ord_greedy, "; ".join(details))
+    check(f"greedy never loses to wired @ {bw/1e9:.0f}G", ge_one, "; ".join(details))
+
+# ---- greedy structure: compute-bound layers are left alone
+ok = True
+for name in ("zfnet", "googlenet", "transformer"):
+    t = tensors[name]
+    decs = greedy_decisions(t, 64e9, 4)
+    for l, (d, p) in zip(t['layers'], decs):
+        t_other = max(l['t_comp'], l['t_dram'], l['t_noc'])
+        t_nop0 = l['nop_vol_hops'] / t['nop_agg_bw']
+        if t_nop0 <= t_other and p != 0.0:
+            ok = False
+check("greedy skips non-NoP-bound layers", ok)
+
+# ---- controller trajectory sanity
+t = tensors["googlenet"]
+traj = controller_trajectory(t, 64e9, 1, 0.3, 25)
+check("controller trajectory length", len(traj) == 25)
+check("controller pinj stays clamped",
+      all(0.02 <= p <= 0.95 for p, _, _ in traj))
+
+# ---- the ablation improves something: per-layer beats static somewhere
+gains = []
+for name, t in tensors.items():
+    evals = evaluate_policies(t, 64e9, ['static', 'oracle'], GRID_T, GRID_P)
+    s = {e['policy']: e['speedup'] for e in evals}
+    gains.append(s['oracle'] - s['static'])
+check("per-layer axis strictly beats static on >=3 workloads",
+      sum(1 for g in gains if g > 1e-6) >= 3,
+      f"wins={sum(1 for g in gains if g > 1e-6)}")
+
+print(f"\nelapsed {time.time()-t0:.1f}s")
+fails = [r for r in results if not r[1]]
+print(f"{len(results)-len(fails)}/{len(results)} passed")
+for name, _, detail in fails:
+    print("FAILED:", name, detail)
+sys.exit(1 if fails else 0)

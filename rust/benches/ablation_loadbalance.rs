@@ -41,7 +41,7 @@ fn main() {
 
     println!("\n=== Proportional controller trajectory (zfnet, target 30% wl share) ===\n");
     let prep = coord.prepare("zfnet", true).unwrap();
-    let traj = balance_controller(&prep.tensors, bw, 1, 0.3, 12);
+    let traj = balance_controller(&prep.tensors, bw, 1, 0.3, 12).unwrap();
     let mut trows = Vec::new();
     for (i, (pinj, speedup, share)) in traj.iter().enumerate() {
         trows.push(vec![

@@ -1,21 +1,39 @@
-//! Wired/wireless load balancing — the paper's headline future-work item
-//! ("the need for a mechanism to balance the load between the wired and
-//! wireless planes").
+//! Wired/wireless load-balancing refinement — the coordinator-side
+//! front end of the [`crate::sim::policy`] subsystem.
 //!
-//! Two mechanisms beyond the static grid sweep:
-//!  * `adaptive_search`: per-workload hill climbing over (threshold,
-//!    pinj) that converges with far fewer cost-model calls than the full
-//!    grid — the "offline profiling" configuration step the conclusion
-//!    sketches.
-//!  * `balance_controller`: a proportional controller that adjusts the
-//!    injection probability until the wireless plane's busy time matches
-//!    a target utilization of the bottleneck time, preventing the
-//!    saturation Figure 5 shows past pinj ~50%.
+//! The paper's conclusion names load balancing between the wired and
+//! wireless planes as the headline future-work item. The decision logic
+//! itself now lives in `sim::policy` (an
+//! [`OffloadPolicy`](crate::sim::policy::OffloadPolicy) maps cost
+//! tensors to per-layer `(threshold, pinj)` decisions; four built-ins:
+//! `static`, `greedy`, `controller`, `oracle`). This module hosts the
+//! refinement stage that runs *after* a grid pass:
+//!
+//!  * [`adaptive_search`]: multi-start hill climbing over the global
+//!    `(threshold, pinj)` pair — three deterministic seeds across the
+//!    pinj range, memoized so repeated probes are free. It explores the
+//!    continuous pinj axis the grid quantizes away.
+//!  * [`refine`]: the policy-driven refinement — price every requested
+//!    policy through `sim::policy::evaluate_policies` alongside the
+//!    hill climb and return the best decision vector found (`wisper
+//!    balance` prints it; campaigns record the same pieces per unit as
+//!    `refined` + `policies`).
+//!  * [`balance_controller`]: compatibility wrapper over
+//!    [`crate::sim::policy::controller_trajectory`] (the proportional
+//!    controller absorbed into `ControllerPolicy`).
+//!
+//! A non-positive hybrid total time is a broken cost model and is
+//! surfaced as an error everywhere here (it used to be silently mapped
+//! to speedup 1.0).
 
-use crate::config::WirelessConfig;
 use crate::sim::cost::CostTensors;
-use crate::sim::{evaluate_expected, evaluate_wired, COMP_WIRELESS};
+use crate::sim::policy::{
+    checked_speedup, evaluate_policies, evaluate_policy, LayerDecision, PolicyEval,
+    PolicySpec,
+};
+use crate::sim::evaluate_wired;
 use anyhow::Result;
+use std::collections::BTreeMap;
 
 /// Outcome of an adaptive configuration search.
 #[derive(Debug, Clone)]
@@ -23,11 +41,88 @@ pub struct AdaptiveResult {
     pub threshold: u32,
     pub pinj: f64,
     pub speedup: f64,
+    /// Distinct cost-model evaluations across all starts (memoized).
     pub evaluations: usize,
 }
 
-/// Hill-climb (threshold, pinj) from a conservative start. Deterministic
-/// and cheap: O(tens) of evaluations instead of the 60-point grid.
+/// Shared state of one adaptive search: the memo keeps re-probed
+/// `(threshold, pinj)` points free, within and across starts.
+struct Search<'a> {
+    tensors: &'a CostTensors,
+    wired: f64,
+    wl_bw: f64,
+    evaluations: usize,
+    memo: BTreeMap<(u32, u64), f64>,
+}
+
+impl Search<'_> {
+    fn speedup_at(&mut self, t: u32, p: f64) -> Result<f64> {
+        let key = (t, p.to_bits());
+        if let Some(&s) = self.memo.get(&key) {
+            return Ok(s);
+        }
+        self.evaluations += 1;
+        let decisions = vec![
+            LayerDecision {
+                threshold: t,
+                pinj: p,
+            };
+            self.tensors.layers.len()
+        ];
+        let r = evaluate_policy(self.tensors, &decisions, self.wl_bw);
+        let s = checked_speedup(self.wired, r.total_s)?;
+        self.memo.insert(key, s);
+        Ok(s)
+    }
+
+    /// One deterministic hill climb from `(t0, p0)`; returns the local
+    /// optimum `(threshold, pinj, speedup)`.
+    fn climb(
+        &mut self,
+        max_threshold: u32,
+        pinj_step: f64,
+        (t0, p0): (u32, f64),
+    ) -> Result<(u32, f64, f64)> {
+        let mut best = (t0, p0, self.speedup_at(t0, p0)?);
+        loop {
+            let (t, p, _s) = best;
+            let mut candidates = vec![
+                (t, (p + pinj_step).min(0.95)),
+                (t, (p - pinj_step).max(0.05)),
+            ];
+            if t < max_threshold {
+                candidates.push((t + 1, p));
+            }
+            if t > 1 {
+                candidates.push((t - 1, p));
+            }
+            let mut improved = false;
+            let mut next = best;
+            for (ct, cp) in candidates {
+                let cs = self.speedup_at(ct, cp)?;
+                if cs > next.2 + 1e-12 {
+                    next = (ct, cp, cs);
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+            best = next;
+        }
+        Ok(best)
+    }
+}
+
+/// Deterministic seeds across the pinj range: a single conservative
+/// start can stall on a local optimum when near- and far-hop eligible
+/// traffic pull the threshold axis in different directions.
+const CLIMB_SEEDS: [(u32, f64); 3] = [(1, 0.1), (1, 0.45), (1, 0.8)];
+
+/// Multi-start hill climb over the global `(threshold, pinj)` pair.
+/// Three deterministic seeds across the pinj range, best result kept;
+/// repeated probes are memoized so the total evaluation count stays
+/// O(tens). Errors if the cost model yields a non-positive total time.
 pub fn adaptive_search(
     tensors: &CostTensors,
     wl_bw: f64,
@@ -35,91 +130,115 @@ pub fn adaptive_search(
     pinj_step: f64,
 ) -> Result<AdaptiveResult> {
     let wired = evaluate_wired(tensors).total_s;
-    let mut evals = 0usize;
-    let mut eval = |t: u32, p: f64| -> f64 {
-        evals += 1;
-        let w = WirelessConfig {
-            enabled: true,
-            bandwidth_bits: wl_bw,
-            distance_threshold: t,
-            injection_prob: p,
-            ..Default::default()
-        };
-        let r = evaluate_expected(tensors, &w);
-        if r.total_s > 0.0 {
-            wired / r.total_s
-        } else {
-            1.0
-        }
+    let mut search = Search {
+        tensors,
+        wired,
+        wl_bw,
+        evaluations: 0,
+        memo: BTreeMap::new(),
     };
-
-    let mut best = (1u32, 0.1f64, eval(1, 0.1));
-    loop {
-        let (t, p, _s) = best;
-        let mut candidates = vec![
-            (t, (p + pinj_step).min(0.95)),
-            (t, (p - pinj_step).max(0.05)),
-        ];
-        if t < max_threshold {
-            candidates.push((t + 1, p));
+    let mut best: Option<(u32, f64, f64)> = None;
+    for &(t0, p0) in &CLIMB_SEEDS {
+        let r = search.climb(max_threshold.max(1), pinj_step, (t0.min(max_threshold.max(1)), p0))?;
+        if best.map(|b| r.2 > b.2 + 1e-12).unwrap_or(true) {
+            best = Some(r);
         }
-        if t > 1 {
-            candidates.push((t - 1, p));
-        }
-        let mut improved = false;
-        let mut next = best;
-        for (ct, cp) in candidates {
-            let cs = eval(ct, cp);
-            if cs > next.2 + 1e-12 {
-                next = (ct, cp, cs);
-                improved = true;
-            }
-        }
-        if !improved {
-            break;
-        }
-        best = next;
     }
-
+    let (threshold, pinj, speedup) = best.expect("at least one climb seed");
     Ok(AdaptiveResult {
-        threshold: best.0,
-        pinj: best.1,
-        speedup: best.2,
-        evaluations: evals,
+        threshold,
+        pinj,
+        speedup,
+        evaluations: search.evaluations,
     })
 }
 
-/// Proportional controller: lower pinj while the wireless plane is the
-/// dominant bottleneck, raise it while there is headroom. Returns the
-/// trajectory (pinj, speedup, wireless_share) per step.
+/// Proportional controller that adjusts the injection probability until
+/// the wireless plane's busy time matches a target share of the
+/// bottleneck time. Compatibility wrapper over
+/// [`crate::sim::policy::controller_trajectory`] (the same math,
+/// absorbed into `ControllerPolicy`); returns the `(pinj, speedup,
+/// wireless_share)` trajectory, erroring on a non-positive total time.
 pub fn balance_controller(
     tensors: &CostTensors,
     wl_bw: f64,
     threshold: u32,
     target_wl_share: f64,
     steps: usize,
-) -> Vec<(f64, f64, f64)> {
-    let wired = evaluate_wired(tensors).total_s;
-    let mut pinj = 0.4;
-    let gain = 0.5;
-    let mut traj = Vec::with_capacity(steps);
-    for _ in 0..steps {
-        let w = WirelessConfig {
-            enabled: true,
-            bandwidth_bits: wl_bw,
-            distance_threshold: threshold,
-            injection_prob: pinj,
-            ..Default::default()
+) -> Result<Vec<(f64, f64, f64)>> {
+    crate::sim::policy::controller_trajectory(
+        tensors,
+        wl_bw,
+        threshold,
+        target_wl_share,
+        steps,
+    )
+}
+
+/// The best refinement found for one (workload, bandwidth) cell.
+#[derive(Debug, Clone)]
+pub struct PolicyRefinement {
+    /// Where the winner came from: a policy name or `"adaptive"`.
+    pub source: String,
+    /// The winning per-layer decision vector.
+    pub decisions: Vec<LayerDecision>,
+    /// Native-f64 speedup over the wired baseline.
+    pub speedup: f64,
+}
+
+impl PolicyRefinement {
+    /// The selection rule shared by [`refine`] and `wisper balance`:
+    /// best of one hill-climb result and a set of already-priced
+    /// policies (callers that computed those pieces anyway pick here
+    /// instead of re-pricing everything through [`refine`]).
+    pub fn pick(
+        ada: &AdaptiveResult,
+        evals: &[PolicyEval],
+        n_layers: usize,
+    ) -> PolicyRefinement {
+        let mut best = PolicyRefinement {
+            source: "adaptive".to_string(),
+            decisions: vec![
+                LayerDecision {
+                    threshold: ada.threshold,
+                    pinj: ada.pinj,
+                };
+                n_layers
+            ],
+            speedup: ada.speedup,
         };
-        let r = evaluate_expected(tensors, &w);
-        let speedup = if r.total_s > 0.0 { wired / r.total_s } else { 1.0 };
-        let wl_share = r.shares[COMP_WIRELESS];
-        traj.push((pinj, speedup, wl_share));
-        // Proportional update toward the target wireless share.
-        pinj = (pinj + gain * (target_wl_share - wl_share) * pinj.max(0.05))
-            .clamp(0.02, 0.95);
+        for eval in evals {
+            if eval.speedup > best.speedup + 1e-12 {
+                best = PolicyRefinement {
+                    source: eval.policy.name().to_string(),
+                    decisions: eval.decisions.clone(),
+                    speedup: eval.speedup,
+                };
+            }
+        }
+        best
     }
-    traj
+}
+
+/// Policy-driven refinement: price every policy in `specs` over the
+/// grid axes *and* run the multi-start adaptive hill climb, returning
+/// the best decision vector found. `wisper balance` reports this as
+/// the refined best per workload; campaigns get the same information
+/// split across `BandwidthResult::refined` (the hill climb, when
+/// `--refine`) and `BandwidthResult::policies` (the policy outcomes,
+/// always priced per unit).
+pub fn refine(
+    tensors: &CostTensors,
+    wl_bw: f64,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    specs: &[PolicySpec],
+    pinj_step: f64,
+) -> Result<PolicyRefinement> {
+    let max_t = thresholds.iter().copied().max().unwrap_or(1);
+    let ada = adaptive_search(tensors, wl_bw, max_t, pinj_step)?;
+    let evals = evaluate_policies(tensors, wl_bw, specs, thresholds, pinjs)?;
+    Ok(PolicyRefinement::pick(&ada, &evals, tensors.layers.len()))
 }
 
 #[cfg(test)]
@@ -148,11 +267,33 @@ mod tests {
         }
     }
 
+    /// A two-peaked landscape: hop-1 eligible traffic is heavy in bits
+    /// (saturates the wireless plane quickly at threshold 1) while the
+    /// hop-4 multicast traffic is hop-heavy but bit-light (great to
+    /// offload at threshold >= 2 and high pinj). The conservative climb
+    /// from (1, 0.1) stalls on the low-pinj threshold-1 peak.
+    fn trap_tensors() -> CostTensors {
+        let mut l = LayerCosts {
+            t_comp: 1.0e-6,
+            nop_vol_hops: 10.0e6,
+            ..Default::default()
+        };
+        l.elig_vol_hops[0] = 2.0e6;
+        l.elig_vol[0] = 2.0e6;
+        l.elig_vol_hops[3] = 8.0e6;
+        l.elig_vol[3] = 0.2e6;
+        CostTensors {
+            layers: vec![l],
+            nop_agg_bw: 1.0e12,
+        }
+    }
+
     #[test]
     fn adaptive_beats_wired_with_few_evals() {
         let r = adaptive_search(&tensors(), 64e9, 4, 0.05).unwrap();
         assert!(r.speedup > 1.0, "{}", r.speedup);
-        assert!(r.evaluations < 60, "should beat the full grid: {}", r.evaluations);
+        // Three memoized climbs still cost well under three grid passes.
+        assert!(r.evaluations < 150, "too many evaluations: {}", r.evaluations);
     }
 
     #[test]
@@ -165,13 +306,14 @@ mod tests {
         for thr in 1..=4u32 {
             for i in 0..15 {
                 let p = 0.10 + 0.05 * i as f64;
-                let w = WirelessConfig {
-                    bandwidth_bits: 64e9,
-                    distance_threshold: thr,
-                    injection_prob: p,
-                    ..Default::default()
-                };
-                let tot = evaluate_expected(&t, &w).total_s;
+                let decisions = vec![
+                    LayerDecision {
+                        threshold: thr,
+                        pinj: p
+                    };
+                    t.layers.len()
+                ];
+                let tot = evaluate_policy(&t, &decisions, 64e9).total_s;
                 best = best.max(wired / tot);
             }
         }
@@ -183,8 +325,42 @@ mod tests {
     }
 
     #[test]
+    fn multistart_escapes_single_seed_local_optimum() {
+        let t = trap_tensors();
+        let wired = evaluate_wired(&t).total_s;
+        // The single conservative seed stalls on the threshold-1 peak.
+        let mut single = Search {
+            tensors: &t,
+            wired,
+            wl_bw: 64e9,
+            evaluations: 0,
+            memo: BTreeMap::new(),
+        };
+        let (st, _sp, ss) = single.climb(4, 0.05, (1, 0.1)).unwrap();
+        assert_eq!(st, 1, "the trap keeps the conservative climb at d=1");
+        assert!(ss < 2.0, "single-seed climb should stall: {ss}");
+        // Multi-start finds the threshold-2 high-pinj region.
+        let multi = adaptive_search(&t, 64e9, 4, 0.05).unwrap();
+        assert!(multi.threshold >= 2, "{multi:?}");
+        assert!(multi.speedup > 2.0, "{multi:?}");
+        assert!(multi.speedup > ss + 0.5, "multi {} vs single {ss}", multi.speedup);
+    }
+
+    #[test]
+    fn degenerate_tensors_error_instead_of_speedup_one() {
+        // Empty tensors give a zero total time: that used to be
+        // silently reported as speedup 1.0, now it is an error.
+        let empty = CostTensors {
+            layers: vec![],
+            nop_agg_bw: 1.0,
+        };
+        assert!(adaptive_search(&empty, 64e9, 4, 0.05).is_err());
+        assert!(balance_controller(&empty, 64e9, 1, 0.3, 5).is_err());
+    }
+
+    #[test]
     fn controller_converges_toward_target() {
-        let traj = balance_controller(&tensors(), 64e9, 1, 0.3, 25);
+        let traj = balance_controller(&tensors(), 64e9, 1, 0.3, 25).unwrap();
         assert_eq!(traj.len(), 25);
         let last = traj.last().unwrap();
         // Trajectory settles: late steps change little.
@@ -198,9 +374,34 @@ mod tests {
     fn controller_backs_off_when_saturated() {
         // Tiny wireless bandwidth: the plane saturates instantly; the
         // controller must push pinj down from its start.
-        let traj = balance_controller(&tensors(), 2e9, 1, 0.2, 15);
+        let traj = balance_controller(&tensors(), 2e9, 1, 0.2, 15).unwrap();
         let first = traj.first().unwrap().0;
         let last = traj.last().unwrap().0;
         assert!(last < first, "pinj should back off: {first} -> {last}");
+    }
+
+    #[test]
+    fn refine_never_loses_to_adaptive_or_policies() {
+        let t = trap_tensors();
+        let thresholds = [1u32, 2, 3, 4];
+        let pinjs: Vec<f64> = (0..15).map(|i| 0.10 + 0.05 * i as f64).collect();
+        let r = refine(&t, 64e9, &thresholds, &pinjs, &PolicySpec::ALL, 0.05).unwrap();
+        assert_eq!(r.decisions.len(), t.layers.len());
+        let ada = adaptive_search(&t, 64e9, 4, 0.05).unwrap();
+        assert!(r.speedup >= ada.speedup - 1e-12);
+        for eval in
+            evaluate_policies(&t, 64e9, &PolicySpec::ALL, &thresholds, &pinjs).unwrap()
+        {
+            assert!(
+                r.speedup >= eval.speedup - 1e-12,
+                "refine {} lost to {} {}",
+                r.speedup,
+                eval.policy.name(),
+                eval.speedup
+            );
+        }
+        // On the trap tensors the per-layer policies reach the
+        // threshold-2 region, so refinement lands well above wired.
+        assert!(r.speedup > 2.0, "{r:?}");
     }
 }

@@ -9,7 +9,9 @@
 //! [`crate::experiment::Scenario`]); the `fig2`/`fig4`/`fig5`/
 //! `energy`/`validate_stochastic` methods below survive only as thin
 //! compatibility shims over [`crate::experiment::figures`] — prefer the
-//! experiment registry for new code.
+//! experiment registry for new code. Per-layer offload policies
+//! ([`crate::sim::policy`]) ride along campaigns via
+//! `CampaignSpec::policies` and the [`loadbalance`] refinement stage.
 
 pub mod loadbalance;
 

@@ -27,6 +27,15 @@
 //! bandwidth keeps its full [`SweepResult`] (so Fig. 5 heatmaps remain
 //! available), and the optional `coordinator::loadbalance` adaptive
 //! refinement rides along per (workload, bandwidth).
+//!
+//! # The policy axis
+//!
+//! Each work unit also prices the spec's offload-policy list
+//! (`sim::policy`: `static` / `greedy` / `controller` / `oracle`)
+//! natively in f64, recording one [`PolicyOutcome`] per policy — the
+//! per-layer load-balancing dimension of a campaign. Policy outcomes
+//! are deterministic pure functions of the tensors, so campaign results
+//! remain independent of the worker count.
 
 use crate::config::SweepConfig;
 use crate::coordinator::loadbalance::{adaptive_search, AdaptiveResult};
@@ -35,10 +44,12 @@ use crate::report::Json;
 use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
 use crate::sim::cost::CostTensors;
 use crate::sim::evaluate_wired;
+use crate::sim::policy::{evaluate_policies, LayerDecision, PolicySpec};
 use crate::util::threadpool::{default_workers, parallel_map_with};
 use anyhow::{bail, Result};
 
-/// What to sweep: the grid axes, the bandwidth list, and engine knobs.
+/// What to sweep: the grid axes, the bandwidth list, the offload-policy
+/// axis, and engine knobs.
 #[derive(Debug, Clone)]
 pub struct CampaignSpec {
     /// Distance thresholds (NoP hops) — paper Table 1: 1..=4.
@@ -47,6 +58,10 @@ pub struct CampaignSpec {
     pub pinjs: Vec<f64>,
     /// Wireless bandwidths in bits/s — paper Table 1: 64e9, 96e9.
     pub bandwidths: Vec<f64>,
+    /// Per-layer offload policies priced per (workload, bandwidth)
+    /// unit, natively in f64 (see `sim::policy`). Empty skips the
+    /// policy stage.
+    pub policies: Vec<PolicySpec>,
     /// Worker threads (0 = auto: physical parallelism minus one).
     pub workers: usize,
     /// Run the `loadbalance::adaptive_search` hill-climb per
@@ -64,6 +79,7 @@ impl Default for CampaignSpec {
             thresholds: vec![1, 2, 3, 4],
             pinjs: (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
             bandwidths: vec![64.0e9, 96.0e9],
+            policies: PolicySpec::ALL.to_vec(),
             workers: 0,
             refine: false,
             refine_max_threshold: 4,
@@ -127,6 +143,22 @@ pub struct CampaignWorkload<'a> {
     pub t_wired: Option<f64>,
 }
 
+/// One offload policy's priced outcome for one (workload, bandwidth)
+/// unit. Speedups are native f64 (the policy stage runs off the batched
+/// f32 artifact path, like the refinement stage).
+#[derive(Debug, Clone)]
+pub struct PolicyOutcome {
+    pub policy: PolicySpec,
+    pub speedup: f64,
+    pub total_s: f64,
+    /// Bits offloaded to the wireless plane under this policy.
+    pub wl_bits: f64,
+    /// Layers whose decision actually offloads (pinj > 0).
+    pub offload_layers: usize,
+    /// The per-layer decision vector the policy chose.
+    pub decisions: Vec<LayerDecision>,
+}
+
 /// One bandwidth's outcome for one workload.
 #[derive(Debug, Clone)]
 pub struct BandwidthResult {
@@ -141,6 +173,8 @@ pub struct BandwidthResult {
     /// refined point win when it beats the grid by more than f32
     /// rounding noise.
     pub refined: Option<AdaptiveResult>,
+    /// Per-policy outcomes, in `CampaignSpec::policies` order.
+    pub policies: Vec<PolicyOutcome>,
 }
 
 /// Margin a refined (f64) speedup must clear over the grid's f32-ABI
@@ -166,6 +200,20 @@ impl BandwidthResult {
             }
             _ => (b.threshold, b.pinj),
         }
+    }
+
+    /// This unit's outcome for one policy, if it was in the spec.
+    pub fn policy(&self, spec: PolicySpec) -> Option<&PolicyOutcome> {
+        self.policies.iter().find(|p| p.policy == spec)
+    }
+
+    /// Best native-f64 speedup across the policy outcomes (`None` when
+    /// the spec listed no policies).
+    pub fn best_policy_speedup(&self) -> Option<f64> {
+        self.policies
+            .iter()
+            .map(|p| p.speedup)
+            .max_by(f64::total_cmp)
     }
 }
 
@@ -259,6 +307,32 @@ impl CampaignResult {
                                 ]),
                             },
                         ));
+                        obj.push((
+                            "policies".into(),
+                            Json::Arr(
+                                b.policies
+                                    .iter()
+                                    .map(|po| {
+                                        Json::Obj(vec![
+                                            (
+                                                "policy".into(),
+                                                Json::Str(po.policy.name().to_string()),
+                                            ),
+                                            ("speedup".into(), Json::Num(po.speedup)),
+                                            ("total_s".into(), Json::Num(po.total_s)),
+                                            (
+                                                "offloaded_bits".into(),
+                                                Json::Num(po.wl_bits),
+                                            ),
+                                            (
+                                                "offload_layers".into(),
+                                                Json::Num(po.offload_layers as f64),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ));
                         Json::Obj(obj)
                     })
                     .collect();
@@ -296,6 +370,16 @@ impl CampaignResult {
                         .bandwidths
                         .iter()
                         .map(|b| Json::Num(*b))
+                        .collect(),
+                ),
+            ),
+            (
+                "policies".into(),
+                Json::Arr(
+                    self.spec
+                        .policies
+                        .iter()
+                        .map(|p| Json::Str(p.name().to_string()))
                         .collect(),
                 ),
             ),
@@ -396,7 +480,8 @@ where
         spec.workers
     };
 
-    let unit_results: Vec<Result<(SweepResult, Option<AdaptiveResult>)>> = parallel_map_with(
+    type UnitResult = (SweepResult, Option<AdaptiveResult>, Vec<PolicyOutcome>);
+    let unit_results: Vec<Result<UnitResult>> = parallel_map_with(
         n_units,
         workers,
         &make_runtime,
@@ -420,7 +505,31 @@ where
             } else {
                 None
             };
-            Ok((sweep, refined))
+            // The policy axis: price each requested offload policy
+            // natively (f64), per unit — deterministic, so results stay
+            // independent of worker interleaving.
+            let policies = if spec.policies.is_empty() {
+                Vec::new()
+            } else {
+                evaluate_policies(
+                    workloads[wi].tensors,
+                    bw,
+                    &spec.policies,
+                    &spec.thresholds,
+                    &spec.pinjs,
+                )?
+                .into_iter()
+                .map(|e| PolicyOutcome {
+                    policy: e.policy,
+                    speedup: e.speedup,
+                    total_s: e.result.total_s,
+                    wl_bits: e.result.wl_bits,
+                    offload_layers: e.offload_layers(),
+                    decisions: e.decisions,
+                })
+                .collect()
+            };
+            Ok((sweep, refined, policies))
         },
     );
 
@@ -435,13 +544,14 @@ where
             .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
         let mut per_bw = Vec::with_capacity(nb);
         for &bw in &spec.bandwidths {
-            let (sweep, refined) = units
+            let (sweep, refined, policies) = units
                 .next()
                 .expect("unit count matches cross-product")?;
             per_bw.push(BandwidthResult {
                 bandwidth: bw,
                 sweep,
                 refined,
+                policies,
             });
         }
         aggregated.push(WorkloadCampaign {
@@ -601,5 +711,54 @@ mod tests {
         assert!(text.contains("\"workloads\""));
         assert!(text.contains("\"t_wired_s\""));
         assert!(text.contains("\"refined\": null"));
+        assert!(text.contains("\"policies\""));
+        assert!(text.contains("\"oracle\""));
+    }
+
+    #[test]
+    fn policy_axis_recorded_and_ordered() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let s = spec();
+        let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
+        for b in &r.workloads[0].per_bw {
+            assert_eq!(b.policies.len(), PolicySpec::ALL.len());
+            let get = |k: PolicySpec| b.policy(k).unwrap();
+            // Oracle's candidate set contains both the uniform grid and
+            // the greedy decisions: exact dominance.
+            assert!(get(PolicySpec::Oracle).speedup >= get(PolicySpec::Greedy).speedup);
+            assert!(get(PolicySpec::Oracle).speedup >= get(PolicySpec::Static).speedup);
+            assert!(
+                get(PolicySpec::Greedy).speedup
+                    >= get(PolicySpec::Static).speedup - 1e-9
+            );
+            // The native static best agrees with the f32-ABI grid best
+            // up to artifact rounding.
+            let grid = b.sweep.best_point().speedup;
+            let stat = get(PolicySpec::Static).speedup;
+            assert!(
+                (stat - grid).abs() <= 1e-3 * grid.max(1.0),
+                "static {stat} vs grid {grid}"
+            );
+            assert_eq!(b.best_policy_speedup(), Some(get(PolicySpec::Oracle).speedup));
+            for po in &b.policies {
+                assert_eq!(po.decisions.len(), ta.layers.len());
+                assert!(po.offload_layers <= ta.layers.len());
+                assert!(po.total_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_policy_list_skips_the_stage() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let mut s = spec();
+        s.policies.clear();
+        let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
+        for b in &r.workloads[0].per_bw {
+            assert!(b.policies.is_empty());
+            assert!(b.best_policy_speedup().is_none());
+        }
     }
 }

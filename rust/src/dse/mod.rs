@@ -36,7 +36,7 @@ use anyhow::Result;
 
 pub use campaign::{
     run_campaign, BandwidthResult, CampaignResult, CampaignSpec, CampaignWorkload,
-    WorkloadCampaign,
+    PolicyOutcome, WorkloadCampaign,
 };
 
 /// One evaluated grid point.
@@ -159,6 +159,9 @@ where
         thresholds: thresholds.to_vec(),
         pinjs: pinjs.to_vec(),
         bandwidths: vec![wl_bw],
+        // The thin wrapper returns bare grid sweeps; skip the policy
+        // stage (use a CampaignSpec directly for the policy axis).
+        policies: Vec::new(),
         workers: workers.max(1),
         ..CampaignSpec::default()
     };

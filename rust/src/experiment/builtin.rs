@@ -318,6 +318,7 @@ impl Experiment for Campaign {
             thresholds: s.thresholds.clone(),
             pinjs: s.injection_probs.clone(),
             bandwidths: s.bandwidths.clone(),
+            policies: s.policy_specs()?,
             workers: s.resolved_workers(ctx.coord),
             refine: s.refine,
             ..CampaignSpec::default()
@@ -331,6 +332,7 @@ impl Experiment for Campaign {
         }
         let mut trows = Vec::new();
         let mut csv_rows = Vec::new();
+        let mut policy_rows = Vec::new();
         let mut metrics = Vec::new();
         for w in &result.workloads {
             let mut row = vec![w.name.clone(), format!("{:.4e}", w.t_wired)];
@@ -357,6 +359,28 @@ impl Experiment for Campaign {
                         .map(|r| format!("{:.6}", r.speedup))
                         .unwrap_or_default(),
                 ]);
+                // The policy axis: one CSV row and one metric per
+                // (workload, bandwidth, policy).
+                for po in &b.policies {
+                    policy_rows.push(vec![
+                        w.name.clone(),
+                        format!("{}", b.bandwidth),
+                        po.policy.name().to_string(),
+                        format!("{:.6}", po.speedup),
+                        format!("{:.6e}", po.total_s),
+                        format!("{:.6e}", po.wl_bits),
+                        po.offload_layers.to_string(),
+                    ]);
+                    metrics.push((
+                        format!(
+                            "{}/{}/{}/speedup",
+                            w.name,
+                            bw_key(b.bandwidth),
+                            po.policy.name()
+                        ),
+                        po.speedup,
+                    ));
+                }
             }
             trows.push(row);
         }
@@ -387,26 +411,45 @@ impl Experiment for Campaign {
             ));
         }
 
-        Ok(ExperimentOutput {
-            text,
-            json: result.to_json(),
-            csvs: vec![CsvTable {
-                name: "campaign".into(),
+        let mut csvs = vec![CsvTable {
+            name: "campaign".into(),
+            headers: [
+                "workload",
+                "wl_bw",
+                "grid_threshold",
+                "grid_pinj",
+                "grid_speedup",
+                "grid_t_hybrid",
+                "t_wired",
+                "refined_speedup",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+            rows: csv_rows,
+        }];
+        if !policy_rows.is_empty() {
+            csvs.push(CsvTable {
+                name: "campaign_policies".into(),
                 headers: [
                     "workload",
                     "wl_bw",
-                    "grid_threshold",
-                    "grid_pinj",
-                    "grid_speedup",
-                    "grid_t_hybrid",
-                    "t_wired",
-                    "refined_speedup",
+                    "policy",
+                    "speedup",
+                    "total_s",
+                    "offloaded_bits",
+                    "offload_layers",
                 ]
                 .iter()
                 .map(|s| s.to_string())
                 .collect(),
-                rows: csv_rows,
-            }],
+                rows: policy_rows,
+            });
+        }
+        Ok(ExperimentOutput {
+            text,
+            json: result.to_json(),
+            csvs,
             metrics,
         })
     }
@@ -598,6 +641,110 @@ impl Experiment for StochasticValidation {
                     .iter()
                     .map(|s| s.to_string())
                     .collect(),
+                rows: csv_rows,
+            }],
+            metrics,
+        })
+    }
+}
+
+/// Policy ablation: compare the per-layer offload policies
+/// (`sim::policy`) per workload and bandwidth.
+pub struct PolicyAblation;
+
+impl Experiment for PolicyAblation {
+    fn name(&self) -> &'static str {
+        "policy-ablation"
+    }
+
+    fn describe(&self) -> &'static str {
+        "per-layer offload policies: static vs greedy vs controller vs oracle speedups"
+    }
+
+    fn run(&self, ctx: &ExperimentCtx) -> Result<ExperimentOutput> {
+        let s = ctx.scenario;
+        let specs = s.policy_specs()?;
+        let mut trows = Vec::new();
+        let mut csv_rows = Vec::new();
+        let mut json_rows = Vec::new();
+        let mut metrics = Vec::new();
+        for p in ctx.prepared {
+            for &bw in &s.bandwidths {
+                let evals = figures::policy_ablation(
+                    &p.tensors,
+                    bw,
+                    &specs,
+                    &s.thresholds,
+                    &s.injection_probs,
+                )?;
+                let name = &p.workload.name;
+                for e in &evals {
+                    let offload = e.offload_layers();
+                    trows.push(vec![
+                        name.clone(),
+                        eng(bw, "b/s"),
+                        e.policy.name().to_string(),
+                        format!("{:+.1}%", (e.speedup - 1.0) * 100.0),
+                        format!("{:.3e}", e.result.wl_bits),
+                        format!("{offload}/{}", p.tensors.layers.len()),
+                    ]);
+                    csv_rows.push(vec![
+                        name.clone(),
+                        format!("{bw}"),
+                        e.policy.name().to_string(),
+                        format!("{:.6}", e.speedup),
+                        format!("{:.6e}", e.result.total_s),
+                        format!("{:.6e}", e.result.wl_bits),
+                        offload.to_string(),
+                    ]);
+                    json_rows.push(Json::Obj(vec![
+                        ("name".into(), Json::Str(name.clone())),
+                        ("bandwidth_bits".into(), Json::Num(bw)),
+                        (
+                            "policy".into(),
+                            Json::Str(e.policy.name().to_string()),
+                        ),
+                        ("speedup".into(), Json::Num(e.speedup)),
+                        ("total_s".into(), Json::Num(e.result.total_s)),
+                        ("offloaded_bits".into(), Json::Num(e.result.wl_bits)),
+                        ("offload_layers".into(), Json::Num(offload as f64)),
+                    ]));
+                    metrics.push((
+                        format!("{name}/{}/{}/speedup", bw_key(bw), e.policy.name()),
+                        e.speedup,
+                    ));
+                }
+            }
+        }
+        let mut text = format!(
+            "per-layer offload policy ablation ({}; native f64)\n\n",
+            s.policies.join(" vs "),
+        );
+        text.push_str(&report::table(
+            &["workload", "wl_bw", "policy", "gain", "offloaded(bits)", "layers"],
+            &trows,
+        ));
+        text.push_str(
+            "\noracle >= greedy >= static per workload: the per-layer axis \
+             bounds the static pair from above\n",
+        );
+        Ok(ExperimentOutput {
+            text,
+            json: Json::Obj(vec![("rows".into(), Json::Arr(json_rows))]),
+            csvs: vec![CsvTable {
+                name: "policy_ablation".into(),
+                headers: [
+                    "workload",
+                    "wl_bw",
+                    "policy",
+                    "speedup",
+                    "total_s",
+                    "offloaded_bits",
+                    "offload_layers",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
                 rows: csv_rows,
             }],
             metrics,

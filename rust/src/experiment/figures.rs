@@ -11,6 +11,8 @@ use crate::coordinator::Prepared;
 use crate::dse::{sweep_grid, SweepResult};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::runtime::Runtime;
+use crate::sim::cost::CostTensors;
+use crate::sim::policy::{evaluate_policies, PolicyEval, PolicySpec};
 use crate::sim::stochastic;
 use anyhow::Result;
 use std::rc::Rc;
@@ -100,6 +102,20 @@ pub fn fig5_grid(
     wl_bw: f64,
 ) -> Result<SweepResult> {
     sweep_grid(rt, &prepared.tensors, thresholds, pinjs, wl_bw)
+}
+
+/// Per-layer offload-policy comparison for one workload's tensors at
+/// one bandwidth: every policy in `specs` decided and priced natively
+/// in f64 (off the batched artifact path) over the shared grid axes —
+/// the `policy-ablation` experiment's computation.
+pub fn policy_ablation(
+    tensors: &CostTensors,
+    wl_bw: f64,
+    specs: &[PolicySpec],
+    thresholds: &[u32],
+    pinjs: &[f64],
+) -> Result<Vec<PolicyEval>> {
+    evaluate_policies(tensors, wl_bw, specs, thresholds, pinjs)
 }
 
 /// Cross-validate the expected-value artifact path against the

@@ -10,13 +10,14 @@
 //! * [`Experiment`] — one trait (`name`/`describe`/`run`) implemented
 //!   by every evaluation; [`registry`] lists the built-ins (`fig2`,
 //!   `fig4`, `fig5`, `campaign`, `energy`, `stochastic-validation`,
-//!   `mapping-ablation`). Adding a scenario to the repo means
-//!   implementing this trait once, not threading a method through five
-//!   layers.
+//!   `mapping-ablation`, `policy-ablation`). Adding a scenario to the
+//!   repo means implementing this trait once, not threading a method
+//!   through five layers.
 //! * [`Scenario`] — the declarative spec of *what* to evaluate
-//!   (workloads, bandwidths, grid, seeds, optimize flag, experiment
-//!   list), built fluently in code ([`Scenario::builder`]) or parsed
-//!   from a `[scenario]` TOML section ([`Scenario::from_file`]).
+//!   (workloads, bandwidths, grid, offload-policy axis, seeds, optimize
+//!   flag, experiment list), built fluently in code
+//!   ([`Scenario::builder`]) or parsed from a `[scenario]` TOML section
+//!   ([`Scenario::from_file`]).
 //! * [`store::RunStore`] — every run persists
 //!   `results/<run-id>/manifest.json` plus per-experiment JSON/CSVs,
 //!   and `wisper compare` diffs two manifests' metric summaries
@@ -166,6 +167,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(builtin::Energy),
         Box::new(builtin::StochasticValidation),
         Box::new(builtin::MappingAblation),
+        Box::new(builtin::PolicyAblation),
     ]
 }
 

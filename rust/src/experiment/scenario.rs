@@ -12,6 +12,7 @@
 //! bandwidths = [64e9, 96e9]
 //! thresholds = [1, 2, 3, 4]
 //! injection_probs = [0.1, 0.2, 0.4]
+//! policies = ["static", "greedy", "controller", "oracle"]
 //! seeds = 8
 //! optimize = true
 //! refine = false
@@ -25,6 +26,7 @@
 use crate::cli;
 use crate::config::{toml::TomlDoc, Config};
 use crate::report::Json;
+use crate::sim::policy::PolicySpec;
 use crate::workloads::WORKLOAD_NAMES;
 use anyhow::{bail, Context as _, Result};
 
@@ -44,6 +46,10 @@ pub struct Scenario {
     pub thresholds: Vec<u32>,
     /// Injection-probability axis of the sweep grid.
     pub injection_probs: Vec<f64>,
+    /// Offload-policy axis (`sim::policy` names: `static`, `greedy`,
+    /// `controller`, `oracle`) used by the `campaign` and
+    /// `policy-ablation` experiments.
+    pub policies: Vec<String>,
     /// Stochastic-validation seeds to average.
     pub seeds: u64,
     /// SA-optimize mappings (false = layer-sequential baseline).
@@ -76,6 +82,10 @@ impl Scenario {
             bandwidths: cfg.sweep.bandwidths_bits.clone(),
             thresholds: cfg.sweep.thresholds.clone(),
             injection_probs: cfg.sweep.injection_probs.clone(),
+            policies: PolicySpec::ALL
+                .iter()
+                .map(|p| p.name().to_string())
+                .collect(),
             seeds: 8,
             optimize: true,
             refine: false,
@@ -129,6 +139,9 @@ impl Scenario {
         }
         if let Some(v) = doc.get_list_f64("scenario.injection_probs")? {
             s.injection_probs = v;
+        }
+        if let Some(v) = doc.get_list_str("scenario.policies")? {
+            s.policies = v;
         }
         if let Some(v) = doc.get_u64("scenario.seeds")? {
             s.seeds = v;
@@ -205,10 +218,26 @@ impl Scenario {
         {
             bail!("scenario.injection_probs must be in [0,1]");
         }
+        self.policies = dedupe(std::mem::take(&mut self.policies));
+        if self.policies.is_empty() {
+            bail!("scenario.policies: empty list");
+        }
+        for p in &self.policies {
+            PolicySpec::parse(p).context("scenario.policies")?;
+        }
         if self.seeds == 0 {
             bail!("scenario.seeds must be >= 1");
         }
         Ok(())
+    }
+
+    /// The policy axis as parsed specs (names validated by
+    /// [`Self::normalize_and_validate`]).
+    pub fn policy_specs(&self) -> Result<Vec<PolicySpec>> {
+        self.policies
+            .iter()
+            .map(|p| PolicySpec::parse(p))
+            .collect()
     }
 
     /// Worker threads for this scenario: its own override when set,
@@ -254,6 +283,15 @@ impl Scenario {
                     self.injection_probs
                         .iter()
                         .map(|p| Json::Num(*p))
+                        .collect(),
+                ),
+            ),
+            (
+                "policies".into(),
+                Json::Arr(
+                    self.policies
+                        .iter()
+                        .map(|p| Json::Str(p.clone()))
                         .collect(),
                 ),
             ),
@@ -326,6 +364,15 @@ impl ScenarioBuilder {
 
     pub fn injection_probs(mut self, ps: &[f64]) -> Self {
         self.scenario.injection_probs = ps.to_vec();
+        self
+    }
+
+    pub fn policies<I, S>(mut self, names: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.scenario.policies = names.into_iter().map(Into::into).collect();
         self
     }
 

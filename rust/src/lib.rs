@@ -19,12 +19,19 @@
 //!
 //! The evaluation surface is the [`experiment`] subsystem: a declarative
 //! [`experiment::Scenario`] (builder or `[scenario]` TOML) names the
-//! workloads, bandwidths, sweep grid and experiments; the
-//! [`experiment::Experiment`] registry runs them; and every run
-//! persists `results/<run-id>/manifest.json` through
+//! workloads, bandwidths, sweep grid, offload-policy axis and
+//! experiments; the [`experiment::Experiment`] registry runs them; and
+//! every run persists `results/<run-id>/manifest.json` through
 //! [`experiment::RunStore`] so `wisper compare` can diff runs. Adding a
 //! new evaluation means implementing one trait, not threading a method
 //! through coordinator, CLI and report layers.
+//!
+//! The paper's future-work wired/wireless load balancing lives in
+//! [`sim::policy`]: an [`sim::policy::OffloadPolicy`] maps cost tensors
+//! to per-layer `(threshold, pinj)` decisions (`static` / `greedy` /
+//! `controller` / `oracle`), priced by [`sim::policy::evaluate_policy`]
+//! and threaded through campaigns, scenarios, the CLI (`--policies`)
+//! and reports.
 
 pub mod arch;
 pub mod cli;

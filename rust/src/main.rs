@@ -20,6 +20,7 @@ use wisper::coordinator::loadbalance;
 use wisper::coordinator::Coordinator;
 use wisper::experiment::{self, figures, RunStore, Scenario};
 use wisper::report;
+use wisper::sim::policy::PolicySpec;
 use wisper::util::eng;
 use wisper::workloads::WORKLOAD_NAMES;
 
@@ -36,6 +37,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "bws", takes_value: true, help: "comma-separated wireless bandwidths in bits/s" },
         OptSpec { name: "threshold", takes_value: true, help: "distance threshold in NoP hops" },
         OptSpec { name: "pinj", takes_value: true, help: "injection probability [0,1]" },
+        OptSpec { name: "policies", takes_value: true, help: "comma-separated offload policies (static,greedy,controller,oracle)" },
         OptSpec { name: "seeds", takes_value: true, help: "stochastic seeds to average" },
         OptSpec { name: "sa-iters", takes_value: true, help: "simulated-annealing iterations" },
         OptSpec { name: "no-opt", takes_value: false, help: "layer-sequential mapping (skip SA)" },
@@ -56,7 +58,7 @@ const SUBCOMMANDS: [(&str, &str); 8] = [
     ("arch", "describe the package (Figure 1)"),
     ("workloads", "list the 15 benchmark workloads"),
     ("simulate", "evaluate one wireless configuration"),
-    ("balance", "adaptive load-balance search (future work)"),
+    ("balance", "adaptive + per-layer policy load-balance search"),
 ];
 
 /// Legacy subcommand -> experiment-registry spelling.
@@ -189,6 +191,11 @@ fn apply_flag_overrides(
         s.experiments = exps.clone();
     } else if let Some(list) = p.get("experiments") {
         s.experiments = cli::parse_comma_list("--experiments", list)?;
+    }
+    if let Some(list) = p.get("policies") {
+        // Names validated (against sim::policy's registry) by
+        // Scenario::normalize_and_validate.
+        s.policies = cli::parse_comma_list("--policies", list)?;
     }
     if let Some(seeds) = p.get_usize("seeds")? {
         s.seeds = seeds as u64;
@@ -384,9 +391,18 @@ fn cmd_balance(p: &Parsed) -> Result<()> {
     let names = flag_workloads(p)?
         .unwrap_or_else(|| WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect());
     let optimize = !p.has_flag("no-opt");
-    println!("adaptive wired/wireless load balancing @ {}\n", eng(bw, "b/s"));
+    let specs: Vec<PolicySpec> = match p.get("policies") {
+        Some(list) => cli::parse_comma_list("--policies", list)?
+            .iter()
+            .map(|n| PolicySpec::parse(n))
+            .collect::<Result<_>>()?,
+        None => PolicySpec::ALL.to_vec(),
+    };
+    println!("wired/wireless load balancing @ {}\n", eng(bw, "b/s"));
     let rt = coord.runtime()?;
+    let max_threshold = cfg.sweep.thresholds.iter().copied().max().unwrap_or(1);
     let mut rows = Vec::new();
+    let mut prows = Vec::new();
     for name in &names {
         let prep = coord.prepare(name, optimize)?;
         let grid = figures::fig5_grid(
@@ -396,7 +412,8 @@ fn cmd_balance(p: &Parsed) -> Result<()> {
             &cfg.sweep.injection_probs,
             bw,
         )?;
-        let adaptive = loadbalance::adaptive_search(&prep.tensors, bw, 4, 0.05)?;
+        let adaptive =
+            loadbalance::adaptive_search(&prep.tensors, bw, max_threshold, 0.05)?;
         rows.push(vec![
             name.clone(),
             format!("{:+.1}%", (grid.best_point().speedup - 1.0) * 100.0),
@@ -405,6 +422,35 @@ fn cmd_balance(p: &Parsed) -> Result<()> {
             adaptive.evaluations.to_string(),
             format!("d={} p={:.2}", adaptive.threshold, adaptive.pinj),
         ]);
+        // The per-layer policy axis, priced once per workload over the
+        // same grid; the refined-best column reuses those evals and the
+        // hill climb above instead of re-pricing (PolicyRefinement::pick).
+        let evals = figures::policy_ablation(
+            &prep.tensors,
+            bw,
+            &specs,
+            &cfg.sweep.thresholds,
+            &cfg.sweep.injection_probs,
+        )?;
+        let mut prow = vec![name.clone()];
+        for eval in &evals {
+            prow.push(format!(
+                "{}: {:+.1}%",
+                eval.policy.name(),
+                (eval.speedup - 1.0) * 100.0
+            ));
+        }
+        let refined = loadbalance::PolicyRefinement::pick(
+            &adaptive,
+            &evals,
+            prep.tensors.layers.len(),
+        );
+        prow.push(format!(
+            "{}: {:+.1}%",
+            refined.source,
+            (refined.speedup - 1.0) * 100.0
+        ));
+        prows.push(prow);
     }
     print!(
         "{}",
@@ -413,5 +459,12 @@ fn cmd_balance(p: &Parsed) -> Result<()> {
             &rows
         )
     );
+    let mut pheaders = vec!["workload"];
+    for s in &specs {
+        pheaders.push(s.name());
+    }
+    pheaders.push("refined best");
+    println!("\nper-layer offload policies (native f64):\n");
+    print!("{}", report::table(&pheaders, &prows));
     Ok(())
 }

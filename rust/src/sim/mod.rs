@@ -7,16 +7,29 @@
 //!   * `evaluate_wired`     — the wired baseline,
 //!   * `evaluate_expected`  — native expected-value wireless model (the
 //!     same math the AOT artifact computes; used for cross-validation
-//!     and as a fallback when artifacts are absent),
+//!     and as a fallback when artifacts are absent), now a thin
+//!     [`policy::StaticPolicy`] wrapper over [`policy::evaluate_policy`],
 //!   * `stochastic::simulate` — per-message coin-flip mode (§III-B2
 //!     criterion 3 as actually randomized).
+//!
+//! The [`policy`] module generalizes the decision logic to *per-layer*
+//! `(threshold, pinj)` pairs: an [`policy::OffloadPolicy`] maps cost
+//! tensors to one [`policy::LayerDecision`] per layer, and
+//! [`policy::evaluate_policy`] prices any decision vector with the same
+//! expected-value arithmetic.
 
 pub mod cost;
 pub mod linklevel;
+pub mod policy;
 pub mod stochastic;
 pub mod traffic;
 
 pub use cost::{CostTensors, LayerCosts, HOP_BUCKETS};
+pub use policy::{
+    best_static_pair, checked_speedup, controller_trajectory, evaluate_policies,
+    evaluate_policy, ControllerPolicy, GreedyPerLayer, LayerDecision, OffloadPolicy,
+    OraclePerLayer, PolicyEval, PolicySpec, StaticPolicy,
+};
 pub use traffic::{characterize, LayerTraffic};
 
 use crate::config::WirelessConfig;
@@ -96,40 +109,23 @@ pub fn evaluate_wired(t: &CostTensors) -> EvalResult {
 }
 
 /// Expected-value hybrid evaluation — the exact math of the AOT
-/// artifact, natively (DESIGN.md §4).
+/// artifact, natively (DESIGN.md §4). A thin [`StaticPolicy`] wrapper:
+/// every layer gets the config's global `(threshold, pinj)` pair and
+/// [`evaluate_policy`] prices it (bit-for-bit what this function
+/// computed before the policy subsystem existed; zero thresholds are
+/// clamped to 1 there — see `WirelessConfig::validate`).
 pub fn evaluate_expected(t: &CostTensors, w: &WirelessConfig) -> EvalResult {
     if !w.enabled {
         return evaluate_wired(t);
     }
-    // Buckets start at hop distance 1, so thresholds 0 and 1 admit the
-    // same traffic; clamping also guards the `h - 1` index below against
-    // an (invalid, but representable) zero threshold — see
-    // `WirelessConfig::validate`.
-    let d = (w.distance_threshold as usize).max(1);
-    let p = w.injection_prob;
-    let mut wl_bits = 0.0;
-    let lat_k: Vec<[f64; 5]> = t
-        .layers
-        .iter()
-        .map(|l| {
-            let (mut moved_vh, mut moved_v) = (0.0, 0.0);
-            for h in d..=HOP_BUCKETS {
-                moved_vh += l.elig_vol_hops[h - 1];
-                moved_v += l.elig_vol[h - 1];
-            }
-            moved_vh *= p;
-            moved_v *= p;
-            wl_bits += moved_v;
-            let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
-            let t_wl = if moved_v > 0.0 {
-                moved_v / w.bandwidth_bits
-            } else {
-                0.0
-            };
-            [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl]
-        })
-        .collect();
-    EvalResult::from_layers(&lat_k, wl_bits)
+    let decisions = vec![
+        LayerDecision {
+            threshold: w.distance_threshold,
+            pinj: w.injection_prob,
+        };
+        t.layers.len()
+    ];
+    evaluate_policy(t, &decisions, w.bandwidth_bits)
 }
 
 /// Speedup of a hybrid result over the wired baseline.

@@ -6,6 +6,7 @@ use wisper::config::Config;
 use wisper::coordinator::Coordinator;
 use wisper::dse::{run_campaign, sweep_grid, CampaignSpec, CampaignWorkload};
 use wisper::runtime::Runtime;
+use wisper::sim::policy::PolicySpec;
 
 fn coordinator() -> Coordinator {
     let mut cfg = Config::default();
@@ -53,6 +54,47 @@ fn campaign_over_two_workloads_and_bandwidths() {
     let z = result.workloads[0].per_bw[0].best_speedup();
     let g = result.workloads[1].per_bw[0].best_speedup();
     assert!(g > z, "googlenet {g} vs zfnet {z}");
+}
+
+/// The policy axis rides along every campaign unit on real workloads:
+/// per-policy outcomes are recorded and ordered (the per-layer oracle
+/// upper-bounds greedy and the static pair exactly).
+#[test]
+fn campaign_policy_axis_on_real_workloads() {
+    let c = coordinator();
+    let spec = CampaignSpec::from_sweep_config(&c.cfg.sweep);
+    assert_eq!(spec.policies, PolicySpec::ALL.to_vec());
+    let result = c
+        .campaign(&names(&["zfnet", "googlenet"]), false, &spec)
+        .unwrap();
+    for w in &result.workloads {
+        for b in &w.per_bw {
+            assert_eq!(b.policies.len(), 4);
+            let s = |k: PolicySpec| b.policy(k).unwrap().speedup;
+            assert!(s(PolicySpec::Oracle) >= s(PolicySpec::Greedy));
+            assert!(s(PolicySpec::Oracle) >= s(PolicySpec::Static));
+            assert!(
+                s(PolicySpec::Greedy) >= s(PolicySpec::Static) - 1e-9,
+                "{}: greedy {} vs static {}",
+                w.name,
+                s(PolicySpec::Greedy),
+                s(PolicySpec::Static)
+            );
+            // Native static best agrees with the f32-ABI grid best up
+            // to artifact rounding.
+            let grid = b.sweep.best_point().speedup;
+            assert!(
+                (s(PolicySpec::Static) - grid).abs() <= 1e-3 * grid,
+                "{}: static {} vs grid {grid}",
+                w.name,
+                s(PolicySpec::Static)
+            );
+        }
+    }
+    // The JSON summary carries the policy axis.
+    let json = result.to_json().render();
+    assert!(json.contains("\"policies\""));
+    assert!(json.contains("\"greedy\""));
 }
 
 /// The campaign's per-(workload, bandwidth) sweeps must be identical to
@@ -159,7 +201,9 @@ fn campaign_refinement_stage() {
     for b in &w.per_bw {
         let refined = b.refined.as_ref().expect("refinement requested");
         assert!(refined.evaluations > 0);
-        assert!(refined.evaluations < 60, "hill-climb should beat the grid");
+        // Three memoized multi-start climbs still cost well under three
+        // full grid passes.
+        assert!(refined.evaluations < 150, "{}", refined.evaluations);
         assert!(b.best_speedup() >= b.sweep.best_point().speedup);
         // The hill climb lands near the grid optimum on this workload.
         assert!(

@@ -47,6 +47,7 @@ fn registry_lists_all_builtins() {
         "energy",
         "stochastic-validation",
         "mapping-ablation",
+        "policy-ablation",
     ] {
         assert!(names.contains(&expected), "{expected} missing from {names:?}");
     }
@@ -177,13 +178,14 @@ fn run_scenario_executes_all_experiments() {
         "energy",
         "stochastic-validation",
         "mapping-ablation",
+        "policy-ablation",
     ]);
     scenario.workloads = vec!["zfnet".to_string()];
     scenario.normalize_and_validate().unwrap();
     let run = experiment::run_scenario(&coord, &scenario).unwrap();
     assert_eq!(run.backend, "native");
     let outputs = run.outputs;
-    assert_eq!(outputs.len(), 7);
+    assert_eq!(outputs.len(), 8);
     for (name, out) in &outputs {
         assert!(!out.text.is_empty(), "{name} produced no text");
         assert!(!out.metrics.is_empty(), "{name} produced no metrics");
@@ -311,6 +313,132 @@ fn compare_flags_regressions() {
     assert!(cmp.to_json().render().contains("best_speedup"));
 
     let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The scenario's policy axis parses from TOML, dedupes, validates
+/// names and defaults to all four policies.
+#[test]
+fn scenario_policy_axis() {
+    let cfg = Config::default();
+    let s = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\n\
+         policies = [\"greedy\", \"static\", \"greedy\"]\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(s.policies, vec!["greedy", "static"]);
+    assert_eq!(
+        s.policy_specs()
+            .unwrap()
+            .iter()
+            .map(|p| p.name())
+            .collect::<Vec<_>>(),
+        vec!["greedy", "static"]
+    );
+
+    // Defaults: all four policies, in presentation order.
+    let d = Scenario::from_toml_str("[scenario]\nworkloads = [\"zfnet\"]\n", &cfg)
+        .unwrap();
+    assert_eq!(d.policies, vec!["static", "greedy", "controller", "oracle"]);
+    // The manifest records the axis.
+    assert!(d.to_json().render().contains("\"policies\""));
+
+    // Unknown policy: the error teaches the valid set.
+    let err = Scenario::from_toml_str(
+        "[scenario]\npolicies = [\"fancy\"]\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("fancy") && err.contains("oracle"), "{err}");
+    // Empty policy list is rejected.
+    assert!(Scenario::from_toml_str("[scenario]\npolicies = []\n", &cfg).is_err());
+}
+
+/// The policy-ablation experiment reports one metric per (workload,
+/// bandwidth, policy) and orders oracle >= greedy >= static.
+#[test]
+fn policy_ablation_through_registry() {
+    let coord = coordinator();
+    let mut scenario = small_scenario(&["policy-ablation"]);
+    scenario.workloads = vec!["googlenet".to_string()];
+    scenario.normalize_and_validate().unwrap();
+    let run = experiment::run_scenario(&coord, &scenario).unwrap();
+    let (_, out) = &run.outputs[0];
+    let get = |policy: &str| {
+        let key = format!("googlenet/64000000000/{policy}/speedup");
+        out.metrics
+            .iter()
+            .find(|(k, _)| k == &key)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("missing metric {key}"))
+    };
+    let (s, g, o, c) = (get("static"), get("greedy"), get("oracle"), get("controller"));
+    assert!(o >= g && o >= s, "oracle {o} vs greedy {g} / static {s}");
+    assert!(g >= s - 1e-9, "greedy {g} vs static {s}");
+    assert!(c > 0.0);
+    assert!(out.text.contains("policy"), "{}", out.text);
+    assert!(!out.csvs.is_empty());
+    assert_eq!(out.csvs[0].name, "policy_ablation");
+    // workload x 1 bandwidth x 4 policies.
+    assert_eq!(out.csvs[0].rows.len(), 4);
+}
+
+/// `compare_manifests` with manifests missing per-experiment metric
+/// keys: one-sided metrics are reported (never as regressions), and
+/// experiment entries without a metrics object are skipped, not a
+/// parse failure.
+#[test]
+fn compare_handles_missing_metric_keys() {
+    // Manifest A has two metrics; manifest B misses one of them and an
+    // entire experiment lacks its "metrics" key.
+    let a = Json::parse(
+        r#"{"run_id": "a", "experiments": [
+             {"name": "fig4", "metrics": {"zfnet/best_speedup": 1.2,
+                                          "zfnet/t_wired_s": 0.001}},
+             {"name": "bare"}
+           ]}"#,
+    )
+    .unwrap();
+    let b = Json::parse(
+        r#"{"run_id": "b", "experiments": [
+             {"name": "fig4", "metrics": {"zfnet/best_speedup": 1.2}},
+             {"name": "bare"}
+           ]}"#,
+    )
+    .unwrap();
+    let cmp = compare_manifests(&a, &b);
+    assert_eq!(cmp.run_a, "a");
+    assert_eq!(cmp.run_b, "b");
+    // The shared metric is unchanged; the one-sided metric counts as
+    // changed but is not a regression.
+    assert_eq!(cmp.regressions, 0, "{}", cmp.render());
+    assert_eq!(cmp.changed(), 1, "{}", cmp.render());
+    let one_sided = cmp
+        .diffs
+        .iter()
+        .find(|d| d.key == "fig4/zfnet/t_wired_s")
+        .expect("one-sided metric reported");
+    assert!(one_sided.a.is_some() && one_sided.b.is_none());
+    assert!(one_sided.rel_delta.is_none() && !one_sided.regression);
+    assert!(cmp.render().contains("t_wired_s"), "{}", cmp.render());
+
+    // Symmetric case: the metric only exists in run B.
+    let cmp_rev = compare_manifests(&b, &a);
+    let only_b = cmp_rev
+        .diffs
+        .iter()
+        .find(|d| d.key == "fig4/zfnet/t_wired_s")
+        .unwrap();
+    assert!(only_b.a.is_none() && only_b.b.is_some() && !only_b.regression);
+
+    // A manifest with no experiments array at all diffs as all-one-sided
+    // rather than erroring.
+    let empty = Json::parse(r#"{"run_id": "empty"}"#).unwrap();
+    let cmp_empty = compare_manifests(&a, &empty);
+    assert_eq!(cmp_empty.regressions, 0);
+    assert_eq!(cmp_empty.diffs.len(), 2);
+    assert!(cmp_empty.diffs.iter().all(|d| d.b.is_none()));
 }
 
 /// The scenario builder and the TOML path produce identical specs.

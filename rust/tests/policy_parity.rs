@@ -1,0 +1,130 @@
+//! Policy-engine acceptance: `StaticPolicy` through `evaluate_policy`
+//! reproduces `evaluate_expected` bit-exactly on all 15 paper
+//! workloads, and the policy ablation orders
+//! `OraclePerLayer >= GreedyPerLayer >= StaticPolicy` per workload.
+//! (`python/tools/mirror_checks_policy.py` verifies the same without a
+//! Rust toolchain.)
+
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::layer_sequential;
+use wisper::sim::cost::{build_tensors, CostTensors};
+use wisper::sim::policy::{
+    evaluate_policies, evaluate_policy, LayerDecision, PolicySpec, StaticPolicy,
+};
+use wisper::sim::{evaluate_expected, evaluate_wired, OffloadPolicy};
+use wisper::workloads::{build, WORKLOAD_NAMES};
+
+fn all_tensors() -> Vec<(String, CostTensors)> {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let elig = WirelessConfig {
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..Default::default()
+    };
+    WORKLOAD_NAMES
+        .iter()
+        .map(|name| {
+            let wl = build(name).unwrap();
+            let m = layer_sequential(&wl, &pkg);
+            let t = build_tensors(&wl, &m, &pkg, &elig).unwrap();
+            (name.to_string(), t)
+        })
+        .collect()
+}
+
+fn paper_grid() -> (Vec<u32>, Vec<f64>) {
+    (
+        vec![1, 2, 3, 4],
+        (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+    )
+}
+
+/// Acceptance: static-through-policy parity is bit-exact (total_s,
+/// shares, wl_bits) on every paper workload, both bandwidths, across
+/// representative grid points.
+#[test]
+fn static_policy_parity_all_workloads() {
+    let pairs = [(1u32, 0.4f64), (2, 0.25), (4, 0.8), (1, 0.1), (3, 0.55)];
+    for (name, t) in all_tensors() {
+        for &bw in &[64.0e9, 96.0e9] {
+            for &(d, p) in &pairs {
+                let w = WirelessConfig {
+                    distance_threshold: d,
+                    injection_prob: p,
+                    bandwidth_bits: bw,
+                    ..Default::default()
+                };
+                let reference = evaluate_expected(&t, &w);
+                let decisions = StaticPolicy {
+                    threshold: d,
+                    pinj: p,
+                }
+                .decide(&t, bw)
+                .unwrap();
+                let got = evaluate_policy(&t, &decisions, bw);
+                assert_eq!(got.total_s, reference.total_s, "{name} d={d} p={p}");
+                assert_eq!(got.shares, reference.shares, "{name} d={d} p={p}");
+                assert_eq!(got.wl_bits, reference.wl_bits, "{name} d={d} p={p}");
+            }
+        }
+    }
+}
+
+/// Acceptance: the policy ablation shows oracle >= greedy >= static
+/// best-speedup per workload (oracle dominance exact by construction;
+/// greedy vs static within 1e-9), and greedy never loses to wired.
+#[test]
+fn policy_ablation_ordering_all_workloads() {
+    let (ts, ps) = paper_grid();
+    for (name, t) in all_tensors() {
+        for &bw in &[64.0e9, 96.0e9] {
+            let evals =
+                evaluate_policies(&t, bw, &PolicySpec::ALL, &ts, &ps).unwrap();
+            let s = |k: PolicySpec| {
+                evals.iter().find(|e| e.policy == k).unwrap().speedup
+            };
+            assert!(
+                s(PolicySpec::Oracle) >= s(PolicySpec::Greedy),
+                "{name}@{bw}: oracle {} < greedy {}",
+                s(PolicySpec::Oracle),
+                s(PolicySpec::Greedy)
+            );
+            assert!(
+                s(PolicySpec::Oracle) >= s(PolicySpec::Static),
+                "{name}@{bw}: oracle {} < static {}",
+                s(PolicySpec::Oracle),
+                s(PolicySpec::Static)
+            );
+            assert!(
+                s(PolicySpec::Greedy) >= s(PolicySpec::Static) - 1e-9,
+                "{name}@{bw}: greedy {} < static {}",
+                s(PolicySpec::Greedy),
+                s(PolicySpec::Static)
+            );
+            assert!(
+                s(PolicySpec::Greedy) >= 1.0 - 1e-12,
+                "{name}@{bw}: greedy loses to wired: {}",
+                s(PolicySpec::Greedy)
+            );
+        }
+    }
+}
+
+/// Zero injection through the policy path is the wired baseline.
+#[test]
+fn zero_injection_policy_is_wired() {
+    for (name, t) in all_tensors() {
+        let decisions = vec![
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0
+            };
+            t.layers.len()
+        ];
+        let r = evaluate_policy(&t, &decisions, 64e9);
+        let w = evaluate_wired(&t);
+        assert_eq!(r.total_s, w.total_s, "{name}");
+        assert_eq!(r.wl_bits, 0.0, "{name}");
+    }
+}
