@@ -1,7 +1,8 @@
 """Python mirror of the wisper Rust cost pipeline (offline calibration).
 
 CAUTION: this mirrors rust/src (arch, mapping, traffic, nop, cost, sim,
-SA with bit-exact Pcg32, and workloads/builders.rs) in Python so the
+the generic annealer + wired SA + joint comap searches with bit-exact
+Pcg32, the policy engine, and workloads/builders.rs) in Python so the
 repo's quantitative test assertions can be checked without a Rust
 toolchain. If you change the Rust cost pipeline or the workload
 builders, update this mirror in the same PR or its verdicts are stale.
@@ -912,46 +913,38 @@ def evaluate_expected(t, threshold, pinj, bw):
     return r
 
 # ---------------------------------------------------------------- SA
+# Mirror of rust/src/util/anneal.rs (generic core + derive_seed) and
+# rust/src/mapping/mapper.rs (the wired-cost instantiation).
 
-def anneal(wl, pkg, iters, temp_frac, seed, cost):
+def anneal_generic(initial, iters, temp_frac, seed, perturb, cost, clone):
+    """Generic annealing core (util::anneal::anneal): deterministic
+    Pcg32 seeding, the mapping SA's cooling schedule, NaN-safe best
+    selection, typed errors for degenerate inputs. perturb mutates the
+    clone in place; clone must be deep enough that perturb never
+    mutates shared structure."""
+    if iters == 0:
+        raise ValueError("annealing needs at least one iteration")
     rng = Pcg32.seeded(seed)
-    current = greedy_sized(wl, pkg)
+    current = initial
     current_cost = cost(current)
+    if not math.isfinite(current_cost):
+        raise ValueError(f"initial state has non-finite cost {current_cost}")
     initial_cost = current_cost
-    best = [p for p in current]
+    best = current
     best_cost = current_cost
     accepted = 0
-    rows, cols = pkg.cfg.grid
+    evaluated = 1
     t0 = max(initial_cost * temp_frac, 5e-324)
     for i in range(iters):
-        temp = t0 * max(1.0 - i / max(iters, 1), 1e-3)
-        cand = [p for p in current]
-        # perturb
-        li = rng.below(len(cand))
-        region, part = cand[li]
-        choice = rng.below(3)
-        if choice == 0:
-            cur = len(region)
-            if rng.coin(0.5):
-                nxt = min(cur + 1, pkg.num_chiplets())
-            else:
-                nxt = max(cur - 1, 1)
-            r0 = rng.below(rows)
-            c0 = rng.below(cols)
-            cand[li] = (compact_region(pkg, nxt, r0, c0), part)
-        elif choice == 1:
-            r0 = rng.below(rows)
-            c0 = rng.below(cols)
-            cand[li] = (compact_region(pkg, len(region), r0, c0), part)
-        else:
-            cur = part
-            while True:
-                c = PARTITIONS[rng.below(3)]
-                if c != cur:
-                    cand[li] = (region, c)
-                    break
+        temp = t0 * max(1.0 - i / iters, 1e-3)
+        cand = clone(current)
+        perturb(cand, rng)
         cand_cost = cost(cand)
+        evaluated += 1
         delta = cand_cost - current_cost
+        # NaN delta fails both arms (exp(nan) is nan; coin(nan) is
+        # False), matching the Rust core's rejection semantics; the
+        # coin is consumed either way.
         if delta <= 0.0 or rng.coin(math.exp(-delta / temp)):
             current = cand
             current_cost = cand_cost
@@ -959,7 +952,65 @@ def anneal(wl, pkg, iters, temp_frac, seed, cost):
             if current_cost < best_cost:
                 best = current
                 best_cost = current_cost
-    return best, best_cost, initial_cost, accepted
+    return best, best_cost, initial_cost, accepted, evaluated
+
+
+def perturb_mapping(mapping, pkg, rng):
+    """One placement move (mapper::perturb): resize, relocate, or
+    re-partition one layer's region. Mutates `mapping` in place."""
+    rows, cols = pkg.cfg.grid
+    li = rng.below(len(mapping))
+    region, part = mapping[li]
+    choice = rng.below(3)
+    if choice == 0:
+        cur = len(region)
+        if rng.coin(0.5):
+            nxt = min(cur + 1, pkg.num_chiplets())
+        else:
+            nxt = max(cur - 1, 1)
+        r0 = rng.below(rows)
+        c0 = rng.below(cols)
+        mapping[li] = (compact_region(pkg, nxt, r0, c0), part)
+    elif choice == 1:
+        r0 = rng.below(rows)
+        c0 = rng.below(cols)
+        mapping[li] = (compact_region(pkg, len(region), r0, c0), part)
+    else:
+        while True:
+            c = PARTITIONS[rng.below(3)]
+            if c != part:
+                mapping[li] = (region, c)
+                break
+
+
+def anneal(wl, pkg, iters, temp_frac, seed, cost):
+    """Wired-cost mapping SA (mapper::anneal): the generic core over
+    Mapping states from the greedy seed. iters == 0 keeps the legacy
+    evaluate-the-seed-only behavior."""
+    if not wl.layers:
+        raise ValueError(f"cannot anneal zero-layer workload {wl.name}")
+    seed_mapping = greedy_sized(wl, pkg)
+    if iters == 0:
+        c = cost(seed_mapping)
+        if not math.isfinite(c):
+            raise ValueError(f"greedy seed has non-finite cost {c}")
+        return seed_mapping, c, c, 0
+    best, best_cost, initial, accepted, _ev = anneal_generic(
+        seed_mapping, iters, temp_frac, seed,
+        lambda m, rng: perturb_mapping(m, pkg, rng),
+        cost,
+        lambda m: [p for p in m])
+    return best, best_cost, initial, accepted
+
+
+def derive_seed(base, tag):
+    """Per-item seed derivation (util::anneal::derive_seed): FNV-1a of
+    the tag mixed with the base through SplitMix64."""
+    h = 0xcbf29ce484222325
+    for b in tag.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return SplitMix64(base ^ h).next_u64()
 
 
 def prepare(name, optimize, pkg=None, iters=600, seed=0xC0DE, temp=0.25):
@@ -1142,28 +1193,139 @@ def controller_decision(t, wl_bw, thresholds, target_wl_share=0.3, steps=25):
     return best[1]
 
 
+def policy_decisions(spec, t, wl_bw, thresholds, pinjs):
+    """Instantiate one named policy over the shared grid axes (mirror
+    of sim::policy::decide_policy)."""
+    max_t = max(thresholds)
+    if spec == 'static':
+        d, p = best_static_pair(t, wl_bw, thresholds, pinjs)
+        return [(d, p)] * len(t['layers'])
+    if spec == 'greedy':
+        return greedy_decisions(t, wl_bw, max_t)
+    if spec == 'controller':
+        return [controller_decision(t, wl_bw, thresholds)] * len(t['layers'])
+    if spec == 'oracle':
+        return oracle_decisions(t, wl_bw, thresholds, pinjs)
+    raise ValueError(f"unknown policy {spec!r}")
+
+
 def evaluate_policies(t, wl_bw, specs, thresholds, pinjs):
     """Decide and price every named policy; returns a list of dicts in
     specs order (mirror of sim::policy::evaluate_policies)."""
-    max_t = max(thresholds)
     wired = evaluate_wired(t)['total_s']
     out = []
     for spec in specs:
-        if spec == 'static':
-            d, p = best_static_pair(t, wl_bw, thresholds, pinjs)
-            decisions = [(d, p)] * len(t['layers'])
-        elif spec == 'greedy':
-            decisions = greedy_decisions(t, wl_bw, max_t)
-        elif spec == 'controller':
-            decisions = [controller_decision(t, wl_bw, thresholds)] * len(t['layers'])
-        elif spec == 'oracle':
-            decisions = oracle_decisions(t, wl_bw, thresholds, pinjs)
-        else:
-            raise ValueError(f"unknown policy {spec!r}")
+        decisions = policy_decisions(spec, t, wl_bw, thresholds, pinjs)
         r = evaluate_policy(t, decisions, wl_bw)
         out.append({'policy': spec, 'decisions': decisions, 'result': r,
                     'speedup': checked_speedup(wired, r['total_s'])})
     return out
+
+
+# ---------------------------------------------------------------- comap
+# Mirror of rust/src/mapping/comap.rs — the joint mapping x offload
+# co-optimization. Bit-exact: same state layout, RNG draw order, policy
+# re-fits and tie-breaks. Checked by mirror_checks_mapping.py.
+
+class CoState:
+    __slots__ = ('mapping', 'tensors', 'decisions', 'broken')
+
+    def __init__(self, mapping, tensors, decisions, broken=False):
+        self.mapping = mapping
+        self.tensors = tensors
+        self.decisions = decisions
+        self.broken = broken
+
+
+def _co_clone(s):
+    # Shallow where perturb replaces wholesale (tensors, decisions),
+    # one-level-deep for the mapping list perturb assigns into.
+    return CoState([p for p in s.mapping], s.tensors, s.decisions, s.broken)
+
+
+def co_perturb(s, wl, pkg, wl_bw, refit, thresholds, pinjs, rng):
+    """One joint move (comap::co_perturb): 3/4 placement move + refit
+    re-solve, 1/4 offload re-solve with oracle/static. RNG draw order
+    is the parity contract: below(4), then either the placement draws
+    or one coin(0.5)."""
+    if rng.below(4) < 3:
+        perturb_mapping(s.mapping, pkg, rng)
+        s.tensors = build_tensors(wl, s.mapping, pkg)
+        s.broken = False
+        s.decisions = policy_decisions(refit, s.tensors, wl_bw, thresholds, pinjs)
+    else:
+        spec = 'oracle' if rng.coin(0.5) else 'static'
+        if not s.broken:
+            s.decisions = policy_decisions(spec, s.tensors, wl_bw,
+                                           thresholds, pinjs)
+
+
+def co_anneal(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
+              thresholds, pinjs, refit='greedy'):
+    """Joint search (comap::co_anneal): seeds from the best decoupled
+    pipeline over {base, layer-sequential} x the built-in policies
+    (strictly-better replacement, base first, POLICY_NAMES order; the
+    sequential pass is skipped when the base already is the sequential
+    mapping), then anneals the (mapping, decisions) state against the
+    hybrid cost. Per-candidate decoupled minima are reported as
+    base/seq_decoupled_total_s."""
+    best = None  # (mapping, tensors, decisions, policy, total)
+    cand_best = [float('inf'), float('inf')]
+    seq_mapping = layer_sequential(wl, pkg)
+    for ci, cand in enumerate((base_mapping, seq_mapping)):
+        if ci == 1 and cand == base_mapping:
+            cand_best[1] = cand_best[0]
+            break
+        tensors = build_tensors(wl, cand, pkg)
+        for e in evaluate_policies(tensors, wl_bw, POLICY_NAMES,
+                                   thresholds, pinjs):
+            cand_best[ci] = min(cand_best[ci], e['result']['total_s'])
+            if best is None or e['result']['total_s'] < best[4]:
+                best = (cand, tensors, e['decisions'], e['policy'],
+                        e['result']['total_s'])
+    seed_mapping, tensors, decisions, seed_policy, initial_total = best
+    decisions = list(decisions)
+    out = {'seed_policy': seed_policy,
+           'base_decoupled_total_s': cand_best[0],
+           'seq_decoupled_total_s': cand_best[1]}
+    if iters == 0:
+        out.update({'mapping': seed_mapping, 'tensors': tensors,
+                    'decisions': decisions, 'total_s': initial_total,
+                    'initial_total_s': initial_total,
+                    'accepted': 0, 'evaluated': 1})
+        return out
+    state = CoState([p for p in seed_mapping], tensors, decisions, False)
+    best, best_cost, initial_cost, accepted, evaluated = anneal_generic(
+        state, iters, temp_frac, seed,
+        lambda s, rng: co_perturb(s, wl, pkg, wl_bw, refit,
+                                  thresholds, pinjs, rng),
+        lambda s: float('inf') if s.broken
+        else evaluate_policy(s.tensors, s.decisions, wl_bw)['total_s'],
+        _co_clone)
+    out.update({'mapping': best.mapping, 'tensors': best.tensors,
+                'decisions': best.decisions, 'total_s': best_cost,
+                'initial_total_s': initial_cost,
+                'accepted': accepted, 'evaluated': evaluated})
+    return out
+
+
+def prepare_mapped(name, optimize, pkg=None, iters=600, seed=0xC0DE,
+                   temp=0.25, objective='wired', wl_bw=64e9,
+                   thresholds=None, pinjs=None):
+    """Mirror of Coordinator::prepare_mapped: the wired-objective arm
+    (shared wired reference) plus, for hybrid objectives, the comap arm
+    from that mapping with seed + 1."""
+    pkg = pkg or Package()
+    p = prepare(name, optimize, pkg, iters=iters, seed=seed, temp=temp)
+    if objective == 'wired':
+        p['comap'] = None
+        return p
+    refit = objective.split(':', 1)[1] if ':' in objective else 'greedy'
+    thresholds = thresholds or [1, 2, 3, 4]
+    pinjs = pinjs or [0.10 + 0.05 * i for i in range(15)]
+    p['comap'] = co_anneal(p['wl'], pkg, p['mapping'], wl_bw, iters, temp,
+                           (seed + 1) & M64, thresholds, pinjs, refit)
+    return p
 
 
 def sweep_best(t, bw, thresholds=range(1, 5), pinjs=None):

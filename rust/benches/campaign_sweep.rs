@@ -25,6 +25,7 @@ fn main() {
             name: p.workload.name.clone(),
             tensors: &p.tensors,
             t_wired: Some(p.wired.total_s),
+            comap: None,
         })
         .collect();
 

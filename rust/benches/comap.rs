@@ -1,0 +1,52 @@
+//! Joint mapping x offload co-optimization smoke bench: the decoupled
+//! seed (iters = 0) vs short and full joint searches, so the cost of
+//! the per-iteration tensor rebuild + policy re-fit stays visible.
+//! Run: `cargo bench --bench comap`
+
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::comap::{co_anneal, ComapOptions};
+use wisper::mapping::layer_sequential;
+use wisper::sim::policy::PolicySpec;
+use wisper::util::benchkit::{bb, bench, report as breport};
+use wisper::workloads::build;
+
+fn main() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let elig = WirelessConfig {
+        enabled: true,
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..WirelessConfig::default()
+    };
+    let opts = |iters: usize| ComapOptions {
+        iters,
+        temp_frac: 0.25,
+        seed: 0xC0DE,
+        wl_bw: 64e9,
+        refit: PolicySpec::Greedy,
+        thresholds: vec![1, 2, 3, 4],
+        pinjs: (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+    };
+
+    let mut ms = Vec::new();
+    for name in ["zfnet", "googlenet", "densenet"] {
+        let wl = build(name).unwrap();
+        let base = layer_sequential(&wl, &pkg);
+        ms.push(bench(&format!("{name}_seed_only"), 1, 5, || {
+            bb(co_anneal(&wl, &pkg, &elig, &base, &opts(0)).unwrap().total_s)
+        }));
+        ms.push(bench(&format!("{name}_comap_60"), 1, 3, || {
+            bb(co_anneal(&wl, &pkg, &elig, &base, &opts(60)).unwrap().total_s)
+        }));
+        ms.push(bench(&format!("{name}_comap_300"), 1, 2, || {
+            bb(co_anneal(&wl, &pkg, &elig, &base, &opts(300)).unwrap().total_s)
+        }));
+    }
+    breport(&ms);
+    println!(
+        "\nseed_only prices the decoupled pipelines (both placements x four\n\
+         policies); each joint iteration adds one tensor rebuild + one\n\
+         policy re-fit on 3/4 of moves."
+    );
+}

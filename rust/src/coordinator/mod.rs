@@ -1,6 +1,7 @@
-//! Execution substrate for experiments: build workload -> SA-map it
-//! (wired cost) -> extract cost tensors -> hand the result to the
-//! sweep/campaign engines.
+//! Execution substrate for experiments: build workload -> map it (a
+//! [`MapSearch`]: sequential, wired-SA, or joint comap on top) ->
+//! extract cost tensors -> hand the result to the sweep/campaign
+//! engines.
 //!
 //! The `Coordinator` owns the package model, the mapper, the runtime
 //! handle and the worker pool. The paper experiments themselves live in
@@ -11,27 +12,62 @@
 //! compatibility shims over [`crate::experiment::figures`] — prefer the
 //! experiment registry for new code. Per-layer offload policies
 //! ([`crate::sim::policy`]) ride along campaigns via
-//! `CampaignSpec::policies` and the [`loadbalance`] refinement stage.
+//! `CampaignSpec::policies` and the [`loadbalance`] refinement stage;
+//! the [`crate::mapping::comap::MappingObjective`] axis additionally
+//! runs the joint mapping × offload search per campaign unit
+//! (`CampaignSpec::comap`). Whatever the objective, [`Prepared::wired`]
+//! is always the *wired-objective* mapping's baseline, so co-optimized
+//! and sequential arms share one wired reference.
 
 pub mod loadbalance;
 
 use crate::arch::Package;
 use crate::config::{Config, WirelessConfig};
-use crate::dse::{run_campaign, CampaignResult, CampaignSpec, CampaignWorkload, SweepResult};
+use crate::dse::{
+    run_campaign, CampaignResult, CampaignSpec, CampaignWorkload, ComapInput,
+    SweepResult,
+};
 use crate::energy::EnergyBreakdown;
 use crate::experiment::figures;
+use crate::mapping::comap::{co_anneal, ComapOptions, ComapResult, MappingObjective};
 use crate::mapping::mapper::{anneal, SaOptions};
 use crate::mapping::{layer_sequential, Mapping};
 use crate::runtime::Runtime;
 use crate::sim::cost::{build_tensors, CostTensors};
 use crate::sim::{evaluate_wired, EvalResult};
+use crate::util::anneal::derive_seed;
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workloads::{build, Workload, WORKLOAD_NAMES};
 use anyhow::Result;
 
 pub use crate::experiment::figures::{Fig4Cell, Fig4Row};
 
+/// Full mapping-search specification: whether to search at all, which
+/// objective to search against, the annealing schedule, and (for the
+/// hybrid objective) the wireless bandwidth and grid axes the offload
+/// side prices with. Replaces the hard-coded `SaOptions` literal the
+/// coordinator used to build inline.
+#[derive(Debug, Clone)]
+pub struct MapSearch {
+    /// `false` keeps the layer-sequential baseline (mapping ablations).
+    pub optimize: bool,
+    /// Wired-only SA, or joint mapping × offload co-optimization.
+    pub objective: MappingObjective,
+    /// Annealing schedule of the wired-SA stage; the comap stage reuses
+    /// the same budget with `seed + 1`.
+    pub sa: SaOptions,
+    /// Wireless bandwidth the hybrid objective prices against.
+    pub wl_bw: f64,
+    /// Grid axes the offload policies parameterize over.
+    pub thresholds: Vec<u32>,
+    pub pinjs: Vec<f64>,
+}
+
 /// A workload prepared for experiments: mapped and tensorized.
+/// `mapping`/`tensors`/`wired` always describe the *wired-objective*
+/// arm (sequential or wired-SA per `optimize`) — the shared wired
+/// reference; a hybrid objective adds its co-optimized outcome as
+/// `comap` next to it.
 #[derive(Debug, Clone)]
 pub struct Prepared {
     pub workload: Workload,
@@ -39,6 +75,9 @@ pub struct Prepared {
     pub tensors: CostTensors,
     pub wired: EvalResult,
     pub sa_initial_cost: f64,
+    /// Joint mapping × offload outcome when the search objective was
+    /// [`MappingObjective::Hybrid`] (at [`MapSearch::wl_bw`]).
+    pub comap: Option<ComapResult>,
 }
 
 /// The experiment coordinator.
@@ -73,7 +112,7 @@ impl Coordinator {
         Runtime::auto(self.artifact_path.as_deref())
     }
 
-    fn eligibility(&self) -> WirelessConfig {
+    pub(crate) fn eligibility(&self) -> WirelessConfig {
         // Criterion 1 only (threshold/pinj live in the config grid).
         WirelessConfig {
             enabled: true,
@@ -84,37 +123,80 @@ impl Coordinator {
         }
     }
 
-    /// SA-map a workload against the wired cost model and build its
-    /// tensors. `optimize=false` keeps the layer-sequential baseline
-    /// (for mapping ablations).
-    pub fn prepare(&self, name: &str, optimize: bool) -> Result<Prepared> {
-        let workload = build(name)?;
-        let elig = self.eligibility();
-        let (mapping, sa_initial_cost) = if optimize {
-            let opts = SaOptions {
+    /// The config-derived [`MapSearch`] legacy call sites run with:
+    /// wired objective, `[mapper]` schedule, `[wireless]`/`[sweep]`
+    /// pricing axes. Scenario-driven runs build their own (per-workload
+    /// derived seeds, scenario knobs) — see
+    /// `Scenario::map_search`.
+    pub fn map_search(&self, optimize: bool) -> MapSearch {
+        MapSearch {
+            optimize,
+            objective: MappingObjective::Wired,
+            sa: SaOptions {
                 iters: self.cfg.mapper.sa_iters,
                 temp_frac: self.cfg.mapper.sa_temp,
                 seed: self.cfg.mapper.seed,
-            };
+            },
+            wl_bw: self.cfg.wireless.bandwidth_bits,
+            thresholds: self.cfg.sweep.thresholds.clone(),
+            pinjs: self.cfg.sweep.injection_probs.clone(),
+        }
+    }
+
+    /// SA-map a workload against the wired cost model and build its
+    /// tensors. `optimize=false` keeps the layer-sequential baseline
+    /// (for mapping ablations). Compatibility shim over
+    /// [`Self::prepare_mapped`] with the config-derived wired-objective
+    /// search.
+    pub fn prepare(&self, name: &str, optimize: bool) -> Result<Prepared> {
+        self.prepare_mapped(name, &self.map_search(optimize))
+    }
+
+    /// Map a workload per the full [`MapSearch`] axis and build its
+    /// tensors. The wired-objective arm (sequential or wired-SA) is
+    /// always computed — it is the shared wired reference — and a
+    /// hybrid objective additionally runs the joint mapping × offload
+    /// search from that arm's mapping (comap seed = `sa.seed + 1`, so
+    /// the two stages draw independent streams).
+    pub fn prepare_mapped(&self, name: &str, search: &MapSearch) -> Result<Prepared> {
+        let workload = build(name)?;
+        let elig = self.eligibility();
+        let (mapping, sa_initial_cost) = if search.optimize {
             let pkg = &self.pkg;
             let wl = &workload;
-            let r = anneal(wl, pkg, &opts, |m| {
+            let r = anneal(wl, pkg, &search.sa, |m| {
                 build_tensors(wl, m, pkg, &elig)
                     .map(|t| evaluate_wired(&t).total_s)
                     .unwrap_or(f64::INFINITY)
-            });
+            })?;
             (r.mapping, r.initial_cost)
         } else {
             (layer_sequential(&workload, &self.pkg), 0.0)
         };
         let tensors = build_tensors(&workload, &mapping, &self.pkg, &elig)?;
         let wired = evaluate_wired(&tensors);
+        let comap = match search.objective {
+            MappingObjective::Wired => None,
+            MappingObjective::Hybrid(refit) => {
+                let opts = ComapOptions {
+                    iters: search.sa.iters,
+                    temp_frac: search.sa.temp_frac,
+                    seed: search.sa.seed.wrapping_add(1),
+                    wl_bw: search.wl_bw,
+                    refit,
+                    thresholds: search.thresholds.clone(),
+                    pinjs: search.pinjs.clone(),
+                };
+                Some(co_anneal(&workload, &self.pkg, &elig, &mapping, &opts)?)
+            }
+        };
         Ok(Prepared {
             workload,
             mapping,
             tensors,
             wired,
             sa_initial_cost,
+            comap,
         })
     }
 
@@ -213,12 +295,25 @@ impl Coordinator {
         if spec.workers == 0 {
             spec.workers = self.workers();
         }
+        let elig = self.eligibility();
         let workloads: Vec<CampaignWorkload> = prepared
             .iter()
             .map(|p| CampaignWorkload {
                 name: p.workload.name.clone(),
                 tensors: &p.tensors,
                 t_wired: Some(p.wired.total_s),
+                // Joint-search context when the spec runs the comap
+                // stage: the search starts from the prepared (shared
+                // wired reference) mapping, with a per-workload derived
+                // seed so results are worker-count independent.
+                comap: spec.comap.map(|_| ComapInput {
+                    workload: &p.workload,
+                    pkg: &self.pkg,
+                    elig: elig.clone(),
+                    base: &p.mapping,
+                    seed: derive_seed(spec.map_seed, &p.workload.name)
+                        .wrapping_add(1),
+                }),
             })
             .collect();
         // Fail fast on an unusable artifact with a clean error, by
@@ -284,6 +379,30 @@ mod tests {
         // SA must never end worse than its own start.
         assert!(opt.wired.total_s <= opt.sa_initial_cost + 1e-12);
         assert!(opt.wired.total_s > 0.0);
+        // The wired objective carries no comap outcome.
+        assert!(base.comap.is_none() && opt.comap.is_none());
+    }
+
+    #[test]
+    fn prepare_mapped_hybrid_shares_the_wired_reference() {
+        use crate::mapping::comap::MappingObjective;
+        use crate::sim::policy::PolicySpec;
+        let c = coord();
+        let mut search = c.map_search(true);
+        search.objective = MappingObjective::Hybrid(PolicySpec::Greedy);
+        let p = c.prepare_mapped("googlenet", &search).unwrap();
+        // The wired-objective arm is untouched: identical to a plain
+        // wired prepare with the same schedule.
+        let wired_only = c.prepare("googlenet", true).unwrap();
+        assert_eq!(p.mapping, wired_only.mapping);
+        assert_eq!(p.wired.total_s, wired_only.wired.total_s);
+        // The comap arm rides alongside and never loses to the
+        // decoupled pipeline it seeded from.
+        let cm = p.comap.as_ref().expect("hybrid objective ran comap");
+        assert!(cm.total_s <= cm.initial_total_s);
+        assert!(cm.total_s > 0.0);
+        cm.mapping.validate(&p.workload, &c.pkg).unwrap();
+        assert_eq!(cm.decisions.len(), p.workload.layers.len());
     }
 
     #[test]

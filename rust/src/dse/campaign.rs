@@ -36,16 +36,34 @@
 //! per-layer load-balancing dimension of a campaign. Policy outcomes
 //! are deterministic pure functions of the tensors, so campaign results
 //! remain independent of the worker count.
+//!
+//! # The comap stage
+//!
+//! With [`CampaignSpec::comap`] set, each unit additionally runs the
+//! joint mapping × offload co-optimization
+//! ([`crate::mapping::comap::co_anneal`]) from the unit's prepared
+//! mapping at the unit's bandwidth, recording one [`ComapOutcome`] next
+//! to the policy outcomes. The joint search seeds from the decoupled
+//! pipeline (prepared mapping + its best policy), so its speedup never
+//! falls below the best [`PolicyOutcome`]; per-workload seeds are
+//! derived deterministically, so results stay independent of the
+//! worker count.
 
-use crate::config::SweepConfig;
+use crate::arch::Package;
+use crate::config::{SweepConfig, WirelessConfig};
 use crate::coordinator::loadbalance::{adaptive_search, AdaptiveResult};
 use crate::dse::{SweepPoint, SweepResult};
+use crate::mapping::comap::{co_anneal, ComapOptions};
+use crate::mapping::Mapping;
 use crate::report::Json;
 use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
 use crate::sim::cost::CostTensors;
 use crate::sim::evaluate_wired;
-use crate::sim::policy::{evaluate_policies, LayerDecision, PolicySpec};
+use crate::sim::policy::{
+    checked_speedup, evaluate_policies, LayerDecision, PolicySpec,
+};
 use crate::util::threadpool::{default_workers, parallel_map_with};
+use crate::workloads::Workload;
 use anyhow::{bail, Result};
 
 /// What to sweep: the grid axes, the bandwidth list, the offload-policy
@@ -71,6 +89,18 @@ pub struct CampaignSpec {
     pub refine_max_threshold: u32,
     /// pinj step for the refinement search.
     pub refine_pinj_step: f64,
+    /// Run the joint mapping × offload co-optimization per unit,
+    /// re-fitting decisions with this policy after placement moves
+    /// (`None` skips the stage). Requires [`CampaignWorkload::comap`]
+    /// context on every workload.
+    pub comap: Option<PolicySpec>,
+    /// Annealing iterations of the comap stage (0 = decoupled seed
+    /// only).
+    pub map_iters: usize,
+    /// Initial comap temperature as a fraction of the seed cost.
+    pub map_temp_frac: f64,
+    /// Base seed the per-workload comap seeds derive from.
+    pub map_seed: u64,
 }
 
 impl Default for CampaignSpec {
@@ -84,6 +114,10 @@ impl Default for CampaignSpec {
             refine: false,
             refine_max_threshold: 4,
             refine_pinj_step: 0.05,
+            comap: None,
+            map_iters: 600,
+            map_temp_frac: 0.25,
+            map_seed: 0xC0DE,
         }
     }
 }
@@ -127,8 +161,30 @@ impl CampaignSpec {
         if self.pinjs.iter().any(|p| !(0.0..=1.0).contains(p)) {
             bail!("injection probabilities must be in [0,1]");
         }
+        if self.comap.is_some()
+            && !(self.map_temp_frac.is_finite() && self.map_temp_frac > 0.0)
+        {
+            bail!(
+                "comap temperature fraction must be positive and finite, got {}",
+                self.map_temp_frac
+            );
+        }
         Ok(())
     }
+}
+
+/// Context a campaign unit needs to run the joint mapping × offload
+/// stage: the workload and package the tensors came from, the
+/// eligibility config used to build them, and the base
+/// (wired-objective) mapping the joint search starts from.
+#[derive(Debug, Clone)]
+pub struct ComapInput<'a> {
+    pub workload: &'a Workload,
+    pub pkg: &'a Package,
+    pub elig: WirelessConfig,
+    pub base: &'a Mapping,
+    /// Per-workload deterministic seed for the joint search.
+    pub seed: u64,
 }
 
 /// One workload entering a campaign: a display name plus its prepared
@@ -141,6 +197,9 @@ pub struct CampaignWorkload<'a> {
     /// coordinator's prepare stage does); `None` lets the campaign
     /// compute it once during aggregation.
     pub t_wired: Option<f64>,
+    /// Joint-search context, required when [`CampaignSpec::comap`] is
+    /// set (the coordinator's prepare stage fills it).
+    pub comap: Option<ComapInput<'a>>,
 }
 
 /// One offload policy's priced outcome for one (workload, bandwidth)
@@ -159,6 +218,26 @@ pub struct PolicyOutcome {
     pub decisions: Vec<LayerDecision>,
 }
 
+/// The per-unit outcome of the joint mapping × offload co-optimization
+/// stage. Speedups are native f64 over the unit's shared wired
+/// reference (the prepared mapping's wired baseline).
+#[derive(Debug, Clone)]
+pub struct ComapOutcome {
+    /// Speedup of the co-optimized (mapping, decisions) state.
+    pub speedup: f64,
+    pub total_s: f64,
+    /// Speedup of the decoupled pipeline the search seeded from (base
+    /// mapping + its best built-in policy); `speedup >=
+    /// decoupled_speedup` always.
+    pub decoupled_speedup: f64,
+    /// Which built-in policy produced the decoupled seed decisions.
+    pub seed_policy: PolicySpec,
+    /// Layers whose co-optimized decision actually offloads.
+    pub offload_layers: usize,
+    pub accepted: usize,
+    pub evaluated: usize,
+}
+
 /// One bandwidth's outcome for one workload.
 #[derive(Debug, Clone)]
 pub struct BandwidthResult {
@@ -175,6 +254,8 @@ pub struct BandwidthResult {
     pub refined: Option<AdaptiveResult>,
     /// Per-policy outcomes, in `CampaignSpec::policies` order.
     pub policies: Vec<PolicyOutcome>,
+    /// Joint mapping × offload outcome (when `CampaignSpec::comap`).
+    pub comap: Option<ComapOutcome>,
 }
 
 /// Margin a refined (f64) speedup must clear over the grid's f32-ABI
@@ -214,6 +295,11 @@ impl BandwidthResult {
             .iter()
             .map(|p| p.speedup)
             .max_by(f64::total_cmp)
+    }
+
+    /// Joint-search speedup, when the comap stage ran.
+    pub fn comap_speedup(&self) -> Option<f64> {
+        self.comap.as_ref().map(|c| c.speedup)
     }
 }
 
@@ -333,6 +419,33 @@ impl CampaignResult {
                                     .collect(),
                             ),
                         ));
+                        obj.push((
+                            "comap".into(),
+                            match &b.comap {
+                                None => Json::Null,
+                                Some(c) => Json::Obj(vec![
+                                    ("speedup".into(), Json::Num(c.speedup)),
+                                    ("total_s".into(), Json::Num(c.total_s)),
+                                    (
+                                        "decoupled_speedup".into(),
+                                        Json::Num(c.decoupled_speedup),
+                                    ),
+                                    (
+                                        "seed_policy".into(),
+                                        Json::Str(c.seed_policy.name().to_string()),
+                                    ),
+                                    (
+                                        "offload_layers".into(),
+                                        Json::Num(c.offload_layers as f64),
+                                    ),
+                                    ("accepted".into(), Json::Num(c.accepted as f64)),
+                                    (
+                                        "evaluated".into(),
+                                        Json::Num(c.evaluated as f64),
+                                    ),
+                                ]),
+                            },
+                        ));
                         Json::Obj(obj)
                     })
                     .collect();
@@ -382,6 +495,13 @@ impl CampaignResult {
                         .map(|p| Json::Str(p.name().to_string()))
                         .collect(),
                 ),
+            ),
+            (
+                "comap".into(),
+                match self.spec.comap {
+                    None => Json::Null,
+                    Some(p) => Json::Str(format!("hybrid:{}", p.name())),
+                },
             ),
             ("workloads".into(), Json::Arr(workloads)),
         ])
@@ -480,7 +600,12 @@ where
         spec.workers
     };
 
-    type UnitResult = (SweepResult, Option<AdaptiveResult>, Vec<PolicyOutcome>);
+    type UnitResult = (
+        SweepResult,
+        Option<AdaptiveResult>,
+        Vec<PolicyOutcome>,
+        Option<ComapOutcome>,
+    );
     let unit_results: Vec<Result<UnitResult>> = parallel_map_with(
         n_units,
         workers,
@@ -529,7 +654,46 @@ where
                 })
                 .collect()
             };
-            Ok((sweep, refined, policies))
+            // The comap stage: joint mapping × offload search at this
+            // unit's bandwidth, seeded per workload — deterministic and
+            // worker-count independent like the policy stage.
+            let comap = match (spec.comap, &workloads[wi].comap) {
+                (None, _) => None,
+                (Some(refit), Some(inp)) => {
+                    let opts = ComapOptions {
+                        iters: spec.map_iters,
+                        temp_frac: spec.map_temp_frac,
+                        seed: inp.seed,
+                        wl_bw: bw,
+                        refit,
+                        thresholds: spec.thresholds.clone(),
+                        pinjs: spec.pinjs.clone(),
+                    };
+                    let r =
+                        co_anneal(inp.workload, inp.pkg, &inp.elig, inp.base, &opts)?;
+                    let wired_ref = workloads[wi]
+                        .t_wired
+                        .unwrap_or_else(|| evaluate_wired(workloads[wi].tensors).total_s);
+                    Some(ComapOutcome {
+                        speedup: checked_speedup(wired_ref, r.total_s)?,
+                        total_s: r.total_s,
+                        decoupled_speedup: checked_speedup(
+                            wired_ref,
+                            r.initial_total_s,
+                        )?,
+                        seed_policy: r.seed_policy,
+                        offload_layers: r.offload_layers(),
+                        accepted: r.accepted,
+                        evaluated: r.evaluated,
+                    })
+                }
+                (Some(_), None) => bail!(
+                    "comap stage requested but workload {:?} carries no \
+                     workload/package/mapping context",
+                    workloads[wi].name
+                ),
+            };
+            Ok((sweep, refined, policies, comap))
         },
     );
 
@@ -544,7 +708,7 @@ where
             .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
         let mut per_bw = Vec::with_capacity(nb);
         for &bw in &spec.bandwidths {
-            let (sweep, refined, policies) = units
+            let (sweep, refined, policies, comap) = units
                 .next()
                 .expect("unit count matches cross-product")?;
             per_bw.push(BandwidthResult {
@@ -552,6 +716,7 @@ where
                 sweep,
                 refined,
                 policies,
+                comap,
             });
         }
         aggregated.push(WorkloadCampaign {
@@ -604,9 +769,9 @@ mod tests {
     fn cross_product_unit_and_point_counts() {
         let (ta, tb, tc) = (tensors(1.0), tensors(2.0), tensors(0.5));
         let workloads = vec![
-            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None },
-            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None },
-            CampaignWorkload { name: "c".into(), tensors: &tc, t_wired: None },
+            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None },
+            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None, comap: None },
+            CampaignWorkload { name: "c".into(), tensors: &tc, t_wired: None, comap: None },
         ];
         let s = spec();
         let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
@@ -629,8 +794,8 @@ mod tests {
     fn deterministic_across_worker_counts() {
         let (ta, tb) = (tensors(1.0), tensors(3.0));
         let workloads = vec![
-            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None },
-            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None },
+            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None },
+            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None, comap: None },
         ];
         let mut s1 = spec();
         s1.workers = 1;
@@ -653,7 +818,7 @@ mod tests {
     #[test]
     fn campaign_best_matches_sequential_sweep_grid() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let s = spec();
         let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
         let rt = Runtime::native();
@@ -672,7 +837,7 @@ mod tests {
     #[test]
     fn refinement_rides_along() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let mut s = spec();
         s.refine = true;
         let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
@@ -687,7 +852,7 @@ mod tests {
     #[test]
     fn invalid_specs_rejected() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let mut empty_grid = spec();
         empty_grid.thresholds.clear();
         assert!(run_campaign(&workloads, &empty_grid, Runtime::native).is_err());
@@ -705,7 +870,7 @@ mod tests {
     #[test]
     fn json_summary_shape() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let r = run_campaign(&workloads, &spec(), Runtime::native).unwrap();
         let text = r.to_json().render();
         assert!(text.contains("\"workloads\""));
@@ -718,7 +883,7 @@ mod tests {
     #[test]
     fn policy_axis_recorded_and_ordered() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let s = spec();
         let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
         for b in &r.workloads[0].per_bw {
@@ -752,13 +917,42 @@ mod tests {
     #[test]
     fn empty_policy_list_skips_the_stage() {
         let ta = tensors(1.0);
-        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None }];
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
         let mut s = spec();
         s.policies.clear();
         let r = run_campaign(&workloads, &s, Runtime::native).unwrap();
         for b in &r.workloads[0].per_bw {
             assert!(b.policies.is_empty());
             assert!(b.best_policy_speedup().is_none());
+            assert!(b.comap.is_none());
+            assert!(b.comap_speedup().is_none());
         }
+    }
+
+    #[test]
+    fn comap_without_workload_context_is_an_error() {
+        // The comap stage needs workload/package/mapping context; raw
+        // tensors alone must be rejected with a clean error, not a
+        // silent skip.
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
+        let mut s = spec();
+        s.comap = Some(PolicySpec::Greedy);
+        let err = run_campaign(&workloads, &s, Runtime::native)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("comap") && err.contains("context"), "{err}");
+    }
+
+    #[test]
+    fn comap_spec_validates_temperature() {
+        let mut s = spec();
+        s.comap = Some(PolicySpec::Greedy);
+        s.map_temp_frac = 0.0;
+        assert!(s.validate().is_err());
+        s.map_temp_frac = f64::NAN;
+        assert!(s.validate().is_err());
+        s.map_temp_frac = 0.25;
+        s.validate().unwrap();
     }
 }

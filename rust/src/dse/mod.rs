@@ -36,7 +36,7 @@ use anyhow::Result;
 
 pub use campaign::{
     run_campaign, BandwidthResult, CampaignResult, CampaignSpec, CampaignWorkload,
-    PolicyOutcome, WorkloadCampaign,
+    ComapInput, ComapOutcome, PolicyOutcome, WorkloadCampaign,
 };
 
 /// One evaluated grid point.
@@ -153,6 +153,7 @@ where
             name: format!("workload{i}"),
             tensors: t,
             t_wired: None,
+            comap: None,
         })
         .collect();
     let spec = CampaignSpec {

@@ -189,13 +189,25 @@ pub struct ScenarioRun {
 }
 
 /// Run every experiment of a scenario: prepare the workloads once (in
-/// parallel), build the shared [`ExperimentCtx`], then execute the
-/// scenario's experiment list in order.
+/// parallel, through the scenario's [`crate::coordinator::MapSearch`]
+/// with per-workload derived seeds), build the shared
+/// [`ExperimentCtx`], then execute the scenario's experiment list in
+/// order.
+///
+/// Preparation always runs the *wired* objective (the shared wired
+/// reference every experiment reads); a hybrid `map_objective` is
+/// priced inside the experiments that consume it — the `campaign`
+/// experiment re-solves the joint search per (workload, bandwidth)
+/// unit and `mapping-ablation` per bandwidth — so no joint search is
+/// paid whose outcome nothing reads.
 pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<ScenarioRun> {
     let workers = scenario.resolved_workers(coord);
     let prepared: Result<Vec<Prepared>> =
         parallel_map(scenario.workloads.len(), workers, |i| {
-            coord.prepare(&scenario.workloads[i], scenario.optimize)
+            let name = &scenario.workloads[i];
+            let mut search = scenario.map_search(coord, name)?;
+            search.objective = crate::mapping::comap::MappingObjective::Wired;
+            coord.prepare_mapped(name, &search)
         })
         .into_iter()
         .collect();

@@ -15,6 +15,10 @@
 //! policies = ["static", "greedy", "controller", "oracle"]
 //! seeds = 8
 //! optimize = true
+//! map_objective = "hybrid:greedy"   # or "wired" (default)
+//! map_iters = 400
+//! map_seed = 49374
+//! map_temp_frac = 0.25
 //! refine = false
 //! workers = 0
 //! ```
@@ -25,8 +29,12 @@
 
 use crate::cli;
 use crate::config::{toml::TomlDoc, Config};
+use crate::coordinator::{Coordinator, MapSearch};
+use crate::mapping::comap::MappingObjective;
+use crate::mapping::mapper::SaOptions;
 use crate::report::Json;
 use crate::sim::policy::PolicySpec;
+use crate::util::anneal::derive_seed;
 use crate::workloads::WORKLOAD_NAMES;
 use anyhow::{bail, Context as _, Result};
 
@@ -54,6 +62,21 @@ pub struct Scenario {
     pub seeds: u64,
     /// SA-optimize mappings (false = layer-sequential baseline).
     pub optimize: bool,
+    /// Mapping-search objective: `"wired"` (the paper's baseline SA) or
+    /// `"hybrid[:policy]"` (joint mapping × offload co-optimization —
+    /// runs the comap stage in `campaign` units and alongside
+    /// `prepare`).
+    pub map_objective: String,
+    /// SA iterations for the mapping searches (`None` = `[mapper]`
+    /// config; must be >= 1 when set — use `optimize = false` to skip
+    /// the search).
+    pub map_iters: Option<usize>,
+    /// Base seed per-workload mapping seeds derive from (`None` =
+    /// `[mapper]` config).
+    pub map_seed: Option<u64>,
+    /// Initial SA temperature as a fraction of the seed cost (`None` =
+    /// `[mapper]` config).
+    pub map_temp_frac: Option<f64>,
     /// Adaptive refinement stage after campaign grid passes.
     pub refine: bool,
     /// Worker threads (0 = auto).
@@ -88,6 +111,10 @@ impl Scenario {
                 .collect(),
             seeds: 8,
             optimize: true,
+            map_objective: "wired".to_string(),
+            map_iters: None,
+            map_seed: None,
+            map_temp_frac: None,
             refine: false,
             workers: cfg.sweep.workers,
             experiments: DEFAULT_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
@@ -148,6 +175,18 @@ impl Scenario {
         }
         if let Some(v) = doc.get_bool("scenario.optimize")? {
             s.optimize = v;
+        }
+        if let Some(v) = doc.get_str("scenario.map_objective")? {
+            s.map_objective = v.to_string();
+        }
+        if let Some(v) = doc.get_usize("scenario.map_iters")? {
+            s.map_iters = Some(v);
+        }
+        if let Some(v) = doc.get_u64("scenario.map_seed")? {
+            s.map_seed = Some(v);
+        }
+        if let Some(v) = doc.get_f64("scenario.map_temp_frac")? {
+            s.map_temp_frac = Some(v);
         }
         if let Some(v) = doc.get_bool("scenario.refine")? {
             s.refine = v;
@@ -228,6 +267,19 @@ impl Scenario {
         if self.seeds == 0 {
             bail!("scenario.seeds must be >= 1");
         }
+        MappingObjective::parse(&self.map_objective)
+            .context("scenario.map_objective")?;
+        if self.map_iters == Some(0) {
+            bail!(
+                "scenario.map_iters must be >= 1 (set optimize = false to \
+                 skip the mapping search)"
+            );
+        }
+        if let Some(t) = self.map_temp_frac {
+            if !(t.is_finite() && t > 0.0) {
+                bail!("scenario.map_temp_frac must be positive and finite, got {t}");
+            }
+        }
         Ok(())
     }
 
@@ -238,6 +290,36 @@ impl Scenario {
             .iter()
             .map(|p| PolicySpec::parse(p))
             .collect()
+    }
+
+    /// The mapping objective as a parsed axis value (spelling validated
+    /// by [`Self::normalize_and_validate`]).
+    pub fn objective(&self) -> Result<MappingObjective> {
+        MappingObjective::parse(&self.map_objective)
+    }
+
+    /// The full mapping search one workload of this scenario runs:
+    /// scenario knobs (falling back to the coordinator's `[mapper]`
+    /// config), the scenario's grid/bandwidth axes, and a per-workload
+    /// seed derived deterministically from the base seed — campaigns
+    /// stay reproducible across worker counts and workload orderings.
+    pub fn map_search(&self, coord: &Coordinator, workload: &str) -> Result<MapSearch> {
+        let mapper = &coord.cfg.mapper;
+        Ok(MapSearch {
+            optimize: self.optimize,
+            objective: self.objective()?,
+            sa: SaOptions {
+                iters: self.map_iters.unwrap_or(mapper.sa_iters),
+                temp_frac: self.map_temp_frac.unwrap_or(mapper.sa_temp),
+                seed: derive_seed(self.map_seed.unwrap_or(mapper.seed), workload),
+            },
+            // The hybrid objective prices at the scenario's first
+            // bandwidth; campaigns re-run the joint search per unit at
+            // each unit's own bandwidth.
+            wl_bw: self.bandwidths[0],
+            thresholds: self.thresholds.clone(),
+            pinjs: self.injection_probs.clone(),
+        })
     }
 
     /// Worker threads for this scenario: its own override when set,
@@ -297,6 +379,22 @@ impl Scenario {
             ),
             ("seeds".into(), Json::Num(self.seeds as f64)),
             ("optimize".into(), Json::Bool(self.optimize)),
+            (
+                "map_objective".into(),
+                Json::Str(self.map_objective.clone()),
+            ),
+            (
+                "map_iters".into(),
+                self.map_iters.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "map_seed".into(),
+                self.map_seed.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+            ),
+            (
+                "map_temp_frac".into(),
+                self.map_temp_frac.map(Json::Num).unwrap_or(Json::Null),
+            ),
             ("refine".into(), Json::Bool(self.refine)),
             ("workers".into(), Json::Num(self.workers as f64)),
             (
@@ -383,6 +481,28 @@ impl ScenarioBuilder {
 
     pub fn optimize(mut self, optimize: bool) -> Self {
         self.scenario.optimize = optimize;
+        self
+    }
+
+    /// Mapping objective: `"wired"` or `"hybrid[:policy]"` (validated
+    /// by `build()`).
+    pub fn map_objective(mut self, objective: &str) -> Self {
+        self.scenario.map_objective = objective.to_string();
+        self
+    }
+
+    pub fn map_iters(mut self, iters: usize) -> Self {
+        self.scenario.map_iters = Some(iters);
+        self
+    }
+
+    pub fn map_seed(mut self, seed: u64) -> Self {
+        self.scenario.map_seed = Some(seed);
+        self
+    }
+
+    pub fn map_temp_frac(mut self, temp_frac: f64) -> Self {
+        self.scenario.map_temp_frac = Some(temp_frac);
         self
     }
 

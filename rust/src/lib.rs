@@ -32,6 +32,17 @@
 //! `controller` / `oracle`), priced by [`sim::policy::evaluate_policy`]
 //! and threaded through campaigns, scenarios, the CLI (`--policies`)
 //! and reports.
+//!
+//! The mapping search is the third first-class search subsystem (after
+//! the sweep and policy engines): a generic annealer core
+//! ([`util::anneal`]) instantiated twice — [`mapping::mapper`] anneals
+//! placements against the wired cost (the paper's baseline), and
+//! [`mapping::comap`] jointly co-optimizes placement *and* per-layer
+//! offload against the hybrid cost. The
+//! [`mapping::comap::MappingObjective`] axis (`wired` /
+//! `hybrid[:policy]`) selects between them through
+//! [`coordinator::MapSearch`], `CampaignSpec::comap`,
+//! `Scenario.map_objective` and the CLI (`--map-objective`, `--comap`).
 
 pub mod arch;
 pub mod cli;

@@ -41,6 +41,11 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seeds", takes_value: true, help: "stochastic seeds to average" },
         OptSpec { name: "sa-iters", takes_value: true, help: "simulated-annealing iterations" },
         OptSpec { name: "no-opt", takes_value: false, help: "layer-sequential mapping (skip SA)" },
+        OptSpec { name: "map-objective", takes_value: true, help: "mapping objective: wired | hybrid[:policy]" },
+        OptSpec { name: "comap", takes_value: false, help: "shorthand for --map-objective hybrid (joint mapping x offload)" },
+        OptSpec { name: "map-iters", takes_value: true, help: "mapping-search SA iterations (default: [mapper] config)" },
+        OptSpec { name: "map-seed", takes_value: true, help: "base seed for per-workload mapping searches" },
+        OptSpec { name: "map-temp-frac", takes_value: true, help: "mapping-search initial temperature fraction" },
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
         OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
         OptSpec { name: "refine", takes_value: false, help: "adaptive refinement after campaign grid passes" },
@@ -206,6 +211,26 @@ fn apply_flag_overrides(
     if p.has_flag("no-opt") {
         s.optimize = false;
     }
+    // The mapping-objective axis: --comap is shorthand for the hybrid
+    // objective; an explicit --map-objective wins.
+    if p.has_flag("comap") {
+        s.map_objective = "hybrid".to_string();
+    }
+    if let Some(mo) = p.get("map-objective") {
+        s.map_objective = mo.to_string();
+    }
+    if let Some(iters) = p.get_usize("map-iters")? {
+        s.map_iters = Some(iters);
+    }
+    if let Some(seed) = p.get("map-seed") {
+        let parsed: u64 = seed.parse().map_err(|_| {
+            anyhow::anyhow!("--map-seed: expected an unsigned integer, got {seed:?}")
+        })?;
+        s.map_seed = Some(parsed);
+    }
+    if let Some(t) = p.get_f64("map-temp-frac")? {
+        s.map_temp_frac = Some(t);
+    }
     if p.has_flag("refine") {
         s.refine = true;
     }
@@ -244,10 +269,11 @@ fn cmd_run(p: &Parsed, legacy: Option<(&str, &str)>) -> Result<()> {
         Coordinator::new(cfg)?.with_artifact(p.get("artifact").map(String::from));
 
     println!(
-        "scenario {:?}: {} workloads x {} bandwidths, experiments: {}\n",
+        "scenario {:?}: {} workloads x {} bandwidths, mapping {}, experiments: {}\n",
         scenario.name,
         scenario.workloads.len(),
         scenario.bandwidths.len(),
+        scenario.map_objective,
         scenario.experiments.join(", "),
     );
     let store = RunStore::open_default();

@@ -1,16 +1,26 @@
-//! Simulated-annealing mapping search (the "optimal mapping" requirement
-//! of the paper: both the wired baseline and the wireless runs use the
-//! best mapping SA can find against the wired cost model).
+//! Wired-cost mapping search: the generic annealer
+//! ([`crate::util::anneal`]) instantiated over [`Mapping`] states (the
+//! paper's "optimal mapping" requirement: both the wired baseline and
+//! the wireless runs use the best mapping SA can find against the wired
+//! cost model).
 //!
-//! The cost function is injected so this module stays independent of the
-//! simulator (the coordinator wires them together).
+//! The cost function is injected so this module stays independent of
+//! the simulator (the coordinator wires them together); [`perturb`] is
+//! public because the joint mapping × offload search
+//! ([`super::comap`]) interleaves the same placement moves with offload
+//! re-solves, and because the property tests assert every perturbed
+//! mapping stays valid.
 
 use crate::arch::Package;
 use crate::mapping::{compact_region, greedy_sized, Mapping, Partition, PARTITIONS};
+use crate::util::anneal::{anneal as sa_anneal, AnnealOptions};
 use crate::util::rng::Pcg32;
 use crate::workloads::Workload;
+use anyhow::{bail, Result};
 
-/// Search configuration.
+/// Search configuration (re-exported view of the generic
+/// [`AnnealOptions`], kept for the mapping call sites and config
+/// plumbing).
 #[derive(Debug, Clone)]
 pub struct SaOptions {
     pub iters: usize,
@@ -29,6 +39,17 @@ impl Default for SaOptions {
     }
 }
 
+impl SaOptions {
+    /// The generic-annealer schedule this mapping search runs with.
+    pub fn generic(&self) -> AnnealOptions {
+        AnnealOptions {
+            iters: self.iters,
+            temp_frac: self.temp_frac,
+            seed: self.seed,
+        }
+    }
+}
+
 /// Outcome of a search.
 #[derive(Debug, Clone)]
 pub struct SearchResult {
@@ -41,7 +62,7 @@ pub struct SearchResult {
 
 /// One random perturbation of the mapping: resize a layer's region,
 /// move its anchor, or flip its partition strategy.
-fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) {
+pub fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) {
     let li = rng.below(mapping.placements.len() as u64) as usize;
     let p = &mut mapping.placements[li];
     let (rows, cols) = pkg.cfg.grid;
@@ -82,47 +103,54 @@ fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) {
 
 /// Anneal from the greedy seed. `cost` must be a total-latency-like
 /// objective (lower is better) and deterministic for a given mapping.
+///
+/// Degenerate inputs error instead of panicking or propagating NaN: a
+/// zero-layer workload has nothing to perturb, and a non-finite seed
+/// cost leaves the temperature schedule undefined (the generic core's
+/// typed [`AnnealError`](crate::util::anneal::AnnealError)s). As a
+/// deliberate exception, `iters == 0` keeps its historical "evaluate
+/// the greedy seed only" meaning — fast tests and benches rely on it —
+/// rather than the generic core's zero-iteration error.
 pub fn anneal<F: FnMut(&Mapping) -> f64>(
     wl: &Workload,
     pkg: &Package,
     opts: &SaOptions,
     mut cost: F,
-) -> SearchResult {
-    let mut rng = Pcg32::seeded(opts.seed);
-    let mut current = greedy_sized(wl, pkg);
-    let mut current_cost = cost(&current);
-    let initial_cost = current_cost;
-    let mut best = current.clone();
-    let mut best_cost = current_cost;
-    let mut accepted = 0;
-    let mut evaluated = 1;
-
-    let t0 = (initial_cost * opts.temp_frac).max(f64::MIN_POSITIVE);
-    for i in 0..opts.iters {
-        let temp = t0 * (1.0 - i as f64 / opts.iters.max(1) as f64).max(1e-3);
-        let mut cand = current.clone();
-        perturb(&mut cand, pkg, &mut rng);
-        let cand_cost = cost(&cand);
-        evaluated += 1;
-        let delta = cand_cost - current_cost;
-        if delta <= 0.0 || rng.coin((-delta / temp).exp()) {
-            current = cand;
-            current_cost = cand_cost;
-            accepted += 1;
-            if current_cost < best_cost {
-                best = current.clone();
-                best_cost = current_cost;
-            }
+) -> Result<SearchResult> {
+    if wl.layers.is_empty() {
+        bail!("cannot anneal a mapping for zero-layer workload {:?}", wl.name);
+    }
+    let seed_mapping = greedy_sized(wl, pkg);
+    if opts.iters == 0 {
+        let c = cost(&seed_mapping);
+        if !c.is_finite() {
+            bail!(
+                "greedy seed mapping for {:?} has non-finite cost {c}",
+                wl.name
+            );
         }
+        return Ok(SearchResult {
+            mapping: seed_mapping,
+            cost: c,
+            initial_cost: c,
+            accepted: 0,
+            evaluated: 1,
+        });
     }
-
-    SearchResult {
-        mapping: best,
-        cost: best_cost,
-        initial_cost,
-        accepted,
-        evaluated,
-    }
+    let out = sa_anneal(
+        seed_mapping,
+        &opts.generic(),
+        |m, rng| perturb(m, pkg, rng),
+        |m| cost(m),
+    )
+    .map_err(|e| anyhow::anyhow!("mapping SA for {:?}: {e}", wl.name))?;
+    Ok(SearchResult {
+        mapping: out.state,
+        cost: out.cost,
+        initial_cost: out.initial_cost,
+        accepted: out.accepted,
+        evaluated: out.evaluated,
+    })
 }
 
 /// Exhaustive single-layer sweep used by tests/ablations: best uniform
@@ -196,7 +224,8 @@ mod tests {
                 ..Default::default()
             },
             toy_cost,
-        );
+        )
+        .unwrap();
         assert!(r.cost <= r.initial_cost, "{} > {}", r.cost, r.initial_cost);
         assert!(r.accepted > 0);
         r.mapping.validate(&wl, &p).unwrap();
@@ -207,8 +236,8 @@ mod tests {
         let p = pkg();
         let wl = build("zfnet").unwrap();
         let opts = SaOptions::default();
-        let a = anneal(&wl, &p, &opts, toy_cost);
-        let b = anneal(&wl, &p, &opts, toy_cost);
+        let a = anneal(&wl, &p, &opts, toy_cost).unwrap();
+        let b = anneal(&wl, &p, &opts, toy_cost).unwrap();
         assert_eq!(a.cost, b.cost);
         assert_eq!(a.mapping, b.mapping);
     }
@@ -217,7 +246,7 @@ mod tests {
     fn different_seed_explores_differently() {
         let p = pkg();
         let wl = build("zfnet").unwrap();
-        let a = anneal(&wl, &p, &SaOptions::default(), toy_cost);
+        let a = anneal(&wl, &p, &SaOptions::default(), toy_cost).unwrap();
         let b = anneal(
             &wl,
             &p,
@@ -226,9 +255,54 @@ mod tests {
                 ..Default::default()
             },
             toy_cost,
-        );
+        )
+        .unwrap();
         // Costs can tie at the optimum, but acceptance traces differ.
         assert!(a.accepted != b.accepted || a.mapping != b.mapping || a.cost == b.cost);
+    }
+
+    #[test]
+    fn zero_iterations_evaluates_the_greedy_seed_only() {
+        let p = pkg();
+        let wl = build("zfnet").unwrap();
+        let r = anneal(
+            &wl,
+            &p,
+            &SaOptions {
+                iters: 0,
+                ..Default::default()
+            },
+            toy_cost,
+        )
+        .unwrap();
+        assert_eq!(r.mapping, crate::mapping::greedy_sized(&wl, &p));
+        assert_eq!(r.cost, r.initial_cost);
+        assert_eq!(r.accepted, 0);
+        assert_eq!(r.evaluated, 1);
+    }
+
+    #[test]
+    fn non_finite_seed_cost_errors() {
+        let p = pkg();
+        let wl = build("zfnet").unwrap();
+        // Annealed path: typed error from the generic core, wrapped.
+        let err = anneal(&wl, &p, &SaOptions::default(), |_| f64::NAN)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-finite"), "{err}");
+        // Seed-only path errors too instead of reporting a NaN result.
+        let err0 = anneal(
+            &wl,
+            &p,
+            &SaOptions {
+                iters: 0,
+                ..Default::default()
+            },
+            |_| f64::INFINITY,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err0.contains("non-finite"), "{err0}");
     }
 
     #[test]

@@ -4,10 +4,21 @@
 //! GEMINI's mapper (built on SET) explores layer-pipeline segmentations
 //! and spatial partitions; we reproduce the decision space that matters
 //! to the cost model — per-layer chiplet regions and partition
-//! strategies — and search it with simulated annealing against the full
-//! analytical cost (the same cost used for the paper's experiments, so
-//! wired and wireless runs share one "optimally mapped" baseline).
+//! strategies. The search itself is split into two instantiations of
+//! the crate's generic annealer ([`crate::util::anneal`]):
+//!
+//! * [`mapper`] — the paper's baseline: anneal placements against the
+//!   *wired* cost, so wired and wireless runs share one "optimally
+//!   mapped" reference ([`mapper::anneal`], [`mapper::perturb`]).
+//! * [`comap`] — joint mapping × offload co-optimization: anneal a
+//!   `(Mapping, Vec<LayerDecision>)` state against the *hybrid* cost,
+//!   interleaving the same placement moves with per-layer offload
+//!   re-solves from the policy engine ([`comap::co_anneal`]). The
+//!   [`comap::MappingObjective`] axis (`wired` vs `hybrid[:policy]`)
+//!   selects between them everywhere — coordinator, campaigns,
+//!   scenarios and the CLI.
 
+pub mod comap;
 pub mod mapper;
 
 use crate::arch::Package;

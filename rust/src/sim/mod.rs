@@ -26,9 +26,10 @@ pub mod traffic;
 
 pub use cost::{CostTensors, LayerCosts, HOP_BUCKETS};
 pub use policy::{
-    best_static_pair, checked_speedup, controller_trajectory, evaluate_policies,
-    evaluate_policy, ControllerPolicy, GreedyPerLayer, LayerDecision, OffloadPolicy,
-    OraclePerLayer, PolicyEval, PolicySpec, StaticPolicy,
+    best_static_pair, checked_speedup, controller_trajectory, decide_policy,
+    evaluate_policies, evaluate_policy, ControllerPolicy, GreedyPerLayer,
+    LayerDecision, OffloadPolicy, OraclePerLayer, PolicyEval, PolicySpec,
+    StaticPolicy,
 };
 pub use traffic::{characterize, LayerTraffic};
 

@@ -516,10 +516,56 @@ impl PolicyEval {
     }
 }
 
+/// Instantiate one named policy over the shared grid axes and decide a
+/// tensor set: `Static` exhausts the uniform grid, `Greedy` caps its
+/// threshold at the grid maximum, `Controller` and `Oracle` take the
+/// axes directly. The single constructor-and-dispatch shared by
+/// [`evaluate_policies`], the campaign policy stage and the joint
+/// mapping × offload search ([`crate::mapping::comap`]).
+pub fn decide_policy(
+    spec: PolicySpec,
+    t: &CostTensors,
+    wl_bw: f64,
+    thresholds: &[u32],
+    pinjs: &[f64],
+) -> Result<Vec<LayerDecision>> {
+    if thresholds.is_empty() || pinjs.is_empty() {
+        bail!(
+            "policy grid is empty: {} thresholds x {} injection probabilities",
+            thresholds.len(),
+            pinjs.len()
+        );
+    }
+    let max_t = thresholds.iter().copied().max().expect("non-empty");
+    match spec {
+        PolicySpec::Static => {
+            let (d, p) = best_static_pair(t, wl_bw, thresholds, pinjs)?;
+            StaticPolicy {
+                threshold: d,
+                pinj: p,
+            }
+            .decide(t, wl_bw)
+        }
+        PolicySpec::Greedy => GreedyPerLayer {
+            max_threshold: max_t,
+        }
+        .decide(t, wl_bw),
+        PolicySpec::Controller => ControllerPolicy {
+            thresholds: thresholds.to_vec(),
+            ..ControllerPolicy::default()
+        }
+        .decide(t, wl_bw),
+        PolicySpec::Oracle => OraclePerLayer {
+            thresholds: thresholds.to_vec(),
+            pinjs: pinjs.to_vec(),
+        }
+        .decide(t, wl_bw),
+    }
+}
+
 /// Decide and price every listed policy over one tensor set at one
-/// bandwidth, sharing the grid axes: `Static` exhausts the uniform
-/// grid, `Greedy` caps its threshold at the grid maximum, `Controller`
-/// and `Oracle` take the axes directly. Outcomes come back in `specs`
+/// bandwidth, sharing the grid axes (see [`decide_policy`] for how the
+/// axes parameterize each built-in). Outcomes come back in `specs`
 /// order.
 pub fn evaluate_policies(
     t: &CostTensors,
@@ -538,35 +584,11 @@ pub fn evaluate_policies(
     if !(wl_bw.is_finite() && wl_bw > 0.0) {
         bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
     }
-    let max_t = thresholds.iter().copied().max().expect("non-empty");
     let wired = evaluate_wired(t).total_s;
     specs
         .iter()
         .map(|&spec| {
-            let decisions = match spec {
-                PolicySpec::Static => {
-                    let (d, p) = best_static_pair(t, wl_bw, thresholds, pinjs)?;
-                    StaticPolicy {
-                        threshold: d,
-                        pinj: p,
-                    }
-                    .decide(t, wl_bw)?
-                }
-                PolicySpec::Greedy => GreedyPerLayer {
-                    max_threshold: max_t,
-                }
-                .decide(t, wl_bw)?,
-                PolicySpec::Controller => ControllerPolicy {
-                    thresholds: thresholds.to_vec(),
-                    ..ControllerPolicy::default()
-                }
-                .decide(t, wl_bw)?,
-                PolicySpec::Oracle => OraclePerLayer {
-                    thresholds: thresholds.to_vec(),
-                    pinjs: pinjs.to_vec(),
-                }
-                .decide(t, wl_bw)?,
-            };
+            let decisions = decide_policy(spec, t, wl_bw, thresholds, pinjs)?;
             let result = evaluate_policy(t, &decisions, wl_bw);
             let speedup = checked_speedup(wired, result.total_s)?;
             Ok(PolicyEval {

@@ -1,0 +1,298 @@
+//! Generic simulated-annealing core: one annealing loop over an
+//! injected `(state, perturb, cost)` triple.
+//!
+//! Two search subsystems instantiate it today: the wired-cost mapping
+//! search ([`crate::mapping::mapper::anneal`]) and the joint mapping ×
+//! offload co-optimization ([`crate::mapping::comap::co_anneal`]).
+//! Keeping the loop in one place fixes the annealing contract for both:
+//!
+//! * deterministic [`Pcg32`] seeding — identical `(seed, iters,
+//!   temp_frac)` means an identical search trajectory, across runs and
+//!   across worker counts;
+//! * geometric-ish cooling from `temp_frac * initial_cost` down to a
+//!   `1e-3` floor fraction, exactly the schedule the mapping SA has
+//!   always used (the Python cost mirror reproduces it bit-for-bit);
+//! * NaN-safe bookkeeping — a candidate whose cost is NaN (or worse
+//!   than the incumbent by an infinite margin) is never accepted and
+//!   never becomes the best state, but still consumes the same RNG
+//!   draws so trajectories stay reproducible;
+//! * typed errors for degenerate inputs ([`AnnealError`]), mirroring
+//!   the `checked_speedup` convention: zero iterations and a non-finite
+//!   initial cost are caller bugs surfaced as errors, not NaN
+//!   propagation.
+//!
+//! CAUTION: `python/tools/cost_mirror.py` mirrors `anneal` (and
+//! [`derive_seed`]) bit-exactly — checked by
+//! `mirror_checks_mapping.py`; keep them in sync.
+
+use crate::util::rng::{Pcg32, SplitMix64};
+use std::fmt;
+
+/// Annealing schedule: iteration budget, initial temperature as a
+/// fraction of the initial cost, and the RNG seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnnealOptions {
+    pub iters: usize,
+    /// Initial temperature as a fraction of the initial cost.
+    pub temp_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for AnnealOptions {
+    fn default() -> Self {
+        Self {
+            iters: 600,
+            temp_frac: 0.25,
+            seed: 0xC0DE,
+        }
+    }
+}
+
+/// Degenerate annealing inputs, surfaced as typed errors instead of
+/// panics or NaN propagation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AnnealError {
+    /// `iters == 0`: the caller asked for a search without a budget.
+    /// Wrappers that want "evaluate the seed only" semantics must
+    /// implement it explicitly, not fall through the loop.
+    ZeroIterations,
+    /// The initial state's cost is NaN or infinite: no temperature
+    /// schedule can be derived from it and every acceptance test would
+    /// be vacuous.
+    NonFiniteInitialCost(f64),
+}
+
+impl fmt::Display for AnnealError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AnnealError::ZeroIterations => {
+                write!(f, "annealing needs at least one iteration")
+            }
+            AnnealError::NonFiniteInitialCost(c) => write!(
+                f,
+                "initial state has non-finite cost {c}: the temperature \
+                 schedule and acceptance tests are undefined"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AnnealError {}
+
+/// Outcome of one annealing run.
+#[derive(Debug, Clone)]
+pub struct AnnealOutcome<S> {
+    /// Best state seen (NaN-safe: never a state with non-finite cost
+    /// when the initial cost is finite).
+    pub state: S,
+    pub cost: f64,
+    pub initial_cost: f64,
+    /// Accepted moves (including downhill ones).
+    pub accepted: usize,
+    /// Cost evaluations (initial state included).
+    pub evaluated: usize,
+}
+
+/// Anneal from `initial`. `perturb` mutates a candidate in place using
+/// the shared RNG; `cost` must be deterministic for a given state
+/// (lower is better). Candidates with NaN cost are rejected (the
+/// acceptance coin is still flipped, so the trajectory is identical to
+/// a rejection by probability).
+pub fn anneal<S, P, C>(
+    initial: S,
+    opts: &AnnealOptions,
+    mut perturb: P,
+    mut cost: C,
+) -> Result<AnnealOutcome<S>, AnnealError>
+where
+    S: Clone,
+    P: FnMut(&mut S, &mut Pcg32),
+    C: FnMut(&S) -> f64,
+{
+    if opts.iters == 0 {
+        return Err(AnnealError::ZeroIterations);
+    }
+    let mut rng = Pcg32::seeded(opts.seed);
+    let mut current = initial;
+    let mut current_cost = cost(&current);
+    if !current_cost.is_finite() {
+        return Err(AnnealError::NonFiniteInitialCost(current_cost));
+    }
+    let initial_cost = current_cost;
+    let mut best = current.clone();
+    let mut best_cost = current_cost;
+    let mut accepted = 0usize;
+    let mut evaluated = 1usize;
+
+    let t0 = (initial_cost * opts.temp_frac).max(f64::MIN_POSITIVE);
+    for i in 0..opts.iters {
+        let temp = t0 * (1.0 - i as f64 / opts.iters as f64).max(1e-3);
+        let mut cand = current.clone();
+        perturb(&mut cand, &mut rng);
+        let cand_cost = cost(&cand);
+        evaluated += 1;
+        let delta = cand_cost - current_cost;
+        // NaN delta fails both arms (the coin is still consumed), so a
+        // broken candidate is a deterministic rejection.
+        if delta <= 0.0 || rng.coin((-delta / temp).exp()) {
+            current = cand;
+            current_cost = cand_cost;
+            accepted += 1;
+            if current_cost < best_cost {
+                best = current.clone();
+                best_cost = current_cost;
+            }
+        }
+    }
+
+    Ok(AnnealOutcome {
+        state: best,
+        cost: best_cost,
+        initial_cost,
+        accepted,
+        evaluated,
+    })
+}
+
+/// Deterministic per-item seed derivation: FNV-1a over `tag` mixed with
+/// `base` through SplitMix64. Campaigns derive one seed per workload
+/// from the scenario's base seed, so results are independent of worker
+/// count and of the order workloads are listed in.
+pub fn derive_seed(base: u64, tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    SplitMix64::new(base ^ h).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1-D toy landscape: minimize |x - 7| over integer steps.
+    fn toy(opts: &AnnealOptions) -> AnnealOutcome<i64> {
+        anneal(
+            0i64,
+            opts,
+            |x, rng| {
+                if rng.coin(0.5) {
+                    *x += 1;
+                } else {
+                    *x -= 1;
+                }
+            },
+            |x| (*x - 7).abs() as f64 + 1.0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn improves_and_bookkeeps() {
+        let r = toy(&AnnealOptions {
+            iters: 400,
+            ..Default::default()
+        });
+        assert!(r.cost <= r.initial_cost);
+        assert!(r.cost <= 3.0, "landed at cost {}", r.cost);
+        assert_eq!(r.evaluated, 401);
+        assert!(r.accepted > 0 && r.accepted <= 400);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let opts = AnnealOptions::default();
+        let a = toy(&opts);
+        let b = toy(&opts);
+        assert_eq!(a.state, b.state);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.accepted, b.accepted);
+        let c = toy(&AnnealOptions {
+            seed: 999,
+            ..opts
+        });
+        assert!(c.accepted != a.accepted || c.state != a.state || c.cost == a.cost);
+    }
+
+    #[test]
+    fn zero_iterations_is_a_typed_error() {
+        let err = anneal(
+            0i64,
+            &AnnealOptions {
+                iters: 0,
+                ..Default::default()
+            },
+            |_, _| {},
+            |_| 1.0,
+        )
+        .unwrap_err();
+        assert_eq!(err, AnnealError::ZeroIterations);
+        assert!(err.to_string().contains("at least one iteration"));
+    }
+
+    #[test]
+    fn non_finite_initial_cost_is_a_typed_error() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = anneal(
+                0i64,
+                &AnnealOptions::default(),
+                |_, _| {},
+                |_| bad,
+            )
+            .unwrap_err();
+            match err {
+                AnnealError::NonFiniteInitialCost(c) => {
+                    assert!(!c.is_finite());
+                }
+                other => panic!("expected NonFiniteInitialCost, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn nan_candidates_never_become_best() {
+        // Cost is NaN everywhere except the initial state: the best
+        // state must remain the (finite) seed.
+        let r = anneal(
+            0i64,
+            &AnnealOptions {
+                iters: 200,
+                ..Default::default()
+            },
+            |x, _| *x += 1,
+            |x| if *x == 0 { 5.0 } else { f64::NAN },
+        )
+        .unwrap();
+        assert_eq!(r.state, 0);
+        assert_eq!(r.cost, 5.0);
+        assert_eq!(r.accepted, 0);
+    }
+
+    #[test]
+    fn infinite_candidates_are_rejected_not_propagated() {
+        let r = anneal(
+            3i64,
+            &AnnealOptions {
+                iters: 100,
+                ..Default::default()
+            },
+            |x, _| *x += 1,
+            |x| if *x <= 3 { 2.0 } else { f64::INFINITY },
+        )
+        .unwrap();
+        assert_eq!(r.state, 3);
+        assert!(r.cost.is_finite());
+    }
+
+    #[test]
+    fn derive_seed_is_stable_and_disperses() {
+        let a = derive_seed(0xC0DE, "zfnet");
+        assert_eq!(a, derive_seed(0xC0DE, "zfnet"));
+        assert_ne!(a, derive_seed(0xC0DE, "googlenet"));
+        assert_ne!(a, derive_seed(0xBEEF, "zfnet"));
+        // Order-of-listing independence is the point: the seed depends
+        // only on (base, name).
+        assert_ne!(derive_seed(0, "a"), derive_seed(0, "b"));
+    }
+}

@@ -1,7 +1,9 @@
 //! Foundational substrates built in-house (the offline crates cache only
-//! carries the `xla` closure): deterministic RNG, statistics, a thread
-//! pool, a property-testing harness and a micro-benchmark kit.
+//! carries the `xla` closure): deterministic RNG, a generic
+//! simulated-annealing core, statistics, a thread pool, a
+//! property-testing harness and a micro-benchmark kit.
 
+pub mod anneal;
 pub mod benchkit;
 pub mod propcheck;
 pub mod rng;

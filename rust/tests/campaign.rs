@@ -146,6 +146,7 @@ fn campaign_deterministic_across_worker_counts() {
             name: p.workload.name.clone(),
             tensors: &p.tensors,
             t_wired: Some(p.wired.total_s),
+            comap: None,
         })
         .collect();
     let base = CampaignSpec::default();
@@ -213,6 +214,67 @@ fn campaign_refinement_stage() {
             b.sweep.best_point().speedup
         );
     }
+}
+
+/// The comap stage rides along per (workload, bandwidth): the joint
+/// mapping x offload search never loses to the best decoupled policy,
+/// is recorded next to the policy outcomes, and stays deterministic
+/// across worker counts.
+#[test]
+fn campaign_comap_stage() {
+    let c = coordinator();
+    let spec = CampaignSpec {
+        comap: Some(PolicySpec::Greedy),
+        map_iters: 40,
+        ..CampaignSpec::from_sweep_config(&c.cfg.sweep)
+    };
+    let run = |workers: usize| {
+        let s = CampaignSpec {
+            workers,
+            ..spec.clone()
+        };
+        c.campaign(&names(&["zfnet", "googlenet"]), false, &s).unwrap()
+    };
+    let r1 = run(1);
+    let r4 = run(4);
+    for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+        for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+            let cm = x.comap.as_ref().expect("comap stage requested");
+            // Never worse than the decoupled pipeline it seeded from,
+            // which itself is the best of the priced policies.
+            assert!(cm.speedup >= cm.decoupled_speedup);
+            let best_policy = x.best_policy_speedup().unwrap();
+            assert!(
+                cm.decoupled_speedup >= best_policy - 1e-12,
+                "{}: decoupled {} vs best policy {}",
+                a.name,
+                cm.decoupled_speedup,
+                best_policy
+            );
+            assert_eq!(x.comap_speedup(), Some(cm.speedup));
+            assert!(cm.offload_layers <= c.prepare(&a.name, false).unwrap().workload.layers.len());
+            // Worker count must not change the joint search outcome.
+            let cm4 = y.comap.as_ref().unwrap();
+            assert_eq!(cm.speedup, cm4.speedup);
+            assert_eq!(cm.total_s, cm4.total_s);
+            assert_eq!(cm.accepted, cm4.accepted);
+        }
+    }
+    // The JSON summary records the stage.
+    let json = r1.to_json().render();
+    assert!(json.contains("\"comap\""));
+    assert!(json.contains("\"decoupled_speedup\""));
+
+    // Without the stage, the field stays empty and the summary says so.
+    let off = c
+        .campaign(
+            &names(&["zfnet"]),
+            false,
+            &CampaignSpec::from_sweep_config(&c.cfg.sweep),
+        )
+        .unwrap();
+    assert!(off.workloads[0].per_bw[0].comap.is_none());
+    assert!(off.to_json().render().contains("\"comap\": null"));
 }
 
 /// Campaign-level JSON summary is written through the report module.

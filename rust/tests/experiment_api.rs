@@ -441,6 +441,141 @@ fn compare_handles_missing_metric_keys() {
     assert!(cmp_empty.diffs.iter().all(|d| d.b.is_none()));
 }
 
+/// The mapping-search knobs parse from TOML, build fluently, validate,
+/// and land in the manifest.
+#[test]
+fn scenario_mapping_axis() {
+    let cfg = Config::default();
+    let s = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\n\
+         map_objective = \"hybrid:oracle\"\nmap_iters = 80\n\
+         map_seed = 7\nmap_temp_frac = 0.3\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(s.map_objective, "hybrid:oracle");
+    assert_eq!(s.map_iters, Some(80));
+    assert_eq!(s.map_seed, Some(7));
+    assert_eq!(s.map_temp_frac, Some(0.3));
+    let js = s.to_json().render();
+    assert!(js.contains("\"map_objective\": \"hybrid:oracle\""), "{js}");
+    assert!(js.contains("\"map_iters\": 80"), "{js}");
+
+    // Defaults: wired objective, knobs fall back to [mapper] config.
+    let d = Scenario::from_toml_str("[scenario]\nworkloads = [\"zfnet\"]\n", &cfg)
+        .unwrap();
+    assert_eq!(d.map_objective, "wired");
+    assert_eq!(d.map_iters, None);
+    assert!(d.to_json().render().contains("\"map_iters\": null"));
+
+    // Builder path produces the same spec as TOML.
+    let b = Scenario::builder(&cfg)
+        .workloads(["zfnet"])
+        .map_objective("hybrid:oracle")
+        .map_iters(80)
+        .map_seed(7)
+        .map_temp_frac(0.3)
+        .build()
+        .unwrap();
+    assert_eq!(b.map_objective, s.map_objective);
+    assert_eq!(b.map_iters, s.map_iters);
+    assert_eq!(b.map_seed, s.map_seed);
+    assert_eq!(b.map_temp_frac, s.map_temp_frac);
+
+    // Bad values are rejected with teaching errors.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nmap_objective = \"fancy\"\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("fancy") && err.contains("hybrid"), "{err}");
+    assert!(Scenario::from_toml_str(
+        "[scenario]\nmap_objective = \"hybrid:nope\"\n",
+        &cfg
+    )
+    .is_err());
+    let err = Scenario::from_toml_str("[scenario]\nmap_iters = 0\n", &cfg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("optimize"), "{err}");
+    assert!(
+        Scenario::from_toml_str("[scenario]\nmap_temp_frac = -1.0\n", &cfg).is_err()
+    );
+}
+
+/// The hybrid mapping objective flows through a whole scenario run:
+/// prepared workloads carry comap outcomes, the campaign experiment
+/// records the per-unit comap stage, and the mapping ablation emits
+/// the three-way table whose comap arm dominates both decoupled arms.
+#[test]
+fn hybrid_objective_through_registry() {
+    let coord = coordinator();
+    let mut scenario = small_scenario(&["campaign", "mapping-ablation"]);
+    scenario.workloads = vec!["googlenet".to_string()];
+    scenario.map_objective = "hybrid".to_string();
+    scenario.map_iters = Some(30);
+    scenario.normalize_and_validate().unwrap();
+    let run = experiment::run_scenario(&coord, &scenario).unwrap();
+
+    let find = |exp: &str, key: &str| {
+        run.outputs
+            .iter()
+            .find(|(n, _)| n == exp)
+            .and_then(|(_, o)| {
+                o.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+            })
+            .unwrap_or_else(|| panic!("missing {exp} metric {key}"))
+    };
+    // Campaign: the comap stage beat (or tied) its decoupled seed and
+    // every priced policy.
+    let comap = find("campaign", "googlenet/64000000000/comap/speedup");
+    let decoupled = find("campaign", "googlenet/64000000000/comap/decoupled_speedup");
+    assert!(comap >= decoupled, "{comap} vs {decoupled}");
+    for policy in ["static", "greedy", "controller", "oracle"] {
+        let p = find(
+            "campaign",
+            &format!("googlenet/64000000000/{policy}/speedup"),
+        );
+        assert!(comap >= p - 1e-12, "comap {comap} lost to {policy} {p}");
+    }
+    let (_, campaign_out) = run
+        .outputs
+        .iter()
+        .find(|(n, _)| n == "campaign")
+        .unwrap();
+    assert!(campaign_out
+        .csvs
+        .iter()
+        .any(|c| c.name == "campaign_comap"));
+
+    // Mapping ablation: three-way metrics, comap >= both other arms.
+    let seq = find("mapping-ablation", "googlenet/64000000000/seq_speedup");
+    let sa = find("mapping-ablation", "googlenet/64000000000/wired_sa_speedup");
+    let cm = find("mapping-ablation", "googlenet/64000000000/comap_speedup");
+    assert!(cm >= seq && cm >= sa, "comap {cm} vs seq {seq} / sa {sa}");
+    let (_, ablation_out) = run
+        .outputs
+        .iter()
+        .find(|(n, _)| n == "mapping-ablation")
+        .unwrap();
+    assert_eq!(ablation_out.csvs[0].name, "mapping_ablation");
+    assert_eq!(
+        ablation_out.csvs[0].headers,
+        vec![
+            "workload",
+            "wl_bw",
+            "t_seq_s",
+            "t_sa_s",
+            "sa_gain_pct",
+            "seq_speedup",
+            "wired_sa_speedup",
+            "comap_speedup"
+        ]
+    );
+    assert!(ablation_out.text.contains("comap-SA"), "{}", ablation_out.text);
+}
+
 /// The scenario builder and the TOML path produce identical specs.
 #[test]
 fn builder_matches_toml() {
