@@ -2,10 +2,12 @@
 
 CAUTION: this mirrors rust/src (arch, mapping, traffic, nop, cost, sim,
 the generic annealer + wired SA + joint comap searches with bit-exact
-Pcg32, the policy engine, and workloads/builders.rs) in Python so the
-repo's quantitative test assertions can be checked without a Rust
-toolchain. If you change the Rust cost pipeline or the workload
-builders, update this mirror in the same PR or its verdicts are stale.
+Pcg32, the policy engine, the evaluation-engine backends of
+sim/engine.rs — stochastic per-message draws, traces, and the feedback
+policy's re-fit — and workloads/builders.rs) in Python so the repo's
+quantitative test assertions can be checked without a Rust toolchain.
+If you change the Rust cost pipeline or the workload builders, update
+this mirror in the same PR or its verdicts are stale.
 """
 import math
 from functools import lru_cache
@@ -1326,6 +1328,166 @@ def prepare_mapped(name, optimize, pkg=None, iters=600, seed=0xC0DE,
     p['comap'] = co_anneal(p['wl'], pkg, p['mapping'], wl_bw, iters, temp,
                            (seed + 1) & M64, thresholds, pinjs, refit)
     return p
+
+
+# ---------------------------------------------------------------- engine
+# Mirror of rust/src/sim/engine.rs — the unified evaluation-engine
+# abstraction. AnalyticalEngine is evaluate_policy above (bit-exact by
+# construction); the stochastic engine and the feedback policy's
+# trace-driven re-fit are mirrored here. Checked by
+# mirror_checks_engine.py.
+
+ENGINE_MESSAGE_BITS = 8.0 * 1024.0  # sim::stochastic::MESSAGE_BITS
+ENGINE_DEFAULT_DRAWS = 32
+ENGINE_DEFAULT_SEED = 0x5EED
+
+
+def engine_draw_seed(seed, draw):
+    """Per-draw seed schedule (engine::draw_seed): golden-ratio stride."""
+    return (seed ^ ((draw * 0x9E3779B97F4A7C15) & M64)) & M64
+
+
+def stochastic_engine_evaluate(t, decisions, wl_bw, draws, seed):
+    """StochasticEngine::evaluate — returns (result, trace). The trace
+    is trace[layer][draw] = dict(wl_bits, t_serialize, t_wait,
+    backoffs, t_nop_residual). Bit-exact: same RNG draw order (layers
+    outer, buckets ascending, messages inner), same f64 accumulation
+    order, same aggregation."""
+    assert len(decisions) == len(t['layers'])
+    assert draws >= 1
+    nl = len(t['layers'])
+    layer_lat_sum = [0.0] * nl
+    comp_attr = [[0.0] * 5 for _ in range(nl)]
+    trace = [[] for _ in range(nl)]
+    total_sum = 0.0
+    wl_bits_sum = 0.0
+    for d in range(draws):
+        rng = Pcg32.seeded(engine_draw_seed(seed, d))
+        draw_total = 0.0
+        draw_wl = 0.0
+        for i in range(nl):
+            l = t['layers'][i]
+            threshold, pinj = decisions[i]
+            dmin = max(int(threshold), 1)
+            moved_vh = 0.0
+            wl_vol = 0.0
+            wl_msgs = 0
+            for h in range(dmin, HOP_BUCKETS + 1):
+                e_vh = l['elig_vol_hops'][h - 1]
+                e_v = l['elig_vol'][h - 1]
+                if e_v <= 0.0:
+                    # Volume-less hop mass: move its expectation, no
+                    # messages to flip (exactly the analytical model).
+                    if e_vh > 0.0:
+                        moved_vh += pinj * e_vh
+                    continue
+                if pinj <= 0.0:
+                    continue
+                n_msgs = max(math.ceil(e_v / ENGINE_MESSAGE_BITS), 1)
+                msg_bits = e_v / n_msgs
+                msg_vh = e_vh / n_msgs
+                for _ in range(n_msgs):
+                    if rng.coin(pinj):
+                        wl_vol += msg_bits
+                        moved_vh += msg_vh
+                        wl_msgs += 1
+            t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / t['nop_agg_bw']
+            t_wl = wl_vol / wl_bw if wl_vol > 0.0 else 0.0
+            comps = [l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl]
+            k_best = 0
+            for k in range(1, 5):
+                if comps[k] > comps[k_best]:
+                    k_best = k
+            lat = comps[k_best]
+            layer_lat_sum[i] += lat
+            comp_attr[i][k_best] += lat
+            draw_total += lat
+            draw_wl += wl_vol
+            t_wait = (t_wl * (wl_msgs - 1) / (2.0 * wl_msgs)) if wl_msgs > 0 else 0.0
+            trace[i].append({'wl_bits': wl_vol, 't_serialize': t_wl,
+                             't_wait': t_wait, 'backoffs': max(wl_msgs - 1, 0),
+                             't_nop_residual': t_nop})
+        total_sum += draw_total
+        wl_bits_sum += draw_wl
+    dn = float(draws)
+    shares = [0.0] * 5
+    for attr in comp_attr:
+        for k in range(5):
+            shares[k] += attr[k]
+    if total_sum > 0.0:
+        shares = [s / total_sum for s in shares]
+    bottleneck = []
+    for attr in comp_attr:
+        k_best = 0
+        for k in range(1, 5):
+            if attr[k] > attr[k_best]:
+                k_best = k
+        bottleneck.append(k_best)
+    result = {'total_s': total_sum / dn, 'shares': shares,
+              'wl_bits': wl_bits_sum / dn, 'bottleneck': bottleneck,
+              'layer_latency': [x / dn for x in layer_lat_sum]}
+    return result, trace
+
+
+def trace_mean(samples, key):
+    """LayerTrace::mean_* — accumulate in sample order, divide once."""
+    acc = 0.0
+    n = 0
+    for s in samples:
+        acc += s[key]
+        n += 1
+    return acc / n if n else 0.0
+
+
+FEEDBACK_STEP_CLAMP = (0.5, 2.0)
+
+
+def feedback_decisions(t, wl_bw, draws, seed, iters=8,
+                       max_threshold=HOP_BUCKETS, pricer='stochastic'):
+    """FeedbackPolicy::decide_with — greedy seed, trace-observed pinj
+    re-fit (pinj' = pinj * sqrt(t_nop/t_wl), step-clamped to [0.5, 2]),
+    best decision vector kept under the pricing engine. pricer names
+    the backend the best-of selection evaluates under."""
+    def price(decisions):
+        if pricer == 'analytical':
+            return evaluate_policy(t, decisions, wl_bw)['total_s']
+        return stochastic_engine_evaluate(t, decisions, wl_bw, draws,
+                                          seed)[0]['total_s']
+
+    greedy = greedy_decisions(t, wl_bw, max_threshold)
+    best = list(greedy)
+    best_total = price(best)
+    current = list(greedy)
+    for _ in range(iters):
+        _, trace = stochastic_engine_evaluate(t, current, wl_bw, draws, seed)
+        nxt = list(current)
+        changed = False
+        for i, (d, p) in enumerate(nxt):
+            if p <= 0.0:
+                continue
+            t_wl = trace_mean(trace[i], 't_serialize')
+            t_nop = trace_mean(trace[i], 't_nop_residual')
+            if t_wl <= 0.0:
+                continue
+            lo, hi = FEEDBACK_STEP_CLAMP
+            ratio = _clamp(math.sqrt(t_nop / t_wl), lo, hi)
+            pn = _clamp(p * ratio, 0.0, 1.0)
+            if pn != p:
+                nxt[i] = (d, pn)
+                changed = True
+        if not changed:
+            break
+        total = price(nxt)
+        if total < best_total:
+            best_total = total
+            best = list(nxt)
+        current = nxt
+    return best
+
+
+def backend_for_workload(draws, seed, workload):
+    """EvalBackend::for_workload — the per-workload stochastic seed."""
+    return draws, derive_seed(seed, workload)
 
 
 def sweep_best(t, bw, thresholds=range(1, 5), pinjs=None):

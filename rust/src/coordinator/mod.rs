@@ -18,6 +18,12 @@
 //! (`CampaignSpec::comap`). Whatever the objective, [`Prepared::wired`]
 //! is always the *wired-objective* mapping's baseline, so co-optimized
 //! and sequential arms share one wired reference.
+//!
+//! Evaluation itself goes through the
+//! [`crate::sim::engine::EvalEngine`] trait: [`MapSearch::backend`]
+//! names the backend (`analytical` | `stochastic:draws[:seed]`) a
+//! preparation serves, [`Prepared::backend`] records it, and the
+//! campaign/experiment layers price grids and policies through it.
 
 pub mod loadbalance;
 
@@ -34,6 +40,7 @@ use crate::mapping::mapper::{anneal, SaOptions};
 use crate::mapping::{layer_sequential, Mapping};
 use crate::runtime::Runtime;
 use crate::sim::cost::{build_tensors, CostTensors};
+use crate::sim::engine::EvalBackend;
 use crate::sim::{evaluate_wired, EvalResult};
 use crate::util::anneal::derive_seed;
 use crate::util::threadpool::{default_workers, parallel_map};
@@ -61,6 +68,12 @@ pub struct MapSearch {
     /// Grid axes the offload policies parameterize over.
     pub thresholds: Vec<u32>,
     pub pinjs: Vec<f64>,
+    /// Evaluation backend this preparation serves (recorded on
+    /// [`Prepared`]; scenario-driven runs derive per-workload
+    /// stochastic seeds). The wired reference itself is priced through
+    /// the engine trait but is deterministic on every backend — at
+    /// zero offload no injection coin ever fires.
+    pub backend: EvalBackend,
 }
 
 /// A workload prepared for experiments: mapped and tensorized.
@@ -78,6 +91,9 @@ pub struct Prepared {
     /// Joint mapping × offload outcome when the search objective was
     /// [`MappingObjective::Hybrid`] (at [`MapSearch::wl_bw`]).
     pub comap: Option<ComapResult>,
+    /// The evaluation backend this workload was prepared for (already
+    /// workload-specialized for stochastic backends).
+    pub backend: EvalBackend,
 }
 
 /// The experiment coordinator.
@@ -140,6 +156,7 @@ impl Coordinator {
             wl_bw: self.cfg.wireless.bandwidth_bits,
             thresholds: self.cfg.sweep.thresholds.clone(),
             pinjs: self.cfg.sweep.injection_probs.clone(),
+            backend: EvalBackend::Analytical,
         }
     }
 
@@ -174,7 +191,11 @@ impl Coordinator {
             (layer_sequential(&workload, &self.pkg), 0.0)
         };
         let tensors = build_tensors(&workload, &mapping, &self.pkg, &elig)?;
-        let wired = evaluate_wired(&tensors);
+        // The shared wired reference, priced through the engine trait:
+        // deterministic on every backend (bit-for-bit evaluate_wired),
+        // so co-optimized, stochastic and analytical arms all divide by
+        // the same baseline.
+        let wired = search.backend.wired_reference(&tensors)?;
         let comap = match search.objective {
             MappingObjective::Wired => None,
             MappingObjective::Hybrid(refit) => {
@@ -197,6 +218,7 @@ impl Coordinator {
             wired,
             sa_initial_cost,
             comap,
+            backend: search.backend,
         })
     }
 
@@ -316,6 +338,12 @@ impl Coordinator {
                 }),
             })
             .collect();
+        // Stochastic units evaluate natively through the engine and
+        // never touch the runtime: skip artifact probing and hand
+        // every worker the cheap native twin.
+        if !matches!(spec.backend, crate::sim::engine::EvalBackend::Analytical) {
+            return run_campaign(&workloads, &spec, Runtime::native);
+        }
         // Fail fast on an unusable artifact with a clean error, by
         // constructing a runtime exactly the way each worker will (a
         // cheaper validate-only probe would miss load failures). The

@@ -37,6 +37,17 @@
 //! are deterministic pure functions of the tensors, so campaign results
 //! remain independent of the worker count.
 //!
+//! # The evaluation-backend axis
+//!
+//! [`CampaignSpec::backend`] selects the [`crate::sim::engine`]
+//! backend each unit evaluates with: `analytical` keeps the batched
+//! artifact grid path bit-for-bit, `stochastic:draws[:seed]` prices the
+//! grid *and* the policy stage through the per-message
+//! [`crate::sim::engine::StochasticEngine`] ([`engine_sweep`]).
+//! Stochastic seeds derive per workload, so campaign results remain
+//! independent of the worker count; the resolved per-unit backend
+//! label rides on every [`BandwidthResult`] and into CSV/JSON reports.
+//!
 //! # The comap stage
 //!
 //! With [`CampaignSpec::comap`] set, each unit additionally runs the
@@ -58,9 +69,10 @@ use crate::mapping::Mapping;
 use crate::report::Json;
 use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
 use crate::sim::cost::CostTensors;
+use crate::sim::engine::{EvalBackend, EvalEngine};
 use crate::sim::evaluate_wired;
 use crate::sim::policy::{
-    checked_speedup, evaluate_policies, LayerDecision, PolicySpec,
+    checked_speedup, evaluate_policies_backend, LayerDecision, PolicySpec,
 };
 use crate::util::threadpool::{default_workers, parallel_map_with};
 use crate::workloads::Workload;
@@ -101,6 +113,12 @@ pub struct CampaignSpec {
     pub map_temp_frac: f64,
     /// Base seed the per-workload comap seeds derive from.
     pub map_seed: u64,
+    /// Evaluation backend: `analytical` keeps the batched-artifact grid
+    /// path bit-for-bit; `stochastic:draws[:seed]` evaluates the grid
+    /// and the policy stage through the per-message
+    /// [`crate::sim::engine::StochasticEngine`] with per-workload
+    /// derived seeds (worker-count independent).
+    pub backend: EvalBackend,
 }
 
 impl Default for CampaignSpec {
@@ -118,6 +136,7 @@ impl Default for CampaignSpec {
             map_iters: 600,
             map_temp_frac: 0.25,
             map_seed: 0xC0DE,
+            backend: EvalBackend::Analytical,
         }
     }
 }
@@ -167,6 +186,39 @@ impl CampaignSpec {
             bail!(
                 "comap temperature fraction must be positive and finite, got {}",
                 self.map_temp_frac
+            );
+        }
+        if self.refine && !matches!(self.backend, EvalBackend::Analytical) {
+            // The adaptive refinement is the paper's offline-profiling
+            // step and deliberately prices on the analytical model; a
+            // stochastic grid sits below it by the Jensen gap, so the
+            // best_speedup comparison would report the gap as a
+            // refinement win. Reject the combination instead of
+            // contaminating reports.
+            bail!(
+                "the refinement stage prices on the analytical model and \
+                 cannot be compared against a {} grid; drop --refine or \
+                 use the analytical backend",
+                self.backend.label()
+            );
+        }
+        if self.comap.is_some() && !matches!(self.backend, EvalBackend::Analytical) {
+            // Same contamination as refine: the joint search prices
+            // through the analytical engine, so its speedup would sit
+            // next to Jensen-gapped stochastic grid/policy speedups in
+            // the same unit and systematically overstate its advantage.
+            bail!(
+                "the comap stage prices on the analytical model and cannot \
+                 be compared against a {} grid; drop the comap stage or \
+                 use the analytical backend",
+                self.backend.label()
+            );
+        }
+        if self.comap == Some(PolicySpec::Feedback) {
+            bail!(
+                "the comap re-fit runs once per placement move and must \
+                 stay closed-form; the feedback policy is not usable as a \
+                 re-fit"
             );
         }
         Ok(())
@@ -256,6 +308,10 @@ pub struct BandwidthResult {
     pub policies: Vec<PolicyOutcome>,
     /// Joint mapping × offload outcome (when `CampaignSpec::comap`).
     pub comap: Option<ComapOutcome>,
+    /// The resolved per-unit evaluation backend label (stochastic
+    /// backends carry the workload-derived seed) — the backend column
+    /// of campaign CSV/JSON reports.
+    pub backend: String,
 }
 
 /// Margin a refined (f64) speedup must clear over the grid's f32-ABI
@@ -367,6 +423,7 @@ impl CampaignResult {
                         let best = b.sweep.best_point();
                         let mut obj = vec![
                             ("bandwidth_bits".into(), Json::Num(b.bandwidth)),
+                            ("backend".into(), Json::Str(b.backend.clone())),
                             (
                                 "best".into(),
                                 Json::Obj(vec![
@@ -503,6 +560,10 @@ impl CampaignResult {
                     Some(p) => Json::Str(format!("hybrid:{}", p.name())),
                 },
             ),
+            (
+                "eval_backend".into(),
+                Json::Str(self.spec.backend.label()),
+            ),
             ("workloads".into(), Json::Arr(workloads)),
         ])
     }
@@ -557,19 +618,82 @@ pub fn eval_unit(
             });
         }
     }
-    let best = match points
+    let best = best_point_index(&points)?;
+    Ok(SweepResult {
+        points,
+        t_wired,
+        best,
+    })
+}
+
+/// NaN-safe best-point selection shared by the artifact-batched and
+/// engine-native sweep paths: a NaN speedup never wins, an all-NaN
+/// grid is an error.
+fn best_point_index(points: &[SweepPoint]) -> Result<usize> {
+    match points
         .iter()
         .enumerate()
         .filter(|(_, p)| !p.speedup.is_nan())
         .max_by(|a, b| a.1.speedup.total_cmp(&b.1.speedup))
         .map(|(i, _)| i)
     {
-        Some(i) => i,
+        Some(i) => Ok(i),
         None => bail!(
             "all {} grid points evaluated to NaN speedup (degenerate tensors?)",
             points.len()
         ),
-    };
+    }
+}
+
+/// Evaluate one (workload, bandwidth) unit's grid natively through an
+/// [`EvalEngine`] — the stochastic-backend twin of [`eval_unit`]. Each
+/// grid point becomes a uniform per-layer decision vector priced by
+/// the engine; speedups divide the deterministic wired reference by
+/// the engine's total, so analytical and stochastic sweeps share one
+/// baseline.
+pub fn engine_sweep(
+    tensors: &CostTensors,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    wl_bw: f64,
+    engine: &dyn EvalEngine,
+) -> Result<SweepResult> {
+    if thresholds.is_empty() || pinjs.is_empty() {
+        bail!(
+            "sweep grid is empty: {} thresholds x {} injection probabilities",
+            thresholds.len(),
+            pinjs.len()
+        );
+    }
+    let t_wired = evaluate_wired(tensors).total_s;
+    let mut points = Vec::with_capacity(thresholds.len() * pinjs.len());
+    for &t in thresholds {
+        for &p in pinjs {
+            let decisions = vec![
+                LayerDecision {
+                    threshold: t,
+                    pinj: p,
+                };
+                tensors.layers.len()
+            ];
+            let r = engine.evaluate(tensors, &decisions, wl_bw)?.result;
+            let speedup = if r.total_s > 0.0 {
+                t_wired / r.total_s
+            } else {
+                f64::NAN
+            };
+            points.push(SweepPoint {
+                threshold: t,
+                pinj: p,
+                wl_bw,
+                total_s: r.total_s,
+                speedup,
+                shares: r.shares,
+                wl_bits: r.wl_bits,
+            });
+        }
+    }
+    let best = best_point_index(&points)?;
     Ok(SweepResult {
         points,
         t_wired,
@@ -605,6 +729,7 @@ where
         Option<AdaptiveResult>,
         Vec<PolicyOutcome>,
         Option<ComapOutcome>,
+        String,
     );
     let unit_results: Vec<Result<UnitResult>> = parallel_map_with(
         n_units,
@@ -613,13 +738,26 @@ where
         |rt: &mut Runtime, u| {
             let (wi, bi) = (u / nb, u % nb);
             let bw = spec.bandwidths[bi];
-            let sweep = eval_unit(
-                rt,
-                workloads[wi].tensors,
-                &spec.thresholds,
-                &spec.pinjs,
-                bw,
-            )?;
+            // The per-unit backend: stochastic seeds specialize to the
+            // workload, so units reproduce regardless of which worker
+            // claims them.
+            let unit_backend = spec.backend.for_workload(&workloads[wi].name);
+            let sweep = match &unit_backend {
+                EvalBackend::Analytical => eval_unit(
+                    rt,
+                    workloads[wi].tensors,
+                    &spec.thresholds,
+                    &spec.pinjs,
+                    bw,
+                )?,
+                stochastic => engine_sweep(
+                    workloads[wi].tensors,
+                    &spec.thresholds,
+                    &spec.pinjs,
+                    bw,
+                    stochastic.engine().as_ref(),
+                )?,
+            };
             let refined = if spec.refine {
                 Some(adaptive_search(
                     workloads[wi].tensors,
@@ -631,17 +769,19 @@ where
                 None
             };
             // The policy axis: price each requested offload policy
-            // natively (f64), per unit — deterministic, so results stay
-            // independent of worker interleaving.
+            // natively (f64) through the unit's backend engine, per
+            // unit — deterministic, so results stay independent of
+            // worker interleaving.
             let policies = if spec.policies.is_empty() {
                 Vec::new()
             } else {
-                evaluate_policies(
+                evaluate_policies_backend(
                     workloads[wi].tensors,
                     bw,
                     &spec.policies,
                     &spec.thresholds,
                     &spec.pinjs,
+                    &unit_backend,
                 )?
                 .into_iter()
                 .map(|e| PolicyOutcome {
@@ -693,7 +833,7 @@ where
                     workloads[wi].name
                 ),
             };
-            Ok((sweep, refined, policies, comap))
+            Ok((sweep, refined, policies, comap, unit_backend.label()))
         },
     );
 
@@ -708,7 +848,7 @@ where
             .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
         let mut per_bw = Vec::with_capacity(nb);
         for &bw in &spec.bandwidths {
-            let (sweep, refined, policies, comap) = units
+            let (sweep, refined, policies, comap, backend) = units
                 .next()
                 .expect("unit count matches cross-product")?;
             per_bw.push(BandwidthResult {
@@ -717,6 +857,7 @@ where
                 refined,
                 policies,
                 comap,
+                backend,
             });
         }
         aggregated.push(WorkloadCampaign {
@@ -942,6 +1083,109 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("comap") && err.contains("context"), "{err}");
+    }
+
+    #[test]
+    fn engine_sweep_matches_eval_unit_best_on_analytical() {
+        // The engine-native sweep and the artifact-batched unit agree
+        // on the best point up to the f32 artifact ABI round-trip.
+        let ta = tensors(1.0);
+        let s = spec();
+        let rt = Runtime::native();
+        let batched = eval_unit(&rt, &ta, &s.thresholds, &s.pinjs, 64e9).unwrap();
+        let native = engine_sweep(
+            &ta,
+            &s.thresholds,
+            &s.pinjs,
+            64e9,
+            crate::sim::engine::EvalBackend::Analytical.engine().as_ref(),
+        )
+        .unwrap();
+        assert_eq!(native.points.len(), batched.points.len());
+        let (b, n) = (batched.best_point(), native.best_point());
+        assert_eq!((b.threshold, b.pinj), (n.threshold, n.pinj));
+        assert!((b.speedup - n.speedup).abs() <= 1e-3 * n.speedup.max(1.0));
+    }
+
+    #[test]
+    fn stochastic_backend_deterministic_across_worker_counts() {
+        // Per-workload derived engine seeds keep stochastic campaigns
+        // independent of which worker claims which unit.
+        let (ta, tb) = (tensors(1.0), tensors(3.0));
+        let workloads = vec![
+            CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None },
+            CampaignWorkload { name: "b".into(), tensors: &tb, t_wired: None, comap: None },
+        ];
+        let backend = EvalBackend::Stochastic { draws: 6, seed: 0xFEED };
+        let mut s1 = spec();
+        s1.workers = 1;
+        s1.backend = backend;
+        let mut s4 = spec();
+        s4.workers = 4;
+        s4.backend = backend;
+        let r1 = run_campaign(&workloads, &s1, Runtime::native).unwrap();
+        let r4 = run_campaign(&workloads, &s4, Runtime::native).unwrap();
+        for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+            for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+                assert_eq!(x.backend, y.backend);
+                assert!(x.backend.starts_with("stochastic:6:"), "{}", x.backend);
+                assert_eq!(x.sweep.best, y.sweep.best);
+                for (p, q) in x.sweep.points.iter().zip(&y.sweep.points) {
+                    assert_eq!(p.total_s, q.total_s);
+                    assert_eq!(p.speedup, q.speedup);
+                }
+                for (p, q) in x.policies.iter().zip(&y.policies) {
+                    assert_eq!(p.speedup, q.speedup);
+                    assert_eq!(p.decisions, q.decisions);
+                }
+            }
+        }
+        // The two workloads drew different derived seeds.
+        assert_ne!(
+            r1.workloads[0].per_bw[0].backend,
+            r1.workloads[1].per_bw[0].backend
+        );
+    }
+
+    #[test]
+    fn analytical_units_label_their_backend() {
+        let ta = tensors(1.0);
+        let workloads = vec![CampaignWorkload { name: "a".into(), tensors: &ta, t_wired: None, comap: None }];
+        let r = run_campaign(&workloads, &spec(), Runtime::native).unwrap();
+        for b in &r.workloads[0].per_bw {
+            assert_eq!(b.backend, "analytical");
+        }
+        let text = r.to_json().render();
+        assert!(text.contains("\"eval_backend\": \"analytical\""), "{text}");
+    }
+
+    #[test]
+    fn refine_on_stochastic_backend_is_rejected() {
+        // The refinement stage is analytical by design; comparing it
+        // against a Jensen-gapped stochastic grid would report the gap
+        // as a refinement win.
+        let mut s = spec();
+        s.refine = true;
+        s.backend = EvalBackend::Stochastic { draws: 4, seed: 1 };
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("refinement") && err.contains("analytical"), "{err}");
+        s.backend = EvalBackend::Analytical;
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn comap_on_stochastic_backend_or_with_feedback_refit_is_rejected() {
+        let mut s = spec();
+        s.comap = Some(PolicySpec::Greedy);
+        s.backend = EvalBackend::Stochastic { draws: 4, seed: 1 };
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("comap") && err.contains("analytical"), "{err}");
+        s.backend = EvalBackend::Analytical;
+        s.validate().unwrap();
+        // The per-move re-fit must stay closed-form.
+        s.comap = Some(PolicySpec::Feedback);
+        let err = s.validate().unwrap_err().to_string();
+        assert!(err.contains("closed-form"), "{err}");
     }
 
     #[test]

@@ -35,8 +35,8 @@ use crate::sim::cost::CostTensors;
 use anyhow::Result;
 
 pub use campaign::{
-    run_campaign, BandwidthResult, CampaignResult, CampaignSpec, CampaignWorkload,
-    ComapInput, ComapOutcome, PolicyOutcome, WorkloadCampaign,
+    engine_sweep, run_campaign, BandwidthResult, CampaignResult, CampaignSpec,
+    CampaignWorkload, ComapInput, ComapOutcome, PolicyOutcome, WorkloadCampaign,
 };
 
 /// One evaluated grid point.

@@ -122,7 +122,7 @@ mod tests {
     }
 
     fn result(wl_bits: f64) -> EvalResult {
-        EvalResult::from_layers_pub(&[[1e-6, 0.0, 0.0, 0.0, 0.0]], wl_bits)
+        EvalResult::from_layers(&[[1e-6, 0.0, 0.0, 0.0, 0.0]], wl_bits)
     }
 
     #[test]

@@ -12,7 +12,8 @@ use crate::dse::{sweep_grid, SweepResult};
 use crate::energy::{EnergyBreakdown, EnergyModel};
 use crate::runtime::Runtime;
 use crate::sim::cost::CostTensors;
-use crate::sim::policy::{evaluate_policies, PolicyEval, PolicySpec};
+use crate::sim::engine::{AnalyticalEngine, EvalEngine};
+use crate::sim::policy::{evaluate_policies, LayerDecision, PolicyEval, PolicySpec};
 use crate::sim::stochastic;
 use anyhow::Result;
 use std::rc::Rc;
@@ -119,8 +120,8 @@ pub fn policy_ablation(
 }
 
 /// Cross-validate the expected-value artifact path against the
-/// stochastic per-message mode; returns (expected_s, stochastic_s
-/// averaged over `seeds` seeds).
+/// flow-level stochastic per-message mode; returns (expected_s,
+/// stochastic_s averaged over `seeds` seeds).
 pub fn expected_vs_stochastic(
     p: &Prepared,
     pkg: &Package,
@@ -133,6 +134,30 @@ pub fn expected_vs_stochastic(
         acc += stochastic::simulate(&p.workload, &p.mapping, pkg, w, s)?.total_s;
     }
     Ok((expected.total_s, acc / seeds.max(1) as f64))
+}
+
+/// Cross-validate the analytical engine against any trace-emitting
+/// engine on the config's uniform decision vector; returns
+/// (analytical_s, engine_s, total backoffs observed). The
+/// engine-backend twin of [`expected_vs_stochastic`] — same
+/// convergence contract, but tensor-level and therefore runnable for
+/// any `EvalEngine`.
+pub fn expected_vs_engine(
+    p: &Prepared,
+    w: &WirelessConfig,
+    engine: &dyn EvalEngine,
+) -> Result<(f64, f64, u64)> {
+    let decisions = vec![
+        LayerDecision {
+            threshold: w.distance_threshold,
+            pinj: w.injection_prob,
+        };
+        p.tensors.layers.len()
+    ];
+    let expected = AnalyticalEngine.evaluate(&p.tensors, &decisions, w.bandwidth_bits)?;
+    let out = engine.evaluate(&p.tensors, &decisions, w.bandwidth_bits)?;
+    let backoffs = out.trace.as_ref().map(|t| t.total_backoffs()).unwrap_or(0);
+    Ok((expected.result.total_s, out.result.total_s, backoffs))
 }
 
 /// Energy/EDP comparison for one workload at a wireless config:

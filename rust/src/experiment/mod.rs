@@ -10,14 +10,16 @@
 //! * [`Experiment`] — one trait (`name`/`describe`/`run`) implemented
 //!   by every evaluation; [`registry`] lists the built-ins (`fig2`,
 //!   `fig4`, `fig5`, `campaign`, `energy`, `stochastic-validation`,
-//!   `mapping-ablation`, `policy-ablation`). Adding a scenario to the
-//!   repo means implementing this trait once, not threading a method
-//!   through five layers.
+//!   `mapping-ablation`, `policy-ablation`, `policy-feedback`). Adding
+//!   a scenario to the repo means implementing this trait once, not
+//!   threading a method through five layers.
 //! * [`Scenario`] — the declarative spec of *what* to evaluate
-//!   (workloads, bandwidths, grid, offload-policy axis, seeds, optimize
-//!   flag, experiment list), built fluently in code
-//!   ([`Scenario::builder`]) or parsed from a `[scenario]` TOML section
-//!   ([`Scenario::from_file`]).
+//!   (workloads, bandwidths, grid, offload-policy axis, evaluation
+//!   backend, seeds, optimize flag, experiment list), built fluently in
+//!   code ([`Scenario::builder`]) or parsed from a `[scenario]` TOML
+//!   section ([`Scenario::from_file`]). `Scenario.backend` selects the
+//!   [`crate::sim::engine::EvalBackend`] every sweep and policy pricing
+//!   in the run evaluates through.
 //! * [`store::RunStore`] — every run persists
 //!   `results/<run-id>/manifest.json` plus per-experiment JSON/CSVs,
 //!   and `wisper compare` diffs two manifests' metric summaries
@@ -106,20 +108,36 @@ impl<'a> ExperimentCtx<'a> {
     }
 
     /// Full (threshold x pinj) grid sweep for `prepared[i]` at `bw`,
-    /// memoized across this scenario's experiments.
+    /// memoized across this scenario's experiments. Evaluates through
+    /// the backend the workload was *prepared* for
+    /// ([`Prepared::backend`], already workload-specialized — the one
+    /// source of truth, filled from `Scenario.backend` by
+    /// [`run_scenario`]): the analytical backend keeps the batched
+    /// artifact path, a stochastic backend sweeps natively through the
+    /// per-message engine and never touches the runtime.
     pub fn sweep(&self, i: usize, bw: f64) -> Result<Rc<SweepResult>> {
         let key = (i, bw.to_bits());
         if let Some(r) = self.sweep_cache.borrow().get(&key) {
             return Ok(Rc::clone(r));
         }
         let s = self.scenario;
-        let r = Rc::new(figures::fig5_grid(
-            self.runtime()?,
-            &self.prepared[i],
-            &s.thresholds,
-            &s.injection_probs,
-            bw,
-        )?);
+        let r = match self.prepared[i].backend {
+            crate::sim::engine::EvalBackend::Analytical => figures::fig5_grid(
+                self.runtime()?,
+                &self.prepared[i],
+                &s.thresholds,
+                &s.injection_probs,
+                bw,
+            )?,
+            stochastic => crate::dse::engine_sweep(
+                &self.prepared[i].tensors,
+                &s.thresholds,
+                &s.injection_probs,
+                bw,
+                stochastic.engine().as_ref(),
+            )?,
+        };
+        let r = Rc::new(r);
         self.sweep_cache.borrow_mut().insert(key, Rc::clone(&r));
         Ok(r)
     }
@@ -168,6 +186,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(builtin::StochasticValidation),
         Box::new(builtin::MappingAblation),
         Box::new(builtin::PolicyAblation),
+        Box::new(builtin::PolicyFeedback),
     ]
 }
 

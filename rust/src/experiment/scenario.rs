@@ -13,6 +13,7 @@
 //! thresholds = [1, 2, 3, 4]
 //! injection_probs = [0.1, 0.2, 0.4]
 //! policies = ["static", "greedy", "controller", "oracle"]
+//! backend = "analytical"            # or "stochastic:draws[:seed]"
 //! seeds = 8
 //! optimize = true
 //! map_objective = "hybrid:greedy"   # or "wired" (default)
@@ -22,6 +23,9 @@
 //! refine = false
 //! workers = 0
 //! ```
+//!
+//! Unknown `[scenario]` keys are hard errors (a typo like `map_itres`
+//! must not silently run the default evaluation).
 //!
 //! The same file may carry the usual `[arch]`/`[wireless]`/`[sweep]`/
 //! `[mapper]` sections; `wisper run --scenario` feeds it through
@@ -33,6 +37,7 @@ use crate::coordinator::{Coordinator, MapSearch};
 use crate::mapping::comap::MappingObjective;
 use crate::mapping::mapper::SaOptions;
 use crate::report::Json;
+use crate::sim::engine::EvalBackend;
 use crate::sim::policy::PolicySpec;
 use crate::util::anneal::derive_seed;
 use crate::workloads::WORKLOAD_NAMES;
@@ -55,9 +60,14 @@ pub struct Scenario {
     /// Injection-probability axis of the sweep grid.
     pub injection_probs: Vec<f64>,
     /// Offload-policy axis (`sim::policy` names: `static`, `greedy`,
-    /// `controller`, `oracle`) used by the `campaign` and
-    /// `policy-ablation` experiments.
+    /// `controller`, `oracle`, plus the opt-in `feedback`) used by the
+    /// `campaign`, `policy-ablation` and `policy-feedback`
+    /// experiments.
     pub policies: Vec<String>,
+    /// Evaluation backend (`analytical` | `stochastic:draws[:seed]`) —
+    /// the [`crate::sim::engine::EvalBackend`] axis the campaign
+    /// grids, policy pricing and stochastic validation run through.
+    pub backend: String,
     /// Stochastic-validation seeds to average.
     pub seeds: u64,
     /// SA-optimize mappings (false = layer-sequential baseline).
@@ -109,6 +119,7 @@ impl Scenario {
                 .iter()
                 .map(|p| p.name().to_string())
                 .collect(),
+            backend: "analytical".to_string(),
             seeds: 8,
             optimize: true,
             map_objective: "wired".to_string(),
@@ -128,16 +139,49 @@ impl Scenario {
         }
     }
 
+    /// Every key the `[scenario]` section understands — the unknown-key
+    /// check below errors against this list so typos can't silently
+    /// fall back to defaults.
+    pub const TOML_KEYS: [&'static str; 16] = [
+        "name",
+        "workloads",
+        "experiments",
+        "bandwidths",
+        "thresholds",
+        "injection_probs",
+        "policies",
+        "backend",
+        "seeds",
+        "optimize",
+        "map_objective",
+        "map_iters",
+        "map_seed",
+        "map_temp_frac",
+        "refine",
+        "workers",
+    ];
+
     /// Read the `[scenario]` section of a TOML document (grid axes and
     /// workers default from `cfg.sweep` when absent). Errors if the
     /// document has no `[scenario]` keys at all — a typo'd section name
-    /// must not silently run the full default evaluation.
+    /// must not silently run the full default evaluation — and on any
+    /// unknown `[scenario]` key, so `map_itres = 400` is a hard error
+    /// instead of a silently-ignored knob.
     pub fn from_toml_doc(doc: &TomlDoc, cfg: &Config) -> Result<Self> {
         if !doc.keys().any(|k| k.starts_with("scenario.")) {
             bail!(
                 "no [scenario] section found (expected keys like \
                  scenario.workloads, scenario.experiments)"
             );
+        }
+        for key in doc.keys().filter(|k| k.starts_with("scenario.")) {
+            let short = &key["scenario.".len()..];
+            if !Self::TOML_KEYS.contains(&short) {
+                bail!(
+                    "[scenario]: unknown key {short:?}; valid keys: {}",
+                    Self::TOML_KEYS.join(", ")
+                );
+            }
         }
         let mut s = Self::from_config(cfg);
         if let Some(v) = doc.get_str("scenario.name")? {
@@ -169,6 +213,9 @@ impl Scenario {
         }
         if let Some(v) = doc.get_list_str("scenario.policies")? {
             s.policies = v;
+        }
+        if let Some(v) = doc.get_str("scenario.backend")? {
+            s.backend = v.to_string();
         }
         if let Some(v) = doc.get_u64("scenario.seeds")? {
             s.seeds = v;
@@ -264,11 +311,43 @@ impl Scenario {
         for p in &self.policies {
             PolicySpec::parse(p).context("scenario.policies")?;
         }
+        let backend = EvalBackend::parse(&self.backend).context("scenario.backend")?;
+        if self.refine && !matches!(backend, EvalBackend::Analytical) {
+            bail!(
+                "scenario.refine prices on the analytical model and cannot \
+                 be compared against a {} grid; drop refine or use \
+                 backend = \"analytical\"",
+                backend.label()
+            );
+        }
         if self.seeds == 0 {
             bail!("scenario.seeds must be >= 1");
         }
-        MappingObjective::parse(&self.map_objective)
+        let objective = MappingObjective::parse(&self.map_objective)
             .context("scenario.map_objective")?;
+        if objective.is_hybrid() && !matches!(backend, EvalBackend::Analytical) {
+            bail!(
+                "scenario.map_objective {:?} prices the joint search on the \
+                 analytical model and cannot be compared against a {} grid; \
+                 use map_objective = \"wired\" or backend = \"analytical\"",
+                self.map_objective,
+                backend.label()
+            );
+        }
+        if !matches!(backend, EvalBackend::Analytical)
+            && self.experiments.iter().any(|e| e == "mapping-ablation")
+        {
+            // Same rule as refine/hybrid objectives: the ablation's
+            // joint-search arms price analytically and would sit next
+            // to Jensen-gapped stochastic sweep metrics in one run.
+            bail!(
+                "the mapping-ablation experiment prices its mapping arms on \
+                 the analytical model and cannot be compared against a {} \
+                 grid; drop it from scenario.experiments or use \
+                 backend = \"analytical\"",
+                backend.label()
+            );
+        }
         if self.map_iters == Some(0) {
             bail!(
                 "scenario.map_iters must be >= 1 (set optimize = false to \
@@ -298,6 +377,12 @@ impl Scenario {
         MappingObjective::parse(&self.map_objective)
     }
 
+    /// The evaluation backend as a parsed axis value (spelling
+    /// validated by [`Self::normalize_and_validate`]).
+    pub fn eval_backend(&self) -> Result<EvalBackend> {
+        EvalBackend::parse(&self.backend)
+    }
+
     /// The full mapping search one workload of this scenario runs:
     /// scenario knobs (falling back to the coordinator's `[mapper]`
     /// config), the scenario's grid/bandwidth axes, and a per-workload
@@ -319,6 +404,9 @@ impl Scenario {
             wl_bw: self.bandwidths[0],
             thresholds: self.thresholds.clone(),
             pinjs: self.injection_probs.clone(),
+            // Stochastic backends specialize their seed per workload,
+            // like the mapping seeds above.
+            backend: self.eval_backend()?.for_workload(workload),
         })
     }
 
@@ -377,6 +465,7 @@ impl Scenario {
                         .collect(),
                 ),
             ),
+            ("backend".into(), Json::Str(self.backend.clone())),
             ("seeds".into(), Json::Num(self.seeds as f64)),
             ("optimize".into(), Json::Bool(self.optimize)),
             (
@@ -471,6 +560,13 @@ impl ScenarioBuilder {
         S: Into<String>,
     {
         self.scenario.policies = names.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Evaluation backend: `"analytical"` or
+    /// `"stochastic:draws[:seed]"` (validated by `build()`).
+    pub fn backend(mut self, backend: &str) -> Self {
+        self.scenario.backend = backend.to_string();
         self
     }
 

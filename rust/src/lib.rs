@@ -26,12 +26,26 @@
 //! new evaluation means implementing one trait, not threading a method
 //! through coordinator, CLI and report layers.
 //!
+//! Evaluation itself is ONE abstraction, the [`sim::engine::EvalEngine`]
+//! trait (`evaluate(tensors, decisions, wl_bw) -> EvalOutcome`), with
+//! two backends: the closed-form [`sim::engine::AnalyticalEngine`]
+//! (bit-for-bit the legacy `evaluate_wired`/`evaluate_expected`/
+//! `evaluate_policy` arithmetic) and the per-message
+//! [`sim::engine::StochasticEngine`] (deterministic per-draw seeds,
+//! per-layer [`sim::engine::MessageTrace`]s of serialization, waits,
+//! backoffs and residual NoP time). The
+//! [`sim::engine::EvalBackend`] axis (`analytical` |
+//! `stochastic:draws[:seed]`) selects the backend through
+//! [`coordinator::MapSearch`], `CampaignSpec::backend`,
+//! `Scenario.backend` and the CLI (`wisper run --backend`).
+//!
 //! The paper's future-work wired/wireless load balancing lives in
 //! [`sim::policy`]: an [`sim::policy::OffloadPolicy`] maps cost tensors
 //! to per-layer `(threshold, pinj)` decisions (`static` / `greedy` /
-//! `controller` / `oracle`), priced by [`sim::policy::evaluate_policy`]
-//! and threaded through campaigns, scenarios, the CLI (`--policies`)
-//! and reports.
+//! `controller` / `oracle`, plus the trace-driven
+//! [`sim::policy::FeedbackPolicy`] closing the loop over the
+//! stochastic engine), priced through the engine trait and threaded
+//! through campaigns, scenarios, the CLI (`--policies`) and reports.
 //!
 //! The mapping search is the third first-class search subsystem (after
 //! the sweep and policy engines): a generic annealer core

@@ -37,7 +37,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "bws", takes_value: true, help: "comma-separated wireless bandwidths in bits/s" },
         OptSpec { name: "threshold", takes_value: true, help: "distance threshold in NoP hops" },
         OptSpec { name: "pinj", takes_value: true, help: "injection probability [0,1]" },
-        OptSpec { name: "policies", takes_value: true, help: "comma-separated offload policies (static,greedy,controller,oracle)" },
+        OptSpec { name: "policies", takes_value: true, help: "comma-separated offload policies (static,greedy,controller,oracle,feedback)" },
+        OptSpec { name: "backend", takes_value: true, help: "evaluation backend: analytical | stochastic[:draws[:seed]]" },
         OptSpec { name: "seeds", takes_value: true, help: "stochastic seeds to average" },
         OptSpec { name: "sa-iters", takes_value: true, help: "simulated-annealing iterations" },
         OptSpec { name: "no-opt", takes_value: false, help: "layer-sequential mapping (skip SA)" },
@@ -202,6 +203,11 @@ fn apply_flag_overrides(
         // Scenario::normalize_and_validate.
         s.policies = cli::parse_comma_list("--policies", list)?;
     }
+    if let Some(b) = p.get("backend") {
+        // Spelling validated by Scenario::normalize_and_validate
+        // (EvalBackend::parse).
+        s.backend = b.to_string();
+    }
     if let Some(seeds) = p.get_usize("seeds")? {
         s.seeds = seeds as u64;
     }
@@ -269,11 +275,12 @@ fn cmd_run(p: &Parsed, legacy: Option<(&str, &str)>) -> Result<()> {
         Coordinator::new(cfg)?.with_artifact(p.get("artifact").map(String::from));
 
     println!(
-        "scenario {:?}: {} workloads x {} bandwidths, mapping {}, experiments: {}\n",
+        "scenario {:?}: {} workloads x {} bandwidths, mapping {}, backend {}, experiments: {}\n",
         scenario.name,
         scenario.workloads.len(),
         scenario.bandwidths.len(),
         scenario.map_objective,
+        scenario.backend,
         scenario.experiments.join(", "),
     );
     let store = RunStore::open_default();

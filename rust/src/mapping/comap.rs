@@ -17,8 +17,13 @@
 //!   policy (greedy water-filling by default: cheap and closed-form);
 //!   the fourth move re-solves the offload side alone with a stronger
 //!   candidate (per-layer oracle, or the best static pair).
-//! * **Cost** — [`evaluate_policy`] on the state's tensors: the same
-//!   expected-value hybrid arithmetic every other surface prices with.
+//! * **Cost** — the [`crate::sim::engine::AnalyticalEngine`] on the
+//!   state's tensors, priced through the
+//!   [`crate::sim::engine::EvalEngine`] trait: bit-for-bit the same
+//!   expected-value hybrid arithmetic every other surface prices with
+//!   (the annealer's inner loop stays on the closed form — a
+//!   stochastic cost would make acceptance tests noisy; stochastic
+//!   pricing of the *outcome* happens in the campaign policy stage).
 //!
 //! The search seeds from the best *decoupled pipeline* it knows: the
 //! base mapping (normally the wired-SA result) and the layer-sequential
@@ -42,8 +47,9 @@ use crate::config::WirelessConfig;
 use crate::mapping::mapper::perturb;
 use crate::mapping::Mapping;
 use crate::sim::cost::{build_tensors, CostTensors};
+use crate::sim::engine::{AnalyticalEngine, EvalEngine};
 use crate::sim::policy::{
-    decide_policy, evaluate_policies, evaluate_policy, LayerDecision, PolicySpec,
+    decide_policy, evaluate_policies, LayerDecision, PolicySpec,
 };
 use crate::util::anneal::{anneal as sa_anneal, AnnealOptions};
 use crate::util::rng::Pcg32;
@@ -70,15 +76,29 @@ impl MappingObjective {
     pub const DEFAULT_HYBRID_REFIT: PolicySpec = PolicySpec::Greedy;
 
     /// Parse `"wired"`, `"hybrid"` or `"hybrid:<policy>"`; the error
-    /// teaches the valid spellings.
+    /// teaches the valid spellings. The feedback policy is rejected as
+    /// a re-fit: it runs a stochastic observation loop per decision,
+    /// and the comap SA re-fits on ~3/4 of its moves — the refit must
+    /// stay closed-form (the trait-priced analytical cost this module
+    /// documents).
     pub fn parse(name: &str) -> Result<Self> {
         match name {
             "wired" => Ok(Self::Wired),
             "hybrid" => Ok(Self::Hybrid(Self::DEFAULT_HYBRID_REFIT)),
             other => match other.strip_prefix("hybrid:") {
-                Some(p) => Ok(Self::Hybrid(
-                    PolicySpec::parse(p).context("mapping objective re-fit policy")?,
-                )),
+                Some(p) => {
+                    let policy = PolicySpec::parse(p)
+                        .context("mapping objective re-fit policy")?;
+                    if policy == PolicySpec::Feedback {
+                        bail!(
+                            "hybrid:feedback is not a valid mapping objective: \
+                             the comap re-fit runs once per placement move and \
+                             must stay closed-form (use hybrid:greedy, \
+                             hybrid:oracle, hybrid:static or hybrid:controller)"
+                        );
+                    }
+                    Ok(Self::Hybrid(policy))
+                }
                 None => bail!(
                     "unknown mapping objective {name:?}; valid objectives: \
                      wired, hybrid, hybrid:<policy>"
@@ -252,6 +272,15 @@ pub fn co_anneal(
             opts.wl_bw
         );
     }
+    if opts.refit == PolicySpec::Feedback {
+        // Parse-level callers are already rejected by
+        // MappingObjective::parse; guard direct construction too.
+        bail!(
+            "the comap re-fit runs once per placement move and must stay \
+             closed-form; the feedback policy's stochastic observation \
+             loop is not usable as a re-fit"
+        );
+    }
     base.validate(wl, pkg).context("comap base mapping")?;
     // Decoupled seed: best (placement, policy) pair over the two
     // candidate placements x every built-in policy, strictly-better
@@ -345,7 +374,16 @@ pub fn co_anneal(
             if s.broken {
                 f64::INFINITY
             } else {
-                evaluate_policy(&s.tensors, &s.decisions, opts.wl_bw).total_s
+                // Priced through the engine trait (AnalyticalEngine is
+                // bit-for-bit evaluate_policy, so trajectories and the
+                // Python mirror parity are unchanged). The only error
+                // the analytical engine can return is a decision/layer
+                // length mismatch — a refit-stage bug that must stay
+                // loud, not cost INFINITY and silently stall the SA.
+                AnalyticalEngine
+                    .evaluate(&s.tensors, &s.decisions, opts.wl_bw)
+                    .map(|o| o.result.total_s)
+                    .expect("comap state decides every layer")
             }
         },
     )

@@ -1,0 +1,685 @@
+//! Unified evaluation engine: ONE trait, two backends.
+//!
+//! Every hybrid evaluation in the crate is "price a per-layer decision
+//! vector against a tensor set at a wireless bandwidth". The
+//! [`EvalEngine`] trait names that contract once
+//! (`evaluate(tensors, decisions, wl_bw) -> EvalOutcome`) and two
+//! backends implement it:
+//!
+//! * [`AnalyticalEngine`] — the closed-form expected-value model:
+//!   bit-for-bit [`evaluate_policy`] (and therefore bit-for-bit
+//!   [`evaluate_expected`](super::evaluate_expected) on uniform
+//!   decision vectors and [`evaluate_wired`](super::evaluate_wired) on
+//!   all-zero ones). Fast, deterministic, no trace.
+//! * [`StochasticEngine`] — the per-message coin-flip model (paper
+//!   §III-B2 criterion 3 as actually randomized) lifted from a
+//!   validation-only dead end to a first-class backend: eligible
+//!   traffic is chopped into [`MESSAGE_BITS`]-sized messages per
+//!   hop-distance bucket, each flips the layer's injection coin, and
+//!   the result is averaged over `draws` independent draws. Every
+//!   evaluation emits a [`MessageTrace`]: per-layer per-draw wireless
+//!   serialization, busy-channel wait, backoff (deferral) counts and
+//!   residual wired-NoP time — the observability signal the
+//!   [`FeedbackPolicy`](super::policy::FeedbackPolicy) closes its loop
+//!   on.
+//!
+//! The [`EvalBackend`] value (`analytical` |
+//! `stochastic:draws[:seed]`) is the axis threaded through
+//! [`crate::coordinator::MapSearch`], [`crate::dse::CampaignSpec`],
+//! [`crate::experiment::Scenario`] and the CLI (`wisper run
+//! --backend`). Stochastic campaign units derive per-workload seeds
+//! ([`EvalBackend::for_workload`]), so results stay independent of the
+//! worker count.
+//!
+//! CAUTION: `python/tools/cost_mirror.py` mirrors both engines (and
+//! the trace arithmetic) bit-exactly — checked by
+//! `mirror_checks_engine.py`; keep them in sync.
+
+use crate::sim::cost::{CostTensors, HOP_BUCKETS};
+use crate::sim::policy::{evaluate_policy, LayerDecision};
+use crate::sim::stochastic::MESSAGE_BITS;
+use crate::sim::EvalResult;
+use crate::util::anneal::derive_seed;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+
+/// One per-draw observation of one layer's wireless behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSample {
+    /// Bits this layer offloaded onto the shared medium this draw.
+    pub wl_bits: f64,
+    /// Serialization time of those bits (`wl_bits / wl_bw`) — the
+    /// component the latency model charges.
+    pub t_serialize: f64,
+    /// Mean busy-channel wait of a wireless message under serialized
+    /// token passing (uniform arrivals): observability only, never
+    /// added to the latency total (the paper's model charges
+    /// serialization, not queueing).
+    pub t_wait: f64,
+    /// Busy-medium deferrals: every wireless message after the first
+    /// found the token held and backed off once.
+    pub backoffs: u64,
+    /// Residual wired-NoP time after the offloaded volume.hops left
+    /// the mesh.
+    pub t_nop_residual: f64,
+}
+
+/// Per-layer trace: one [`TraceSample`] per draw.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTrace {
+    pub samples: Vec<TraceSample>,
+}
+
+impl LayerTrace {
+    /// Mean wireless serialization time over the draws.
+    pub fn mean_serialize(&self) -> f64 {
+        mean(self.samples.iter().map(|s| s.t_serialize))
+    }
+
+    /// Mean residual wired-NoP time over the draws.
+    pub fn mean_nop_residual(&self) -> f64 {
+        mean(self.samples.iter().map(|s| s.t_nop_residual))
+    }
+
+    /// Mean offloaded bits over the draws.
+    pub fn mean_wl_bits(&self) -> f64 {
+        mean(self.samples.iter().map(|s| s.wl_bits))
+    }
+
+    /// Total busy-medium deferrals across the draws.
+    pub fn total_backoffs(&self) -> u64 {
+        self.samples.iter().map(|s| s.backoffs).sum()
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut acc, mut n) = (0.0, 0u64);
+    for v in it {
+        acc += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Per-message trace of one stochastic evaluation: `layers[i]` holds
+/// layer `i`'s per-draw samples.
+#[derive(Debug, Clone)]
+pub struct MessageTrace {
+    /// Independent draws averaged into the scalar totals.
+    pub draws: usize,
+    pub layers: Vec<LayerTrace>,
+}
+
+impl MessageTrace {
+    /// Total busy-medium deferrals across all layers and draws.
+    pub fn total_backoffs(&self) -> u64 {
+        self.layers.iter().map(LayerTrace::total_backoffs).sum()
+    }
+
+    /// Mean per-draw busy-channel wait summed over layers.
+    pub fn mean_wait_s(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| mean(l.samples.iter().map(|s| s.t_wait)))
+            .sum()
+    }
+}
+
+/// What an engine evaluation produces: the scalar totals plus, for
+/// trace-emitting backends, the per-message observation record.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub result: EvalResult,
+    /// `Some` iff the backend observes individual messages
+    /// ([`StochasticEngine`]); the analytical closed form has no
+    /// messages to trace.
+    pub trace: Option<MessageTrace>,
+}
+
+/// The one evaluation contract: price a per-layer decision vector
+/// against a tensor set at a wireless bandwidth. (Report labels come
+/// from [`EvalBackend::label`], the axis value — not from the engine.)
+pub trait EvalEngine: Sync {
+    /// Evaluate `decisions` (one per tensor layer) at `wl_bw` bits/s.
+    ///
+    /// Errors if `decisions.len() != tensors.layers.len()` (a policy
+    /// must decide every layer).
+    fn evaluate(
+        &self,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome>;
+}
+
+/// The closed-form expected-value backend: bit-for-bit
+/// [`evaluate_policy`] behind the trait. The default engine everywhere
+/// an [`EvalBackend`] is not specified.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticalEngine;
+
+impl EvalEngine for AnalyticalEngine {
+    fn evaluate(
+        &self,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        if decisions.len() != tensors.layers.len() {
+            bail!(
+                "one offload decision per layer: got {} decisions for {} layers",
+                decisions.len(),
+                tensors.layers.len()
+            );
+        }
+        Ok(EvalOutcome {
+            result: evaluate_policy(tensors, decisions, wl_bw),
+            trace: None,
+        })
+    }
+}
+
+/// The per-message stochastic backend: every eligible hop-distance
+/// bucket is chopped into [`MESSAGE_BITS`]-sized messages, each flips
+/// the layer's injection coin, and `draws` independent draws are
+/// averaged. Per-draw seeds derive deterministically from `seed`, so
+/// identical `(tensors, decisions, wl_bw)` always reproduce identical
+/// totals *and* traces.
+///
+/// Aggregation: `total_s` is the mean of per-draw totals (a mean of
+/// per-layer maxima — the Jensen gap over the analytical expectation is
+/// preserved, which is why the stochastic mean upper-bounds the
+/// analytical total); `layer_latency[i]` is the per-draw mean of layer
+/// `i`'s bottleneck latency; `shares`/`bottleneck` attribute each
+/// draw's per-layer bottleneck component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StochasticEngine {
+    /// Independent draws to average (>= 1).
+    pub draws: usize,
+    /// Base seed; draw `d` runs on `Pcg32::seeded(seed ^ d * phi64)`.
+    pub seed: u64,
+}
+
+impl Default for StochasticEngine {
+    fn default() -> Self {
+        Self {
+            draws: DEFAULT_DRAWS,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+/// Default draw count when a stochastic engine is requested without
+/// one (the feedback policy's observer, `stochastic:` shorthand).
+pub const DEFAULT_DRAWS: usize = 32;
+/// Default stochastic base seed (per-workload seeds derive from it).
+pub const DEFAULT_SEED: u64 = 0x5EED;
+
+/// The fixed per-draw seed schedule (golden-ratio stride, mirrored by
+/// the Python cost mirror).
+fn draw_seed(seed: u64, draw: usize) -> u64 {
+    seed ^ (draw as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl EvalEngine for StochasticEngine {
+    fn evaluate(
+        &self,
+        t: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        if decisions.len() != t.layers.len() {
+            bail!(
+                "one offload decision per layer: got {} decisions for {} layers",
+                decisions.len(),
+                t.layers.len()
+            );
+        }
+        if self.draws == 0 {
+            bail!("stochastic engine needs at least one draw");
+        }
+        let nl = t.layers.len();
+        let mut layer_lat_sum = vec![0.0f64; nl];
+        // Latency attributed to each component per layer, across draws
+        // (the per-draw bottleneck gets the draw's full layer latency).
+        let mut comp_attr = vec![[0.0f64; 5]; nl];
+        let mut layers_trace: Vec<LayerTrace> = (0..nl)
+            .map(|_| LayerTrace {
+                samples: Vec::with_capacity(self.draws),
+            })
+            .collect();
+        let mut total_sum = 0.0;
+        let mut wl_bits_sum = 0.0;
+
+        for d in 0..self.draws {
+            let mut rng = Pcg32::seeded(draw_seed(self.seed, d));
+            let mut draw_total = 0.0;
+            let mut draw_wl = 0.0;
+            for i in 0..nl {
+                let l = &t.layers[i];
+                let dec = decisions[i];
+                let dmin = (dec.threshold as usize).max(1);
+                let mut moved_vh = 0.0;
+                let mut wl_vol = 0.0;
+                let mut wl_msgs = 0u64;
+                for h in dmin..=HOP_BUCKETS {
+                    let e_vh = l.elig_vol_hops[h - 1];
+                    let e_v = l.elig_vol[h - 1];
+                    if e_v <= 0.0 {
+                        // Volume-less hop mass cannot be chopped into
+                        // messages; move its expectation (exactly what
+                        // the analytical model does).
+                        if e_vh > 0.0 {
+                            moved_vh += dec.pinj * e_vh;
+                        }
+                        continue;
+                    }
+                    if dec.pinj <= 0.0 {
+                        continue;
+                    }
+                    let n_msgs = (e_v / MESSAGE_BITS).ceil().max(1.0) as u64;
+                    let msg_bits = e_v / n_msgs as f64;
+                    let msg_vh = e_vh / n_msgs as f64;
+                    for _ in 0..n_msgs {
+                        if rng.coin(dec.pinj) {
+                            wl_vol += msg_bits;
+                            moved_vh += msg_vh;
+                            wl_msgs += 1;
+                        }
+                    }
+                }
+                let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
+                let t_wl = if wl_vol > 0.0 { wl_vol / wl_bw } else { 0.0 };
+                let comps = [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl];
+                let mut k_best = 0;
+                for k in 1..5 {
+                    if comps[k] > comps[k_best] {
+                        k_best = k;
+                    }
+                }
+                let lat = comps[k_best];
+                layer_lat_sum[i] += lat;
+                comp_attr[i][k_best] += lat;
+                draw_total += lat;
+                draw_wl += wl_vol;
+                let t_wait = if wl_msgs > 0 {
+                    t_wl * (wl_msgs - 1) as f64 / (2.0 * wl_msgs as f64)
+                } else {
+                    0.0
+                };
+                layers_trace[i].samples.push(TraceSample {
+                    wl_bits: wl_vol,
+                    t_serialize: t_wl,
+                    t_wait,
+                    backoffs: wl_msgs.saturating_sub(1),
+                    t_nop_residual: t_nop,
+                });
+            }
+            total_sum += draw_total;
+            wl_bits_sum += draw_wl;
+        }
+
+        let dn = self.draws as f64;
+        let mut shares = [0.0f64; 5];
+        for attr in &comp_attr {
+            for k in 0..5 {
+                shares[k] += attr[k];
+            }
+        }
+        if total_sum > 0.0 {
+            for s in &mut shares {
+                *s /= total_sum;
+            }
+        }
+        let bottleneck = comp_attr
+            .iter()
+            .map(|attr| {
+                let mut k_best = 0;
+                for k in 1..5 {
+                    if attr[k] > attr[k_best] {
+                        k_best = k;
+                    }
+                }
+                k_best
+            })
+            .collect();
+        let result = EvalResult {
+            total_s: total_sum / dn,
+            shares,
+            wl_bits: wl_bits_sum / dn,
+            bottleneck,
+            layer_latency: layer_lat_sum.iter().map(|x| x / dn).collect(),
+        };
+        Ok(EvalOutcome {
+            result,
+            trace: Some(MessageTrace {
+                draws: self.draws,
+                layers: layers_trace,
+            }),
+        })
+    }
+}
+
+/// The evaluation-backend axis value threaded through campaign specs,
+/// scenarios, the coordinator's [`crate::coordinator::MapSearch`], the
+/// CLI and reports. Spelled `analytical` or
+/// `stochastic[:draws[:seed]]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvalBackend {
+    /// Closed-form expected-value model ([`AnalyticalEngine`]).
+    #[default]
+    Analytical,
+    /// Per-message simulation ([`StochasticEngine`]) with `draws`
+    /// averaged draws; `seed` is the *base* seed per-workload engine
+    /// seeds derive from ([`Self::for_workload`]).
+    Stochastic { draws: usize, seed: u64 },
+}
+
+impl EvalBackend {
+    /// Parse the CLI/TOML spelling: `analytical`, `stochastic`,
+    /// `stochastic:DRAWS` or `stochastic:DRAWS:SEED` (seed accepts
+    /// decimal or `0x` hex). The error teaches the grammar.
+    pub fn parse(s: &str) -> Result<Self> {
+        let spec_err = || {
+            anyhow::anyhow!(
+                "unknown evaluation backend {s:?}; expected \"analytical\" \
+                 or \"stochastic[:draws[:seed]]\" (e.g. stochastic:64)"
+            )
+        };
+        let mut parts = s.split(':');
+        match parts.next() {
+            Some("analytical") => {
+                if parts.next().is_some() {
+                    return Err(spec_err());
+                }
+                Ok(EvalBackend::Analytical)
+            }
+            Some("stochastic") => {
+                let draws = match parts.next() {
+                    None | Some("") => DEFAULT_DRAWS,
+                    Some(d) => d.parse::<usize>().map_err(|_| spec_err())?,
+                };
+                let seed = match parts.next() {
+                    None => DEFAULT_SEED,
+                    Some(raw) => match raw.strip_prefix("0x") {
+                        Some(hex) => {
+                            u64::from_str_radix(hex, 16).map_err(|_| spec_err())?
+                        }
+                        None => raw.parse::<u64>().map_err(|_| spec_err())?,
+                    },
+                };
+                if parts.next().is_some() || draws == 0 {
+                    return Err(spec_err());
+                }
+                Ok(EvalBackend::Stochastic { draws, seed })
+            }
+            _ => Err(spec_err()),
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Self::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            EvalBackend::Analytical => "analytical".to_string(),
+            EvalBackend::Stochastic { draws, seed } => {
+                if *seed == DEFAULT_SEED {
+                    format!("stochastic:{draws}")
+                } else {
+                    format!("stochastic:{draws}:{seed}")
+                }
+            }
+        }
+    }
+
+    /// The same backend with its seed specialized to one workload
+    /// (FNV-1a + SplitMix64 derivation, shared with the mapping
+    /// searches) — stochastic campaign results stay independent of the
+    /// worker count and workload ordering.
+    pub fn for_workload(&self, workload: &str) -> EvalBackend {
+        match *self {
+            EvalBackend::Analytical => EvalBackend::Analytical,
+            EvalBackend::Stochastic { draws, seed } => EvalBackend::Stochastic {
+                draws,
+                seed: derive_seed(seed, workload),
+            },
+        }
+    }
+
+    /// Instantiate the engine this backend names.
+    pub fn engine(&self) -> Box<dyn EvalEngine> {
+        match *self {
+            EvalBackend::Analytical => Box::new(AnalyticalEngine),
+            EvalBackend::Stochastic { draws, seed } => {
+                Box::new(StochasticEngine { draws, seed })
+            }
+        }
+    }
+
+    /// The stochastic observer a feedback loop should watch: this
+    /// backend when stochastic, the default stochastic engine when
+    /// analytical (the closed form has no messages to observe).
+    pub fn observer(&self) -> StochasticEngine {
+        match *self {
+            EvalBackend::Stochastic { draws, seed } => {
+                StochasticEngine { draws, seed }
+            }
+            EvalBackend::Analytical => StochasticEngine::default(),
+        }
+    }
+
+    /// The wired reference every backend shares: zero-offload pricing
+    /// through the engine trait. At `pinj = 0` no message ever wins the
+    /// coin, so the evaluation is deterministic and the analytical
+    /// engine answers for both backends — bit-for-bit
+    /// [`evaluate_wired`](super::evaluate_wired).
+    pub fn wired_reference(&self, tensors: &CostTensors) -> Result<EvalResult> {
+        let zero = vec![
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0,
+            };
+            tensors.layers.len()
+        ];
+        Ok(AnalyticalEngine.evaluate(tensors, &zero, 1.0)?.result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WirelessConfig;
+    use crate::sim::cost::LayerCosts;
+    use crate::sim::{evaluate_expected, evaluate_wired};
+
+    fn tensors() -> CostTensors {
+        let mut l0 = LayerCosts {
+            t_comp: 1.0e-6,
+            t_dram: 0.5e-6,
+            nop_vol_hops: 10.0e6,
+            ..Default::default()
+        };
+        l0.elig_vol_hops[0] = 2.0e6;
+        l0.elig_vol[0] = 2.0e6;
+        l0.elig_vol_hops[3] = 8.0e6;
+        l0.elig_vol[3] = 0.2e6;
+        let l1 = LayerCosts {
+            t_comp: 5.0e-6,
+            t_dram: 1.0e-6,
+            nop_vol_hops: 1.0e6,
+            ..Default::default()
+        };
+        CostTensors {
+            layers: vec![l0, l1],
+            nop_agg_bw: 1.0e12,
+        }
+    }
+
+    fn uniform(t: &CostTensors, d: u32, p: f64) -> Vec<LayerDecision> {
+        vec![
+            LayerDecision {
+                threshold: d,
+                pinj: p,
+            };
+            t.layers.len()
+        ]
+    }
+
+    #[test]
+    fn analytical_engine_is_evaluate_policy_bit_exact() {
+        let t = tensors();
+        for &(d, p, bw) in &[(1u32, 0.4f64, 64e9f64), (4, 0.8, 96e9), (0, 0.1, 64e9)] {
+            let dec = uniform(&t, d, p);
+            let via_engine = AnalyticalEngine.evaluate(&t, &dec, bw).unwrap();
+            let direct = evaluate_policy(&t, &dec, bw);
+            assert_eq!(via_engine.result.total_s, direct.total_s);
+            assert_eq!(via_engine.result.shares, direct.shares);
+            assert_eq!(via_engine.result.wl_bits, direct.wl_bits);
+            assert!(via_engine.trace.is_none());
+            // ... and therefore evaluate_expected on uniform vectors.
+            let w = WirelessConfig {
+                distance_threshold: d,
+                injection_prob: p,
+                bandwidth_bits: bw,
+                ..Default::default()
+            };
+            assert_eq!(via_engine.result.total_s, evaluate_expected(&t, &w).total_s);
+        }
+    }
+
+    #[test]
+    fn stochastic_zero_pinj_is_wired_exactly() {
+        // pinj = 0 consumes no RNG and each draw reproduces the wired
+        // evaluation; with a power-of-two draw count the averaging is
+        // exact, so equality is bit-exact, not approximate.
+        let t = tensors();
+        let e = StochasticEngine { draws: 4, seed: 9 };
+        let out = e.evaluate(&t, &uniform(&t, 1, 0.0), 64e9).unwrap();
+        let wired = evaluate_wired(&t);
+        assert_eq!(out.result.total_s, wired.total_s);
+        assert_eq!(out.result.wl_bits, 0.0);
+        let trace = out.trace.unwrap();
+        assert_eq!(trace.draws, 4);
+        assert_eq!(trace.total_backoffs(), 0);
+        for l in &trace.layers {
+            assert_eq!(l.samples.len(), 4);
+            assert!(l.samples.iter().all(|s| s.t_serialize == 0.0));
+        }
+    }
+
+    #[test]
+    fn stochastic_is_deterministic_and_seed_sensitive() {
+        let t = tensors();
+        let e = StochasticEngine { draws: 6, seed: 42 };
+        let dec = uniform(&t, 1, 0.5);
+        let a = e.evaluate(&t, &dec, 64e9).unwrap();
+        let b = e.evaluate(&t, &dec, 64e9).unwrap();
+        assert_eq!(a.result.total_s, b.result.total_s);
+        assert_eq!(a.trace.unwrap().layers[0].samples, b.trace.unwrap().layers[0].samples);
+        let c = StochasticEngine { draws: 6, seed: 43 }
+            .evaluate(&t, &dec, 64e9)
+            .unwrap();
+        assert_ne!(a.result.wl_bits, c.result.wl_bits);
+    }
+
+    #[test]
+    fn stochastic_mean_bounds_analytical_from_above() {
+        let t = tensors();
+        let dec = uniform(&t, 1, 0.5);
+        let analytical = evaluate_policy(&t, &dec, 64e9);
+        let stoch = StochasticEngine { draws: 64, seed: 7 }
+            .evaluate(&t, &dec, 64e9)
+            .unwrap();
+        // Per-layer max of means lower-bounds mean of maxes (Jensen).
+        assert!(stoch.result.total_s >= analytical.total_s * 0.999);
+        let rel = (stoch.result.total_s - analytical.total_s) / analytical.total_s;
+        assert!(rel < 0.25, "rel={rel}");
+        // Offloaded bits converge to the expectation.
+        let bit_rel =
+            (stoch.result.wl_bits - analytical.wl_bits).abs() / analytical.wl_bits;
+        assert!(bit_rel < 0.15, "bit_rel={bit_rel}");
+    }
+
+    #[test]
+    fn trace_arithmetic_invariants() {
+        let t = tensors();
+        let bw = 64e9;
+        let out = StochasticEngine { draws: 8, seed: 3 }
+            .evaluate(&t, &uniform(&t, 1, 0.6), bw)
+            .unwrap();
+        let trace = out.trace.unwrap();
+        let wired_nop0 = t.layers[0].nop_vol_hops / t.nop_agg_bw;
+        for s in &trace.layers[0].samples {
+            assert_eq!(s.t_serialize, if s.wl_bits > 0.0 { s.wl_bits / bw } else { 0.0 });
+            assert!(s.t_nop_residual <= wired_nop0 + 1e-18);
+            if s.backoffs == 0 {
+                assert_eq!(s.t_wait, 0.0);
+            } else {
+                assert!(s.t_wait > 0.0 && s.t_wait < s.t_serialize);
+            }
+        }
+        // The compute-bound layer never offloads... it has no eligible
+        // volume, so serialization stays zero.
+        assert_eq!(trace.layers[1].total_backoffs(), 0);
+    }
+
+    #[test]
+    fn backend_parse_round_trip_and_errors() {
+        assert_eq!(EvalBackend::parse("analytical").unwrap(), EvalBackend::Analytical);
+        assert_eq!(
+            EvalBackend::parse("stochastic").unwrap(),
+            EvalBackend::Stochastic { draws: DEFAULT_DRAWS, seed: DEFAULT_SEED }
+        );
+        assert_eq!(
+            EvalBackend::parse("stochastic:64").unwrap(),
+            EvalBackend::Stochastic { draws: 64, seed: DEFAULT_SEED }
+        );
+        assert_eq!(
+            EvalBackend::parse("stochastic:16:0xBEEF").unwrap(),
+            EvalBackend::Stochastic { draws: 16, seed: 0xBEEF }
+        );
+        for b in ["analytical", "stochastic:64", "stochastic:16:12345"] {
+            let parsed = EvalBackend::parse(b).unwrap();
+            assert_eq!(EvalBackend::parse(&parsed.label()).unwrap(), parsed);
+        }
+        for bad in ["", "magic", "stochastic:0", "stochastic:x", "analytical:2", "stochastic:4:1:2"] {
+            assert!(EvalBackend::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn per_workload_seeds_differ_but_reproduce() {
+        let b = EvalBackend::Stochastic { draws: 8, seed: 1 };
+        let a1 = b.for_workload("zfnet");
+        let a2 = b.for_workload("zfnet");
+        let c = b.for_workload("googlenet");
+        assert_eq!(a1, a2);
+        assert_ne!(a1, c);
+        assert_eq!(EvalBackend::Analytical.for_workload("zfnet"), EvalBackend::Analytical);
+    }
+
+    #[test]
+    fn wired_reference_matches_evaluate_wired() {
+        let t = tensors();
+        for b in [EvalBackend::Analytical, EvalBackend::Stochastic { draws: 3, seed: 0 }] {
+            let r = b.wired_reference(&t).unwrap();
+            let w = evaluate_wired(&t);
+            assert_eq!(r.total_s, w.total_s);
+            assert_eq!(r.shares, w.shares);
+        }
+    }
+
+    #[test]
+    fn decision_length_mismatch_is_an_error() {
+        let t = tensors();
+        let one = uniform(&t, 1, 0.4)[..1].to_vec();
+        assert!(AnalyticalEngine.evaluate(&t, &one, 64e9).is_err());
+        assert!(StochasticEngine::default().evaluate(&t, &one, 64e9).is_err());
+        assert!(StochasticEngine { draws: 0, seed: 0 }
+            .evaluate(&t, &uniform(&t, 1, 0.4), 64e9)
+            .is_err());
+    }
+}

@@ -1,35 +1,52 @@
-//! The GEMINI-style analytical engine (paper §III-C): per-layer
-//! component times, per-layer bottleneck = max over components, total
-//! execution time = sum over layers. No router/DRAM contention — GEMINI
-//! is deliberately not cycle-accurate.
+//! The evaluation core (paper §III): GEMINI-style per-layer component
+//! times, per-layer bottleneck = max over components, total execution
+//! time = sum over layers. No router/DRAM contention — GEMINI is
+//! deliberately not cycle-accurate.
 //!
-//! Three evaluation paths share these tensors:
-//!   * `evaluate_wired`     — the wired baseline,
-//!   * `evaluate_expected`  — native expected-value wireless model (the
-//!     same math the AOT artifact computes; used for cross-validation
-//!     and as a fallback when artifacts are absent), now a thin
-//!     [`policy::StaticPolicy`] wrapper over [`policy::evaluate_policy`],
-//!   * `stochastic::simulate` — per-message coin-flip mode (§III-B2
-//!     criterion 3 as actually randomized).
+//! Every hybrid evaluation funnels through ONE abstraction, the
+//! [`engine::EvalEngine`] trait (`evaluate(tensors, decisions, wl_bw)
+//! -> EvalOutcome`), with two backends:
 //!
-//! The [`policy`] module generalizes the decision logic to *per-layer*
-//! `(threshold, pinj)` pairs: an [`policy::OffloadPolicy`] maps cost
-//! tensors to one [`policy::LayerDecision`] per layer, and
-//! [`policy::evaluate_policy`] prices any decision vector with the same
-//! expected-value arithmetic.
+//!   * [`engine::AnalyticalEngine`] — the closed-form expected-value
+//!     model. Bit-for-bit [`policy::evaluate_policy`]; the legacy
+//!     entry points survive as thin spellings of it:
+//!     [`evaluate_wired`] is the all-zero decision vector,
+//!     [`evaluate_expected`] the uniform config-pair vector.
+//!   * [`engine::StochasticEngine`] — the per-message coin-flip model
+//!     (§III-B2 criterion 3 as actually randomized) as a first-class
+//!     backend: deterministic per-draw seeds, scalar totals averaged
+//!     over draws, and a per-layer per-draw [`engine::MessageTrace`]
+//!     (serialization, busy-channel wait, backoffs, residual NoP
+//!     time). [`stochastic::simulate`] remains the flow-level
+//!     validation twin of the same randomization.
+//!
+//! The [`engine::EvalBackend`] axis (`analytical` |
+//! `stochastic:draws[:seed]`) selects the backend through campaign
+//! specs, scenarios, the coordinator and the CLI.
+//!
+//! The [`policy`] module maps cost tensors to *per-layer*
+//! `(threshold, pinj)` decisions: an [`policy::OffloadPolicy`] decides,
+//! an engine prices. [`policy::FeedbackPolicy`] closes the loop the
+//! closed-form policies only approximate — it iteratively re-fits
+//! per-layer injection probabilities from trace-observed contention.
 
 pub mod cost;
+pub mod engine;
 pub mod linklevel;
 pub mod policy;
 pub mod stochastic;
 pub mod traffic;
 
 pub use cost::{CostTensors, LayerCosts, HOP_BUCKETS};
+pub use engine::{
+    AnalyticalEngine, EvalBackend, EvalEngine, EvalOutcome, LayerTrace,
+    MessageTrace, StochasticEngine, TraceSample,
+};
 pub use policy::{
     best_static_pair, checked_speedup, controller_trajectory, decide_policy,
-    evaluate_policies, evaluate_policy, ControllerPolicy, GreedyPerLayer,
-    LayerDecision, OffloadPolicy, OraclePerLayer, PolicyEval, PolicySpec,
-    StaticPolicy,
+    evaluate_policies, evaluate_policy, ControllerPolicy, FeedbackPolicy,
+    GreedyPerLayer, LayerDecision, OffloadPolicy, OraclePerLayer, PolicyEval,
+    PolicySpec, StaticPolicy,
 };
 pub use traffic::{characterize, LayerTraffic};
 
@@ -58,7 +75,15 @@ pub struct EvalResult {
 }
 
 impl EvalResult {
-    fn from_layers(lat_k: &[[f64; 5]], wl_bits: f64) -> Self {
+    /// Fold per-layer component-time rows into a result: each layer's
+    /// latency is its max component, the total is the sum over layers,
+    /// and shares attribute each layer's latency to its bottleneck.
+    /// THE single-draw aggregation the analytical and flow-level
+    /// paths share — keep it the single copy. (The stochastic engine
+    /// applies the same per-layer max *per draw* but then averages
+    /// across draws — a deliberately different multi-draw aggregation;
+    /// see [`engine::StochasticEngine`].)
+    pub fn from_layers(lat_k: &[[f64; 5]], wl_bits: f64) -> Self {
         let mut total = 0.0;
         let mut shares = [0.0; 5];
         let mut bottleneck = Vec::with_capacity(lat_k.len());

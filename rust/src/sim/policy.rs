@@ -24,17 +24,31 @@
 //!   grid, plus the greedy candidate, so its total time lower-bounds
 //!   (and its speedup upper-bounds) both [`StaticPolicy`]-on-the-grid
 //!   and [`GreedyPerLayer`] exactly.
+//! * [`FeedbackPolicy`] — the learned/feedback policy over the
+//!   stochastic engine: seed from the greedy closed form, observe a
+//!   [`crate::sim::engine::MessageTrace`], re-fit per-layer injection
+//!   probabilities toward the *observed* contention balance, and keep
+//!   the best decision vector under the pricing engine — so it never
+//!   loses to [`GreedyPerLayer`] under the backend it prices with.
 //!
 //! Per-layer decisions are independent in the analytical model (total
 //! time is a sum of per-layer maxima), so `OraclePerLayer`'s per-layer
 //! argmin is the true grid optimum of the per-layer decision space.
 //!
+//! Policies *decide*; an [`crate::sim::engine::EvalEngine`] *prices*.
+//! [`evaluate_policies`] prices analytically;
+//! [`evaluate_policies_backend`] prices through any
+//! [`crate::sim::engine::EvalBackend`] (bit-exact with the former on
+//! the analytical backend).
+//!
 //! CAUTION: `python/tools/cost_mirror.py` mirrors `evaluate_policy`,
 //! `layer_outcome`, `GreedyPerLayer`, `OraclePerLayer`,
-//! `best_static_pair` and `controller_trajectory` bit-exactly (checked
-//! by `python3 mirror_checks_policy.py`); keep them in sync.
+//! `best_static_pair`, `controller_trajectory` and the feedback re-fit
+//! bit-exactly (checked by `python3 mirror_checks_policy.py` and
+//! `mirror_checks_engine.py`); keep them in sync.
 
 use crate::sim::cost::{CostTensors, LayerCosts};
+use crate::sim::engine::{EvalBackend, EvalEngine, StochasticEngine};
 use crate::sim::{evaluate_wired, EvalResult, COMP_WIRELESS, HOP_BUCKETS};
 use anyhow::{bail, Result};
 
@@ -413,6 +427,135 @@ impl OffloadPolicy for OraclePerLayer {
     }
 }
 
+/// The learned/feedback policy: close the loop the greedy water-filler
+/// only approximates. Starting from [`GreedyPerLayer`]'s closed-form
+/// decisions, it repeatedly
+///
+/// 1. *observes* a [`crate::sim::engine::StochasticEngine`] evaluation
+///    of the current decisions — the per-layer
+///    [`MessageTrace`](crate::sim::engine::MessageTrace) records what
+///    actually happened on the channel (mean serialization vs mean
+///    residual wired-NoP time over the draws);
+/// 2. *re-fits* each offloading layer's injection probability toward
+///    the observed balance point (`pinj' = pinj * sqrt(t_nop / t_wl)`,
+///    step-clamped to [0.5x, 2x] per iteration);
+/// 3. *prices* the candidate under the pricing engine and keeps the
+///    best decision vector seen.
+///
+/// Because the greedy seed is the initial incumbent evaluated under the
+/// same pricing engine, the result never loses to `GreedyPerLayer`
+/// under that engine — asserted on all 15 paper workloads.
+#[derive(Debug, Clone, Copy)]
+pub struct FeedbackPolicy {
+    /// Draws the observer engine averages per observation.
+    pub draws: usize,
+    /// Observer engine seed (identical seeds reproduce identical fits).
+    pub seed: u64,
+    /// Re-fit iterations (each = one observe + one candidate pricing).
+    pub iters: usize,
+    /// Largest hop-distance threshold the greedy seed considers.
+    pub max_threshold: u32,
+}
+
+impl Default for FeedbackPolicy {
+    fn default() -> Self {
+        Self {
+            draws: crate::sim::engine::DEFAULT_DRAWS,
+            seed: crate::sim::engine::DEFAULT_SEED,
+            iters: 8,
+            max_threshold: HOP_BUCKETS as u32,
+        }
+    }
+}
+
+impl FeedbackPolicy {
+    /// Per-iteration multiplicative step clamp: the observed ratio may
+    /// be noisy, so a single re-fit never moves `pinj` by more than 2x
+    /// in either direction.
+    pub const STEP_CLAMP: (f64, f64) = (0.5, 2.0);
+
+    /// Decide with an explicit pricing engine: observations always come
+    /// from this policy's stochastic observer, but the *best-of*
+    /// selection runs under `pricer` — pass the campaign's backend
+    /// engine so "feedback never loses to greedy" holds under whatever
+    /// backend prices the outcome.
+    pub fn decide_with(
+        &self,
+        t: &CostTensors,
+        wl_bw: f64,
+        pricer: &dyn EvalEngine,
+    ) -> Result<Vec<LayerDecision>> {
+        if !(wl_bw.is_finite() && wl_bw > 0.0) {
+            bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
+        }
+        let observer = StochasticEngine {
+            draws: self.draws,
+            seed: self.seed,
+        };
+        let greedy = GreedyPerLayer {
+            max_threshold: self.max_threshold,
+        }
+        .decide(t, wl_bw)?;
+        let mut best = greedy.clone();
+        let mut best_total = pricer.evaluate(t, &best, wl_bw)?.result.total_s;
+        let mut current = greedy;
+        for _ in 0..self.iters {
+            let trace = observer
+                .evaluate(t, &current, wl_bw)?
+                .trace
+                .expect("stochastic engine always traces");
+            let mut next = current.clone();
+            let mut changed = false;
+            for (i, dec) in next.iter_mut().enumerate() {
+                // Layers greedy declined stay declined: with zero
+                // offload there is no channel observation to react to,
+                // and offloading cannot beat a non-NoP bottleneck.
+                if dec.pinj <= 0.0 {
+                    continue;
+                }
+                let t_wl = trace.layers[i].mean_serialize();
+                let t_nop = trace.layers[i].mean_nop_residual();
+                if t_wl <= 0.0 {
+                    continue;
+                }
+                let (lo, hi) = Self::STEP_CLAMP;
+                let ratio = (t_nop / t_wl).sqrt().clamp(lo, hi);
+                let p = (dec.pinj * ratio).clamp(0.0, 1.0);
+                if p != dec.pinj {
+                    dec.pinj = p;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break; // observed balance reached: the fit converged
+            }
+            let total = pricer.evaluate(t, &next, wl_bw)?.result.total_s;
+            if total < best_total {
+                best_total = total;
+                best = next.clone();
+            }
+            current = next;
+        }
+        Ok(best)
+    }
+}
+
+impl OffloadPolicy for FeedbackPolicy {
+    fn name(&self) -> &'static str {
+        "feedback"
+    }
+
+    /// [`Self::decide_with`] pricing under the observer itself — the
+    /// pure stochastic-backend form.
+    fn decide(&self, t: &CostTensors, wl_bw: f64) -> Result<Vec<LayerDecision>> {
+        let observer = StochasticEngine {
+            draws: self.draws,
+            seed: self.seed,
+        };
+        self.decide_with(t, wl_bw, &observer)
+    }
+}
+
 /// Name-addressable policy kinds — the axis value threaded through
 /// campaign specs, scenarios, the CLI and reports.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -425,15 +568,29 @@ pub enum PolicySpec {
     Controller,
     /// [`OraclePerLayer`] per-layer exhaustive upper bound.
     Oracle,
+    /// [`FeedbackPolicy`] trace-driven re-fit over the stochastic
+    /// engine (opt-in: not in the default campaign list — it pays a
+    /// stochastic observation loop per decision).
+    Feedback,
 }
 
 impl PolicySpec {
-    /// Every built-in policy, in presentation order.
+    /// The default (closed-form) built-ins, in presentation order —
+    /// what campaigns price when no explicit list is given.
     pub const ALL: [PolicySpec; 4] = [
         PolicySpec::Static,
         PolicySpec::Greedy,
         PolicySpec::Controller,
         PolicySpec::Oracle,
+    ];
+
+    /// Every parseable policy, including the opt-in [`Self::Feedback`].
+    pub const KNOWN: [PolicySpec; 5] = [
+        PolicySpec::Static,
+        PolicySpec::Greedy,
+        PolicySpec::Controller,
+        PolicySpec::Oracle,
+        PolicySpec::Feedback,
     ];
 
     pub fn name(self) -> &'static str {
@@ -442,18 +599,19 @@ impl PolicySpec {
             PolicySpec::Greedy => "greedy",
             PolicySpec::Controller => "controller",
             PolicySpec::Oracle => "oracle",
+            PolicySpec::Feedback => "feedback",
         }
     }
 
     /// Parse a policy name; the error teaches the valid set.
     pub fn parse(name: &str) -> Result<Self> {
-        Self::ALL
+        Self::KNOWN
             .into_iter()
             .find(|p| p.name() == name)
             .ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown offload policy {name:?}; valid policies: {}",
-                    Self::ALL.map(PolicySpec::name).join(", ")
+                    Self::KNOWN.map(PolicySpec::name).join(", ")
                 )
             })
     }
@@ -519,8 +677,9 @@ impl PolicyEval {
 /// Instantiate one named policy over the shared grid axes and decide a
 /// tensor set: `Static` exhausts the uniform grid, `Greedy` caps its
 /// threshold at the grid maximum, `Controller` and `Oracle` take the
-/// axes directly. The single constructor-and-dispatch shared by
-/// [`evaluate_policies`], the campaign policy stage and the joint
+/// axes directly, `Feedback` observes the default stochastic engine
+/// and prices analytically. The single constructor-and-dispatch shared
+/// by [`evaluate_policies`], the campaign policy stage and the joint
 /// mapping × offload search ([`crate::mapping::comap`]).
 pub fn decide_policy(
     spec: PolicySpec,
@@ -528,6 +687,22 @@ pub fn decide_policy(
     wl_bw: f64,
     thresholds: &[u32],
     pinjs: &[f64],
+) -> Result<Vec<LayerDecision>> {
+    decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, &EvalBackend::Analytical)
+}
+
+/// [`decide_policy`] with an explicit evaluation backend. The backend
+/// only matters for [`PolicySpec::Feedback`] (whose observer takes the
+/// backend's stochastic parameters and whose best-of selection prices
+/// through the backend's engine); the closed-form policies decide
+/// identically on every backend.
+pub fn decide_policy_backend(
+    spec: PolicySpec,
+    t: &CostTensors,
+    wl_bw: f64,
+    thresholds: &[u32],
+    pinjs: &[f64],
+    backend: &EvalBackend,
 ) -> Result<Vec<LayerDecision>> {
     if thresholds.is_empty() || pinjs.is_empty() {
         bail!(
@@ -560,19 +735,47 @@ pub fn decide_policy(
             pinjs: pinjs.to_vec(),
         }
         .decide(t, wl_bw),
+        PolicySpec::Feedback => {
+            let observer = backend.observer();
+            FeedbackPolicy {
+                draws: observer.draws,
+                seed: observer.seed,
+                max_threshold: max_t,
+                ..FeedbackPolicy::default()
+            }
+            .decide_with(t, wl_bw, backend.engine().as_ref())
+        }
     }
 }
 
 /// Decide and price every listed policy over one tensor set at one
 /// bandwidth, sharing the grid axes (see [`decide_policy`] for how the
 /// axes parameterize each built-in). Outcomes come back in `specs`
-/// order.
+/// order. Prices through the analytical engine — the bit-exact legacy
+/// spelling of [`evaluate_policies_backend`] on
+/// [`EvalBackend::Analytical`].
 pub fn evaluate_policies(
     t: &CostTensors,
     wl_bw: f64,
     specs: &[PolicySpec],
     thresholds: &[u32],
     pinjs: &[f64],
+) -> Result<Vec<PolicyEval>> {
+    evaluate_policies_backend(t, wl_bw, specs, thresholds, pinjs, &EvalBackend::Analytical)
+}
+
+/// [`evaluate_policies`] priced through an explicit
+/// [`EvalBackend`]: decisions come from
+/// [`decide_policy_backend`], outcomes from the backend's engine, and
+/// speedups are measured against the deterministic wired reference
+/// (identical on every backend — at zero offload no coin ever fires).
+pub fn evaluate_policies_backend(
+    t: &CostTensors,
+    wl_bw: f64,
+    specs: &[PolicySpec],
+    thresholds: &[u32],
+    pinjs: &[f64],
+    backend: &EvalBackend,
 ) -> Result<Vec<PolicyEval>> {
     if thresholds.is_empty() || pinjs.is_empty() {
         bail!(
@@ -584,12 +787,14 @@ pub fn evaluate_policies(
     if !(wl_bw.is_finite() && wl_bw > 0.0) {
         bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
     }
+    let engine = backend.engine();
     let wired = evaluate_wired(t).total_s;
     specs
         .iter()
         .map(|&spec| {
-            let decisions = decide_policy(spec, t, wl_bw, thresholds, pinjs)?;
-            let result = evaluate_policy(t, &decisions, wl_bw);
+            let decisions =
+                decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, backend)?;
+            let result = engine.evaluate(t, &decisions, wl_bw)?.result;
             let speedup = checked_speedup(wired, result.total_s)?;
             Ok(PolicyEval {
                 policy: spec,
@@ -799,11 +1004,59 @@ mod tests {
 
     #[test]
     fn policy_spec_parse_round_trip() {
-        for spec in PolicySpec::ALL {
+        for spec in PolicySpec::KNOWN {
             assert_eq!(PolicySpec::parse(spec.name()).unwrap(), spec);
         }
         let err = PolicySpec::parse("fancy").unwrap_err().to_string();
         assert!(err.contains("fancy") && err.contains("greedy"), "{err}");
+        // Feedback is parseable but stays out of the default list.
+        assert_eq!(PolicySpec::parse("feedback").unwrap(), PolicySpec::Feedback);
+        assert!(!PolicySpec::ALL.contains(&PolicySpec::Feedback));
+    }
+
+    #[test]
+    fn feedback_never_loses_to_greedy_under_either_backend() {
+        let t = tensors();
+        let (ts, ps) = paper_grid();
+        for backend in [
+            EvalBackend::Analytical,
+            EvalBackend::Stochastic { draws: 8, seed: 11 },
+        ] {
+            let engine = backend.engine();
+            let greedy =
+                decide_policy_backend(PolicySpec::Greedy, &t, 64e9, &ts, &ps, &backend)
+                    .unwrap();
+            let feedback = decide_policy_backend(
+                PolicySpec::Feedback,
+                &t,
+                64e9,
+                &ts,
+                &ps,
+                &backend,
+            )
+            .unwrap();
+            let tg = engine.evaluate(&t, &greedy, 64e9).unwrap().result.total_s;
+            let tf = engine.evaluate(&t, &feedback, 64e9).unwrap().result.total_s;
+            // The greedy seed is feedback's initial incumbent under the
+            // same pricer: dominance is exact, not approximate.
+            assert!(tf <= tg, "{:?}: feedback {tf} vs greedy {tg}", backend);
+        }
+    }
+
+    #[test]
+    fn feedback_is_deterministic() {
+        let t = tensors();
+        let fb = FeedbackPolicy {
+            draws: 6,
+            seed: 5,
+            ..FeedbackPolicy::default()
+        };
+        let a = fb.decide(&t, 64e9).unwrap();
+        let b = fb.decide(&t, 64e9).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), t.layers.len());
+        // Compute-bound layer 1 stays declined.
+        assert_eq!(a[1].pinj, 0.0);
     }
 
     #[test]

@@ -1,7 +1,16 @@
-//! Stochastic per-message wireless injection (paper §III-B2): each
-//! qualifying message flips the injection-probability coin individually.
-//! The expected-value artifact path must agree with this in the limit —
+//! Flow-level stochastic per-message wireless injection (paper
+//! §III-B2): each qualifying message flips the injection-probability
+//! coin individually, walking the real flow list. The expected-value
+//! artifact path must agree with this in the limit —
 //! `rust/tests/property_invariants.rs` asserts convergence.
+//!
+//! This is the *validation twin* of the tensor-level
+//! [`crate::sim::engine::StochasticEngine`] backend: the engine applies
+//! the same randomization to the eligibility buckets (so it needs only
+//! [`crate::sim::cost::CostTensors`] and plugs into every sweep), while
+//! this module randomizes the flows themselves (so it exercises the
+//! traffic model end-to-end). `stochastic-validation` compares both
+//! against the analytical expectation.
 
 use crate::arch::Package;
 use crate::config::WirelessConfig;
@@ -80,15 +89,7 @@ pub fn simulate(
     }
     let _ = HOP_BUCKETS; // semantics shared with the bucketed model
     let _ = channel;
-    Ok(EvalResult::from_layers_pub(&lat_k, total_wl_bits))
-}
-
-impl EvalResult {
-    /// Public constructor for sibling modules (the private
-    /// `from_layers` stays the single source of truth).
-    pub fn from_layers_pub(lat_k: &[[f64; 5]], wl_bits: f64) -> Self {
-        Self::from_layers(lat_k, wl_bits)
-    }
+    Ok(EvalResult::from_layers(&lat_k, total_wl_bits))
 }
 
 #[cfg(test)]

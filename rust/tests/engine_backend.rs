@@ -1,0 +1,405 @@
+//! Unified evaluation-engine integration: the `EvalEngine` trait's two
+//! backends against the legacy entry points, the feedback policy's
+//! dominance contract, stochastic determinism across worker counts,
+//! and the scenario/CLI threading of the backend axis.
+//!
+//! The quantitative assertions are mirrored without a Rust toolchain
+//! by `python/tools/mirror_checks_engine.py`.
+
+use wisper::config::{Config, WirelessConfig};
+use wisper::coordinator::Coordinator;
+use wisper::dse::{engine_sweep, run_campaign, CampaignSpec, CampaignWorkload};
+use wisper::experiment::{self, Scenario};
+use wisper::runtime::Runtime;
+use wisper::sim::engine::{
+    AnalyticalEngine, EvalBackend, EvalEngine, StochasticEngine,
+};
+use wisper::sim::policy::{decide_policy_backend, LayerDecision, PolicySpec};
+use wisper::sim::{evaluate_expected, evaluate_policy, evaluate_wired};
+use wisper::workloads::WORKLOAD_NAMES;
+
+fn coord() -> Coordinator {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 30;
+    Coordinator::new(cfg).unwrap()
+}
+
+fn uniform(n: usize, d: u32, p: f64) -> Vec<LayerDecision> {
+    vec![LayerDecision { threshold: d, pinj: p }; n]
+}
+
+/// Acceptance criterion: `AnalyticalEngine` reproduces
+/// `evaluate_wired`/`evaluate_expected`/`evaluate_policy` bit-exactly
+/// on all 15 paper workloads (the Python mirror asserts the same).
+#[test]
+fn analytical_engine_bit_exact_on_all_paper_workloads() {
+    let c = coord();
+    for name in WORKLOAD_NAMES {
+        let p = c.prepare(name, false).unwrap();
+        let n = p.tensors.layers.len();
+
+        // Wired = the all-zero decision vector.
+        let wired = evaluate_wired(&p.tensors);
+        let via = AnalyticalEngine
+            .evaluate(&p.tensors, &uniform(n, 1, 0.0), 64e9)
+            .unwrap();
+        assert_eq!(via.result.total_s, wired.total_s, "{name} wired");
+        assert_eq!(via.result.shares, wired.shares, "{name} wired shares");
+        assert_eq!(via.result.wl_bits, 0.0);
+        assert!(via.trace.is_none());
+
+        // Expected = the uniform config-pair vector.
+        for &(d, pi, bw) in &[(1u32, 0.4f64, 64e9f64), (4, 0.8, 96e9), (2, 0.25, 64e9)] {
+            let w = WirelessConfig {
+                distance_threshold: d,
+                injection_prob: pi,
+                bandwidth_bits: bw,
+                ..Default::default()
+            };
+            let expected = evaluate_expected(&p.tensors, &w);
+            let got = AnalyticalEngine
+                .evaluate(&p.tensors, &uniform(n, d, pi), bw)
+                .unwrap()
+                .result;
+            assert_eq!(got.total_s, expected.total_s, "{name} d={d} p={pi}");
+            assert_eq!(got.shares, expected.shares);
+            assert_eq!(got.wl_bits, expected.wl_bits);
+            assert_eq!(got.bottleneck, expected.bottleneck);
+        }
+
+        // Arbitrary per-layer vectors = evaluate_policy itself.
+        let decisions: Vec<LayerDecision> = (0..n)
+            .map(|i| LayerDecision {
+                threshold: 1 + (i % 4) as u32,
+                pinj: 0.1 + 0.05 * (i % 10) as f64,
+            })
+            .collect();
+        let direct = evaluate_policy(&p.tensors, &decisions, 64e9);
+        let via = AnalyticalEngine
+            .evaluate(&p.tensors, &decisions, 64e9)
+            .unwrap()
+            .result;
+        assert_eq!(via.total_s, direct.total_s, "{name} per-layer");
+        assert_eq!(via.layer_latency, direct.layer_latency);
+    }
+}
+
+/// Acceptance criterion: `FeedbackPolicy` never loses to
+/// `GreedyPerLayer` on any paper workload under the stochastic
+/// backend (exact dominance: the greedy seed is feedback's initial
+/// incumbent under the same pricing engine).
+#[test]
+fn feedback_dominates_greedy_on_all_paper_workloads() {
+    let c = coord();
+    let thresholds = vec![1u32, 2, 3, 4];
+    let pinjs: Vec<f64> = (0..15).map(|i| 0.10 + 0.05 * i as f64).collect();
+    for name in WORKLOAD_NAMES {
+        let p = c.prepare(name, false).unwrap();
+        let backend = EvalBackend::Stochastic { draws: 6, seed: 0x5EED }
+            .for_workload(name);
+        let engine = backend.engine();
+        let greedy = decide_policy_backend(
+            PolicySpec::Greedy,
+            &p.tensors,
+            64e9,
+            &thresholds,
+            &pinjs,
+            &backend,
+        )
+        .unwrap();
+        let feedback = decide_policy_backend(
+            PolicySpec::Feedback,
+            &p.tensors,
+            64e9,
+            &thresholds,
+            &pinjs,
+            &backend,
+        )
+        .unwrap();
+        let tg = engine.evaluate(&p.tensors, &greedy, 64e9).unwrap().result.total_s;
+        let tf = engine
+            .evaluate(&p.tensors, &feedback, 64e9)
+            .unwrap()
+            .result
+            .total_s;
+        assert!(tf <= tg, "{name}: feedback {tf} vs greedy {tg}");
+        // Layers greedy declined stay declined.
+        for (f, g) in feedback.iter().zip(&greedy) {
+            if g.pinj == 0.0 {
+                assert_eq!(f.pinj, 0.0, "{name}");
+            }
+        }
+    }
+}
+
+/// Satellite: the stochastic engine's mean converges to the analytical
+/// expectation within tolerance on 3 paper workloads (and bounds it
+/// from above, modulo sampling noise on the Jensen gap).
+#[test]
+fn stochastic_engine_converges_on_paper_workloads() {
+    let c = coord();
+    for name in ["zfnet", "googlenet", "resnet50"] {
+        let p = c.prepare(name, false).unwrap();
+        let n = p.tensors.layers.len();
+        let dec = uniform(n, 1, 0.4);
+        let analytical = evaluate_policy(&p.tensors, &dec, 64e9);
+        let stoch = StochasticEngine { draws: 24, seed: 0x5EED }
+            .evaluate(&p.tensors, &dec, 64e9)
+            .unwrap()
+            .result;
+        assert!(
+            stoch.total_s >= analytical.total_s * 0.995,
+            "{name}: stochastic {} below analytical {}",
+            stoch.total_s,
+            analytical.total_s
+        );
+        let rel = (stoch.total_s - analytical.total_s) / analytical.total_s;
+        assert!(rel < 0.10, "{name}: rel={rel}");
+        let bit_rel =
+            (stoch.wl_bits - analytical.wl_bits).abs() / analytical.wl_bits.max(1e-30);
+        assert!(bit_rel < 0.15, "{name}: bit_rel={bit_rel}");
+    }
+}
+
+/// Satellite: the same stochastic scenario at workers=1 and workers=4
+/// yields identical totals, sweep points and policy decisions — the
+/// per-workload derived engine seeds make stochastic campaigns
+/// worker-count independent.
+#[test]
+fn stochastic_campaign_identical_across_worker_counts() {
+    let c = coord();
+    let pa = c.prepare("zfnet", false).unwrap();
+    let pb = c.prepare("googlenet", false).unwrap();
+    let workloads = vec![
+        CampaignWorkload {
+            name: pa.workload.name.clone(),
+            tensors: &pa.tensors,
+            t_wired: Some(pa.wired.total_s),
+            comap: None,
+        },
+        CampaignWorkload {
+            name: pb.workload.name.clone(),
+            tensors: &pb.tensors,
+            t_wired: Some(pb.wired.total_s),
+            comap: None,
+        },
+    ];
+    let base = CampaignSpec {
+        backend: EvalBackend::Stochastic { draws: 4, seed: 0xFEED },
+        policies: vec![PolicySpec::Greedy, PolicySpec::Feedback],
+        bandwidths: vec![64e9],
+        ..CampaignSpec::default()
+    };
+    let mut s1 = base.clone();
+    s1.workers = 1;
+    let mut s4 = base;
+    s4.workers = 4;
+    let r1 = run_campaign(&workloads, &s1, Runtime::native).unwrap();
+    let r4 = run_campaign(&workloads, &s4, Runtime::native).unwrap();
+    for (a, b) in r1.workloads.iter().zip(&r4.workloads) {
+        assert_eq!(a.t_wired, b.t_wired);
+        for (x, y) in a.per_bw.iter().zip(&b.per_bw) {
+            assert_eq!(x.backend, y.backend);
+            assert_eq!(x.sweep.best, y.sweep.best);
+            for (p, q) in x.sweep.points.iter().zip(&y.sweep.points) {
+                assert_eq!(p.total_s, q.total_s);
+                assert_eq!(p.speedup, q.speedup);
+                assert_eq!(p.wl_bits, q.wl_bits);
+            }
+            for (p, q) in x.policies.iter().zip(&y.policies) {
+                assert_eq!(p.speedup, q.speedup);
+                assert_eq!(p.total_s, q.total_s);
+                assert_eq!(p.decisions, q.decisions);
+            }
+            // Feedback rode along and never lost to greedy.
+            let s_of = |k: PolicySpec| x.policy(k).unwrap().speedup;
+            assert!(s_of(PolicySpec::Feedback) >= s_of(PolicySpec::Greedy));
+        }
+    }
+    // Different workloads drew different derived engine seeds.
+    assert_ne!(
+        r1.workloads[0].per_bw[0].backend,
+        r1.workloads[1].per_bw[0].backend
+    );
+}
+
+/// The engine-native sweep agrees with the artifact-batched unit on
+/// the analytical backend (up to the f32 artifact ABI round-trip).
+#[test]
+fn engine_sweep_agrees_with_artifact_grid() {
+    let c = coord();
+    let p = c.prepare("zfnet", false).unwrap();
+    let thresholds = vec![1u32, 2, 3, 4];
+    let pinjs: Vec<f64> = (0..15).map(|i| 0.10 + 0.05 * i as f64).collect();
+    let rt = Runtime::native();
+    let batched =
+        wisper::dse::sweep_grid(&rt, &p.tensors, &thresholds, &pinjs, 64e9).unwrap();
+    let native = engine_sweep(
+        &p.tensors,
+        &thresholds,
+        &pinjs,
+        64e9,
+        EvalBackend::Analytical.engine().as_ref(),
+    )
+    .unwrap();
+    let (b, n) = (batched.best_point(), native.best_point());
+    assert_eq!((b.threshold, b.pinj), (n.threshold, n.pinj));
+    assert!((b.speedup - n.speedup).abs() <= 1e-3 * n.speedup.max(1.0));
+}
+
+/// Satellite: `[scenario]` TOML errors on unknown keys — a typo like
+/// `map_itres` must not silently run the default evaluation — and the
+/// backend key parses/validates.
+#[test]
+fn scenario_toml_backend_and_unknown_keys() {
+    let cfg = Config::default();
+    let s = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nbackend = \"stochastic:16:7\"\n\
+         policies = [\"greedy\", \"feedback\"]\n",
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(
+        s.eval_backend().unwrap(),
+        EvalBackend::Stochastic { draws: 16, seed: 7 }
+    );
+    // The per-workload map search carries the derived-engine backend.
+    let c = coord();
+    let search = s.map_search(&c, "zfnet").unwrap();
+    assert_eq!(
+        search.backend,
+        EvalBackend::Stochastic { draws: 16, seed: 7 }.for_workload("zfnet")
+    );
+
+    // Typo'd key: hard error naming the key and the valid set.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nmap_itres = 400\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("map_itres") && err.contains("map_iters"), "{err}");
+
+    // Bad backend spelling: hard error teaching the grammar.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nbackend = \"magic\"\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("magic") && err.contains("stochastic"), "{err}");
+
+    // Analytical-by-design stages cannot be compared against a
+    // Jensen-gapped stochastic grid: refine and the hybrid mapping
+    // objective are rejected on stochastic backends.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nbackend = \"stochastic:8\"\n\
+         refine = true\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("refine") && err.contains("analytical"), "{err}");
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nbackend = \"stochastic:8\"\n\
+         map_objective = \"hybrid\"\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("map_objective"), "{err}");
+
+    // mapping-ablation's arms price analytically too: rejected on
+    // stochastic backends like refine and hybrid objectives.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nbackend = \"stochastic:8\"\n\
+         experiments = [\"mapping-ablation\"]\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("mapping-ablation"), "{err}");
+
+    // The comap re-fit runs per placement move and must stay
+    // closed-form: feedback is not a valid re-fit policy.
+    let err = Scenario::from_toml_str(
+        "[scenario]\nworkloads = [\"zfnet\"]\nmap_objective = \"hybrid:feedback\"\n",
+        &cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("feedback") && err.contains("closed-form"), "{err}");
+}
+
+/// The policy-feedback experiment runs end-to-end through the registry
+/// and emits the CSV + manifest metrics `wisper compare` consumes.
+#[test]
+fn policy_feedback_experiment_emits_csv_and_metrics() {
+    let cfg = {
+        let mut c = Config::default();
+        c.mapper.sa_iters = 30;
+        c
+    };
+    let coordn = Coordinator::new(cfg.clone()).unwrap();
+    let scenario = Scenario::builder(&cfg)
+        .workloads(["zfnet"])
+        .experiments(["policy-feedback"])
+        .bandwidths(&[64e9])
+        .backend("stochastic:6:9")
+        .optimize(false)
+        .build()
+        .unwrap();
+    let run = experiment::run_scenario(&coordn, &scenario).unwrap();
+    assert_eq!(run.outputs.len(), 1);
+    let (name, out) = &run.outputs[0];
+    assert_eq!(name, "policy-feedback");
+    assert_eq!(out.csvs.len(), 1);
+    assert_eq!(out.csvs[0].name, "policy_feedback");
+    assert!(out.csvs[0].headers.contains(&"backend".to_string()));
+    // greedy, oracle and feedback rows for the one (workload, bw) cell.
+    assert_eq!(out.csvs[0].rows.len(), 3);
+    let metric = |key: &str| {
+        out.metrics
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("missing metric {key}: {:?}", out.metrics))
+    };
+    let fb = metric("zfnet/64000000000/feedback/speedup");
+    let greedy = metric("zfnet/64000000000/greedy/speedup");
+    let oracle = metric("zfnet/64000000000/oracle/speedup");
+    assert!(fb >= greedy, "feedback {fb} vs greedy {greedy}");
+    assert!(oracle > 1.0 && fb > 1.0);
+    assert!(metric("zfnet/64000000000/feedback_vs_greedy") >= 1.0);
+}
+
+/// The stochastic-validation experiment honors `--backend
+/// stochastic:N` (the CI smoke invocation) by validating the engine
+/// itself instead of the flow-level twin.
+#[test]
+fn stochastic_validation_runs_on_stochastic_backend() {
+    let cfg = {
+        let mut c = Config::default();
+        c.mapper.sa_iters = 30;
+        c
+    };
+    let coordn = Coordinator::new(cfg.clone()).unwrap();
+    let scenario = Scenario::builder(&cfg)
+        .workloads(["zfnet"])
+        .experiments(["stochastic-validation"])
+        .bandwidths(&[64e9])
+        .backend("stochastic:16")
+        .optimize(false)
+        .build()
+        .unwrap();
+    let run = experiment::run_scenario(&coordn, &scenario).unwrap();
+    let (_, out) = &run.outputs[0];
+    assert!(out.text.contains("stochastic:16"), "{}", out.text);
+    let rel = out
+        .metrics
+        .iter()
+        .find(|(k, _)| k == "zfnet/rel_err")
+        .map(|(_, v)| *v)
+        .unwrap();
+    assert!(rel < 0.10, "rel_err {rel}");
+}

@@ -289,6 +289,7 @@ fn comap_ordering_on_all_paper_workloads() {
                 wl_bw: bw,
                 thresholds: thresholds.clone(),
                 pinjs: pinjs.clone(),
+                backend: wisper::sim::EvalBackend::Analytical,
             };
             let sa = coord.prepare_mapped(name, &search).unwrap();
             let cm = sa.comap.as_ref().expect("hybrid objective ran comap");
