@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Trajectory layer of the incremental cost stack, mirror spelling:
+time the delta paths (anneal_wired, co_anneal_delta, the prepared
+uniform sweep) against their full-reprice baselines and persist
+BENCH_delta_eval.json at the repo root (schema: bench name ->
+{iters_per_sec, speedup_vs_full}), the same document
+rust/benches/delta_eval.rs writes via util::benchkit.
+
+Each pair is asserted bit-equal before it is timed — a trajectory
+entry for a diverging pair would be meaningless. Median-of-N timing
+with one warmup run, like benchkit.
+
+Run:  python3 bench_delta.py
+Env:  WISPER_BENCH_QUICK=1  shrinks workloads/iters (the CI mode);
+      WISPER_BENCH_OUT=path overrides the output path.
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cost_mirror import (  # noqa: E402
+    Package, anneal, anneal_wired, build, build_tensors, co_anneal,
+    co_anneal_delta, evaluate_policy, evaluate_wired, layer_sequential,
+    prepared_costs, prepared_evaluate_uniform,
+)
+
+WL_BW = 64e9
+GRID_T = [1, 2, 3, 4]
+GRID_P = [0.10 + 0.05 * i for i in range(15)]
+
+
+def bench_median(warmup, reps, f):
+    """Median-of-reps wall time in seconds (util::benchkit::bench)."""
+    for _ in range(warmup):
+        f()
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        f()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def record(items, full_s, fast_s):
+    return {'iters_per_sec': items / fast_s,
+            'speedup_vs_full': full_s / fast_s}
+
+
+def main():
+    quick = bool(os.environ.get('WISPER_BENCH_QUICK'))
+    pkg = Package()
+    # Mid/large nets — the delta path's payoff is structural in layer
+    # count (a move touches O(1) layers of O(n)); see the Rust bench
+    # header for the workload-selection rationale.
+    workloads = ['googlenet'] if quick else ['googlenet', 'resnet50',
+                                             'resnet152']
+    sa_iters = 60 if quick else 300
+    reps = 2 if quick else 3
+
+    records = {}
+    for name in workloads:
+        wl = build(name)
+        base = layer_sequential(wl, pkg)
+
+        # Wired placement SA: closure full-reprice vs delta.
+        def cost(m, wl=wl):
+            return evaluate_wired(build_tensors(wl, m, pkg))['total_s']
+
+        def full_search():
+            return anneal(wl, pkg, sa_iters, 0.25, 0xC0DE, cost)
+
+        def delta_search():
+            return anneal_wired(wl, pkg, sa_iters, 0.25, 0xC0DE)
+
+        assert full_search() == delta_search(), name
+        full = bench_median(1, reps, full_search)
+        fast = bench_median(1, reps, delta_search)
+        records[f'anneal_wired/{name}'] = record(sa_iters, full, fast)
+
+        # Joint search: full-reprice twin vs delta.
+        def co_full():
+            return co_anneal(wl, pkg, base, WL_BW, sa_iters, 0.25, 7,
+                             GRID_T, GRID_P)
+
+        def co_delta():
+            return co_anneal_delta(wl, pkg, base, WL_BW, sa_iters, 0.25, 7,
+                                   GRID_T, GRID_P)
+
+        assert co_full() == co_delta(), name
+        full = bench_median(1, reps, co_full)
+        fast = bench_median(1, reps, co_delta)
+        records[f'co_anneal/{name}'] = record(sa_iters, full, fast)
+
+        # Grid sweep: per-point full evaluate vs the prepared path.
+        t = build_tensors(wl, base, pkg)
+        n = len(t['layers'])
+        points = len(GRID_T) * len(GRID_P)
+
+        def sweep_full():
+            acc = 0.0
+            for d in GRID_T:
+                for p in GRID_P:
+                    acc += evaluate_policy(t, [(d, p)] * n, WL_BW)['total_s']
+            return acc
+
+        def sweep_fast():
+            prep = prepared_costs(t)
+            acc = 0.0
+            for d in GRID_T:
+                for p in GRID_P:
+                    acc += prepared_evaluate_uniform(prep, d, p,
+                                                     WL_BW)['total_s']
+            return acc
+
+        assert sweep_full() == sweep_fast(), name
+        full = bench_median(1, reps * 3, sweep_full)
+        fast = bench_median(1, reps * 3, sweep_fast)
+        records[f'engine_sweep/{name}'] = record(points, full, fast)
+
+    out = os.environ.get('WISPER_BENCH_OUT') or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), '..', '..',
+        'BENCH_delta_eval.json')
+    with open(out, 'w') as fh:
+        json.dump(records, fh, indent=2)
+        fh.write('\n')
+    print(f'wrote {len(records)} trajectory entries to {out}')
+    for k, v in records.items():
+        print(f"  {k:<26} {v['iters_per_sec']:>12.1f} items/s  "
+              f"{v['speedup_vs_full']:>6.2f}x vs full")
+    return records
+
+
+if __name__ == '__main__':
+    main()

@@ -726,81 +726,89 @@ def plan_weight_residency(wl, mapping, pkg):
     return resident
 
 
+def characterize_layer(wl, mapping, pkg, consumers, resident, i):
+    """Traffic of ONE layer under one mapping (mirror of
+    traffic::characterize_layer): the per-layer body `characterize`
+    loops and `TensorDelta.recost` re-runs for dirty layers only. A
+    layer's traffic reads its own placement, its consumers' placements
+    and its own residency bit — nothing else."""
+    datum_bits = float(pkg.cfg.datum_bits)
+    layer = wl.layers[i]
+    region, part = mapping[i]
+    nch = len(region)
+    flows = []
+    dram_bits = 0.0
+    home = pkg.home_dram(region[0])
+    homes = sorted(set(pkg.home_dram(c) for c in region))
+    dram_ports = len(homes)
+    weight_bits = layer.weight * datum_bits
+    out_bits = layer.out * datum_bits
+
+    if weight_bits > 0.0 and not resident[i]:
+        w_bits = weight_bits / max(pkg.cfg.batch, 1)
+        dram_bits += w_bits
+        if part == SP:
+            flows.append((home, tuple(('c', c) for c in region), w_bits, True))
+        else:
+            flows.append((home, tuple(('c', c) for c in region), w_bits, False))
+
+    input_replicated = part == OC
+    if not layer.inputs:
+        in_bits = layer.out * datum_bits
+        dram_bits += in_bits
+        if input_replicated and nch > 1:
+            flows.append((home, tuple(('c', c) for c in region), in_bits, True))
+        else:
+            flows.append((home, tuple(('c', c) for c in region), in_bits, False))
+
+    cons = consumers[i]
+    if cons:
+        shard = out_bits / nch
+        needs_mc = len(cons) >= 2 or any(
+            mapping[c][1] == OC and len(mapping[c][0]) > 1 for c in cons)
+        if needs_mc:
+            union = sorted(set(c for cc in cons for c in mapping[cc][0]))
+            udest = tuple(('c', c) for c in union)
+            for sc in region:
+                flows.append((('c', sc), udest, shard, True))
+        else:
+            cr = mapping[cons[0]][0]
+            per_dst = out_bits / len(cr)
+            for j, dc in enumerate(cr):
+                sc = region[j % nch]
+                flows.append((('c', sc), (('c', dc),), per_dst, False))
+
+    if part == IC and nch > 1:
+        leader = region[0]
+        for c in region[1:]:
+            flows.append((('c', c), (('c', leader),), out_bits, False))
+
+    if not cons:
+        dram_bits += out_bits
+        flows.append((('c', region[0]), (home,), out_bits, False))
+
+    in_bits_total = wl.in_datums(i) * datum_bits
+    act_per_chiplet = (in_bits_total + out_bits) / nch / 8.0
+    act_sram = pkg.cfg.sram_bytes * (1.0 - WEIGHT_SRAM_FRACTION)
+    if act_per_chiplet > act_sram:
+        spill_bits = (act_per_chiplet - act_sram) * 8.0 * nch
+        dram_bits += 2.0 * spill_bits
+        for c in region:
+            flows.append((('c', c), (home,), 2.0 * spill_bits / nch, False))
+
+    noc_bpc = (in_bits_total + weight_bits + out_bits) / nch
+    return {
+        'flows': flows, 'dram_bits': dram_bits,
+        'noc_bits_per_chiplet': noc_bpc, 'dram_ports': dram_ports,
+        'weights_resident': resident[i],
+    }
+
+
 def characterize(wl, mapping, pkg):
     consumers = wl.consumers()
-    datum_bits = float(pkg.cfg.datum_bits)
     resident = plan_weight_residency(wl, mapping, pkg)
-    out = []
-    for i, layer in enumerate(wl.layers):
-        region, part = mapping[i]
-        nch = len(region)
-        flows = []
-        dram_bits = 0.0
-        home = pkg.home_dram(region[0])
-        homes = sorted(set(pkg.home_dram(c) for c in region))
-        dram_ports = len(homes)
-        weight_bits = layer.weight * datum_bits
-        out_bits = layer.out * datum_bits
-
-        if weight_bits > 0.0 and not resident[i]:
-            w_bits = weight_bits / max(pkg.cfg.batch, 1)
-            dram_bits += w_bits
-            if part == SP:
-                flows.append((home, tuple(('c', c) for c in region), w_bits, True))
-            else:
-                flows.append((home, tuple(('c', c) for c in region), w_bits, False))
-
-        input_replicated = part == OC
-        if not layer.inputs:
-            in_bits = layer.out * datum_bits
-            dram_bits += in_bits
-            if input_replicated and nch > 1:
-                flows.append((home, tuple(('c', c) for c in region), in_bits, True))
-            else:
-                flows.append((home, tuple(('c', c) for c in region), in_bits, False))
-
-        cons = consumers[i]
-        if cons:
-            shard = out_bits / nch
-            needs_mc = len(cons) >= 2 or any(
-                mapping[c][1] == OC and len(mapping[c][0]) > 1 for c in cons)
-            if needs_mc:
-                union = sorted(set(c for cc in cons for c in mapping[cc][0]))
-                udest = tuple(('c', c) for c in union)
-                for sc in region:
-                    flows.append((('c', sc), udest, shard, True))
-            else:
-                cr = mapping[cons[0]][0]
-                per_dst = out_bits / len(cr)
-                for j, dc in enumerate(cr):
-                    sc = region[j % nch]
-                    flows.append((('c', sc), (('c', dc),), per_dst, False))
-
-        if part == IC and nch > 1:
-            leader = region[0]
-            for c in region[1:]:
-                flows.append((('c', c), (('c', leader),), out_bits, False))
-
-        if not cons:
-            dram_bits += out_bits
-            flows.append((('c', region[0]), (home,), out_bits, False))
-
-        in_bits_total = wl.in_datums(i) * datum_bits
-        act_per_chiplet = (in_bits_total + out_bits) / nch / 8.0
-        act_sram = pkg.cfg.sram_bytes * (1.0 - WEIGHT_SRAM_FRACTION)
-        if act_per_chiplet > act_sram:
-            spill_bits = (act_per_chiplet - act_sram) * 8.0 * nch
-            dram_bits += 2.0 * spill_bits
-            for c in region:
-                flows.append((('c', c), (home,), 2.0 * spill_bits / nch, False))
-
-        noc_bpc = (in_bits_total + weight_bits + out_bits) / nch
-        out.append({
-            'flows': flows, 'dram_bits': dram_bits,
-            'noc_bits_per_chiplet': noc_bpc, 'dram_ports': dram_ports,
-            'weights_resident': resident[i],
-        })
-    return out
+    return [characterize_layer(wl, mapping, pkg, consumers, resident, i)
+            for i in range(len(wl.layers))]
 
 # ---------------------------------------------------------------- cost
 
@@ -833,37 +841,102 @@ def decide_eligible(flow, max_hops, multicast_only=True, threshold=1):
     return max_hops >= threshold
 
 
-def build_tensors(wl, mapping, pkg, multicast_only=True):
-    traffic = characterize(wl, mapping, pkg)
-    noc_bw = pkg.noc_aggregate_bw() / NOC_HOTSPOT_FACTOR
-    dram_bw_bits = pkg.cfg.dram_bw_bytes * 8.0
-    e2p = mean_edge_to_pe_hops(pkg.cfg)
-    layers = []
-    for i, layer in enumerate(wl.layers):
-        region, part = mapping[i]
+class LayerCoster:
+    """Per-layer costing with the loop-invariant package terms hoisted
+    (mirror of sim::cost::LayerCoster) — the ONE arithmetic shared by
+    the full `build_tensors` and the incremental `TensorDelta.recost`,
+    so the two can never drift."""
+    __slots__ = ('pkg', 'noc_bw', 'dram_bw_bits', 'e2p', 'multicast_only')
+
+    def __init__(self, pkg, multicast_only=True):
+        self.pkg = pkg
+        self.noc_bw = pkg.noc_aggregate_bw() / NOC_HOTSPOT_FACTOR
+        self.dram_bw_bits = pkg.cfg.dram_bw_bytes * 8.0
+        self.e2p = mean_edge_to_pe_hops(pkg.cfg)
+        self.multicast_only = multicast_only
+
+    def cost_layer(self, layer, region, t):
         nch = float(len(region))
-        t = traffic[i]
-        rate = pkg.cfg.chiplet_macs_per_s() * nch
+        rate = self.pkg.cfg.chiplet_macs_per_s() * nch
         util = UTIL[layer.kind] / (1.0 + 0.04 * (nch - 1.0))
         t_comp = layer.macs / (rate * util)
-        t_dram = t['dram_bits'] / (dram_bw_bits * max(t['dram_ports'], 1))
-        t_noc = t['noc_bits_per_chiplet'] * e2p / noc_bw
+        t_dram = t['dram_bits'] / (self.dram_bw_bits * max(t['dram_ports'], 1))
+        t_noc = t['noc_bits_per_chiplet'] * self.e2p / self.noc_bw
         nop_vol_hops = 0.0
         elig_vh = [0.0] * HOP_BUCKETS
         elig_v = [0.0] * HOP_BUCKETS
         for flow in t['flows']:
-            vh, mh = wired_path(pkg, flow)
+            vh, mh = wired_path(self.pkg, flow)
             nop_vol_hops += vh
             if mh == 0:
                 continue
-            if decide_eligible(flow, mh, multicast_only, 1):
+            if decide_eligible(flow, mh, self.multicast_only, 1):
                 b = min(mh, HOP_BUCKETS) - 1
                 elig_vh[b] += vh
                 elig_v[b] += flow[2]
-        layers.append({'t_comp': t_comp, 't_dram': t_dram, 't_noc': t_noc,
-                       'nop_vol_hops': nop_vol_hops,
-                       'elig_vol_hops': elig_vh, 'elig_vol': elig_v})
-    return {'layers': layers, 'nop_agg_bw': pkg.nop_aggregate_bw() / NOP_CONGESTION_FACTOR}
+        return {'t_comp': t_comp, 't_dram': t_dram, 't_noc': t_noc,
+                'nop_vol_hops': nop_vol_hops,
+                'elig_vol_hops': elig_vh, 'elig_vol': elig_v}
+
+    def nop_agg_bw(self):
+        return self.pkg.nop_aggregate_bw() / NOP_CONGESTION_FACTOR
+
+
+def build_tensors(wl, mapping, pkg, multicast_only=True):
+    traffic = characterize(wl, mapping, pkg)
+    coster = LayerCoster(pkg, multicast_only)
+    layers = [coster.cost_layer(layer, mapping[i][0], traffic[i])
+              for i, layer in enumerate(wl.layers)]
+    return {'layers': layers, 'nop_agg_bw': coster.nop_agg_bw()}
+
+
+class TensorDelta:
+    """Incremental tensor rebuild for single-layer placement moves
+    (mirror of sim::cost::TensorDelta). A layer's traffic depends on
+    (a) its own placement, (b) its consumers' placements, and (c) the
+    global weight-residency plan, so a move that re-places layer `j`
+    dirties `j`, `j`'s producers (their activation pushes target `j`'s
+    region) and any layer whose residency bit flips. Re-costing that
+    dirty set through the same characterize_layer/LayerCoster
+    arithmetic as a full build is bit-exact by construction — checked
+    by mirror_checks_delta.py on all 15 paper workloads."""
+    __slots__ = ('wl', 'pkg', 'coster', 'consumers')
+
+    def __init__(self, wl, pkg, multicast_only=True):
+        self.wl = wl
+        self.pkg = pkg
+        self.coster = LayerCoster(pkg, multicast_only)
+        self.consumers = wl.consumers()
+
+    def residency(self, mapping):
+        """The candidate mapping's weight-residency plan (global: a
+        greedy budget fill over footprint-sorted layers — any placement
+        move can flip any layer's bit)."""
+        return plan_weight_residency(self.wl, mapping, self.pkg)
+
+    def dirty_layers(self, touched, old_resident, new_resident):
+        """Layers a placement change at `touched` dirties, given the
+        incumbent and candidate residency plans. Sorted and deduped."""
+        dirty = {touched}
+        dirty.update(self.wl.layers[touched].inputs)
+        for j, (o, n) in enumerate(zip(old_resident, new_resident)):
+            if o != n:
+                dirty.add(j)
+        return sorted(dirty)
+
+    def recost(self, mapping, resident, dirty, layers):
+        """Re-derive traffic and costs for the dirty layers of a
+        candidate mapping, writing them into `layers` in place. (The
+        Rust recost validates the mapping first; the mirror's perturb
+        only ever produces valid mappings, so there is no Err arm.)"""
+        for j in dirty:
+            t = characterize_layer(self.wl, mapping, self.pkg,
+                                   self.consumers, resident, j)
+            layers[j] = self.coster.cost_layer(
+                self.wl.layers[j], mapping[j][0], t)
+
+    def nop_agg_bw(self):
+        return self.coster.nop_agg_bw()
 
 # ---------------------------------------------------------------- sim
 
@@ -957,9 +1030,50 @@ def anneal_generic(initial, iters, temp_frac, seed, perturb, cost, clone):
     return best, best_cost, initial_cost, accepted, evaluated
 
 
+def anneal_generic_model(initial, iters, temp_frac, seed, perturb,
+                         seed_cost, candidate_cost, accepted_hook, clone):
+    """anneal_generic over a stateful cost model (mirror of
+    util::anneal::anneal_model): seed_cost prices the initial state and
+    seeds the model's caches, candidate_cost prices each perturbed
+    clone, and accepted_hook(state) fires exactly when a candidate is
+    accepted (the delta models commit their staged rows there). Same
+    schedule, RNG draws and best-state rule as anneal_generic."""
+    if iters == 0:
+        raise ValueError("annealing needs at least one iteration")
+    rng = Pcg32.seeded(seed)
+    current = initial
+    current_cost = seed_cost(current)
+    if not math.isfinite(current_cost):
+        raise ValueError(f"initial state has non-finite cost {current_cost}")
+    initial_cost = current_cost
+    best = current
+    best_cost = current_cost
+    accepted = 0
+    evaluated = 1
+    t0 = max(initial_cost * temp_frac, 5e-324)
+    for i in range(iters):
+        temp = t0 * max(1.0 - i / iters, 1e-3)
+        cand = clone(current)
+        perturb(cand, rng)
+        cand_cost = candidate_cost(cand)
+        evaluated += 1
+        delta = cand_cost - current_cost
+        if delta <= 0.0 or rng.coin(math.exp(-delta / temp)):
+            accepted_hook(cand)
+            current = cand
+            current_cost = cand_cost
+            accepted += 1
+            if current_cost < best_cost:
+                best = current
+                best_cost = current_cost
+    return best, best_cost, initial_cost, accepted, evaluated
+
+
 def perturb_mapping(mapping, pkg, rng):
     """One placement move (mapper::perturb): resize, relocate, or
-    re-partition one layer's region. Mutates `mapping` in place."""
+    re-partition one layer's region. Mutates `mapping` in place and
+    returns the perturbed layer index (the delta searches' dirty-set
+    seed)."""
     rows, cols = pkg.cfg.grid
     li = rng.below(len(mapping))
     region, part = mapping[li]
@@ -983,6 +1097,7 @@ def perturb_mapping(mapping, pkg, rng):
             if c != part:
                 mapping[li] = (region, c)
                 break
+    return li
 
 
 def anneal(wl, pkg, iters, temp_frac, seed, cost):
@@ -1100,10 +1215,19 @@ def evaluate_policy(t, decisions, wl_bw):
     return r
 
 
-def greedy_layer(l, nop_agg_bw, wl_bw, max_threshold):
-    """Closed-form water-filling for one layer (GreedyPerLayer)."""
+def greedy_layer_prepared(pl, nop_agg_bw, wl_bw, max_threshold):
+    """Closed-form water-filling for one prepared layer (mirror of
+    sim::policy::greedy_layer_prepared) — the suffix tabulation turns
+    every eligibility read into an O(1) lookup. Bit-exact with the old
+    raw-tensor spelling: prepared_eligible == eligible_suffix, and the
+    inlined candidate scoring is the same float ops as
+    prepared_outcome (max is exact, so pre-folding the three fixed
+    components cannot change the latency)."""
+    l = pl['layer']
+    suffix = pl['suffix']
+    nvh = l['nop_vol_hops']
     t_other = max(l['t_comp'], l['t_dram'], l['t_noc'])
-    t_nop0 = l['nop_vol_hops'] / nop_agg_bw
+    t_nop0 = nvh / nop_agg_bw
     no_offload = (1, 0.0)
     if t_nop0 <= t_other:
         return no_offload
@@ -1112,58 +1236,121 @@ def greedy_layer(l, nop_agg_bw, wl_bw, max_threshold):
     best_wl = 0.0
     max_d = min(max(int(max_threshold), 1), HOP_BUCKETS)
     for d in range(1, max_d + 1):
-        e_vh, e_v = eligible_suffix(l, d)
+        e_vh, e_v = suffix[d - 1]
         if e_vh <= 0.0:
             continue
         if e_v > 0.0:
-            p_eq = (l['nop_vol_hops'] * wl_bw) / (e_v * nop_agg_bw + e_vh * wl_bw)
+            p_eq = (nvh * wl_bw) / (e_v * nop_agg_bw + e_vh * wl_bw)
         else:
             p_eq = 1.0
-        p_fill = (l['nop_vol_hops'] - t_other * nop_agg_bw) / e_vh
+        p_fill = (nvh - t_other * nop_agg_bw) / e_vh
         p = _clamp(min(p_eq, p_fill), 0.0, 1.0)
-        lat, wl = layer_outcome(l, d, p, nop_agg_bw, wl_bw)
-        if lat < best_lat or (lat == best_lat and wl < best_wl):
+        moved_v = e_v * p
+        t_nop = max(nvh - e_vh * p, 0.0) / nop_agg_bw
+        t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+        lat = max(t_other, t_nop, t_wl)
+        if lat < best_lat or (lat == best_lat and moved_v < best_wl):
             best = (d, p)
             best_lat = lat
-            best_wl = wl
+            best_wl = moved_v
     return best
 
 
+def greedy_layer(l, nop_agg_bw, wl_bw, max_threshold):
+    """Closed-form water-filling for one raw layer (GreedyPerLayer) —
+    greedy_layer_prepared over a throwaway tabulation, exactly like the
+    Rust spelling."""
+    return greedy_layer_prepared(prepared_layer(l), nop_agg_bw, wl_bw,
+                                 max_threshold)
+
+
 def greedy_decisions(t, wl_bw, max_threshold):
-    return [greedy_layer(l, t['nop_agg_bw'], wl_bw, max_threshold)
-            for l in t['layers']]
+    prep = prepared_costs(t)
+    return [greedy_layer_prepared(pl, prep['nop_agg_bw'], wl_bw, max_threshold)
+            for pl in prep['layers']]
+
+
+def oracle_layer_prepared(pl, nop_agg_bw, wl_bw, thresholds, pinjs):
+    """One prepared layer's exhaustive grid + greedy-candidate scan
+    (mirror of sim::policy::oracle_layer_prepared) — pure per-layer
+    function, shared with the comap delta search's oracle re-fit.
+    Candidate scoring is inlined prepared_outcome (same float ops,
+    same threshold-major candidate order, greedy candidate last)."""
+    l = pl['layer']
+    suffix = pl['suffix']
+    nvh = l['nop_vol_hops']
+    t_fixed = max(l['t_comp'], l['t_dram'], l['t_noc'])
+    best = (1, 0.0)
+    best_lat, best_wl = prepared_outcome(pl, 1, 0.0, nop_agg_bw, wl_bw)
+    gcand = greedy_layer_prepared(pl, nop_agg_bw, wl_bw, max(thresholds))
+    for d in thresholds:
+        di = max(int(d), 1)
+        if di > HOP_BUCKETS:
+            e_vh = e_v = 0.0
+        else:
+            e_vh, e_v = suffix[di - 1]
+        for p in pinjs:
+            moved_v = e_v * p
+            t_nop = max(nvh - e_vh * p, 0.0) / nop_agg_bw
+            t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+            lat = max(t_fixed, t_nop, t_wl)
+            if lat < best_lat or (lat == best_lat and moved_v < best_wl):
+                best = (d, p)
+                best_lat = lat
+                best_wl = moved_v
+    lat, wl = prepared_outcome(pl, gcand[0], gcand[1], nop_agg_bw, wl_bw)
+    if lat < best_lat or (lat == best_lat and wl < best_wl):
+        best = gcand
+    return best
+
+
+def oracle_layer(l, nop_agg_bw, wl_bw, thresholds, pinjs):
+    """oracle_layer_prepared from raw layer costs."""
+    return oracle_layer_prepared(prepared_layer(l), nop_agg_bw, wl_bw,
+                                 thresholds, pinjs)
 
 
 def oracle_decisions(t, wl_bw, thresholds, pinjs):
     """Per-layer exhaustive over the grid plus the greedy candidate
     (OraclePerLayer)."""
-    max_t = max(thresholds)
-    out = []
-    for l in t['layers']:
-        best = (1, 0.0)
-        best_lat, best_wl = layer_outcome(l, 1, 0.0, t['nop_agg_bw'], wl_bw)
-        cands = [(d, p) for d in thresholds for p in pinjs]
-        cands.append(greedy_layer(l, t['nop_agg_bw'], wl_bw, max_t))
-        for cand in cands:
-            lat, wl = layer_outcome(l, cand[0], cand[1], t['nop_agg_bw'], wl_bw)
-            if lat < best_lat or (lat == best_lat and wl < best_wl):
-                best = cand
-                best_lat = lat
-                best_wl = wl
-        out.append(best)
-    return out
+    prep = prepared_costs(t)
+    return [oracle_layer_prepared(pl, prep['nop_agg_bw'], wl_bw,
+                                  thresholds, pinjs)
+            for pl in prep['layers']]
 
 
 def best_static_pair(t, wl_bw, thresholds, pinjs):
     """Best uniform pair over the grid, threshold-major, strictly-greater
-    replacement (ties keep the earliest grid point)."""
+    replacement (ties keep the earliest grid point). Routed through the
+    prepared tabulation like the Rust spelling — bit-exact with the old
+    per-point evaluate_policy scan."""
     wired = evaluate_wired(t)['total_s']
+    prep = prepared_costs(t)
+    nop_agg_bw = prep['nop_agg_bw']
     best = None
     for d in thresholds:
+        di = max(int(d), 1)
+        # Per-threshold row table: the (fixed latency, nop volume,
+        # eligibility) tuple of every layer is invariant across the
+        # pinj axis, so hoist it out of the inner grid loop. The total
+        # below is the same per-layer-max fold (in layer order) that
+        # from_layers performs — bit-exact with the evaluate_uniform
+        # spelling this replaces.
+        rows = []
+        for pl in prep['layers']:
+            l = pl['layer']
+            e_vh, e_v = ((0.0, 0.0) if di > HOP_BUCKETS
+                         else pl['suffix'][di - 1])
+            rows.append((max(l['t_comp'], l['t_dram'], l['t_noc']),
+                         l['nop_vol_hops'], e_vh, e_v))
         for p in pinjs:
-            decisions = [(d, p)] * len(t['layers'])
-            r = evaluate_policy(t, decisions, wl_bw)
-            s = checked_speedup(wired, r['total_s'])
+            total = 0.0
+            for t_fixed, nvh, e_vh, e_v in rows:
+                moved_v = e_v * p
+                t_nop = max(nvh - e_vh * p, 0.0) / nop_agg_bw
+                t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+                total += max(t_fixed, t_nop, t_wl)
+            s = checked_speedup(wired, total)
             if best is None or s > best[0]:
                 best = (s, d, p)
     return best[1], best[2]
@@ -1172,12 +1359,12 @@ def best_static_pair(t, wl_bw, thresholds, pinjs):
 def controller_trajectory(t, wl_bw, threshold, target_wl_share, steps):
     """Proportional controller (ControllerPolicy / balance_controller)."""
     wired = evaluate_wired(t)['total_s']
+    prep = prepared_costs(t)
     pinj = 0.4
     gain = 0.5
     traj = []
     for _ in range(steps):
-        decisions = [(threshold, pinj)] * len(t['layers'])
-        r = evaluate_policy(t, decisions, wl_bw)
+        r = prepared_evaluate_uniform(prep, threshold, pinj, wl_bw)
         speedup = checked_speedup(wired, r['total_s'])
         wl_share = r['shares'][4]
         traj.append((pinj, speedup, wl_share))
@@ -1224,10 +1411,205 @@ def evaluate_policies(t, wl_bw, specs, thresholds, pinjs):
     return out
 
 
+# ---------------------------------------------------------------- delta
+# Mirror of rust/src/sim/delta.rs — the prepared + delta layers of the
+# incremental cost stack. Bit-exactness is the contract: suffix entries
+# re-run the SAME ascending accumulation eligible_suffix has always
+# used, and the delta total re-folds every layer row in layer order.
+# Checked by mirror_checks_delta.py on all 15 paper workloads.
+
+
+def layer_row(l, threshold, pinj, nop_agg_bw, wl_bw):
+    """One layer's five component times and offloaded bits under a
+    decision (mirror of sim::delta::layer_row) — THE inner-loop
+    arithmetic of evaluate_policy, shared by the delta path so the
+    copies can never drift."""
+    moved_vh, moved_v = eligible_suffix(l, threshold)
+    moved_vh *= pinj
+    moved_v *= pinj
+    t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / nop_agg_bw
+    t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+    return [l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl], moved_v
+
+
+def row_latency(comps):
+    """A layer's latency under a component row — bit-exact with
+    from_layers' per-layer bottleneck scan."""
+    k_best = 0
+    for k in range(1, 5):
+        if comps[k] > comps[k_best]:
+            k_best = k
+    return comps[k_best]
+
+
+def prepared_layer(l):
+    """Tabulated eligibility suffix sums of one layer (mirror of
+    sim::delta::PreparedLayer::new): each entry re-runs the ascending
+    accumulation from its own starting bucket — the only tabulation
+    that is bit-exact with eligible_suffix."""
+    return {'layer': l,
+            'suffix': [eligible_suffix(l, d)
+                       for d in range(1, HOP_BUCKETS + 1)]}
+
+
+def prepared_eligible(pl, threshold):
+    """O(1) eligible_suffix lookup (PreparedLayer::eligible)."""
+    d = max(int(threshold), 1)
+    if d > HOP_BUCKETS:
+        return 0.0, 0.0
+    return pl['suffix'][d - 1]
+
+
+def prepared_costs(t):
+    """Prepared layer of the incremental cost stack (PreparedCosts):
+    built once per tensors, evaluated many times."""
+    return {'layers': [prepared_layer(l) for l in t['layers']],
+            'nop_agg_bw': t['nop_agg_bw']}
+
+
+def prepared_row(pl, threshold, pinj, nop_agg_bw, wl_bw):
+    """PreparedLayer::row — layer_row over the tabulated suffix."""
+    l = pl['layer']
+    moved_vh, moved_v = prepared_eligible(pl, threshold)
+    moved_vh *= pinj
+    moved_v *= pinj
+    t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / nop_agg_bw
+    t_wl = moved_v / wl_bw if moved_v > 0.0 else 0.0
+    return [l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl], moved_v
+
+
+def prepared_outcome(pl, threshold, pinj, nop_agg_bw, wl_bw):
+    """PreparedLayer::outcome — (latency, offloaded bits) under one
+    decision; the prepared spelling of layer_outcome, used by the
+    closed-form policies' candidate scans."""
+    comps, moved_v = prepared_row(pl, threshold, pinj, nop_agg_bw, wl_bw)
+    return row_latency(comps), moved_v
+
+
+def prepared_evaluate_uniform(prep, threshold, pinj, wl_bw):
+    """PreparedCosts::evaluate_uniform — one uniform decision for every
+    layer without materializing a decision vector (the grid-sweep fast
+    path)."""
+    wl_bits = 0.0
+    lat_k = []
+    for pl in prep['layers']:
+        comps, moved_v = prepared_row(pl, threshold, pinj,
+                                      prep['nop_agg_bw'], wl_bw)
+        wl_bits += moved_v
+        lat_k.append(comps)
+    r = from_layers(lat_k)
+    r['wl_bits'] = wl_bits
+    return r
+
+
+def prepared_evaluate(prep, decisions, wl_bw):
+    """PreparedCosts::evaluate — bit-exact with evaluate_policy on the
+    source tensors."""
+    assert len(decisions) == len(prep['layers'])
+    wl_bits = 0.0
+    lat_k = []
+    for pl, (threshold, pinj) in zip(prep['layers'], decisions):
+        comps, moved_v = prepared_row(pl, threshold, pinj,
+                                      prep['nop_agg_bw'], wl_bw)
+        wl_bits += moved_v
+        lat_k.append(comps)
+    r = from_layers(lat_k)
+    r['wl_bits'] = wl_bits
+    return r
+
+
+class DeltaEvaluator:
+    """Delta layer of the incremental cost stack (mirror of
+    sim::delta::DeltaEvaluator): the per-layer component rows and
+    offloaded-bits terms of one incumbent (tensors, decisions) state,
+    re-priced by touching only the layers a move changes.
+
+    Protocol: price_changes stages the changed layers' rows and returns
+    the candidate total (bit-exact with a full evaluate_policy of the
+    candidate state); commit adopts the staged rows when the annealer
+    accepts the move; a rejected move is simply never committed. The
+    total is a re-fold of EVERY row in layer order — add/subtract
+    updates of an f64 accumulator are not bit-exact."""
+    __slots__ = ('rows', 'moved', 'nop_agg_bw', 'wl_bw', 'pending')
+
+    def __init__(self, t, decisions, wl_bw):
+        assert len(decisions) == len(t['layers'])
+        self.nop_agg_bw = t['nop_agg_bw']
+        self.wl_bw = wl_bw
+        self.rows = []
+        self.moved = []
+        for l, (threshold, pinj) in zip(t['layers'], decisions):
+            comps, moved_v = layer_row(l, threshold, pinj,
+                                       self.nop_agg_bw, wl_bw)
+            self.rows.append(comps)
+            self.moved.append(moved_v)
+        self.pending = []
+
+    def price_changes(self, changes):
+        """Stage re-priced rows for the changed layers (each entry:
+        layer index, that layer's CANDIDATE cost dict, its CANDIDATE
+        (threshold, pinj) decision) and return the candidate total.
+        Duplicate indices are allowed; the last entry wins."""
+        pending = []
+        for i, l, (threshold, pinj) in changes:
+            assert i < len(self.rows), f"layer index {i} out of range"
+            comps, moved_v = layer_row(l, threshold, pinj,
+                                       self.nop_agg_bw, self.wl_bw)
+            pending.append((i, comps, moved_v))
+        pending.sort(key=lambda p: p[0])  # stable: last duplicate wins
+        keep = []
+        for p in pending:
+            if keep and keep[-1][0] == p[0]:
+                keep[-1] = p
+            else:
+                keep.append(p)
+        self.pending = keep
+        return self._total_with_pending()
+
+    def commit(self):
+        """Adopt the rows staged by the last price_changes — call
+        exactly when the annealer accepts the move it priced."""
+        for i, comps, moved_v in self.pending:
+            self.rows[i] = comps
+            self.moved[i] = moved_v
+        self.pending = []
+
+    def total(self):
+        """Total of the committed incumbent (pending rows ignored)."""
+        total = 0.0
+        for comps in self.rows:
+            total += row_latency(comps)
+        return total
+
+    def result(self):
+        """Full result dict of the committed incumbent — bit-exact
+        with evaluate_policy on the same (tensors, decisions, wl_bw)."""
+        wl_bits = 0.0
+        for m in self.moved:
+            wl_bits += m
+        r = from_layers(self.rows)
+        r['wl_bits'] = wl_bits
+        return r
+
+    def _total_with_pending(self):
+        # Candidate total: every row in layer order, staged rows
+        # substituted — the same fold as from_layers.
+        total = 0.0
+        p = 0
+        for i, comps in enumerate(self.rows):
+            if p < len(self.pending) and self.pending[p][0] == i:
+                comps = self.pending[p][1]
+                p += 1
+            total += row_latency(comps)
+        return total
+
+
 # ---------------------------------------------------------------- comap
 # Mirror of rust/src/mapping/comap.rs — the joint mapping x offload
 # co-optimization. Bit-exact: same state layout, RNG draw order, policy
-# re-fits and tie-breaks. Checked by mirror_checks_mapping.py.
+# re-fits and tie-breaks. Checked by mirror_checks_mapping.py. co_anneal
+# is the full-reprice twin (comap::co_anneal_full); co_anneal_delta
+# below mirrors the production delta spelling (comap::co_anneal).
 
 class CoState:
     __slots__ = ('mapping', 'tensors', 'decisions', 'broken')
@@ -1262,15 +1644,13 @@ def co_perturb(s, wl, pkg, wl_bw, refit, thresholds, pinjs, rng):
                                            thresholds, pinjs)
 
 
-def co_anneal(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
-              thresholds, pinjs, refit='greedy'):
-    """Joint search (comap::co_anneal): seeds from the best decoupled
-    pipeline over {base, layer-sequential} x the built-in policies
-    (strictly-better replacement, base first, POLICY_NAMES order; the
-    sequential pass is skipped when the base already is the sequential
-    mapping), then anneals the (mapping, decisions) state against the
-    hybrid cost. Per-candidate decoupled minima are reported as
-    base/seq_decoupled_total_s."""
+def decoupled_seed(wl, pkg, base_mapping, wl_bw, thresholds, pinjs):
+    """Best decoupled pipeline over {base, layer-sequential} x the
+    built-in policies (mirror of comap::decoupled_seed): strictly-better
+    replacement, base first, POLICY_NAMES order; the sequential pass is
+    skipped when the base already is the sequential mapping. Returns
+    (mapping, tensors, decisions, policy, total, [base_min, seq_min])
+    — shared by the full and delta spellings of the joint search."""
     best = None  # (mapping, tensors, decisions, policy, total)
     cand_best = [float('inf'), float('inf')]
     seq_mapping = layer_sequential(wl, pkg)
@@ -1285,8 +1665,20 @@ def co_anneal(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
             if best is None or e['result']['total_s'] < best[4]:
                 best = (cand, tensors, e['decisions'], e['policy'],
                         e['result']['total_s'])
-    seed_mapping, tensors, decisions, seed_policy, initial_total = best
-    decisions = list(decisions)
+    mapping, tensors, decisions, policy, total = best
+    return mapping, tensors, list(decisions), policy, total, cand_best
+
+
+def co_anneal(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
+              thresholds, pinjs, refit='greedy'):
+    """Joint search, full-reprice spelling (comap::co_anneal_full —
+    bit-exact with the production delta spelling, see co_anneal_delta):
+    seeds from the best decoupled pipeline, then anneals the (mapping,
+    decisions) state against the hybrid cost. Per-candidate decoupled
+    minima are reported as base/seq_decoupled_total_s."""
+    seed_mapping, tensors, decisions, seed_policy, initial_total, \
+        cand_best = decoupled_seed(wl, pkg, base_mapping, wl_bw,
+                                   thresholds, pinjs)
     out = {'seed_policy': seed_policy,
            'base_decoupled_total_s': cand_best[0],
            'seq_decoupled_total_s': cand_best[1]}
@@ -1306,6 +1698,262 @@ def co_anneal(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
         _co_clone)
     out.update({'mapping': best.mapping, 'tensors': best.tensors,
                 'decisions': best.decisions, 'total_s': best_cost,
+                'initial_total_s': initial_cost,
+                'accepted': accepted, 'evaluated': evaluated})
+    return out
+
+
+# ---------------------------------------------------------- delta searches
+# Mirrors of the production delta-priced searches: mapper::anneal_wired
+# and comap::co_anneal. Same RNG streams and bit-identical candidate
+# totals as the full-reprice spellings above — the parity
+# mirror_checks_delta.py pins — but placement moves re-characterize and
+# re-cost only their dirty layers, per-layer re-fits recompute only
+# dirty fits, and offload re-solves are memoized per tensor generation.
+
+
+class _DeltaState:
+    """Annealer state of the delta searches: the mapping plus the last
+    move descriptor (WiredState / CoDeltaState). For the wired search
+    `last` is the touched layer index; for the joint search it is
+    ('place', li) or ('resolve', spec)."""
+    __slots__ = ('mapping', 'last')
+
+    def __init__(self, mapping, last=None):
+        self.mapping = mapping
+        self.last = last
+
+
+def _clone_delta_state(s):
+    return _DeltaState([p for p in s.mapping], s.last)
+
+
+def anneal_wired(wl, pkg, iters, temp_frac, seed):
+    """Delta spelling of the wired-cost mapping SA (mirror of
+    mapper::anneal_wired): bit-exact with
+
+        anneal(wl, pkg, iters, temp_frac, seed,
+               lambda m: evaluate_wired(build_tensors(wl, m, pkg))['total_s'])
+
+    but each candidate re-derives traffic/costs only for the layers its
+    move dirties. The evaluator runs over the all-zero decision vector
+    with wl_bw=1.0: zero injection prices bit-exactly as
+    evaluate_wired."""
+    if not wl.layers:
+        raise ValueError(f"cannot anneal zero-layer workload {wl.name}")
+    seed_mapping = greedy_sized(wl, pkg)
+    if iters == 0:
+        c = evaluate_wired(build_tensors(wl, seed_mapping, pkg))['total_s']
+        if not math.isfinite(c):
+            raise ValueError(f"greedy seed has non-finite cost {c}")
+        return seed_mapping, c, c, 0
+    delta = TensorDelta(wl, pkg)
+    zero = [(1, 0.0)] * len(wl.layers)
+    cc = {}  # incumbent caches: layers, resident, evaluator, pending
+
+    def seed_cost(state):
+        t = build_tensors(wl, state.mapping, pkg)
+        cc['layers'] = t['layers']
+        cc['resident'] = delta.residency(state.mapping)
+        cc['evaluator'] = DeltaEvaluator(t, zero, 1.0)
+        cc['pending'] = None
+        return cc['evaluator'].total()
+
+    def candidate_cost(state):
+        cc['pending'] = None
+        resident = delta.residency(state.mapping)
+        dirty = delta.dirty_layers(state.last, cc['resident'], resident)
+        layers = list(cc['layers'])
+        delta.recost(state.mapping, resident, dirty, layers)
+        changes = [(j, layers[j], (1, 0.0)) for j in dirty]
+        total = cc['evaluator'].price_changes(changes)
+        cc['pending'] = ([(j, layers[j]) for j in dirty], resident)
+        return total
+
+    def accepted_hook(_state):
+        rows, resident = cc['pending']
+        cc['pending'] = None
+        for j, costs in rows:
+            cc['layers'][j] = costs
+        cc['resident'] = resident
+        cc['evaluator'].commit()
+
+    def do_perturb(s, rng):
+        s.last = perturb_mapping(s.mapping, pkg, rng)
+
+    best, best_cost, initial, accepted, _ev = anneal_generic_model(
+        _DeltaState([p for p in seed_mapping]), iters, temp_frac, seed,
+        do_perturb, seed_cost, candidate_cost, accepted_hook,
+        _clone_delta_state)
+    return best.mapping, best_cost, initial, accepted
+
+
+class _CoDeltaCost:
+    """Cost model of the joint delta search (comap::CoDeltaCost +
+    CoCaches): incumbent tensors/decisions/residency, a DeltaEvaluator,
+    a per-layer refit cache for greedy/oracle, per-generation re-solve
+    memos, and the best-state snapshot the annealer's strictly-better
+    rule would keep."""
+
+    def __init__(self, wl, pkg, wl_bw, thresholds, pinjs, refit,
+                 tensors, decisions, resident, refit_cache, seed_total):
+        self.wl_bw = wl_bw
+        self.thresholds = thresholds
+        self.pinjs = pinjs
+        self.refit = refit
+        self.max_threshold = max(thresholds)
+        self.delta = TensorDelta(wl, pkg)
+        self.tensors = {'layers': list(tensors['layers']),
+                        'nop_agg_bw': tensors['nop_agg_bw']}
+        self.decisions = list(decisions)
+        self.resident = resident
+        self.refit_cache = refit_cache  # list for greedy/oracle, else None
+        self.evaluator = DeltaEvaluator(tensors, decisions, wl_bw)
+        self.gen = 0  # tensor generation: memo key for re-solves
+        self.memo = [None, None]  # (gen, decisions) for oracle/static
+        self.pending = None
+        self.best_cost = seed_total
+        self.best_tensors = {'layers': list(tensors['layers']),
+                             'nop_agg_bw': tensors['nop_agg_bw']}
+        self.best_decisions = list(decisions)
+        self.last_total = seed_total
+
+    def seed_cost(self, _state):
+        self.last_total = self.evaluator.total()
+        return self.last_total
+
+    def candidate_cost(self, state):
+        self.pending = None
+        kind, arg = state.last
+        if kind == 'place':
+            return self._price_place(state.mapping, arg)
+        return self._price_resolve(arg)
+
+    def accepted(self, _state):
+        kind, payload = self.pending
+        self.pending = None
+        if kind == 'place':
+            rows, resident, decisions, refit = payload
+            for j, costs in rows:
+                self.tensors['layers'][j] = costs
+            self.resident = resident
+            self.decisions = decisions
+            self.refit_cache = refit
+            self.gen += 1
+        else:
+            self.decisions = payload
+        self.evaluator.commit()
+        # Mirror the annealer's best-state rule (strict improvement) so
+        # the model can hand back the best state's tensors/decisions.
+        if self.last_total < self.best_cost:
+            self.best_cost = self.last_total
+            self.best_tensors = {'layers': list(self.tensors['layers']),
+                                 'nop_agg_bw': self.tensors['nop_agg_bw']}
+            self.best_decisions = list(self.decisions)
+
+    def _price_place(self, m, li):
+        resident = self.delta.residency(m)
+        dirty = self.delta.dirty_layers(li, self.resident, resident)
+        layers = list(self.tensors['layers'])
+        self.delta.recost(m, resident, dirty, layers)
+        nop_agg_bw = self.tensors['nop_agg_bw']
+        if self.refit_cache is not None:
+            # Per-layer refit spec: clean layers' costs are
+            # bit-identical, so their cached fits are exactly what a
+            # full policy_decisions would recompute.
+            decisions = list(self.refit_cache)
+            for j in dirty:
+                if self.refit == 'greedy':
+                    decisions[j] = greedy_layer(
+                        layers[j], nop_agg_bw, self.wl_bw,
+                        self.max_threshold)
+                else:
+                    decisions[j] = oracle_layer(
+                        layers[j], nop_agg_bw, self.wl_bw,
+                        self.thresholds, self.pinjs)
+        else:
+            # Global refit spec (static/controller): the decision reads
+            # every layer, so re-fit in full on the candidate tensors
+            # (still incrementally rebuilt).
+            cand = {'layers': layers, 'nop_agg_bw': nop_agg_bw}
+            decisions = policy_decisions(self.refit, cand, self.wl_bw,
+                                         self.thresholds, self.pinjs)
+        # Price every layer whose row changed: dirty tensors plus any
+        # layer whose re-fit decision moved against the incumbent's.
+        price_dirty = sorted(set(dirty) | set(
+            j for j, (n, o) in enumerate(zip(decisions, self.decisions))
+            if n != o))
+        changes = [(j, layers[j], decisions[j]) for j in price_dirty]
+        total = self.evaluator.price_changes(changes)
+        rows = [(j, layers[j]) for j in dirty]
+        refit = list(decisions) if self.refit_cache is not None else None
+        self.pending = ('place', (rows, resident, decisions, refit))
+        self.last_total = total
+        return total
+
+    def _price_resolve(self, spec):
+        # Memoized per tensor generation: the decision vector is a pure
+        # function of the incumbent tensors.
+        slot = 0 if spec == 'oracle' else 1
+        memo = self.memo[slot]
+        if memo is not None and memo[0] == self.gen:
+            decisions = list(memo[1])
+        else:
+            decisions = policy_decisions(spec, self.tensors, self.wl_bw,
+                                         self.thresholds, self.pinjs)
+            self.memo[slot] = (self.gen, list(decisions))
+        price_dirty = [j for j, (n, o)
+                       in enumerate(zip(decisions, self.decisions)) if n != o]
+        changes = [(j, self.tensors['layers'][j], decisions[j])
+                   for j in price_dirty]
+        total = self.evaluator.price_changes(changes)
+        self.pending = ('resolve', decisions)
+        self.last_total = total
+        return total
+
+
+def _co_perturb_delta(s, pkg, rng):
+    """Delta spelling of co_perturb: identical RNG draw order
+    (below(4), then either the placement draws or one coin(0.5)), but
+    tensor rebuilds and re-fits are deferred to the cost model."""
+    if rng.below(4) < 3:
+        li = perturb_mapping(s.mapping, pkg, rng)
+        s.last = ('place', li)
+    else:
+        s.last = ('resolve', 'oracle' if rng.coin(0.5) else 'static')
+
+
+def co_anneal_delta(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
+                    thresholds, pinjs, refit='greedy'):
+    """Joint search, delta spelling (mirror of comap::co_anneal, the
+    production path): same decoupled seed, RNG stream and bit-identical
+    candidate totals as co_anneal, so trajectories and results are
+    equal — mirror_checks_delta.py pins this."""
+    seed_mapping, tensors, decisions, seed_policy, initial_total, \
+        cand_best = decoupled_seed(wl, pkg, base_mapping, wl_bw,
+                                   thresholds, pinjs)
+    out = {'seed_policy': seed_policy,
+           'base_decoupled_total_s': cand_best[0],
+           'seq_decoupled_total_s': cand_best[1]}
+    if iters == 0:
+        out.update({'mapping': seed_mapping, 'tensors': tensors,
+                    'decisions': decisions, 'total_s': initial_total,
+                    'initial_total_s': initial_total,
+                    'accepted': 0, 'evaluated': 1})
+        return out
+    refit_cache = (policy_decisions(refit, tensors, wl_bw, thresholds, pinjs)
+                   if refit in ('greedy', 'oracle') else None)
+    model = _CoDeltaCost(wl, pkg, wl_bw, thresholds, pinjs, refit,
+                         tensors, decisions,
+                         plan_weight_residency(wl, seed_mapping, pkg),
+                         refit_cache, initial_total)
+    best, best_cost, initial_cost, accepted, evaluated = anneal_generic_model(
+        _DeltaState([p for p in seed_mapping]), iters, temp_frac, seed,
+        lambda s, rng: _co_perturb_delta(s, pkg, rng),
+        model.seed_cost, model.candidate_cost, model.accepted,
+        _clone_delta_state)
+    out.update({'mapping': best.mapping, 'tensors': model.best_tensors,
+                'decisions': model.best_decisions, 'total_s': best_cost,
                 'initial_total_s': initial_cost,
                 'accepted': accepted, 'evaluated': evaluated})
     return out

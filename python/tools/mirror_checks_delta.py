@@ -1,0 +1,211 @@
+"""Incremental-cost-stack assertions against the mirror: the prepared
+tabulation (rust/src/sim/delta.rs PreparedCosts), the DeltaEvaluator
+delta layer, and the delta-wired searches (mapper::anneal_wired,
+comap::co_anneal).
+
+Verifies, without a Rust toolchain, the delta acceptance criteria
+(the Python twin of rust/tests/delta_parity.rs):
+  * prepared parity: suffix tables == eligible_suffix, and
+    prepared_evaluate / prepared_evaluate_uniform == evaluate_policy,
+    on all 15 paper workloads,
+  * closed-form policies routed through the prepared tabulation agree
+    with exhaustive layer_outcome scans,
+  * randomized placement/offload move sequences priced through
+    DeltaEvaluator match a from-scratch build_tensors +
+    evaluate_policy after every step (commits and rejections both),
+  * anneal_wired reproduces the closure-costed anneal field-for-field,
+  * co_anneal_delta reproduces the full-reprice co_anneal for every
+    refit policy, including iters==0,
+  * per-layer outcomes fold to the evaluator total.
+
+CAUTION: this mirrors rust/src/sim/delta.rs, sim/policy.rs,
+mapping/mapper.rs and mapping/comap.rs in Python. If you change the
+Rust delta stack, update cost_mirror.py in the same PR or these
+verdicts are stale.
+"""
+import os, sys, time
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from cost_mirror import *
+
+pkg = Package()
+t0 = time.time()
+results = []
+
+def check(name, cond, detail=""):
+    results.append((name, bool(cond), detail))
+    mark = "PASS" if cond else "FAIL"
+    print(f"[{mark}] {name} {detail}")
+
+GRID_T = [1, 2, 3, 4]
+GRID_P = [0.10 + 0.05 * i for i in range(15)]
+WL_BW = 64e9
+
+# ---- prepared tabulation parity on all 15 paper workloads
+suffix_ok = eval_ok = uniform_ok = True
+for name in WORKLOAD_NAMES:
+    wl = build(name)
+    t = build_tensors(wl, layer_sequential(wl, pkg), pkg)
+    prep = prepared_costs(t)
+    rng = Pcg32.seeded(derive_seed(0xD17A, name))
+    for l, pl in zip(t['layers'], prep['layers']):
+        for d in range(1, HOP_BUCKETS + 1):
+            if prepared_eligible(pl, d) != eligible_suffix(l, d):
+                suffix_ok = False
+        if prepared_eligible(pl, HOP_BUCKETS + 3) != (0.0, 0.0):
+            suffix_ok = False
+    dec = [(GRID_T[rng.below(len(GRID_T))], GRID_P[rng.below(len(GRID_P))])
+           for _ in t['layers']]
+    if prepared_evaluate(prep, dec, WL_BW) != evaluate_policy(t, dec, WL_BW):
+        eval_ok = False
+    for d, p in ((1, 0.0), (2, 0.4), (4, 0.8)):
+        if (prepared_evaluate_uniform(prep, d, p, WL_BW)
+                != evaluate_policy(t, [(d, p)] * len(t['layers']), WL_BW)):
+            uniform_ok = False
+check("prepared suffix tables == eligible_suffix (15 workloads)", suffix_ok)
+check("prepared_evaluate == evaluate_policy on random decisions", eval_ok)
+check("prepared_evaluate_uniform == uniform evaluate_policy", uniform_ok)
+
+# ---- prepared-routed closed-form policies vs exhaustive raw scans
+policy_ok = True
+for name in ("zfnet", "googlenet", "transformer"):
+    wl = build(name)
+    t = build_tensors(wl, layer_sequential(wl, pkg), pkg)
+    prep = prepared_costs(t)
+    nop = t['nop_agg_bw']
+    for l, pl in zip(t['layers'], prep['layers']):
+        blat, bwl = layer_outcome(l, 1, 0.0, nop, WL_BW)
+        ref = (1, 0.0)
+        g = greedy_layer_prepared(pl, nop, WL_BW, max(GRID_T))
+        for cand in [(d, p) for d in GRID_T for p in GRID_P] + [g]:
+            lat, w = layer_outcome(l, cand[0], cand[1], nop, WL_BW)
+            if lat < blat or (lat == blat and w < bwl):
+                ref, blat, bwl = cand, lat, w
+        if oracle_layer_prepared(pl, nop, WL_BW, GRID_T, GRID_P) != ref:
+            policy_ok = False
+    wired = evaluate_wired(t)['total_s']
+    best = None
+    for d in GRID_T:
+        for p in GRID_P:
+            r = evaluate_policy(t, [(d, p)] * len(t['layers']), WL_BW)
+            s = checked_speedup(wired, r['total_s'])
+            if best is None or s > best[0]:
+                best = (s, d, p)
+    if best_static_pair(t, WL_BW, GRID_T, GRID_P) != (best[1], best[2]):
+        policy_ok = False
+check("prepared oracle/static agree with exhaustive layer_outcome scans",
+      policy_ok)
+
+# ---- randomized move sequences price bit-exactly (property test twin)
+steps_ok = True
+for name in WORKLOAD_NAMES:
+    wl = build(name)
+    rng = Pcg32.seeded(derive_seed(0xBEEF, name))
+    delta = TensorDelta(wl, pkg)
+    mapping = layer_sequential(wl, pkg)
+    tensors = build_tensors(wl, mapping, pkg)
+    resident = delta.residency(mapping)
+    n = len(wl.layers)
+    decisions = [(GRID_T[rng.below(len(GRID_T))],
+                  GRID_P[rng.below(len(GRID_P))]) for _ in range(n)]
+    ev = DeltaEvaluator(tensors, decisions, WL_BW)
+    if ev.total() != evaluate_policy(tensors, decisions, WL_BW)['total_s']:
+        steps_ok = False
+    for _ in range(8):
+        if rng.coin(0.5):
+            # Placement move: dirty-set recost + delta price.
+            cand = [p for p in mapping]
+            li = perturb_mapping(cand, pkg, rng)
+            nxt_resident = delta.residency(cand)
+            dirty = delta.dirty_layers(li, resident, nxt_resident)
+            layers = [l for l in tensors['layers']]
+            delta.recost(cand, nxt_resident, dirty, layers)
+            full = build_tensors(wl, cand, pkg)
+            total = ev.price_changes(
+                [(j, layers[j], decisions[j]) for j in dirty])
+            if total != evaluate_policy(full, decisions, WL_BW)['total_s']:
+                steps_ok = False
+            if rng.coin(0.5):
+                ev.commit()
+                mapping = cand
+                tensors = {'layers': layers,
+                           'nop_agg_bw': tensors['nop_agg_bw']}
+                resident = nxt_resident
+        else:
+            # Offload move: re-decide a few random layers.
+            nxt = list(decisions)
+            for _ in range(1 + rng.below(2)):
+                j = rng.below(n)
+                nxt[j] = (GRID_T[rng.below(len(GRID_T))],
+                          GRID_P[rng.below(len(GRID_P))])
+            total = ev.price_changes(
+                [(j, tensors['layers'][j], nj)
+                 for j, (nj, oj) in enumerate(zip(nxt, decisions))
+                 if nj != oj])
+            if total != evaluate_policy(tensors, nxt, WL_BW)['total_s']:
+                steps_ok = False
+            if rng.coin(0.5):
+                ev.commit()
+                decisions = nxt
+check("randomized move sequences price bit-exactly (15 workloads)",
+      steps_ok)
+
+# ---- anneal_wired == the closure-costed anneal, field for field
+wired_ok = True
+for name in ("zfnet", "googlenet"):
+    wl = build(name)
+    def cost(m, wl=wl):
+        return evaluate_wired(build_tensors(wl, m, pkg))['total_s']
+    if (anneal(wl, pkg, 60, 0.25, 0xC0DE, cost)
+            != anneal_wired(wl, pkg, 60, 0.25, 0xC0DE)):
+        wired_ok = False
+check("anneal_wired == closure anneal (zfnet, googlenet)", wired_ok)
+
+# ---- co_anneal_delta == full-reprice co_anneal for every refit
+co_ok = True
+for name, refits in (("googlenet", ("greedy",)),
+                     ("zfnet", ("greedy", "oracle", "static"))):
+    wl = build(name)
+    base = layer_sequential(wl, pkg)
+    for refit in refits:
+        a = co_anneal(wl, pkg, base, WL_BW, 50, 0.25, 7, GRID_T, GRID_P,
+                      refit=refit)
+        b = co_anneal_delta(wl, pkg, base, WL_BW, 50, 0.25, 7, GRID_T,
+                            GRID_P, refit=refit)
+        if a != b:
+            co_ok = False
+check("co_anneal_delta == co_anneal (all refit policies)", co_ok)
+
+wl_g = build("googlenet")
+base_g = layer_sequential(wl_g, pkg)
+za = co_anneal(wl_g, pkg, base_g, WL_BW, 0, 0.25, 1, GRID_T, GRID_P)
+zb = co_anneal_delta(wl_g, pkg, base_g, WL_BW, 0, 0.25, 1, GRID_T, GRID_P)
+check("co_anneal_delta iters==0 == co_anneal iters==0", za == zb)
+
+# ---- per-layer outcomes fold to the evaluator total
+fold_ok = True
+for name in ("zfnet", "transformer"):
+    wl = build(name)
+    t = build_tensors(wl, layer_sequential(wl, pkg), pkg)
+    prep = prepared_costs(t)
+    for d in GRID_T:
+        for p in (0.10, 0.45, 0.80):
+            fold = 0.0
+            for l, pl in zip(t['layers'], prep['layers']):
+                lat, bits = layer_outcome(l, d, p, t['nop_agg_bw'], WL_BW)
+                plat, pbits = prepared_outcome(pl, d, p, t['nop_agg_bw'],
+                                               WL_BW)
+                if (lat, bits) != (plat, pbits):
+                    fold_ok = False
+                fold += lat
+            dec = [(d, p)] * len(t['layers'])
+            if fold != evaluate_policy(t, dec, WL_BW)['total_s']:
+                fold_ok = False
+check("layer_outcome matches prepared path and folds to the total",
+      fold_ok)
+
+print(f"\nelapsed {time.time()-t0:.1f}s")
+fails = [r for r in results if not r[1]]
+print(f"{len(results)-len(fails)}/{len(results)} passed")
+for name, _, detail in fails:
+    print("FAILED:", name, detail)
+sys.exit(1 if fails else 0)

@@ -1,0 +1,176 @@
+//! Incremental-cost-stack trajectory bench: the delta paths (wired SA
+//! via `anneal_wired`, joint search via `co_anneal`, grid sweeps via
+//! the prepared engine path) against their full-reprice baselines,
+//! persisted as `BENCH_delta_eval.json` (bench name ->
+//! `{iters_per_sec, speedup_vs_full}`) so the speedup claim rides with
+//! the tree. Each pair is also asserted bit-equal before it is timed —
+//! a trajectory entry for a diverging pair would be meaningless.
+//!
+//! Run: `cargo bench --bench delta_eval`
+//! Env: `WISPER_BENCH_QUICK=1` shrinks workloads/iters (the CI mode);
+//!      `WISPER_BENCH_OUT=path` overrides the output path (default
+//!      `../BENCH_delta_eval.json`, the repo root when run via cargo).
+
+use std::path::PathBuf;
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::dse::campaign::engine_sweep;
+use wisper::mapping::comap::{co_anneal, co_anneal_full, ComapOptions};
+use wisper::mapping::layer_sequential;
+use wisper::mapping::mapper::{anneal, anneal_wired, SaOptions};
+use wisper::sim::cost::build_tensors;
+use wisper::sim::engine::{AnalyticalEngine, EvalEngine};
+use wisper::sim::evaluate_wired;
+use wisper::sim::policy::{LayerDecision, PolicySpec};
+use wisper::util::benchkit::{
+    bb, bench, report as breport, write_trajectory, BenchRecord,
+};
+use wisper::workloads::build;
+
+fn main() {
+    let quick = std::env::var("WISPER_BENCH_QUICK").is_ok();
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let elig = WirelessConfig {
+        enabled: true,
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..WirelessConfig::default()
+    };
+    let thresholds: Vec<u32> = vec![1, 2, 3, 4];
+    let pinjs: Vec<f64> = (0..15).map(|i| 0.10 + 0.05 * i as f64).collect();
+    let wl_bw = 64e9;
+
+    // Mid/large nets: the delta path's payoff is structural in layer
+    // count (a move touches O(1) layers of O(n)); single-digit-layer
+    // nets spend the win on per-move fixed costs and are not where SA
+    // search time goes in the first place.
+    let workloads: &[&str] = if quick {
+        &["googlenet"]
+    } else {
+        &["googlenet", "resnet50", "resnet152"]
+    };
+    let sa_iters = if quick { 60 } else { 300 };
+    let reps = if quick { 2 } else { 3 };
+
+    let mut ms = Vec::new();
+    let mut records = Vec::new();
+    for name in workloads {
+        let wl = build(name).unwrap();
+        let sa = SaOptions {
+            iters: sa_iters,
+            temp_frac: 0.25,
+            seed: 0xC0DE,
+        };
+
+        // Wired placement SA: closure full-reprice vs delta.
+        let full_search = || {
+            anneal(&wl, &pkg, &sa, |m| {
+                build_tensors(&wl, m, &pkg, &elig)
+                    .map(|t| evaluate_wired(&t).total_s)
+                    .unwrap_or(f64::INFINITY)
+            })
+            .unwrap()
+        };
+        let delta_search = || anneal_wired(&wl, &pkg, &elig, &sa).unwrap();
+        assert_eq!(full_search().cost, delta_search().cost, "{name}");
+        let full = bench(&format!("anneal_full/{name}"), 1, reps, || {
+            bb(full_search().cost)
+        });
+        let fast = bench(&format!("anneal_wired/{name}"), 1, reps, || {
+            bb(delta_search().cost)
+        });
+        records.push(BenchRecord::from_pair(
+            &format!("anneal_wired/{name}"),
+            sa_iters as f64,
+            &full,
+            &fast,
+        ));
+        ms.push(full);
+        ms.push(fast);
+
+        // Joint search: full-reprice twin vs delta.
+        let base = layer_sequential(&wl, &pkg);
+        let copts = ComapOptions {
+            iters: sa_iters,
+            temp_frac: 0.25,
+            seed: 0xC0DE,
+            wl_bw,
+            refit: PolicySpec::Greedy,
+            thresholds: thresholds.clone(),
+            pinjs: pinjs.clone(),
+        };
+        let co_full = || co_anneal_full(&wl, &pkg, &elig, &base, &copts).unwrap();
+        let co_delta = || co_anneal(&wl, &pkg, &elig, &base, &copts).unwrap();
+        assert_eq!(co_full().total_s, co_delta().total_s, "{name}");
+        let full = bench(&format!("co_anneal_full/{name}"), 1, reps, || {
+            bb(co_full().total_s)
+        });
+        let fast = bench(&format!("co_anneal/{name}"), 1, reps, || {
+            bb(co_delta().total_s)
+        });
+        records.push(BenchRecord::from_pair(
+            &format!("co_anneal/{name}"),
+            sa_iters as f64,
+            &full,
+            &fast,
+        ));
+        ms.push(full);
+        ms.push(fast);
+
+        // Grid sweep: per-point full evaluate vs the prepared path
+        // engine_sweep now runs on.
+        let t = build_tensors(&wl, &base, &pkg, &elig).unwrap();
+        let points = (thresholds.len() * pinjs.len()) as f64;
+        let sweep_full = || {
+            let mut acc = 0.0;
+            for &th in &thresholds {
+                for &p in &pinjs {
+                    let d = vec![
+                        LayerDecision {
+                            threshold: th,
+                            pinj: p,
+                        };
+                        t.layers.len()
+                    ];
+                    acc += AnalyticalEngine
+                        .evaluate(&t, &d, wl_bw)
+                        .unwrap()
+                        .result
+                        .total_s;
+                }
+            }
+            acc
+        };
+        let sweep_fast = || {
+            engine_sweep(&t, &thresholds, &pinjs, wl_bw, &AnalyticalEngine)
+                .unwrap()
+        };
+        let full = bench(&format!("sweep_full/{name}"), 1, reps * 3, || {
+            bb(sweep_full())
+        });
+        let fast = bench(&format!("engine_sweep/{name}"), 1, reps * 3, || {
+            bb(sweep_fast().t_wired)
+        });
+        records.push(BenchRecord::from_pair(
+            &format!("engine_sweep/{name}"),
+            points,
+            &full,
+            &fast,
+        ));
+        ms.push(full);
+        ms.push(fast);
+    }
+
+    breport(&ms);
+    let out = std::env::var("WISPER_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("../BENCH_delta_eval.json"));
+    write_trajectory(&out, &records).unwrap();
+    println!("\nwrote {} trajectory entries to {}", records.len(), out.display());
+    for r in &records {
+        println!(
+            "  {:<28} {:>12.1} items/s  {:>6.2}x vs full",
+            r.name, r.iters_per_sec, r.speedup_vs_full
+        );
+    }
+}

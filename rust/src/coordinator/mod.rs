@@ -36,12 +36,12 @@ use crate::dse::{
 use crate::energy::EnergyBreakdown;
 use crate::experiment::figures;
 use crate::mapping::comap::{co_anneal, ComapOptions, ComapResult, MappingObjective};
-use crate::mapping::mapper::{anneal, SaOptions};
+use crate::mapping::mapper::{anneal_wired, SaOptions};
 use crate::mapping::{layer_sequential, Mapping};
 use crate::runtime::Runtime;
 use crate::sim::cost::{build_tensors, CostTensors};
 use crate::sim::engine::EvalBackend;
-use crate::sim::{evaluate_wired, EvalResult};
+use crate::sim::EvalResult;
 use crate::util::anneal::derive_seed;
 use crate::util::threadpool::{default_workers, parallel_map};
 use crate::workloads::{build, Workload, WORKLOAD_NAMES};
@@ -179,13 +179,10 @@ impl Coordinator {
         let workload = build(name)?;
         let elig = self.eligibility();
         let (mapping, sa_initial_cost) = if search.optimize {
-            let pkg = &self.pkg;
-            let wl = &workload;
-            let r = anneal(wl, pkg, &search.sa, |m| {
-                build_tensors(wl, m, pkg, &elig)
-                    .map(|t| evaluate_wired(&t).total_s)
-                    .unwrap_or(f64::INFINITY)
-            })?;
+            // Delta-priced wired search — bit-exact with the closure
+            // spelling `anneal(.., |m| build_tensors(..).map(..))` it
+            // replaced, but each move re-costs only its dirty layers.
+            let r = anneal_wired(&workload, &self.pkg, &elig, &search.sa)?;
             (r.mapping, r.initial_cost)
         } else {
             (layer_sequential(&workload, &self.pkg), 0.0)

@@ -70,7 +70,7 @@ use crate::report::Json;
 use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
 use crate::sim::cost::CostTensors;
 use crate::sim::engine::{EvalBackend, EvalEngine};
-use crate::sim::evaluate_wired;
+use crate::sim::{evaluate_wired, PreparedCosts};
 use crate::sim::policy::{
     checked_speedup, evaluate_policies_backend, LayerDecision, PolicySpec,
 };
@@ -598,10 +598,20 @@ pub fn eval_unit(
     }
     let mut points = Vec::with_capacity(configs.len());
     let mut t_wired = 0.0;
-    for chunk in configs.chunks(NUM_CONFIGS) {
+    for (ci, chunk) in configs.chunks(NUM_CONFIGS).enumerate() {
         let input = pack_input(tensors, chunk)?;
         let out = runtime.evaluate(&input)?;
-        t_wired = out.t_wired as f64;
+        // The wired reference is a pure function of the tensors, not of
+        // the grid chunk: read it from the first chunk instead of
+        // overwriting it per chunk, and pin the invariant.
+        let chunk_wired = out.t_wired as f64;
+        if ci == 0 {
+            t_wired = chunk_wired;
+        }
+        debug_assert_eq!(
+            t_wired, chunk_wired,
+            "wired reference drifted across grid chunks"
+        );
         for (i, &(t, p, bw)) in chunk.iter().enumerate() {
             let mut shares = [0.0; 5];
             for (k, s) in shares.iter_mut().enumerate() {
@@ -666,17 +676,27 @@ pub fn engine_sweep(
         );
     }
     let t_wired = evaluate_wired(tensors).total_s;
+    // Prepared layer of the incremental cost stack: suffix tables and
+    // the fixed per-layer triple are shared by every grid point, and
+    // one decision buffer is refilled per point instead of allocated.
+    let prepared = PreparedCosts::new(tensors);
+    let mut decisions = vec![
+        LayerDecision {
+            threshold: 1,
+            pinj: 0.0,
+        };
+        tensors.layers.len()
+    ];
     let mut points = Vec::with_capacity(thresholds.len() * pinjs.len());
     for &t in thresholds {
         for &p in pinjs {
-            let decisions = vec![
-                LayerDecision {
-                    threshold: t,
-                    pinj: p,
-                };
-                tensors.layers.len()
-            ];
-            let r = engine.evaluate(tensors, &decisions, wl_bw)?.result;
+            decisions.fill(LayerDecision {
+                threshold: t,
+                pinj: p,
+            });
+            let r = engine
+                .evaluate_prepared(&prepared, tensors, &decisions, wl_bw)?
+                .result;
             let speedup = if r.total_s > 0.0 {
                 t_wired / r.total_s
             } else {

@@ -4,16 +4,27 @@
 //! the wireless runs use the best mapping SA can find against the wired
 //! cost model).
 //!
-//! The cost function is injected so this module stays independent of
-//! the simulator (the coordinator wires them together); [`perturb`] is
+//! The generic [`anneal`] keeps its injected cost closure (full
+//! reprice per candidate — any objective, no simulator dependency);
+//! [`anneal_wired`] is the production wired-objective search, delta
+//! layer of the incremental cost stack: a placement move re-derives
+//! traffic and costs only for the layers it dirties
+//! ([`crate::sim::cost::TensorDelta`]) and re-prices them through a
+//! [`crate::sim::DeltaEvaluator`], bit-exact with the closure path by
+//! construction (pinned by `tests/delta_parity.rs`). [`perturb`] is
 //! public because the joint mapping × offload search
 //! ([`super::comap`]) interleaves the same placement moves with offload
 //! re-solves, and because the property tests assert every perturbed
-//! mapping stays valid.
+//! mapping stays valid; it returns the perturbed layer index so the
+//! delta paths can seed their dirty sets.
 
 use crate::arch::Package;
+use crate::config::WirelessConfig;
 use crate::mapping::{compact_region, greedy_sized, Mapping, Partition, PARTITIONS};
-use crate::util::anneal::{anneal as sa_anneal, AnnealOptions};
+use crate::sim::cost::{build_tensors, LayerCosts, TensorDelta};
+use crate::sim::policy::LayerDecision;
+use crate::sim::{evaluate_wired, DeltaEvaluator};
+use crate::util::anneal::{anneal as sa_anneal, anneal_model, AnnealCost, AnnealOptions};
 use crate::util::rng::Pcg32;
 use crate::workloads::Workload;
 use anyhow::{bail, Result};
@@ -61,8 +72,9 @@ pub struct SearchResult {
 }
 
 /// One random perturbation of the mapping: resize a layer's region,
-/// move its anchor, or flip its partition strategy.
-pub fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) {
+/// move its anchor, or flip its partition strategy. Returns the index
+/// of the perturbed layer (the seed of the delta paths' dirty sets).
+pub fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) -> usize {
     let li = rng.below(mapping.placements.len() as u64) as usize;
     let p = &mut mapping.placements[li];
     let (rows, cols) = pkg.cfg.grid;
@@ -99,6 +111,7 @@ pub fn perturb(mapping: &mut Mapping, pkg: &Package, rng: &mut Pcg32) {
             }
         }
     }
+    li
 }
 
 /// Anneal from the greedy seed. `cost` must be a total-latency-like
@@ -140,12 +153,179 @@ pub fn anneal<F: FnMut(&Mapping) -> f64>(
     let out = sa_anneal(
         seed_mapping,
         &opts.generic(),
-        |m, rng| perturb(m, pkg, rng),
+        |m, rng| {
+            perturb(m, pkg, rng);
+        },
         |m| cost(m),
     )
     .map_err(|e| anyhow::anyhow!("mapping SA for {:?}: {e}", wl.name))?;
     Ok(SearchResult {
         mapping: out.state,
+        cost: out.cost,
+        initial_cost: out.initial_cost,
+        accepted: out.accepted,
+        evaluated: out.evaluated,
+    })
+}
+
+/// Annealer state of the wired-objective delta search: the mapping plus
+/// the layer the last perturbation touched (the dirty-set seed).
+#[derive(Clone)]
+struct WiredState {
+    mapping: Mapping,
+    touched: Option<usize>,
+}
+
+/// [`AnnealCost`] model for the wired objective: incumbent tensors,
+/// residency plan and a [`DeltaEvaluator`] over the all-zero decision
+/// vector (zero injection prices bit-exactly as `evaluate_wired`).
+/// Candidates re-cost only their dirty layers; acceptance commits the
+/// staged rows.
+struct WiredCost<'a> {
+    wl: &'a Workload,
+    pkg: &'a Package,
+    elig: &'a WirelessConfig,
+    delta: TensorDelta<'a>,
+    inner: Option<WiredInner>,
+}
+
+/// Incumbent caches — populated by the seed evaluation.
+struct WiredInner {
+    layers: Vec<LayerCosts>,
+    resident: Vec<bool>,
+    evaluator: DeltaEvaluator,
+    /// Dirty rows + residency staged by `candidate_cost`, adopted by
+    /// `accepted` (`None` after an unpriceable candidate).
+    pending: Option<(Vec<(usize, LayerCosts)>, Vec<bool>)>,
+}
+
+const ZERO_DECISION: LayerDecision = LayerDecision {
+    threshold: 1,
+    pinj: 0.0,
+};
+
+impl AnnealCost<WiredState> for WiredCost<'_> {
+    fn seed_cost(&mut self, state: &WiredState) -> f64 {
+        match build_tensors(self.wl, &state.mapping, self.pkg, self.elig) {
+            Ok(t) => {
+                let zero = vec![ZERO_DECISION; t.layers.len()];
+                let evaluator = DeltaEvaluator::new(&t, &zero, 1.0);
+                let total = evaluator.total();
+                self.inner = Some(WiredInner {
+                    layers: t.layers,
+                    resident: self.delta.residency(&state.mapping),
+                    evaluator,
+                    pending: None,
+                });
+                total
+            }
+            Err(_) => f64::INFINITY,
+        }
+    }
+
+    fn candidate_cost(&mut self, state: &WiredState) -> f64 {
+        let Some(inner) = self.inner.as_mut() else {
+            return f64::INFINITY;
+        };
+        inner.pending = None;
+        let Some(touched) = state.touched else {
+            return f64::INFINITY;
+        };
+        let m = &state.mapping;
+        let resident = self.delta.residency(m);
+        let dirty = self.delta.dirty_layers(touched, &inner.resident, &resident);
+        let mut layers = inner.layers.clone();
+        if self.delta.recost(m, &resident, &dirty, &mut layers).is_err() {
+            return f64::INFINITY;
+        }
+        let changes: Vec<(usize, &LayerCosts, LayerDecision)> = dirty
+            .iter()
+            .map(|&j| (j, &layers[j], ZERO_DECISION))
+            .collect();
+        let total = inner.evaluator.price_changes(&changes);
+        let rows = dirty.iter().map(|&j| (j, layers[j].clone())).collect();
+        inner.pending = Some((rows, resident));
+        total
+    }
+
+    fn accepted(&mut self, _state: &WiredState) {
+        let inner = self.inner.as_mut().expect("accepted before seed_cost");
+        let (rows, resident) = inner
+            .pending
+            .take()
+            .expect("accepted a candidate that was never priced");
+        for (j, costs) in rows {
+            inner.layers[j] = costs;
+        }
+        inner.resident = resident;
+        inner.evaluator.commit();
+    }
+}
+
+/// The production wired-cost mapping search: [`anneal`] specialized to
+/// the wired objective with delta pricing. Bit-exact with
+///
+/// ```ignore
+/// anneal(wl, pkg, opts, |m| {
+///     build_tensors(wl, m, pkg, elig)
+///         .map(|t| evaluate_wired(&t).total_s)
+///         .unwrap_or(f64::INFINITY)
+/// })
+/// ```
+///
+/// (same seed mapping, same RNG draws, bit-identical candidate costs,
+/// hence the identical trajectory and result — `tests/delta_parity.rs`
+/// pins this), but each candidate re-derives traffic and costs only
+/// for the layers its move dirties instead of rebuilding every layer.
+pub fn anneal_wired(
+    wl: &Workload,
+    pkg: &Package,
+    elig: &WirelessConfig,
+    opts: &SaOptions,
+) -> Result<SearchResult> {
+    if wl.layers.is_empty() {
+        bail!("cannot anneal a mapping for zero-layer workload {:?}", wl.name);
+    }
+    let seed_mapping = greedy_sized(wl, pkg);
+    if opts.iters == 0 {
+        let c = build_tensors(wl, &seed_mapping, pkg, elig)
+            .map(|t| evaluate_wired(&t).total_s)
+            .unwrap_or(f64::INFINITY);
+        if !c.is_finite() {
+            bail!(
+                "greedy seed mapping for {:?} has non-finite cost {c}",
+                wl.name
+            );
+        }
+        return Ok(SearchResult {
+            mapping: seed_mapping,
+            cost: c,
+            initial_cost: c,
+            accepted: 0,
+            evaluated: 1,
+        });
+    }
+    let model = WiredCost {
+        wl,
+        pkg,
+        elig,
+        delta: TensorDelta::new(wl, pkg, elig),
+        inner: None,
+    };
+    let out = anneal_model(
+        WiredState {
+            mapping: seed_mapping,
+            touched: None,
+        },
+        &opts.generic(),
+        |s: &mut WiredState, rng: &mut Pcg32| {
+            s.touched = Some(perturb(&mut s.mapping, pkg, rng));
+        },
+        model,
+    )
+    .map_err(|e| anyhow::anyhow!("mapping SA for {:?}: {e}", wl.name))?;
+    Ok(SearchResult {
+        mapping: out.state.mapping,
         cost: out.cost,
         initial_cost: out.initial_cost,
         accepted: out.accepted,

@@ -17,6 +17,17 @@
 //!   [`comap::MappingObjective`] axis (`wired` vs `hybrid[:policy]`)
 //!   selects between them everywhere — coordinator, campaigns,
 //!   scenarios and the CLI.
+//!
+//! Both searches price candidates through the incremental cost stack
+//! ([`crate::sim::delta`]): a move perturbs one layer's placement (or a
+//! few layers' offload decisions), so only the dirty set — the touched
+//! layer, its producers, and layers whose weight residency flipped —
+//! is re-characterized ([`crate::sim::cost::TensorDelta`]) and
+//! re-priced ([`crate::sim::DeltaEvaluator`]), bit-exactly with a full
+//! rebuild (enforced by `tests/delta_parity.rs`; the full-reprice
+//! spellings survive as [`comap::co_anneal_full`] and the closure
+//! form of [`mapper::anneal`]). The measured win is persisted in
+//! `BENCH_delta_eval.json` at the repo root by `benches/delta_eval.rs`.
 
 pub mod comap;
 pub mod mapper;

@@ -11,7 +11,9 @@ use crate::arch::Package;
 use crate::mapping::Mapping;
 use crate::noc::NocModel;
 use crate::nop::NopModel;
-use crate::sim::traffic::{characterize, LayerTraffic};
+use crate::sim::traffic::{
+    characterize, characterize_layer, plan_weight_residency, LayerTraffic,
+};
 use crate::wireless;
 use crate::config::WirelessConfig;
 use crate::workloads::Workload;
@@ -100,38 +102,85 @@ pub fn build_tensors_from_traffic(
     traffic: &[LayerTraffic],
     eligibility: &WirelessConfig,
 ) -> Result<CostTensors> {
-    let nop = NopModel::new(pkg.clone());
-    let noc = NocModel::new(&pkg.cfg);
-    let noc_bw = noc.aggregate_bw() / NOC_HOTSPOT_FACTOR;
-    let dram_bw_bits = pkg.cfg.dram_bw_bytes * 8.0;
+    let coster = LayerCoster::new(pkg, eligibility);
     let mut layers = Vec::with_capacity(wl.layers.len());
+    for (i, t) in traffic.iter().enumerate() {
+        layers.push(coster.cost_layer(wl, mapping, t, i)?);
+    }
+    Ok(CostTensors {
+        layers,
+        nop_agg_bw: coster.nop_agg_bw(),
+    })
+}
 
-    for (i, layer) in wl.layers.iter().enumerate() {
+/// The per-layer costing arithmetic with its package-derived constants
+/// (NoP path model, derated NoC aggregate, DRAM bandwidth) hoisted out
+/// of the per-layer loop — THE single copy shared by the full build
+/// ([`build_tensors_from_traffic`]) and the incremental rebuild path
+/// ([`TensorDelta`]), so the two can never drift.
+pub struct LayerCoster<'a> {
+    pkg: &'a Package,
+    eligibility: &'a WirelessConfig,
+    nop: NopModel,
+    noc_mean_hops: f64,
+    noc_bw: f64,
+    dram_bw_bits: f64,
+}
+
+impl<'a> LayerCoster<'a> {
+    pub fn new(pkg: &'a Package, eligibility: &'a WirelessConfig) -> Self {
+        let noc = NocModel::new(&pkg.cfg);
+        Self {
+            pkg,
+            eligibility,
+            nop: NopModel::new(pkg.clone()),
+            noc_mean_hops: noc.mean_edge_to_pe_hops(),
+            noc_bw: noc.aggregate_bw() / NOC_HOTSPOT_FACTOR,
+            dram_bw_bits: pkg.cfg.dram_bw_bytes * 8.0,
+        }
+    }
+
+    /// The package's derated aggregate NoP bandwidth — a package
+    /// constant, independent of the mapping.
+    pub fn nop_agg_bw(&self) -> f64 {
+        self.pkg.nop_aggregate_bw() / NOP_CONGESTION_FACTOR
+    }
+
+    /// Cost ONE layer from its traffic.
+    pub fn cost_layer(
+        &self,
+        wl: &Workload,
+        mapping: &Mapping,
+        traffic: &LayerTraffic,
+        i: usize,
+    ) -> Result<LayerCosts> {
+        let eligibility = self.eligibility;
+        let layer = &wl.layers[i];
         let place = &mapping.placements[i];
         let n = place.chiplets.len() as f64;
-        let t = &traffic[i];
+        let t = traffic;
         let mut costs = LayerCosts::default();
 
         // Compute: MACs over the region's peak, derated by operator
         // utilization and a mild multi-chiplet scaling penalty.
-        let rate = pkg.cfg.chiplet_macs_per_s() * n;
+        let rate = self.pkg.cfg.chiplet_macs_per_s() * n;
         let util = layer.kind.utilization() / (1.0 + 0.04 * (n - 1.0));
         costs.t_comp = layer.macs as f64 / (rate * util);
 
         // DRAM: bits through the DRAM modules adjacent to the region
         // (memory parallelism = distinct home DRAMs; spills/ingest
         // included by the traffic model).
-        costs.t_dram = t.dram_bits / (dram_bw_bits * t.dram_ports.max(1) as f64);
+        costs.t_dram = t.dram_bits / (self.dram_bw_bits * t.dram_ports.max(1) as f64);
 
         // NoC: per-chiplet distribution volume over the derated mesh
         // aggregate. The central-router detour for wireless messages is
         // symmetric to the edge-port detour for wired NoP messages, so
         // one term covers both planes (DESIGN.md §4).
-        costs.t_noc = t.noc_bits_per_chiplet * noc.mean_edge_to_pe_hops() / noc_bw;
+        costs.t_noc = t.noc_bits_per_chiplet * self.noc_mean_hops / self.noc_bw;
 
         // NoP: wired volume.hops, plus eligibility buckets.
         for flow in &t.flows {
-            let path = nop.wired_path(flow)?;
+            let path = self.nop.wired_path(flow)?;
             costs.nop_vol_hops += path.vol_hops;
             if path.max_hops == 0 {
                 continue;
@@ -144,13 +193,93 @@ pub fn build_tensors_from_traffic(
             }
         }
 
-        layers.push(costs);
+        Ok(costs)
+    }
+}
+
+/// Incremental tensor rebuild for single-layer placement moves — the
+/// traffic/cost half of the delta stack. A layer's traffic depends on
+/// (a) its own placement, (b) its consumers' placements, and (c) the
+/// global weight-residency plan, so a move that re-places layer `j`
+/// dirties `j`, `j`'s producers (their activation pushes target `j`'s
+/// region) and any layer whose residency bit flips. Re-costing that
+/// dirty set through the same [`characterize_layer`]/[`LayerCoster`]
+/// arithmetic as a full build is bit-exact by construction — pinned on
+/// all 15 paper workloads by `tests/delta_parity.rs`.
+pub struct TensorDelta<'a> {
+    wl: &'a Workload,
+    pkg: &'a Package,
+    coster: LayerCoster<'a>,
+    consumers: Vec<Vec<usize>>,
+}
+
+impl<'a> TensorDelta<'a> {
+    pub fn new(wl: &'a Workload, pkg: &'a Package, eligibility: &'a WirelessConfig) -> Self {
+        Self {
+            wl,
+            pkg,
+            coster: LayerCoster::new(pkg, eligibility),
+            consumers: wl.consumers(),
+        }
     }
 
-    Ok(CostTensors {
-        layers,
-        nop_agg_bw: pkg.nop_aggregate_bw() / NOP_CONGESTION_FACTOR,
-    })
+    /// The candidate mapping's weight-residency plan (global: a greedy
+    /// budget fill over footprint-sorted layers — any placement move
+    /// can flip any layer's bit).
+    pub fn residency(&self, mapping: &Mapping) -> Vec<bool> {
+        plan_weight_residency(self.wl, mapping, self.pkg)
+    }
+
+    /// Layers a placement change at `touched` dirties, given the
+    /// incumbent and candidate residency plans. Sorted and deduped.
+    pub fn dirty_layers(
+        &self,
+        touched: usize,
+        old_resident: &[bool],
+        new_resident: &[bool],
+    ) -> Vec<usize> {
+        let mut dirty = vec![touched];
+        dirty.extend(self.wl.layers[touched].inputs.iter().copied());
+        for (j, (o, n)) in old_resident.iter().zip(new_resident).enumerate() {
+            if o != n {
+                dirty.push(j);
+            }
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+        dirty
+    }
+
+    /// Re-derive traffic and costs for the dirty layers of a candidate
+    /// mapping, writing them into `layers` in place. Validates the
+    /// mapping first, so failure semantics match the full build
+    /// (clean layers cannot newly fail: their inputs are unchanged).
+    pub fn recost(
+        &self,
+        mapping: &Mapping,
+        resident: &[bool],
+        dirty: &[usize],
+        layers: &mut [LayerCosts],
+    ) -> Result<()> {
+        mapping.validate(self.wl, self.pkg)?;
+        for &j in dirty {
+            let t = characterize_layer(
+                self.wl,
+                mapping,
+                self.pkg,
+                &self.consumers,
+                resident,
+                j,
+            )?;
+            layers[j] = self.coster.cost_layer(self.wl, mapping, &t, j)?;
+        }
+        Ok(())
+    }
+
+    /// See [`LayerCoster::nop_agg_bw`].
+    pub fn nop_agg_bw(&self) -> f64 {
+        self.coster.nop_agg_bw()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,568 @@
+//! Prepared + delta layers of the incremental cost stack.
+//!
+//! The evaluation hot path prices one `(placement, decision)` move per
+//! annealer iteration, and a single move touches only a handful of
+//! layers. This module supplies the two structures that exploit that:
+//!
+//! * [`PreparedCosts`] — built once per [`CostTensors`]; precomputes
+//!   each layer's eligibility *suffix sums* so
+//!   [`eligible_suffix`] becomes an O(1) lookup instead of an
+//!   O(`HOP_BUCKETS`) loop, plus the fixed `t_comp/t_dram/t_noc`
+//!   triple. `evaluate_policy`, `layer_outcome`, the closed-form
+//!   policies and `engine_sweep` all route through it.
+//! * [`DeltaEvaluator`] — caches the per-layer `[f64; 5]` component
+//!   rows and offloaded-bits terms of one incumbent state and
+//!   re-prices only the layers a move touches. The annealers
+//!   ([`crate::mapping::mapper::anneal_wired`],
+//!   [`crate::mapping::comap::co_anneal`]) stage a move's rows with
+//!   [`DeltaEvaluator::price_changes`], and [`DeltaEvaluator::commit`]
+//!   adopts them on acceptance; a rejected move is simply never
+//!   committed.
+//!
+//! Bit-exactness is the contract. Every suffix entry is produced by
+//! the *same ascending left-associated accumulation* the evaluator has
+//! always used (f64 addition is not associative, so a right-to-left
+//! suffix recurrence would drift), and the delta total re-folds every
+//! layer row in layer order — identical fold over identical inputs is
+//! identical output. `DeltaEvaluator` vs full `evaluate_policy` is a
+//! tested invariant on all 15 paper workloads (`tests/delta_parity.rs`)
+//! and mirrored in `python/tools/cost_mirror.py` (checked by
+//! `mirror_checks_delta.py`); keep them in sync.
+
+use crate::sim::cost::{CostTensors, LayerCosts, HOP_BUCKETS};
+use crate::sim::policy::LayerDecision;
+use crate::sim::EvalResult;
+
+/// Wireless-eligible (vol_hops, vol) a threshold admits: suffix sums
+/// of the eligibility buckets from hop distance `threshold` up, with
+/// the zero-threshold clamp. THE one accumulation the evaluator and
+/// every closed-form policy share — bit-exact parity between them (and
+/// the Python mirror) hinges on this summation order, so keep it the
+/// single copy ([`PreparedLayer`] tabulates exactly this loop).
+pub(crate) fn eligible_suffix(l: &LayerCosts, threshold: u32) -> (f64, f64) {
+    let d = (threshold as usize).max(1);
+    let (mut e_vh, mut e_v) = (0.0, 0.0);
+    for h in d..=HOP_BUCKETS {
+        e_vh += l.elig_vol_hops[h - 1];
+        e_v += l.elig_vol[h - 1];
+    }
+    (e_vh, e_v)
+}
+
+/// One layer's five component times and offloaded bits under a
+/// decision — THE inner-loop arithmetic of `evaluate_policy`, shared
+/// by the prepared path, the delta path and `layer_outcome` so the
+/// copies can never drift.
+#[inline]
+pub(crate) fn layer_row(
+    t_comp: f64,
+    t_dram: f64,
+    t_noc: f64,
+    nop_vol_hops: f64,
+    elig: (f64, f64),
+    pinj: f64,
+    nop_agg_bw: f64,
+    wl_bw: f64,
+) -> ([f64; 5], f64) {
+    let (mut moved_vh, mut moved_v) = elig;
+    moved_vh *= pinj;
+    moved_v *= pinj;
+    let t_nop = (nop_vol_hops - moved_vh).max(0.0) / nop_agg_bw;
+    let t_wl = if moved_v > 0.0 { moved_v / wl_bw } else { 0.0 };
+    ([t_comp, t_dram, t_noc, t_nop, t_wl], moved_v)
+}
+
+/// A layer's latency under a component row — bit-exact with
+/// [`EvalResult::from_layers`]'s per-layer bottleneck scan.
+#[inline]
+pub(crate) fn row_latency(comps: &[f64; 5]) -> f64 {
+    let mut k_best = 0;
+    for k in 1..5 {
+        if comps[k] > comps[k_best] {
+            k_best = k;
+        }
+    }
+    comps[k_best]
+}
+
+/// One layer of [`PreparedCosts`]: the fixed component triple plus the
+/// tabulated eligibility suffix sums for every threshold.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    pub t_comp: f64,
+    pub t_dram: f64,
+    pub t_noc: f64,
+    pub nop_vol_hops: f64,
+    suffix_vh: [f64; HOP_BUCKETS],
+    suffix_v: [f64; HOP_BUCKETS],
+}
+
+impl PreparedLayer {
+    pub fn new(l: &LayerCosts) -> Self {
+        let mut suffix_vh = [0.0; HOP_BUCKETS];
+        let mut suffix_v = [0.0; HOP_BUCKETS];
+        // Each entry re-runs the ascending accumulation from its own
+        // starting bucket: O(HOP_BUCKETS^2) once per layer, and the
+        // only tabulation that is bit-exact with `eligible_suffix`.
+        for d in 1..=HOP_BUCKETS {
+            let (vh, v) = eligible_suffix(l, d as u32);
+            suffix_vh[d - 1] = vh;
+            suffix_v[d - 1] = v;
+        }
+        Self {
+            t_comp: l.t_comp,
+            t_dram: l.t_dram,
+            t_noc: l.t_noc,
+            nop_vol_hops: l.nop_vol_hops,
+            suffix_vh,
+            suffix_v,
+        }
+    }
+
+    /// O(1) [`eligible_suffix`] lookup.
+    #[inline]
+    pub fn eligible(&self, threshold: u32) -> (f64, f64) {
+        let d = (threshold as usize).max(1);
+        if d > HOP_BUCKETS {
+            (0.0, 0.0)
+        } else {
+            (self.suffix_vh[d - 1], self.suffix_v[d - 1])
+        }
+    }
+
+    /// The layer's component row and offloaded bits under a decision.
+    #[inline]
+    pub fn row(&self, dec: LayerDecision, nop_agg_bw: f64, wl_bw: f64) -> ([f64; 5], f64) {
+        layer_row(
+            self.t_comp,
+            self.t_dram,
+            self.t_noc,
+            self.nop_vol_hops,
+            self.eligible(dec.threshold),
+            dec.pinj,
+            nop_agg_bw,
+            wl_bw,
+        )
+    }
+
+    /// The layer's (latency, offloaded bits) under a decision — the
+    /// prepared spelling of `layer_outcome`, used by the closed-form
+    /// policies' candidate scans.
+    #[inline]
+    pub fn outcome(
+        &self,
+        threshold: u32,
+        pinj: f64,
+        nop_agg_bw: f64,
+        wl_bw: f64,
+    ) -> (f64, f64) {
+        let (comps, moved_v) = self.row(LayerDecision { threshold, pinj }, nop_agg_bw, wl_bw);
+        (row_latency(&comps), moved_v)
+    }
+}
+
+/// Prepared layer of the incremental cost stack: built once per
+/// [`CostTensors`], evaluated many times (policy grids, engine sweeps,
+/// controller trajectories). Bit-exact with `evaluate_policy` on the
+/// tensors it was built from.
+#[derive(Debug, Clone)]
+pub struct PreparedCosts {
+    pub layers: Vec<PreparedLayer>,
+    pub nop_agg_bw: f64,
+}
+
+impl PreparedCosts {
+    pub fn new(t: &CostTensors) -> Self {
+        Self {
+            layers: t.layers.iter().map(PreparedLayer::new).collect(),
+            nop_agg_bw: t.nop_agg_bw,
+        }
+    }
+
+    /// Price a per-layer decision vector — bit-exact with
+    /// `evaluate_policy` on the source tensors.
+    ///
+    /// Panics if `decisions.len() != self.layers.len()` (programmer
+    /// error: a policy must decide every layer).
+    pub fn evaluate(&self, decisions: &[LayerDecision], wl_bw: f64) -> EvalResult {
+        assert_eq!(
+            decisions.len(),
+            self.layers.len(),
+            "one offload decision per layer"
+        );
+        let mut wl_bits = 0.0;
+        let lat_k: Vec<[f64; 5]> = self
+            .layers
+            .iter()
+            .zip(decisions)
+            .map(|(pl, dec)| {
+                let (comps, moved_v) = pl.row(*dec, self.nop_agg_bw, wl_bw);
+                wl_bits += moved_v;
+                comps
+            })
+            .collect();
+        EvalResult::from_layers(&lat_k, wl_bits)
+    }
+
+    /// Price one uniform decision for every layer without materializing
+    /// a decision vector — the grid-sweep fast path.
+    pub fn evaluate_uniform(&self, dec: LayerDecision, wl_bw: f64) -> EvalResult {
+        let mut wl_bits = 0.0;
+        let lat_k: Vec<[f64; 5]> = self
+            .layers
+            .iter()
+            .map(|pl| {
+                let (comps, moved_v) = pl.row(dec, self.nop_agg_bw, wl_bw);
+                wl_bits += moved_v;
+                comps
+            })
+            .collect();
+        EvalResult::from_layers(&lat_k, wl_bits)
+    }
+}
+
+/// Delta layer of the incremental cost stack: the per-layer component
+/// rows and offloaded-bits terms of one incumbent `(tensors,
+/// decisions)` state, re-priced by touching only the layers a move
+/// changes.
+///
+/// Protocol: [`Self::price_changes`] stages the changed layers' rows
+/// and returns the candidate total (bit-exact with a full
+/// `evaluate_policy` of the candidate state); [`Self::commit`] adopts
+/// the staged rows when the annealer accepts the move, and a rejected
+/// move is priced over and discarded by the next `price_changes`.
+///
+/// The total is a re-fold of *every* row in layer order — an O(layers)
+/// sum of precomputed maxima, not a running accumulator, because
+/// add/subtract updates of an f64 accumulator are not bit-exact. The
+/// speedup comes from never re-deriving clean layers' rows (and, in
+/// the annealers, never rebuilding clean layers' tensors).
+#[derive(Debug, Clone)]
+pub struct DeltaEvaluator {
+    rows: Vec<[f64; 5]>,
+    moved: Vec<f64>,
+    nop_agg_bw: f64,
+    wl_bw: f64,
+    /// Rows staged by the last `price_changes`, sorted by layer index.
+    pending: Vec<(usize, [f64; 5], f64)>,
+}
+
+impl DeltaEvaluator {
+    /// Seed the cache from a full state — one full-evaluation
+    /// equivalent.
+    pub fn new(t: &CostTensors, decisions: &[LayerDecision], wl_bw: f64) -> Self {
+        assert_eq!(
+            decisions.len(),
+            t.layers.len(),
+            "one offload decision per layer"
+        );
+        let mut rows = Vec::with_capacity(t.layers.len());
+        let mut moved = Vec::with_capacity(t.layers.len());
+        for (l, dec) in t.layers.iter().zip(decisions) {
+            let (comps, moved_v) = layer_row(
+                l.t_comp,
+                l.t_dram,
+                l.t_noc,
+                l.nop_vol_hops,
+                eligible_suffix(l, dec.threshold),
+                dec.pinj,
+                t.nop_agg_bw,
+                wl_bw,
+            );
+            rows.push(comps);
+            moved.push(moved_v);
+        }
+        Self {
+            rows,
+            moved,
+            nop_agg_bw: t.nop_agg_bw,
+            wl_bw,
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Stage re-priced rows for the changed layers (each entry: layer
+    /// index, that layer's *candidate* costs, its *candidate*
+    /// decision) and return the candidate total. Duplicate indices are
+    /// allowed; the last entry wins. Unchanged layers keep their
+    /// cached rows.
+    pub fn price_changes(&mut self, changes: &[(usize, &LayerCosts, LayerDecision)]) -> f64 {
+        self.pending.clear();
+        for &(i, l, dec) in changes {
+            assert!(i < self.rows.len(), "layer index {i} out of range");
+            let (comps, moved_v) = layer_row(
+                l.t_comp,
+                l.t_dram,
+                l.t_noc,
+                l.nop_vol_hops,
+                eligible_suffix(l, dec.threshold),
+                dec.pinj,
+                self.nop_agg_bw,
+                self.wl_bw,
+            );
+            self.pending.push((i, comps, moved_v));
+        }
+        // Stable sort keeps the last duplicate the one the merge sees
+        // after the retain below drops its predecessors.
+        self.pending.sort_by_key(|&(i, _, _)| i);
+        let mut keep = Vec::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            if keep.last().is_some_and(|&(j, _, _): &(usize, _, _)| j == p.0) {
+                *keep.last_mut().expect("non-empty") = p;
+            } else {
+                keep.push(p);
+            }
+        }
+        self.pending = keep;
+        self.total_with_pending()
+    }
+
+    /// Adopt the rows staged by the last [`Self::price_changes`] — call
+    /// exactly when the annealer accepts the move it priced.
+    pub fn commit(&mut self) {
+        for &(i, comps, moved_v) in &self.pending {
+            self.rows[i] = comps;
+            self.moved[i] = moved_v;
+        }
+        self.pending.clear();
+    }
+
+    /// Total of the committed incumbent (pending rows ignored).
+    pub fn total(&self) -> f64 {
+        let mut total = 0.0;
+        for comps in &self.rows {
+            total += row_latency(comps);
+        }
+        total
+    }
+
+    /// Full [`EvalResult`] of the committed incumbent — bit-exact with
+    /// `evaluate_policy` on the same `(tensors, decisions, wl_bw)`.
+    pub fn result(&self) -> EvalResult {
+        let mut wl_bits = 0.0;
+        for &m in &self.moved {
+            wl_bits += m;
+        }
+        EvalResult::from_layers(&self.rows, wl_bits)
+    }
+
+    /// Candidate total: every row in layer order, staged rows
+    /// substituted — the same fold as [`EvalResult::from_layers`].
+    fn total_with_pending(&self) -> f64 {
+        let mut total = 0.0;
+        let mut p = 0;
+        for (i, comps) in self.rows.iter().enumerate() {
+            let comps = if p < self.pending.len() && self.pending[p].0 == i {
+                let c = &self.pending[p].1;
+                p += 1;
+                c
+            } else {
+                comps
+            };
+            total += row_latency(comps);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::policy::evaluate_policy;
+
+    fn tensors() -> CostTensors {
+        let mut l0 = LayerCosts {
+            t_comp: 1.0e-6,
+            t_dram: 0.5e-6,
+            nop_vol_hops: 10.0e6,
+            ..Default::default()
+        };
+        l0.elig_vol_hops[0] = 2.0e6;
+        l0.elig_vol[0] = 2.0e6;
+        l0.elig_vol_hops[3] = 8.0e6;
+        l0.elig_vol[3] = 0.2e6;
+        let l1 = LayerCosts {
+            t_comp: 5.0e-6,
+            t_dram: 1.0e-6,
+            nop_vol_hops: 1.0e6,
+            ..Default::default()
+        };
+        let mut l2 = LayerCosts {
+            t_comp: 0.5e-6,
+            nop_vol_hops: 6.0e6,
+            ..Default::default()
+        };
+        l2.elig_vol_hops[2] = 5.0e6;
+        l2.elig_vol[2] = 1.0e6;
+        CostTensors {
+            layers: vec![l0, l1, l2],
+            nop_agg_bw: 1.0e12,
+        }
+    }
+
+    #[test]
+    fn prepared_eligible_matches_loop() {
+        let t = tensors();
+        for l in &t.layers {
+            let pl = PreparedLayer::new(l);
+            for d in 0..=(HOP_BUCKETS as u32 + 2) {
+                assert_eq!(pl.eligible(d), eligible_suffix(l, d), "threshold {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_evaluate_is_bit_exact() {
+        let t = tensors();
+        let prep = PreparedCosts::new(&t);
+        let decisions = vec![
+            LayerDecision {
+                threshold: 2,
+                pinj: 0.35,
+            },
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0,
+            },
+            LayerDecision {
+                threshold: 3,
+                pinj: 0.9,
+            },
+        ];
+        for &bw in &[8.0e9, 64.0e9, 96.0e9] {
+            let full = evaluate_policy(&t, &decisions, bw);
+            let fast = prep.evaluate(&decisions, bw);
+            assert_eq!(full.total_s, fast.total_s);
+            assert_eq!(full.shares, fast.shares);
+            assert_eq!(full.wl_bits, fast.wl_bits);
+            assert_eq!(full.bottleneck, fast.bottleneck);
+            assert_eq!(full.layer_latency, fast.layer_latency);
+            let uni = prep.evaluate_uniform(decisions[0], bw);
+            let full_uni =
+                evaluate_policy(&t, &vec![decisions[0]; t.layers.len()], bw);
+            assert_eq!(uni.total_s, full_uni.total_s);
+            assert_eq!(uni.wl_bits, full_uni.wl_bits);
+        }
+    }
+
+    #[test]
+    fn delta_tracks_decision_moves_bit_exactly() {
+        let t = tensors();
+        let mut decisions = vec![
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0,
+            };
+            t.layers.len()
+        ];
+        let mut delta = DeltaEvaluator::new(&t, &decisions, 64e9);
+        assert_eq!(delta.total(), evaluate_policy(&t, &decisions, 64e9).total_s);
+        let moves = [
+            (0usize, 4u32, 0.8f64),
+            (2, 3, 0.5),
+            (0, 1, 0.2),
+            (1, 2, 0.9),
+            (2, 9, 1.0),
+        ];
+        for &(i, d, p) in &moves {
+            let dec = LayerDecision {
+                threshold: d,
+                pinj: p,
+            };
+            let cand_total =
+                delta.price_changes(&[(i, &t.layers[i], dec)]);
+            decisions[i] = dec;
+            let full = evaluate_policy(&t, &decisions, 64e9);
+            assert_eq!(cand_total, full.total_s, "move {i} -> ({d},{p})");
+            delta.commit();
+            let r = delta.result();
+            assert_eq!(r.total_s, full.total_s);
+            assert_eq!(r.wl_bits, full.wl_bits);
+            assert_eq!(r.shares, full.shares);
+            assert_eq!(r.bottleneck, full.bottleneck);
+        }
+    }
+
+    #[test]
+    fn rejected_moves_leave_the_cache_untouched() {
+        let t = tensors();
+        let decisions = vec![
+            LayerDecision {
+                threshold: 2,
+                pinj: 0.4,
+            };
+            t.layers.len()
+        ];
+        let mut delta = DeltaEvaluator::new(&t, &decisions, 64e9);
+        let before = delta.total();
+        let _ = delta.price_changes(&[(
+            0,
+            &t.layers[0],
+            LayerDecision {
+                threshold: 4,
+                pinj: 1.0,
+            },
+        )]);
+        // No commit: the incumbent is unchanged.
+        assert_eq!(delta.total(), before);
+        assert_eq!(
+            delta.result().total_s,
+            evaluate_policy(&t, &decisions, 64e9).total_s
+        );
+    }
+
+    #[test]
+    fn duplicate_change_entries_last_wins() {
+        let t = tensors();
+        let decisions = vec![
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0,
+            };
+            t.layers.len()
+        ];
+        let mut delta = DeltaEvaluator::new(&t, &decisions, 64e9);
+        let final_dec = LayerDecision {
+            threshold: 3,
+            pinj: 0.25,
+        };
+        let total = delta.price_changes(&[
+            (
+                0,
+                &t.layers[0],
+                LayerDecision {
+                    threshold: 4,
+                    pinj: 1.0,
+                },
+            ),
+            (0, &t.layers[0], final_dec),
+        ]);
+        let mut want = decisions.clone();
+        want[0] = final_dec;
+        assert_eq!(total, evaluate_policy(&t, &want, 64e9).total_s);
+    }
+
+    #[test]
+    fn zero_decisions_match_wired() {
+        let t = tensors();
+        let decisions = vec![
+            LayerDecision {
+                threshold: 1,
+                pinj: 0.0,
+            };
+            t.layers.len()
+        ];
+        let delta = DeltaEvaluator::new(&t, &decisions, 1.0);
+        let wired = crate::sim::evaluate_wired(&t);
+        assert_eq!(delta.total(), wired.total_s);
+        assert_eq!(delta.result().wl_bits, 0.0);
+    }
+}

@@ -36,6 +36,7 @@
 //! `mirror_checks_engine.py`; keep them in sync.
 
 use crate::sim::cost::{CostTensors, HOP_BUCKETS};
+use crate::sim::delta::PreparedCosts;
 use crate::sim::policy::{evaluate_policy, LayerDecision};
 use crate::sim::stochastic::MESSAGE_BITS;
 use crate::sim::EvalResult;
@@ -154,6 +155,23 @@ pub trait EvalEngine: Sync {
         decisions: &[LayerDecision],
         wl_bw: f64,
     ) -> Result<EvalOutcome>;
+
+    /// [`Self::evaluate`] with a caller-held [`PreparedCosts`] for
+    /// `tensors`, so grid sweeps amortize the per-tensor preparation.
+    /// Backends that cannot exploit it (the stochastic engine prices
+    /// per message, not per suffix sum) fall back to `evaluate` —
+    /// results are identical either way; `prepared` MUST be built from
+    /// `tensors`.
+    fn evaluate_prepared(
+        &self,
+        prepared: &PreparedCosts,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        let _ = prepared;
+        self.evaluate(tensors, decisions, wl_bw)
+    }
 }
 
 /// The closed-form expected-value backend: bit-for-bit
@@ -178,6 +196,26 @@ impl EvalEngine for AnalyticalEngine {
         }
         Ok(EvalOutcome {
             result: evaluate_policy(tensors, decisions, wl_bw),
+            trace: None,
+        })
+    }
+
+    fn evaluate_prepared(
+        &self,
+        prepared: &PreparedCosts,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        if decisions.len() != tensors.layers.len() {
+            bail!(
+                "one offload decision per layer: got {} decisions for {} layers",
+                decisions.len(),
+                tensors.layers.len()
+            );
+        }
+        Ok(EvalOutcome {
+            result: prepared.evaluate(decisions, wl_bw),
             trace: None,
         })
     }

@@ -29,8 +29,19 @@
 //! an engine prices. [`policy::FeedbackPolicy`] closes the loop the
 //! closed-form policies only approximate — it iteratively re-fits
 //! per-layer injection probabilities from trace-observed contention.
+//!
+//! Evaluation itself is a three-layer incremental cost stack (see
+//! [`delta`]): a *prepared* layer ([`delta::PreparedCosts`], built once
+//! per tensor set, O(1) eligibility suffix lookups) that
+//! `evaluate_policy`, the closed-form policies and the engine sweeps
+//! all route through; a *delta* layer ([`delta::DeltaEvaluator`]) that
+//! re-prices only the layers an annealer move touches, bit-exact with
+//! the full evaluation by construction; and a *trajectory* layer
+//! (`util::benchkit` + `BENCH_delta_eval.json`) that persists the
+//! measured speedups so perf claims stay visible across PRs.
 
 pub mod cost;
+pub mod delta;
 pub mod engine;
 pub mod linklevel;
 pub mod policy;
@@ -38,6 +49,7 @@ pub mod stochastic;
 pub mod traffic;
 
 pub use cost::{CostTensors, LayerCosts, HOP_BUCKETS};
+pub use delta::{DeltaEvaluator, PreparedCosts, PreparedLayer};
 pub use engine::{
     AnalyticalEngine, EvalBackend, EvalEngine, EvalOutcome, LayerTrace,
     MessageTrace, StochasticEngine, TraceSample,

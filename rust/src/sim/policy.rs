@@ -48,6 +48,9 @@
 //! `mirror_checks_engine.py`); keep them in sync.
 
 use crate::sim::cost::{CostTensors, LayerCosts};
+use crate::sim::delta::{
+    eligible_suffix, layer_row, row_latency, PreparedCosts, PreparedLayer,
+};
 use crate::sim::engine::{EvalBackend, EvalEngine, StochasticEngine};
 use crate::sim::{evaluate_wired, EvalResult, COMP_WIRELESS, HOP_BUCKETS};
 use anyhow::{bail, Result};
@@ -97,49 +100,14 @@ pub fn evaluate_policy(
     decisions: &[LayerDecision],
     wl_bw: f64,
 ) -> EvalResult {
-    assert_eq!(
-        decisions.len(),
-        t.layers.len(),
-        "one offload decision per layer"
-    );
-    let mut wl_bits = 0.0;
-    let lat_k: Vec<[f64; 5]> = t
-        .layers
-        .iter()
-        .zip(decisions)
-        .map(|(l, dec)| {
-            let (mut moved_vh, mut moved_v) = eligible_suffix(l, dec.threshold);
-            moved_vh *= dec.pinj;
-            moved_v *= dec.pinj;
-            wl_bits += moved_v;
-            let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
-            let t_wl = if moved_v > 0.0 { moved_v / wl_bw } else { 0.0 };
-            [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl]
-        })
-        .collect();
-    EvalResult::from_layers(&lat_k, wl_bits)
+    PreparedCosts::new(t).evaluate(decisions, wl_bw)
 }
 
-/// Wireless-eligible (vol_hops, vol) a threshold admits: suffix sums
-/// of the eligibility buckets from hop distance `threshold` up, with
-/// the zero-threshold clamp. THE one accumulation the evaluator and
-/// every closed-form policy share — bit-exact parity between them (and
-/// the Python mirror) hinges on this summation order, so keep it the
-/// single copy.
-fn eligible_suffix(l: &LayerCosts, threshold: u32) -> (f64, f64) {
-    let d = (threshold as usize).max(1);
-    let (mut e_vh, mut e_v) = (0.0, 0.0);
-    for h in d..=HOP_BUCKETS {
-        e_vh += l.elig_vol_hops[h - 1];
-        e_v += l.elig_vol[h - 1];
-    }
-    (e_vh, e_v)
-}
-
-/// One layer's (latency, offloaded bits) under a decision — the same
-/// arithmetic as [`evaluate_policy`]'s inner loop, exposed so the
-/// closed-form policies select candidates against exactly what the
-/// evaluator will charge them.
+/// One layer's (latency, offloaded bits) under a decision — a thin
+/// wrapper over the shared [`layer_row`] arithmetic (the same inner
+/// loop `evaluate_policy` prices with), exposed so the closed-form
+/// policies select candidates against exactly what the evaluator will
+/// charge them. `tests/delta_parity.rs` pins the parity.
 pub fn layer_outcome(
     l: &LayerCosts,
     threshold: u32,
@@ -147,13 +115,17 @@ pub fn layer_outcome(
     nop_agg_bw: f64,
     wl_bw: f64,
 ) -> (f64, f64) {
-    let (mut moved_vh, mut moved_v) = eligible_suffix(l, threshold);
-    moved_vh *= pinj;
-    moved_v *= pinj;
-    let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / nop_agg_bw;
-    let t_wl = if moved_v > 0.0 { moved_v / wl_bw } else { 0.0 };
-    let lat = l.t_comp.max(l.t_dram).max(l.t_noc).max(t_nop).max(t_wl);
-    (lat, moved_v)
+    let (comps, moved_v) = layer_row(
+        l.t_comp,
+        l.t_dram,
+        l.t_noc,
+        l.nop_vol_hops,
+        eligible_suffix(l, threshold),
+        pinj,
+        nop_agg_bw,
+        wl_bw,
+    );
+    (row_latency(&comps), moved_v)
 }
 
 /// Today's global configuration as a policy: every layer gets the same
@@ -199,17 +171,20 @@ impl Default for GreedyPerLayer {
     }
 }
 
-/// The greedy closed form for one layer. Deterministic tie-break: a
-/// strictly lower latency wins; at equal latency fewer offloaded bits
-/// win (the no-offload baseline is the initial incumbent).
-fn greedy_layer(
-    l: &LayerCosts,
+/// The greedy closed form for one prepared layer. Deterministic
+/// tie-break: a strictly lower latency wins; at equal latency fewer
+/// offloaded bits win (the no-offload baseline is the initial
+/// incumbent). Pure per-layer function of the layer's costs — the
+/// joint search ([`crate::mapping::comap`]) exploits this to refit
+/// only the layers a placement move re-costs.
+pub(crate) fn greedy_layer_prepared(
+    pl: &PreparedLayer,
     nop_agg_bw: f64,
     wl_bw: f64,
     max_threshold: u32,
 ) -> LayerDecision {
-    let t_other = l.t_comp.max(l.t_dram).max(l.t_noc);
-    let t_nop0 = l.nop_vol_hops / nop_agg_bw;
+    let t_other = pl.t_comp.max(pl.t_dram).max(pl.t_noc);
+    let t_nop0 = pl.nop_vol_hops / nop_agg_bw;
     let no_offload = LayerDecision {
         threshold: 1,
         pinj: 0.0,
@@ -223,21 +198,21 @@ fn greedy_layer(
     let mut best_wl = 0.0f64;
     let max_d = (max_threshold as usize).max(1).min(HOP_BUCKETS);
     for d in 1..=max_d {
-        let (e_vh, e_v) = eligible_suffix(l, d as u32);
+        let (e_vh, e_v) = pl.eligible(d as u32);
         if e_vh <= 0.0 {
             continue;
         }
         // Equalize (N - p*E_vh)/B_nop == p*E_v/B_wl ...
         let p_eq = if e_v > 0.0 {
-            (l.nop_vol_hops * wl_bw) / (e_v * nop_agg_bw + e_vh * wl_bw)
+            (pl.nop_vol_hops * wl_bw) / (e_v * nop_agg_bw + e_vh * wl_bw)
         } else {
             1.0
         };
         // ... but stop filling once NoP reaches the other-component
         // floor (reached earlier whenever t_other > the equalized time).
-        let p_fill = (l.nop_vol_hops - t_other * nop_agg_bw) / e_vh;
+        let p_fill = (pl.nop_vol_hops - t_other * nop_agg_bw) / e_vh;
         let p = p_eq.min(p_fill).clamp(0.0, 1.0);
-        let (lat, wl) = layer_outcome(l, d as u32, p, nop_agg_bw, wl_bw);
+        let (lat, wl) = pl.outcome(d as u32, p, nop_agg_bw, wl_bw);
         if lat < best_lat || (lat == best_lat && wl < best_wl) {
             best = LayerDecision {
                 threshold: d as u32,
@@ -250,6 +225,16 @@ fn greedy_layer(
     best
 }
 
+/// [`greedy_layer_prepared`] from raw layer costs.
+pub(crate) fn greedy_layer(
+    l: &LayerCosts,
+    nop_agg_bw: f64,
+    wl_bw: f64,
+    max_threshold: u32,
+) -> LayerDecision {
+    greedy_layer_prepared(&PreparedLayer::new(l), nop_agg_bw, wl_bw, max_threshold)
+}
+
 impl OffloadPolicy for GreedyPerLayer {
     fn name(&self) -> &'static str {
         "greedy"
@@ -259,9 +244,13 @@ impl OffloadPolicy for GreedyPerLayer {
         if !(wl_bw.is_finite() && wl_bw > 0.0) {
             bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
         }
-        Ok(t.layers
+        let prep = PreparedCosts::new(t);
+        Ok(prep
+            .layers
             .iter()
-            .map(|l| greedy_layer(l, t.nop_agg_bw, wl_bw, self.max_threshold))
+            .map(|pl| {
+                greedy_layer_prepared(pl, prep.nop_agg_bw, wl_bw, self.max_threshold)
+            })
             .collect())
     }
 }
@@ -281,12 +270,12 @@ pub fn controller_trajectory(
     steps: usize,
 ) -> Result<Vec<(f64, f64, f64)>> {
     let wired = evaluate_wired(t).total_s;
+    let prep = PreparedCosts::new(t);
     let mut pinj = 0.4;
     let gain = 0.5;
     let mut traj = Vec::with_capacity(steps);
     for _ in 0..steps {
-        let decisions = vec![LayerDecision { threshold, pinj }; t.layers.len()];
-        let r = evaluate_policy(t, &decisions, wl_bw);
+        let r = prep.evaluate_uniform(LayerDecision { threshold, pinj }, wl_bw);
         let speedup = checked_speedup(wired, r.total_s)?;
         let wl_share = r.shares[COMP_WIRELESS];
         traj.push((pinj, speedup, wl_share));
@@ -386,45 +375,59 @@ impl OffloadPolicy for OraclePerLayer {
         if !(wl_bw.is_finite() && wl_bw > 0.0) {
             bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
         }
-        let max_t = self.thresholds.iter().copied().max().expect("non-empty");
-        Ok(t.layers
+        let prep = PreparedCosts::new(t);
+        Ok(prep
+            .layers
             .iter()
-            .map(|l| {
-                let mut best = LayerDecision {
-                    threshold: 1,
-                    pinj: 0.0,
-                };
-                let (mut best_lat, mut best_wl) =
-                    layer_outcome(l, 1, 0.0, t.nop_agg_bw, wl_bw);
-                let mut consider = |cand: LayerDecision| {
-                    let (lat, wl) = layer_outcome(
-                        l,
-                        cand.threshold,
-                        cand.pinj,
-                        t.nop_agg_bw,
-                        wl_bw,
-                    );
-                    if lat < best_lat || (lat == best_lat && wl < best_wl) {
-                        best = cand;
-                        best_lat = lat;
-                        best_wl = wl;
-                    }
-                };
-                for &d in &self.thresholds {
-                    for &p in &self.pinjs {
-                        consider(LayerDecision {
-                            threshold: d,
-                            pinj: p,
-                        });
-                    }
-                }
-                // The greedy candidate makes the oracle dominate
-                // GreedyPerLayer exactly, not just over the grid.
-                consider(greedy_layer(l, t.nop_agg_bw, wl_bw, max_t));
-                best
+            .map(|pl| {
+                oracle_layer_prepared(
+                    pl,
+                    prep.nop_agg_bw,
+                    wl_bw,
+                    &self.thresholds,
+                    &self.pinjs,
+                )
             })
             .collect())
     }
+}
+
+/// The oracle's per-layer argmin: every grid pair plus the greedy
+/// candidate, over one prepared layer. Pure per-layer function — the
+/// joint search refits only re-costed layers through it.
+pub(crate) fn oracle_layer_prepared(
+    pl: &PreparedLayer,
+    nop_agg_bw: f64,
+    wl_bw: f64,
+    thresholds: &[u32],
+    pinjs: &[f64],
+) -> LayerDecision {
+    let max_t = thresholds.iter().copied().max().expect("non-empty");
+    let mut best = LayerDecision {
+        threshold: 1,
+        pinj: 0.0,
+    };
+    let (mut best_lat, mut best_wl) = pl.outcome(1, 0.0, nop_agg_bw, wl_bw);
+    let mut consider = |cand: LayerDecision| {
+        let (lat, wl) = pl.outcome(cand.threshold, cand.pinj, nop_agg_bw, wl_bw);
+        if lat < best_lat || (lat == best_lat && wl < best_wl) {
+            best = cand;
+            best_lat = lat;
+            best_wl = wl;
+        }
+    };
+    for &d in thresholds {
+        for &p in pinjs {
+            consider(LayerDecision {
+                threshold: d,
+                pinj: p,
+            });
+        }
+    }
+    // The greedy candidate makes the oracle dominate GreedyPerLayer
+    // exactly, not just over the grid.
+    consider(greedy_layer_prepared(pl, nop_agg_bw, wl_bw, max_t));
+    best
 }
 
 /// The learned/feedback policy: close the loop the greedy water-filler
@@ -636,17 +639,17 @@ pub fn best_static_pair(
         );
     }
     let wired = evaluate_wired(t).total_s;
+    let prep = PreparedCosts::new(t);
     let mut best: Option<(f64, u32, f64)> = None;
     for &d in thresholds {
         for &p in pinjs {
-            let decisions = vec![
+            let r = prep.evaluate_uniform(
                 LayerDecision {
                     threshold: d,
                     pinj: p,
-                };
-                t.layers.len()
-            ];
-            let r = evaluate_policy(t, &decisions, wl_bw);
+                },
+                wl_bw,
+            );
             let s = checked_speedup(wired, r.total_s)?;
             if best.map(|(bs, _, _)| s > bs).unwrap_or(true) {
                 best = Some((s, d, p));

@@ -84,11 +84,34 @@ pub fn characterize(
 ) -> Result<Vec<LayerTraffic>> {
     mapping.validate(wl, pkg)?;
     let consumers = wl.consumers();
-    let datum_bits = pkg.cfg.datum_bits as f64;
     let resident = plan_weight_residency(wl, mapping, pkg);
     let mut out = Vec::with_capacity(wl.layers.len());
+    for i in 0..wl.layers.len() {
+        out.push(characterize_layer(wl, mapping, pkg, &consumers, &resident, i)?);
+    }
+    Ok(out)
+}
 
-    for (i, layer) in wl.layers.iter().enumerate() {
+/// Traffic for ONE layer — the single copy of the per-layer
+/// characterization arithmetic, shared by [`characterize`] and the
+/// incremental rebuild path ([`crate::sim::cost::TensorDelta`]), which
+/// re-derives only the layers a placement move touches. A layer's
+/// traffic depends on its own placement, its consumers' placements and
+/// the global weight-residency plan — nothing else — so the caller is
+/// responsible for the dirty-set computation (and for running
+/// `mapping.validate` first; this function assumes a valid placement
+/// for layer `i`).
+pub fn characterize_layer(
+    wl: &Workload,
+    mapping: &Mapping,
+    pkg: &Package,
+    consumers: &[Vec<usize>],
+    resident: &[bool],
+    i: usize,
+) -> Result<LayerTraffic> {
+    let datum_bits = pkg.cfg.datum_bits as f64;
+    {
+        let layer = &wl.layers[i];
         let place = &mapping.placements[i];
         let region = &place.chiplets;
         let n = region.len() as f64;
@@ -240,9 +263,8 @@ pub fn characterize(
         // --- Intra-chiplet NoC volume --------------------------------------
         t.noc_bits_per_chiplet = (in_bits_total + weight_bits + out_bits) / n;
 
-        out.push(t);
+        Ok(t)
     }
-    Ok(out)
 }
 
 #[cfg(test)]

@@ -4,6 +4,13 @@
 //! Two search subsystems instantiate it today: the wired-cost mapping
 //! search ([`crate::mapping::mapper::anneal`]) and the joint mapping ×
 //! offload co-optimization ([`crate::mapping::comap::co_anneal`]).
+//! Both now price moves through the *delta* layer of the incremental
+//! cost stack: the [`AnnealCost`] model contract (full-cost seed +
+//! per-move candidate pricing + commit-on-accept) lets a
+//! [`crate::sim::DeltaEvaluator`]-backed model re-price only the
+//! layers a move touches, while [`anneal`]'s plain-closure signature
+//! remains the full-reprice fallback — bit-identical candidate costs
+//! mean bit-identical trajectories, which the parity tests pin.
 //! Keeping the loop in one place fixes the annealing contract for both:
 //!
 //! * deterministic [`Pcg32`] seeding — identical `(seed, iters,
@@ -93,12 +100,82 @@ pub struct AnnealOutcome<S> {
     pub evaluated: usize,
 }
 
+/// The annealer's cost contract, extended for incremental (delta)
+/// pricing: a model prices the seed once in full, then prices each
+/// candidate — typically by re-deriving only what the move touched —
+/// and is told when a candidate becomes the incumbent so it can commit
+/// its staged state. Plain full-reprice closures keep working through
+/// [`anneal`], which wraps them in this trait; delta models enter via
+/// [`anneal_model`].
+///
+/// Contract (what the loop guarantees the model):
+/// * `seed_cost` is called exactly once, first.
+/// * Every candidate passed to `candidate_cost` is the current
+///   incumbent plus ONE perturbation; candidates are priced one at a
+///   time.
+/// * `accepted` is called at most once per `candidate_cost`, with the
+///   same state, immediately after the loop accepts it — so a model
+///   may stage per-move updates in `candidate_cost` and commit them in
+///   `accepted`; a rejected candidate's staging is simply overwritten
+///   by the next `candidate_cost`.
+/// * A candidate with non-finite cost is never accepted (`delta <=
+///   0.0` fails and `coin(exp(-inf)) == coin(0.0)` is always false),
+///   so the model's committed state always describes a finite-cost
+///   incumbent.
+pub trait AnnealCost<S> {
+    /// Price the seed state (full evaluation; seeds any caches).
+    fn seed_cost(&mut self, state: &S) -> f64;
+    /// Price a candidate one perturbation away from the incumbent.
+    fn candidate_cost(&mut self, state: &S) -> f64;
+    /// The candidate priced by the last [`Self::candidate_cost`] call
+    /// was accepted as the new incumbent.
+    fn accepted(&mut self, state: &S) {
+        let _ = state;
+    }
+}
+
+/// The full-reprice fallback: every state is priced from scratch by
+/// one closure, so there is nothing to commit on acceptance.
+struct FullCost<C>(C);
+
+impl<S, C: FnMut(&S) -> f64> AnnealCost<S> for FullCost<C> {
+    fn seed_cost(&mut self, state: &S) -> f64 {
+        (self.0)(state)
+    }
+
+    fn candidate_cost(&mut self, state: &S) -> f64 {
+        (self.0)(state)
+    }
+}
+
 /// Anneal from `initial`. `perturb` mutates a candidate in place using
 /// the shared RNG; `cost` must be deterministic for a given state
 /// (lower is better). Candidates with NaN cost are rejected (the
 /// acceptance coin is still flipped, so the trajectory is identical to
 /// a rejection by probability).
+///
+/// This is the full-reprice spelling of [`anneal_model`]: a delta
+/// model producing bit-identical candidate costs produces a
+/// bit-identical trajectory (same RNG draws, same acceptances, same
+/// best state).
 pub fn anneal<S, P, C>(
+    initial: S,
+    opts: &AnnealOptions,
+    perturb: P,
+    cost: C,
+) -> Result<AnnealOutcome<S>, AnnealError>
+where
+    S: Clone,
+    P: FnMut(&mut S, &mut Pcg32),
+    C: FnMut(&S) -> f64,
+{
+    anneal_model(initial, opts, perturb, FullCost(cost))
+}
+
+/// [`anneal`] over an [`AnnealCost`] model — the incremental-pricing
+/// entry point used by [`crate::mapping::mapper::anneal_wired`] and
+/// [`crate::mapping::comap::co_anneal`].
+pub fn anneal_model<S, P, C>(
     initial: S,
     opts: &AnnealOptions,
     mut perturb: P,
@@ -107,14 +184,14 @@ pub fn anneal<S, P, C>(
 where
     S: Clone,
     P: FnMut(&mut S, &mut Pcg32),
-    C: FnMut(&S) -> f64,
+    C: AnnealCost<S>,
 {
     if opts.iters == 0 {
         return Err(AnnealError::ZeroIterations);
     }
     let mut rng = Pcg32::seeded(opts.seed);
     let mut current = initial;
-    let mut current_cost = cost(&current);
+    let mut current_cost = cost.seed_cost(&current);
     if !current_cost.is_finite() {
         return Err(AnnealError::NonFiniteInitialCost(current_cost));
     }
@@ -129,12 +206,13 @@ where
         let temp = t0 * (1.0 - i as f64 / opts.iters as f64).max(1e-3);
         let mut cand = current.clone();
         perturb(&mut cand, &mut rng);
-        let cand_cost = cost(&cand);
+        let cand_cost = cost.candidate_cost(&cand);
         evaluated += 1;
         let delta = cand_cost - current_cost;
         // NaN delta fails both arms (the coin is still consumed), so a
         // broken candidate is a deterministic rejection.
         if delta <= 0.0 || rng.coin((-delta / temp).exp()) {
+            cost.accepted(&cand);
             current = cand;
             current_cost = cand_cost;
             accepted += 1;
@@ -283,6 +361,113 @@ mod tests {
         .unwrap();
         assert_eq!(r.state, 3);
         assert!(r.cost.is_finite());
+    }
+
+    /// A delta-style model over the toy landscape: prices candidates
+    /// from a cached incumbent value and commits on acceptance. Must
+    /// trace bit-identically to the closure path.
+    struct ToyDelta {
+        incumbent: f64,
+        staged: f64,
+        commits: usize,
+    }
+
+    impl AnnealCost<i64> for ToyDelta {
+        fn seed_cost(&mut self, x: &i64) -> f64 {
+            self.incumbent = (*x - 7).abs() as f64 + 1.0;
+            self.incumbent
+        }
+
+        fn candidate_cost(&mut self, x: &i64) -> f64 {
+            self.staged = (*x - 7).abs() as f64 + 1.0;
+            self.staged
+        }
+
+        fn accepted(&mut self, _x: &i64) {
+            self.incumbent = self.staged;
+            self.commits += 1;
+        }
+    }
+
+    #[test]
+    fn model_path_matches_closure_path_bit_exactly() {
+        let opts = AnnealOptions {
+            iters: 300,
+            ..Default::default()
+        };
+        let full = toy(&opts);
+        let model = ToyDelta {
+            incumbent: 0.0,
+            staged: 0.0,
+            commits: 0,
+        };
+        let delta = anneal_model(
+            0i64,
+            &opts,
+            |x, rng| {
+                if rng.coin(0.5) {
+                    *x += 1;
+                } else {
+                    *x -= 1;
+                }
+            },
+            model,
+        )
+        .unwrap();
+        assert_eq!(full.state, delta.state);
+        assert_eq!(full.cost, delta.cost);
+        assert_eq!(full.initial_cost, delta.initial_cost);
+        assert_eq!(full.accepted, delta.accepted);
+        assert_eq!(full.evaluated, delta.evaluated);
+    }
+
+    #[test]
+    fn accepted_fires_once_per_acceptance() {
+        let opts = AnnealOptions {
+            iters: 150,
+            ..Default::default()
+        };
+        // Count commits through a model the test keeps a handle on via
+        // the outcome's accepted counter: the loop promises one
+        // `accepted` call per accepted move.
+        struct Counting {
+            inner: ToyDelta,
+        }
+        impl AnnealCost<i64> for Counting {
+            fn seed_cost(&mut self, x: &i64) -> f64 {
+                self.inner.seed_cost(x)
+            }
+            fn candidate_cost(&mut self, x: &i64) -> f64 {
+                self.inner.candidate_cost(x)
+            }
+            fn accepted(&mut self, x: &i64) {
+                self.inner.accepted(x);
+                assert_eq!(
+                    self.inner.staged, self.inner.incumbent,
+                    "commit adopts the staged candidate"
+                );
+            }
+        }
+        let r = anneal_model(
+            0i64,
+            &opts,
+            |x, rng| {
+                if rng.coin(0.5) {
+                    *x += 1;
+                } else {
+                    *x -= 1;
+                }
+            },
+            Counting {
+                inner: ToyDelta {
+                    incumbent: 0.0,
+                    staged: 0.0,
+                    commits: 0,
+                },
+            },
+        )
+        .unwrap();
+        assert!(r.accepted > 0);
     }
 
     #[test]

@@ -2,9 +2,16 @@
 //! (criterion is not in the offline registry).
 //!
 //! Median-of-N timing with warmup, ns resolution, and a tabular reporter
-//! whose output the paper-figure benches also reuse.
+//! whose output the paper-figure benches also reuse — plus the
+//! trajectory layer of the incremental cost stack: [`BenchRecord`]
+//! before/after comparisons persisted as `BENCH_delta_eval.json`
+//! (schema: bench name -> `{iters_per_sec, speedup_vs_full}`) by
+//! `benches/delta_eval.rs`, so speedup claims ride with the tree
+//! instead of living in commit messages.
 
+use crate::report::{write_json, Json};
 use std::hint::black_box;
+use std::path::Path;
 use std::time::Instant;
 
 pub use std::hint::black_box as bb;
@@ -86,6 +93,65 @@ pub fn report(ms: &[Measurement]) {
     }
 }
 
+/// One before/after entry of the persisted bench trajectory: how fast
+/// the incremental path runs and its speedup over the full-reprice
+/// baseline it replaced.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Work items per second on the incremental path (anneal iters,
+    /// comap moves, sweep grid points — whatever the bench loops over).
+    pub iters_per_sec: f64,
+    /// Full-reprice median time over incremental median time.
+    pub speedup_vs_full: f64,
+}
+
+impl BenchRecord {
+    /// Build a record from the full-baseline and incremental
+    /// measurements of a loop doing `items` work items per call.
+    pub fn from_pair(
+        name: &str,
+        items: f64,
+        full: &Measurement,
+        fast: &Measurement,
+    ) -> BenchRecord {
+        BenchRecord {
+            name: name.to_string(),
+            iters_per_sec: fast.throughput(items),
+            speedup_vs_full: full.median_ns / fast.median_ns,
+        }
+    }
+}
+
+/// The `BENCH_delta_eval.json` document for a set of records.
+pub fn trajectory_json(records: &[BenchRecord]) -> Json {
+    Json::Obj(
+        records
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    Json::Obj(vec![
+                        ("iters_per_sec".into(), Json::Num(r.iters_per_sec)),
+                        (
+                            "speedup_vs_full".into(),
+                            Json::Num(r.speedup_vs_full),
+                        ),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Persist a bench trajectory (see [`trajectory_json`]) to `path`.
+pub fn write_trajectory(
+    path: &Path,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    write_json(path, &trajectory_json(records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +188,52 @@ mod tests {
         assert_eq!(fmt_ns(500.0), "500 ns");
         assert_eq!(fmt_ns(1.5e6), "1.500 ms");
         assert_eq!(fmt_ns(2.5e9), "2.500 s");
+    }
+
+    fn ms(median_ns: f64) -> Measurement {
+        Measurement {
+            name: "x".into(),
+            median_ns,
+            mean_ns: median_ns,
+            min_ns: median_ns,
+            max_ns: median_ns,
+            iters: 1,
+        }
+    }
+
+    #[test]
+    fn record_from_pair_reads_medians() {
+        // 100 items in 1ms on the fast path, 4ms on the full path.
+        let r = BenchRecord::from_pair("anneal", 100.0, &ms(4e6), &ms(1e6));
+        assert!((r.iters_per_sec - 1e5).abs() < 1e-6);
+        assert!((r.speedup_vs_full - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trajectory_round_trips_through_json() {
+        let recs = vec![
+            BenchRecord {
+                name: "anneal_wired/zfnet".into(),
+                iters_per_sec: 1234.5,
+                speedup_vs_full: 3.75,
+            },
+            BenchRecord {
+                name: "co_anneal/zfnet".into(),
+                iters_per_sec: 987.0,
+                speedup_vs_full: 5.0,
+            },
+        ];
+        let doc = Json::parse(&trajectory_json(&recs).render()).unwrap();
+        let e = doc.get("anneal_wired/zfnet").unwrap();
+        assert_eq!(e.get("iters_per_sec").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(e.get("speedup_vs_full").unwrap().as_f64(), Some(3.75));
+        assert_eq!(
+            doc.get("co_anneal/zfnet")
+                .unwrap()
+                .get("speedup_vs_full")
+                .unwrap()
+                .as_f64(),
+            Some(5.0)
+        );
     }
 }

@@ -1,0 +1,251 @@
+//! Incremental-cost-stack acceptance: the delta layer is bit-exact
+//! with full re-evaluation everywhere it is wired in.
+//!
+//! - randomized perturb sequences (placement + offload moves) priced
+//!   through [`DeltaEvaluator`] match a from-scratch
+//!   `build_tensors` + `evaluate_policy` after every step, on all 15
+//!   paper workloads (property test);
+//! - `anneal_wired` reproduces the closure-costed `anneal` spelling it
+//!   replaced, field for field;
+//! - `co_anneal` reproduces its full-reprice twin `co_anneal_full`;
+//! - `layer_outcome` agrees with the prepared path and folds to the
+//!   evaluator's total.
+//!
+//! (`python/tools/mirror_checks_delta.py` verifies the same contract
+//! without a Rust toolchain.)
+
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::comap::{co_anneal, co_anneal_full, ComapOptions};
+use wisper::mapping::mapper::{anneal, anneal_wired, perturb, SaOptions};
+use wisper::mapping::{greedy_sized, layer_sequential};
+use wisper::sim::cost::{build_tensors, CostTensors, TensorDelta};
+use wisper::sim::policy::{
+    evaluate_policy, layer_outcome, LayerDecision, PolicySpec,
+};
+use wisper::sim::{evaluate_wired, DeltaEvaluator, PreparedCosts};
+use wisper::util::propcheck::{self, ensure};
+use wisper::util::rng::Pcg32;
+use wisper::workloads::{build, WORKLOAD_NAMES};
+
+const WL_BW: f64 = 64e9;
+
+fn pkg() -> Package {
+    Package::new(ArchConfig::default()).unwrap()
+}
+
+fn elig() -> WirelessConfig {
+    WirelessConfig {
+        enabled: true,
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..WirelessConfig::default()
+    }
+}
+
+fn paper_grid() -> (Vec<u32>, Vec<f64>) {
+    (
+        vec![1, 2, 3, 4],
+        (0..15).map(|i| 0.10 + 0.05 * i as f64).collect(),
+    )
+}
+
+/// Drive `steps` random placement/offload moves through a
+/// [`DeltaEvaluator`] and check every priced total against a full
+/// rebuild + re-price of the same candidate, bit for bit. Moves are
+/// committed or discarded at random so the staged-pending path is
+/// exercised both ways.
+fn delta_tracks_full(name: &str, cases: u64, steps: usize) {
+    let pkg = pkg();
+    let elig = elig();
+    let wl = build(name).unwrap();
+    let (thresholds, pinjs) = paper_grid();
+    propcheck::run(cases, |g| {
+        let mut rng = Pcg32::seeded(g.u64_range(0, u64::MAX));
+        let delta = TensorDelta::new(&wl, &pkg, &elig);
+        let mut mapping = greedy_sized(&wl, &pkg);
+        let mut tensors =
+            build_tensors(&wl, &mapping, &pkg, &elig).expect("greedy seed");
+        let mut resident = delta.residency(&mapping);
+        let mut decisions: Vec<LayerDecision> = (0..wl.layers.len())
+            .map(|_| LayerDecision {
+                threshold: *g.choose(&thresholds),
+                pinj: *g.choose(&pinjs),
+            })
+            .collect();
+        let mut ev = DeltaEvaluator::new(&tensors, &decisions, WL_BW);
+        ensure(
+            ev.total() == evaluate_policy(&tensors, &decisions, WL_BW).total_s,
+            "seed total matches the full evaluator",
+        )?;
+        for _ in 0..steps {
+            if g.bool() {
+                // Placement move: dirty-set recost + delta price.
+                let mut cand = mapping.clone();
+                let li = perturb(&mut cand, &pkg, &mut rng);
+                let next_resident = delta.residency(&cand);
+                let dirty =
+                    delta.dirty_layers(li, &resident, &next_resident);
+                let mut layers = tensors.layers.clone();
+                if delta
+                    .recost(&cand, &next_resident, &dirty, &mut layers)
+                    .is_err()
+                {
+                    ensure(
+                        build_tensors(&wl, &cand, &pkg, &elig).is_err(),
+                        "incremental and full rebuild agree on failure",
+                    )?;
+                    continue;
+                }
+                let full = build_tensors(&wl, &cand, &pkg, &elig)
+                    .expect("incremental rebuild succeeded");
+                let changes: Vec<(usize, _, LayerDecision)> = dirty
+                    .iter()
+                    .map(|&j| (j, &layers[j], decisions[j]))
+                    .collect();
+                let total = ev.price_changes(&changes);
+                ensure(
+                    total == evaluate_policy(&full, &decisions, WL_BW).total_s,
+                    "placement move: delta price == full reprice",
+                )?;
+                if g.bool() {
+                    ev.commit();
+                    mapping = cand;
+                    tensors = CostTensors {
+                        layers,
+                        nop_agg_bw: tensors.nop_agg_bw,
+                    };
+                    resident = next_resident;
+                }
+            } else {
+                // Offload move: re-decide a few random layers.
+                let mut next = decisions.clone();
+                let k = g.usize_range(1, 3usize.min(wl.layers.len()));
+                for _ in 0..k {
+                    let j = g.usize_range(0, wl.layers.len() - 1);
+                    next[j] = LayerDecision {
+                        threshold: *g.choose(&thresholds),
+                        pinj: *g.choose(&pinjs),
+                    };
+                }
+                let changes: Vec<(usize, _, LayerDecision)> = next
+                    .iter()
+                    .zip(&decisions)
+                    .enumerate()
+                    .filter(|(_, (n, o))| n != o)
+                    .map(|(j, (n, _))| (j, &tensors.layers[j], *n))
+                    .collect();
+                let total = ev.price_changes(&changes);
+                ensure(
+                    total == evaluate_policy(&tensors, &next, WL_BW).total_s,
+                    "offload move: delta price == full reprice",
+                )?;
+                if g.bool() {
+                    ev.commit();
+                    decisions = next;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn randomized_move_sequences_price_bit_exactly_on_every_paper_workload() {
+    for name in WORKLOAD_NAMES {
+        delta_tracks_full(name, 2, 5);
+    }
+}
+
+#[test]
+fn anneal_wired_matches_the_closure_spelling_bit_exactly() {
+    let pkg = pkg();
+    let elig = elig();
+    for name in ["zfnet", "googlenet"] {
+        let wl = build(name).unwrap();
+        let sa = SaOptions {
+            iters: 60,
+            temp_frac: 0.25,
+            seed: 0xC0DE,
+        };
+        let full = anneal(&wl, &pkg, &sa, |m| {
+            build_tensors(&wl, m, &pkg, &elig)
+                .map(|t| evaluate_wired(&t).total_s)
+                .unwrap_or(f64::INFINITY)
+        })
+        .unwrap();
+        let delta = anneal_wired(&wl, &pkg, &elig, &sa).unwrap();
+        assert_eq!(full.cost, delta.cost, "{name}");
+        assert_eq!(full.initial_cost, delta.initial_cost, "{name}");
+        assert_eq!(full.mapping, delta.mapping, "{name}");
+        assert_eq!(full.accepted, delta.accepted, "{name}");
+        assert_eq!(full.evaluated, delta.evaluated, "{name}");
+    }
+}
+
+#[test]
+fn co_anneal_matches_its_full_reprice_twin_bit_exactly() {
+    let pkg = pkg();
+    let elig = elig();
+    let (thresholds, pinjs) = paper_grid();
+    let wl = build("googlenet").unwrap();
+    let base = layer_sequential(&wl, &pkg);
+    let opts = ComapOptions {
+        iters: 50,
+        temp_frac: 0.25,
+        seed: 7,
+        wl_bw: WL_BW,
+        refit: PolicySpec::Greedy,
+        thresholds,
+        pinjs,
+    };
+    let a = co_anneal(&wl, &pkg, &elig, &base, &opts).unwrap();
+    let b = co_anneal_full(&wl, &pkg, &elig, &base, &opts).unwrap();
+    assert_eq!(a.total_s, b.total_s);
+    assert_eq!(a.initial_total_s, b.initial_total_s);
+    assert_eq!(a.base_decoupled_total_s, b.base_decoupled_total_s);
+    assert_eq!(a.seq_decoupled_total_s, b.seq_decoupled_total_s);
+    assert_eq!(a.mapping, b.mapping);
+    assert_eq!(a.decisions, b.decisions);
+    assert_eq!(a.accepted, b.accepted);
+    assert_eq!(a.evaluated, b.evaluated);
+}
+
+#[test]
+fn layer_outcome_matches_the_prepared_path_and_folds_to_the_total() {
+    let pkg = pkg();
+    let elig = elig();
+    let (thresholds, pinjs) = paper_grid();
+    for name in ["zfnet", "transformer"] {
+        let wl = build(name).unwrap();
+        let m = layer_sequential(&wl, &pkg);
+        let t = build_tensors(&wl, &m, &pkg, &elig).unwrap();
+        let prep = PreparedCosts::new(&t);
+        for &th in &thresholds {
+            for &p in &pinjs {
+                let mut fold = 0.0;
+                for (l, pl) in t.layers.iter().zip(&prep.layers) {
+                    let (lat, bits) =
+                        layer_outcome(l, th, p, t.nop_agg_bw, WL_BW);
+                    let (plat, pbits) =
+                        pl.outcome(th, p, t.nop_agg_bw, WL_BW);
+                    assert_eq!(lat, plat, "{name}");
+                    assert_eq!(bits, pbits, "{name}");
+                    fold += lat;
+                }
+                let dec = vec![
+                    LayerDecision {
+                        threshold: th,
+                        pinj: p,
+                    };
+                    t.layers.len()
+                ];
+                assert_eq!(
+                    fold,
+                    evaluate_policy(&t, &dec, WL_BW).total_s,
+                    "{name}: per-layer outcomes fold to the total"
+                );
+            }
+        }
+    }
+}
