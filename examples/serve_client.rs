@@ -1,0 +1,85 @@
+//! Std-only client for a running `wisper serve` daemon: wait for
+//! liveness, submit a scenario file, poll the run to completion, print
+//! its experiment list and the daemon's cache counters.
+//!
+//! ```text
+//! wisper serve --addr 127.0.0.1:8787 &
+//! cargo run --release --example serve_client -- \
+//!     127.0.0.1:8787 examples/serve_scenario.toml
+//! ```
+//!
+//! The CI serve-smoke job drives exactly this binary; its stdout is
+//! what the job greps (`run ... done`, the experiment names).
+
+use anyhow::{bail, Context as _, Result};
+use wisper::report::Json;
+use wisper::serve::http::client_request;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args.first().map(String::as_str).unwrap_or("127.0.0.1:8787");
+    let file = args
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("examples/serve_scenario.toml");
+
+    // The daemon may still be booting (CI starts it in the background):
+    // retry liveness for up to 30 s.
+    let mut alive = false;
+    for _ in 0..120 {
+        if let Ok((200, _)) = client_request(addr, "GET", "/healthz", None) {
+            alive = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(250));
+    }
+    if !alive {
+        bail!("no wisper serve daemon answered on {addr}");
+    }
+
+    let body = std::fs::read_to_string(file)
+        .with_context(|| format!("reading scenario file {file}"))?;
+    let (status, doc) = client_request(addr, "POST", "/runs", Some(&body))?;
+    if status != 202 {
+        bail!("submission rejected ({status}): {}", doc.render());
+    }
+    let run_id = doc
+        .get("run_id")
+        .and_then(Json::as_str)
+        .context("submission response carries no run_id")?
+        .to_string();
+    println!("submitted {file} as run {run_id}");
+
+    // Poll to completion (up to 10 minutes; preparation dominates).
+    for _ in 0..2400 {
+        let (status, doc) = client_request(addr, "GET", &format!("/runs/{run_id}"), None)?;
+        if status != 200 {
+            bail!("status poll failed ({status}): {}", doc.render());
+        }
+        match doc.get("phase").and_then(Json::as_str) {
+            Some("done") => {
+                let experiments: Vec<&str> = doc
+                    .get("experiments")
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_str)
+                    .collect();
+                println!(
+                    "run {run_id} done: experiments [{}], prepare {:.1} ms, \
+                     total {:.1} ms, cache hits {}",
+                    experiments.join(", "),
+                    doc.get("prepare_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    doc.get("total_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                    doc.get("cache_hits").and_then(Json::as_f64).unwrap_or(0.0),
+                );
+                let (_, stats) = client_request(addr, "GET", "/stats", None)?;
+                println!("daemon stats: {}", stats.render());
+                return Ok(());
+            }
+            Some("failed") => bail!("run {run_id} failed: {}", doc.render()),
+            _ => std::thread::sleep(std::time::Duration::from_millis(250)),
+        }
+    }
+    bail!("run {run_id} did not finish within the polling budget");
+}

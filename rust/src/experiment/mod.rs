@@ -207,31 +207,52 @@ pub struct ScenarioRun {
     pub outputs: Vec<(String, ExperimentOutput)>,
 }
 
-/// Run every experiment of a scenario: prepare the workloads once (in
-/// parallel, through the scenario's [`crate::coordinator::MapSearch`]
-/// with per-workload derived seeds), build the shared
-/// [`ExperimentCtx`], then execute the scenario's experiment list in
-/// order.
-///
-/// Preparation always runs the *wired* objective (the shared wired
-/// reference every experiment reads); a hybrid `map_objective` is
-/// priced inside the experiments that consume it — the `campaign`
-/// experiment re-solves the joint search per (workload, bandwidth)
-/// unit and `mapping-ablation` per bandwidth — so no joint search is
-/// paid whose outcome nothing reads.
-pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<ScenarioRun> {
+/// The wired-objective [`crate::coordinator::MapSearch`] one workload
+/// of a scenario is prepared with. Preparation always runs the *wired*
+/// objective (the shared wired reference every experiment reads); a
+/// hybrid `map_objective` is priced inside the experiments that
+/// consume it — the `campaign` experiment re-solves the joint search
+/// per (workload, bandwidth) unit and `mapping-ablation` per
+/// bandwidth — so no joint search is paid whose outcome nothing reads.
+/// This search (not the scenario's raw one) is also the serve
+/// subsystem's [`crate::serve::cache::PreparedCache`] key material:
+/// two scenarios whose searches agree share one prepared entry.
+pub fn prepare_search(
+    coord: &Coordinator,
+    scenario: &Scenario,
+    workload: &str,
+) -> Result<crate::coordinator::MapSearch> {
+    let mut search = scenario.map_search(coord, workload)?;
+    search.objective = crate::mapping::comap::MappingObjective::Wired;
+    Ok(search)
+}
+
+/// Prepare a scenario's workloads once, in parallel, through
+/// [`prepare_search`] — the shared first stage of [`run_scenario`].
+/// The serve subsystem substitutes its memoized `Prepared` cache for
+/// this call and hands the result to [`run_prepared`].
+pub fn prepare_scenario(
+    coord: &Coordinator,
+    scenario: &Scenario,
+) -> Result<Vec<Prepared>> {
     let workers = scenario.resolved_workers(coord);
-    let prepared: Result<Vec<Prepared>> =
-        parallel_map(scenario.workloads.len(), workers, |i| {
-            let name = &scenario.workloads[i];
-            let mut search = scenario.map_search(coord, name)?;
-            search.objective = crate::mapping::comap::MappingObjective::Wired;
-            coord.prepare_mapped(name, &search)
-        })
-        .into_iter()
-        .collect();
-    let prepared = prepared?;
-    let ctx = ExperimentCtx::new(coord, scenario, &prepared);
+    parallel_map(scenario.workloads.len(), workers, |i| {
+        let name = &scenario.workloads[i];
+        coord.prepare_mapped(name, &prepare_search(coord, scenario, name)?)
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Execute a scenario's experiment list, in order, over workloads that
+/// are already prepared (one entry per `scenario.workloads` entry, in
+/// scenario order — [`prepare_scenario`] or a cache thereof).
+pub fn run_prepared(
+    coord: &Coordinator,
+    scenario: &Scenario,
+    prepared: &[Prepared],
+) -> Result<ScenarioRun> {
+    let ctx = ExperimentCtx::new(coord, scenario, prepared);
     let mut outputs = Vec::with_capacity(scenario.experiments.len());
     for name in &scenario.experiments {
         let exp = match find(name) {
@@ -247,6 +268,16 @@ pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<Scenario
         backend: ctx.backend_name(),
         outputs,
     })
+}
+
+/// Run every experiment of a scenario: prepare the workloads once (in
+/// parallel, through the scenario's [`crate::coordinator::MapSearch`]
+/// with per-workload derived seeds), build the shared
+/// [`ExperimentCtx`], then execute the scenario's experiment list in
+/// order. [`prepare_scenario`] + [`run_prepared`] as one call.
+pub fn run_scenario(coord: &Coordinator, scenario: &Scenario) -> Result<ScenarioRun> {
+    let prepared = prepare_scenario(coord, scenario)?;
+    run_prepared(coord, scenario, &prepared)
 }
 
 /// [`run_scenario`] + persist the run record through `store`. Returns

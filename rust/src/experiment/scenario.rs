@@ -256,6 +256,132 @@ impl Scenario {
         Self::from_toml_str(&text, cfg)
     }
 
+    /// Build a scenario from a JSON object — the shape
+    /// [`Self::to_json`] emits into run manifests, which is also what
+    /// `wisper serve` accepts on `POST /runs`: a manifest's `scenario`
+    /// object can be re-submitted verbatim. Keys mirror
+    /// [`Self::TOML_KEYS`] (`bandwidths_bits` is accepted as the
+    /// manifest spelling of `bandwidths`); unknown keys are hard
+    /// errors, like the TOML path, and missing keys default from
+    /// `cfg`.
+    pub fn from_json(doc: &Json, cfg: &Config) -> Result<Self> {
+        let fields = doc
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("scenario JSON must be an object"))?;
+        for (key, _) in fields {
+            if !Self::TOML_KEYS.contains(&key.as_str()) && key != "bandwidths_bits" {
+                bail!(
+                    "scenario JSON: unknown key {key:?}; valid keys: {}, \
+                     bandwidths_bits",
+                    Self::TOML_KEYS.join(", ")
+                );
+            }
+        }
+        let str_list = |key: &str| -> Result<Option<Vec<String>>> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(|v| {
+                        v.as_str().map(String::from).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "scenario JSON: {key} must be an array of strings"
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(Some),
+                Some(_) => bail!("scenario JSON: {key} must be an array of strings"),
+            }
+        };
+        let num_list = |key: &str| -> Result<Option<Vec<f64>>> {
+            match doc.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "scenario JSON: {key} must be an array of numbers"
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()
+                    .map(Some),
+                Some(_) => bail!("scenario JSON: {key} must be an array of numbers"),
+            }
+        };
+        let whole = |key: &str, x: f64| -> Result<u64> {
+            if x.fract() != 0.0 || !(0.0..=u64::MAX as f64).contains(&x) {
+                bail!("scenario JSON: {key} expects a whole number, got {x}");
+            }
+            Ok(x as u64)
+        };
+        let mut s = Self::from_config(cfg);
+        if let Some(v) = doc.get("name").and_then(Json::as_str) {
+            s.name = v.to_string();
+        }
+        if let Some(v) = str_list("workloads")? {
+            s.workloads = v;
+        }
+        if let Some(v) = str_list("experiments")? {
+            s.experiments = v;
+        }
+        // Manifests spell the axis `bandwidths_bits`; accept the TOML
+        // key too so hand-written JSON matches the TOML grammar.
+        if let Some(v) = num_list("bandwidths_bits")? {
+            s.bandwidths = v;
+        } else if let Some(v) = num_list("bandwidths")? {
+            s.bandwidths = v;
+        }
+        if let Some(v) = num_list("thresholds")? {
+            let mut ts = Vec::with_capacity(v.len());
+            for x in v {
+                let t = whole("thresholds", x)?;
+                if t > u32::MAX as u64 {
+                    bail!("scenario JSON: thresholds entry {t} out of range");
+                }
+                ts.push(t as u32);
+            }
+            s.thresholds = ts;
+        }
+        if let Some(v) = num_list("injection_probs")? {
+            s.injection_probs = v;
+        }
+        if let Some(v) = str_list("policies")? {
+            s.policies = v;
+        }
+        if let Some(v) = doc.get("backend").and_then(Json::as_str) {
+            s.backend = v.to_string();
+        }
+        if let Some(x) = doc.get("seeds").and_then(Json::as_f64) {
+            s.seeds = whole("seeds", x)?;
+        }
+        if let Some(b) = doc.get("optimize").and_then(Json::as_bool) {
+            s.optimize = b;
+        }
+        if let Some(v) = doc.get("map_objective").and_then(Json::as_str) {
+            s.map_objective = v.to_string();
+        }
+        if let Some(x) = doc.get("map_iters").and_then(Json::as_f64) {
+            s.map_iters = Some(whole("map_iters", x)? as usize);
+        }
+        if let Some(x) = doc.get("map_seed").and_then(Json::as_f64) {
+            s.map_seed = Some(whole("map_seed", x)?);
+        }
+        if let Some(x) = doc.get("map_temp_frac").and_then(Json::as_f64) {
+            s.map_temp_frac = Some(x);
+        }
+        if let Some(b) = doc.get("refine").and_then(Json::as_bool) {
+            s.refine = b;
+        }
+        if let Some(x) = doc.get("workers").and_then(Json::as_f64) {
+            s.workers = whole("workers", x)? as usize;
+        }
+        s.normalize_and_validate()?;
+        Ok(s)
+    }
+
     /// Expand `"all"`, dedupe lists (order-preserving) and validate
     /// every axis. Called by every constructor that takes user input.
     pub fn normalize_and_validate(&mut self) -> Result<()> {

@@ -47,6 +47,21 @@ impl RunStore {
         &self.root
     }
 
+    /// Create the store root, surfacing the resolved path and the
+    /// redirect knob on failure: a results directory that cannot be
+    /// created (read-only checkout, a regular file squatting on the
+    /// path) must be a clear error at first use, not a panic or a bare
+    /// "permission denied" with no path.
+    fn ensure_root(&self) -> Result<()> {
+        std::fs::create_dir_all(&self.root).with_context(|| {
+            format!(
+                "cannot create results directory {} (set WISPER_RESULTS_DIR \
+                 to a writable directory to redirect run records)",
+                self.root.display()
+            )
+        })
+    }
+
     /// Persist one scenario run: per-experiment JSON + CSVs plus the
     /// manifest tying them together.
     pub fn save(
@@ -55,8 +70,38 @@ impl RunStore {
         backend: &str,
         outputs: &[(String, ExperimentOutput)],
     ) -> Result<RunRecord> {
+        self.ensure_root()?;
         let run_id = self.fresh_run_id()?;
+        self.save_as(&run_id, scenario, backend, outputs)
+    }
+
+    /// [`Self::save`] under a caller-chosen run id (the serve daemon
+    /// allocates ids at submission time, before results exist, so
+    /// clients can poll the id they were handed). The id must be a
+    /// plain directory name and must not collide with a saved run.
+    pub fn save_as(
+        &self,
+        run_id: &str,
+        scenario: &Scenario,
+        backend: &str,
+        outputs: &[(String, ExperimentOutput)],
+    ) -> Result<RunRecord> {
+        if run_id.is_empty()
+            || run_id
+                .chars()
+                .any(|c| !(c.is_ascii_alphanumeric() || c == '-' || c == '_'))
+        {
+            bail!(
+                "run id {run_id:?} is not a plain directory name \
+                 (expected [A-Za-z0-9_-]+)"
+            );
+        }
+        self.ensure_root()?;
+        let run_id = run_id.to_string();
         let dir = self.root.join(&run_id);
+        if dir.join("manifest.json").exists() {
+            bail!("run id {run_id:?} already exists under {}", self.root.display());
+        }
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating run dir {}", dir.display()))?;
 

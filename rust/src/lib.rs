@@ -57,6 +57,15 @@
 //! `hybrid[:policy]`) selects between them through
 //! [`coordinator::MapSearch`], `CampaignSpec::comap`,
 //! `Scenario.map_objective` and the CLI (`--map-objective`, `--comap`).
+//!
+//! The same stack also runs resident: `wisper serve` ([`serve`]) is a
+//! std-only HTTP/JSON daemon that accepts scenarios over `POST /runs`,
+//! executes them through a memoized LRU cache of
+//! [`coordinator::Prepared`] workloads (repeated identical queries skip
+//! the mapping search entirely), persists every run through the same
+//! [`experiment::RunStore`], serves `wisper compare` over the wire
+//! (`GET /compare/:a/:b`), and hot-reloads scenario TOMLs from a
+//! watched directory.
 
 pub mod arch;
 pub mod cli;
@@ -70,6 +79,7 @@ pub mod noc;
 pub mod nop;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod wireless;

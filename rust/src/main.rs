@@ -20,6 +20,7 @@ use wisper::coordinator::loadbalance;
 use wisper::coordinator::Coordinator;
 use wisper::experiment::{self, figures, RunStore, Scenario};
 use wisper::report;
+use wisper::serve;
 use wisper::sim::policy::PolicySpec;
 use wisper::util::eng;
 use wisper::workloads::WORKLOAD_NAMES;
@@ -49,6 +50,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "map-temp-frac", takes_value: true, help: "mapping-search initial temperature fraction" },
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
         OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
+        OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
+        OptSpec { name: "threads", takes_value: true, help: "serve: HTTP handler threads (0 = default pool)" },
+        OptSpec { name: "cache-entries", takes_value: true, help: "serve: prepared-cache entry cap (0 disables)" },
+        OptSpec { name: "watch-dir", takes_value: true, help: "serve: hot-reload scenario TOMLs from this directory" },
         OptSpec { name: "refine", takes_value: false, help: "adaptive refinement after campaign grid passes" },
         OptSpec { name: "csv", takes_value: false, help: "(legacy; ignored — run records always include CSVs)" },
         OptSpec { name: "json", takes_value: false, help: "(legacy; ignored — run records always include JSON)" },
@@ -56,8 +61,9 @@ fn specs() -> Vec<OptSpec> {
     ]
 }
 
-const SUBCOMMANDS: [(&str, &str); 8] = [
+const SUBCOMMANDS: [(&str, &str); 9] = [
     ("run", "execute a scenario through the experiment registry"),
+    ("serve", "HTTP evaluation daemon: POST /runs, GET /runs/:id, /stats"),
     ("list-experiments", "list the registered experiments"),
     ("compare", "diff two persisted runs: compare <run-a> <run-b>"),
     ("params", "print Table 1 (simulation parameters)"),
@@ -98,6 +104,7 @@ fn main() -> Result<()> {
 
     match p.subcommand.as_str() {
         "run" => cmd_run(&p, None),
+        "serve" => cmd_serve(&p),
         "list-experiments" => cmd_list_experiments(),
         "compare" => cmd_compare(&p),
         "params" => cmd_params(&load_config(&p)?),
@@ -294,6 +301,48 @@ fn cmd_run(p: &Parsed, legacy: Option<(&str, &str)>) -> Result<()> {
         record.dir.display(),
         outputs.len()
     );
+    Ok(())
+}
+
+/// `wisper serve`: run the evaluator as a resident HTTP/JSON daemon.
+/// The main thread only parks and polls for SIGINT/SIGTERM; the accept
+/// loop, executor and optional watcher live on their own threads and
+/// are drained by `Server::shutdown`.
+fn cmd_serve(p: &Parsed) -> Result<()> {
+    let (_, coord) = coordinator(p)?;
+    let store = RunStore::open_default();
+    let mut opts = serve::ServeOptions::default();
+    if let Some(addr) = p.get("addr") {
+        opts.addr = addr.to_string();
+    }
+    if let Some(threads) = p.get_usize("threads")? {
+        opts.threads = threads;
+    }
+    if let Some(entries) = p.get_usize("cache-entries")? {
+        opts.cache_entries = entries;
+    }
+    opts.watch_dir = p.get("watch-dir").map(std::path::PathBuf::from);
+
+    serve::install_signal_handlers();
+    let watch = opts.watch_dir.clone();
+    let server = serve::Server::start(coord, store, opts)?;
+    println!("wisper serve listening on http://{}", server.addr());
+    println!("  POST /runs             submit a scenario (TOML or JSON body)");
+    println!("  GET  /runs             list runs");
+    println!("  GET  /runs/:id         status + manifest");
+    println!("  GET  /runs/:id/results per-experiment outputs");
+    println!("  GET  /compare/:a/:b    diff two runs");
+    println!("  GET  /stats | /healthz daemon + cache counters");
+    if let Some(dir) = watch {
+        println!("  watching {} for scenario changes", dir.display());
+    }
+    println!("Ctrl-C drains in-flight runs and exits.");
+    while !serve::shutdown_requested() && !server.state().shutting_down() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    eprintln!("wisper serve: shutting down (draining queued runs)...");
+    server.shutdown();
+    eprintln!("wisper serve: done");
     Ok(())
 }
 

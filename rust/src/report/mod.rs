@@ -295,6 +295,18 @@ fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String> {
                 }
                 *pos += 1;
             }
+            // RFC 8259 §7: control characters inside strings MUST be
+            // escaped. Accepting them raw would break the emitter
+            // round-trip contract once manifests travel over HTTP (a
+            // raw 0x0A inside a string is indistinguishable from
+            // framing); the emitter always writes `\n`/`\uXXXX`.
+            Some(&b) if b < 0x20 => {
+                bail!(
+                    "unescaped control character 0x{b:02x} in JSON string \
+                     at byte {} (must be \\u-escaped)",
+                    *pos
+                );
+            }
             Some(_) => {
                 // Consume one complete UTF-8 scalar.
                 let rest = std::str::from_utf8(&bytes[*pos..])
@@ -311,8 +323,16 @@ fn parse_hex4(bytes: &[u8], at: usize) -> Result<u32> {
     let chunk = bytes
         .get(at..at + 4)
         .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
-    let s = std::str::from_utf8(chunk)
-        .map_err(|_| anyhow::anyhow!("invalid \\u escape"))?;
+    // Exactly four hex digits: `from_str_radix` alone would also accept
+    // a leading `+` ("\u+041"), which no JSON emitter produces and RFC
+    // 8259 forbids.
+    if !chunk.iter().all(u8::is_ascii_hexdigit) {
+        bail!(
+            "invalid \\u escape {:?}",
+            String::from_utf8_lossy(chunk)
+        );
+    }
+    let s = std::str::from_utf8(chunk).expect("hex digits are ASCII");
     u32::from_str_radix(s, 16).map_err(|_| anyhow::anyhow!("invalid \\u escape {s:?}"))
 }
 
@@ -646,6 +666,70 @@ mod tests {
         // Raw multi-byte UTF-8 passes through.
         assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
         assert!(Json::parse("\"\\ud83d\"").is_err()); // lone surrogate
+    }
+
+    #[test]
+    fn json_every_control_char_roundtrips_escaped() {
+        // Exhaustive: every control character a manifest string can
+        // carry must emit escaped and parse back to itself — manifests
+        // travel over the serve HTTP API, where a raw control byte
+        // would corrupt framing.
+        for code in 0u32..0x20 {
+            let c = char::from_u32(code).unwrap();
+            let s = format!("a{c}b");
+            let rendered = Json::Str(s.clone()).render();
+            // Raw control bytes never appear inside the emitted string
+            // literal (the surrounding render adds one trailing '\n').
+            assert_eq!(
+                rendered.trim_end_matches('\n').bytes().filter(|b| *b < 0x20).count(),
+                0,
+                "raw control byte emitted for U+{code:04X}: {rendered:?}"
+            );
+            let back = Json::parse(&rendered).unwrap();
+            assert_eq!(back, Json::Str(s), "round-trip failed for U+{code:04X}");
+        }
+        // DEL and non-ASCII pass through unescaped but round-trip.
+        for s in ["del\u{7f}", "é⇒\u{1F600}", "mixed\t\u{0b}\u{1f}✓"] {
+            let back = Json::parse(&Json::Str(s.into()).render()).unwrap();
+            assert_eq!(back, Json::Str(s.into()));
+        }
+    }
+
+    #[test]
+    fn json_unicode_escape_forms_roundtrip() {
+        // \uXXXX escapes normalize to the scalar they name, including
+        // BMP chars the emitter would write raw.
+        assert_eq!(
+            Json::parse("\"\\u0041\\u00E9\\u2713\"").unwrap(),
+            Json::Str("Aé✓".into())
+        );
+        // Escaped solidus is legal input.
+        assert_eq!(Json::parse("\"a\\/b\"").unwrap(), Json::Str("a/b".into()));
+        // A string of every escape form the emitter writes.
+        let s = "\"\\\n\r\t\u{0008}\u{000c}\u{0000}\u{001f}";
+        let back = Json::parse(&Json::Str(s.into()).render()).unwrap();
+        assert_eq!(back, Json::Str(s.into()));
+        // Surrogate pairs round-trip through parse (the emitter writes
+        // astral chars as raw UTF-8, which also parses).
+        let astral = Json::parse("\"\\ud83d\\ude00!\"").unwrap();
+        assert_eq!(astral, Json::Str("\u{1F600}!".into()));
+        assert_eq!(Json::parse(&astral.render()).unwrap(), astral);
+    }
+
+    #[test]
+    fn json_rejects_raw_controls_and_signed_hex() {
+        // RFC 8259 §7: unescaped control characters in strings are
+        // invalid — and round-trip-unsafe over HTTP.
+        assert!(Json::parse("\"a\nb\"").is_err());
+        assert!(Json::parse("\"a\tb\"").is_err());
+        assert!(Json::parse("\"a\u{0000}b\"").is_err());
+        // from_str_radix would accept a '+' sign; the grammar does not.
+        assert!(Json::parse("\"\\u+041\"").is_err());
+        assert!(Json::parse("\"\\u00 1\"").is_err());
+        assert!(Json::parse("\"\\uD83D\\u+E00\"").is_err());
+        // Truncated escapes still error cleanly.
+        assert!(Json::parse("\"\\u00\"").is_err());
+        assert!(Json::parse("\"\\ud83d\\ude0\"").is_err());
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Route table of the daemon: `(method, path)` → JSON response.
+//!
+//! | Route                    | Meaning                                      |
+//! |--------------------------|----------------------------------------------|
+//! | `POST /runs`             | submit a scenario (TOML or JSON body) → id   |
+//! | `GET /runs`              | list submitted runs                          |
+//! | `GET /runs/:id`          | status + manifest (once persisted)           |
+//! | `GET /runs/:id/results`  | per-experiment JSON outputs                  |
+//! | `GET /compare/:a/:b`     | [`compare_manifests`] over the wire          |
+//! | `GET /stats`             | run counts, cache counters, uptime           |
+//! | `GET /healthz`           | liveness                                     |
+//! | `POST /shutdown`         | begin the graceful drain                     |
+//!
+//! Bodies are sniffed: a leading `{` means the JSON shape
+//! [`Scenario::to_json`] emits into manifests (so a manifest's
+//! `scenario` object can be re-submitted verbatim), anything else is
+//! the `[scenario]` TOML grammar. Errors are `{"error": ...}` with
+//! 400/404/405/503.
+
+use super::http::{Request, Response};
+use super::state::ServerState;
+use crate::experiment::{compare_manifests, Scenario};
+use crate::report::Json;
+use anyhow::{Context as _, Result};
+
+/// Route one request against the server state.
+pub fn handle(state: &ServerState, req: &Request) -> Response {
+    let segments: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segments.as_slice()) {
+        ("GET", ["healthz"]) => Response::json(
+            200,
+            &Json::Obj(vec![
+                ("ok".into(), Json::Bool(true)),
+                ("shutting_down".into(), Json::Bool(state.shutting_down())),
+            ]),
+        ),
+        ("GET", ["stats"]) => Response::json(200, &state.stats_json()),
+        ("GET", ["runs"]) => Response::json(200, &state.list_json()),
+        ("POST", ["runs"]) => submit(state, req),
+        ("GET", ["runs", id]) => run_status(state, id),
+        ("GET", ["runs", id, "results"]) => run_results(state, id),
+        ("GET", ["compare", a, b]) => compare(state, a, b),
+        ("POST", ["shutdown"]) => {
+            state.begin_shutdown();
+            Response::json(
+                200,
+                &Json::Obj(vec![("shutting_down".into(), Json::Bool(true))]),
+            )
+        }
+        ("GET" | "POST", _) => {
+            Response::error(404, &format!("no route for {} {}", req.method, req.path))
+        }
+        _ => Response::error(405, &format!("method {} not allowed", req.method)),
+    }
+}
+
+/// Run ids travel in URLs and become store paths: restrict them to the
+/// same `[A-Za-z0-9_-]+` grammar the store enforces on save, so a
+/// crafted id can never escape the results directory.
+fn safe_id(id: &str) -> bool {
+    !id.is_empty()
+        && id
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+/// `POST /runs`: parse, validate against the daemon's config, enqueue.
+fn submit(state: &ServerState, req: &Request) -> Response {
+    if state.shutting_down() {
+        return Response::error(503, "server is shutting down and accepts no new runs");
+    }
+    let text = match req.body_str() {
+        Ok(t) => t,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let scenario = if text.trim_start().starts_with('{') {
+        Json::parse(text)
+            .context("parsing scenario JSON")
+            .and_then(|doc| Scenario::from_json(&doc, &state.coord.cfg))
+    } else {
+        Scenario::from_toml_str(text, &state.coord.cfg)
+    };
+    let scenario = match scenario {
+        Ok(s) => s,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    match state.submit(scenario, "http") {
+        Ok(run_id) => Response::json(
+            202,
+            &Json::Obj(vec![
+                ("run_id".into(), Json::Str(run_id.clone())),
+                ("status".into(), Json::Str(format!("/runs/{run_id}"))),
+                (
+                    "results".into(),
+                    Json::Str(format!("/runs/{run_id}/results")),
+                ),
+            ]),
+        ),
+        Err(e) => Response::error(503, &e.to_string()),
+    }
+}
+
+/// `GET /runs/:id`: the live status fields plus the persisted manifest
+/// (null until the run is done).
+fn run_status(state: &ServerState, run_id: &str) -> Response {
+    if !safe_id(run_id) {
+        return Response::error(400, &format!("malformed run id {run_id:?}"));
+    }
+    let mut fields = match state.run_json(run_id) {
+        Some(Json::Obj(fields)) => fields,
+        // Not submitted to *this* daemon: still serve persisted runs
+        // (a restarted daemon keeps its store history queryable).
+        _ => match state.store.load_manifest(run_id) {
+            Ok(manifest) => {
+                return Response::json(
+                    200,
+                    &Json::Obj(vec![
+                        ("run_id".into(), Json::Str(run_id.to_string())),
+                        ("phase".into(), Json::Str("done".to_string())),
+                        ("source".into(), Json::Str("store".to_string())),
+                        ("manifest".into(), manifest),
+                    ]),
+                )
+            }
+            Err(_) => return Response::error(404, &format!("unknown run {run_id:?}")),
+        },
+    };
+    let manifest = state.store.load_manifest(run_id).unwrap_or(Json::Null);
+    fields.push(("manifest".into(), manifest));
+    Response::json(200, &Json::Obj(fields))
+}
+
+/// `GET /runs/:id/results`: every experiment's persisted JSON output.
+fn run_results(state: &ServerState, run_id: &str) -> Response {
+    if !safe_id(run_id) {
+        return Response::error(400, &format!("malformed run id {run_id:?}"));
+    }
+    if let Some(run) = state.run_json(run_id) {
+        let phase = run.get("phase").and_then(Json::as_str).unwrap_or("?");
+        if phase != "done" {
+            return Response::error(
+                404,
+                &format!("run {run_id:?} is {phase}; results exist once it is done"),
+            );
+        }
+    }
+    match read_results(state, run_id) {
+        Ok(doc) => Response::json(200, &doc),
+        Err(e) => Response::error(404, &e.to_string()),
+    }
+}
+
+fn read_results(state: &ServerState, run_id: &str) -> Result<Json> {
+    let manifest = state.store.load_manifest(run_id)?;
+    let dir = state.store.resolve(run_id);
+    let mut outputs = Vec::new();
+    let entries = manifest
+        .get("experiments")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    for exp in entries {
+        let name = exp.get("name").and_then(Json::as_str).unwrap_or("?");
+        let file = match exp.get("json").and_then(Json::as_str) {
+            Some(f) => f,
+            None => continue,
+        };
+        let text = std::fs::read_to_string(dir.join(file))
+            .with_context(|| format!("reading experiment output {file}"))?;
+        let doc =
+            Json::parse(&text).with_context(|| format!("parsing experiment output {file}"))?;
+        outputs.push((name.to_string(), doc));
+    }
+    Ok(Json::Obj(vec![
+        ("run_id".into(), Json::Str(run_id.to_string())),
+        ("experiments".into(), Json::Obj(outputs)),
+    ]))
+}
+
+/// `GET /compare/:a/:b`: diff two persisted manifests' metric
+/// summaries — `wisper compare` over the wire.
+fn compare(state: &ServerState, a: &str, b: &str) -> Response {
+    if !safe_id(a) || !safe_id(b) {
+        return Response::error(400, "malformed run id");
+    }
+    let ma = match state.store.load_manifest(a) {
+        Ok(m) => m,
+        Err(e) => return Response::error(404, &e.to_string()),
+    };
+    let mb = match state.store.load_manifest(b) {
+        Ok(m) => m,
+        Err(e) => return Response::error(404, &e.to_string()),
+    };
+    Response::json(200, &compare_manifests(&ma, &mb).to_json())
+}

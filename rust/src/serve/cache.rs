@@ -1,0 +1,285 @@
+//! Keyed LRU cache of [`Prepared`] workloads — the daemon's memo of
+//! the expensive first stage of every run.
+//!
+//! Preparation (build workload → mapping search → cost tensors → wired
+//! reference) dominates small-request latency and depends only on the
+//! *search*, not on the grid axes an experiment later sweeps: the
+//! experiment layer forces the wired objective during preparation
+//! ([`crate::experiment::prepare_search`]), so `wl_bw`, `thresholds`
+//! and `pinjs` never change the prepared artifact. The cache key
+//! therefore covers exactly (workload, optimize flag, SA schedule,
+//! evaluation backend) — two scenarios that differ only in bandwidths
+//! or grid shape share one entry, which is what makes repeated
+//! interactive queries cheap.
+//!
+//! Eviction is least-recently-used over a configurable entry cap
+//! (`wisper serve --cache-entries`, 0 disables caching); hit / miss /
+//! eviction counters are surfaced on `GET /stats`.
+
+use crate::coordinator::{Coordinator, MapSearch, Prepared};
+use crate::experiment::{prepare_search, Scenario};
+use crate::report::Json;
+use crate::util::threadpool::parallel_map;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Counter snapshot for `GET /stats`.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("entries".into(), Json::Num(self.entries as f64)),
+            ("capacity".into(), Json::Num(self.capacity as f64)),
+            ("hits".into(), Json::Num(self.hits as f64)),
+            ("misses".into(), Json::Num(self.misses as f64)),
+            ("evictions".into(), Json::Num(self.evictions as f64)),
+        ])
+    }
+}
+
+struct Entry {
+    last_used: u64,
+    prepared: Prepared,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe LRU of prepared workloads, shared by the executor and
+/// any future sharded workers.
+pub struct PreparedCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PreparedCache {
+    /// A cache holding at most `capacity` entries (0 disables caching:
+    /// every lookup misses and nothing is stored).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The memoization key for one workload of a scenario: everything
+    /// [`Coordinator::prepare_mapped`] actually reads from the
+    /// wired-objective search, and nothing it ignores. The backend is
+    /// keyed by its exact value (`Debug` covers draws and the derived
+    /// per-workload seed), so an analytical and a stochastic
+    /// preparation of the same workload never alias.
+    pub fn key(workload: &str, search: &MapSearch) -> String {
+        format!(
+            "{workload}|optimize={}|iters={}|temp={:016x}|seed={}|backend={:?}",
+            search.optimize,
+            search.sa.iters,
+            search.sa.temp_frac.to_bits(),
+            search.sa.seed,
+            search.backend,
+        )
+    }
+
+    /// Look an entry up, refreshing its recency and counting the
+    /// hit/miss either way.
+    pub fn get(&self, key: &str) -> Option<Prepared> {
+        let inner = &mut *self.inner.lock().expect("cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(entry) => {
+                entry.last_used = tick;
+                inner.hits += 1;
+                Some(entry.prepared.clone())
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store an entry, evicting the least-recently-used one when the
+    /// cap is reached. A no-op when the cache is disabled.
+    pub fn put(&self, key: String, prepared: Prepared) {
+        if self.capacity == 0 {
+            return;
+        }
+        let inner = &mut *self.inner.lock().expect("cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if !inner.map.contains_key(&key) && inner.map.len() >= self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(oldest) = oldest {
+                inner.map.remove(&oldest);
+                inner.evictions += 1;
+            }
+        }
+        inner.map.insert(
+            key,
+            Entry {
+                last_used: tick,
+                prepared,
+            },
+        );
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().expect("cache lock");
+        CacheStats {
+            entries: inner.map.len(),
+            capacity: self.capacity,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+        }
+    }
+}
+
+/// [`crate::experiment::prepare_scenario`] with the cache in front:
+/// cached workloads are returned immediately, the misses are prepared
+/// in parallel (the scenario's worker resolution) and inserted.
+/// Returns the prepared workloads in scenario order plus how many came
+/// from the cache.
+pub fn prepare_cached(
+    coord: &Coordinator,
+    scenario: &Scenario,
+    cache: &PreparedCache,
+) -> Result<(Vec<Prepared>, usize)> {
+    let n = scenario.workloads.len();
+    let mut slots: Vec<Option<Prepared>> = vec![None; n];
+    let mut hits = 0usize;
+    let mut missing: Vec<(usize, String, MapSearch)> = Vec::new();
+    for (i, name) in scenario.workloads.iter().enumerate() {
+        let search = prepare_search(coord, scenario, name)?;
+        let key = PreparedCache::key(name, &search);
+        match cache.get(&key) {
+            Some(p) => {
+                slots[i] = Some(p);
+                hits += 1;
+            }
+            None => missing.push((i, key, search)),
+        }
+    }
+    let workers = scenario.resolved_workers(coord);
+    let prepared = parallel_map(missing.len(), workers, |j| {
+        let (i, _, search) = &missing[j];
+        coord.prepare_mapped(&scenario.workloads[*i], search)
+    });
+    for ((i, key, _), result) in missing.into_iter().zip(prepared) {
+        let p = result?;
+        cache.put(key, p.clone());
+        slots[i] = Some(p);
+    }
+    let out = slots
+        .into_iter()
+        .map(|s| s.expect("every slot hit or prepared"))
+        .collect();
+    Ok((out, hits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn coordinator() -> Coordinator {
+        let mut cfg = Config::default();
+        cfg.mapper.sa_iters = 0;
+        Coordinator::new(cfg).unwrap()
+    }
+
+    fn scenario(workloads: &[&str]) -> Scenario {
+        Scenario::builder(&Config::default())
+            .workloads(workloads.iter().copied())
+            .experiments(["fig2"])
+            .bandwidths(&[64e9])
+            .thresholds(&[1, 2])
+            .injection_probs(&[0.2])
+            .optimize(false)
+            .workers(2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn repeat_preparation_hits() {
+        let coord = coordinator();
+        let cache = PreparedCache::new(8);
+        let s = scenario(&["zfnet"]);
+        let (first, hits) = prepare_cached(&coord, &s, &cache).unwrap();
+        assert_eq!((first.len(), hits), (1, 0));
+        let (second, hits) = prepare_cached(&coord, &s, &cache).unwrap();
+        assert_eq!((second.len(), hits), (1, 1));
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        // The cached artifact is the same preparation.
+        assert_eq!(first[0].wired.total_s, second[0].wired.total_s);
+
+        // A different backend must not alias the entry.
+        let mut stoch = s.clone();
+        stoch.backend = "stochastic:4:7".to_string();
+        stoch.normalize_and_validate().unwrap();
+        let (_, hits) = prepare_cached(&coord, &stoch, &cache).unwrap();
+        assert_eq!(hits, 0);
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn grid_axes_do_not_split_entries() {
+        // Preparation always runs the wired objective, so bandwidth /
+        // grid changes reuse the same entry.
+        let coord = coordinator();
+        let cache = PreparedCache::new(8);
+        let s = scenario(&["zfnet"]);
+        prepare_cached(&coord, &s, &cache).unwrap();
+        let mut wider = s.clone();
+        wider.bandwidths = vec![96e9, 128e9];
+        wider.thresholds = vec![1, 2, 3];
+        wider.normalize_and_validate().unwrap();
+        let (_, hits) = prepare_cached(&coord, &wider, &cache).unwrap();
+        assert_eq!(hits, 1);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_cap_zero_disables() {
+        let coord = coordinator();
+        let cache = PreparedCache::new(1);
+        prepare_cached(&coord, &scenario(&["zfnet"]), &cache).unwrap();
+        prepare_cached(&coord, &scenario(&["googlenet"]), &cache).unwrap();
+        let stats = cache.stats();
+        assert_eq!((stats.entries, stats.evictions), (1, 1));
+        // zfnet was evicted: preparing it again misses.
+        let (_, hits) = prepare_cached(&coord, &scenario(&["zfnet"]), &cache).unwrap();
+        assert_eq!(hits, 0);
+
+        let off = PreparedCache::new(0);
+        prepare_cached(&coord, &scenario(&["zfnet"]), &off).unwrap();
+        let (_, hits) = prepare_cached(&coord, &scenario(&["zfnet"]), &off).unwrap();
+        assert_eq!(hits, 0);
+        assert_eq!(off.stats().entries, 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal HTTP/1.1 framing over `std::net` — request parsing,
+//! response writing, and a one-shot client.
+//!
+//! No HTTP crate exists in the offline vendor tree, and the daemon's
+//! needs are narrow: JSON bodies, `Content-Length` framing, one
+//! request per connection (`Connection: close` on every response).
+//! [`crate::report::Json`] is the only parser/emitter involved. The
+//! [`client_request`] helper is the same std-only surface the
+//! integration tests, the `serve_client` example and the CI smoke job
+//! drive the daemon through.
+
+use crate::report::Json;
+use anyhow::{bail, Context as _, Result};
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Largest accepted request body (a scenario spec): 4 MiB.
+pub const MAX_BODY_BYTES: usize = 4 << 20;
+
+/// One parsed request: method, path, raw body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// One response: status code plus a JSON body (every endpoint speaks
+/// `application/json`).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, doc: &Json) -> Self {
+        Self {
+            status,
+            body: doc.render(),
+        }
+    }
+
+    /// A `{"error": message}` body under the given status.
+    pub fn error(status: u16, message: &str) -> Self {
+        Self::json(
+            status,
+            &Json::Obj(vec![("error".into(), Json::Str(message.to_string()))]),
+        )
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Read one request: request line, headers (only `Content-Length` is
+/// interpreted), then exactly the declared body.
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header).context("reading header")?;
+        let header = header.trim_end();
+        if n == 0 || header.is_empty() {
+            break;
+        }
+        let lower = header.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v
+                .trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad Content-Length {:?}", v.trim()))?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!(
+            "request body of {content_length} bytes exceeds the \
+             {MAX_BODY_BYTES}-byte cap"
+        );
+    }
+    let mut body = vec![0u8; content_length];
+    reader
+        .read_exact(&mut body)
+        .context("reading request body")?;
+    Ok(Request { method, path, body })
+}
+
+/// Write `resp` with `Connection: close` framing.
+pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(resp.body.as_bytes())?;
+    stream.flush()
+}
+
+/// Handle one accepted connection: one request in, one response out.
+/// Parse failures become a 400; I/O failures on the way out are
+/// dropped (the peer is gone).
+pub fn serve_connection<F: Fn(&Request) -> Response>(mut stream: TcpStream, handle: F) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let resp = match read_request(&mut stream) {
+        Ok(req) => handle(&req),
+        Err(e) => Response::error(400, &e.to_string()),
+    };
+    let _ = write_response(&mut stream, &resp);
+}
+
+/// One-shot std-only client: send `method path` with an optional body,
+/// return `(status, parsed JSON body)`. The server closes the
+/// connection after one exchange, so the whole response is read to
+/// EOF.
+pub fn client_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, Json)> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .context("reading response")?;
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed response status line in {raw:?}"))?;
+    let payload = raw.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let doc = if payload.trim().is_empty() {
+        Json::Null
+    } else {
+        Json::parse(payload)
+            .with_context(|| format!("parsing response body {payload:?}"))?
+    };
+    Ok((status, doc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+
+    /// Round-trip one request/response pair over a real loopback
+    /// socket: framing, body, status text and the client parser.
+    #[test]
+    fn loopback_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_connection(stream, |req| {
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/echo");
+                let text = req.body_str().unwrap().to_string();
+                Response::json(202, &Json::Obj(vec![("got".into(), Json::Str(text))]))
+            });
+        });
+        let (status, doc) = client_request(
+            &addr.to_string(),
+            "POST",
+            "/echo",
+            Some("hello body"),
+        )
+        .unwrap();
+        assert_eq!(status, 202);
+        assert_eq!(doc.get("got").and_then(Json::as_str), Some("hello body"));
+        server.join().unwrap();
+    }
+
+    /// A garbage request line is answered with a 400 JSON error, not a
+    /// dropped connection.
+    #[test]
+    fn malformed_request_is_400() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_connection(stream, |_| Response::json(200, &Json::Null));
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+        assert!(raw.contains("error"), "{raw}");
+        server.join().unwrap();
+    }
+}

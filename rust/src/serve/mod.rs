@@ -1,0 +1,203 @@
+//! `wisper serve` — the evaluator as a long-running HTTP/JSON daemon.
+//!
+//! The repo's evaluation stack was built batch-first: a declarative
+//! [`crate::experiment::Scenario`], the experiment registry, a
+//! [`crate::experiment::RunStore`] persisting manifests, and
+//! `wisper compare` reading them back. This module promotes that stack
+//! into a resident service, the ROADMAP's "millions of users"
+//! direction: most requests should be answered from memoized prepared
+//! state or the persisted store, not recomputed.
+//!
+//! Architecture (one [`state::ServerState`] shared by all threads):
+//!
+//! * **Accept loop** — a non-blocking `TcpListener` feeding accepted
+//!   connections to a resident [`crate::util::threadpool::Pool`] of
+//!   HTTP handlers ([`http`] frames requests, [`api`] routes them).
+//!   No HTTP crate exists in the offline vendor tree; the framing is
+//!   ~150 lines of std and [`crate::report::Json`] does all parsing.
+//! * **Executor** — one thread running submissions FIFO through
+//!   [`cache::prepare_cached`] (a keyed LRU of
+//!   [`crate::coordinator::Prepared`] workloads, so repeated identical
+//!   queries skip preparation entirely) and
+//!   [`crate::experiment::run_prepared`], persisting every run under
+//!   its pre-allocated id via `RunStore::save_as`.
+//! * **Watcher** (optional, `--watch-dir`) — [`reload::watch_loop`]
+//!   polls a directory of scenario TOMLs and re-enqueues changed files.
+//!
+//! Shutdown is graceful by construction: SIGINT/SIGTERM (or
+//! `POST /shutdown`) flips one flag; submissions start failing with
+//! 503, the accept loop stops and drains its connection pool, and the
+//! executor finishes every queued and in-flight run before the process
+//! exits — an accepted run is never abandoned.
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod reload;
+pub mod state;
+
+use crate::coordinator::Coordinator;
+use crate::experiment::RunStore;
+use crate::util::threadpool::Pool;
+use anyhow::{Context as _, Result};
+use state::ServerState;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Daemon configuration (`wisper serve --addr --threads
+/// --cache-entries --watch-dir`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// HTTP handler threads (0 = a small fixed pool).
+    pub threads: usize,
+    /// Prepared-cache entry cap (0 disables the cache).
+    pub cache_entries: usize,
+    /// Directory whose `*.toml` scenarios are hot-reloaded.
+    pub watch_dir: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8080".to_string(),
+            threads: 0,
+            cache_entries: 32,
+            watch_dir: None,
+        }
+    }
+}
+
+/// A running daemon: accept loop + executor + optional watcher, all
+/// joined by [`Server::shutdown`].
+pub struct Server {
+    state: Arc<ServerState>,
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<()>>,
+    executor: Option<thread::JoinHandle<()>>,
+    watcher: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the daemon threads, return immediately. The caller
+    /// owns the lifecycle: park until a shutdown signal, then call
+    /// [`Server::shutdown`].
+    pub fn start(coord: Coordinator, store: RunStore, opts: ServeOptions) -> Result<Self> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {:?}", opts.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let state = Arc::new(ServerState::new(coord, store, opts.cache_entries));
+
+        let executor = {
+            let st = Arc::clone(&state);
+            thread::spawn(move || st.executor_loop())
+        };
+        let threads = if opts.threads > 0 { opts.threads } else { 4 };
+        let accept = {
+            let st = Arc::clone(&state);
+            thread::spawn(move || accept_loop(listener, st, threads))
+        };
+        let watcher = opts.watch_dir.map(|dir| {
+            let st = Arc::clone(&state);
+            thread::spawn(move || {
+                reload::watch_loop(&st, &dir, Duration::from_millis(500))
+            })
+        });
+        Ok(Self {
+            state,
+            addr,
+            accept: Some(accept),
+            executor: Some(executor),
+            watcher,
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<ServerState> {
+        &self.state
+    }
+
+    /// Graceful shutdown: refuse new work, drain every queued and
+    /// in-flight run, join all daemon threads.
+    pub fn shutdown(mut self) {
+        self.state.begin_shutdown();
+        for handle in [
+            self.accept.take(),
+            self.watcher.take(),
+            self.executor.take(),
+        ]
+        .into_iter()
+        .flatten()
+        {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServerState>, threads: usize) {
+    let mut pool = Pool::new(threads);
+    while !state.shutting_down() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // The listener is non-blocking so this loop can see the
+                // shutdown flag; the accepted stream must block again.
+                let _ = stream.set_nonblocking(false);
+                let st = Arc::clone(&state);
+                pool.execute(move || {
+                    http::serve_connection(stream, |req| api::handle(&st, req));
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(20)),
+        }
+    }
+    // Connections already accepted still get their response.
+    pool.shutdown();
+}
+
+/// Set by the SIGINT/SIGTERM handler; polled by the `serve` command's
+/// main thread.
+static SIGNAL_FLAG: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    // A single atomic store: async-signal-safe.
+    SIGNAL_FLAG.store(true, Ordering::SeqCst);
+}
+
+/// Route SIGINT/SIGTERM into [`shutdown_requested`]. There is no libc
+/// crate in the offline tree, so `signal(2)` is declared directly; on
+/// non-unix targets this is a no-op and Ctrl-C terminates the process.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        let handler = on_signal as extern "C" fn(i32) as usize;
+        unsafe {
+            signal(SIGINT, handler);
+            signal(SIGTERM, handler);
+        }
+    }
+}
+
+/// Has SIGINT/SIGTERM asked the daemon to exit?
+pub fn shutdown_requested() -> bool {
+    SIGNAL_FLAG.load(Ordering::SeqCst)
+}

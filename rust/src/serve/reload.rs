@@ -1,0 +1,122 @@
+//! Scenario hot-reload: poll a watched directory and re-enqueue
+//! changed scenario files.
+//!
+//! No inotify binding exists in the offline tree, so the watcher is an
+//! mtime+size poller — cheap at serving timescales (one `read_dir`
+//! every poll interval). The first scan primes the baseline *without*
+//! submitting: a daemon restart must not re-run every scenario already
+//! sitting in the directory. After that, any `*.toml` file whose
+//! (mtime, size) stamp changes — or that newly appears — is re-read,
+//! re-validated against the daemon's config, and submitted like an
+//! HTTP client would (`source = "watch:<path>"`). Files that fail
+//! validation are reported to stderr and retried on their next change,
+//! never crashing the daemon.
+
+use super::state::ServerState;
+use crate::experiment::Scenario;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+/// Change stamp of a watched file: (mtime, size). Size is included so
+/// an edit within the mtime granularity still registers.
+pub type FileStamp = (SystemTime, u64);
+
+/// Scan `dir` for scenario files: every regular `*.toml`, sorted by
+/// path, with its current stamp. A missing or unreadable directory
+/// scans as empty (the daemon keeps serving).
+pub fn scan(dir: &Path) -> Vec<(PathBuf, FileStamp)> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return out,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        if let Ok(meta) = entry.metadata() {
+            if !meta.is_file() {
+                continue;
+            }
+            let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            out.push((path, (mtime, meta.len())));
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Poll `dir` every `poll` until the server shuts down, submitting
+/// changed scenarios. Runs on its own thread (`wisper serve
+/// --watch-dir`).
+pub fn watch_loop(state: &ServerState, dir: &Path, poll: Duration) {
+    let mut seen: HashMap<PathBuf, FileStamp> = scan(dir).into_iter().collect();
+    loop {
+        // Sleep in short slices so shutdown is honored promptly.
+        let mut slept = Duration::ZERO;
+        while slept < poll && !state.shutting_down() {
+            let slice = Duration::from_millis(50).min(poll - slept);
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+        if state.shutting_down() {
+            return;
+        }
+        for (path, stamp) in scan(dir) {
+            if seen.get(&path) == Some(&stamp) {
+                continue;
+            }
+            seen.insert(path.clone(), stamp);
+            let name = path.display().to_string();
+            match Scenario::from_file(&name, &state.coord.cfg) {
+                Ok(scenario) => match state.submit(scenario, &format!("watch:{name}")) {
+                    Ok(run_id) => eprintln!("serve: watched {name} -> run {run_id}"),
+                    Err(e) => eprintln!("serve: watched {name} rejected: {e}"),
+                },
+                Err(e) => eprintln!("serve: watched {name} failed to validate: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("wisper_reload_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn scan_sees_only_toml_files_and_tracks_changes() {
+        let dir = tmpdir("scan");
+        std::fs::write(dir.join("a.toml"), "[scenario]\n").unwrap();
+        std::fs::write(dir.join("b.json"), "{}").unwrap();
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        let first = scan(&dir);
+        assert_eq!(first.len(), 1);
+        assert!(first[0].0.ends_with("a.toml"));
+
+        // A content change of a different size changes the stamp.
+        std::fs::write(dir.join("a.toml"), "[scenario]\nworkers = 2\n").unwrap();
+        let second = scan(&dir);
+        assert_eq!(second.len(), 1);
+        assert_ne!(first[0].1 .1, second[0].1 .1, "size must differ");
+
+        // A new file appears in sorted order.
+        std::fs::write(dir.join("0new.toml"), "[scenario]\n").unwrap();
+        let third = scan(&dir);
+        assert_eq!(third.len(), 2);
+        assert!(third[0].0.ends_with("0new.toml"));
+
+        // A vanished directory scans as empty, not an error.
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(scan(&dir).is_empty());
+    }
+}

@@ -1,0 +1,323 @@
+//! Shared daemon state: the run table, the FIFO execution queue, the
+//! prepared-workload cache and the shutdown flag.
+//!
+//! One `Arc<ServerState>` is shared by the accept loop (HTTP handlers
+//! read and submit), the single executor thread (runs execute strictly
+//! in submission order, so identical repeated queries deterministically
+//! hit the cache warmed by their predecessor) and the optional
+//! hot-reload watcher. Graceful shutdown is a drain, not an abort:
+//! [`ServerState::begin_shutdown`] stops *new* submissions (HTTP 503)
+//! while [`ServerState::executor_loop`] keeps popping until the queue
+//! is empty — every accepted run finishes and persists its record.
+
+use super::cache::{self, PreparedCache};
+use crate::coordinator::Coordinator;
+use crate::experiment::{self, RunStore, Scenario};
+use crate::report::Json;
+use anyhow::{bail, Context as _, Result};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Lifecycle of a submitted run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunPhase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl RunPhase {
+    pub fn name(self) -> &'static str {
+        match self {
+            RunPhase::Queued => "queued",
+            RunPhase::Running => "running",
+            RunPhase::Done => "done",
+            RunPhase::Failed => "failed",
+        }
+    }
+}
+
+/// Book-keeping for one submitted run, from submission to completion.
+#[derive(Debug, Clone)]
+pub struct RunState {
+    pub run_id: String,
+    pub scenario: Scenario,
+    pub phase: RunPhase,
+    pub error: Option<String>,
+    /// Where the submission came from (`http` or `watch:<file>`).
+    pub source: String,
+    pub submitted_unix: f64,
+    /// Wall-clock of the preparation stage (cache lookups + misses
+    /// prepared), set when the run completes. A warm cache shows up
+    /// here: hits skip preparation entirely.
+    pub prepare_ms: Option<f64>,
+    pub total_ms: Option<f64>,
+    /// How many of the scenario's workloads came from the prepared
+    /// cache.
+    pub cache_hits: Option<usize>,
+}
+
+impl RunState {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("run_id".into(), Json::Str(self.run_id.clone())),
+            ("phase".into(), Json::Str(self.phase.name().to_string())),
+            ("source".into(), Json::Str(self.source.clone())),
+            ("scenario".into(), Json::Str(self.scenario.name.clone())),
+            (
+                "experiments".into(),
+                Json::Arr(
+                    self.scenario
+                        .experiments
+                        .iter()
+                        .map(|e| Json::Str(e.clone()))
+                        .collect(),
+                ),
+            ),
+            ("submitted_unix".into(), Json::Num(self.submitted_unix)),
+            (
+                "prepare_ms".into(),
+                self.prepare_ms.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "total_ms".into(),
+                self.total_ms.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "cache_hits".into(),
+                self.cache_hits
+                    .map(|h| Json::Num(h as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "error".into(),
+                self.error.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Everything the daemon's threads share.
+pub struct ServerState {
+    pub coord: Coordinator,
+    pub store: RunStore,
+    pub cache: PreparedCache,
+    runs: Mutex<Vec<RunState>>,
+    queue: Mutex<VecDeque<String>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    seq: AtomicU64,
+    started_unix: f64,
+}
+
+fn unix_now() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+impl ServerState {
+    pub fn new(coord: Coordinator, store: RunStore, cache_entries: usize) -> Self {
+        Self {
+            coord,
+            store,
+            cache: PreparedCache::new(cache_entries),
+            runs: Mutex::new(Vec::new()),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            started_unix: unix_now(),
+        }
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Refuse new submissions and wake the executor so it can drain
+    /// what is already queued.
+    pub fn begin_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.queue_cv.notify_all();
+    }
+
+    /// Queue a validated scenario; returns the run id clients poll.
+    /// The id is allocated *now*, before any results exist — the
+    /// store's `save_as` persists under it when the run completes.
+    pub fn submit(&self, scenario: Scenario, source: &str) -> Result<String> {
+        if self.shutting_down() {
+            bail!("server is shutting down and accepts no new runs");
+        }
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        let run_id = format!("serve-{}-{}-{seq}", unix_now() as u64, std::process::id());
+        let state = RunState {
+            run_id: run_id.clone(),
+            scenario,
+            phase: RunPhase::Queued,
+            error: None,
+            source: source.to_string(),
+            submitted_unix: unix_now(),
+            prepare_ms: None,
+            total_ms: None,
+            cache_hits: None,
+        };
+        self.runs.lock().expect("runs lock").push(state);
+        self.queue
+            .lock()
+            .expect("queue lock")
+            .push_back(run_id.clone());
+        self.queue_cv.notify_one();
+        Ok(run_id)
+    }
+
+    /// Status of one run as JSON, `None` for unknown ids.
+    pub fn run_json(&self, run_id: &str) -> Option<Json> {
+        self.runs
+            .lock()
+            .expect("runs lock")
+            .iter()
+            .find(|r| r.run_id == run_id)
+            .map(RunState::to_json)
+    }
+
+    /// All runs this daemon has seen, in submission order.
+    pub fn list_json(&self) -> Json {
+        let runs = self.runs.lock().expect("runs lock");
+        Json::Obj(vec![
+            ("count".into(), Json::Num(runs.len() as f64)),
+            (
+                "runs".into(),
+                Json::Arr(runs.iter().map(RunState::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// `GET /stats`: run counts by phase, cache counters, uptime.
+    pub fn stats_json(&self) -> Json {
+        let (mut queued, mut running, mut done, mut failed) = (0u64, 0u64, 0u64, 0u64);
+        for r in self.runs.lock().expect("runs lock").iter() {
+            match r.phase {
+                RunPhase::Queued => queued += 1,
+                RunPhase::Running => running += 1,
+                RunPhase::Done => done += 1,
+                RunPhase::Failed => failed += 1,
+            }
+        }
+        Json::Obj(vec![
+            ("started_unix".into(), Json::Num(self.started_unix)),
+            ("uptime_s".into(), Json::Num(unix_now() - self.started_unix)),
+            ("shutting_down".into(), Json::Bool(self.shutting_down())),
+            (
+                "runs".into(),
+                Json::Obj(vec![
+                    ("queued".into(), Json::Num(queued as f64)),
+                    ("running".into(), Json::Num(running as f64)),
+                    ("done".into(), Json::Num(done as f64)),
+                    ("failed".into(), Json::Num(failed as f64)),
+                ]),
+            ),
+            ("cache".into(), self.cache.stats().to_json()),
+        ])
+    }
+
+    fn set_phase(&self, run_id: &str, phase: RunPhase, error: Option<String>) {
+        if let Some(r) = self
+            .runs
+            .lock()
+            .expect("runs lock")
+            .iter_mut()
+            .find(|r| r.run_id == run_id)
+        {
+            r.phase = phase;
+            r.error = error;
+        }
+    }
+
+    /// Pop the next queued run id, blocking until one arrives or
+    /// shutdown begins. During shutdown the queue keeps draining —
+    /// `None` only once it is empty.
+    fn next_run(&self) -> Option<String> {
+        let mut queue = self.queue.lock().expect("queue lock");
+        loop {
+            if let Some(id) = queue.pop_front() {
+                return Some(id);
+            }
+            if self.shutting_down() {
+                return None;
+            }
+            queue = self.queue_cv.wait(queue).expect("queue lock");
+        }
+    }
+
+    /// The single executor thread: FIFO over submissions. One run at a
+    /// time keeps results deterministic (a repeated identical query is
+    /// guaranteed to see the cache its predecessor warmed) and bounds
+    /// memory; parallelism lives *inside* a run (worker threads per
+    /// scenario).
+    pub fn executor_loop(&self) {
+        while let Some(run_id) = self.next_run() {
+            self.execute(&run_id);
+        }
+    }
+
+    fn execute(&self, run_id: &str) {
+        let scenario = match self
+            .runs
+            .lock()
+            .expect("runs lock")
+            .iter()
+            .find(|r| r.run_id == run_id)
+            .map(|r| r.scenario.clone())
+        {
+            Some(s) => s,
+            None => return,
+        };
+        self.set_phase(run_id, RunPhase::Running, None);
+        let t0 = Instant::now();
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.run_one(run_id, &scenario)));
+        let total_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        match outcome {
+            Ok(Ok((prepare_ms, hits))) => {
+                if let Some(r) = self
+                    .runs
+                    .lock()
+                    .expect("runs lock")
+                    .iter_mut()
+                    .find(|r| r.run_id == run_id)
+                {
+                    r.phase = RunPhase::Done;
+                    r.error = None;
+                    r.prepare_ms = Some(prepare_ms);
+                    r.total_ms = Some(total_ms);
+                    r.cache_hits = Some(hits);
+                }
+            }
+            Ok(Err(e)) => self.set_phase(run_id, RunPhase::Failed, Some(e.to_string())),
+            Err(_) => self.set_phase(
+                run_id,
+                RunPhase::Failed,
+                Some("panic while executing the run".to_string()),
+            ),
+        }
+    }
+
+    /// Prepare (through the cache), run the experiment list, persist
+    /// under the pre-allocated id. Returns (preparation wall-clock ms,
+    /// cache hits).
+    fn run_one(&self, run_id: &str, scenario: &Scenario) -> Result<(f64, usize)> {
+        let t0 = Instant::now();
+        let (prepared, hits) = cache::prepare_cached(&self.coord, scenario, &self.cache)?;
+        let prepare_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let run = experiment::run_prepared(&self.coord, scenario, &prepared)?;
+        self.store
+            .save_as(run_id, scenario, run.backend, &run.outputs)
+            .context("persisting the run record")?;
+        Ok((prepare_ms, hits))
+    }
+}

@@ -1,10 +1,16 @@
-//! In-house scoped thread pool for the DSE sweep engine.
+//! In-house scoped thread pool for the DSE sweep engine, plus a
+//! resident [`Pool`] for long-lived services.
 //!
 //! tokio is not in the offline registry; the sweep workload is pure CPU
 //! fan-out anyway, so a work-queue + std::thread pool is the right tool.
+//! The batch primitives ([`parallel_map`], [`parallel_map_with`],
+//! [`WorkQueue`]) fan a finite job list out and join; [`Pool`] is the
+//! serve daemon's variant — threads stay resident, jobs arrive over a
+//! channel, and shutdown drains what was already queued.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
 /// Run `f(i)` for every `i in 0..n` across `workers` threads, collecting
@@ -139,6 +145,76 @@ impl WorkQueue {
             }
         });
         n
+    }
+}
+
+type PoolJob = Box<dyn FnOnce() + Send>;
+
+/// A resident thread pool: `workers` threads stay alive consuming jobs
+/// from an mpsc channel (the HTTP connection handlers of
+/// [`crate::serve`]). Unlike [`parallel_map`], which fans out a finite
+/// list and joins, a `Pool` outlives any one batch. Dropping the pool
+/// (or calling [`Pool::shutdown`]) closes the queue; workers finish the
+/// job they are on, drain anything already queued, then exit — so a
+/// graceful daemon shutdown never abandons an accepted request.
+///
+/// A panicking job is caught and reported to stderr; the worker
+/// survives (one poisoned request must not take the daemon's handler
+/// capacity down with it).
+pub struct Pool {
+    tx: Option<mpsc::Sender<PoolJob>>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::channel::<PoolJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            handles.push(thread::spawn(move || loop {
+                // Holding the receiver lock only for the recv() keeps
+                // dispatch fair; Err means the sender side hung up and
+                // the queue is fully drained.
+                let job = rx.lock().expect("pool receiver poisoned").recv();
+                match job {
+                    Ok(job) => {
+                        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                            eprintln!("threadpool: a pool job panicked (worker kept)");
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        Self {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Queue one job. Jobs submitted after [`Self::shutdown`] are
+    /// silently dropped (the daemon is already draining).
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(job));
+        }
+    }
+
+    /// Close the queue and join every worker; queued jobs still run.
+    pub fn shutdown(&mut self) {
+        self.tx = None; // drop the sender: workers drain then exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 

@@ -576,6 +576,34 @@ fn hybrid_objective_through_registry() {
     assert!(ablation_out.text.contains("comap-SA"), "{}", ablation_out.text);
 }
 
+/// An unwritable results root is a clear, actionable error — the
+/// resolved path plus the WISPER_RESULTS_DIR escape hatch — not a
+/// panic deep inside the store.
+#[test]
+fn store_unwritable_root_errors_with_path_and_redirect_hint() {
+    let dir = tmpdir("unwritable");
+    std::fs::create_dir_all(&dir).unwrap();
+    // A regular file squats where the store wants its directory, so
+    // create_dir_all must fail on every platform, root or not.
+    let squatter = dir.join("squatter");
+    std::fs::write(&squatter, "not a directory").unwrap();
+    let store = RunStore::at(squatter.join("results"));
+
+    let scenario = small_scenario(&["fig4"]);
+    let err = store
+        .save(&scenario, "native", &[])
+        .expect_err("saving under a file must fail")
+        .to_string();
+    assert!(err.contains("results directory"), "{err}");
+    assert!(err.contains("WISPER_RESULTS_DIR"), "{err}");
+    assert!(
+        err.contains(&squatter.join("results").display().to_string()),
+        "{err}"
+    );
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
 /// The scenario builder and the TOML path produce identical specs.
 #[test]
 fn builder_matches_toml() {
