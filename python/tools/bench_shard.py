@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Shard-scaling trajectory, mirror spelling: measure real per-unit
+campaign costs with the cost mirror, drive them through the same
+pull-based dispatch schedule serve::dispatch implements, and persist
+BENCH_shard_scaling.json at the repo root (schema: bench name ->
+{workers, units_per_sec, speedup_vs_one, efficiency}), the same
+document rust/benches/shard_scaling.rs writes via util::benchkit.
+
+A work unit is one (workload, bandwidth) pair evaluating the whole
+(threshold x pinj) grid — exactly the unit the shard wire ships. Unit
+costs are real measured wall-clock (median-of-N, like benchkit); the
+fleet is then modeled as independent hosts pulling units off the shared
+queue, which is the deployment the shard path targets (`wisper campaign
+--workers hostA:port,hostB:port`) — N daemons on N machines, not N
+processes fighting over this container's single core. The dispatch
+schedule (initial window, pull-on-idle) is the coordinator's own
+algorithm, so balancing losses from coarse windows are captured.
+
+Determinism gate: every unit is evaluated twice in different partition
+orders and asserted bit-equal before any timing — the schedule's
+speedup claim is only meaningful because any worker computes any unit
+identically.
+
+Run:  python3 bench_shard.py
+Env:  WISPER_BENCH_QUICK=1  shrinks workloads/grid (the CI mode);
+      WISPER_BENCH_OUT=path overrides the output path.
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cost_mirror import (  # noqa: E402
+    Package, checked_speedup, evaluate_expected, prepare,
+)
+
+BANDWIDTHS = [64e9, 96e9]
+FLEETS = [1, 2, 4]
+
+
+def eval_unit(prep, thresholds, pinjs, bw):
+    """One shard work unit: the full grid for one (workload, bw),
+    returning the best (speedup, threshold, pinj) triple."""
+    t_wired = prep['wired']['total_s']
+    best = None
+    for d in thresholds:
+        for p in pinjs:
+            r = evaluate_expected(prep['tensors'], d, p, bw)
+            s = checked_speedup(t_wired, r['total_s'])
+            if best is None or s > best[0]:
+                best = (s, d, p)
+    return best
+
+
+def bench_median(warmup, reps, f):
+    """Median-of-reps wall time in seconds (util::benchkit::bench)."""
+    for _ in range(warmup):
+        f()
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        f()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def pull_schedule(costs, workers, window):
+    """Makespan of serve::dispatch's pull loop over `workers` hosts:
+    each worker claims up to `window` units when idle, fresh queue
+    entries first, and comes back for more when its batch drains. With
+    a homogeneous healthy fleet no claim ever goes stale, so the steal
+    branch never fires — this is the schedule the coordinator produces
+    when nothing fails."""
+    queue = list(range(len(costs)))
+    clock = [0.0] * workers
+    while queue:
+        w = min(range(workers), key=lambda i: clock[i])
+        batch, queue = queue[:window], queue[window:]
+        clock[w] += sum(costs[u] for u in batch)
+    return max(clock)
+
+
+def main():
+    quick = bool(os.environ.get('WISPER_BENCH_QUICK'))
+    pkg = Package()
+    names = (['zfnet', 'alexnet'] if quick else
+             ['zfnet', 'alexnet', 'googlenet', 'mobilenet', 'resnet50',
+              'vgg', 'densenet', 'resnext50'])
+    thresholds = [1, 2] if quick else [1, 2, 3, 4]
+    pinjs = ([0.2, 0.4, 0.6] if quick else
+             [0.10 + 0.05 * i for i in range(15)])
+    reps = 2 if quick else 5
+
+    preps = {n: prepare(n, optimize=False, pkg=pkg) for n in names}
+    units = [(n, bw) for n in names for bw in BANDWIDTHS]
+
+    # Determinism gate: forward and reverse evaluation orders must
+    # produce bit-identical unit results (they do — each unit is a pure
+    # function of its prepared tensors).
+    forward = [eval_unit(preps[n], thresholds, pinjs, bw)
+               for n, bw in units]
+    backward = [eval_unit(preps[n], thresholds, pinjs, bw)
+                for n, bw in reversed(units)]
+    assert forward == list(reversed(backward)), \
+        'unit results depend on evaluation order'
+
+    costs = [bench_median(1, reps,
+                          lambda n=n, bw=bw: eval_unit(preps[n], thresholds,
+                                                       pinjs, bw))
+             for n, bw in units]
+
+    records = {}
+    baseline = None
+    for n_workers in FLEETS:
+        makespan = pull_schedule(costs, n_workers, window=1)
+        ups = len(units) / makespan
+        if baseline is None:
+            baseline = ups
+        speedup = ups / baseline
+        records[f'shard_scaling/{n_workers}'] = {
+            'workers': n_workers,
+            'units_per_sec': ups,
+            'speedup_vs_one': speedup,
+            'efficiency': speedup / n_workers,
+        }
+
+    out = os.environ.get('WISPER_BENCH_OUT') or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), '..', '..',
+        'BENCH_shard_scaling.json')
+    with open(out, 'w') as fh:
+        json.dump(records, fh, indent=2)
+        fh.write('\n')
+    print(f'wrote {len(records)} scaling entries to {out} '
+          f'({len(units)} units, {len(thresholds) * len(pinjs)} '
+          f'grid points each)')
+    for k, v in records.items():
+        print(f"  {k:<18} {v['units_per_sec']:>10.2f} units/s  "
+              f"{v['speedup_vs_one']:>5.2f}x vs 1 worker  "
+              f"({v['efficiency'] * 100:.0f}% efficient)")
+    return records
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,172 @@
+//! Strong-scaling bench for the sharded campaign path: boot fleets of
+//! 1/2/4 in-process `--worker` daemons (one unit-executor thread each,
+//! so a daemon approximates one host core), stream the same campaign
+//! through [`run_campaign_sharded`] at each fleet size, and persist the
+//! units/sec curve as `BENCH_shard_scaling.json` (bench name ->
+//! `{workers, units_per_sec, speedup_vs_one, efficiency}`), so the
+//! scaling claim rides with the tree. The sharded fold is asserted
+//! byte-identical to the local pool's result before anything is timed —
+//! a scaling number for a diverging pipeline would be meaningless.
+//!
+//! Run: `cargo bench --bench shard_scaling`
+//! Env: `WISPER_BENCH_QUICK=1` shrinks workloads/grid (the CI mode);
+//!      `WISPER_BENCH_OUT=path` overrides the output path (default
+//!      `../BENCH_shard_scaling.json`, the repo root when run via
+//!      cargo).
+
+use std::path::PathBuf;
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::dse::shard::run_campaign_local;
+use wisper::dse::{run_campaign_sharded, CampaignSpec, ShardPrep};
+use wisper::experiment::RunStore;
+use wisper::serve::dispatch::DispatchOptions;
+use wisper::serve::{ServeOptions, Server};
+use wisper::util::benchkit::{
+    bench, report as breport, write_scaling, ScalingRecord,
+};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wisper_bench_shard_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One worker daemon on an ephemeral port with a single executor
+/// thread: fleet size, not intra-daemon parallelism, is the axis under
+/// measurement.
+fn start_worker(cfg: &Config, dir: &std::path::Path) -> Server {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        cache_entries: 64,
+        watch_dir: None,
+        worker: true,
+        exec_threads: 1,
+    };
+    Server::start(Coordinator::new(cfg.clone()).unwrap(), RunStore::at(dir), opts)
+        .unwrap()
+}
+
+fn main() {
+    let quick = std::env::var("WISPER_BENCH_QUICK").is_ok();
+    let mut cfg = Config::default();
+    // Preparation is cached per daemon after the first pass; keep it
+    // cheap so steady-state unit throughput dominates the timing.
+    cfg.mapper.sa_iters = if quick { 0 } else { 60 };
+    let coord = Coordinator::new(cfg.clone()).unwrap();
+
+    let names: Vec<String> = if quick {
+        vec!["zfnet".into(), "alexnet".into()]
+    } else {
+        vec![
+            "zfnet".into(),
+            "alexnet".into(),
+            "googlenet".into(),
+            "mobilenet".into(),
+            "resnet50".into(),
+            "vgg".into(),
+            "densenet".into(),
+            "resnext50".into(),
+        ]
+    };
+    let pinjs: Vec<f64> = if quick {
+        vec![0.2, 0.4, 0.6]
+    } else {
+        (0..15).map(|i| 0.10 + 0.05 * i as f64).collect()
+    };
+    let spec = CampaignSpec {
+        thresholds: if quick { vec![1, 2] } else { vec![1, 2, 3, 4] },
+        pinjs,
+        bandwidths: vec![64e9, 96e9],
+        workers: 1,
+        map_iters: cfg.mapper.sa_iters,
+        map_temp_frac: cfg.mapper.sa_temp,
+        map_seed: cfg.mapper.seed,
+        ..CampaignSpec::default()
+    };
+    let prep = ShardPrep::from_coordinator(&coord);
+    let units = (names.len() * spec.bandwidths.len()) as f64;
+    // Units complete in milliseconds here; a 25ms idle poll would
+    // dominate the measurement, and batch=1 gives the balancer the
+    // finest grain to spread.
+    let opts = DispatchOptions {
+        batch: 1,
+        poll: std::time::Duration::from_millis(2),
+        ..DispatchOptions::default()
+    };
+    let reps = if quick { 2 } else { 3 };
+    let base = tmpdir("fleet");
+
+    // Determinism gate: the 2-worker shard fold must reproduce the
+    // local pool byte-for-byte before its throughput means anything.
+    let local = run_campaign_local(&coord, &names, &spec, &prep).unwrap();
+    {
+        let fleet: Vec<Server> = (0..2)
+            .map(|i| start_worker(&cfg, &base.join(format!("parity{i}"))))
+            .collect();
+        let addrs: Vec<String> =
+            fleet.iter().map(|s| s.addr().to_string()).collect();
+        let (sharded, _) =
+            run_campaign_sharded(&coord, &names, &spec, &prep, &addrs, &opts)
+                .unwrap();
+        assert_eq!(
+            local.to_json().render(),
+            sharded.to_json().render(),
+            "sharded campaign diverged from the local pool"
+        );
+        for s in fleet {
+            s.shutdown();
+        }
+    }
+
+    let mut ms = Vec::new();
+    let mut records = Vec::new();
+    let mut baseline = 0.0_f64;
+    for &n in &[1usize, 2, 4] {
+        let fleet: Vec<Server> = (0..n)
+            .map(|i| start_worker(&cfg, &base.join(format!("w{n}_{i}"))))
+            .collect();
+        let addrs: Vec<String> =
+            fleet.iter().map(|s| s.addr().to_string()).collect();
+        let name = format!("shard_scaling/{n}");
+        let m = bench(&name, 1, reps, || {
+            run_campaign_sharded(&coord, &names, &spec, &prep, &addrs, &opts)
+                .unwrap()
+                .0
+                .units
+        });
+        let ups = m.throughput(units);
+        if n == 1 {
+            baseline = ups;
+        }
+        records.push(ScalingRecord::from_throughput(&name, n, ups, baseline));
+        ms.push(m);
+        for s in fleet {
+            s.shutdown();
+        }
+    }
+
+    breport(&ms);
+    let out = std::env::var("WISPER_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("../BENCH_shard_scaling.json"));
+    write_scaling(&out, &records).unwrap();
+    println!(
+        "\nwrote {} scaling entries to {}",
+        records.len(),
+        out.display()
+    );
+    for r in &records {
+        println!(
+            "  {:<18} {:>10.2} units/s  {:>5.2}x vs 1 worker  ({:.0}% efficient)",
+            r.name,
+            r.units_per_sec,
+            r.speedup_vs_one,
+            r.efficiency * 100.0
+        );
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}

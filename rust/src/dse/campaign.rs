@@ -721,6 +721,129 @@ pub fn engine_sweep(
     })
 }
 
+/// Everything one (workload, bandwidth) work unit produces: the grid
+/// sweep, the optional refinement, the policy outcomes, the optional
+/// comap outcome and the resolved backend label. This is the value
+/// both execution paths — the local `parallel_map_with` pool and the
+/// remote shard workers (`dse::shard`) — return per unit, so the two
+/// paths are structurally incapable of diverging.
+#[derive(Debug, Clone)]
+pub struct UnitEval {
+    pub sweep: SweepResult,
+    pub refined: Option<AdaptiveResult>,
+    pub policies: Vec<PolicyOutcome>,
+    pub comap: Option<ComapOutcome>,
+    pub backend: String,
+}
+
+/// Evaluate one (workload, bandwidth) work unit end to end: grid sweep
+/// (batched-artifact or engine-native by backend), optional adaptive
+/// refinement, the policy axis, and the optional comap stage. The one
+/// per-unit evaluator both the local pool and remote shard workers
+/// call — all sources of unit-level randomness derive from the
+/// workload name, never from which host or thread runs the unit.
+pub fn evaluate_campaign_unit(
+    rt: &Runtime,
+    w: &CampaignWorkload,
+    spec: &CampaignSpec,
+    bw: f64,
+) -> Result<UnitEval> {
+    // The per-unit backend: stochastic seeds specialize to the
+    // workload, so units reproduce regardless of which worker claims
+    // them.
+    let unit_backend = spec.backend.for_workload(&w.name);
+    let sweep = match &unit_backend {
+        EvalBackend::Analytical => {
+            eval_unit(rt, w.tensors, &spec.thresholds, &spec.pinjs, bw)?
+        }
+        stochastic => engine_sweep(
+            w.tensors,
+            &spec.thresholds,
+            &spec.pinjs,
+            bw,
+            stochastic.engine().as_ref(),
+        )?,
+    };
+    let refined = if spec.refine {
+        Some(adaptive_search(
+            w.tensors,
+            bw,
+            spec.refine_max_threshold,
+            spec.refine_pinj_step,
+        )?)
+    } else {
+        None
+    };
+    // The policy axis: price each requested offload policy natively
+    // (f64) through the unit's backend engine, per unit —
+    // deterministic, so results stay independent of worker
+    // interleaving.
+    let policies = if spec.policies.is_empty() {
+        Vec::new()
+    } else {
+        evaluate_policies_backend(
+            w.tensors,
+            bw,
+            &spec.policies,
+            &spec.thresholds,
+            &spec.pinjs,
+            &unit_backend,
+        )?
+        .into_iter()
+        .map(|e| PolicyOutcome {
+            policy: e.policy,
+            speedup: e.speedup,
+            total_s: e.result.total_s,
+            wl_bits: e.result.wl_bits,
+            offload_layers: e.offload_layers(),
+            decisions: e.decisions,
+        })
+        .collect()
+    };
+    // The comap stage: joint mapping × offload search at this unit's
+    // bandwidth, seeded per workload — deterministic and worker-count
+    // independent like the policy stage.
+    let comap = match (spec.comap, &w.comap) {
+        (None, _) => None,
+        (Some(refit), Some(inp)) => {
+            let opts = ComapOptions {
+                iters: spec.map_iters,
+                temp_frac: spec.map_temp_frac,
+                seed: inp.seed,
+                wl_bw: bw,
+                refit,
+                thresholds: spec.thresholds.clone(),
+                pinjs: spec.pinjs.clone(),
+            };
+            let r = co_anneal(inp.workload, inp.pkg, &inp.elig, inp.base, &opts)?;
+            let wired_ref = w
+                .t_wired
+                .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
+            Some(ComapOutcome {
+                speedup: checked_speedup(wired_ref, r.total_s)?,
+                total_s: r.total_s,
+                decoupled_speedup: checked_speedup(wired_ref, r.initial_total_s)?,
+                seed_policy: r.seed_policy,
+                offload_layers: r.offload_layers(),
+                accepted: r.accepted,
+                evaluated: r.evaluated,
+            })
+        }
+        (Some(_), None) => bail!(
+            "comap stage requested but workload {:?} carries no \
+             workload/package/mapping context",
+            w.name
+        ),
+    };
+    Ok(UnitEval {
+        sweep,
+        refined,
+        policies,
+        comap,
+        backend: unit_backend.label(),
+    })
+}
+
 /// Run a full campaign: flatten the workload x bandwidth cross-product
 /// into work units, evaluate them across the pool (one `Runtime` per
 /// worker, from `make_runtime`), and aggregate per workload.
@@ -744,116 +867,13 @@ where
         spec.workers
     };
 
-    type UnitResult = (
-        SweepResult,
-        Option<AdaptiveResult>,
-        Vec<PolicyOutcome>,
-        Option<ComapOutcome>,
-        String,
-    );
-    let unit_results: Vec<Result<UnitResult>> = parallel_map_with(
+    let unit_results: Vec<Result<UnitEval>> = parallel_map_with(
         n_units,
         workers,
         &make_runtime,
         |rt: &mut Runtime, u| {
             let (wi, bi) = (u / nb, u % nb);
-            let bw = spec.bandwidths[bi];
-            // The per-unit backend: stochastic seeds specialize to the
-            // workload, so units reproduce regardless of which worker
-            // claims them.
-            let unit_backend = spec.backend.for_workload(&workloads[wi].name);
-            let sweep = match &unit_backend {
-                EvalBackend::Analytical => eval_unit(
-                    rt,
-                    workloads[wi].tensors,
-                    &spec.thresholds,
-                    &spec.pinjs,
-                    bw,
-                )?,
-                stochastic => engine_sweep(
-                    workloads[wi].tensors,
-                    &spec.thresholds,
-                    &spec.pinjs,
-                    bw,
-                    stochastic.engine().as_ref(),
-                )?,
-            };
-            let refined = if spec.refine {
-                Some(adaptive_search(
-                    workloads[wi].tensors,
-                    bw,
-                    spec.refine_max_threshold,
-                    spec.refine_pinj_step,
-                )?)
-            } else {
-                None
-            };
-            // The policy axis: price each requested offload policy
-            // natively (f64) through the unit's backend engine, per
-            // unit — deterministic, so results stay independent of
-            // worker interleaving.
-            let policies = if spec.policies.is_empty() {
-                Vec::new()
-            } else {
-                evaluate_policies_backend(
-                    workloads[wi].tensors,
-                    bw,
-                    &spec.policies,
-                    &spec.thresholds,
-                    &spec.pinjs,
-                    &unit_backend,
-                )?
-                .into_iter()
-                .map(|e| PolicyOutcome {
-                    policy: e.policy,
-                    speedup: e.speedup,
-                    total_s: e.result.total_s,
-                    wl_bits: e.result.wl_bits,
-                    offload_layers: e.offload_layers(),
-                    decisions: e.decisions,
-                })
-                .collect()
-            };
-            // The comap stage: joint mapping × offload search at this
-            // unit's bandwidth, seeded per workload — deterministic and
-            // worker-count independent like the policy stage.
-            let comap = match (spec.comap, &workloads[wi].comap) {
-                (None, _) => None,
-                (Some(refit), Some(inp)) => {
-                    let opts = ComapOptions {
-                        iters: spec.map_iters,
-                        temp_frac: spec.map_temp_frac,
-                        seed: inp.seed,
-                        wl_bw: bw,
-                        refit,
-                        thresholds: spec.thresholds.clone(),
-                        pinjs: spec.pinjs.clone(),
-                    };
-                    let r =
-                        co_anneal(inp.workload, inp.pkg, &inp.elig, inp.base, &opts)?;
-                    let wired_ref = workloads[wi]
-                        .t_wired
-                        .unwrap_or_else(|| evaluate_wired(workloads[wi].tensors).total_s);
-                    Some(ComapOutcome {
-                        speedup: checked_speedup(wired_ref, r.total_s)?,
-                        total_s: r.total_s,
-                        decoupled_speedup: checked_speedup(
-                            wired_ref,
-                            r.initial_total_s,
-                        )?,
-                        seed_policy: r.seed_policy,
-                        offload_layers: r.offload_layers(),
-                        accepted: r.accepted,
-                        evaluated: r.evaluated,
-                    })
-                }
-                (Some(_), None) => bail!(
-                    "comap stage requested but workload {:?} carries no \
-                     workload/package/mapping context",
-                    workloads[wi].name
-                ),
-            };
-            Ok((sweep, refined, policies, comap, unit_backend.label()))
+            evaluate_campaign_unit(rt, &workloads[wi], spec, spec.bandwidths[bi])
         },
     );
 
@@ -868,16 +888,16 @@ where
             .unwrap_or_else(|| evaluate_wired(w.tensors).total_s);
         let mut per_bw = Vec::with_capacity(nb);
         for &bw in &spec.bandwidths {
-            let (sweep, refined, policies, comap, backend) = units
+            let ue = units
                 .next()
                 .expect("unit count matches cross-product")?;
             per_bw.push(BandwidthResult {
                 bandwidth: bw,
-                sweep,
-                refined,
-                policies,
-                comap,
-                backend,
+                sweep: ue.sweep,
+                refined: ue.refined,
+                policies: ue.policies,
+                comap: ue.comap,
+                backend: ue.backend,
             });
         }
         aggregated.push(WorkloadCampaign {
@@ -893,6 +913,371 @@ where
         units: n_units,
         grid_evaluations: n_units * spec.grid_size(),
     })
+}
+
+// ---------------------------------------------------------------------
+// Wire serialization (`report::Json`) for the shard path
+// ---------------------------------------------------------------------
+//
+// Units travel between the campaign dispatcher and `wisper serve
+// --worker` daemons as JSON. Every f64 survives the round-trip
+// bit-exactly: `Json` renders finite values with Rust's
+// shortest-round-trip formatting and parses them back correctly
+// rounded, and non-finite values map to `null` which `wire_f64` reads
+// back as NaN (the only non-finite value the campaign produces).
+// u64 seeds travel as decimal *strings* — a JSON number is an f64 and
+// would silently lose seeds above 2^53.
+
+pub(crate) fn wire_field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("wire object is missing the {key:?} field"))
+}
+
+pub(crate) fn wire_f64(j: &Json, key: &str) -> Result<f64> {
+    match wire_field(j, key)? {
+        Json::Null => Ok(f64::NAN),
+        v => v
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("wire field {key:?} is not a number")),
+    }
+}
+
+pub(crate) fn wire_usize(j: &Json, key: &str) -> Result<usize> {
+    Ok(wire_f64(j, key)? as usize)
+}
+
+pub(crate) fn wire_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    wire_field(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("wire field {key:?} is not a string"))
+}
+
+pub(crate) fn wire_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    wire_field(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("wire field {key:?} is not an array"))
+}
+
+pub(crate) fn wire_u64(j: &Json, key: &str) -> Result<u64> {
+    wire_str(j, key)?
+        .parse::<u64>()
+        .map_err(|_| anyhow::anyhow!("wire field {key:?} is not a decimal u64 string"))
+}
+
+fn sweep_point_to_wire(p: &SweepPoint) -> Json {
+    Json::Obj(vec![
+        ("threshold".into(), Json::Num(p.threshold as f64)),
+        ("pinj".into(), Json::Num(p.pinj)),
+        ("wl_bw".into(), Json::Num(p.wl_bw)),
+        ("total_s".into(), Json::Num(p.total_s)),
+        ("speedup".into(), Json::Num(p.speedup)),
+        (
+            "shares".into(),
+            Json::Arr(p.shares.iter().map(|s| Json::Num(*s)).collect()),
+        ),
+        ("wl_bits".into(), Json::Num(p.wl_bits)),
+    ])
+}
+
+fn sweep_point_from_wire(j: &Json) -> Result<SweepPoint> {
+    let raw = wire_arr(j, "shares")?;
+    if raw.len() != 5 {
+        bail!("wire sweep point carries {} shares, expected 5", raw.len());
+    }
+    let mut shares = [0.0; 5];
+    for (slot, v) in shares.iter_mut().zip(raw) {
+        *slot = match v {
+            Json::Null => f64::NAN,
+            v => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("wire share is not a number"))?,
+        };
+    }
+    Ok(SweepPoint {
+        threshold: wire_usize(j, "threshold")? as u32,
+        pinj: wire_f64(j, "pinj")?,
+        wl_bw: wire_f64(j, "wl_bw")?,
+        total_s: wire_f64(j, "total_s")?,
+        speedup: wire_f64(j, "speedup")?,
+        shares,
+        wl_bits: wire_f64(j, "wl_bits")?,
+    })
+}
+
+fn sweep_to_wire(s: &SweepResult) -> Json {
+    Json::Obj(vec![
+        (
+            "points".into(),
+            Json::Arr(s.points.iter().map(sweep_point_to_wire).collect()),
+        ),
+        ("t_wired".into(), Json::Num(s.t_wired)),
+        ("best".into(), Json::Num(s.best as f64)),
+    ])
+}
+
+fn sweep_from_wire(j: &Json) -> Result<SweepResult> {
+    let points = wire_arr(j, "points")?
+        .iter()
+        .map(sweep_point_from_wire)
+        .collect::<Result<Vec<_>>>()?;
+    let best = wire_usize(j, "best")?;
+    if points.is_empty() || best >= points.len() {
+        bail!(
+            "wire sweep best index {best} out of bounds for {} points",
+            points.len()
+        );
+    }
+    Ok(SweepResult {
+        points,
+        t_wired: wire_f64(j, "t_wired")?,
+        best,
+    })
+}
+
+fn policy_outcome_to_wire(p: &PolicyOutcome) -> Json {
+    Json::Obj(vec![
+        ("policy".into(), Json::Str(p.policy.name().to_string())),
+        ("speedup".into(), Json::Num(p.speedup)),
+        ("total_s".into(), Json::Num(p.total_s)),
+        ("wl_bits".into(), Json::Num(p.wl_bits)),
+        ("offload_layers".into(), Json::Num(p.offload_layers as f64)),
+        (
+            "decisions".into(),
+            Json::Arr(
+                p.decisions
+                    .iter()
+                    .map(|d| {
+                        Json::Arr(vec![
+                            Json::Num(d.threshold as f64),
+                            Json::Num(d.pinj),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn policy_outcome_from_wire(j: &Json) -> Result<PolicyOutcome> {
+    let decisions = wire_arr(j, "decisions")?
+        .iter()
+        .map(|d| {
+            let pair = d
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow::anyhow!("wire decision is not a [t, p] pair"))?;
+            Ok(LayerDecision {
+                threshold: pair[0]
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("wire decision threshold"))?
+                    as u32,
+                pinj: pair[1]
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("wire decision pinj"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(PolicyOutcome {
+        policy: PolicySpec::parse(wire_str(j, "policy")?)?,
+        speedup: wire_f64(j, "speedup")?,
+        total_s: wire_f64(j, "total_s")?,
+        wl_bits: wire_f64(j, "wl_bits")?,
+        offload_layers: wire_usize(j, "offload_layers")?,
+        decisions,
+    })
+}
+
+impl UnitEval {
+    /// Serialize one unit's full outcome for the shard wire.
+    pub fn to_wire(&self) -> Json {
+        Json::Obj(vec![
+            ("sweep".into(), sweep_to_wire(&self.sweep)),
+            (
+                "refined".into(),
+                match &self.refined {
+                    None => Json::Null,
+                    Some(r) => Json::Obj(vec![
+                        ("threshold".into(), Json::Num(r.threshold as f64)),
+                        ("pinj".into(), Json::Num(r.pinj)),
+                        ("speedup".into(), Json::Num(r.speedup)),
+                        ("evaluations".into(), Json::Num(r.evaluations as f64)),
+                    ]),
+                },
+            ),
+            (
+                "policies".into(),
+                Json::Arr(self.policies.iter().map(policy_outcome_to_wire).collect()),
+            ),
+            (
+                "comap".into(),
+                match &self.comap {
+                    None => Json::Null,
+                    Some(c) => Json::Obj(vec![
+                        ("speedup".into(), Json::Num(c.speedup)),
+                        ("total_s".into(), Json::Num(c.total_s)),
+                        (
+                            "decoupled_speedup".into(),
+                            Json::Num(c.decoupled_speedup),
+                        ),
+                        (
+                            "seed_policy".into(),
+                            Json::Str(c.seed_policy.name().to_string()),
+                        ),
+                        (
+                            "offload_layers".into(),
+                            Json::Num(c.offload_layers as f64),
+                        ),
+                        ("accepted".into(), Json::Num(c.accepted as f64)),
+                        ("evaluated".into(), Json::Num(c.evaluated as f64)),
+                    ]),
+                },
+            ),
+            ("backend".into(), Json::Str(self.backend.clone())),
+        ])
+    }
+
+    /// Parse one unit outcome off the shard wire, bit-exact with what
+    /// [`Self::to_wire`] serialized.
+    pub fn from_wire(j: &Json) -> Result<UnitEval> {
+        let refined = match wire_field(j, "refined")? {
+            Json::Null => None,
+            r => Some(AdaptiveResult {
+                threshold: wire_usize(r, "threshold")? as u32,
+                pinj: wire_f64(r, "pinj")?,
+                speedup: wire_f64(r, "speedup")?,
+                evaluations: wire_usize(r, "evaluations")?,
+            }),
+        };
+        let comap = match wire_field(j, "comap")? {
+            Json::Null => None,
+            c => Some(ComapOutcome {
+                speedup: wire_f64(c, "speedup")?,
+                total_s: wire_f64(c, "total_s")?,
+                decoupled_speedup: wire_f64(c, "decoupled_speedup")?,
+                seed_policy: PolicySpec::parse(wire_str(c, "seed_policy")?)?,
+                offload_layers: wire_usize(c, "offload_layers")?,
+                accepted: wire_usize(c, "accepted")?,
+                evaluated: wire_usize(c, "evaluated")?,
+            }),
+        };
+        Ok(UnitEval {
+            sweep: sweep_from_wire(wire_field(j, "sweep")?)?,
+            refined,
+            policies: wire_arr(j, "policies")?
+                .iter()
+                .map(policy_outcome_from_wire)
+                .collect::<Result<Vec<_>>>()?,
+            comap,
+            backend: wire_str(j, "backend")?.to_string(),
+        })
+    }
+}
+
+impl CampaignSpec {
+    /// Serialize the shared axes of a campaign for the shard wire. The
+    /// `workers` knob deliberately does not travel: each worker daemon
+    /// sizes its own execution pool.
+    pub fn to_wire(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "thresholds".into(),
+                Json::Arr(
+                    self.thresholds
+                        .iter()
+                        .map(|t| Json::Num(*t as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "pinjs".into(),
+                Json::Arr(self.pinjs.iter().map(|p| Json::Num(*p)).collect()),
+            ),
+            (
+                "bandwidths".into(),
+                Json::Arr(self.bandwidths.iter().map(|b| Json::Num(*b)).collect()),
+            ),
+            (
+                "policies".into(),
+                Json::Arr(
+                    self.policies
+                        .iter()
+                        .map(|p| Json::Str(p.name().to_string()))
+                        .collect(),
+                ),
+            ),
+            ("refine".into(), Json::Bool(self.refine)),
+            (
+                "refine_max_threshold".into(),
+                Json::Num(self.refine_max_threshold as f64),
+            ),
+            ("refine_pinj_step".into(), Json::Num(self.refine_pinj_step)),
+            (
+                "comap".into(),
+                match self.comap {
+                    None => Json::Null,
+                    Some(p) => Json::Str(p.name().to_string()),
+                },
+            ),
+            ("map_iters".into(), Json::Num(self.map_iters as f64)),
+            ("map_temp_frac".into(), Json::Num(self.map_temp_frac)),
+            ("map_seed".into(), Json::Str(self.map_seed.to_string())),
+            ("backend".into(), Json::Str(self.backend.label())),
+        ])
+    }
+
+    /// Parse campaign axes off the shard wire ([`Self::to_wire`]'s
+    /// inverse; `workers` stays at the receiving daemon's default).
+    pub fn from_wire(j: &Json) -> Result<CampaignSpec> {
+        let comap = match wire_field(j, "comap")? {
+            Json::Null => None,
+            v => Some(PolicySpec::parse(v.as_str().ok_or_else(|| {
+                anyhow::anyhow!("wire field \"comap\" is not a string")
+            })?)?),
+        };
+        Ok(CampaignSpec {
+            thresholds: wire_arr(j, "thresholds")?
+                .iter()
+                .map(|t| {
+                    t.as_f64()
+                        .map(|v| v as u32)
+                        .ok_or_else(|| anyhow::anyhow!("wire threshold is not a number"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            pinjs: wire_arr(j, "pinjs")?
+                .iter()
+                .map(|p| {
+                    p.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("wire pinj is not a number"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            bandwidths: wire_arr(j, "bandwidths")?
+                .iter()
+                .map(|b| {
+                    b.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("wire bandwidth is not a number"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+            policies: wire_arr(j, "policies")?
+                .iter()
+                .map(|p| {
+                    PolicySpec::parse(p.as_str().ok_or_else(|| {
+                        anyhow::anyhow!("wire policy is not a string")
+                    })?)
+                })
+                .collect::<Result<Vec<_>>>()?,
+            workers: 0,
+            refine: wire_field(j, "refine")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("wire field \"refine\" is not a bool"))?,
+            refine_max_threshold: wire_usize(j, "refine_max_threshold")? as u32,
+            refine_pinj_step: wire_f64(j, "refine_pinj_step")?,
+            comap,
+            map_iters: wire_usize(j, "map_iters")?,
+            map_temp_frac: wire_f64(j, "map_temp_frac")?,
+            map_seed: wire_u64(j, "map_seed")?,
+            backend: EvalBackend::parse(wire_str(j, "backend")?)?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -1206,6 +1591,72 @@ mod tests {
         s.comap = Some(PolicySpec::Feedback);
         let err = s.validate().unwrap_err().to_string();
         assert!(err.contains("closed-form"), "{err}");
+    }
+
+    #[test]
+    fn unit_eval_wire_round_trip_is_bit_exact() {
+        // A unit outcome rendered to the shard wire and parsed back is
+        // bit-identical — the foundation of the sharded == local
+        // contract. Include refinement (f64 path) and a NaN speedup.
+        let ta = tensors(1.0);
+        let mut s = spec();
+        s.refine = true;
+        let rt = Runtime::native();
+        let w = CampaignWorkload {
+            name: "a".into(),
+            tensors: &ta,
+            t_wired: None,
+            comap: None,
+        };
+        let mut ue = evaluate_campaign_unit(&rt, &w, &s, 64e9).unwrap();
+        ue.sweep.points[1].speedup = f64::NAN; // non-finite survives as null
+        let wire = ue.to_wire().render();
+        let back = UnitEval::from_wire(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(ue.backend, back.backend);
+        assert_eq!(ue.sweep.best, back.sweep.best);
+        assert_eq!(ue.sweep.t_wired.to_bits(), back.sweep.t_wired.to_bits());
+        for (p, q) in ue.sweep.points.iter().zip(&back.sweep.points) {
+            assert_eq!(p.threshold, q.threshold);
+            assert_eq!(p.pinj.to_bits(), q.pinj.to_bits());
+            assert_eq!(p.total_s.to_bits(), q.total_s.to_bits());
+            assert_eq!(p.speedup.to_bits(), q.speedup.to_bits());
+            assert_eq!(p.wl_bits.to_bits(), q.wl_bits.to_bits());
+            for (a, b) in p.shares.iter().zip(&q.shares) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        let (r1, r2) = (ue.refined.unwrap(), back.refined.unwrap());
+        assert_eq!(r1.speedup.to_bits(), r2.speedup.to_bits());
+        assert_eq!((r1.threshold, r1.evaluations), (r2.threshold, r2.evaluations));
+        assert_eq!(ue.policies.len(), back.policies.len());
+        for (p, q) in ue.policies.iter().zip(&back.policies) {
+            assert_eq!(p.policy, q.policy);
+            assert_eq!(p.speedup.to_bits(), q.speedup.to_bits());
+            assert_eq!(p.total_s.to_bits(), q.total_s.to_bits());
+            assert_eq!(p.decisions, q.decisions);
+        }
+        assert!(back.comap.is_none());
+    }
+
+    #[test]
+    fn campaign_spec_wire_round_trip() {
+        // Axes (including a >2^53 u64 seed and a stochastic backend
+        // label) survive the wire; `workers` stays host-local.
+        let mut s = spec();
+        s.map_seed = u64::MAX - 17;
+        s.backend = EvalBackend::Stochastic { draws: 6, seed: 0xFEED };
+        s.comap = Some(PolicySpec::Greedy);
+        let back =
+            CampaignSpec::from_wire(&Json::parse(&s.to_wire().render()).unwrap())
+                .unwrap();
+        assert_eq!(back.thresholds, s.thresholds);
+        assert_eq!(back.pinjs, s.pinjs);
+        assert_eq!(back.bandwidths, s.bandwidths);
+        assert_eq!(back.policies, s.policies);
+        assert_eq!(back.map_seed, s.map_seed);
+        assert_eq!(back.backend, s.backend);
+        assert_eq!(back.comap, s.comap);
+        assert_eq!(back.workers, 0);
     }
 
     #[test]

@@ -27,8 +27,15 @@
 //!
 //! Empty grids are rejected with an error (never a panic), and
 //! best-point selection uses a NaN-safe total order.
+//!
+//! The [`shard`] module scales the campaign orchestrator past one
+//! host: work units stream to `wisper serve --worker` daemons over the
+//! serve subsystem's HTTP framing with pull-based work stealing, and
+//! the folded result is bit-identical to the local pool's (the
+//! determinism contract `rust/tests/shard_campaign.rs` asserts).
 
 pub mod campaign;
+pub mod shard;
 
 use crate::runtime::Runtime;
 use crate::sim::cost::CostTensors;
@@ -38,6 +45,7 @@ pub use campaign::{
     engine_sweep, run_campaign, BandwidthResult, CampaignResult, CampaignSpec,
     CampaignWorkload, ComapInput, ComapOutcome, PolicyOutcome, WorkloadCampaign,
 };
+pub use shard::{run_campaign_sharded, ShardPrep, ShardReport};
 
 /// One evaluated grid point.
 #[derive(Debug, Clone)]

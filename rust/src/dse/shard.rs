@@ -1,0 +1,382 @@
+//! Campaign sharding across hosts: flatten a campaign's (workload ×
+//! bandwidth) work units onto a fleet of `wisper serve --worker`
+//! daemons and fold the completions back into one
+//! [`CampaignResult`] — bit-identical to the local
+//! [`Coordinator::campaign_prepared`] path.
+//!
+//! # The determinism contract
+//!
+//! Sharding never ships tensors: a worker receives only the campaign
+//! axes ([`CampaignSpec::to_wire`]) and the preparation knobs
+//! ([`ShardPrep`]), and re-derives everything else exactly the way the
+//! local path does — [`worker_search`] reconstructs the same
+//! [`MapSearch`] that `experiment::prepare_search` builds (same
+//! per-workload `derive_seed`, same wired objective, same
+//! workload-specialized backend), so the worker's `prepare_mapped`
+//! produces bit-identical tensors and its
+//! [`evaluate_campaign_unit`] output matches the local pool's. The
+//! assembled result is therefore independent of worker count, claim
+//! interleaving, steals and retransmits; `rust/tests/shard_campaign.rs`
+//! asserts byte-identical campaign JSON against the local path,
+//! including under a mid-campaign worker kill.
+//!
+//! # The fingerprint gate
+//!
+//! Unit bodies carry no architecture description, so a worker daemon
+//! booted against a different `[arch]`/`[wireless]` config would
+//! silently compute different numbers. [`config_fingerprint`] hashes
+//! the daemon's config; every batch POST carries the coordinator's
+//! fingerprint and mismatches are rejected with HTTP 409 before any
+//! unit runs.
+
+use crate::config::Config;
+use crate::coordinator::{Coordinator, MapSearch, Prepared};
+use crate::dse::campaign::{
+    wire_f64, wire_field, wire_str, wire_u64, wire_usize, CampaignResult, CampaignSpec,
+    UnitEval,
+};
+use crate::dse::BandwidthResult;
+use crate::mapping::comap::MappingObjective;
+use crate::mapping::mapper::SaOptions;
+use crate::report::Json;
+use crate::serve::dispatch::{dispatch_units, DispatchOptions, WorkerReport};
+use crate::util::anneal::derive_seed;
+use crate::util::threadpool::parallel_map;
+use crate::dse::campaign::WorkloadCampaign;
+use anyhow::{bail, Result};
+
+/// The preparation knobs a worker needs to rebuild a workload's mapped
+/// tensors bit-identically: everything [`worker_search`] cannot read
+/// off the [`CampaignSpec`]. The `seed` is the *base* mapping seed —
+/// workers derive the per-workload seed themselves, exactly like the
+/// local preparation path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardPrep {
+    /// Run the wired simulated-annealing search (`false` keeps the
+    /// layer-sequential baseline).
+    pub optimize: bool,
+    /// Annealing iterations.
+    pub iters: usize,
+    /// Initial temperature as a fraction of the seed cost.
+    pub temp_frac: f64,
+    /// Base mapping seed (per-workload seeds derive from it).
+    pub seed: u64,
+}
+
+impl ShardPrep {
+    /// The default preparation a bare coordinator runs (`[mapper]`
+    /// config, search enabled) — what `wisper campaign` uses when no
+    /// scenario overrides apply.
+    pub fn from_coordinator(coord: &Coordinator) -> Self {
+        let mapper = &coord.cfg.mapper;
+        Self {
+            optimize: true,
+            iters: mapper.sa_iters,
+            temp_frac: mapper.sa_temp,
+            seed: mapper.seed,
+        }
+    }
+
+    /// Serialize for the shard wire. The seed travels as a decimal
+    /// string: a JSON number is an f64 and would corrupt seeds above
+    /// 2^53.
+    pub fn to_wire(&self) -> Json {
+        Json::Obj(vec![
+            ("optimize".into(), Json::Bool(self.optimize)),
+            ("iters".into(), Json::Num(self.iters as f64)),
+            ("temp_frac".into(), Json::Num(self.temp_frac)),
+            ("seed".into(), Json::Str(self.seed.to_string())),
+        ])
+    }
+
+    /// Parse off the shard wire ([`Self::to_wire`]'s inverse).
+    pub fn from_wire(j: &Json) -> Result<Self> {
+        Ok(Self {
+            optimize: wire_field(j, "optimize")?
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("wire field \"optimize\" is not a bool"))?,
+            iters: wire_usize(j, "iters")?,
+            temp_frac: wire_f64(j, "temp_frac")?,
+            seed: wire_u64(j, "seed")?,
+        })
+    }
+}
+
+/// The [`MapSearch`] one shard unit's workload is prepared with — the
+/// worker-side twin of `experiment::prepare_search`: wired objective,
+/// per-workload derived mapping seed, workload-specialized backend,
+/// grid axes off the spec. Both the dispatching coordinator (for its
+/// local reference path) and the worker daemon call this, so their
+/// prepared tensors and serve-cache keys agree exactly.
+pub fn worker_search(prep: &ShardPrep, spec: &CampaignSpec, workload: &str) -> MapSearch {
+    MapSearch {
+        optimize: prep.optimize,
+        objective: MappingObjective::Wired,
+        sa: SaOptions {
+            iters: prep.iters,
+            temp_frac: prep.temp_frac,
+            seed: derive_seed(prep.seed, workload),
+        },
+        wl_bw: spec.bandwidths[0],
+        thresholds: spec.thresholds.clone(),
+        pinjs: spec.pinjs.clone(),
+        backend: spec.backend.for_workload(workload),
+    }
+}
+
+/// Hash of the configuration axes that change unit results (`[arch]`
+/// and `[wireless]`). A worker daemon whose fingerprint disagrees with
+/// the dispatching coordinator's would compute different numbers from
+/// the same unit bodies; batches are rejected (HTTP 409) instead.
+pub fn config_fingerprint(cfg: &Config) -> String {
+    let material = format!("{:?}|{:?}", cfg.arch, cfg.wireless);
+    format!("{:016x}", derive_seed(0x5748_5350_5244_0001, &material))
+}
+
+/// Prepare a campaign's workloads locally through the *same*
+/// [`worker_search`] the shard workers use — the reference arm of the
+/// bit-identity contract. `campaign_prepared` over this preparation
+/// must equal [`run_campaign_sharded`] bit for bit.
+pub fn prepare_shard_local(
+    coord: &Coordinator,
+    names: &[String],
+    spec: &CampaignSpec,
+    prep: &ShardPrep,
+) -> Result<Vec<Prepared>> {
+    let workers = if spec.workers > 0 {
+        spec.workers
+    } else {
+        coord.workers()
+    };
+    parallel_map(names.len(), workers, |i| {
+        coord.prepare_mapped(&names[i], &worker_search(prep, spec, &names[i]))
+    })
+    .into_iter()
+    .collect()
+}
+
+/// Run a campaign entirely locally through the shard preparation path:
+/// the `workers = 1 host` arm tests and benches compare the fleet
+/// against.
+pub fn run_campaign_local(
+    coord: &Coordinator,
+    names: &[String],
+    spec: &CampaignSpec,
+    prep: &ShardPrep,
+) -> Result<CampaignResult> {
+    let prepared = prepare_shard_local(coord, names, spec, prep)?;
+    coord.campaign_prepared(&prepared, spec)
+}
+
+/// Fleet accounting for the campaign report's `shard` section.
+#[derive(Debug)]
+pub struct ShardReport {
+    pub workers: Vec<WorkerReport>,
+    /// Completions that arrived for an already-completed unit.
+    pub duplicates: u64,
+    /// Units re-shipped after a steal or a dead worker's re-queue.
+    pub retransmits: u64,
+    pub units: usize,
+}
+
+impl ShardReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("units".into(), Json::Num(self.units as f64)),
+            ("duplicates".into(), Json::Num(self.duplicates as f64)),
+            ("retransmits".into(), Json::Num(self.retransmits as f64)),
+            (
+                "workers".into(),
+                Json::Arr(self.workers.iter().map(WorkerReport::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Run a campaign across a worker fleet: flatten units workload-major
+/// (unit `u` = workload `u / M`, bandwidth `u % M` — the same order
+/// `run_campaign` evaluates), stream them through the work-stealing
+/// dispatcher, and reassemble the completions into a
+/// [`CampaignResult`] bit-identical to the local path.
+pub fn run_campaign_sharded(
+    coord: &Coordinator,
+    names: &[String],
+    spec: &CampaignSpec,
+    prep: &ShardPrep,
+    workers: &[String],
+    opts: &DispatchOptions,
+) -> Result<(CampaignResult, ShardReport)> {
+    spec.validate()?;
+    if names.is_empty() {
+        bail!("shard campaign needs at least one workload");
+    }
+    let nb = spec.bandwidths.len();
+    let total = names.len() * nb;
+
+    let envelope = Json::Obj(vec![
+        (
+            "fingerprint".into(),
+            Json::Str(config_fingerprint(&coord.cfg)),
+        ),
+        ("spec".into(), spec.to_wire()),
+        ("prep".into(), prep.to_wire()),
+    ]);
+    let unit_bodies: Vec<Json> = (0..total)
+        .map(|u| {
+            Json::Obj(vec![
+                ("id".into(), Json::Num(u as f64)),
+                ("workload".into(), Json::Str(names[u / nb].clone())),
+                ("bw".into(), Json::Num((u % nb) as f64)),
+            ])
+        })
+        .collect();
+
+    let outcome = dispatch_units(workers, &envelope, &unit_bodies, opts)?;
+
+    // Fold completions back. Completion `id` carries the worker's full
+    // per-unit outcome plus the workload's wired baseline; the baseline
+    // must agree bit-for-bit across a workload's units (every worker
+    // derived it from the same preparation) — a mismatch means a
+    // worker ran a divergent build or config and the result is not
+    // trustworthy.
+    let mut t_wireds: Vec<Option<f64>> = vec![None; names.len()];
+    let mut evals: Vec<Option<UnitEval>> = Vec::with_capacity(total);
+    evals.resize_with(total, || None);
+    for (u, r) in outcome.results.iter().enumerate() {
+        let tw = wire_f64(r, "t_wired")?;
+        let wi = u / nb;
+        match t_wireds[wi] {
+            None => t_wireds[wi] = Some(tw),
+            Some(prev) if prev.to_bits() != tw.to_bits() => bail!(
+                "wired baseline for workload {:?} disagrees across shard units \
+                 ({prev} vs {tw}): worker fleet is not homogeneous",
+                names[wi]
+            ),
+            Some(_) => {}
+        }
+        evals[u] = Some(UnitEval::from_wire(wire_field(r, "unit")?)?);
+        let echoed = wire_str(r, "workload")?;
+        if echoed != names[wi] {
+            bail!(
+                "completion {u} echoes workload {echoed:?}, expected {:?}",
+                names[wi]
+            );
+        }
+    }
+
+    // Reassemble in workload-major order — structurally identical to
+    // `run_campaign`'s aggregation loop.
+    let mut spec_out = spec.clone();
+    if spec_out.workers == 0 {
+        spec_out.workers = coord.workers();
+    }
+    let mut aggregated = Vec::with_capacity(names.len());
+    for (wi, name) in names.iter().enumerate() {
+        let t_wired = t_wireds[wi].expect("every workload has >= 1 bandwidth unit");
+        let mut per_bw = Vec::with_capacity(nb);
+        for (bi, &bw) in spec.bandwidths.iter().enumerate() {
+            let ue = evals[wi * nb + bi]
+                .take()
+                .expect("dispatch returned every unit");
+            per_bw.push(BandwidthResult {
+                bandwidth: bw,
+                sweep: ue.sweep,
+                refined: ue.refined,
+                policies: ue.policies,
+                comap: ue.comap,
+                backend: ue.backend,
+            });
+        }
+        aggregated.push(WorkloadCampaign {
+            name: name.clone(),
+            t_wired,
+            per_bw,
+        });
+    }
+
+    let result = CampaignResult {
+        spec: spec_out,
+        workloads: aggregated,
+        units: total,
+        grid_evaluations: total * spec.grid_size(),
+    };
+    let report = ShardReport {
+        workers: outcome.workers,
+        duplicates: outcome.duplicates,
+        retransmits: outcome.retransmits,
+        units: total,
+    };
+    Ok((result, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(Config::default()).expect("default config")
+    }
+
+    #[test]
+    fn shard_prep_wire_round_trip() {
+        let prep = ShardPrep {
+            optimize: true,
+            iters: 321,
+            temp_frac: 0.125,
+            seed: u64::MAX - 41,
+        };
+        let wire = prep.to_wire().render();
+        let back = ShardPrep::from_wire(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(prep, back);
+    }
+
+    #[test]
+    fn worker_search_matches_scenario_preparation() {
+        // The bit-identity contract hinges on the worker rebuilding the
+        // exact MapSearch the scenario preparation path uses.
+        let coord = coordinator();
+        let scenario = crate::experiment::Scenario::builder(&coord.cfg)
+            .workloads(["zfnet", "resnet50"])
+            .experiments(["campaign"])
+            .bandwidths(&[64e9, 96e9])
+            .thresholds(&[1, 2])
+            .injection_probs(&[0.2, 0.4])
+            .optimize(true)
+            .build()
+            .unwrap();
+        let spec = CampaignSpec {
+            thresholds: scenario.thresholds.clone(),
+            pinjs: scenario.injection_probs.clone(),
+            bandwidths: scenario.bandwidths.clone(),
+            ..CampaignSpec::default()
+        };
+        let prep = ShardPrep::from_coordinator(&coord);
+        for name in &scenario.workloads {
+            let ours = worker_search(&prep, &spec, name);
+            let theirs =
+                crate::experiment::prepare_search(&coord, &scenario, name).unwrap();
+            assert_eq!(ours.optimize, theirs.optimize);
+            assert_eq!(ours.sa.iters, theirs.sa.iters);
+            assert_eq!(ours.sa.temp_frac.to_bits(), theirs.sa.temp_frac.to_bits());
+            assert_eq!(ours.sa.seed, theirs.sa.seed);
+            assert_eq!(ours.wl_bw.to_bits(), theirs.wl_bw.to_bits());
+            assert_eq!(ours.thresholds, theirs.thresholds);
+            assert_eq!(
+                crate::serve::cache::PreparedCache::key(name, &ours),
+                crate::serve::cache::PreparedCache::key(name, &theirs),
+            );
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_arch_and_wireless_only() {
+        let a = Config::default();
+        let mut b = Config::default();
+        b.sweep.workers = 7; // sweep axes do not change unit results
+        assert_eq!(config_fingerprint(&a), config_fingerprint(&b));
+        let mut c = Config::default();
+        c.wireless.bandwidth_bits *= 2.0;
+        assert_ne!(config_fingerprint(&a), config_fingerprint(&c));
+    }
+}

@@ -344,7 +344,35 @@ impl Experiment for Campaign {
             backend: s.eval_backend()?,
             ..CampaignSpec::default()
         };
-        let result = ctx.coord.campaign_prepared(ctx.prepared, &spec)?;
+        // Sharded dispatch: when the scenario names a worker fleet,
+        // stream the flattened work units to `wisper serve --worker`
+        // daemons instead of the local pool. The fold is bit-identical
+        // to the local path (same derived seeds, same unit order), so
+        // every table, CSV and metric below is shared; the sharded run
+        // only *adds* a `shard` section and fleet summary lines.
+        let (result, shard) = if s.shard_workers.is_empty() {
+            (ctx.coord.campaign_prepared(ctx.prepared, &spec)?, None)
+        } else {
+            let prep = crate::dse::ShardPrep {
+                optimize: s.optimize,
+                iters: spec.map_iters,
+                temp_frac: spec.map_temp_frac,
+                seed: spec.map_seed,
+            };
+            let mut opts = crate::serve::dispatch::DispatchOptions::default();
+            if s.shard_batch > 0 {
+                opts.batch = s.shard_batch;
+            }
+            let (result, report) = crate::dse::run_campaign_sharded(
+                ctx.coord,
+                &s.workloads,
+                &spec,
+                &prep,
+                &s.shard_workers,
+                &opts,
+            )?;
+            (result, Some(report))
+        };
 
         let mut headers: Vec<String> = vec!["workload".into(), "t_wired(s)".into()];
         for bw in &spec.bandwidths {
@@ -460,6 +488,28 @@ impl Experiment for Campaign {
                 crate::util::stats::max(&gains),
             ));
         }
+        if let Some(report) = &shard {
+            text.push_str(&format!(
+                "\nsharded over {} workers: {} retransmits, \
+                 {} duplicate completions\n",
+                report.workers.len(),
+                report.retransmits,
+                report.duplicates,
+            ));
+            for w in &report.workers {
+                text.push_str(&format!(
+                    "  {}: {} units in {} batches ({} steals){}\n",
+                    w.addr,
+                    w.units,
+                    w.batches,
+                    w.steals,
+                    if w.alive { "" } else { " [connection lost]" },
+                ));
+            }
+            metrics.push(("shard/workers".into(), report.workers.len() as f64));
+            metrics.push(("shard/retransmits".into(), report.retransmits as f64));
+            metrics.push(("shard/duplicates".into(), report.duplicates as f64));
+        }
 
         let mut csvs = vec![CsvTable {
             name: "campaign".into(),
@@ -518,9 +568,18 @@ impl Experiment for Campaign {
                 rows: comap_rows,
             });
         }
+        // The `shard` key is appended *after* the shared campaign JSON
+        // so the local path's bytes stay a strict prefix: stripping the
+        // one key recovers the workers=1 report verbatim.
+        let mut json = result.to_json();
+        if let Some(report) = &shard {
+            if let Json::Obj(fields) = &mut json {
+                fields.push(("shard".into(), report.to_json()));
+            }
+        }
         Ok(ExperimentOutput {
             text,
-            json: result.to_json(),
+            json,
             csvs,
             metrics,
         })

@@ -22,6 +22,8 @@
 //! map_temp_frac = 0.25
 //! refine = false
 //! workers = 0
+//! shard_workers = ["10.0.0.2:8080", "10.0.0.3:8080"]  # campaign fleet
+//! shard_batch = 4
 //! ```
 //!
 //! Unknown `[scenario]` keys are hard errors (a typo like `map_itres`
@@ -91,6 +93,14 @@ pub struct Scenario {
     pub refine: bool,
     /// Worker threads (0 = auto).
     pub workers: usize,
+    /// Shard worker daemons (`host:port` of `wisper serve --worker`
+    /// instances). Non-empty routes the `campaign` experiment through
+    /// the work-stealing fleet dispatcher (`dse::shard`) instead of
+    /// the local thread pool; results are bit-identical either way.
+    pub shard_workers: Vec<String>,
+    /// Initial per-worker claim window for shard dispatch (0 = the
+    /// dispatcher default; the window adapts at runtime regardless).
+    pub shard_batch: usize,
     /// Experiment names to run, in order (registry names).
     pub experiments: Vec<String>,
 }
@@ -128,6 +138,8 @@ impl Scenario {
             map_temp_frac: None,
             refine: false,
             workers: cfg.sweep.workers,
+            shard_workers: Vec::new(),
+            shard_batch: 0,
             experiments: DEFAULT_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
         }
     }
@@ -142,7 +154,7 @@ impl Scenario {
     /// Every key the `[scenario]` section understands — the unknown-key
     /// check below errors against this list so typos can't silently
     /// fall back to defaults.
-    pub const TOML_KEYS: [&'static str; 16] = [
+    pub const TOML_KEYS: [&'static str; 18] = [
         "name",
         "workloads",
         "experiments",
@@ -159,6 +171,8 @@ impl Scenario {
         "map_temp_frac",
         "refine",
         "workers",
+        "shard_workers",
+        "shard_batch",
     ];
 
     /// Read the `[scenario]` section of a TOML document (grid axes and
@@ -240,6 +254,12 @@ impl Scenario {
         }
         if let Some(v) = doc.get_usize("scenario.workers")? {
             s.workers = v;
+        }
+        if let Some(v) = doc.get_list_str("scenario.shard_workers")? {
+            s.shard_workers = v;
+        }
+        if let Some(v) = doc.get_usize("scenario.shard_batch")? {
+            s.shard_batch = v;
         }
         s.normalize_and_validate()?;
         Ok(s)
@@ -378,6 +398,12 @@ impl Scenario {
         if let Some(x) = doc.get("workers").and_then(Json::as_f64) {
             s.workers = whole("workers", x)? as usize;
         }
+        if let Some(v) = str_list("shard_workers")? {
+            s.shard_workers = v;
+        }
+        if let Some(x) = doc.get("shard_batch").and_then(Json::as_f64) {
+            s.shard_batch = whole("shard_batch", x)? as usize;
+        }
         s.normalize_and_validate()?;
         Ok(s)
     }
@@ -483,6 +509,20 @@ impl Scenario {
         if let Some(t) = self.map_temp_frac {
             if !(t.is_finite() && t > 0.0) {
                 bail!("scenario.map_temp_frac must be positive and finite, got {t}");
+            }
+        }
+        self.shard_workers = dedupe(std::mem::take(&mut self.shard_workers));
+        for w in &self.shard_workers {
+            let (host, port) = match w.rsplit_once(':') {
+                Some(split) => split,
+                None => bail!(
+                    "scenario.shard_workers entry {w:?} is not a host:port address"
+                ),
+            };
+            if host.is_empty() || port.parse::<u16>().is_err() {
+                bail!(
+                    "scenario.shard_workers entry {w:?} is not a host:port address"
+                );
             }
         }
         Ok(())
@@ -613,6 +653,16 @@ impl Scenario {
             ("refine".into(), Json::Bool(self.refine)),
             ("workers".into(), Json::Num(self.workers as f64)),
             (
+                "shard_workers".into(),
+                Json::Arr(
+                    self.shard_workers
+                        .iter()
+                        .map(|w| Json::Str(w.clone()))
+                        .collect(),
+                ),
+            ),
+            ("shard_batch".into(), Json::Num(self.shard_batch as f64)),
+            (
                 "experiments".into(),
                 Json::Arr(
                     self.experiments
@@ -735,6 +785,22 @@ impl ScenarioBuilder {
 
     pub fn workers(mut self, workers: usize) -> Self {
         self.scenario.workers = workers;
+        self
+    }
+
+    /// Shard worker daemons (`host:port`); non-empty routes the
+    /// `campaign` experiment through the fleet dispatcher.
+    pub fn shard_workers<I, S>(mut self, addrs: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.scenario.shard_workers = addrs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn shard_batch(mut self, batch: usize) -> Self {
+        self.scenario.shard_batch = batch;
         self
     }
 

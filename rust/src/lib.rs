@@ -66,6 +66,15 @@
 //! [`experiment::RunStore`], serves `wisper compare` over the wire
 //! (`GET /compare/:a/:b`), and hot-reloads scenario TOMLs from a
 //! watched directory.
+//!
+//! Campaigns shard across hosts: `wisper serve --worker` daemons
+//! execute campaign work units (`POST /units` / `GET /units/next`),
+//! and `wisper campaign --workers hostA:port,hostB:port` streams the
+//! flattened units through the pull-based work-stealing dispatcher
+//! ([`serve::dispatch`]), folding completions into a result
+//! bit-identical to the local pool ([`dse::shard`]) — workers
+//! re-derive preparation from the wire instead of shipping tensors,
+//! and a config fingerprint gate rejects heterogeneous fleets.
 
 pub mod arch;
 pub mod cli;

@@ -49,11 +49,14 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "map-seed", takes_value: true, help: "base seed for per-workload mapping searches" },
         OptSpec { name: "map-temp-frac", takes_value: true, help: "mapping-search initial temperature fraction" },
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
-        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto)" },
+        OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto), or a host:port,... fleet that shards the campaign across daemons" },
+        OptSpec { name: "shard-batch", takes_value: true, help: "campaign sharding: initial work-steal window per worker (0 = default)" },
         OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
         OptSpec { name: "threads", takes_value: true, help: "serve: HTTP handler threads (0 = default pool)" },
         OptSpec { name: "cache-entries", takes_value: true, help: "serve: prepared-cache entry cap (0 disables)" },
         OptSpec { name: "watch-dir", takes_value: true, help: "serve: hot-reload scenario TOMLs from this directory" },
+        OptSpec { name: "worker", takes_value: false, help: "serve: execute shard work units (POST /units / GET /units/next)" },
+        OptSpec { name: "exec-threads", takes_value: true, help: "serve --worker: unit executor threads (0 = machine default)" },
         OptSpec { name: "refine", takes_value: false, help: "adaptive refinement after campaign grid passes" },
         OptSpec { name: "csv", takes_value: false, help: "(legacy; ignored — run records always include CSVs)" },
         OptSpec { name: "json", takes_value: false, help: "(legacy; ignored — run records always include JSON)" },
@@ -218,8 +221,19 @@ fn apply_flag_overrides(
     if let Some(seeds) = p.get_usize("seeds")? {
         s.seeds = seeds as u64;
     }
-    if let Some(w) = p.get_usize("workers")? {
-        s.workers = w;
+    // `--workers` is overloaded: a plain count keeps its historical
+    // meaning (local worker threads), while anything containing a
+    // colon is a comma-separated host:port fleet that shards the
+    // campaign across `wisper serve --worker` daemons.
+    if let Some(w) = p.get("workers") {
+        if w.contains(':') {
+            s.shard_workers = cli::parse_comma_list("--workers", w)?;
+        } else if let Some(n) = p.get_usize("workers")? {
+            s.workers = n;
+        }
+    }
+    if let Some(b) = p.get_usize("shard-batch")? {
+        s.shard_batch = b;
     }
     if p.has_flag("no-opt") {
         s.optimize = false;
@@ -322,9 +336,14 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
         opts.cache_entries = entries;
     }
     opts.watch_dir = p.get("watch-dir").map(std::path::PathBuf::from);
+    opts.worker = p.has_flag("worker");
+    if let Some(n) = p.get_usize("exec-threads")? {
+        opts.exec_threads = n;
+    }
 
     serve::install_signal_handlers();
     let watch = opts.watch_dir.clone();
+    let worker_mode = opts.worker;
     let server = serve::Server::start(coord, store, opts)?;
     println!("wisper serve listening on http://{}", server.addr());
     println!("  POST /runs             submit a scenario (TOML or JSON body)");
@@ -333,6 +352,10 @@ fn cmd_serve(p: &Parsed) -> Result<()> {
     println!("  GET  /runs/:id/results per-experiment outputs");
     println!("  GET  /compare/:a/:b    diff two runs");
     println!("  GET  /stats | /healthz daemon + cache counters");
+    if worker_mode {
+        println!("  POST /units            enqueue shard work units (--worker)");
+        println!("  GET  /units/next       drain completed units");
+    }
     if let Some(dir) = watch {
         println!("  watching {} for scenario changes", dir.display());
     }

@@ -7,9 +7,11 @@
 //! | `GET /runs/:id`          | status + manifest (once persisted)           |
 //! | `GET /runs/:id/results`  | per-experiment JSON outputs                  |
 //! | `GET /compare/:a/:b`     | [`compare_manifests`] over the wire          |
-//! | `GET /stats`             | run counts, cache counters, uptime           |
+//! | `GET /stats`             | run counts, cache + unit counters, uptime    |
 //! | `GET /healthz`           | liveness                                     |
 //! | `POST /shutdown`         | begin the graceful drain                     |
+//! | `POST /units`            | enqueue shard work units (`--worker` mode)   |
+//! | `GET /units/next`        | drain completed units + queue depth          |
 //!
 //! Bodies are sniffed: a leading `{` means the JSON shape
 //! [`Scenario::to_json`] emits into manifests (so a manifest's
@@ -40,6 +42,17 @@ pub fn handle(state: &ServerState, req: &Request) -> Response {
         ("GET", ["runs", id]) => run_status(state, id),
         ("GET", ["runs", id, "results"]) => run_results(state, id),
         ("GET", ["compare", a, b]) => compare(state, a, b),
+        ("POST", ["units"]) => submit_units(state, req),
+        ("GET", ["units", "next"]) => {
+            let (results, depth) = state.units.drain_results();
+            Response::json(
+                200,
+                &Json::Obj(vec![
+                    ("results".into(), Json::Arr(results)),
+                    ("queue_depth".into(), Json::Num(depth as f64)),
+                ]),
+            )
+        }
         ("POST", ["shutdown"]) => {
             state.begin_shutdown();
             Response::json(
@@ -97,6 +110,45 @@ fn submit(state: &ServerState, req: &Request) -> Response {
             ]),
         ),
         Err(e) => Response::error(503, &e.to_string()),
+    }
+}
+
+/// `POST /units`: validate a shard batch against the daemon's config
+/// fingerprint and enqueue it for the unit executors.
+fn submit_units(state: &ServerState, req: &Request) -> Response {
+    if state.shutting_down() {
+        return Response::error(503, "server is shutting down and accepts no new units");
+    }
+    if !state.worker_mode() {
+        return Response::error(
+            400,
+            "this daemon is not running in --worker mode and executes no shard units",
+        );
+    }
+    let body = match req.body_str().and_then(|t| {
+        Json::parse(t).context("parsing the unit batch JSON")
+    }) {
+        Ok(b) => b,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    match super::worker::accept_units(state, &body) {
+        Ok(super::worker::AcceptOutcome::Accepted(accepted, depth)) => Response::json(
+            202,
+            &Json::Obj(vec![
+                ("accepted".into(), Json::Num(accepted as f64)),
+                ("queue_depth".into(), Json::Num(depth as f64)),
+            ]),
+        ),
+        Ok(super::worker::AcceptOutcome::FingerprintMismatch { ours, theirs }) => {
+            Response::error(
+                409,
+                &format!(
+                    "config fingerprint mismatch: this daemon runs {ours}, \
+                     the batch was built for {theirs}"
+                ),
+            )
+        }
+        Err(e) => Response::error(400, &e.to_string()),
     }
 }
 

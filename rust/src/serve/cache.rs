@@ -20,9 +20,9 @@ use crate::coordinator::{Coordinator, MapSearch, Prepared};
 use crate::experiment::{prepare_search, Scenario};
 use crate::report::Json;
 use crate::util::threadpool::parallel_map;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Counter snapshot for `GET /stats`.
 #[derive(Debug, Clone, Copy)]
@@ -32,6 +32,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Hits that waited on another thread's in-flight preparation of
+    /// the same key instead of redundantly preparing it themselves
+    /// (a subset of `hits`).
+    pub coalesced: u64,
 }
 
 impl CacheStats {
@@ -42,6 +46,7 @@ impl CacheStats {
             ("hits".into(), Json::Num(self.hits as f64)),
             ("misses".into(), Json::Num(self.misses as f64)),
             ("evictions".into(), Json::Num(self.evictions as f64)),
+            ("coalesced".into(), Json::Num(self.coalesced as f64)),
         ])
     }
 }
@@ -51,13 +56,29 @@ struct Entry {
     prepared: Prepared,
 }
 
+/// Once-latch for one in-flight preparation: the first thread to miss
+/// a key becomes the leader and prepares; concurrent missers of the
+/// same key wait here instead of preparing (and miss-counting) again.
+enum LatchState {
+    Pending,
+    Ready(Prepared),
+    Failed(String),
+}
+
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
 #[derive(Default)]
 struct Inner {
     map: HashMap<String, Entry>,
+    pending: HashMap<String, Arc<Latch>>,
     tick: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
+    coalesced: u64,
 }
 
 /// Thread-safe LRU of prepared workloads, shared by the executor and
@@ -154,49 +175,136 @@ impl PreparedCache {
             hits: inner.hits,
             misses: inner.misses,
             evictions: inner.evictions,
+            coalesced: inner.coalesced,
+        }
+    }
+
+    /// Look the key up and, on a miss, run `prepare` exactly once even
+    /// under concurrent missers: the first thread becomes the leader
+    /// (one miss counted), later threads wait on the per-key latch and
+    /// resolve as (coalesced) hits — the counters never double-count a
+    /// concurrent miss. Returns the prepared value and whether it was
+    /// a hit. A leader failure propagates to every waiter; waiters of
+    /// a failed preparation count neither a hit nor a miss. A capacity
+    /// of 0 disables memoization *and* deduplication (the cache is
+    /// transparent).
+    pub fn get_or_prepare<F>(&self, key: &str, prepare: F) -> Result<(Prepared, bool)>
+    where
+        F: FnOnce() -> Result<Prepared>,
+    {
+        if self.capacity == 0 {
+            {
+                let inner = &mut *self.inner.lock().expect("cache lock");
+                inner.tick += 1;
+                inner.misses += 1;
+            }
+            return Ok((prepare()?, false));
+        }
+        enum Role {
+            Hit(Prepared),
+            Waiter(Arc<Latch>),
+            Leader(Arc<Latch>),
+        }
+        let role = {
+            let inner = &mut *self.inner.lock().expect("cache lock");
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(entry) = inner.map.get_mut(key) {
+                entry.last_used = tick;
+                inner.hits += 1;
+                Role::Hit(entry.prepared.clone())
+            } else if let Some(latch) = inner.pending.get(key) {
+                Role::Waiter(latch.clone())
+            } else {
+                inner.misses += 1;
+                let latch = Arc::new(Latch {
+                    state: Mutex::new(LatchState::Pending),
+                    cv: Condvar::new(),
+                });
+                inner.pending.insert(key.to_string(), latch.clone());
+                Role::Leader(latch)
+            }
+        };
+        match role {
+            Role::Hit(p) => Ok((p, true)),
+            Role::Waiter(latch) => {
+                let mut state = latch.state.lock().expect("latch lock");
+                while matches!(*state, LatchState::Pending) {
+                    state = latch.cv.wait(state).expect("latch lock");
+                }
+                match &*state {
+                    LatchState::Ready(p) => {
+                        let inner = &mut *self.inner.lock().expect("cache lock");
+                        inner.hits += 1;
+                        inner.coalesced += 1;
+                        Ok((p.clone(), true))
+                    }
+                    LatchState::Failed(msg) => {
+                        bail!("preparation failed in a concurrent thread: {msg}")
+                    }
+                    LatchState::Pending => unreachable!("the wait loop left Pending"),
+                }
+            }
+            Role::Leader(latch) => {
+                let result = prepare();
+                self.inner
+                    .lock()
+                    .expect("cache lock")
+                    .pending
+                    .remove(key);
+                match result {
+                    Ok(p) => {
+                        self.put(key.to_string(), p.clone());
+                        *latch.state.lock().expect("latch lock") =
+                            LatchState::Ready(p.clone());
+                        latch.cv.notify_all();
+                        Ok((p, false))
+                    }
+                    Err(e) => {
+                        *latch.state.lock().expect("latch lock") =
+                            LatchState::Failed(format!("{e:#}"));
+                        latch.cv.notify_all();
+                        Err(e)
+                    }
+                }
+            }
         }
     }
 }
 
 /// [`crate::experiment::prepare_scenario`] with the cache in front:
-/// cached workloads are returned immediately, the misses are prepared
-/// in parallel (the scenario's worker resolution) and inserted.
-/// Returns the prepared workloads in scenario order plus how many came
-/// from the cache.
+/// every workload goes through [`PreparedCache::get_or_prepare`] on
+/// the worker pool (the scenario's worker resolution), so hits return
+/// immediately, misses prepare in parallel, and concurrent misses of
+/// one key — within this call or racing another caller — prepare
+/// exactly once. Returns the prepared workloads in scenario order plus
+/// how many came from the cache.
 pub fn prepare_cached(
     coord: &Coordinator,
     scenario: &Scenario,
     cache: &PreparedCache,
 ) -> Result<(Vec<Prepared>, usize)> {
     let n = scenario.workloads.len();
-    let mut slots: Vec<Option<Prepared>> = vec![None; n];
-    let mut hits = 0usize;
-    let mut missing: Vec<(usize, String, MapSearch)> = Vec::new();
-    for (i, name) in scenario.workloads.iter().enumerate() {
-        let search = prepare_search(coord, scenario, name)?;
-        let key = PreparedCache::key(name, &search);
-        match cache.get(&key) {
-            Some(p) => {
-                slots[i] = Some(p);
-                hits += 1;
-            }
-            None => missing.push((i, key, search)),
-        }
-    }
+    let searches: Vec<MapSearch> = scenario
+        .workloads
+        .iter()
+        .map(|name| prepare_search(coord, scenario, name))
+        .collect::<Result<_>>()?;
     let workers = scenario.resolved_workers(coord);
-    let prepared = parallel_map(missing.len(), workers, |j| {
-        let (i, _, search) = &missing[j];
-        coord.prepare_mapped(&scenario.workloads[*i], search)
+    let results = parallel_map(n, workers, |i| {
+        let name = &scenario.workloads[i];
+        let key = PreparedCache::key(name, &searches[i]);
+        cache.get_or_prepare(&key, || coord.prepare_mapped(name, &searches[i]))
     });
-    for ((i, key, _), result) in missing.into_iter().zip(prepared) {
-        let p = result?;
-        cache.put(key, p.clone());
-        slots[i] = Some(p);
+    let mut out = Vec::with_capacity(n);
+    let mut hits = 0usize;
+    for r in results {
+        let (p, hit) = r?;
+        if hit {
+            hits += 1;
+        }
+        out.push(p);
     }
-    let out = slots
-        .into_iter()
-        .map(|s| s.expect("every slot hit or prepared"))
-        .collect();
     Ok((out, hits))
 }
 
@@ -262,6 +370,68 @@ mod tests {
         let (_, hits) = prepare_cached(&coord, &wider, &cache).unwrap();
         assert_eq!(hits, 1);
         assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn concurrent_misses_of_one_key_prepare_once() {
+        // Satellite regression: two threads missing the same key used
+        // to both count a miss and both prepare. The once-latch makes
+        // one the leader (1 miss) and coalesces the other into a hit.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        let coord = Arc::new(coordinator());
+        let cache = Arc::new(PreparedCache::new(8));
+        let s = scenario(&["zfnet"]);
+        let search = prepare_search(&coord, &s, "zfnet").unwrap();
+        let key = PreparedCache::key("zfnet", &search);
+        let invocations = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(2));
+        let threads: Vec<_> = (0..2)
+            .map(|_| {
+                let (cache, invocations, barrier) =
+                    (cache.clone(), invocations.clone(), barrier.clone());
+                let (coord, s, key, search) =
+                    (coord.clone(), s.clone(), key.clone(), search.clone());
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    cache
+                        .get_or_prepare(&key, || {
+                            invocations.fetch_add(1, Ordering::SeqCst);
+                            // Widen the race window: the second misser
+                            // must arrive while this preparation is
+                            // still in flight.
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                            coord.prepare_mapped(&s.workloads[0], &search)
+                        })
+                        .unwrap()
+                })
+            })
+            .collect();
+        let outcomes: Vec<(Prepared, bool)> =
+            threads.into_iter().map(|t| t.join().unwrap()).collect();
+        assert_eq!(invocations.load(Ordering::SeqCst), 1, "prepared twice");
+        let stats = cache.stats();
+        assert_eq!((stats.misses, stats.hits, stats.entries), (1, 1, 1));
+        assert_eq!(stats.coalesced, 1);
+        // Both threads see the same preparation; exactly one was the
+        // (miss-counted) leader.
+        assert_eq!(
+            outcomes[0].0.wired.total_s.to_bits(),
+            outcomes[1].0.wired.total_s.to_bits()
+        );
+        assert_eq!(outcomes.iter().filter(|(_, hit)| !hit).count(), 1);
+    }
+
+    #[test]
+    fn failed_leader_propagates_to_waiters() {
+        let cache = PreparedCache::new(8);
+        let err = cache
+            .get_or_prepare("k", || bail!("artifact went missing"))
+            .unwrap_err();
+        assert!(err.to_string().contains("artifact went missing"));
+        // The latch is cleaned up: the key can be prepared again.
+        let stats = cache.stats();
+        assert_eq!((stats.misses, stats.entries), (1, 0));
     }
 
     #[test]

@@ -1,0 +1,417 @@
+//! Coordinator side of campaign sharding: stream work units to a
+//! fleet of `wisper serve --worker` daemons and collect completions.
+//!
+//! # Pull-based work stealing
+//!
+//! One dispatcher thread per worker daemon owns a persistent
+//! keep-alive [`HttpClient`] and loops:
+//!
+//! 1. **Reap** — `GET /units/next` drains completions the daemon has
+//!    finished since the last poll. Completions resolve *last-wins by
+//!    unit id*: a unit that was retransmitted may complete twice, and
+//!    the later arrival overwrites the earlier (results are
+//!    deterministic, so both are bit-identical — the counter exists to
+//!    make duplicated work visible, not to arbitrate).
+//! 2. **Adapt** — the claim window doubles (up to
+//!    [`DispatchOptions::max_batch`]) when a full window's worth of
+//!    completions came back, and halves (down to 1) after a stall of
+//!    [`DispatchOptions::steal_timeout`] with nothing reaped — a slow
+//!    daemon self-throttles to small batches instead of hoarding the
+//!    tail of the queue.
+//! 3. **Claim** — pop up to `window` unclaimed units off the shared
+//!    queue; when the queue is dry, *steal* units another worker has
+//!    held in flight longer than `steal_timeout` (oldest claim first,
+//!    counted as a retransmit). A straggler host therefore degrades
+//!    fleet throughput instead of stalling the final barrier.
+//! 4. **Post** — `POST /units` ships the claimed bodies under the
+//!    campaign envelope (fingerprint + spec + prep).
+//!
+//! A dead daemon surfaces as a request error on its dispatcher thread:
+//! the thread re-queues every unit it still holds in flight (counted
+//! as retransmits), marks itself dead, and exits — surviving workers
+//! drain the re-queued units. The dispatch only fails outright when
+//! every connection has died with units outstanding, or a worker
+//! reports a unit *evaluation* error (deterministic, so a retry would
+//! fail identically).
+
+use super::http::{client_request_timeout, HttpClient, DEFAULT_READ_TIMEOUT};
+use crate::report::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Dispatch knobs (`wisper campaign --workers ... --shard-batch N`).
+#[derive(Debug, Clone)]
+pub struct DispatchOptions {
+    /// Initial claim window per worker (doubles/halves adaptively).
+    pub batch: usize,
+    /// Upper bound the adaptive window may grow to.
+    pub max_batch: usize,
+    /// A unit held in flight longer than this is eligible for
+    /// stealing; a worker reaping nothing for this long halves its
+    /// window.
+    pub steal_timeout: Duration,
+    /// Idle sleep between polls when there is nothing to claim.
+    pub poll: Duration,
+    /// Per-read socket timeout on the persistent unit stream.
+    pub read_timeout: Duration,
+}
+
+impl Default for DispatchOptions {
+    fn default() -> Self {
+        Self {
+            batch: 2,
+            max_batch: 64,
+            steal_timeout: Duration::from_secs(10),
+            poll: Duration::from_millis(25),
+            read_timeout: DEFAULT_READ_TIMEOUT,
+        }
+    }
+}
+
+/// What one dispatcher thread saw of its worker daemon.
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub addr: String,
+    /// Unique unit completions this worker was first to return.
+    pub units: u64,
+    /// `POST /units` batches shipped.
+    pub batches: u64,
+    /// Units this worker stole from a stale claim elsewhere.
+    pub steals: u64,
+    /// Final size of the adaptive claim window.
+    pub window: usize,
+    /// False once the connection died mid-campaign.
+    pub alive: bool,
+    /// Final `GET /stats` snapshot (queue depth, executed counts,
+    /// prepare-cache hit rates); `Null` for dead workers.
+    pub stats: Json,
+}
+
+impl WorkerReport {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("addr".into(), Json::Str(self.addr.clone())),
+            ("units".into(), Json::Num(self.units as f64)),
+            ("batches".into(), Json::Num(self.batches as f64)),
+            ("steals".into(), Json::Num(self.steals as f64)),
+            ("window".into(), Json::Num(self.window as f64)),
+            ("alive".into(), Json::Bool(self.alive)),
+            ("stats".into(), self.stats.clone()),
+        ])
+    }
+}
+
+/// Everything [`dispatch_units`] hands back: one completion per unit
+/// (indexed by unit id) plus the fleet accounting for reports.
+#[derive(Debug)]
+pub struct DispatchOutcome {
+    /// `results[id]` is the completion object the worker returned for
+    /// unit `id`.
+    pub results: Vec<Json>,
+    pub workers: Vec<WorkerReport>,
+    /// Completions that arrived for an already-completed unit.
+    pub duplicates: u64,
+    /// Units re-shipped after a steal or a dead worker's re-queue.
+    pub retransmits: u64,
+}
+
+struct Claim {
+    worker: usize,
+    at: Instant,
+}
+
+struct Shared {
+    queue: VecDeque<usize>,
+    in_flight: HashMap<usize, Claim>,
+    results: Vec<Option<Json>>,
+    done: usize,
+    duplicates: u64,
+    retransmits: u64,
+    /// First unit-evaluation error: poisons the dispatch (unit errors
+    /// are deterministic, retrying elsewhere would fail identically).
+    error: Option<String>,
+}
+
+/// Fan `units` out over the worker fleet and block until every unit
+/// has a completion (or the dispatch fails). `envelope` is the shared
+/// campaign context (`fingerprint`/`spec`/`prep` fields) each batch
+/// POST carries next to its claimed unit bodies; `units[id]` must be
+/// the body whose `"id"` field is `id`.
+pub fn dispatch_units(
+    workers: &[String],
+    envelope: &Json,
+    units: &[Json],
+    opts: &DispatchOptions,
+) -> Result<DispatchOutcome> {
+    if workers.is_empty() {
+        bail!("shard dispatch needs at least one worker address");
+    }
+    if units.is_empty() {
+        bail!("shard dispatch got an empty unit list");
+    }
+    let total = units.len();
+    let shared = Mutex::new(Shared {
+        queue: (0..total).collect(),
+        in_flight: HashMap::new(),
+        results: vec![None; total],
+        done: 0,
+        duplicates: 0,
+        retransmits: 0,
+        error: None,
+    });
+
+    let mut reports: Vec<WorkerReport> = Vec::with_capacity(workers.len());
+    thread::scope(|s| {
+        let handles: Vec<_> = workers
+            .iter()
+            .enumerate()
+            .map(|(wi, addr)| {
+                let shared = &shared;
+                s.spawn(move || worker_loop(wi, addr, envelope, units, shared, opts))
+            })
+            .collect();
+        for h in handles {
+            reports.push(h.join().expect("dispatcher thread panicked"));
+        }
+    });
+
+    let sh = shared.into_inner().expect("dispatch lock");
+    if let Some(e) = sh.error {
+        bail!("shard campaign failed: {e}");
+    }
+    if sh.done < total {
+        bail!(
+            "{} of {total} units never completed: every worker connection died",
+            total - sh.done
+        );
+    }
+    let results = sh
+        .results
+        .into_iter()
+        .map(|r| r.expect("done == total fills every slot"))
+        .collect();
+    Ok(DispatchOutcome {
+        results,
+        workers: reports,
+        duplicates: sh.duplicates,
+        retransmits: sh.retransmits,
+    })
+}
+
+fn worker_loop(
+    wi: usize,
+    addr: &str,
+    envelope: &Json,
+    units: &[Json],
+    shared: &Mutex<Shared>,
+    opts: &DispatchOptions,
+) -> WorkerReport {
+    let mut report = WorkerReport {
+        addr: addr.to_string(),
+        units: 0,
+        batches: 0,
+        steals: 0,
+        window: opts.batch.max(1),
+        alive: true,
+        stats: Json::Null,
+    };
+    let mut client = match HttpClient::connect(addr, opts.read_timeout) {
+        Ok(c) => c,
+        Err(_) => {
+            report.alive = false;
+            return report;
+        }
+    };
+    let mut window = opts.batch.max(1);
+    let mut last_progress = Instant::now();
+    loop {
+        {
+            let sh = shared.lock().expect("dispatch lock");
+            if sh.error.is_some() || sh.done >= units.len() {
+                break;
+            }
+        }
+        let reaped = match reap(&mut client, shared) {
+            Ok(n) => n,
+            Err(_) => {
+                abandon(wi, shared);
+                report.alive = false;
+                report.window = window;
+                return report;
+            }
+        };
+        report.units += reaped as u64;
+        if reaped > 0 {
+            last_progress = Instant::now();
+        } else if last_progress.elapsed() > opts.steal_timeout {
+            window = (window / 2).max(1);
+            last_progress = Instant::now();
+        }
+        if reaped >= window {
+            window = (window * 2).min(opts.max_batch.max(1));
+        }
+        let claimed = claim(wi, window, shared, opts, &mut report.steals);
+        if claimed.is_empty() {
+            thread::sleep(opts.poll);
+            continue;
+        }
+        let body = batch_body(envelope, units, &claimed).render();
+        match client.request("POST", "/units", Some(&body)) {
+            Ok((202, _)) => report.batches += 1,
+            Ok((status, resp)) => {
+                // The daemon refused the batch (fingerprint mismatch,
+                // malformed spec, shutdown): deterministic, poison the
+                // dispatch rather than retry forever.
+                let msg = resp
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown error")
+                    .to_string();
+                let mut sh = shared.lock().expect("dispatch lock");
+                sh.error
+                    .get_or_insert(format!("{addr} rejected a batch ({status}): {msg}"));
+                break;
+            }
+            Err(_) => {
+                abandon(wi, shared);
+                report.alive = false;
+                report.window = window;
+                return report;
+            }
+        }
+    }
+    report.window = window;
+    // One final snapshot of the daemon's own counters for the campaign
+    // report (a one-shot request: the persistent stream stays clean).
+    if let Ok((200, stats)) =
+        client_request_timeout(addr, "GET", "/stats", None, opts.read_timeout)
+    {
+        report.stats = stats;
+    }
+    report
+}
+
+/// Drain the daemon's completion buffer into the shared result table.
+/// Returns how many *fresh* completions (first arrival for their id)
+/// this poll credited.
+fn reap(client: &mut HttpClient, shared: &Mutex<Shared>) -> Result<usize> {
+    let (status, body) = client.request("GET", "/units/next", None)?;
+    if status != 200 {
+        bail!("GET /units/next returned {status}");
+    }
+    let results = body.get("results").and_then(Json::as_arr).unwrap_or(&[]);
+    let mut fresh = 0usize;
+    if results.is_empty() {
+        return Ok(0);
+    }
+    let mut sh = shared.lock().expect("dispatch lock");
+    for r in results {
+        let id = r
+            .get("id")
+            .and_then(Json::as_f64)
+            .map(|v| v as usize)
+            .ok_or_else(|| anyhow!("completion without a unit id"))?;
+        if id >= sh.results.len() {
+            sh.error
+                .get_or_insert(format!("completion for unknown unit id {id}"));
+            break;
+        }
+        sh.in_flight.remove(&id);
+        if let Some(e) = r.get("error").and_then(Json::as_str) {
+            let msg = format!("unit {id} failed on the worker: {e}");
+            sh.error.get_or_insert(msg);
+            continue;
+        }
+        if sh.results[id].is_some() {
+            sh.duplicates += 1;
+        } else {
+            sh.done += 1;
+            fresh += 1;
+        }
+        // Last-wins: a retransmitted unit's later completion replaces
+        // the earlier one.
+        sh.results[id] = Some(r.clone());
+    }
+    Ok(fresh)
+}
+
+/// Claim up to `window` units for worker `wi`: fresh queue entries
+/// first, then stale in-flight claims of other workers (oldest first).
+fn claim(
+    wi: usize,
+    window: usize,
+    shared: &Mutex<Shared>,
+    opts: &DispatchOptions,
+    steals: &mut u64,
+) -> Vec<usize> {
+    let mut sh = shared.lock().expect("dispatch lock");
+    if sh.error.is_some() {
+        return Vec::new();
+    }
+    let mine = sh.in_flight.values().filter(|c| c.worker == wi).count();
+    let want = window.saturating_sub(mine);
+    let mut claimed = Vec::with_capacity(want);
+    for _ in 0..want {
+        match sh.queue.pop_front() {
+            Some(id) => claimed.push(id),
+            None => break,
+        }
+    }
+    if claimed.len() < want {
+        let mut stale: Vec<(Instant, usize)> = sh
+            .in_flight
+            .iter()
+            .filter(|(id, c)| {
+                c.worker != wi
+                    && c.at.elapsed() > opts.steal_timeout
+                    && sh.results[**id].is_none()
+            })
+            .map(|(id, c)| (c.at, *id))
+            .collect();
+        stale.sort_by_key(|(at, _)| *at);
+        for (_, id) in stale.into_iter().take(want - claimed.len()) {
+            claimed.push(id);
+            sh.retransmits += 1;
+            *steals += 1;
+        }
+    }
+    let now = Instant::now();
+    for &id in &claimed {
+        sh.in_flight.insert(id, Claim { worker: wi, at: now });
+    }
+    claimed
+}
+
+/// A dead worker's dispatcher re-queues everything it still holds in
+/// flight so survivors pick the units up.
+fn abandon(wi: usize, shared: &Mutex<Shared>) {
+    let mut sh = shared.lock().expect("dispatch lock");
+    let mine: Vec<usize> = sh
+        .in_flight
+        .iter()
+        .filter(|(_, c)| c.worker == wi)
+        .map(|(id, _)| *id)
+        .collect();
+    for id in mine {
+        sh.in_flight.remove(&id);
+        if sh.results[id].is_none() {
+            sh.queue.push_back(id);
+            sh.retransmits += 1;
+        }
+    }
+}
+
+fn batch_body(envelope: &Json, units: &[Json], claimed: &[usize]) -> Json {
+    let mut fields = match envelope {
+        Json::Obj(f) => f.clone(),
+        _ => Vec::new(),
+    };
+    fields.push((
+        "units".into(),
+        Json::Arr(claimed.iter().map(|&id| units[id].clone()).collect()),
+    ));
+    Json::Obj(fields)
+}

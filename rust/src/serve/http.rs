@@ -1,13 +1,23 @@
 //! Minimal HTTP/1.1 framing over `std::net` — request parsing,
-//! response writing, and a one-shot client.
+//! response writing, a one-shot client, and a persistent keep-alive
+//! client for high-rate exchanges.
 //!
 //! No HTTP crate exists in the offline vendor tree, and the daemon's
-//! needs are narrow: JSON bodies, `Content-Length` framing, one
-//! request per connection (`Connection: close` on every response).
-//! [`crate::report::Json`] is the only parser/emitter involved. The
-//! [`client_request`] helper is the same std-only surface the
-//! integration tests, the `serve_client` example and the CI smoke job
-//! drive the daemon through.
+//! needs are narrow: JSON bodies, `Content-Length` framing, and
+//! `Connection` negotiation. Plain clients get one request per
+//! connection (`Connection: close`); a client that sends
+//! `Connection: keep-alive` — the campaign shard dispatcher's unit
+//! stream — keeps the connection open so per-unit latency is not
+//! dominated by TCP setup. [`crate::report::Json`] is the only
+//! parser/emitter involved. The [`client_request`] helper is the same
+//! std-only surface the integration tests, the `serve_client` example
+//! and the CI smoke jobs drive the daemon through; [`HttpClient`] is
+//! the persistent flavor `serve::dispatch` streams work units over.
+//!
+//! Read timeouts are parametric with a 30 s default
+//! ([`DEFAULT_READ_TIMEOUT`]): long-running unit batches pass their own
+//! budget through [`client_request_timeout`] / [`HttpClient::connect`],
+//! and the server side accepts one via [`serve_connection_timeout`].
 
 use crate::report::Json;
 use anyhow::{bail, Context as _, Result};
@@ -15,15 +25,28 @@ use std::io::{BufRead as _, BufReader, Read as _, Write as _};
 use std::net::TcpStream;
 use std::time::Duration;
 
-/// Largest accepted request body (a scenario spec): 4 MiB.
+/// Largest accepted request body (a scenario spec or a unit batch):
+/// 4 MiB.
 pub const MAX_BODY_BYTES: usize = 4 << 20;
 
-/// One parsed request: method, path, raw body.
+/// Largest response body the persistent client will buffer (a drained
+/// batch of unit results, sweep grids included): 64 MiB.
+pub const MAX_RESPONSE_BYTES: usize = 64 << 20;
+
+/// Default socket read timeout, both sides. Callers with slower peers
+/// (a worker grinding through a long unit batch) pass their own.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One parsed request: method, path, raw body, and whether the peer
+/// asked to keep the connection open (`Connection: keep-alive`; absent
+/// means one-shot, preserving the original close-per-request behavior
+/// for plain clients).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    pub keep_alive: bool,
 }
 
 impl Request {
@@ -64,18 +87,23 @@ fn status_text(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
 }
 
-/// Read one request: request line, headers (only `Content-Length` is
-/// interpreted), then exactly the declared body.
-pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream);
+/// Read one request from a buffered stream: request line, headers
+/// (`Content-Length` and `Connection` are interpreted), then exactly
+/// the declared body. `Ok(None)` is a clean close: the peer hung up
+/// between requests (the normal end of a keep-alive conversation).
+fn read_request_buf(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    let n = reader.read_line(&mut line).context("reading request line")?;
+    if n == 0 {
+        return Ok(None);
+    }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_uppercase();
     let path = parts.next().unwrap_or("").to_string();
@@ -83,6 +111,7 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
         bail!("malformed request line {line:?}");
     }
     let mut content_length = 0usize;
+    let mut keep_alive = false;
     loop {
         let mut header = String::new();
         let n = reader.read_line(&mut header).context("reading header")?;
@@ -97,6 +126,9 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
                 .parse::<usize>()
                 .with_context(|| format!("bad Content-Length {:?}", v.trim()))?;
         }
+        if let Some(v) = lower.strip_prefix("connection:") {
+            keep_alive = v.trim() == "keep-alive";
+        }
     }
     if content_length > MAX_BODY_BYTES {
         bail!(
@@ -108,47 +140,130 @@ pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
     reader
         .read_exact(&mut body)
         .context("reading request body")?;
-    Ok(Request { method, path, body })
+    Ok(Some(Request {
+        method,
+        path,
+        body,
+        keep_alive,
+    }))
 }
 
-/// Write `resp` with `Connection: close` framing.
-pub fn write_response(stream: &mut TcpStream, resp: &Response) -> std::io::Result<()> {
+/// Read one request from a raw stream (one-shot path; EOF before a
+/// request line is an error here, unlike the keep-alive loop).
+pub fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let clone = stream.try_clone().context("cloning the stream")?;
+    let mut reader = BufReader::new(clone);
+    match read_request_buf(&mut reader)? {
+        Some(req) => Ok(req),
+        None => bail!("connection closed before a request line"),
+    }
+}
+
+/// Write `resp`; `keep_alive` selects the `Connection` header (echoing
+/// the request's wish back, so one-shot clients still see `close`).
+pub fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
         resp.status,
         status_text(resp.status),
-        resp.body.len()
+        resp.body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
     );
     stream.write_all(head.as_bytes())?;
     stream.write_all(resp.body.as_bytes())?;
     stream.flush()
 }
 
-/// Handle one accepted connection: one request in, one response out.
-/// Parse failures become a 400; I/O failures on the way out are
-/// dropped (the peer is gone).
-pub fn serve_connection<F: Fn(&Request) -> Response>(mut stream: TcpStream, handle: F) {
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
-    let resp = match read_request(&mut stream) {
-        Ok(req) => handle(&req),
-        Err(e) => Response::error(400, &e.to_string()),
-    };
-    let _ = write_response(&mut stream, &resp);
+fn is_io_silence(err: &anyhow::Error) -> bool {
+    err.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(|e| {
+            matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+            )
+        })
+        .unwrap_or(false)
 }
 
-/// One-shot std-only client: send `method path` with an optional body,
-/// return `(status, parsed JSON body)`. The server closes the
-/// connection after one exchange, so the whole response is read to
-/// EOF.
+/// Handle one accepted connection with the default 30 s read timeout.
+pub fn serve_connection<F: Fn(&Request) -> Response>(stream: TcpStream, handle: F) {
+    serve_connection_timeout(stream, DEFAULT_READ_TIMEOUT, handle)
+}
+
+/// Handle one accepted connection: requests in, responses out, looping
+/// while the peer asks `Connection: keep-alive` (the shard unit
+/// stream). Parse failures become a 400 and close; timeouts, resets
+/// and clean EOFs close silently (the peer is gone or idle too long).
+pub fn serve_connection_timeout<F: Fn(&Request) -> Response>(
+    mut stream: TcpStream,
+    read_timeout: Duration,
+    handle: F,
+) {
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let reader_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_half);
+    loop {
+        match read_request_buf(&mut reader) {
+            Ok(None) => return,
+            Ok(Some(req)) => {
+                let keep = req.keep_alive;
+                let resp = handle(&req);
+                if write_response(&mut stream, &resp, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Err(e) => {
+                if !is_io_silence(&e) {
+                    let _ = write_response(
+                        &mut stream,
+                        &Response::error(400, &e.to_string()),
+                        false,
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// One-shot std-only client with the default 30 s read timeout.
 pub fn client_request(
     addr: &str,
     method: &str,
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, Json)> {
+    client_request_timeout(addr, method, path, body, DEFAULT_READ_TIMEOUT)
+}
+
+/// One-shot std-only client: send `method path` with an optional body,
+/// return `(status, parsed JSON body)`. The server closes the
+/// connection after one exchange, so the whole response is read to
+/// EOF; a peer slower than `read_timeout` is an error, not a hang.
+pub fn client_request_timeout(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    read_timeout: Duration,
+) -> Result<(u16, Json)> {
     let mut stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+    stream
+        .set_read_timeout(Some(read_timeout))
+        .context("setting the read timeout")?;
     let body = body.unwrap_or("");
     let head = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\n\
@@ -176,6 +291,106 @@ pub fn client_request(
     Ok((status, doc))
 }
 
+/// Persistent keep-alive client: one TCP connection, many
+/// request/response exchanges — the unit stream between the shard
+/// dispatcher and a worker daemon. Responses are framed by
+/// `Content-Length` (reading to EOF would block forever on a live
+/// connection). Any I/O or framing error poisons the client; the
+/// dispatcher treats that as a dead worker and re-queues its units.
+pub struct HttpClient {
+    addr: String,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect with the given per-read timeout (a worker grinding
+    /// through a batch must answer `GET /units/next` within it).
+    pub fn connect(addr: &str, read_timeout: Duration) -> Result<Self> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .context("setting the read timeout")?;
+        let reader_half = stream.try_clone().context("cloning the stream")?;
+        Ok(Self {
+            addr: addr.to_string(),
+            stream,
+            reader: BufReader::new(reader_half),
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One exchange on the persistent connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, Json)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\n\
+             Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading response status line")?;
+        if n == 0 {
+            bail!("server {} closed the connection", self.addr);
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("malformed response status line {line:?}"))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut header = String::new();
+            let n = self.reader.read_line(&mut header).context("reading header")?;
+            let header = header.trim_end();
+            if n == 0 || header.is_empty() {
+                break;
+            }
+            let lower = header.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v
+                    .trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad Content-Length {:?}", v.trim()))?;
+            }
+        }
+        if content_length > MAX_RESPONSE_BYTES {
+            bail!(
+                "response body of {content_length} bytes exceeds the \
+                 {MAX_RESPONSE_BYTES}-byte cap"
+            );
+        }
+        let mut payload = vec![0u8; content_length];
+        self.reader
+            .read_exact(&mut payload)
+            .context("reading response body")?;
+        let text = std::str::from_utf8(&payload).context("response body is not UTF-8")?;
+        let doc = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(text).with_context(|| format!("parsing response body {text:?}"))?
+        };
+        Ok((status, doc))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +408,7 @@ mod tests {
             serve_connection(stream, |req| {
                 assert_eq!(req.method, "POST");
                 assert_eq!(req.path, "/echo");
+                assert!(!req.keep_alive);
                 let text = req.body_str().unwrap().to_string();
                 Response::json(202, &Json::Obj(vec![("got".into(), Json::Str(text))]))
             });
@@ -225,6 +441,73 @@ mod tests {
         stream.read_to_string(&mut raw).unwrap();
         assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
         assert!(raw.contains("error"), "{raw}");
+        server.join().unwrap();
+    }
+
+    /// A `Connection: keep-alive` client gets many exchanges over one
+    /// connection; the server echoes the keep-alive header back.
+    #[test]
+    fn keep_alive_streams_many_requests_over_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            serve_connection(stream, |req| {
+                assert!(req.keep_alive);
+                Response::json(
+                    200,
+                    &Json::Obj(vec![(
+                        "path".into(),
+                        Json::Str(req.path.clone()),
+                    )]),
+                )
+            });
+        });
+        let mut client =
+            HttpClient::connect(&addr.to_string(), DEFAULT_READ_TIMEOUT).unwrap();
+        for i in 0..5 {
+            let path = format!("/seq/{i}");
+            let (status, doc) = client.request("GET", &path, None).unwrap();
+            assert_eq!(status, 200);
+            assert_eq!(doc.get("path").and_then(Json::as_str), Some(path.as_str()));
+        }
+        drop(client); // clean EOF ends the server loop
+        server.join().unwrap();
+    }
+
+    /// Satellite regression: the read timeout is a parameter. A slow
+    /// responder trips a short client timeout but succeeds under a
+    /// budget that covers its delay.
+    #[test]
+    fn slow_responder_respects_configured_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (stream, _) = listener.accept().unwrap();
+                std::thread::sleep(Duration::from_millis(300));
+                serve_connection(stream, |_| Response::json(200, &Json::Null));
+            }
+        });
+        let err = client_request_timeout(
+            &addr,
+            "GET",
+            "/healthz",
+            None,
+            Duration::from_millis(50),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("reading response"), "{msg}");
+        let (status, _) = client_request_timeout(
+            &addr,
+            "GET",
+            "/healthz",
+            None,
+            Duration::from_secs(10),
+        )
+        .unwrap();
+        assert_eq!(status, 200);
         server.join().unwrap();
     }
 }

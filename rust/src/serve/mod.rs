@@ -23,6 +23,11 @@
 //!   its pre-allocated id via `RunStore::save_as`.
 //! * **Watcher** (optional, `--watch-dir`) — [`reload::watch_loop`]
 //!   polls a directory of scenario TOMLs and re-enqueues changed files.
+//! * **Shard executors** (`--worker`) — resident threads draining the
+//!   [`worker::UnitQueue`] of campaign work units streamed in by a
+//!   remote dispatcher ([`dispatch`]) over `POST /units` /
+//!   `GET /units/next`, each completion bit-identical to the local
+//!   campaign pool's.
 //!
 //! Shutdown is graceful by construction: SIGINT/SIGTERM (or
 //! `POST /shutdown`) flips one flag; submissions start failing with
@@ -32,9 +37,11 @@
 
 pub mod api;
 pub mod cache;
+pub mod dispatch;
 pub mod http;
 pub mod reload;
 pub mod state;
+pub mod worker;
 
 use crate::coordinator::Coordinator;
 use crate::experiment::RunStore;
@@ -60,6 +67,11 @@ pub struct ServeOptions {
     pub cache_entries: usize,
     /// Directory whose `*.toml` scenarios are hot-reloaded.
     pub watch_dir: Option<PathBuf>,
+    /// Run shard unit executors: accept campaign work units over
+    /// `POST /units` and execute them on resident threads.
+    pub worker: bool,
+    /// Unit executor threads in `--worker` mode (0 = machine default).
+    pub exec_threads: usize,
 }
 
 impl Default for ServeOptions {
@@ -69,6 +81,8 @@ impl Default for ServeOptions {
             threads: 0,
             cache_entries: 32,
             watch_dir: None,
+            worker: false,
+            exec_threads: 0,
         }
     }
 }
@@ -81,6 +95,8 @@ pub struct Server {
     accept: Option<thread::JoinHandle<()>>,
     executor: Option<thread::JoinHandle<()>>,
     watcher: Option<thread::JoinHandle<()>>,
+    /// Shard unit executors (`--worker` mode); empty otherwise.
+    unit_executors: Vec<thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -94,11 +110,29 @@ impl Server {
             .set_nonblocking(true)
             .context("setting the listener non-blocking")?;
         let addr = listener.local_addr().context("reading the bound address")?;
-        let state = Arc::new(ServerState::new(coord, store, opts.cache_entries));
+        let state = Arc::new(
+            ServerState::new(coord, store, opts.cache_entries)
+                .with_worker_mode(opts.worker),
+        );
 
         let executor = {
             let st = Arc::clone(&state);
             thread::spawn(move || st.executor_loop())
+        };
+        let unit_executors = if opts.worker {
+            let n = if opts.exec_threads > 0 {
+                opts.exec_threads
+            } else {
+                crate::util::threadpool::default_workers()
+            };
+            (0..n)
+                .map(|_| {
+                    let st = Arc::clone(&state);
+                    thread::spawn(move || worker::unit_executor_loop(&st))
+                })
+                .collect()
+        } else {
+            Vec::new()
         };
         let threads = if opts.threads > 0 { opts.threads } else { 4 };
         let accept = {
@@ -117,6 +151,7 @@ impl Server {
             accept: Some(accept),
             executor: Some(executor),
             watcher,
+            unit_executors,
         })
     }
 
@@ -140,6 +175,7 @@ impl Server {
         ]
         .into_iter()
         .flatten()
+        .chain(self.unit_executors.drain(..))
         {
             let _ = handle.join();
         }

@@ -11,6 +11,7 @@
 //! is empty — every accepted run finishes and persists its record.
 
 use super::cache::{self, PreparedCache};
+use super::worker::UnitQueue;
 use crate::coordinator::Coordinator;
 use crate::experiment::{self, RunStore, Scenario};
 use crate::report::Json;
@@ -106,12 +107,16 @@ pub struct ServerState {
     pub coord: Coordinator,
     pub store: RunStore,
     pub cache: PreparedCache,
+    /// Shard work units (`POST /units` → executor threads →
+    /// `GET /units/next`), live in `--worker` mode.
+    pub units: UnitQueue,
     runs: Mutex<Vec<RunState>>,
     queue: Mutex<VecDeque<String>>,
     queue_cv: Condvar,
     shutdown: AtomicBool,
     seq: AtomicU64,
     started_unix: f64,
+    worker_mode: bool,
 }
 
 fn unix_now() -> f64 {
@@ -127,13 +132,27 @@ impl ServerState {
             coord,
             store,
             cache: PreparedCache::new(cache_entries),
+            units: UnitQueue::default(),
             runs: Mutex::new(Vec::new()),
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             seq: AtomicU64::new(0),
             started_unix: unix_now(),
+            worker_mode: false,
         }
+    }
+
+    /// Mark this daemon as a shard worker (executors will drain the
+    /// unit queue; `POST /units` is accepted).
+    pub fn with_worker_mode(mut self, worker: bool) -> Self {
+        self.worker_mode = worker;
+        self
+    }
+
+    /// Does this daemon run shard unit executors?
+    pub fn worker_mode(&self) -> bool {
+        self.worker_mode
     }
 
     pub fn shutting_down(&self) -> bool {
@@ -145,6 +164,7 @@ impl ServerState {
     pub fn begin_shutdown(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
         self.queue_cv.notify_all();
+        self.units.wake_all();
     }
 
     /// Queue a validated scenario; returns the run id clients poll.
@@ -223,6 +243,7 @@ impl ServerState {
                 ]),
             ),
             ("cache".into(), self.cache.stats().to_json()),
+            ("units".into(), self.units.stats_json()),
         ])
     }
 

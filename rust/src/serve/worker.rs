@@ -1,0 +1,298 @@
+//! Worker side of campaign sharding (`wisper serve --worker`): a unit
+//! queue fed by `POST /units`, drained by resident executor threads,
+//! with completions buffered for the dispatcher's `GET /units/next`
+//! polls.
+//!
+//! A batch carries the campaign envelope (config fingerprint, the
+//! [`CampaignSpec`] axes, the [`ShardPrep`] knobs) plus bare
+//! `(id, workload, bandwidth-index)` unit bodies — no tensors travel.
+//! Each unit re-derives its preparation through
+//! [`crate::dse::shard::worker_search`] (memoized in the daemon's
+//! [`super::cache::PreparedCache`], so a workload's N bandwidth units
+//! prepare once) and evaluates through
+//! [`crate::dse::campaign::evaluate_campaign_unit`] — the same
+//! primitive the local campaign pool calls, which is what makes
+//! sharded results bit-identical to local ones.
+//!
+//! Shutdown mirrors the run queue's drain semantics: `begin_shutdown`
+//! refuses new batches (HTTP 503) while the executors finish every
+//! queued unit, so a SIGINT'd worker never drops accepted work.
+
+use super::state::ServerState;
+use crate::dse::campaign::{
+    evaluate_campaign_unit, wire_str, wire_usize, CampaignSpec, CampaignWorkload,
+    ComapInput,
+};
+use crate::dse::shard::{config_fingerprint, worker_search, ShardPrep};
+use crate::report::Json;
+use crate::runtime::Runtime;
+use crate::serve::cache::PreparedCache;
+use crate::util::anneal::derive_seed;
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The shared context of one accepted batch: every unit in the batch
+/// points at it instead of re-parsing the envelope.
+#[derive(Debug)]
+pub struct ShardBatch {
+    pub spec: CampaignSpec,
+    pub prep: ShardPrep,
+}
+
+/// One queued work unit.
+#[derive(Debug, Clone)]
+pub struct QueuedUnit {
+    pub id: u64,
+    pub workload: String,
+    /// Index into `batch.spec.bandwidths`.
+    pub bw: usize,
+    pub batch: Arc<ShardBatch>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queue: VecDeque<QueuedUnit>,
+    /// Completions not yet drained by a `GET /units/next` poll.
+    results: Vec<Json>,
+    executed: u64,
+    batches: u64,
+    errors: u64,
+}
+
+/// The daemon's unit queue: batches in, completions out, counters on
+/// `GET /stats`.
+#[derive(Default)]
+pub struct UnitQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl UnitQueue {
+    /// Enqueue a batch's units; returns the new queue depth.
+    pub fn push_batch(&self, units: Vec<QueuedUnit>) -> usize {
+        let mut inner = self.inner.lock().expect("unit queue lock");
+        inner.batches += 1;
+        inner.queue.extend(units);
+        let depth = inner.queue.len();
+        self.cv.notify_all();
+        depth
+    }
+
+    /// Pop the next unit, blocking until one arrives or `shutting_down`
+    /// turns true. Like the run queue, shutdown drains: `None` only
+    /// once the queue is empty.
+    pub fn next(&self, shutting_down: impl Fn() -> bool) -> Option<QueuedUnit> {
+        let mut inner = self.inner.lock().expect("unit queue lock");
+        loop {
+            if let Some(u) = inner.queue.pop_front() {
+                return Some(u);
+            }
+            if shutting_down() {
+                return None;
+            }
+            inner = self.cv.wait(inner).expect("unit queue lock");
+        }
+    }
+
+    /// Record one completion (or failure) for the next drain.
+    pub fn complete(&self, result: Json, failed: bool) {
+        let mut inner = self.inner.lock().expect("unit queue lock");
+        inner.executed += 1;
+        if failed {
+            inner.errors += 1;
+        }
+        inner.results.push(result);
+    }
+
+    /// Take every buffered completion; returns them plus the current
+    /// queue depth (the dispatcher's backpressure signal).
+    pub fn drain_results(&self) -> (Vec<Json>, usize) {
+        let mut inner = self.inner.lock().expect("unit queue lock");
+        (std::mem::take(&mut inner.results), inner.queue.len())
+    }
+
+    /// Wake blocked executors (shutdown).
+    pub fn wake_all(&self) {
+        self.cv.notify_all();
+    }
+
+    /// The `units` section of `GET /stats`.
+    pub fn stats_json(&self) -> Json {
+        let inner = self.inner.lock().expect("unit queue lock");
+        Json::Obj(vec![
+            ("queue_depth".into(), Json::Num(inner.queue.len() as f64)),
+            (
+                "results_pending".into(),
+                Json::Num(inner.results.len() as f64),
+            ),
+            ("executed".into(), Json::Num(inner.executed as f64)),
+            ("batches".into(), Json::Num(inner.batches as f64)),
+            ("errors".into(), Json::Num(inner.errors as f64)),
+        ])
+    }
+}
+
+/// How `POST /units` resolved.
+pub enum AcceptOutcome {
+    /// `(accepted, queue_depth)`.
+    Accepted(usize, usize),
+    /// The daemon's config fingerprint disagrees with the batch's
+    /// (HTTP 409: running these units would produce silently wrong
+    /// numbers).
+    FingerprintMismatch { ours: String, theirs: String },
+}
+
+/// Validate and enqueue one `POST /units` batch.
+pub fn accept_units(state: &ServerState, body: &Json) -> Result<AcceptOutcome> {
+    let theirs = wire_str(body, "fingerprint")?.to_string();
+    let ours = config_fingerprint(&state.coord.cfg);
+    if theirs != ours {
+        return Ok(AcceptOutcome::FingerprintMismatch { ours, theirs });
+    }
+    let spec = CampaignSpec::from_wire(
+        body.get("spec")
+            .ok_or_else(|| anyhow::anyhow!("batch carries no \"spec\""))?,
+    )?;
+    spec.validate()?;
+    let prep = ShardPrep::from_wire(
+        body.get("prep")
+            .ok_or_else(|| anyhow::anyhow!("batch carries no \"prep\""))?,
+    )?;
+    let raw = body
+        .get("units")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("batch carries no \"units\" array"))?;
+    if raw.is_empty() {
+        bail!("batch carries an empty unit list");
+    }
+    let nb = spec.bandwidths.len();
+    let batch = Arc::new(ShardBatch { spec, prep });
+    let mut units = Vec::with_capacity(raw.len());
+    for u in raw {
+        let bw = wire_usize(u, "bw")?;
+        if bw >= nb {
+            bail!("unit bandwidth index {bw} out of bounds ({nb} bandwidths)");
+        }
+        units.push(QueuedUnit {
+            id: wire_usize(u, "id")? as u64,
+            workload: wire_str(u, "workload")?.to_string(),
+            bw,
+            batch: Arc::clone(&batch),
+        });
+    }
+    let accepted = units.len();
+    let depth = state.units.push_batch(units);
+    Ok(AcceptOutcome::Accepted(accepted, depth))
+}
+
+/// One resident executor thread: claim units off the queue until
+/// shutdown drains it. The runtime is built lazily on the first unit
+/// and reused for every unit this thread executes (artifact
+/// compilation amortizes exactly like the local pool's
+/// per-worker-thread runtimes).
+pub fn unit_executor_loop(state: &ServerState) {
+    let mut runtime: Option<Runtime> = None;
+    while let Some(unit) = state.units.next(|| state.shutting_down()) {
+        let outcome = execute_unit(state, &mut runtime, &unit);
+        match outcome {
+            Ok(result) => state.units.complete(result, false),
+            Err(e) => state.units.complete(
+                Json::Obj(vec![
+                    ("id".into(), Json::Num(unit.id as f64)),
+                    ("workload".into(), Json::Str(unit.workload.clone())),
+                    ("error".into(), Json::Str(e.to_string())),
+                ]),
+                true,
+            ),
+        }
+    }
+}
+
+/// Prepare (through the daemon's memoizing cache) and evaluate one
+/// unit; the completion body carries the unit's full wire-serialized
+/// outcome plus the workload's wired baseline for the dispatcher's
+/// cross-shard consistency check.
+fn execute_unit(
+    state: &ServerState,
+    runtime: &mut Option<Runtime>,
+    unit: &QueuedUnit,
+) -> Result<Json> {
+    let spec = &unit.batch.spec;
+    let search = worker_search(&unit.batch.prep, spec, &unit.workload);
+    let key = PreparedCache::key(&unit.workload, &search);
+    let (p, _hit) = state
+        .cache
+        .get_or_prepare(&key, || state.coord.prepare_mapped(&unit.workload, &search))?;
+    if runtime.is_none() {
+        *runtime = Some(state.coord.runtime()?);
+    }
+    let rt = runtime.as_ref().expect("runtime just built");
+    let elig = state.coord.eligibility();
+    let cw = CampaignWorkload {
+        name: p.workload.name.clone(),
+        tensors: &p.tensors,
+        t_wired: Some(p.wired.total_s),
+        comap: spec.comap.map(|_| ComapInput {
+            workload: &p.workload,
+            pkg: &state.coord.pkg,
+            elig: elig.clone(),
+            base: &p.mapping,
+            // Identical to the local path's comap seeding
+            // (`campaign_prepared`): derive from the spec's base seed
+            // per workload, offset from the mapping seed.
+            seed: derive_seed(spec.map_seed, &p.workload.name).wrapping_add(1),
+        }),
+    };
+    let ue = evaluate_campaign_unit(rt, &cw, spec, spec.bandwidths[unit.bw])?;
+    Ok(Json::Obj(vec![
+        ("id".into(), Json::Num(unit.id as f64)),
+        ("workload".into(), Json::Str(unit.workload.clone())),
+        ("t_wired".into(), Json::Num(p.wired.total_s)),
+        ("unit".into(), ue.to_wire()),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(id: u64, batch: &Arc<ShardBatch>) -> QueuedUnit {
+        QueuedUnit {
+            id,
+            workload: "zfnet".into(),
+            bw: 0,
+            batch: Arc::clone(batch),
+        }
+    }
+
+    #[test]
+    fn queue_drains_fifo_and_counts() {
+        let q = UnitQueue::default();
+        let batch = Arc::new(ShardBatch {
+            spec: CampaignSpec::default(),
+            prep: ShardPrep {
+                optimize: false,
+                iters: 0,
+                temp_frac: 0.25,
+                seed: 1,
+            },
+        });
+        assert_eq!(q.push_batch(vec![unit(0, &batch), unit(1, &batch)]), 2);
+        let a = q.next(|| false).unwrap();
+        let b = q.next(|| false).unwrap();
+        assert_eq!((a.id, b.id), (0, 1));
+        // Empty + shutting down → None (drain semantics).
+        assert!(q.next(|| true).is_none());
+        q.complete(Json::Obj(vec![("id".into(), Json::Num(0.0))]), false);
+        q.complete(Json::Obj(vec![("id".into(), Json::Num(1.0))]), true);
+        let (results, depth) = q.drain_results();
+        assert_eq!((results.len(), depth), (2, 0));
+        let stats = q.stats_json();
+        assert_eq!(stats.get("executed").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(stats.get("batches").and_then(Json::as_f64), Some(1.0));
+        // Drained: a second poll sees nothing.
+        assert_eq!(q.drain_results().0.len(), 0);
+    }
+}

@@ -152,6 +152,70 @@ pub fn write_trajectory(
     write_json(path, &trajectory_json(records))
 }
 
+/// One fleet-size entry of a strong-scaling curve: throughput at
+/// `workers` workers relative to the single-worker baseline
+/// (`benches/shard_scaling.rs` persists these as
+/// `BENCH_shard_scaling.json`).
+#[derive(Debug, Clone)]
+pub struct ScalingRecord {
+    pub name: String,
+    pub workers: usize,
+    /// Completed work units per second at this fleet size.
+    pub units_per_sec: f64,
+    /// Throughput over the 1-worker throughput.
+    pub speedup_vs_one: f64,
+    /// `speedup_vs_one / workers` — 1.0 is perfect strong scaling.
+    pub efficiency: f64,
+}
+
+impl ScalingRecord {
+    /// Build the record for `workers` workers given both throughputs.
+    pub fn from_throughput(
+        name: &str,
+        workers: usize,
+        units_per_sec: f64,
+        baseline_units_per_sec: f64,
+    ) -> ScalingRecord {
+        let speedup = units_per_sec / baseline_units_per_sec;
+        ScalingRecord {
+            name: name.to_string(),
+            workers,
+            units_per_sec,
+            speedup_vs_one: speedup,
+            efficiency: speedup / workers.max(1) as f64,
+        }
+    }
+}
+
+/// The `BENCH_shard_scaling.json` document: bench name ->
+/// `{workers, units_per_sec, speedup_vs_one, efficiency}`.
+pub fn scaling_json(records: &[ScalingRecord]) -> Json {
+    Json::Obj(
+        records
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    Json::Obj(vec![
+                        ("workers".into(), Json::Num(r.workers as f64)),
+                        ("units_per_sec".into(), Json::Num(r.units_per_sec)),
+                        ("speedup_vs_one".into(), Json::Num(r.speedup_vs_one)),
+                        ("efficiency".into(), Json::Num(r.efficiency)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Persist a scaling curve (see [`scaling_json`]) to `path`.
+pub fn write_scaling(
+    path: &Path,
+    records: &[ScalingRecord],
+) -> std::io::Result<()> {
+    write_json(path, &scaling_json(records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +271,18 @@ mod tests {
         let r = BenchRecord::from_pair("anneal", 100.0, &ms(4e6), &ms(1e6));
         assert!((r.iters_per_sec - 1e5).abs() < 1e-6);
         assert!((r.speedup_vs_full - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_record_efficiency() {
+        // 2 workers at 1.8x the single-worker throughput: 90% efficient.
+        let r = ScalingRecord::from_throughput("shard_scaling/2", 2, 18.0, 10.0);
+        assert!((r.speedup_vs_one - 1.8).abs() < 1e-12);
+        assert!((r.efficiency - 0.9).abs() < 1e-12);
+        let doc = Json::parse(&scaling_json(&[r]).render()).unwrap();
+        let e = doc.get("shard_scaling/2").unwrap();
+        assert_eq!(e.get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(e.get("speedup_vs_one").unwrap().as_f64(), Some(1.8));
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn start_server(store_dir: &std::path::Path, watch: Option<&std::path::Path>) ->
         threads: 2,
         cache_entries: 8,
         watch_dir: watch.map(|p| p.to_path_buf()),
+        ..ServeOptions::default()
     };
     Server::start(coordinator(), RunStore::at(store_dir), opts).unwrap()
 }

@@ -1,0 +1,391 @@
+//! End-to-end campaign sharding: boot real `--worker` daemons on
+//! ephemeral loopback ports, stream a campaign through
+//! [`run_campaign_sharded`], and assert the fold is *byte-identical*
+//! to the local pool path — the determinism contract the shard wire is
+//! built around — including while a worker dies mid-campaign and its
+//! in-flight units are re-queued onto the survivor.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use wisper::config::Config;
+use wisper::coordinator::Coordinator;
+use wisper::dse::shard::{run_campaign_local, ShardPrep};
+use wisper::dse::{run_campaign_sharded, CampaignSpec};
+use wisper::experiment::{self, RunStore, Scenario};
+use wisper::report::Json;
+use wisper::serve::dispatch::DispatchOptions;
+use wisper::serve::http::{self, client_request, Response};
+use wisper::serve::{ServeOptions, Server};
+use wisper::sim::policy::PolicySpec;
+use wisper::workloads::WORKLOAD_NAMES;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("wisper_shard_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn start_worker(cfg: &Config, dir: &std::path::Path) -> Server {
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        cache_entries: 32,
+        watch_dir: None,
+        worker: true,
+        exec_threads: 2,
+    };
+    Server::start(Coordinator::new(cfg.clone()).unwrap(), RunStore::at(dir), opts)
+        .unwrap()
+}
+
+/// Units here complete in microseconds; poll fast so the test does not
+/// spend its wall-clock in the dispatcher's idle sleep.
+fn dispatch_opts() -> DispatchOptions {
+    DispatchOptions {
+        batch: 2,
+        poll: Duration::from_millis(2),
+        ..DispatchOptions::default()
+    }
+}
+
+/// Unoptimized preparation: deterministic layer-sequential mappings,
+/// no annealing — the tensors are still real, just cheap to build.
+fn shard_prep() -> ShardPrep {
+    ShardPrep {
+        optimize: false,
+        iters: 0,
+        temp_frac: 0.25,
+        seed: 0xC0DE,
+    }
+}
+
+/// The acceptance bar: every paper workload, sharded over two live
+/// daemons, folds to the byte-exact JSON the local pool produces.
+#[test]
+fn sharded_campaign_bit_identical_across_all_paper_workloads() {
+    let cfg = Config::default();
+    let coord = Coordinator::new(cfg.clone()).unwrap();
+    let names: Vec<String> =
+        WORKLOAD_NAMES.iter().map(|s| s.to_string()).collect();
+    let spec = CampaignSpec {
+        thresholds: vec![1, 2],
+        pinjs: vec![0.2, 0.4],
+        bandwidths: vec![64e9, 96e9],
+        policies: vec![
+            PolicySpec::parse("static").unwrap(),
+            PolicySpec::parse("greedy").unwrap(),
+        ],
+        workers: 2,
+        ..CampaignSpec::default()
+    };
+    let prep = shard_prep();
+    let local = run_campaign_local(&coord, &names, &spec, &prep).unwrap();
+
+    let dir = tmpdir("identity");
+    let fleet: Vec<Server> = (0..2)
+        .map(|i| start_worker(&cfg, &dir.join(format!("w{i}"))))
+        .collect();
+    let addrs: Vec<String> =
+        fleet.iter().map(|s| s.addr().to_string()).collect();
+    let (sharded, report) =
+        run_campaign_sharded(&coord, &names, &spec, &prep, &addrs, &dispatch_opts())
+            .unwrap();
+
+    assert_eq!(
+        local.to_json().render(),
+        sharded.to_json().render(),
+        "sharded fold diverged from the local pool"
+    );
+
+    // Fleet accounting: every unit completed exactly once, both
+    // daemons stayed alive, and each returned a final /stats snapshot
+    // with unit-executor counters.
+    let total = names.len() * spec.bandwidths.len();
+    assert_eq!(report.units, total);
+    assert_eq!(report.duplicates, 0);
+    assert_eq!(report.workers.len(), 2);
+    let executed: u64 = report.workers.iter().map(|w| w.units).sum();
+    assert_eq!(executed as usize, total);
+    for w in &report.workers {
+        assert!(w.alive, "worker {} died", w.addr);
+        assert!(w.batches >= 1, "worker {} shipped no batches", w.addr);
+        let executed_units = w
+            .stats
+            .get("units")
+            .and_then(|u| u.get("executed"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        assert!(
+            executed_units >= 1.0,
+            "worker {} stats missing executed units: {}",
+            w.addr,
+            w.stats.render()
+        );
+    }
+
+    for s in fleet {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The scenario-level path (`--workers hostA,hostB` on a campaign
+/// experiment): the sharded output only *appends* — JSON equal after
+/// stripping the `shard` key, CSVs identical, the local metrics and
+/// text are strict prefixes of the sharded ones.
+#[test]
+fn campaign_experiment_shard_path_only_appends_to_local_output() {
+    let mut cfg = Config::default();
+    cfg.mapper.sa_iters = 0;
+    let coord = Coordinator::new(cfg.clone()).unwrap();
+
+    let build = |shard_addrs: &[String]| -> Scenario {
+        let mut b = Scenario::builder(&cfg)
+            .workloads(["zfnet", "alexnet", "googlenet"])
+            .experiments(["campaign"])
+            .bandwidths(&[64e9, 96e9])
+            .thresholds(&[1, 2])
+            .injection_probs(&[0.2, 0.4])
+            .policies(["static", "greedy"])
+            .optimize(false)
+            .workers(2);
+        if !shard_addrs.is_empty() {
+            b = b.shard_workers(shard_addrs.to_vec()).shard_batch(2);
+        }
+        b.build().unwrap()
+    };
+
+    let local_run = experiment::run_scenario(&coord, &build(&[])).unwrap();
+
+    let dir = tmpdir("scenario");
+    let fleet: Vec<Server> = (0..2)
+        .map(|i| start_worker(&cfg, &dir.join(format!("w{i}"))))
+        .collect();
+    let addrs: Vec<String> =
+        fleet.iter().map(|s| s.addr().to_string()).collect();
+    let shard_run = experiment::run_scenario(&coord, &build(&addrs)).unwrap();
+
+    let (lname, lout) = &local_run.outputs[0];
+    let (sname, sout) = &shard_run.outputs[0];
+    assert_eq!(lname, "campaign");
+    assert_eq!(sname, "campaign");
+
+    // Text: the shared report is a strict prefix, then the fleet lines.
+    assert!(
+        sout.text.starts_with(&lout.text),
+        "sharded text rewrote the shared report"
+    );
+    assert!(sout.text.contains("sharded over 2 workers"));
+
+    // JSON: byte-equal once the appended "shard" section is stripped.
+    assert!(sout.json.get("shard").is_some());
+    let stripped = match sout.json.clone() {
+        Json::Obj(fields) => Json::Obj(
+            fields.into_iter().filter(|(k, _)| k != "shard").collect(),
+        ),
+        other => other,
+    };
+    assert_eq!(lout.json.render(), stripped.render());
+
+    // CSV artifacts (sweep grid, policy table, heatmap inputs) are the
+    // same bytes either way.
+    assert_eq!(lout.csvs.len(), sout.csvs.len());
+    for (a, b) in lout.csvs.iter().zip(&sout.csvs) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.headers, b.headers);
+        assert_eq!(a.rows, b.rows);
+    }
+
+    // Metrics: local is a prefix; everything appended is shard/*.
+    assert!(sout.metrics.len() > lout.metrics.len());
+    assert_eq!(&sout.metrics[..lout.metrics.len()], &lout.metrics[..]);
+    assert!(sout.metrics[lout.metrics.len()..]
+        .iter()
+        .all(|(k, _)| k.starts_with("shard/")));
+
+    for s in fleet {
+        s.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A worker that speaks the real wire protocol (via `serve::http`'s own
+/// framing), accepts exactly one batch, then drops the connection with
+/// the units unexecuted — the deterministic stand-in for a host dying
+/// mid-campaign. Its death is causally ordered *after* a successful
+/// claim, so the dispatcher is guaranteed to hold in-flight units to
+/// re-queue.
+fn start_dying_worker() -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        loop {
+            let req = match http::read_request(&mut stream) {
+                Ok(r) => r,
+                Err(_) => return, // dispatcher hung up first
+            };
+            if req.method == "POST" {
+                let doc = Json::Obj(vec![
+                    ("accepted".into(), Json::Num(1.0)),
+                    ("queue_depth".into(), Json::Num(1.0)),
+                ]);
+                let _ = http::write_response(
+                    &mut stream,
+                    &Response::json(202, &doc),
+                    false,
+                );
+                return; // die holding the batch
+            }
+            // Reap polls see an idle, empty worker.
+            let doc = Json::Obj(vec![
+                ("results".into(), Json::Arr(Vec::new())),
+                ("queue_depth".into(), Json::Num(0.0)),
+            ]);
+            if http::write_response(&mut stream, &Response::json(200, &doc), true)
+                .is_err()
+            {
+                return;
+            }
+        }
+    });
+    (addr, handle)
+}
+
+/// Kill a worker mid-campaign: its claimed units are re-queued
+/// (counted as retransmits), the surviving daemon drains them, and the
+/// folded result is still byte-identical to the local path.
+#[test]
+fn dead_worker_units_requeue_and_campaign_completes() {
+    let cfg = Config::default();
+    let coord = Coordinator::new(cfg.clone()).unwrap();
+    let names: Vec<String> = ["zfnet", "alexnet", "googlenet", "mobilenet"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let spec = CampaignSpec {
+        thresholds: vec![1, 2],
+        pinjs: vec![0.2, 0.4],
+        bandwidths: vec![64e9, 96e9],
+        policies: Vec::new(),
+        workers: 2,
+        ..CampaignSpec::default()
+    };
+    let prep = shard_prep();
+    let local = run_campaign_local(&coord, &names, &spec, &prep).unwrap();
+
+    let dir = tmpdir("kill");
+    let survivor = start_worker(&cfg, &dir);
+    let (dying_addr, dying) = start_dying_worker();
+    let addrs = vec![dying_addr, survivor.addr().to_string()];
+
+    let (sharded, report) =
+        run_campaign_sharded(&coord, &names, &spec, &prep, &addrs, &dispatch_opts())
+            .unwrap();
+
+    assert_eq!(
+        local.to_json().render(),
+        sharded.to_json().render(),
+        "a worker death changed the folded result"
+    );
+    assert!(
+        report.retransmits >= 1,
+        "the dead worker's in-flight units were never re-queued: {}",
+        report.to_json().render()
+    );
+    let dead = &report.workers[0];
+    assert!(!dead.alive, "the dying worker was not marked dead");
+    assert_eq!(dead.units, 0, "a never-executing worker completed units");
+    assert!(report.workers[1].alive, "the survivor died too");
+    assert_eq!(
+        report.workers[1].units as usize,
+        names.len() * spec.bandwidths.len(),
+        "the survivor did not drain every unit"
+    );
+
+    dying.join().unwrap();
+    survivor.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A daemon booted without `--worker` refuses shard batches with a
+/// teaching 400 instead of queueing units it will never execute.
+#[test]
+fn non_worker_daemon_rejects_unit_batches() {
+    let dir = tmpdir("nonworker");
+    let opts = ServeOptions {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 2,
+        cache_entries: 8,
+        watch_dir: None,
+        worker: false,
+        exec_threads: 0,
+    };
+    let server = Server::start(
+        Coordinator::new(Config::default()).unwrap(),
+        RunStore::at(&dir),
+        opts,
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let (status, doc) =
+        client_request(&addr, "POST", "/units", Some("{}")).unwrap();
+    assert_eq!(status, 400, "{}", doc.render());
+    assert!(
+        doc.get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("--worker"),
+        "{}",
+        doc.render()
+    );
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A worker daemon whose `[wireless]` config disagrees with the
+/// dispatching coordinator would compute different numbers from the
+/// same units; the fingerprint gate rejects its batches and the
+/// dispatch poisons instead of folding a lie.
+#[test]
+fn fingerprint_mismatch_poisons_the_dispatch() {
+    let cfg = Config::default();
+    let coord = Coordinator::new(cfg).unwrap();
+    let mut other = Config::default();
+    other.wireless.bandwidth_bits *= 2.0;
+
+    let dir = tmpdir("fingerprint");
+    let server = start_worker(&other, &dir);
+    let addrs = vec![server.addr().to_string()];
+
+    let names = vec!["zfnet".to_string()];
+    let spec = CampaignSpec {
+        thresholds: vec![1],
+        pinjs: vec![0.2],
+        bandwidths: vec![64e9],
+        workers: 1,
+        ..CampaignSpec::default()
+    };
+    let err = run_campaign_sharded(
+        &coord,
+        &names,
+        &spec,
+        &shard_prep(),
+        &addrs,
+        &dispatch_opts(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("fingerprint"),
+        "expected a fingerprint rejection, got: {msg}"
+    );
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
