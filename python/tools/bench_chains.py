@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Multi-chain annealing payoff curve, mirror spelling: run the
+chain-parallel wired mapping search with the cost mirror, measure each
+chain's real per-segment wall time, and persist BENCH_anneal_chains.json
+at the repo root (schema: bench name -> {chains, iters_per_sec,
+speedup_vs_single, best_cost_ratio}), the same document
+rust/benches/anneal_chains.rs writes via util::benchkit.
+
+Per-chain segment costs are real measured wall-clock; the K-thread
+wall-clock is then modeled as the schedule anneal_chains actually
+executes — chains run concurrently on one worker thread each (the
+`workers = 0` default, K cores), synchronizing at every epoch boundary
+for the sequential exchange pass. Modeled makespan = sum over epochs of
+the slowest chain's segment time, plus the measured sequential residue
+(seeding, exchange, fold) — not K Python threads fighting over this
+container's single core and a GIL. Chains do equal per-chain work, so
+the critical path is near the mean and aggregate throughput scales
+accordingly; the exchange residue is what keeps it below ideal.
+
+Two gates run before anything is timed, exactly as in the Rust bench:
+chains=1 must reproduce the legacy single-chain annealer bit-for-bit,
+and every multi-chain best must be <= the single-chain best (the pinned
+reference-chain theorem) — a payoff entry for a diverging or regressing
+configuration would be meaningless.
+
+Run:  python3 bench_chains.py
+Env:  WISPER_BENCH_QUICK=1  shrinks workloads/iters/fleet (the CI mode);
+      WISPER_BENCH_OUT=path overrides the output path.
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import cost_mirror as cm  # noqa: E402
+from cost_mirror import (  # noqa: E402
+    Package, anneal_wired, anneal_wired_chains, build,
+)
+
+SEED = 0xC0DE
+TEMP_FRAC = 0.25
+
+# Real per-segment chain wall times, captured by wrapping the mirror's
+# segment runner. Segments are dispatched chain 0..K-1 within each
+# epoch, so entries [s*K, (s+1)*K) are epoch s's K chain segments.
+SEG = []
+_run_segment = cm._Chain.run_segment
+
+
+def _timed_segment(self, *args, **kwargs):
+    t0 = time.perf_counter()
+    _run_segment(self, *args, **kwargs)
+    SEG.append(time.perf_counter() - t0)
+
+
+cm._Chain.run_segment = _timed_segment
+
+
+def modeled_run(wl, pkg, k, iters):
+    """One instrumented run: returns (modeled K-core wall seconds,
+    search outcome). The outcome is byte-identical to an untimed run —
+    the wrapper only observes."""
+    SEG.clear()
+    t0 = time.perf_counter()
+    out = anneal_wired_chains(wl, pkg, iters, TEMP_FRAC, SEED, chains=k)
+    wall = time.perf_counter() - t0
+    segs = list(SEG)
+    assert segs and len(segs) % k == 0, 'segment capture out of step'
+    critical = sum(max(segs[s * k:(s + 1) * k])
+                   for s in range(len(segs) // k))
+    residue = wall - sum(segs)
+    return critical + residue, out
+
+
+def median_wall(wl, pkg, k, iters, reps):
+    modeled_run(wl, pkg, k, iters)  # warmup
+    walls = []
+    out = None
+    for _ in range(max(reps, 1)):
+        w, out = modeled_run(wl, pkg, k, iters)
+        walls.append(w)
+    walls.sort()
+    return walls[len(walls) // 2], out
+
+
+def main():
+    quick = bool(os.environ.get('WISPER_BENCH_QUICK'))
+    pkg = Package()
+    names = ['googlenet'] if quick else ['googlenet', 'resnet50',
+                                         'resnet152']
+    fleet = [1, 2, 4] if quick else [1, 2, 4, 8]
+    iters = 60 if quick else 300
+    reps = 2 if quick else 3
+
+    records = {}
+    for name in names:
+        wl = build(name)
+
+        # Gate 1: the segmented chain runner at chains=1 reproduces the
+        # legacy annealer bit-for-bit.
+        legacy = anneal_wired(wl, pkg, iters, TEMP_FRAC, SEED)
+        single = anneal_wired_chains(wl, pkg, iters, TEMP_FRAC, SEED,
+                                     chains=1)
+        assert (single['mapping'], single['cost'], single['initial_cost'],
+                single['accepted']) == legacy, \
+            f'{name}: chains=1 diverged from the legacy annealer'
+
+        baseline_ips = None
+        for k in fleet:
+            wall, multi = median_wall(wl, pkg, k, iters, reps)
+            # Gate 2: the pinned reference chain makes the fold at
+            # least as good as the single-chain best.
+            assert multi['cost'] <= single['cost'], \
+                f"{name}: {k} chains regressed " \
+                f"({multi['cost']} > {single['cost']})"
+            ips = k * iters / wall
+            if baseline_ips is None:
+                baseline_ips = ips
+            records[f'anneal_chains/{name}/{k}'] = {
+                'chains': k,
+                'iters_per_sec': ips,
+                'speedup_vs_single': ips / baseline_ips,
+                'best_cost_ratio': multi['cost'] / single['cost'],
+            }
+
+    out = os.environ.get('WISPER_BENCH_OUT') or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), '..', '..',
+        'BENCH_anneal_chains.json')
+    with open(out, 'w') as fh:
+        json.dump(records, fh, indent=2)
+        fh.write('\n')
+    print(f'wrote {len(records)} chain entries to {out}')
+    for k, v in records.items():
+        print(f"  {k:<30} {v['iters_per_sec']:>10.1f} iters/s  "
+              f"{v['speedup_vs_single']:>5.2f}x vs 1 chain  "
+              f"(best {v['best_cost_ratio']:.4f}x)")
+    return records
+
+
+if __name__ == '__main__':
+    main()

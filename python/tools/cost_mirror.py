@@ -10,6 +10,7 @@ If you change the Rust cost pipeline or the workload builders, update
 this mirror in the same PR or its verdicts are stale.
 """
 import math
+import struct
 from functools import lru_cache
 
 M64 = (1 << 64) - 1
@@ -1956,6 +1957,275 @@ def co_anneal_delta(wl, pkg, base_mapping, wl_bw, iters, temp_frac, seed,
                 'decisions': model.best_decisions, 'total_s': best_cost,
                 'initial_total_s': initial_cost,
                 'accepted': accepted, 'evaluated': evaluated})
+    return out
+
+
+# ------------------------------------------------------------- chain layer
+# Mirror of util::anneal::anneal_chains and the two chain-parallel entry
+# points built on it (mapper::anneal_wired_chains,
+# comap::co_anneal_chains): K independently seeded chains over the same
+# schedule, deterministic replica exchange at sync-epoch boundaries, and
+# a total-order best-of fold. Chain scheduling and exchange arithmetic
+# are bit-exact with the Rust side; mirror_checks_chains.py pins the
+# contracts (chains=1 == legacy spelling, thread-order independence is
+# structural here, multi-chain never worse than single-chain).
+
+DEFAULT_SYNC_POINTS = 4  # util::anneal::DEFAULT_SYNC_POINTS
+EXCHANGE_TEMP_GROWTH = 1.5  # util::anneal::EXCHANGE_TEMP_GROWTH
+# f64::MIN_POSITIVE — the chain ladder clamps its rung temperatures with
+# the smallest *normal* f64, unlike the legacy schedule's 5e-324
+# denormal clamp in anneal_generic above. Unreachable for finite
+# positive costs either way; spelled out for the bit-exact contract.
+F64_MIN_POSITIVE = 2.2250738585072014e-308
+
+
+def chain_seed(base, chain):
+    """util::anneal::chain_seed — chain 0 keeps the base seed verbatim
+    (the reference chain replays the single-chain trajectory); higher
+    chains derive through the FNV/SplitMix chain."""
+    return base if chain == 0 else derive_seed(base, f"chain-{chain}")
+
+
+def _exp_f64(d):
+    """f64::exp — saturates to +inf where Python's math.exp raises
+    OverflowError (the exchange rule feeds it unbounded positive
+    arguments; Rust silently overflows to inf and coin(inf) is True)."""
+    try:
+        return math.exp(d)
+    except OverflowError:
+        return math.inf
+
+
+def _total_lt(a, b):
+    """f64::total_cmp(a, b) == Ordering::Less — IEEE totalOrder via the
+    sign-magnitude integer key Rust uses."""
+    ka = struct.unpack('<q', struct.pack('<d', a))[0]
+    kb = struct.unpack('<q', struct.pack('<d', b))[0]
+    ka ^= (ka >> 63) & 0x7FFFFFFFFFFFFFFF
+    kb ^= (kb >> 63) & 0x7FFFFFFFFFFFFFFF
+    return ka < kb
+
+
+class _Chain:
+    """One chain of the multi-chain search: its own RNG stream, cost
+    model (a (seed_cost, candidate_cost, accepted_hook) triple),
+    incumbent/best snapshots, and current ladder rung."""
+    __slots__ = ('rng', 'model', 'current', 'current_cost', 'best',
+                 'best_cost', 'accepted', 'evaluated', 'rung')
+
+    def __init__(self, rng, model, current, cost, rung):
+        self.rng = rng
+        self.model = model
+        self.current = current
+        self.current_cost = cost
+        self.best = current
+        self.best_cost = cost
+        self.accepted = 0
+        self.evaluated = 1
+        self.rung = rung
+
+    def run_segment(self, lo, hi, iters, t0s, perturb, clone):
+        """Iterations [lo, hi) of the global schedule — the same
+        arithmetic as anneal_generic_model's loop, so a single chain run
+        in segments is bit-identical to one straight run."""
+        _seed_cost, candidate_cost, accepted_hook = self.model
+        t0 = t0s[self.rung]
+        for i in range(lo, hi):
+            temp = t0 * max(1.0 - i / iters, 1e-3)
+            cand = clone(self.current)
+            perturb(cand, self.rng)
+            cand_cost = candidate_cost(cand)
+            self.evaluated += 1
+            delta = cand_cost - self.current_cost
+            if delta <= 0.0 or self.rng.coin(math.exp(-delta / temp)):
+                accepted_hook(cand)
+                self.current = cand
+                self.current_cost = cand_cost
+                self.accepted += 1
+                if self.current_cost < self.best_cost:
+                    self.best = self.current
+                    self.best_cost = self.current_cost
+
+
+def anneal_chains_model(initial, iters, temp_frac, seed, models,
+                        sync_points, perturb, clone):
+    """Mirror of util::anneal::anneal_chains: one chain per entry of
+    `models` (a list of (seed_cost, candidate_cost, accepted_hook)
+    triples), synchronizing at `sync_points` epoch boundaries for
+    ladder exchange. Rust executes segments on a thread pool but the
+    results are byte-identical for any worker count, so the sequential
+    spelling here is the same function. Returns a dict with state,
+    cost, initial_cost, accepted, evaluated, winner, chain_costs."""
+    if iters == 0:
+        raise ValueError("cannot anneal for zero iterations")
+    if not models:
+        raise ValueError("chain search needs at least one cost model")
+    k = len(models)
+    sync = min(max(sync_points, 1), iters)
+    initial_cost = None
+    chains = []
+    for ci, model in enumerate(models):
+        current = clone(initial)
+        c = model[0](current)
+        if not math.isfinite(c):
+            raise ValueError(f"non-finite initial cost {c}")
+        if ci == 0:
+            initial_cost = c
+        chains.append(_Chain(Pcg32.seeded(chain_seed(seed, ci)), model,
+                             current, c, ci))
+    # Temperature ladder from the reference chain's initial cost; the
+    # multiplier is built by repeated multiplication (mirror contract).
+    t0s = []
+    mult = 1.0
+    for _ in range(k):
+        t0s.append(max(initial_cost * temp_frac * mult, F64_MIN_POSITIVE))
+        mult *= EXCHANGE_TEMP_GROWTH
+    exchange = Pcg32.seeded(derive_seed(seed, "exchange"))
+    occupant = list(range(k))  # rung -> chain occupying it
+    for s in range(sync):
+        lo = iters * s // sync
+        hi = iters * (s + 1) // sync
+        for ch in chains:
+            ch.run_segment(lo, hi, iters, t0s, perturb, clone)
+        if s + 1 == sync:
+            break
+        # Replica exchange at the boundary: adjacent rungs (r, r+1),
+        # r >= 1 (rung 0 is pinned), alternating pair parity per epoch.
+        # One exchange coin per considered pair, accepted or not.
+        frac = max(1.0 - hi / iters, 1e-3)
+        r = 1 + (s % 2)
+        while r + 1 < k:
+            a, b = occupant[r], occupant[r + 1]
+            ea = chains[a].current_cost
+            eb = chains[b].current_cost
+            t_lo = t0s[r] * frac
+            t_hi = t0s[r + 1] * frac
+            d = (1.0 / t_lo - 1.0 / t_hi) * (ea - eb)
+            if exchange.coin(_exp_f64(d)):
+                chains[a].rung = r + 1
+                chains[b].rung = r
+                occupant[r], occupant[r + 1] = occupant[r + 1], occupant[r]
+            r += 2
+    winner = 0
+    for ci in range(1, k):
+        if _total_lt(chains[ci].best_cost, chains[winner].best_cost):
+            winner = ci
+    return {'state': chains[winner].best,
+            'cost': chains[winner].best_cost,
+            'initial_cost': initial_cost,
+            'accepted': sum(c.accepted for c in chains),
+            'evaluated': sum(c.evaluated for c in chains),
+            'winner': winner,
+            'chain_costs': [c.best_cost for c in chains]}
+
+
+def anneal_wired_chains(wl, pkg, iters, temp_frac, seed, chains=1,
+                        sync_points=DEFAULT_SYNC_POINTS):
+    """Mirror of mapper::anneal_wired_chains: the wired-cost mapping SA
+    run as `chains` exchange-coupled chains, each with its own
+    delta-priced incumbent caches (one cc dict per chain, exactly the
+    per-chain WiredCost models on the Rust side). chains=1 is bit-exact
+    with anneal_wired above."""
+    if not wl.layers:
+        raise ValueError(f"cannot anneal zero-layer workload {wl.name}")
+    seed_mapping = greedy_sized(wl, pkg)
+    if iters == 0:
+        c = evaluate_wired(build_tensors(wl, seed_mapping, pkg))['total_s']
+        if not math.isfinite(c):
+            raise ValueError(f"greedy seed has non-finite cost {c}")
+        return {'mapping': seed_mapping, 'cost': c, 'initial_cost': c,
+                'accepted': 0, 'evaluated': 1, 'winner': 0,
+                'chain_costs': [c]}
+    delta = TensorDelta(wl, pkg)
+    zero = [(1, 0.0)] * len(wl.layers)
+
+    def make_model():
+        cc = {}  # incumbent caches: layers, resident, evaluator, pending
+
+        def seed_cost(state):
+            t = build_tensors(wl, state.mapping, pkg)
+            cc['layers'] = t['layers']
+            cc['resident'] = delta.residency(state.mapping)
+            cc['evaluator'] = DeltaEvaluator(t, zero, 1.0)
+            cc['pending'] = None
+            return cc['evaluator'].total()
+
+        def candidate_cost(state):
+            cc['pending'] = None
+            resident = delta.residency(state.mapping)
+            dirty = delta.dirty_layers(state.last, cc['resident'], resident)
+            layers = list(cc['layers'])
+            delta.recost(state.mapping, resident, dirty, layers)
+            changes = [(j, layers[j], (1, 0.0)) for j in dirty]
+            total = cc['evaluator'].price_changes(changes)
+            cc['pending'] = ([(j, layers[j]) for j in dirty], resident)
+            return total
+
+        def accepted_hook(_state):
+            rows, resident = cc['pending']
+            cc['pending'] = None
+            for j, costs in rows:
+                cc['layers'][j] = costs
+            cc['resident'] = resident
+            cc['evaluator'].commit()
+
+        return seed_cost, candidate_cost, accepted_hook
+
+    def do_perturb(s, rng):
+        s.last = perturb_mapping(s.mapping, pkg, rng)
+
+    out = anneal_chains_model(
+        _DeltaState([p for p in seed_mapping]), iters, temp_frac, seed,
+        [make_model() for _ in range(max(chains, 1))], sync_points,
+        do_perturb, _clone_delta_state)
+    out['mapping'] = out.pop('state').mapping
+    return out
+
+
+def co_anneal_chains_delta(wl, pkg, base_mapping, wl_bw, iters, temp_frac,
+                           seed, thresholds, pinjs, refit='greedy',
+                           chains=1, sync_points=DEFAULT_SYNC_POINTS):
+    """Mirror of comap::co_anneal_chains: the joint delta search run as
+    `chains` exchange-coupled chains, one _CoDeltaCost model (its own
+    incumbent caches cloned from the shared decoupled seed) per chain.
+    The winner chain's best tensors/decisions are returned. chains=1 is
+    bit-exact with co_anneal_delta above."""
+    seed_mapping, tensors, decisions, seed_policy, initial_total, \
+        cand_best = decoupled_seed(wl, pkg, base_mapping, wl_bw,
+                                   thresholds, pinjs)
+    out = {'seed_policy': seed_policy,
+           'base_decoupled_total_s': cand_best[0],
+           'seq_decoupled_total_s': cand_best[1]}
+    if iters == 0:
+        out.update({'mapping': seed_mapping, 'tensors': tensors,
+                    'decisions': decisions, 'total_s': initial_total,
+                    'initial_total_s': initial_total,
+                    'accepted': 0, 'evaluated': 1, 'winner': 0,
+                    'chain_costs': [initial_total]})
+        return out
+    refit_cache = (policy_decisions(refit, tensors, wl_bw, thresholds, pinjs)
+                   if refit in ('greedy', 'oracle') else None)
+    seed_resident = plan_weight_residency(wl, seed_mapping, pkg)
+    models = []
+    for _ in range(max(chains, 1)):
+        models.append(_CoDeltaCost(
+            wl, pkg, wl_bw, thresholds, pinjs, refit, tensors, decisions,
+            seed_resident,
+            list(refit_cache) if refit_cache is not None else None,
+            initial_total))
+    res = anneal_chains_model(
+        _DeltaState([p for p in seed_mapping]), iters, temp_frac, seed,
+        [(m.seed_cost, m.candidate_cost, m.accepted) for m in models],
+        sync_points, lambda s, rng: _co_perturb_delta(s, pkg, rng),
+        _clone_delta_state)
+    winner = models[res['winner']]
+    out.update({'mapping': res['state'].mapping,
+                'tensors': winner.best_tensors,
+                'decisions': winner.best_decisions,
+                'total_s': res['cost'],
+                'initial_total_s': res['initial_cost'],
+                'accepted': res['accepted'], 'evaluated': res['evaluated'],
+                'winner': res['winner'], 'chain_costs': res['chain_costs']})
     return out
 
 

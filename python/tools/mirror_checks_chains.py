@@ -1,0 +1,133 @@
+"""Chain-layer assertions against the mirror: util::anneal's
+multi-chain runner (anneal_chains) and the two chain-parallel entry
+points built on it (mapper::anneal_wired_chains,
+comap::co_anneal_chains).
+
+Verifies, without a Rust toolchain, the chain acceptance criteria
+(the Python twin of rust/tests/chain_invariance.rs):
+  * chains=1 through the segmented chain runner reproduces the legacy
+    single-chain annealer bit-for-bit on all 15 paper workloads, for
+    any sync_points (the segmented schedule == one straight run),
+  * the multi-chain fold is never worse than the single-chain best at
+    equal per-chain iterations (the pinned reference-chain theorem),
+    with chain_costs[0] == the single-chain best exactly,
+  * accounting: evaluated == chains * single-chain evaluated, and the
+    initial cost is the reference chain's seed cost,
+  * the chain schedule + exchange arithmetic is deterministic — two
+    runs with the same inputs agree on every field,
+  * the joint co-search chain layer honors the same contracts against
+    co_anneal_delta.
+
+CAUTION: this mirrors util/anneal.rs (anneal_chains, chain_seed, the
+exchange rule), mapping/mapper.rs (anneal_wired_chains) and
+mapping/comap.rs (co_anneal_chains) in Python. If you change the Rust
+chain layer, update cost_mirror.py in the same PR or these verdicts
+are stale.
+"""
+import os, sys, time
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from cost_mirror import *
+
+pkg = Package()
+t0 = time.time()
+results = []
+
+def check(name, cond, detail=""):
+    results.append((name, bool(cond), detail))
+    mark = "PASS" if cond else "FAIL"
+    print(f"[{mark}] {name} {detail}")
+
+GRID_T = [1, 2]
+GRID_P = [0.2, 0.5, 0.8]
+WL_BW = 64e9
+
+# ---- chain_seed pins the reference chain
+check("chain_seed(base, 0) == base and higher chains derive",
+      chain_seed(0xC0DE, 0) == 0xC0DE
+      and chain_seed(0xC0DE, 1) == derive_seed(0xC0DE, "chain-1")
+      and chain_seed(0xC0DE, 1) != chain_seed(0xC0DE, 2))
+
+# ---- chains=1 == legacy annealer on all 15 paper workloads
+single_ok = True
+for name in WORKLOAD_NAMES:
+    wl = build(name)
+    seed = derive_seed(0xC0DE, name)
+    legacy = anneal_wired(wl, pkg, 40, 0.25, seed)
+    out = anneal_wired_chains(wl, pkg, 40, 0.25, seed, chains=1)
+    if (out['mapping'], out['cost'], out['initial_cost'],
+            out['accepted']) != legacy:
+        single_ok = False
+    if out['chain_costs'] != [out['cost']] or out['winner'] != 0:
+        single_ok = False
+check("chains=1 == legacy anneal_wired (15 workloads)", single_ok)
+
+# ---- the segmented schedule is one straight run, for any sync count
+sync_ok = True
+wl_g = build("googlenet")
+ref = anneal_wired_chains(wl_g, pkg, 60, 0.25, 0xC0DE, chains=1,
+                          sync_points=1)
+for sync in (3, 4, 100):
+    if anneal_wired_chains(wl_g, pkg, 60, 0.25, 0xC0DE, chains=1,
+                           sync_points=sync) != ref:
+        sync_ok = False
+check("chains=1 invariant under sync_points (1, 3, 4, 100)", sync_ok)
+
+# ---- multi-chain never worse, reference chain pinned, accounting
+mono_ok = pin_ok = acct_ok = True
+for name in ("zfnet", "alexnet", "googlenet", "mobilenet", "resnet50"):
+    wl = build(name)
+    seed = derive_seed(0xC0DE, name)
+    single = anneal_wired_chains(wl, pkg, 60, 0.25, seed, chains=1)
+    for k in (2, 4):
+        multi = anneal_wired_chains(wl, pkg, 60, 0.25, seed, chains=k)
+        if multi['cost'] > single['cost']:
+            mono_ok = False
+        if (multi['chain_costs'][0] != single['cost']
+                or multi['initial_cost'] != single['initial_cost']):
+            pin_ok = False
+        if (multi['evaluated'] != k * single['evaluated']
+                or len(multi['chain_costs']) != k):
+            acct_ok = False
+check("multi-chain best <= single-chain best (5 workloads, K in 2,4)",
+      mono_ok)
+check("reference chain pinned: chain_costs[0] == single-chain best",
+      pin_ok)
+check("evaluated == K * single-chain evaluated", acct_ok)
+
+# ---- the exchange schedule is deterministic
+a = anneal_wired_chains(wl_g, pkg, 60, 0.25, 0xC0DE, chains=4,
+                        sync_points=3)
+b = anneal_wired_chains(wl_g, pkg, 60, 0.25, 0xC0DE, chains=4,
+                        sync_points=3)
+check("K=4 chain run is deterministic (two runs agree field-for-field)",
+      a == b)
+
+# ---- joint co-search chain layer honors the same contracts
+co_single_ok = co_mono_ok = True
+for name in ("zfnet", "mobilenet"):
+    wl = build(name)
+    base = layer_sequential(wl, pkg)
+    seed = derive_seed(0xBEEF, name)
+    legacy = co_anneal_delta(wl, pkg, base, WL_BW, 40, 0.25, seed,
+                             GRID_T, GRID_P)
+    one = co_anneal_chains_delta(wl, pkg, base, WL_BW, 40, 0.25, seed,
+                                 GRID_T, GRID_P, chains=1)
+    if any(one[k] != legacy[k] for k in legacy):
+        co_single_ok = False
+    multi = co_anneal_chains_delta(wl, pkg, base, WL_BW, 40, 0.25, seed,
+                                   GRID_T, GRID_P, chains=4)
+    if (multi['total_s'] > one['total_s']
+            or multi['chain_costs'][0] != one['total_s']
+            or multi['initial_total_s'] != one['initial_total_s']
+            or multi['evaluated'] != 4 * one['evaluated']):
+        co_mono_ok = False
+check("co chains=1 == co_anneal_delta (zfnet, mobilenet)", co_single_ok)
+check("co K=4 never worse, pinned + accounted (zfnet, mobilenet)",
+      co_mono_ok)
+
+print(f"\nelapsed {time.time()-t0:.1f}s")
+fails = [r for r in results if not r[1]]
+print(f"{len(results)-len(fails)}/{len(results)} passed")
+for name, _, detail in fails:
+    print("FAILED:", name, detail)
+sys.exit(1 if fails else 0)

@@ -1,0 +1,120 @@
+//! Multi-chain annealing payoff curve: aggregate search throughput and
+//! folded best cost of `anneal_wired_chains` at K ∈ {1, 2, 4, 8}
+//! chains (one worker thread per chain) against the single-chain
+//! baseline, persisted as `BENCH_anneal_chains.json` (bench name ->
+//! `{chains, iters_per_sec, speedup_vs_single, best_cost_ratio}`), so
+//! the chain layer's claim rides with the tree. Two gates run before
+//! anything is timed: `chains = 1` must reproduce the closure-spelled
+//! legacy annealer bit-for-bit, and every multi-chain best must be <=
+//! the single-chain best (the pinned-reference-chain theorem) — a
+//! payoff entry for a diverging or regressing configuration would be
+//! meaningless.
+//!
+//! Run: `cargo bench --bench anneal_chains`
+//! Env: `WISPER_BENCH_QUICK=1` shrinks workloads/iters/fleet (the CI
+//!      mode); `WISPER_BENCH_OUT=path` overrides the output path
+//!      (default `../BENCH_anneal_chains.json`, the repo root when run
+//!      via cargo).
+
+use std::path::PathBuf;
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::mapper::{anneal, anneal_wired_chains, SaOptions};
+use wisper::sim::cost::build_tensors;
+use wisper::sim::evaluate_wired;
+use wisper::util::benchkit::{
+    bb, bench, report as breport, write_chains, ChainRecord,
+};
+use wisper::workloads::build;
+
+fn main() {
+    let quick = std::env::var("WISPER_BENCH_QUICK").is_ok();
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let elig = WirelessConfig {
+        enabled: true,
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..WirelessConfig::default()
+    };
+
+    // Same mid/large nets as the delta bench: chain overhead is fixed
+    // per sync epoch, so the payoff is cleanest where per-iteration
+    // pricing dominates.
+    let workloads: &[&str] = if quick {
+        &["googlenet"]
+    } else {
+        &["googlenet", "resnet50", "resnet152"]
+    };
+    let fleet: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let sa_iters = if quick { 60 } else { 300 };
+    let reps = if quick { 2 } else { 3 };
+
+    let mut ms = Vec::new();
+    let mut records = Vec::new();
+    for name in workloads {
+        let wl = build(name).unwrap();
+        let sa_for = |chains: usize| SaOptions {
+            iters: sa_iters,
+            temp_frac: 0.25,
+            seed: 0xC0DE,
+            chains,
+            ..SaOptions::default()
+        };
+
+        // Gate 1: the segmented chain runner at chains = 1 reproduces
+        // the closure-spelled legacy annealer bit-for-bit.
+        let legacy = anneal(&wl, &pkg, &sa_for(1), |m| {
+            build_tensors(&wl, m, &pkg, &elig)
+                .map(|t| evaluate_wired(&t).total_s)
+                .unwrap_or(f64::INFINITY)
+        })
+        .unwrap();
+        let single = anneal_wired_chains(&wl, &pkg, &elig, &sa_for(1), 0).unwrap();
+        assert_eq!(legacy.cost, single.cost, "{name}: chains=1 diverged");
+        assert_eq!(legacy.mapping, single.mapping, "{name}: chains=1 diverged");
+
+        let mut baseline_ips = 0.0_f64;
+        for &k in fleet {
+            let sa = sa_for(k);
+            let multi = anneal_wired_chains(&wl, &pkg, &elig, &sa, 0).unwrap();
+            // Gate 2: the pinned reference chain makes the fold at
+            // least as good as the single-chain best.
+            assert!(
+                multi.cost <= single.cost,
+                "{name}: {k} chains regressed ({} > {})",
+                multi.cost,
+                single.cost
+            );
+            let bname = format!("anneal_chains/{name}/{k}");
+            let m = bench(&bname, 1, reps, || {
+                bb(anneal_wired_chains(&wl, &pkg, &elig, &sa, 0).unwrap().cost)
+            });
+            let ips = m.throughput((k * sa_iters) as f64);
+            if k == 1 {
+                baseline_ips = ips;
+            }
+            records.push(ChainRecord::from_run(
+                &bname,
+                k,
+                ips,
+                baseline_ips,
+                multi.cost,
+                single.cost,
+            ));
+            ms.push(m);
+        }
+    }
+
+    breport(&ms);
+    let out = std::env::var("WISPER_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("../BENCH_anneal_chains.json"));
+    write_chains(&out, &records).unwrap();
+    println!("\nwrote {} chain entries to {}", records.len(), out.display());
+    for r in &records {
+        println!(
+            "  {:<30} {:>10.1} iters/s  {:>5.2}x vs 1 chain  (best {:.4}x)",
+            r.name, r.iters_per_sec, r.speedup_vs_single, r.best_cost_ratio
+        );
+    }
+}

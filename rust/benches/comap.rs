@@ -23,6 +23,8 @@ fn main() {
         iters,
         temp_frac: 0.25,
         seed: 0xC0DE,
+        chains: 1,
+        sync_points: 4,
         wl_bw: 64e9,
         refit: PolicySpec::Greedy,
         thresholds: vec![1, 2, 3, 4],

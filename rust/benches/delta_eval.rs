@@ -60,6 +60,7 @@ fn main() {
             iters: sa_iters,
             temp_frac: 0.25,
             seed: 0xC0DE,
+            ..SaOptions::default()
         };
 
         // Wired placement SA: closure full-reprice vs delta.
@@ -94,6 +95,8 @@ fn main() {
             iters: sa_iters,
             temp_frac: 0.25,
             seed: 0xC0DE,
+            chains: 1,
+            sync_points: 4,
             wl_bw,
             refit: PolicySpec::Greedy,
             thresholds: thresholds.clone(),

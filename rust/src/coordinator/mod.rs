@@ -94,6 +94,10 @@ pub struct Prepared {
     /// The evaluation backend this workload was prepared for (already
     /// workload-specialized for stochastic backends).
     pub backend: EvalBackend,
+    /// Annealing chains the searches ran with (1 = classic
+    /// single-chain; recorded so artifact consumers and caches can
+    /// distinguish prepared outcomes that differ only by chain count).
+    pub sa_chains: usize,
 }
 
 /// The experiment coordinator.
@@ -152,6 +156,7 @@ impl Coordinator {
                 iters: self.cfg.mapper.sa_iters,
                 temp_frac: self.cfg.mapper.sa_temp,
                 seed: self.cfg.mapper.seed,
+                ..SaOptions::default()
             },
             wl_bw: self.cfg.wireless.bandwidth_bits,
             thresholds: self.cfg.sweep.thresholds.clone(),
@@ -204,6 +209,8 @@ impl Coordinator {
                     refit,
                     thresholds: search.thresholds.clone(),
                     pinjs: search.pinjs.clone(),
+                    chains: search.sa.chains,
+                    sync_points: search.sa.sync_points,
                 };
                 Some(co_anneal(&workload, &self.pkg, &elig, &mapping, &opts)?)
             }
@@ -216,6 +223,7 @@ impl Coordinator {
             sa_initial_cost,
             comap,
             backend: search.backend,
+            sa_chains: search.sa.chains.max(1),
         })
     }
 

@@ -113,6 +113,11 @@ pub struct CampaignSpec {
     pub map_temp_frac: f64,
     /// Base seed the per-workload comap seeds derive from.
     pub map_seed: u64,
+    /// Parallel annealing chains of the comap stage (1 = the classic
+    /// single-chain search).
+    pub map_chains: usize,
+    /// Replica-exchange sync epochs per comap search.
+    pub map_sync: usize,
     /// Evaluation backend: `analytical` keeps the batched-artifact grid
     /// path bit-for-bit; `stochastic:draws[:seed]` evaluates the grid
     /// and the policy stage through the per-message
@@ -136,6 +141,8 @@ impl Default for CampaignSpec {
             map_iters: 600,
             map_temp_frac: 0.25,
             map_seed: 0xC0DE,
+            map_chains: 1,
+            map_sync: crate::util::anneal::DEFAULT_SYNC_POINTS,
             backend: EvalBackend::Analytical,
         }
     }
@@ -186,6 +193,13 @@ impl CampaignSpec {
             bail!(
                 "comap temperature fraction must be positive and finite, got {}",
                 self.map_temp_frac
+            );
+        }
+        if self.comap.is_some() && (self.map_chains == 0 || self.map_sync == 0) {
+            bail!(
+                "comap chain axis must be >= 1: got {} chains, {} sync epochs",
+                self.map_chains,
+                self.map_sync
             );
         }
         if self.refine && !matches!(self.backend, EvalBackend::Analytical) {
@@ -814,6 +828,8 @@ pub fn evaluate_campaign_unit(
                 refit,
                 thresholds: spec.thresholds.clone(),
                 pinjs: spec.pinjs.clone(),
+                chains: spec.map_chains,
+                sync_points: spec.map_sync,
             };
             let r = co_anneal(inp.workload, inp.pkg, &inp.elig, inp.base, &opts)?;
             let wired_ref = w
@@ -1221,6 +1237,8 @@ impl CampaignSpec {
             ("map_iters".into(), Json::Num(self.map_iters as f64)),
             ("map_temp_frac".into(), Json::Num(self.map_temp_frac)),
             ("map_seed".into(), Json::Str(self.map_seed.to_string())),
+            ("map_chains".into(), Json::Num(self.map_chains as f64)),
+            ("map_sync".into(), Json::Num(self.map_sync as f64)),
             ("backend".into(), Json::Str(self.backend.label())),
         ])
     }
@@ -1275,6 +1293,8 @@ impl CampaignSpec {
             map_iters: wire_usize(j, "map_iters")?,
             map_temp_frac: wire_f64(j, "map_temp_frac")?,
             map_seed: wire_u64(j, "map_seed")?,
+            map_chains: wire_usize(j, "map_chains")?,
+            map_sync: wire_usize(j, "map_sync")?,
             backend: EvalBackend::parse(wire_str(j, "backend")?)?,
         })
     }

@@ -61,6 +61,12 @@ pub struct ShardPrep {
     pub temp_frac: f64,
     /// Base mapping seed (per-workload seeds derive from it).
     pub seed: u64,
+    /// Parallel annealing chains of the mapping search (1 = the
+    /// classic single-chain search). Chains change the prepared
+    /// artifact, so the axis must travel with the preparation knobs.
+    pub chains: usize,
+    /// Replica-exchange sync epochs per search.
+    pub sync_points: usize,
 }
 
 impl ShardPrep {
@@ -74,6 +80,8 @@ impl ShardPrep {
             iters: mapper.sa_iters,
             temp_frac: mapper.sa_temp,
             seed: mapper.seed,
+            chains: 1,
+            sync_points: crate::util::anneal::DEFAULT_SYNC_POINTS,
         }
     }
 
@@ -86,6 +94,8 @@ impl ShardPrep {
             ("iters".into(), Json::Num(self.iters as f64)),
             ("temp_frac".into(), Json::Num(self.temp_frac)),
             ("seed".into(), Json::Str(self.seed.to_string())),
+            ("chains".into(), Json::Num(self.chains as f64)),
+            ("sync_points".into(), Json::Num(self.sync_points as f64)),
         ])
     }
 
@@ -98,6 +108,8 @@ impl ShardPrep {
             iters: wire_usize(j, "iters")?,
             temp_frac: wire_f64(j, "temp_frac")?,
             seed: wire_u64(j, "seed")?,
+            chains: wire_usize(j, "chains")?,
+            sync_points: wire_usize(j, "sync_points")?,
         })
     }
 }
@@ -116,6 +128,8 @@ pub fn worker_search(prep: &ShardPrep, spec: &CampaignSpec, workload: &str) -> M
             iters: prep.iters,
             temp_frac: prep.temp_frac,
             seed: derive_seed(prep.seed, workload),
+            chains: prep.chains,
+            sync_points: prep.sync_points,
         },
         wl_bw: spec.bandwidths[0],
         thresholds: spec.thresholds.clone(),
@@ -325,6 +339,8 @@ mod tests {
             iters: 321,
             temp_frac: 0.125,
             seed: u64::MAX - 41,
+            chains: 4,
+            sync_points: 3,
         };
         let wire = prep.to_wire().render();
         let back = ShardPrep::from_wire(&Json::parse(&wire).unwrap()).unwrap();
@@ -360,6 +376,8 @@ mod tests {
             assert_eq!(ours.sa.iters, theirs.sa.iters);
             assert_eq!(ours.sa.temp_frac.to_bits(), theirs.sa.temp_frac.to_bits());
             assert_eq!(ours.sa.seed, theirs.sa.seed);
+            assert_eq!(ours.sa.chains, theirs.sa.chains);
+            assert_eq!(ours.sa.sync_points, theirs.sa.sync_points);
             assert_eq!(ours.wl_bw.to_bits(), theirs.wl_bw.to_bits());
             assert_eq!(ours.thresholds, theirs.thresholds);
             assert_eq!(

@@ -338,6 +338,10 @@ impl Experiment for Campaign {
             map_iters: s.map_iters.unwrap_or(mapper.sa_iters),
             map_temp_frac: s.map_temp_frac.unwrap_or(mapper.sa_temp),
             map_seed: s.map_seed.unwrap_or(mapper.seed),
+            map_chains: s.map_chains.unwrap_or(1),
+            map_sync: s
+                .map_sync
+                .unwrap_or(crate::util::anneal::DEFAULT_SYNC_POINTS),
             // The evaluation-backend axis: stochastic backends price
             // grids and policies through the per-message engine with
             // per-workload derived seeds.
@@ -358,10 +362,15 @@ impl Experiment for Campaign {
                 iters: spec.map_iters,
                 temp_frac: spec.map_temp_frac,
                 seed: spec.map_seed,
+                chains: spec.map_chains,
+                sync_points: spec.map_sync,
             };
             let mut opts = crate::serve::dispatch::DispatchOptions::default();
             if s.shard_batch > 0 {
                 opts.batch = s.shard_batch;
+            }
+            if let Some(t) = s.shard_steal_timeout {
+                opts.steal_timeout = std::time::Duration::from_secs_f64(t);
             }
             let (result, report) = crate::dse::run_campaign_sharded(
                 ctx.coord,
@@ -1165,6 +1174,8 @@ impl Experiment for MappingAblation {
                         refit,
                         thresholds: s.thresholds.clone(),
                         pinjs: s.injection_probs.clone(),
+                        chains: search.sa.chains,
+                        sync_points: search.sa.sync_points,
                     };
                     let cm = co_anneal(
                         &sa.workload,

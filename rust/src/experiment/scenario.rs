@@ -41,7 +41,7 @@ use crate::mapping::mapper::SaOptions;
 use crate::report::Json;
 use crate::sim::engine::EvalBackend;
 use crate::sim::policy::PolicySpec;
-use crate::util::anneal::derive_seed;
+use crate::util::anneal::{derive_seed, DEFAULT_SYNC_POINTS};
 use crate::workloads::WORKLOAD_NAMES;
 use anyhow::{bail, Context as _, Result};
 
@@ -89,6 +89,12 @@ pub struct Scenario {
     /// Initial SA temperature as a fraction of the seed cost (`None` =
     /// `[mapper]` config).
     pub map_temp_frac: Option<f64>,
+    /// Parallel annealing chains for the mapping searches (`None` = 1,
+    /// the classic single-chain search; must be >= 1 when set).
+    pub map_chains: Option<usize>,
+    /// Replica-exchange sync epochs per search (`None` = the annealer
+    /// default; must be >= 1 when set; irrelevant at one chain).
+    pub map_sync: Option<usize>,
     /// Adaptive refinement stage after campaign grid passes.
     pub refine: bool,
     /// Worker threads (0 = auto).
@@ -101,6 +107,10 @@ pub struct Scenario {
     /// Initial per-worker claim window for shard dispatch (0 = the
     /// dispatcher default; the window adapts at runtime regardless).
     pub shard_batch: usize,
+    /// Work-stealing claim timeout in seconds for shard dispatch
+    /// (`None` = the dispatcher default; must be positive and finite
+    /// when set).
+    pub shard_steal_timeout: Option<f64>,
     /// Experiment names to run, in order (registry names).
     pub experiments: Vec<String>,
 }
@@ -136,10 +146,13 @@ impl Scenario {
             map_iters: None,
             map_seed: None,
             map_temp_frac: None,
+            map_chains: None,
+            map_sync: None,
             refine: false,
             workers: cfg.sweep.workers,
             shard_workers: Vec::new(),
             shard_batch: 0,
+            shard_steal_timeout: None,
             experiments: DEFAULT_EXPERIMENTS.iter().map(|s| s.to_string()).collect(),
         }
     }
@@ -154,7 +167,7 @@ impl Scenario {
     /// Every key the `[scenario]` section understands — the unknown-key
     /// check below errors against this list so typos can't silently
     /// fall back to defaults.
-    pub const TOML_KEYS: [&'static str; 18] = [
+    pub const TOML_KEYS: [&'static str; 21] = [
         "name",
         "workloads",
         "experiments",
@@ -169,10 +182,13 @@ impl Scenario {
         "map_iters",
         "map_seed",
         "map_temp_frac",
+        "map_chains",
+        "map_sync",
         "refine",
         "workers",
         "shard_workers",
         "shard_batch",
+        "shard_steal_timeout",
     ];
 
     /// Read the `[scenario]` section of a TOML document (grid axes and
@@ -249,6 +265,12 @@ impl Scenario {
         if let Some(v) = doc.get_f64("scenario.map_temp_frac")? {
             s.map_temp_frac = Some(v);
         }
+        if let Some(v) = doc.get_usize("scenario.map_chains")? {
+            s.map_chains = Some(v);
+        }
+        if let Some(v) = doc.get_usize("scenario.map_sync")? {
+            s.map_sync = Some(v);
+        }
         if let Some(v) = doc.get_bool("scenario.refine")? {
             s.refine = v;
         }
@@ -260,6 +282,9 @@ impl Scenario {
         }
         if let Some(v) = doc.get_usize("scenario.shard_batch")? {
             s.shard_batch = v;
+        }
+        if let Some(v) = doc.get_f64("scenario.shard_steal_timeout")? {
+            s.shard_steal_timeout = Some(v);
         }
         s.normalize_and_validate()?;
         Ok(s)
@@ -392,6 +417,12 @@ impl Scenario {
         if let Some(x) = doc.get("map_temp_frac").and_then(Json::as_f64) {
             s.map_temp_frac = Some(x);
         }
+        if let Some(x) = doc.get("map_chains").and_then(Json::as_f64) {
+            s.map_chains = Some(whole("map_chains", x)? as usize);
+        }
+        if let Some(x) = doc.get("map_sync").and_then(Json::as_f64) {
+            s.map_sync = Some(whole("map_sync", x)? as usize);
+        }
         if let Some(b) = doc.get("refine").and_then(Json::as_bool) {
             s.refine = b;
         }
@@ -403,6 +434,9 @@ impl Scenario {
         }
         if let Some(x) = doc.get("shard_batch").and_then(Json::as_f64) {
             s.shard_batch = whole("shard_batch", x)? as usize;
+        }
+        if let Some(x) = doc.get("shard_steal_timeout").and_then(Json::as_f64) {
+            s.shard_steal_timeout = Some(x);
         }
         s.normalize_and_validate()?;
         Ok(s)
@@ -511,6 +545,20 @@ impl Scenario {
                 bail!("scenario.map_temp_frac must be positive and finite, got {t}");
             }
         }
+        if self.map_chains == Some(0) {
+            bail!("scenario.map_chains must be >= 1 (1 = single-chain search)");
+        }
+        if self.map_sync == Some(0) {
+            bail!("scenario.map_sync must be >= 1 (sync epochs per search)");
+        }
+        if let Some(t) = self.shard_steal_timeout {
+            if !(t.is_finite() && t > 0.0) {
+                bail!(
+                    "scenario.shard_steal_timeout must be positive and finite \
+                     seconds, got {t}"
+                );
+            }
+        }
         self.shard_workers = dedupe(std::mem::take(&mut self.shard_workers));
         for w in &self.shard_workers {
             let (host, port) = match w.rsplit_once(':') {
@@ -563,6 +611,8 @@ impl Scenario {
                 iters: self.map_iters.unwrap_or(mapper.sa_iters),
                 temp_frac: self.map_temp_frac.unwrap_or(mapper.sa_temp),
                 seed: derive_seed(self.map_seed.unwrap_or(mapper.seed), workload),
+                chains: self.map_chains.unwrap_or(1),
+                sync_points: self.map_sync.unwrap_or(DEFAULT_SYNC_POINTS),
             },
             // The hybrid objective prices at the scenario's first
             // bandwidth; campaigns re-run the joint search per unit at
@@ -650,6 +700,18 @@ impl Scenario {
                 "map_temp_frac".into(),
                 self.map_temp_frac.map(Json::Num).unwrap_or(Json::Null),
             ),
+            (
+                "map_chains".into(),
+                self.map_chains
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "map_sync".into(),
+                self.map_sync
+                    .map(|v| Json::Num(v as f64))
+                    .unwrap_or(Json::Null),
+            ),
             ("refine".into(), Json::Bool(self.refine)),
             ("workers".into(), Json::Num(self.workers as f64)),
             (
@@ -662,6 +724,12 @@ impl Scenario {
                 ),
             ),
             ("shard_batch".into(), Json::Num(self.shard_batch as f64)),
+            (
+                "shard_steal_timeout".into(),
+                self.shard_steal_timeout
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
             (
                 "experiments".into(),
                 Json::Arr(
@@ -778,6 +846,20 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Parallel annealing chains for the mapping searches (validated
+    /// >= 1 by `build()`).
+    pub fn map_chains(mut self, chains: usize) -> Self {
+        self.scenario.map_chains = Some(chains);
+        self
+    }
+
+    /// Replica-exchange sync epochs per mapping search (validated >= 1
+    /// by `build()`).
+    pub fn map_sync(mut self, sync: usize) -> Self {
+        self.scenario.map_sync = Some(sync);
+        self
+    }
+
     pub fn refine(mut self, refine: bool) -> Self {
         self.scenario.refine = refine;
         self
@@ -801,6 +883,13 @@ impl ScenarioBuilder {
 
     pub fn shard_batch(mut self, batch: usize) -> Self {
         self.scenario.shard_batch = batch;
+        self
+    }
+
+    /// Work-stealing claim timeout in seconds for shard dispatch
+    /// (validated positive and finite by `build()`).
+    pub fn shard_steal_timeout(mut self, seconds: f64) -> Self {
+        self.scenario.shard_steal_timeout = Some(seconds);
         self
     }
 

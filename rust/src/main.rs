@@ -48,9 +48,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "map-iters", takes_value: true, help: "mapping-search SA iterations (default: [mapper] config)" },
         OptSpec { name: "map-seed", takes_value: true, help: "base seed for per-workload mapping searches" },
         OptSpec { name: "map-temp-frac", takes_value: true, help: "mapping-search initial temperature fraction" },
+        OptSpec { name: "map-chains", takes_value: true, help: "parallel annealing chains per mapping search (default 1)" },
+        OptSpec { name: "map-sync", takes_value: true, help: "replica-exchange sync epochs per mapping search" },
         OptSpec { name: "artifact", takes_value: true, help: "path to model.hlo.txt" },
         OptSpec { name: "workers", takes_value: true, help: "worker threads (0 = auto), or a host:port,... fleet that shards the campaign across daemons" },
         OptSpec { name: "shard-batch", takes_value: true, help: "campaign sharding: initial work-steal window per worker (0 = default)" },
+        OptSpec { name: "steal-timeout", takes_value: true, help: "campaign sharding: work-steal claim timeout in seconds (default 10)" },
         OptSpec { name: "addr", takes_value: true, help: "serve: bind address (default 127.0.0.1:8080; port 0 = ephemeral)" },
         OptSpec { name: "threads", takes_value: true, help: "serve: HTTP handler threads (0 = default pool)" },
         OptSpec { name: "cache-entries", takes_value: true, help: "serve: prepared-cache entry cap (0 disables)" },
@@ -257,6 +260,15 @@ fn apply_flag_overrides(
     }
     if let Some(t) = p.get_f64("map-temp-frac")? {
         s.map_temp_frac = Some(t);
+    }
+    if let Some(k) = p.get_usize("map-chains")? {
+        s.map_chains = Some(k);
+    }
+    if let Some(n) = p.get_usize("map-sync")? {
+        s.map_sync = Some(n);
+    }
+    if let Some(t) = p.get_f64("steal-timeout")? {
+        s.shard_steal_timeout = Some(t);
     }
     if p.has_flag("refine") {
         s.refine = true;

@@ -66,7 +66,8 @@ use crate::sim::policy::{
     LayerDecision, PolicySpec,
 };
 use crate::util::anneal::{
-    anneal as sa_anneal, anneal_model, AnnealCost, AnnealOptions,
+    anneal as sa_anneal, anneal_chains, AnnealCost, AnnealOptions, ChainOptions,
+    DEFAULT_SYNC_POINTS,
 };
 use crate::util::rng::Pcg32;
 use crate::workloads::Workload;
@@ -152,6 +153,12 @@ pub struct ComapOptions {
     /// Grid axes the policies parameterize over (paper Table 1).
     pub thresholds: Vec<u32>,
     pub pinjs: Vec<f64>,
+    /// Parallel annealing chains (`1` = the classic single-chain
+    /// search, bit-identical to the pre-chain code path).
+    pub chains: usize,
+    /// Replica-exchange sync epochs per run (see
+    /// [`crate::util::anneal::anneal_chains`]).
+    pub sync_points: usize,
 }
 
 /// Outcome of a joint search.
@@ -397,10 +404,26 @@ enum CoMove {
 /// The delta search's annealing state: just the placement and the move
 /// descriptor — tensors, decisions and priced rows live in the cost
 /// model's caches, which track the incumbent through commits.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 struct CoDeltaState {
     mapping: Mapping,
     last: Option<CoMove>,
+}
+
+impl Clone for CoDeltaState {
+    fn clone(&self) -> Self {
+        Self {
+            mapping: self.mapping.clone(),
+            last: self.last,
+        }
+    }
+
+    /// Buffer-reusing `clone_from` so the annealer's per-iteration
+    /// candidate refresh does not reallocate the placement vectors.
+    fn clone_from(&mut self, source: &Self) {
+        self.mapping.clone_from(&source.mapping);
+        self.last = source.last;
+    }
 }
 
 /// The delta spelling of [`co_perturb`]: identical RNG draw order
@@ -676,6 +699,15 @@ impl CoDeltaCost<'_> {
 /// stack — bit-exact with [`co_anneal_full`], which rebuilds and
 /// re-prices every layer per candidate (`tests/delta_parity.rs` pins
 /// the parity; `BENCH_delta_eval.json` records the speedup).
+///
+/// With `opts.chains > 1` the search runs that many independently
+/// seeded chains with deterministic replica exchange
+/// ([`anneal_chains`]); chain 0 is the pinned reference chain, so the
+/// multi-chain best is never worse than the single-chain result at
+/// equal per-chain iterations. `opts.chains == 1` is bit-identical to
+/// the historical single-chain path. One thread per chain; use
+/// [`co_anneal_chains`] to control the worker count (the result is
+/// byte-identical either way).
 pub fn co_anneal(
     wl: &Workload,
     pkg: &Package,
@@ -683,11 +715,24 @@ pub fn co_anneal(
     base: &Mapping,
     opts: &ComapOptions,
 ) -> Result<ComapResult> {
+    co_anneal_chains(wl, pkg, elig, base, opts, 0)
+}
+
+/// [`co_anneal`] with an explicit chain-worker count (`0` = one thread
+/// per chain, `1` = run every chain inline on the calling thread).
+/// Results are byte-identical for any `workers` value.
+pub fn co_anneal_chains(
+    wl: &Workload,
+    pkg: &Package,
+    elig: &WirelessConfig,
+    base: &Mapping,
+    opts: &ComapOptions,
+    workers: usize,
+) -> Result<ComapResult> {
     let seed = decoupled_seed(wl, pkg, elig, base, opts)?;
     if opts.iters == 0 {
         return Ok(seed.into_result());
     }
-    let delta = TensorDelta::new(wl, pkg, elig);
     // Axes are non-empty here: an empty grid already failed the seed's
     // `evaluate_policies` pass.
     let max_threshold =
@@ -702,22 +747,42 @@ pub fn co_anneal(
         )?),
         _ => None,
     };
-    let mut caches = CoCaches {
-        resident: delta.residency(&seed.mapping),
-        evaluator: DeltaEvaluator::new(&seed.tensors, &seed.decisions, opts.wl_bw),
-        best_cost: seed.total_s,
-        best_tensors: seed.tensors.clone(),
-        best_decisions: seed.decisions.clone(),
-        tensors: seed.tensors,
-        decisions: seed.decisions,
-        refit,
-        gen: 0,
-        memo: [None, None],
-        pending: None,
-        last_total: seed.total_s,
-    };
-    let state = CoDeltaState {
-        mapping: seed.mapping,
+    let seed_resident = TensorDelta::new(wl, pkg, elig).residency(&seed.mapping);
+    // One incumbent-cache set per chain: every chain anneals its own
+    // copy of the seed through its own delta evaluator (the PR 6
+    // incremental stack), so chains never share mutable state.
+    let k = opts.chains.max(1);
+    let mut caches: Vec<CoCaches> = (0..k)
+        .map(|_| CoCaches {
+            resident: seed_resident.clone(),
+            evaluator: DeltaEvaluator::new(
+                &seed.tensors,
+                &seed.decisions,
+                opts.wl_bw,
+            ),
+            best_cost: seed.total_s,
+            best_tensors: seed.tensors.clone(),
+            best_decisions: seed.decisions.clone(),
+            tensors: seed.tensors.clone(),
+            decisions: seed.decisions.clone(),
+            refit: refit.clone(),
+            gen: 0,
+            memo: [None, None],
+            pending: None,
+            last_total: seed.total_s,
+        })
+        .collect();
+    let models: Vec<CoDeltaCost> = caches
+        .iter_mut()
+        .map(|c| CoDeltaCost {
+            opts,
+            delta: TensorDelta::new(wl, pkg, elig),
+            max_threshold,
+            caches: c,
+        })
+        .collect();
+    let initial = CoDeltaState {
+        mapping: seed.mapping.clone(),
         last: None,
     };
     let schedule = AnnealOptions {
@@ -725,22 +790,19 @@ pub fn co_anneal(
         temp_frac: opts.temp_frac,
         seed: opts.seed,
     };
-    let out = anneal_model(
-        state,
-        &schedule,
-        |s, rng| co_perturb_delta(s, pkg, rng),
-        CoDeltaCost {
-            opts,
-            delta,
-            max_threshold,
-            caches: &mut caches,
-        },
-    )
+    let chain_opts = ChainOptions {
+        sync_points: opts.sync_points,
+        workers,
+    };
+    let out = anneal_chains(&initial, &schedule, &chain_opts, models, |s, rng| {
+        co_perturb_delta(s, pkg, rng)
+    })
     .map_err(|e| anyhow::anyhow!("comap SA for {:?}: {e}", wl.name))?;
+    let winner = caches.swap_remove(out.winner);
     Ok(ComapResult {
         mapping: out.state.mapping,
-        tensors: caches.best_tensors,
-        decisions: caches.best_decisions,
+        tensors: winner.best_tensors,
+        decisions: winner.best_decisions,
         total_s: out.cost,
         initial_total_s: out.initial_cost,
         base_decoupled_total_s: seed.base_total_s,
@@ -857,6 +919,8 @@ mod tests {
             refit: PolicySpec::Greedy,
             thresholds,
             pinjs,
+            chains: 1,
+            sync_points: DEFAULT_SYNC_POINTS,
         }
     }
 
@@ -988,6 +1052,50 @@ mod tests {
         let t = build_tensors(&wl, &base, &p, &e).unwrap();
         let wired = evaluate_wired(&t).total_s;
         assert!(r.total_s < wired);
+    }
+
+    #[test]
+    fn co_chains_match_for_any_worker_count() {
+        let p = pkg();
+        let e = elig();
+        let wl = build("zfnet").unwrap();
+        let base = greedy_sized(&wl, &p);
+        let mut o = opts(60, 11);
+        o.chains = 4;
+        let inline = co_anneal_chains(&wl, &p, &e, &base, &o, 1).unwrap();
+        for workers in [0, 2, 4] {
+            let par = co_anneal_chains(&wl, &p, &e, &base, &o, workers).unwrap();
+            assert_eq!(inline.total_s, par.total_s, "workers={workers}");
+            assert_eq!(inline.mapping, par.mapping, "workers={workers}");
+            assert_eq!(inline.decisions, par.decisions, "workers={workers}");
+            assert_eq!(inline.accepted, par.accepted, "workers={workers}");
+            assert_eq!(inline.evaluated, par.evaluated, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn co_multi_chain_never_loses_to_single_chain() {
+        let p = pkg();
+        let e = elig();
+        let wl = build("zfnet").unwrap();
+        let base = greedy_sized(&wl, &p);
+        let single = co_anneal(&wl, &p, &e, &base, &opts(60, 11)).unwrap();
+        for chains in [2, 4] {
+            let mut o = opts(60, 11);
+            o.chains = chains;
+            let multi = co_anneal(&wl, &p, &e, &base, &o).unwrap();
+            assert!(
+                multi.total_s <= single.total_s,
+                "chains={chains}: {} > {}",
+                multi.total_s,
+                single.total_s
+            );
+            assert_eq!(multi.initial_total_s, single.initial_total_s);
+            assert_eq!(multi.evaluated, chains * single.evaluated);
+            // The winner's tensors/decisions price to the reported best.
+            assert_eq!(multi.decisions.len(), wl.layers.len());
+            multi.mapping.validate(&wl, &p).unwrap();
+        }
     }
 
     #[test]

@@ -24,20 +24,31 @@ use crate::mapping::{compact_region, greedy_sized, Mapping, Partition, PARTITION
 use crate::sim::cost::{build_tensors, LayerCosts, TensorDelta};
 use crate::sim::policy::LayerDecision;
 use crate::sim::{evaluate_wired, DeltaEvaluator};
-use crate::util::anneal::{anneal as sa_anneal, anneal_model, AnnealCost, AnnealOptions};
+use crate::util::anneal::{
+    anneal as sa_anneal, anneal_chains, AnnealCost, AnnealOptions, ChainOptions,
+    DEFAULT_SYNC_POINTS,
+};
 use crate::util::rng::Pcg32;
 use crate::workloads::Workload;
 use anyhow::{bail, Result};
 
 /// Search configuration (re-exported view of the generic
-/// [`AnnealOptions`], kept for the mapping call sites and config
-/// plumbing).
+/// [`AnnealOptions`] plus the multi-chain axis, kept for the mapping
+/// call sites and config plumbing).
 #[derive(Debug, Clone)]
 pub struct SaOptions {
     pub iters: usize,
     /// Initial temperature as a fraction of the initial cost.
     pub temp_frac: f64,
     pub seed: u64,
+    /// Parallel annealing chains (`1` = the classic single-chain
+    /// search, bit-identical to the pre-chain code path).
+    pub chains: usize,
+    /// Replica-exchange sync epochs per run (see
+    /// [`crate::util::anneal::anneal_chains`]). Irrelevant when
+    /// `chains == 1` — a single chain run in epochs is bit-identical
+    /// to one straight run.
+    pub sync_points: usize,
 }
 
 impl Default for SaOptions {
@@ -46,6 +57,8 @@ impl Default for SaOptions {
             iters: 600,
             temp_frac: 0.25,
             seed: 0xC0DE,
+            chains: 1,
+            sync_points: DEFAULT_SYNC_POINTS,
         }
     }
 }
@@ -57,6 +70,16 @@ impl SaOptions {
             iters: self.iters,
             temp_frac: self.temp_frac,
             seed: self.seed,
+        }
+    }
+
+    /// The chain-layer knobs this search runs with; `workers == 0`
+    /// means one thread per chain (results are byte-identical for any
+    /// worker count — the determinism contract).
+    pub fn chain_opts(&self, workers: usize) -> ChainOptions {
+        ChainOptions {
+            sync_points: self.sync_points,
+            workers,
         }
     }
 }
@@ -170,10 +193,25 @@ pub fn anneal<F: FnMut(&Mapping) -> f64>(
 
 /// Annealer state of the wired-objective delta search: the mapping plus
 /// the layer the last perturbation touched (the dirty-set seed).
-#[derive(Clone)]
 struct WiredState {
     mapping: Mapping,
     touched: Option<usize>,
+}
+
+impl Clone for WiredState {
+    fn clone(&self) -> Self {
+        Self {
+            mapping: self.mapping.clone(),
+            touched: self.touched,
+        }
+    }
+
+    /// Buffer-reusing `clone_from` so the annealer's per-iteration
+    /// candidate refresh does not reallocate the placement vectors.
+    fn clone_from(&mut self, source: &Self) {
+        self.mapping.clone_from(&source.mapping);
+        self.touched = source.touched;
+    }
 }
 
 /// [`AnnealCost`] model for the wired objective: incumbent tensors,
@@ -277,11 +315,34 @@ impl AnnealCost<WiredState> for WiredCost<'_> {
 /// hence the identical trajectory and result — `tests/delta_parity.rs`
 /// pins this), but each candidate re-derives traffic and costs only
 /// for the layers its move dirties instead of rebuilding every layer.
+///
+/// With `opts.chains > 1` the search runs that many independently
+/// seeded chains with deterministic replica exchange
+/// ([`anneal_chains`]); chain 0 is the pinned reference chain, so the
+/// multi-chain best is never worse than the single-chain result at
+/// equal per-chain iterations. `opts.chains == 1` is bit-identical to
+/// the historical single-chain path. One thread per chain; use
+/// [`anneal_wired_chains`] to control the worker count (the result is
+/// byte-identical either way).
 pub fn anneal_wired(
     wl: &Workload,
     pkg: &Package,
     elig: &WirelessConfig,
     opts: &SaOptions,
+) -> Result<SearchResult> {
+    anneal_wired_chains(wl, pkg, elig, opts, 0)
+}
+
+/// [`anneal_wired`] with an explicit chain-worker count (`0` = one
+/// thread per chain, `1` = run every chain inline on the calling
+/// thread). Results are byte-identical for any `workers` value — the
+/// knob only trades wall-clock for thread pressure.
+pub fn anneal_wired_chains(
+    wl: &Workload,
+    pkg: &Package,
+    elig: &WirelessConfig,
+    opts: &SaOptions,
+    workers: usize,
 ) -> Result<SearchResult> {
     if wl.layers.is_empty() {
         bail!("cannot anneal a mapping for zero-layer workload {:?}", wl.name);
@@ -305,23 +366,27 @@ pub fn anneal_wired(
             evaluated: 1,
         });
     }
-    let model = WiredCost {
-        wl,
-        pkg,
-        elig,
-        delta: TensorDelta::new(wl, pkg, elig),
-        inner: None,
+    let models: Vec<WiredCost> = (0..opts.chains.max(1))
+        .map(|_| WiredCost {
+            wl,
+            pkg,
+            elig,
+            delta: TensorDelta::new(wl, pkg, elig),
+            inner: None,
+        })
+        .collect();
+    let initial = WiredState {
+        mapping: seed_mapping,
+        touched: None,
     };
-    let out = anneal_model(
-        WiredState {
-            mapping: seed_mapping,
-            touched: None,
-        },
+    let out = anneal_chains(
+        &initial,
         &opts.generic(),
+        &opts.chain_opts(workers),
+        models,
         |s: &mut WiredState, rng: &mut Pcg32| {
             s.touched = Some(perturb(&mut s.mapping, pkg, rng));
         },
-        model,
     )
     .map_err(|e| anyhow::anyhow!("mapping SA for {:?}: {e}", wl.name))?;
     Ok(SearchResult {
@@ -505,5 +570,72 @@ mod tests {
             perturb(&mut m, &p, &mut rng);
         }
         m.validate(&wl, &p).unwrap();
+    }
+
+    fn elig() -> crate::config::WirelessConfig {
+        crate::config::WirelessConfig {
+            enabled: true,
+            distance_threshold: 1,
+            injection_prob: 1.0,
+            ..crate::config::WirelessConfig::default()
+        }
+    }
+
+    #[test]
+    fn wired_chains_match_for_any_worker_count() {
+        let p = pkg();
+        let e = elig();
+        let wl = build("zfnet").unwrap();
+        let sa = SaOptions {
+            iters: 60,
+            chains: 4,
+            ..Default::default()
+        };
+        let inline = anneal_wired_chains(&wl, &p, &e, &sa, 1).unwrap();
+        for workers in [0, 2, 4] {
+            let par = anneal_wired_chains(&wl, &p, &e, &sa, workers).unwrap();
+            assert_eq!(inline.cost, par.cost, "workers={workers}");
+            assert_eq!(inline.mapping, par.mapping, "workers={workers}");
+            assert_eq!(inline.accepted, par.accepted, "workers={workers}");
+            assert_eq!(inline.evaluated, par.evaluated, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn wired_multi_chain_never_loses_to_single_chain() {
+        let p = pkg();
+        let e = elig();
+        let wl = build("zfnet").unwrap();
+        let single = anneal_wired(
+            &wl,
+            &p,
+            &e,
+            &SaOptions {
+                iters: 60,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for chains in [2, 4] {
+            let multi = anneal_wired(
+                &wl,
+                &p,
+                &e,
+                &SaOptions {
+                    iters: 60,
+                    chains,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert!(
+                multi.cost <= single.cost,
+                "chains={chains}: {} > {}",
+                multi.cost,
+                single.cost
+            );
+            assert_eq!(multi.initial_cost, single.initial_cost);
+            assert_eq!(multi.evaluated, chains * single.evaluated);
+        }
     }
 }

@@ -58,11 +58,28 @@ pub const PARTITIONS: [Partition; 3] = [
 ];
 
 /// Placement of one layer.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct LayerPlacement {
     /// Compute chiplet ids (row-major) running this layer.
     pub chiplets: Vec<usize>,
     pub partition: Partition,
+}
+
+impl Clone for LayerPlacement {
+    fn clone(&self) -> Self {
+        Self {
+            chiplets: self.chiplets.clone(),
+            partition: self.partition,
+        }
+    }
+
+    /// Buffer-reusing `clone_from`: the annealers refresh their
+    /// candidate double buffer from the incumbent every iteration, so
+    /// the chiplet list must be overwritten in place, not reallocated.
+    fn clone_from(&mut self, source: &Self) {
+        self.chiplets.clone_from(&source.chiplets);
+        self.partition = source.partition;
+    }
 }
 
 impl LayerPlacement {
@@ -72,9 +89,23 @@ impl LayerPlacement {
 }
 
 /// A full mapping of a workload onto a package.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub struct Mapping {
     pub placements: Vec<LayerPlacement>,
+}
+
+impl Clone for Mapping {
+    fn clone(&self) -> Self {
+        Self {
+            placements: self.placements.clone(),
+        }
+    }
+
+    fn clone_from(&mut self, source: &Self) {
+        // Vec::clone_from reuses the spine and per-placement buffers
+        // through LayerPlacement::clone_from.
+        self.placements.clone_from(&source.placements);
+    }
 }
 
 impl Mapping {

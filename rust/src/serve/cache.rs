@@ -110,11 +110,13 @@ impl PreparedCache {
     /// preparation of the same workload never alias.
     pub fn key(workload: &str, search: &MapSearch) -> String {
         format!(
-            "{workload}|optimize={}|iters={}|temp={:016x}|seed={}|backend={:?}",
+            "{workload}|optimize={}|iters={}|temp={:016x}|seed={}|chains={}|sync={}|backend={:?}",
             search.optimize,
             search.sa.iters,
             search.sa.temp_frac.to_bits(),
             search.sa.seed,
+            search.sa.chains,
+            search.sa.sync_points,
             search.backend,
         )
     }

@@ -276,6 +276,8 @@ mod tests {
                 iters: 0,
                 temp_frac: 0.25,
                 seed: 1,
+                chains: 1,
+                sync_points: 4,
             },
         });
         assert_eq!(q.push_batch(vec![unit(0, &batch), unit(1, &batch)]), 2);

@@ -310,18 +310,23 @@ impl DeltaEvaluator {
             );
             self.pending.push((i, comps, moved_v));
         }
-        // Stable sort keeps the last duplicate the one the merge sees
-        // after the retain below drops its predecessors.
+        // Stable sort keeps the last duplicate the one the in-place
+        // merge below leaves in its run's survivor slot. The dedup
+        // compacts `pending` in place (entries are Copy), so the
+        // staged-row buffer is reused across moves instead of
+        // reallocating a keep-list per candidate — this is the
+        // annealers' per-iteration hot path.
         self.pending.sort_by_key(|&(i, _, _)| i);
-        let mut keep = Vec::with_capacity(self.pending.len());
-        for p in self.pending.drain(..) {
-            if keep.last().is_some_and(|&(j, _, _): &(usize, _, _)| j == p.0) {
-                *keep.last_mut().expect("non-empty") = p;
+        let mut w = 0usize;
+        for r in 0..self.pending.len() {
+            if w > 0 && self.pending[w - 1].0 == self.pending[r].0 {
+                self.pending[w - 1] = self.pending[r];
             } else {
-                keep.push(p);
+                self.pending[w] = self.pending[r];
+                w += 1;
             }
         }
-        self.pending = keep;
+        self.pending.truncate(w);
         self.total_with_pending()
     }
 

@@ -1,5 +1,7 @@
 //! Generic simulated-annealing core: one annealing loop over an
-//! injected `(state, perturb, cost)` triple.
+//! injected `(state, perturb, cost)` triple, plus a multi-chain layer
+//! ([`anneal_chains`]) that runs K independently seeded chains with
+//! deterministic replica exchange.
 //!
 //! Two search subsystems instantiate it today: the wired-cost mapping
 //! search ([`crate::mapping::mapper::anneal`]) and the joint mapping ×
@@ -28,12 +30,52 @@
 //!   initial cost are caller bugs surfaced as errors, not NaN
 //!   propagation.
 //!
-//! CAUTION: `python/tools/cost_mirror.py` mirrors `anneal` (and
-//! [`derive_seed`]) bit-exactly — checked by
-//! `mirror_checks_mapping.py`; keep them in sync.
+//! # The chain/exchange model ([`anneal_chains`])
+//!
+//! K chains run the same schedule over per-chain [`AnnealCost`] models
+//! (one model per chain, so every chain keeps the delta stack's
+//! incremental pricing). Chain 0 is the *reference chain*: it uses the
+//! caller's seed verbatim and is pinned to the base temperature for
+//! the whole run, so its trajectory is bit-identical to the
+//! single-chain path — which makes the folded best *provably never
+//! worse* than `chains = 1` at equal per-chain budget. Chains `k >= 1`
+//! seed from [`chain_seed`] (the [`derive_seed`] FNV/SplitMix chain)
+//! and occupy an exploration ladder whose rung `r` scales the initial
+//! temperature by [`EXCHANGE_TEMP_GROWTH`]`^r` (computed by repeated
+//! multiplication so the Python mirror reproduces it bit-for-bit).
+//!
+//! The run is split into `sync_points` equal epochs. At every interior
+//! epoch boundary the ladder performs replica exchange in its standard
+//! temperature-swapping formulation: adjacent rungs `(r, r + 1)` with
+//! `r >= 1` (alternating pair parity per epoch, so the schedule and
+//! the number of exchange-RNG draws are a pure function of `(K,
+//! epoch)`) apply the Metropolis exchange rule
+//! `exp((1/T_r - 1/T_{r+1}) * (E_r - E_{r+1}))` with one coin from a
+//! dedicated exchange stream (`derive_seed(seed, "exchange")`), and on
+//! acceptance the two chains *swap rungs* — equivalent to the textbook
+//! state swap, but each chain keeps its own RNG stream and cost-model
+//! caches, which is what makes the delta models reusable across
+//! epochs. Rung 0 never exchanges (the monotonicity guarantee above);
+//! with K = 2 the ladder has one free chain and degenerates to
+//! independent restarts.
+//!
+//! Determinism contract: every chain's trajectory is a pure function
+//! of `(seed, chain index, rung schedule)`; chains only interact at
+//! epoch boundaries, sequentially, on the coordinating thread; worker
+//! threads (via [`crate::util::threadpool::parallel_map_with`]) only
+//! decide *where* a chain's segment runs, never *what* it computes. K
+//! chains on 1 thread and K chains on N threads are byte-identical,
+//! and `chains = 1` is bit-identical to [`anneal_model`].
+//!
+//! CAUTION: `python/tools/cost_mirror.py` mirrors `anneal`,
+//! [`anneal_chains`] (chain scheduling + exchange arithmetic) and
+//! [`derive_seed`] bit-exactly — checked by `mirror_checks_mapping.py`
+//! and `mirror_checks_chains.py`; keep them in sync.
 
 use crate::util::rng::{Pcg32, SplitMix64};
+use crate::util::threadpool::parallel_map_with;
 use std::fmt;
+use std::sync::Mutex;
 
 /// Annealing schedule: iteration budget, initial temperature as a
 /// fraction of the initial cost, and the RNG seed.
@@ -55,6 +97,36 @@ impl Default for AnnealOptions {
     }
 }
 
+/// Default number of replica-exchange sync epochs per run.
+pub const DEFAULT_SYNC_POINTS: usize = 4;
+
+/// Per-rung initial-temperature growth of the exploration ladder.
+/// Rung `r`'s multiplier is `EXCHANGE_TEMP_GROWTH^r`, computed by
+/// repeated multiplication (mirror bit-exactness).
+pub const EXCHANGE_TEMP_GROWTH: f64 = 1.5;
+
+/// Chain-layer knobs of [`anneal_chains`] (the chain count is the
+/// number of models passed in).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChainOptions {
+    /// Replica-exchange sync epochs over the iteration budget
+    /// (clamped to `[1, iters]`).
+    pub sync_points: usize,
+    /// Worker threads executing chain segments; `0` means one per
+    /// chain. Results are byte-identical for every value — threads
+    /// decide where a chain runs, never what it computes.
+    pub workers: usize,
+}
+
+impl Default for ChainOptions {
+    fn default() -> Self {
+        Self {
+            sync_points: DEFAULT_SYNC_POINTS,
+            workers: 0,
+        }
+    }
+}
+
 /// Degenerate annealing inputs, surfaced as typed errors instead of
 /// panics or NaN propagation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -67,6 +139,9 @@ pub enum AnnealError {
     /// schedule can be derived from it and every acceptance test would
     /// be vacuous.
     NonFiniteInitialCost(f64),
+    /// [`anneal_chains`] was handed an empty model set: a chain search
+    /// with zero chains has no defined result.
+    ZeroChains,
 }
 
 impl fmt::Display for AnnealError {
@@ -80,6 +155,9 @@ impl fmt::Display for AnnealError {
                 "initial state has non-finite cost {c}: the temperature \
                  schedule and acceptance tests are undefined"
             ),
+            AnnealError::ZeroChains => {
+                write!(f, "chain annealing needs at least one chain model")
+            }
         }
     }
 }
@@ -98,6 +176,27 @@ pub struct AnnealOutcome<S> {
     pub accepted: usize,
     /// Cost evaluations (initial state included).
     pub evaluated: usize,
+}
+
+/// Outcome of a multi-chain run: the winning chain's best state plus
+/// aggregate counters and the per-chain fold inputs.
+#[derive(Debug, Clone)]
+pub struct ChainsOutcome<S> {
+    /// Best state across all chains (total-order fold, see [`ChainsOutcome::winner`]).
+    pub state: S,
+    pub cost: f64,
+    /// Chain 0's initial cost (all chains share the initial state).
+    pub initial_cost: f64,
+    /// Accepted moves summed over all chains.
+    pub accepted: usize,
+    /// Cost evaluations summed over all chains (one seed evaluation
+    /// per chain included).
+    pub evaluated: usize,
+    /// Index of the winning chain: minimal best cost under
+    /// `f64::total_cmp` (NaN-safe), lowest chain index on ties.
+    pub winner: usize,
+    /// Every chain's best cost, in chain order.
+    pub chain_costs: Vec<f64>,
 }
 
 /// The annealer's cost contract, extended for incremental (delta)
@@ -175,6 +274,12 @@ where
 /// [`anneal`] over an [`AnnealCost`] model — the incremental-pricing
 /// entry point used by [`crate::mapping::mapper::anneal_wired`] and
 /// [`crate::mapping::comap::co_anneal`].
+///
+/// The loop is allocation-frugal: the candidate is a double buffer
+/// refreshed with `clone_from` (state types with buffer-reusing
+/// `clone_from` impls, like [`crate::mapping::Mapping`], pay no
+/// per-iteration allocation), the incumbent is adopted by swap, and
+/// the best state is only written on strict improvement.
 pub fn anneal_model<S, P, C>(
     initial: S,
     opts: &AnnealOptions,
@@ -198,13 +303,14 @@ where
     let initial_cost = current_cost;
     let mut best = current.clone();
     let mut best_cost = current_cost;
+    let mut cand = current.clone();
     let mut accepted = 0usize;
     let mut evaluated = 1usize;
 
     let t0 = (initial_cost * opts.temp_frac).max(f64::MIN_POSITIVE);
     for i in 0..opts.iters {
         let temp = t0 * (1.0 - i as f64 / opts.iters as f64).max(1e-3);
-        let mut cand = current.clone();
+        cand.clone_from(&current);
         perturb(&mut cand, &mut rng);
         let cand_cost = cost.candidate_cost(&cand);
         evaluated += 1;
@@ -213,11 +319,11 @@ where
         // broken candidate is a deterministic rejection.
         if delta <= 0.0 || rng.coin((-delta / temp).exp()) {
             cost.accepted(&cand);
-            current = cand;
+            std::mem::swap(&mut current, &mut cand);
             current_cost = cand_cost;
             accepted += 1;
             if current_cost < best_cost {
-                best = current.clone();
+                best.clone_from(&current);
                 best_cost = current_cost;
             }
         }
@@ -229,6 +335,209 @@ where
         initial_cost,
         accepted,
         evaluated,
+    })
+}
+
+/// Seed of chain `chain` under base seed `base`: chain 0 keeps the
+/// base seed verbatim (the reference chain is bit-identical to the
+/// single-chain path), higher chains derive through [`derive_seed`].
+pub fn chain_seed(base: u64, chain: usize) -> u64 {
+    if chain == 0 {
+        base
+    } else {
+        derive_seed(base, &format!("chain-{chain}"))
+    }
+}
+
+/// One resumable chain of the multi-chain search: its own RNG stream,
+/// cost model, incumbent/candidate double buffer, best snapshot, and
+/// current ladder rung.
+struct Chain<S, C> {
+    rng: Pcg32,
+    cost: C,
+    current: S,
+    current_cost: f64,
+    cand: S,
+    best: S,
+    best_cost: f64,
+    accepted: usize,
+    evaluated: usize,
+    rung: usize,
+}
+
+impl<S: Clone, C: AnnealCost<S>> Chain<S, C> {
+    /// Run iterations `[lo, hi)` of the global schedule — the same
+    /// arithmetic as [`anneal_model`]'s loop, so a single chain run in
+    /// segments is bit-identical to one straight run.
+    fn run_segment<P: Fn(&mut S, &mut Pcg32)>(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        iters: usize,
+        t0s: &[f64],
+        perturb: &P,
+    ) {
+        let t0 = t0s[self.rung];
+        for i in lo..hi {
+            let temp = t0 * (1.0 - i as f64 / iters as f64).max(1e-3);
+            self.cand.clone_from(&self.current);
+            perturb(&mut self.cand, &mut self.rng);
+            let cand_cost = self.cost.candidate_cost(&self.cand);
+            self.evaluated += 1;
+            let delta = cand_cost - self.current_cost;
+            if delta <= 0.0 || self.rng.coin((-delta / temp).exp()) {
+                self.cost.accepted(&self.cand);
+                std::mem::swap(&mut self.current, &mut self.cand);
+                self.current_cost = cand_cost;
+                self.accepted += 1;
+                if self.current_cost < self.best_cost {
+                    self.best.clone_from(&self.current);
+                    self.best_cost = self.current_cost;
+                }
+            }
+        }
+    }
+}
+
+/// Multi-chain annealing with deterministic replica exchange: one
+/// chain per entry of `models`, executed on
+/// [`parallel_map_with`] (`chain_opts.workers` threads; results are
+/// byte-identical for any worker count), synchronizing at
+/// `chain_opts.sync_points` epoch boundaries for ladder exchange. See
+/// the module header for the chain/exchange model and its determinism
+/// contract. With one model this is bit-identical to [`anneal_model`].
+///
+/// The models are consumed and dropped before returning; callers that
+/// need a model's post-run caches (e.g. the joint search's best-state
+/// tensors) should hand in models borrowing external per-chain cache
+/// slots and read the slot named by [`ChainsOutcome::winner`].
+pub fn anneal_chains<S, P, C>(
+    initial: &S,
+    opts: &AnnealOptions,
+    chain_opts: &ChainOptions,
+    models: Vec<C>,
+    perturb: P,
+) -> Result<ChainsOutcome<S>, AnnealError>
+where
+    S: Clone + Send,
+    P: Fn(&mut S, &mut Pcg32) + Sync,
+    C: AnnealCost<S> + Send,
+{
+    if opts.iters == 0 {
+        return Err(AnnealError::ZeroIterations);
+    }
+    if models.is_empty() {
+        return Err(AnnealError::ZeroChains);
+    }
+    let k = models.len();
+    let sync = chain_opts.sync_points.clamp(1, opts.iters);
+    let workers = if chain_opts.workers == 0 {
+        k
+    } else {
+        chain_opts.workers
+    };
+
+    let mut initial_cost = f64::NAN;
+    let mut chains: Vec<Mutex<Chain<S, C>>> = Vec::with_capacity(k);
+    for (ci, mut cost) in models.into_iter().enumerate() {
+        let current = initial.clone();
+        let c = cost.seed_cost(&current);
+        if !c.is_finite() {
+            return Err(AnnealError::NonFiniteInitialCost(c));
+        }
+        if ci == 0 {
+            initial_cost = c;
+        }
+        chains.push(Mutex::new(Chain {
+            rng: Pcg32::seeded(chain_seed(opts.seed, ci)),
+            cost,
+            cand: current.clone(),
+            best: current.clone(),
+            current,
+            current_cost: c,
+            best_cost: c,
+            accepted: 0,
+            evaluated: 1,
+            rung: ci,
+        }));
+    }
+
+    // Temperature ladder from the reference chain's initial cost; the
+    // multiplier is built by repeated multiplication (mirror contract).
+    let mut t0s = Vec::with_capacity(k);
+    let mut mult = 1.0f64;
+    for _ in 0..k {
+        t0s.push((initial_cost * opts.temp_frac * mult).max(f64::MIN_POSITIVE));
+        mult *= EXCHANGE_TEMP_GROWTH;
+    }
+
+    let mut exchange = Pcg32::seeded(derive_seed(opts.seed, "exchange"));
+    // rung -> chain occupying it.
+    let mut occupant: Vec<usize> = (0..k).collect();
+    let iters = opts.iters;
+    for s in 0..sync {
+        let lo = iters * s / sync;
+        let hi = iters * (s + 1) / sync;
+        parallel_map_with(
+            k,
+            workers,
+            || (),
+            |_, ci| {
+                let mut chain = chains[ci].lock().unwrap();
+                chain.run_segment(lo, hi, iters, &t0s, &perturb);
+            },
+        );
+        if s + 1 == sync {
+            break;
+        }
+        // Replica exchange at the boundary, sequentially on this
+        // thread: adjacent rungs (r, r+1), r >= 1 (rung 0 is pinned),
+        // alternating pair parity per epoch. One exchange coin per
+        // considered pair, accepted or not, so the exchange stream's
+        // draw count is a pure function of (K, epoch).
+        let frac = (1.0 - hi as f64 / iters as f64).max(1e-3);
+        let mut r = 1 + (s % 2);
+        while r + 1 < k {
+            let (a, b) = (occupant[r], occupant[r + 1]);
+            let ea = chains[a].lock().unwrap().current_cost;
+            let eb = chains[b].lock().unwrap().current_cost;
+            let t_lo = t0s[r] * frac;
+            let t_hi = t0s[r + 1] * frac;
+            let d = (1.0 / t_lo - 1.0 / t_hi) * (ea - eb);
+            if exchange.coin(d.exp()) {
+                chains[a].lock().unwrap().rung = r + 1;
+                chains[b].lock().unwrap().rung = r;
+                occupant.swap(r, r + 1);
+            }
+            r += 2;
+        }
+    }
+
+    let mut done: Vec<Chain<S, C>> = chains
+        .into_iter()
+        .map(|m| m.into_inner().unwrap())
+        .collect();
+    // Total-order, NaN-safe best-of fold: strictly smaller under
+    // total_cmp wins, lowest chain index breaks ties.
+    let mut winner = 0usize;
+    for ci in 1..k {
+        let better = done[ci].best_cost.total_cmp(&done[winner].best_cost);
+        if better == std::cmp::Ordering::Less {
+            winner = ci;
+        }
+    }
+    let accepted = done.iter().map(|c| c.accepted).sum();
+    let evaluated = done.iter().map(|c| c.evaluated).sum();
+    let chain_costs: Vec<f64> = done.iter().map(|c| c.best_cost).collect();
+    let best = done.swap_remove(winner);
+    Ok(ChainsOutcome {
+        state: best.best,
+        cost: best.best_cost,
+        initial_cost,
+        accepted,
+        evaluated,
+        winner,
+        chain_costs,
     })
 }
 
@@ -266,6 +575,29 @@ mod tests {
         .unwrap()
     }
 
+    fn toy_perturb(x: &mut i64, rng: &mut Pcg32) {
+        if rng.coin(0.5) {
+            *x += 1;
+        } else {
+            *x -= 1;
+        }
+    }
+
+    fn toy_chains(
+        opts: &AnnealOptions,
+        chains: usize,
+        chain_opts: &ChainOptions,
+    ) -> ChainsOutcome<i64> {
+        let models: Vec<ToyDelta> = (0..chains)
+            .map(|_| ToyDelta {
+                incumbent: 0.0,
+                staged: 0.0,
+                commits: 0,
+            })
+            .collect();
+        anneal_chains(&0i64, opts, chain_opts, models, toy_perturb).unwrap()
+    }
+
     #[test]
     fn improves_and_bookkeeps() {
         let r = toy(&AnnealOptions {
@@ -286,10 +618,7 @@ mod tests {
         assert_eq!(a.state, b.state);
         assert_eq!(a.cost, b.cost);
         assert_eq!(a.accepted, b.accepted);
-        let c = toy(&AnnealOptions {
-            seed: 999,
-            ..opts
-        });
+        let c = toy(&AnnealOptions { seed: 999, ..opts });
         assert!(c.accepted != a.accepted || c.state != a.state || c.cost == a.cost);
     }
 
@@ -312,13 +641,8 @@ mod tests {
     #[test]
     fn non_finite_initial_cost_is_a_typed_error() {
         for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
-            let err = anneal(
-                0i64,
-                &AnnealOptions::default(),
-                |_, _| {},
-                |_| bad,
-            )
-            .unwrap_err();
+            let err = anneal(0i64, &AnnealOptions::default(), |_, _| {}, |_| bad)
+                .unwrap_err();
             match err {
                 AnnealError::NonFiniteInitialCost(c) => {
                     assert!(!c.is_finite());
@@ -479,5 +803,127 @@ mod tests {
         // Order-of-listing independence is the point: the seed depends
         // only on (base, name).
         assert_ne!(derive_seed(0, "a"), derive_seed(0, "b"));
+    }
+
+    #[test]
+    fn one_chain_is_bit_identical_to_anneal_model() {
+        // The segmented chain runner over one chain must reproduce the
+        // straight loop exactly — including when sync epochs split the
+        // schedule at awkward remainders.
+        for iters in [1usize, 7, 60, 301] {
+            let opts = AnnealOptions {
+                iters,
+                ..Default::default()
+            };
+            let straight = anneal_model(
+                0i64,
+                &opts,
+                toy_perturb,
+                ToyDelta {
+                    incumbent: 0.0,
+                    staged: 0.0,
+                    commits: 0,
+                },
+            )
+            .unwrap();
+            for sync in [1usize, 3, 4, 100] {
+                let chained = toy_chains(
+                    &opts,
+                    1,
+                    &ChainOptions {
+                        sync_points: sync,
+                        workers: 0,
+                    },
+                );
+                assert_eq!(straight.state, chained.state, "iters={iters} sync={sync}");
+                assert_eq!(straight.cost, chained.cost);
+                assert_eq!(straight.initial_cost, chained.initial_cost);
+                assert_eq!(straight.accepted, chained.accepted);
+                assert_eq!(straight.evaluated, chained.evaluated);
+                assert_eq!(chained.winner, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn chains_are_thread_count_invariant() {
+        let opts = AnnealOptions {
+            iters: 240,
+            ..Default::default()
+        };
+        let co = ChainOptions::default();
+        let base = toy_chains(&opts, 4, &ChainOptions { workers: 1, ..co });
+        for workers in [2usize, 4, 9] {
+            let r = toy_chains(&opts, 4, &ChainOptions { workers, ..co });
+            assert_eq!(base.state, r.state, "workers={workers}");
+            assert_eq!(base.cost, r.cost);
+            assert_eq!(base.accepted, r.accepted);
+            assert_eq!(base.evaluated, r.evaluated);
+            assert_eq!(base.winner, r.winner);
+            assert_eq!(base.chain_costs, r.chain_costs);
+        }
+    }
+
+    #[test]
+    fn multi_chain_never_loses_to_single_chain() {
+        // Chain 0 is pinned to the reference schedule, so the fold is
+        // bounded by the single-chain best by construction.
+        for seed in [0xC0DEu64, 1, 999] {
+            let opts = AnnealOptions {
+                iters: 120,
+                seed,
+                ..Default::default()
+            };
+            let single = toy_chains(&opts, 1, &ChainOptions::default());
+            for k in [2usize, 3, 4, 8] {
+                let multi = toy_chains(&opts, k, &ChainOptions::default());
+                assert!(
+                    multi.cost <= single.cost,
+                    "seed={seed} k={k}: {} > {}",
+                    multi.cost,
+                    single.cost
+                );
+                assert_eq!(multi.chain_costs[0], single.cost);
+                assert_eq!(multi.evaluated, k * single.evaluated);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_layer_typed_errors() {
+        let empty: Vec<ToyDelta> = Vec::new();
+        let err = anneal_chains(
+            &0i64,
+            &AnnealOptions::default(),
+            &ChainOptions::default(),
+            empty,
+            toy_perturb,
+        )
+        .unwrap_err();
+        assert_eq!(err, AnnealError::ZeroChains);
+
+        let err = anneal_chains(
+            &0i64,
+            &AnnealOptions {
+                iters: 0,
+                ..Default::default()
+            },
+            &ChainOptions::default(),
+            vec![ToyDelta {
+                incumbent: 0.0,
+                staged: 0.0,
+                commits: 0,
+            }],
+            toy_perturb,
+        )
+        .unwrap_err();
+        assert_eq!(err, AnnealError::ZeroIterations);
+    }
+
+    #[test]
+    fn chain_seed_pins_the_reference_chain() {
+        assert_eq!(chain_seed(0xC0DE, 0), 0xC0DE);
+        assert_eq!(chain_seed(0xC0DE, 1), derive_seed(0xC0DE, "chain-1"));
+        assert_ne!(chain_seed(0xC0DE, 1), chain_seed(0xC0DE, 2));
     }
 }

@@ -216,6 +216,78 @@ pub fn write_scaling(
     write_json(path, &scaling_json(records))
 }
 
+/// One chain-count entry of the multi-chain annealing payoff curve:
+/// aggregate search throughput and solution quality at `chains` chains
+/// relative to the single-chain baseline (`benches/anneal_chains.rs`
+/// persists these as `BENCH_anneal_chains.json`).
+#[derive(Debug, Clone)]
+pub struct ChainRecord {
+    pub name: String,
+    pub chains: usize,
+    /// Aggregate annealing iterations per second summed over all
+    /// chains (K chains x per-chain iters over the run's wall time).
+    pub iters_per_sec: f64,
+    /// Aggregate throughput over the single-chain throughput.
+    pub speedup_vs_single: f64,
+    /// Folded best cost over the single-chain best cost — `<= 1.0` by
+    /// the pinned-reference-chain construction (chain 0 replays the
+    /// single-chain trajectory, so the fold can only improve on it).
+    pub best_cost_ratio: f64,
+}
+
+impl ChainRecord {
+    /// Build the record for `chains` chains given both runs' aggregate
+    /// throughputs and folded best costs.
+    pub fn from_run(
+        name: &str,
+        chains: usize,
+        iters_per_sec: f64,
+        baseline_iters_per_sec: f64,
+        best_cost: f64,
+        baseline_best_cost: f64,
+    ) -> ChainRecord {
+        ChainRecord {
+            name: name.to_string(),
+            chains,
+            iters_per_sec,
+            speedup_vs_single: iters_per_sec / baseline_iters_per_sec,
+            best_cost_ratio: best_cost / baseline_best_cost,
+        }
+    }
+}
+
+/// The `BENCH_anneal_chains.json` document: bench name ->
+/// `{chains, iters_per_sec, speedup_vs_single, best_cost_ratio}`.
+pub fn chains_json(records: &[ChainRecord]) -> Json {
+    Json::Obj(
+        records
+            .iter()
+            .map(|r| {
+                (
+                    r.name.clone(),
+                    Json::Obj(vec![
+                        ("chains".into(), Json::Num(r.chains as f64)),
+                        ("iters_per_sec".into(), Json::Num(r.iters_per_sec)),
+                        (
+                            "speedup_vs_single".into(),
+                            Json::Num(r.speedup_vs_single),
+                        ),
+                        ("best_cost_ratio".into(), Json::Num(r.best_cost_ratio)),
+                    ]),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Persist a chain payoff curve (see [`chains_json`]) to `path`.
+pub fn write_chains(
+    path: &Path,
+    records: &[ChainRecord],
+) -> std::io::Result<()> {
+    write_json(path, &chains_json(records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -283,6 +355,27 @@ mod tests {
         let e = doc.get("shard_scaling/2").unwrap();
         assert_eq!(e.get("workers").unwrap().as_f64(), Some(2.0));
         assert_eq!(e.get("speedup_vs_one").unwrap().as_f64(), Some(1.8));
+    }
+
+    #[test]
+    fn chain_record_ratios() {
+        // 4 chains at 3.6x the single-chain aggregate throughput,
+        // landing 2% better than the single-chain best.
+        let r = ChainRecord::from_run(
+            "anneal_chains/googlenet/4",
+            4,
+            3600.0,
+            1000.0,
+            0.98,
+            1.0,
+        );
+        assert!((r.speedup_vs_single - 3.6).abs() < 1e-12);
+        assert!((r.best_cost_ratio - 0.98).abs() < 1e-12);
+        let doc = Json::parse(&chains_json(&[r]).render()).unwrap();
+        let e = doc.get("anneal_chains/googlenet/4").unwrap();
+        assert_eq!(e.get("chains").unwrap().as_f64(), Some(4.0));
+        assert_eq!(e.get("iters_per_sec").unwrap().as_f64(), Some(3600.0));
+        assert_eq!(e.get("speedup_vs_single").unwrap().as_f64(), Some(3.6));
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! The chain layer's two contracts, pinned on every paper workload:
+//!
+//! 1. **Thread-count invariance** — K chains produce byte-identical
+//!    results whether their segments run inline, on one thread per
+//!    chain, or on any smaller pool. Worker threads decide *where* a
+//!    chain's segment executes, never *what* it computes; chains only
+//!    interact at sync epochs, sequentially, on the coordinating
+//!    thread.
+//! 2. **Monotonicity** — the multi-chain fold is never worse than the
+//!    single-chain result at equal per-chain iterations, because chain
+//!    0 is pinned to the reference schedule (the caller's seed, the
+//!    base temperature rung, excluded from exchange) and therefore
+//!    replays the single-chain trajectory bit-for-bit.
+//!
+//! Plus the compatibility floor: `chains = 1` through the segmented
+//! chain runner reproduces the closure-spelled legacy annealer
+//! bit-for-bit — the pre-chain code path is a special case, not a
+//! separate one.
+
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::mapping::comap::{co_anneal_chains, ComapOptions};
+use wisper::mapping::layer_sequential;
+use wisper::mapping::mapper::{anneal, anneal_wired_chains, SaOptions};
+use wisper::sim::cost::build_tensors;
+use wisper::sim::evaluate_wired;
+use wisper::sim::policy::PolicySpec;
+use wisper::util::anneal::derive_seed;
+use wisper::workloads::{build, WORKLOAD_NAMES};
+
+fn pkg() -> Package {
+    Package::new(ArchConfig::default()).unwrap()
+}
+
+fn elig() -> WirelessConfig {
+    WirelessConfig {
+        enabled: true,
+        distance_threshold: 1,
+        injection_prob: 1.0,
+        ..WirelessConfig::default()
+    }
+}
+
+fn sa(name: &str, iters: usize, chains: usize) -> SaOptions {
+    SaOptions {
+        iters,
+        chains,
+        seed: derive_seed(0xC0DE, name),
+        ..SaOptions::default()
+    }
+}
+
+/// `chains = 1` is bit-identical to the closure-spelled legacy
+/// annealer on every paper workload — the acceptance floor of the
+/// chain layer.
+#[test]
+fn single_chain_matches_legacy_on_all_paper_workloads() {
+    let pkg = pkg();
+    let elig = elig();
+    for name in WORKLOAD_NAMES {
+        let wl = build(name).unwrap();
+        let opts = sa(name, 40, 1);
+        let legacy = anneal(&wl, &pkg, &opts, |m| {
+            build_tensors(&wl, m, &pkg, &elig)
+                .map(|t| evaluate_wired(&t).total_s)
+                .unwrap_or(f64::INFINITY)
+        })
+        .unwrap();
+        let chained = anneal_wired_chains(&wl, &pkg, &elig, &opts, 0).unwrap();
+        assert_eq!(legacy.cost, chained.cost, "{name}");
+        assert_eq!(legacy.initial_cost, chained.initial_cost, "{name}");
+        assert_eq!(legacy.mapping, chained.mapping, "{name}");
+        assert_eq!(legacy.accepted, chained.accepted, "{name}");
+        assert_eq!(legacy.evaluated, chained.evaluated, "{name}");
+    }
+}
+
+/// K = 4 chains are byte-identical at 1 worker vs 4 workers (and the
+/// one-thread-per-chain default) on every paper workload, including
+/// with a sync count that leaves remainder epochs.
+#[test]
+fn four_chains_thread_invariant_on_all_paper_workloads() {
+    let pkg = pkg();
+    let elig = elig();
+    for name in WORKLOAD_NAMES {
+        let wl = build(name).unwrap();
+        for sync_points in [3usize, 4] {
+            let opts = SaOptions {
+                sync_points,
+                ..sa(name, 60, 4)
+            };
+            let inline = anneal_wired_chains(&wl, &pkg, &elig, &opts, 1).unwrap();
+            for workers in [0usize, 2, 4] {
+                let par =
+                    anneal_wired_chains(&wl, &pkg, &elig, &opts, workers).unwrap();
+                assert_eq!(
+                    inline.cost, par.cost,
+                    "{name}: sync={sync_points} workers={workers}"
+                );
+                assert_eq!(inline.mapping, par.mapping, "{name}");
+                assert_eq!(inline.accepted, par.accepted, "{name}");
+                assert_eq!(inline.evaluated, par.evaluated, "{name}");
+            }
+        }
+    }
+}
+
+/// The multi-chain fold never loses to the single-chain best at equal
+/// per-chain iterations, on every paper workload (the pinned
+/// reference-chain theorem).
+#[test]
+fn multi_chain_never_worse_on_all_paper_workloads() {
+    let pkg = pkg();
+    let elig = elig();
+    for name in WORKLOAD_NAMES {
+        let wl = build(name).unwrap();
+        let single =
+            anneal_wired_chains(&wl, &pkg, &elig, &sa(name, 60, 1), 0).unwrap();
+        for chains in [2usize, 4] {
+            let multi =
+                anneal_wired_chains(&wl, &pkg, &elig, &sa(name, 60, chains), 0)
+                    .unwrap();
+            assert!(
+                multi.cost <= single.cost,
+                "{name} chains={chains}: {} > {}",
+                multi.cost,
+                single.cost
+            );
+            assert_eq!(multi.initial_cost, single.initial_cost, "{name}");
+            assert_eq!(multi.evaluated, chains * single.evaluated, "{name}");
+            multi.mapping.validate(&wl, &pkg).unwrap();
+        }
+    }
+}
+
+fn co_opts(name: &str, iters: usize, chains: usize) -> ComapOptions {
+    ComapOptions {
+        iters,
+        temp_frac: 0.25,
+        seed: derive_seed(0xBEEF, name),
+        chains,
+        sync_points: 4,
+        wl_bw: 64e9,
+        refit: PolicySpec::Greedy,
+        thresholds: vec![1, 2],
+        pinjs: vec![0.2, 0.5, 0.8],
+    }
+}
+
+/// Spot-check of both contracts on the joint mapping × offload search
+/// (reduced grid keeps debug-mode test time in check; the wired tests
+/// above cover every workload).
+#[test]
+fn co_chains_thread_invariant_and_never_worse() {
+    let pkg = pkg();
+    let elig = elig();
+    for name in ["zfnet", "mobilenet"] {
+        let wl = build(name).unwrap();
+        let base = layer_sequential(&wl, &pkg);
+        let opts = co_opts(name, 40, 4);
+        let inline = co_anneal_chains(&wl, &pkg, &elig, &base, &opts, 1).unwrap();
+        for workers in [0usize, 2, 4] {
+            let par =
+                co_anneal_chains(&wl, &pkg, &elig, &base, &opts, workers).unwrap();
+            assert_eq!(inline.total_s, par.total_s, "{name} workers={workers}");
+            assert_eq!(inline.mapping, par.mapping, "{name}");
+            assert_eq!(inline.decisions, par.decisions, "{name}");
+            assert_eq!(inline.accepted, par.accepted, "{name}");
+            assert_eq!(inline.evaluated, par.evaluated, "{name}");
+        }
+
+        let single =
+            co_anneal_chains(&wl, &pkg, &elig, &base, &co_opts(name, 40, 1), 0)
+                .unwrap();
+        assert!(
+            inline.total_s <= single.total_s,
+            "{name}: {} > {}",
+            inline.total_s,
+            single.total_s
+        );
+        assert_eq!(inline.initial_total_s, single.initial_total_s, "{name}");
+        assert_eq!(inline.evaluated, 4 * single.evaluated, "{name}");
+        inline.mapping.validate(&wl, &pkg).unwrap();
+    }
+}

@@ -167,6 +167,7 @@ fn anneal_wired_matches_the_closure_spelling_bit_exactly() {
             iters: 60,
             temp_frac: 0.25,
             seed: 0xC0DE,
+            ..Default::default()
         };
         let full = anneal(&wl, &pkg, &sa, |m| {
             build_tensors(&wl, m, &pkg, &elig)
@@ -194,6 +195,8 @@ fn co_anneal_matches_its_full_reprice_twin_bit_exactly() {
         iters: 50,
         temp_frac: 0.25,
         seed: 7,
+        chains: 1,
+        sync_points: 4,
         wl_bw: WL_BW,
         refit: PolicySpec::Greedy,
         thresholds,

@@ -247,6 +247,7 @@ fn perturb_and_anneal_preserve_mapping_validity() {
                 iters: 50,
                 temp_frac: 0.25,
                 seed: g.u64_range(0, u64::MAX),
+                ..SaOptions::default()
             },
             |m| {
                 m.placements
@@ -285,6 +286,7 @@ fn comap_ordering_on_all_paper_workloads() {
                     iters: 120,
                     temp_frac: 0.25,
                     seed: derive_seed(0xC0DE, name),
+                    ..SaOptions::default()
                 },
                 wl_bw: bw,
                 thresholds: thresholds.clone(),

@@ -59,6 +59,8 @@ fn shard_prep() -> ShardPrep {
         iters: 0,
         temp_frac: 0.25,
         seed: 0xC0DE,
+        chains: 1,
+        sync_points: 4,
     }
 }
 
