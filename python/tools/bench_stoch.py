@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Stochastic-engine payoff trajectory, mirror spelling: measure the
+tabulated kernel against the sequential twin with the cost mirror and
+persist BENCH_stoch_engine.json at the repo root — the same document
+rust/benches/stoch_engine.rs writes via util::benchkit
+(schema: {"grid": {name: {iters_per_sec, speedup_vs_full}},
+          "draw_scaling": {name: {workers, units_per_sec,
+                                  speedup_vs_one, efficiency}}}).
+
+Two axes, matching the Rust bench:
+
+  * grid: a full (threshold x pinj) sweep through the prepared,
+    totals-only fast twin (`stochastic_engine_evaluate_fast` with
+    want_trace=False and one shared `stochastic_engine_prepare` table)
+    against the pre-refactor cost profile — the sequential per-point
+    full-trace `stochastic_engine_evaluate`. Workers play no role
+    here: the speedup isolates tabulation + trace-skip alone.
+  * draw_scaling: draws/sec at 1/2/4 workers. Draw partials are
+    independent by construction (per-draw seeds); each partial's cost
+    is measured individually, the fleet is modeled as workers pulling
+    the next draw index when idle (`util::threadpool::parallel_map_with`
+    claims an atomic counter — a pull schedule with window 1), and the
+    draw-ordered fold + table build are charged sequentially. This is
+    the same modeled-fleet approach bench_shard.py uses: one container
+    core cannot time real thread scaling honestly.
+
+Parity gates before ANY timing (a throughput number for a diverging
+path would be meaningless):
+  * the committed goldens re-render byte-identically from the
+    sequential twin (gen_goldens_stoch --check inline), and
+  * fast twin (prepared, both trace modes) == sequential twin
+    bit-exactly on every benched workload.
+
+Run:  python3 bench_stoch.py
+Env:  WISPER_BENCH_QUICK=1  shrinks workloads/draws (the CI mode);
+      WISPER_BENCH_OUT=path overrides the output path.
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import cost_mirror as cm  # noqa: E402
+import gen_goldens_stoch  # noqa: E402
+
+WORKERS = [1, 2, 4]
+SEED = 0x5EED
+
+
+def bench_median(warmup, reps, f):
+    """Median-of-reps wall time in seconds (util::benchkit::bench)."""
+    for _ in range(warmup):
+        f()
+    samples = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        f()
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def varied(t):
+    ps = [0.15, 0.45, 1.0, 0.0]
+    return [((i % 4) + 1, ps[i % 4]) for i in range(len(t['layers']))]
+
+
+def parity_gate(name, t, decisions, wl_bw, draws):
+    """Fast twin == sequential twin, bit-exactly, both trace modes."""
+    want_r, want_tr = cm.stochastic_engine_evaluate(
+        t, decisions, wl_bw, draws, SEED)
+    prep = cm.stochastic_engine_prepare(t)
+    got_r, got_tr = cm.stochastic_engine_evaluate_fast(
+        t, decisions, wl_bw, draws, SEED, prep=prep, want_trace=True)
+    assert got_r == want_r, f'{name}: fast result diverges'
+    assert got_tr == want_tr, f'{name}: fast trace diverges'
+    tot_r, tot_tr = cm.stochastic_engine_evaluate_fast(
+        t, decisions, wl_bw, draws, SEED, prep=prep, want_trace=False)
+    assert tot_r == want_r, f'{name}: totals-only result diverges'
+    assert tot_tr is None, f'{name}: totals-only path assembled a trace'
+
+
+def pull_schedule(costs, workers):
+    """Makespan of parallel_map_with's claim loop: each worker takes
+    the next unstarted draw index when idle (window-1 pull)."""
+    clock = [0.0] * workers
+    for c in costs:
+        w = min(range(workers), key=lambda i: clock[i])
+        clock[w] += c
+    return max(clock)
+
+
+def main():
+    quick = bool(os.environ.get('WISPER_BENCH_QUICK'))
+    names = ['googlenet'] if quick else ['googlenet', 'resnet50',
+                                         'resnet152']
+    thresholds = [1, 2] if quick else [1, 2, 3, 4]
+    pinjs = ([0.2, 0.4, 0.6] if quick else
+             [0.10 + 0.05 * i for i in range(15)])
+    grid_draws = 4 if quick else 16
+    scale_draws = 16 if quick else 64
+    reps = 2 if quick else 3
+    wl_bw = 64e9
+
+    # Gate 1: the committed goldens are exactly what the sequential
+    # twin produces today — i.e. cost_mirror's engine arithmetic is
+    # unchanged relative to the frozen contract.
+    with open(gen_goldens_stoch.GOLDEN_PATH) as f:
+        assert f.read() == gen_goldens_stoch.render(), (
+            'goldens stale: sequential twin no longer matches '
+            + gen_goldens_stoch.GOLDEN_PATH)
+
+    pkg = cm.Package()
+    grid_records = {}
+    scaling_records = {}
+    for name in names:
+        wl = cm.build(name)
+        t = cm.build_tensors(wl, cm.layer_sequential(wl, pkg), pkg)
+        decisions = varied(t)
+
+        # Gate 2: bit-exact parity on this workload before timing.
+        parity_gate(name, t, decisions, wl_bw, scale_draws)
+
+        # Grid throughput: sequential per-point full-trace vs prepared
+        # totals-only fast twin.
+        points = len(thresholds) * len(pinjs)
+
+        def grid_full():
+            acc = 0.0
+            for d in thresholds:
+                for p in pinjs:
+                    decs = [(d, p)] * len(t['layers'])
+                    r, _ = cm.stochastic_engine_evaluate(
+                        t, decs, wl_bw, grid_draws, SEED)
+                    acc += r['total_s']
+            return acc
+
+        def grid_fast():
+            prep = cm.stochastic_engine_prepare(t)
+            acc = 0.0
+            for d in thresholds:
+                for p in pinjs:
+                    decs = [(d, p)] * len(t['layers'])
+                    r, _ = cm.stochastic_engine_evaluate_fast(
+                        t, decs, wl_bw, grid_draws, SEED, prep=prep,
+                        want_trace=False)
+                    acc += r['total_s']
+            return acc
+
+        assert grid_full() == grid_fast(), f'{name}: grid totals diverge'
+        full_s = bench_median(1, reps, grid_full)
+        fast_s = bench_median(1, reps, grid_fast)
+        grid_records[f'stoch_grid/{name}'] = {
+            'iters_per_sec': points / fast_s,
+            'speedup_vs_full': full_s / fast_s,
+        }
+
+        # Draw scaling: per-draw partial costs measured individually,
+        # fleet modeled as the engine's pull schedule, prep + fold
+        # charged sequentially.
+        prep = cm.stochastic_engine_prepare(t)
+        cutoffs = [cm.coin_cutoff(p) for (_, p) in decisions]
+        plan = cm._engine_draw_plan(prep, decisions, cutoffs)
+        draw_costs = [
+            bench_median(1, reps, lambda d=d: cm._engine_draw_partial(
+                t, prep, decisions, cutoffs, wl_bw, SEED, d, True,
+                plan=plan))
+            for d in range(scale_draws)
+        ]
+        prep_s = bench_median(1, reps,
+                              lambda: cm.stochastic_engine_prepare(t))
+        # Fold + aggregation cost, measured directly over precomputed
+        # partials — the exact draw-ordered loop the fast twin (and the
+        # Rust engine's caller thread) runs after the fan-out.
+        partials = [cm._engine_draw_partial(t, prep, decisions, cutoffs,
+                                            wl_bw, SEED, d, True,
+                                            plan=plan)
+                    for d in range(scale_draws)]
+        nl = len(t['layers'])
+
+        def fold():
+            layer_lat_sum = [0.0] * nl
+            comp_attr = [[0.0] * 5 for _ in range(nl)]
+            trace = [[] for _ in range(nl)]
+            total_sum = 0.0
+            wl_bits_sum = 0.0
+            for part in partials:
+                for i in range(nl):
+                    layer_lat_sum[i] += part['lat'][i]
+                    comp_attr[i][part['kb'][i]] += part['lat'][i]
+                    trace[i].append(part['samples'][i])
+                total_sum += part['draw_total']
+                wl_bits_sum += part['draw_wl']
+            return total_sum
+
+        fold_s = bench_median(1, reps, fold)
+
+        baseline = None
+        for w in WORKERS:
+            makespan = prep_s + pull_schedule(draw_costs, w) + fold_s
+            dps = scale_draws / makespan
+            if baseline is None:
+                baseline = dps
+            speedup = dps / baseline
+            scaling_records[f'stoch_draws/{name}/{w}'] = {
+                'workers': w,
+                'units_per_sec': dps,
+                'speedup_vs_one': speedup,
+                'efficiency': speedup / w,
+            }
+
+    out = os.environ.get('WISPER_BENCH_OUT') or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), '..', '..',
+        'BENCH_stoch_engine.json')
+    doc = {'grid': grid_records, 'draw_scaling': scaling_records}
+    with open(out, 'w') as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write('\n')
+    print(f'wrote {len(grid_records)} grid + {len(scaling_records)} '
+          f'scaling entries to {out}')
+    for k, v in grid_records.items():
+        print(f"  {k:<26} {v['iters_per_sec']:>9.2f} points/s  "
+              f"{v['speedup_vs_full']:>5.2f}x vs per-point full-trace")
+    for k, v in scaling_records.items():
+        print(f"  {k:<26} {v['units_per_sec']:>9.1f} draws/s   "
+              f"{v['speedup_vs_one']:>5.2f}x vs 1 worker  "
+              f"({v['efficiency'] * 100:.0f}% efficient)")
+    return doc
+
+
+if __name__ == '__main__':
+    main()

@@ -2425,3 +2425,303 @@ def heat_row(t, bw, d, pinjs=None):
     pinjs = pinjs or [0.10 + 0.05 * i for i in range(15)]
     wired = evaluate_wired(t)['total_s']
     return [wired / evaluate_expected(t, d, p, bw)['total_s'] for p in pinjs]
+
+
+# ------------------------------------------------- engine (prepared)
+# Mirror of the prepared, draw-parallel stochastic kernel — the
+# performance rebuild of StochasticEngine::evaluate. Everything here is
+# ADDITIVE: the sequential twin above (`stochastic_engine_evaluate`) is
+# the frozen pre-rebuild reference, and mirror_checks_stoch.py asserts
+# the fast twin reproduces it bit-for-bit (the rebuild's whole
+# contract: speed moved, not one bit of output).
+
+PCG32_COIN_ONE = 1 << 32  # cutoff meaning "every coin wins" (p >= 1)
+PCG32_MULT = 6364136223846793005
+
+
+def coin_cutoff(p):
+    """Pcg32::cutoff — hoist the coin threshold out of the loop.
+
+    coin(p) is next_u32()/2^32 < p; both sides scale by 2^32 exactly
+    (power-of-two shift of an f64 exponent), so the integer cutoff
+    ceil(p * 2^32) makes next_u32() < cutoff the identical predicate:
+    if p*2^32 is an integer m, u < m literally; otherwise u <= floor
+    iff u < ceil. Clamped so p <= 0 never wins and p >= 1 always does
+    (next_f64() < 1.0 is unconditionally true)."""
+    if p <= 0.0:
+        return 0
+    if p >= 1.0:
+        return PCG32_COIN_ONE
+    return int(math.ceil(p * 4294967296.0))
+
+
+def pcg32_advance(rng, delta):
+    """Pcg32::advance — O(log delta) LCG jump-ahead (Brown's
+    square-and-multiply), bit-identical to delta next_u32() calls."""
+    acc_mult, acc_plus = 1, 0
+    cur_mult, cur_plus = PCG32_MULT, rng.inc
+    d = delta
+    while d > 0:
+        if d & 1:
+            acc_mult = (acc_mult * cur_mult) & M64
+            acc_plus = (acc_plus * cur_mult + cur_plus) & M64
+        cur_plus = ((cur_mult + 1) * cur_plus) & M64
+        cur_mult = (cur_mult * cur_mult) & M64
+        d >>= 1
+    rng.state = (acc_mult * rng.state + acc_plus) & M64
+
+
+try:  # optional vectorization; CI runners run the pure loop
+    import numpy as _np
+except ImportError:  # pragma: no cover
+    _np = None
+
+
+def _pcg32_batch_hits(rng, n, cutoff):
+    """Vectorized pcg32_coin_count body: materialize the n LCG states
+    in closed form (s_j = a^j*s0 + (sum_{k<j} a^k)*inc, all mod 2^64 —
+    numpy uint64 arithmetic wraps), apply the XSH-RR output function,
+    count outputs below the cutoff. Bit-identical to the scalar loop
+    (mirror_checks_stoch.py asserts it); exists so the bench twin's
+    timings reflect the batched kernel, not interpreter overhead."""
+    p = _np.empty(n + 1, dtype=_np.uint64)
+    p[0] = 1
+    p[1:] = PCG32_MULT
+    _np.cumprod(p, out=p)  # p[j] = a^j
+    s = _np.empty(n + 1, dtype=_np.uint64)
+    s[0] = 0
+    _np.cumsum(p[:n], out=s[1:])  # s[j] = 1 + a + ... + a^(j-1)
+    states = p * _np.uint64(rng.state) + s * _np.uint64(rng.inc)
+    old = states[:n]
+    x = (((old >> _np.uint64(18)) ^ old) >> _np.uint64(27)) & _np.uint64(M32)
+    rot = old >> _np.uint64(59)
+    out = ((x >> rot) | (x << (_np.uint64(32) - rot))) & _np.uint64(M32)
+    rng.state = int(states[n])
+    return int(_np.count_nonzero(out < _np.uint64(cutoff)))
+
+
+def pcg32_coin_count(rng, n, cutoff):
+    """Pcg32::coin_count — hits among n coins at an integer cutoff,
+    consuming exactly n RNG steps. Degenerate cutoffs know their count,
+    so the stream is jumped, not walked."""
+    if cutoff <= 0:
+        pcg32_advance(rng, n)
+        return 0
+    if cutoff >= PCG32_COIN_ONE:
+        pcg32_advance(rng, n)
+        return n
+    if _np is not None and n >= 16:
+        return _pcg32_batch_hits(rng, n, cutoff)
+    hits = 0
+    for _ in range(n):
+        if rng.next_u32() < cutoff:
+            hits += 1
+    return hits
+
+
+def stochastic_engine_prepare(t):
+    """PreparedStochastic::new — the per-(layer, hop-bucket) message
+    partition the sequential engine recomputes inside every draw:
+    None = empty bucket; ('voidless', e_vh) = expectation-mass only;
+    ('msgs', n_msgs, msg_bits, msg_vh) = coin-flipping messages."""
+    layers = []
+    for l in t['layers']:
+        buckets = []
+        for h in range(HOP_BUCKETS):
+            e_vh = l['elig_vol_hops'][h]
+            e_v = l['elig_vol'][h]
+            if e_v <= 0.0:
+                buckets.append(('voidless', e_vh) if e_vh > 0.0 else None)
+            else:
+                n = max(math.ceil(e_v / ENGINE_MESSAGE_BITS), 1)
+                buckets.append(('msgs', n, e_v / n, e_vh / n))
+        layers.append(buckets)
+    return layers
+
+
+def _engine_draw_plan(prep, decisions, cutoffs):
+    """The RNG consumption schedule of one draw: which (layer, bucket)
+    segments flip coins, in stream order, with their per-position
+    cutoffs. Outcome-independent (only decisions and the partition
+    decide who draws), so ONE plan serves every draw of an evaluation
+    and the whole draw's u32 stream can be materialized at once.
+    Returns None without numpy (the scalar path needs no plan)."""
+    if _np is None:
+        return None
+    lens = []
+    cuts = []
+    for i, (threshold, pinj) in enumerate(decisions):
+        if pinj <= 0.0:
+            continue
+        dmin = max(int(threshold), 1)
+        for h in range(dmin - 1, HOP_BUCKETS):
+            b = prep[i][h]
+            if b is not None and b[0] == 'msgs':
+                lens.append(b[1])
+                cuts.append(cutoffs[i])
+    if not lens:
+        return {'n': 0}
+    lens = _np.asarray(lens, dtype=_np.int64)
+    starts = _np.zeros(len(lens), dtype=_np.int64)
+    _np.cumsum(lens[:-1], out=starts[1:])
+    return {'n': int(lens.sum()), 'starts': starts,
+            'cutoffs': _np.repeat(_np.asarray(cuts, dtype=_np.uint64),
+                                  lens)}
+
+
+def _pcg32_draw_counts(rng, plan):
+    """All of a draw's coin batches in one shot: the closed-form LCG
+    states of `_pcg32_batch_hits` over the plan's full stream, hits
+    segmented back per (layer, bucket) with add.reduceat. Consumes
+    exactly plan['n'] RNG steps; bit-identical to walking the plan
+    through pcg32_coin_count segment by segment."""
+    n = plan['n']
+    p = _np.empty(n + 1, dtype=_np.uint64)
+    p[0] = 1
+    p[1:] = PCG32_MULT
+    _np.cumprod(p, out=p)
+    s = _np.empty(n + 1, dtype=_np.uint64)
+    s[0] = 0
+    _np.cumsum(p[:n], out=s[1:])
+    states = p * _np.uint64(rng.state) + s * _np.uint64(rng.inc)
+    old = states[:n]
+    x = (((old >> _np.uint64(18)) ^ old) >> _np.uint64(27)) & _np.uint64(M32)
+    rot = old >> _np.uint64(59)
+    out = ((x >> rot) | (x << (_np.uint64(32) - rot))) & _np.uint64(M32)
+    hit = (out < plan['cutoffs']).astype(_np.int64)
+    rng.state = int(states[n])
+    return _np.add.reduceat(hit, plan['starts'])
+
+
+def _fold_adds(acc, val, k):
+    """k sequential `acc += val` adds — the hit fold. f64 addition is
+    not multiplication (k*val re-rounds differently), so the fold stays
+    a left-to-right chain; numpy's add.accumulate IS that chain at C
+    speed (strictly sequential, no pairwise regrouping)."""
+    if _np is not None and k >= 64:
+        arr = _np.empty(k + 1, dtype=_np.float64)
+        arr[0] = acc
+        arr[1:] = val
+        return float(_np.add.accumulate(arr)[-1])
+    for _ in range(k):
+        acc += val
+    return acc
+
+
+def _engine_draw_partial(t, prep, decisions, cutoffs, wl_bw, seed, d,
+                         want_trace, plan=None):
+    """One draw's partial: per-layer (latency, bottleneck component)
+    plus the draw totals — the unit the parallel fold combines. Same
+    RNG stream and f64 order as the sequential twin's draw body."""
+    rng = Pcg32.seeded(engine_draw_seed(seed, d))
+    counts = None
+    if plan is not None:
+        counts = _pcg32_draw_counts(rng, plan) if plan['n'] > 0 else ()
+    seg = 0
+    nl = len(t['layers'])
+    lat = [0.0] * nl
+    kb = [0] * nl
+    samples = [None] * nl if want_trace else None
+    draw_total = 0.0
+    draw_wl = 0.0
+    for i in range(nl):
+        l = t['layers'][i]
+        threshold, pinj = decisions[i]
+        dmin = max(int(threshold), 1)
+        moved_vh = 0.0
+        wl_vol = 0.0
+        wl_msgs = 0
+        for h in range(dmin - 1, HOP_BUCKETS):
+            b = prep[i][h]
+            if b is None:
+                continue
+            if b[0] == 'voidless':
+                # Volume-less hop mass moves its expectation even at
+                # pinj = 0 — the sequential twin adds the +0.0 too.
+                moved_vh += pinj * b[1]
+                continue
+            if pinj <= 0.0:
+                continue
+            _, n, msg_bits, msg_vh = b
+            if counts is not None:
+                k = int(counts[seg])
+                seg += 1
+            else:
+                k = pcg32_coin_count(rng, n, cutoffs[i])
+            # k separate adds, not k * msg_bits: f64 addition is not
+            # multiplication, and the contract is bit-equality.
+            wl_vol = _fold_adds(wl_vol, msg_bits, k)
+            moved_vh = _fold_adds(moved_vh, msg_vh, k)
+            wl_msgs += k
+        t_nop = max(l['nop_vol_hops'] - moved_vh, 0.0) / t['nop_agg_bw']
+        t_wl = wl_vol / wl_bw if wl_vol > 0.0 else 0.0
+        comps = [l['t_comp'], l['t_dram'], l['t_noc'], t_nop, t_wl]
+        k_best = 0
+        for k2 in range(1, 5):
+            if comps[k2] > comps[k_best]:
+                k_best = k2
+        lat[i] = comps[k_best]
+        kb[i] = k_best
+        draw_total += comps[k_best]
+        draw_wl += wl_vol
+        if want_trace:
+            t_wait = (t_wl * (wl_msgs - 1) / (2.0 * wl_msgs)) \
+                if wl_msgs > 0 else 0.0
+            samples[i] = {'wl_bits': wl_vol, 't_serialize': t_wl,
+                          't_wait': t_wait,
+                          'backoffs': max(wl_msgs - 1, 0),
+                          't_nop_residual': t_nop}
+    return {'lat': lat, 'kb': kb, 'samples': samples,
+            'draw_total': draw_total, 'draw_wl': draw_wl}
+
+
+def stochastic_engine_evaluate_fast(t, decisions, wl_bw, draws, seed,
+                                    prep=None, want_trace=True):
+    """The rebuilt kernel: prepared tables + integer-cutoff coin
+    batches + independent per-draw partials folded in draw order.
+    Returns (result, trace) like `stochastic_engine_evaluate`, with
+    trace = None when want_trace is False (the totals-only entry grid
+    sweeps use). Bit-identical to the sequential twin for every input;
+    the Rust engine computes the partials on worker threads and this
+    fold makes the output independent of the worker count."""
+    assert len(decisions) == len(t['layers'])
+    assert draws >= 1
+    if prep is None:
+        prep = stochastic_engine_prepare(t)
+    cutoffs = [coin_cutoff(p) for (_, p) in decisions]
+    nl = len(t['layers'])
+    layer_lat_sum = [0.0] * nl
+    comp_attr = [[0.0] * 5 for _ in range(nl)]
+    trace = [[] for _ in range(nl)] if want_trace else None
+    total_sum = 0.0
+    wl_bits_sum = 0.0
+    plan = _engine_draw_plan(prep, decisions, cutoffs)
+    partials = [_engine_draw_partial(t, prep, decisions, cutoffs, wl_bw,
+                                     seed, d, want_trace, plan=plan)
+                for d in range(draws)]
+    for part in partials:
+        for i in range(nl):
+            layer_lat_sum[i] += part['lat'][i]
+            comp_attr[i][part['kb'][i]] += part['lat'][i]
+            if want_trace:
+                trace[i].append(part['samples'][i])
+        total_sum += part['draw_total']
+        wl_bits_sum += part['draw_wl']
+    dn = float(draws)
+    shares = [0.0] * 5
+    for attr in comp_attr:
+        for k in range(5):
+            shares[k] += attr[k]
+    if total_sum > 0.0:
+        shares = [s / total_sum for s in shares]
+    bottleneck = []
+    for attr in comp_attr:
+        k_best = 0
+        for k in range(1, 5):
+            if attr[k] > attr[k_best]:
+                k_best = k
+        bottleneck.append(k_best)
+    result = {'total_s': total_sum / dn, 'shares': shares,
+              'wl_bits': wl_bits_sum / dn, 'bottleneck': bottleneck,
+              'layer_latency': [x / dn for x in layer_lat_sum]}
+    return result, trace

@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Regenerate rust/tests/goldens/stoch_engine.json from the cost
+mirror's `stochastic_engine_evaluate` — the bit-exact twin of the
+sequential Rust engine that froze these numbers.
+
+The golden file is the PR-crossing contract of the stochastic-engine
+refactor: floats are stored as f64 *bit patterns* ("0x%016X"), inputs
+as shortest-round-trip decimals (correctly-rounded parsing rebuilds the
+identical f64 in both Rust and Python), so `tests/stoch_invariance.rs`
+and `mirror_checks_stoch.py` can assert byte-level equality without
+agreeing on a text format. The Rust-side regeneration tool
+(`tests/gen_goldens.rs`) emits the same cases; either side may
+regenerate, and the invariance suites compare parsed values, not bytes.
+
+Run:  python3 gen_goldens_stoch.py          (writes the golden file)
+      python3 gen_goldens_stoch.py --check  (asserts file is current)
+
+Commit a diff ONLY when the engine's output is *meant* to change —
+that breaks the bit-exactness contract and must be called out loudly.
+"""
+
+import json
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from cost_mirror import (  # noqa: E402
+    HOP_BUCKETS, Package, build, build_tensors, layer_sequential,
+    stochastic_engine_evaluate, trace_mean,
+)
+
+GOLDEN_PATH = os.path.normpath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "..", "..", "rust", "tests", "goldens", "stoch_engine.json"))
+
+
+def bits(x):
+    """f64 -> "0x..." bit-pattern string (sign-preserving, NaN-safe)."""
+    return "0x%016X" % struct.unpack("<Q", struct.pack("<d", float(x)))[0]
+
+
+def synthetic_tensors():
+    """The engine unit tests' two-layer set: layer 0 has a
+    message-heavy bucket AND a volume-less bucket (the expectation-mass
+    path); layer 1 is compute-bound with no eligible volume."""
+    l0 = {
+        "t_comp": 1.0e-6, "t_dram": 0.5e-6, "t_noc": 0.0,
+        "nop_vol_hops": 10.0e6,
+        "elig_vol_hops": [0.0] * HOP_BUCKETS,
+        "elig_vol": [0.0] * HOP_BUCKETS,
+    }
+    l0["elig_vol_hops"][0] = 2.0e6
+    l0["elig_vol"][0] = 2.0e6
+    l0["elig_vol_hops"][3] = 8.0e6
+    l0["elig_vol"][3] = 0.2e6
+    l1 = {
+        "t_comp": 5.0e-6, "t_dram": 1.0e-6, "t_noc": 0.0,
+        "nop_vol_hops": 1.0e6,
+        "elig_vol_hops": [0.0] * HOP_BUCKETS,
+        "elig_vol": [0.0] * HOP_BUCKETS,
+    }
+    return {"layers": [l0, l1], "nop_agg_bw": 1.0e12}
+
+
+def uniform(t, d, p):
+    return [(d, p)] * len(t["layers"])
+
+
+def varied(t):
+    """Cycling decisions: thresholds 1..=4, pinj through a quartet
+    that includes the 0.0 (skip) and 1.0 (every-coin-wins) edges."""
+    ps = [0.15, 0.45, 1.0, 0.0]
+    return [((i % 4) + 1, ps[i % 4]) for i in range(len(t["layers"]))]
+
+
+def cases():
+    pkg = Package()
+
+    def mk(name):
+        wl = build(name)
+        return build_tensors(wl, layer_sequential(wl, pkg), pkg)
+
+    synth = synthetic_tensors()
+    zfnet = mk("zfnet")
+    googlenet = mk("googlenet")
+    return [
+        # name, workload-or-None, tensors, decisions, wl_bw, draws,
+        # seed, full_trace
+        ("synthetic/u1_p0.6", None, synth, uniform(synth, 1, 0.6),
+         64e9, 8, 3, True),
+        ("synthetic/u2_p1.0", None, synth, uniform(synth, 2, 1.0),
+         96e9, 4, 7, True),
+        ("zfnet/u1_p0.4", "zfnet", zfnet, uniform(zfnet, 1, 0.4),
+         64e9, 6, 42, False),
+        ("googlenet/varied", "googlenet", googlenet, varied(googlenet),
+         96e9, 4, 0xBEEF, False),
+    ]
+
+
+def tensors_doc(t):
+    return {
+        "nop_agg_bw": t["nop_agg_bw"],
+        "layers": [
+            {
+                "t_comp": l["t_comp"], "t_dram": l["t_dram"],
+                "t_noc": l["t_noc"], "nop_vol_hops": l["nop_vol_hops"],
+                "elig_vol_hops": list(l["elig_vol_hops"]),
+                "elig_vol": list(l["elig_vol"]),
+            }
+            for l in t["layers"]
+        ],
+    }
+
+
+def render():
+    out = {"cases": []}
+    for (name, workload, t, decisions, wl_bw, draws, seed, full) in cases():
+        result, trace = stochastic_engine_evaluate(
+            t, decisions, wl_bw, draws, seed)
+        doc = {"name": name}
+        if workload is not None:
+            doc["workload"] = workload
+        else:
+            doc["tensors"] = tensors_doc(t)
+        doc["decisions"] = [[d, p] for (d, p) in decisions]
+        doc["wl_bw"] = wl_bw
+        doc["draws"] = draws
+        doc["seed"] = seed
+        doc["total_s"] = bits(result["total_s"])
+        doc["wl_bits"] = bits(result["wl_bits"])
+        doc["shares"] = [bits(s) for s in result["shares"]]
+        doc["bottleneck"] = list(result["bottleneck"])
+        doc["layer_latency"] = [bits(x) for x in result["layer_latency"]]
+        doc["total_backoffs"] = sum(
+            s["backoffs"] for layer in trace for s in layer)
+        # MessageTrace::mean_wait_s: per-layer mean, summed in layer
+        # order (f64 add order matters — mirror it exactly).
+        acc = 0.0
+        for layer in trace:
+            acc += trace_mean(layer, "t_wait")
+        doc["mean_wait_s"] = bits(acc)
+        doc["mean_serialize"] = [
+            bits(trace_mean(layer, "t_serialize")) for layer in trace]
+        doc["mean_nop_residual"] = [
+            bits(trace_mean(layer, "t_nop_residual")) for layer in trace]
+        if full:
+            doc["trace_samples"] = [
+                [[bits(s["wl_bits"]), bits(s["t_serialize"]),
+                  bits(s["t_wait"]), s["backoffs"],
+                  bits(s["t_nop_residual"])] for s in layer]
+                for layer in trace
+            ]
+        else:
+            doc["trace_samples"] = None
+        out["cases"].append(doc)
+    return json.dumps(out, indent=2) + "\n"
+
+
+def main():
+    text = render()
+    if "--check" in sys.argv[1:]:
+        with open(GOLDEN_PATH) as f:
+            current = f.read()
+        if current != text:
+            print("STALE: %s does not match the mirror's output"
+                  % GOLDEN_PATH)
+            return 1
+        print("OK: %s is current" % GOLDEN_PATH)
+        return 0
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        f.write(text)
+    print("wrote %s (%d cases)" % (GOLDEN_PATH, len(cases())))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

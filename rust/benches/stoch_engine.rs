@@ -1,0 +1,255 @@
+//! Stochastic-engine payoff bench: both axes of the tabulated,
+//! draw-parallel rewrite, persisted as `BENCH_stoch_engine.json` so the
+//! speedup claims ride with the tree.
+//!
+//! * **Grid throughput** (`grid` section): a full (threshold × pinj)
+//!   sweep through the prepared, totals-only path (`engine_sweep`:
+//!   one `PreparedStochastic` per tensor set, trace assembly skipped)
+//!   against the pre-refactor cost profile — per-point unprepared
+//!   `evaluate` with full trace assembly. Both run at workers = 0, so
+//!   the speedup isolates tabulation + trace-skip alone.
+//! * **Draw scaling** (`draw_scaling` section): draws/sec of one
+//!   evaluation at 1/2/4 workers — the `parallel_map_with` fan-out
+//!   with its draw-ordered byte-identical fold.
+//!
+//! Every configuration is asserted bit-identical to the workers = 0
+//! unprepared evaluation before anything is timed — a throughput
+//! number for a diverging path would be meaningless.
+//!
+//! Run: `cargo bench --bench stoch_engine`
+//! Env: `WISPER_BENCH_QUICK=1` shrinks workloads/draws (the CI mode);
+//!      `WISPER_BENCH_OUT=path` overrides the output path (default
+//!      `../BENCH_stoch_engine.json`, the repo root when run via
+//!      cargo).
+
+use std::path::PathBuf;
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::dse::campaign::engine_sweep;
+use wisper::mapping::layer_sequential;
+use wisper::sim::cost::{build_tensors, CostTensors};
+use wisper::sim::engine::{EvalEngine, EvalOutcome, StochasticEngine};
+use wisper::sim::policy::LayerDecision;
+use wisper::util::benchkit::{
+    bb, bench, report as breport, write_stoch_engine, BenchRecord,
+    ScalingRecord,
+};
+use wisper::workloads::build;
+
+/// Full bitwise equality of two outcomes (results and traces).
+fn assert_outcome_bits(a: &EvalOutcome, b: &EvalOutcome, ctx: &str) {
+    assert_eq!(a.result.total_s.to_bits(), b.result.total_s.to_bits(), "{ctx}: total_s");
+    assert_eq!(a.result.wl_bits.to_bits(), b.result.wl_bits.to_bits(), "{ctx}: wl_bits");
+    for k in 0..5 {
+        assert_eq!(
+            a.result.shares[k].to_bits(),
+            b.result.shares[k].to_bits(),
+            "{ctx}: shares[{k}]"
+        );
+    }
+    assert_eq!(a.result.bottleneck, b.result.bottleneck, "{ctx}: bottleneck");
+    let lat_a: Vec<u64> = a.result.layer_latency.iter().map(|x| x.to_bits()).collect();
+    let lat_b: Vec<u64> = b.result.layer_latency.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(lat_a, lat_b, "{ctx}: layer_latency");
+    let (ta, tb) = (a.trace.as_ref().unwrap(), b.trace.as_ref().unwrap());
+    assert_eq!(ta.draws, tb.draws, "{ctx}: draws");
+    for (i, (la, lb)) in ta.layers.iter().zip(&tb.layers).enumerate() {
+        for (d, (sa, sb)) in la.samples.iter().zip(&lb.samples).enumerate() {
+            assert!(
+                sa.wl_bits.to_bits() == sb.wl_bits.to_bits()
+                    && sa.t_serialize.to_bits() == sb.t_serialize.to_bits()
+                    && sa.t_wait.to_bits() == sb.t_wait.to_bits()
+                    && sa.backoffs == sb.backoffs
+                    && sa.t_nop_residual.to_bits() == sb.t_nop_residual.to_bits(),
+                "{ctx}: layer {i} draw {d} trace diverges"
+            );
+        }
+    }
+}
+
+/// Parity gate: workers ∈ {1, 2, 4}, the prepared path and the
+/// totals-only path all bit-match the workers = 0 unprepared
+/// evaluation.
+fn parity_gate(t: &CostTensors, decisions: &[LayerDecision], wl_bw: f64, draws: usize, name: &str) {
+    let baseline = StochasticEngine {
+        draws,
+        seed: 0x5EED,
+        workers: 0,
+    };
+    let want = baseline.evaluate(t, decisions, wl_bw).unwrap();
+    for workers in [1usize, 2, 4] {
+        let engine = StochasticEngine {
+            draws,
+            seed: 0x5EED,
+            workers,
+        };
+        let got = engine.evaluate(t, decisions, wl_bw).unwrap();
+        assert_outcome_bits(&got, &want, &format!("{name} workers={workers}"));
+    }
+    let prep = baseline.prepare(t);
+    let prepared = baseline.evaluate_prepared(&prep, t, decisions, wl_bw).unwrap();
+    assert_outcome_bits(&prepared, &want, &format!("{name} prepared"));
+    let totals = baseline
+        .evaluate_totals_prepared(&prep, t, decisions, wl_bw)
+        .unwrap();
+    assert_eq!(
+        totals.total_s.to_bits(),
+        want.result.total_s.to_bits(),
+        "{name}: totals-only path diverges"
+    );
+}
+
+fn main() {
+    let quick = std::env::var("WISPER_BENCH_QUICK").is_ok();
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let elig = WirelessConfig::default();
+    let thresholds: Vec<u32> = vec![1, 2, 3, 4];
+    let pinjs: Vec<f64> = (0..15).map(|i| 0.10 + 0.05 * i as f64).collect();
+    let wl_bw = 64e9;
+
+    let workloads: &[&str] = if quick {
+        &["googlenet"]
+    } else {
+        &["googlenet", "resnet50", "resnet152"]
+    };
+    let grid_draws = if quick { 4 } else { 16 };
+    let scale_draws = if quick { 16 } else { 64 };
+    let reps = if quick { 2 } else { 3 };
+
+    let mut ms = Vec::new();
+    let mut grid_records = Vec::new();
+    let mut scaling_records = Vec::new();
+    for name in workloads {
+        let wl = build(name).unwrap();
+        let m = layer_sequential(&wl, &pkg);
+        let t = build_tensors(&wl, &m, &pkg, &elig).unwrap();
+        let decisions: Vec<LayerDecision> = {
+            let ps = [0.15, 0.45, 1.0, 0.0];
+            (0..t.layers.len())
+                .map(|i| LayerDecision {
+                    threshold: (i % 4 + 1) as u32,
+                    pinj: ps[i % 4],
+                })
+                .collect()
+        };
+        parity_gate(&t, &decisions, wl_bw, scale_draws, name);
+
+        // Grid throughput: prepared totals-only sweep vs the pre-PR
+        // cost profile (per-point unprepared evaluate, full trace).
+        let inline = StochasticEngine {
+            draws: grid_draws,
+            seed: 0x5EED,
+            workers: 0,
+        };
+        let points = (thresholds.len() * pinjs.len()) as f64;
+        let grid_full = || {
+            let mut acc = 0.0;
+            for &th in &thresholds {
+                for &p in &pinjs {
+                    let d = vec![
+                        LayerDecision {
+                            threshold: th,
+                            pinj: p,
+                        };
+                        t.layers.len()
+                    ];
+                    acc += inline.evaluate(&t, &d, wl_bw).unwrap().result.total_s;
+                }
+            }
+            acc
+        };
+        let grid_fast =
+            || engine_sweep(&t, &thresholds, &pinjs, wl_bw, &inline).unwrap();
+        // The sweep's own parity gate: identical totals per point.
+        {
+            let sweep = grid_fast();
+            let mut i = 0;
+            for &th in &thresholds {
+                for &p in &pinjs {
+                    let d = vec![
+                        LayerDecision {
+                            threshold: th,
+                            pinj: p,
+                        };
+                        t.layers.len()
+                    ];
+                    let want = inline.evaluate(&t, &d, wl_bw).unwrap().result;
+                    assert_eq!(
+                        sweep.points[i].total_s.to_bits(),
+                        want.total_s.to_bits(),
+                        "{name}: sweep point {i} diverges"
+                    );
+                    i += 1;
+                }
+            }
+        }
+        let full = bench(&format!("stoch_grid_full/{name}"), 1, reps, || {
+            bb(grid_full())
+        });
+        let fast = bench(&format!("stoch_grid/{name}"), 1, reps, || {
+            bb(grid_fast().t_wired)
+        });
+        grid_records.push(BenchRecord::from_pair(
+            &format!("stoch_grid/{name}"),
+            points,
+            &full,
+            &fast,
+        ));
+        ms.push(full);
+        ms.push(fast);
+
+        // Draw scaling: draws/sec at 1/2/4 workers of one evaluation.
+        let mut baseline = 0.0;
+        for workers in [1usize, 2, 4] {
+            let engine = StochasticEngine {
+                draws: scale_draws,
+                seed: 0x5EED,
+                workers,
+            };
+            let m = bench(
+                &format!("stoch_draws/{name}/{workers}"),
+                1,
+                reps,
+                || bb(engine.evaluate(&t, &decisions, wl_bw).unwrap().result.total_s),
+            );
+            let dps = m.throughput(scale_draws as f64);
+            if workers == 1 {
+                baseline = dps;
+            }
+            scaling_records.push(ScalingRecord::from_throughput(
+                &format!("stoch_draws/{name}/{workers}"),
+                workers,
+                dps,
+                baseline,
+            ));
+            ms.push(m);
+        }
+    }
+
+    breport(&ms);
+    let out = std::env::var("WISPER_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("../BENCH_stoch_engine.json"));
+    write_stoch_engine(&out, &grid_records, &scaling_records).unwrap();
+    println!(
+        "\nwrote {} grid + {} scaling entries to {}",
+        grid_records.len(),
+        scaling_records.len(),
+        out.display()
+    );
+    for r in &grid_records {
+        println!(
+            "  {:<28} {:>10.1} points/s  {:>5.2}x vs per-point full-trace",
+            r.name, r.iters_per_sec, r.speedup_vs_full
+        );
+    }
+    for r in &scaling_records {
+        println!(
+            "  {:<28} {:>10.1} draws/s   {:>5.2}x vs 1 worker  ({:.0}% efficient)",
+            r.name,
+            r.units_per_sec,
+            r.speedup_vs_one,
+            r.efficiency * 100.0
+        );
+    }
+}

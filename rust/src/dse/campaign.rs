@@ -70,7 +70,7 @@ use crate::report::Json;
 use crate::runtime::{contract::NUM_CONFIGS, pack_input, Runtime};
 use crate::sim::cost::CostTensors;
 use crate::sim::engine::{EvalBackend, EvalEngine};
-use crate::sim::{evaluate_wired, PreparedCosts};
+use crate::sim::evaluate_wired;
 use crate::sim::policy::{
     checked_speedup, evaluate_policies_backend, LayerDecision, PolicySpec,
 };
@@ -690,10 +690,12 @@ pub fn engine_sweep(
         );
     }
     let t_wired = evaluate_wired(tensors).total_s;
-    // Prepared layer of the incremental cost stack: suffix tables and
-    // the fixed per-layer triple are shared by every grid point, and
-    // one decision buffer is refilled per point instead of allocated.
-    let prepared = PreparedCosts::new(tensors);
+    // The engine's own prepared tables (suffix sums for the analytical
+    // backend, message partitions for the stochastic one) are shared
+    // by every grid point, and one decision buffer is refilled per
+    // point instead of allocated. Totals-only pricing: a sweep
+    // discards every trace, so none is assembled.
+    let prepared = engine.prepare(tensors);
     let mut decisions = vec![
         LayerDecision {
             threshold: 1,
@@ -708,9 +710,7 @@ pub fn engine_sweep(
                 threshold: t,
                 pinj: p,
             });
-            let r = engine
-                .evaluate_prepared(&prepared, tensors, &decisions, wl_bw)?
-                .result;
+            let r = engine.evaluate_totals_prepared(&prepared, tensors, &decisions, wl_bw)?;
             let speedup = if r.total_s > 0.0 {
                 t_wired / r.total_s
             } else {
@@ -795,6 +795,8 @@ pub fn evaluate_campaign_unit(
     let policies = if spec.policies.is_empty() {
         Vec::new()
     } else {
+        // workers = 0: units already run on the campaign's own pool,
+        // so draw parallelism inside a unit would only oversubscribe.
         evaluate_policies_backend(
             w.tensors,
             bw,
@@ -802,6 +804,7 @@ pub fn evaluate_campaign_unit(
             &spec.thresholds,
             &spec.pinjs,
             &unit_backend,
+            0,
         )?
         .into_iter()
         .map(|e| PolicyOutcome {

@@ -754,7 +754,9 @@ impl Experiment for StochasticValidation {
                     let (e, st, bo) = figures::expected_vs_engine(
                         p,
                         &w,
-                        stochastic.engine().as_ref(),
+                        stochastic
+                            .engine_with_workers(s.resolved_workers(ctx.coord))
+                            .as_ref(),
                     )?;
                     (e, st, bo, stochastic.label())
                 }
@@ -865,7 +867,8 @@ impl Experiment for PolicyFeedback {
                 EvalBackend::Analytical => backend.for_workload(name),
                 stochastic => stochastic,
             };
-            let engine = wl_backend.engine();
+            let workers = s.resolved_workers(ctx.coord);
+            let engine = wl_backend.engine_with_workers(workers);
             let wired = evaluate_wired(&p.tensors).total_s;
             for &bw in &s.bandwidths {
                 let bk = bw_key(bw);
@@ -882,6 +885,7 @@ impl Experiment for PolicyFeedback {
                         &s.thresholds,
                         &s.injection_probs,
                         &wl_backend,
+                        workers,
                     )?;
                     let out = engine.evaluate(&p.tensors, &decisions, bw)?;
                     let speedup = checked_speedup(wired, out.result.total_s)?;
@@ -1017,6 +1021,7 @@ impl Experiment for PolicyAblation {
                     &s.thresholds,
                     &s.injection_probs,
                     &p.backend,
+                    s.resolved_workers(ctx.coord),
                 )?;
                 let name = &p.workload.name;
                 for e in &evals {

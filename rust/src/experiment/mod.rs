@@ -129,12 +129,17 @@ impl<'a> ExperimentCtx<'a> {
                 &s.injection_probs,
                 bw,
             )?,
+            // Interactive sweeps own the machine: fan the stochastic
+            // draws out on the scenario's worker count (byte-identical
+            // to inline — the fold is draw-ordered).
             stochastic => crate::dse::engine_sweep(
                 &self.prepared[i].tensors,
                 &s.thresholds,
                 &s.injection_probs,
                 bw,
-                stochastic.engine().as_ref(),
+                stochastic
+                    .engine_with_workers(s.resolved_workers(self.coord))
+                    .as_ref(),
             )?,
         };
         let r = Rc::new(r);

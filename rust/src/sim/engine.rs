@@ -14,14 +14,40 @@
 //! * [`StochasticEngine`] — the per-message coin-flip model (paper
 //!   §III-B2 criterion 3 as actually randomized) lifted from a
 //!   validation-only dead end to a first-class backend: eligible
-//!   traffic is chopped into [`MESSAGE_BITS`]-sized messages per
-//!   hop-distance bucket, each flips the layer's injection coin, and
-//!   the result is averaged over `draws` independent draws. Every
-//!   evaluation emits a [`MessageTrace`]: per-layer per-draw wireless
-//!   serialization, busy-channel wait, backoff (deferral) counts and
-//!   residual wired-NoP time — the observability signal the
+//!   traffic is chopped into
+//!   [`MESSAGE_BITS`](crate::sim::stochastic::MESSAGE_BITS)-sized
+//!   messages per hop-distance bucket, each flips the layer's
+//!   injection coin, and the result is averaged over `draws`
+//!   independent draws. Full evaluations emit a [`MessageTrace`]:
+//!   per-layer per-draw wireless serialization, busy-channel wait,
+//!   backoff (deferral) counts and residual wired-NoP time — the
+//!   observability signal the
 //!   [`FeedbackPolicy`](super::policy::FeedbackPolicy) closes its loop
 //!   on.
+//!
+//! # The prepared / parallel contract
+//!
+//! The stochastic kernel is *prepared* and *draw-parallel*, and both
+//! are pure-speed moves — the output is byte-identical to the
+//! sequential unprepared evaluation by construction:
+//!
+//! * [`EvalEngine::prepare`] tabulates the backend's per-tensor work
+//!   once ([`PreparedEval`]: suffix sums for the analytical engine,
+//!   the per-(layer, hop-bucket) message partition
+//!   [`PreparedStochastic`] for the stochastic one) so grid sweeps
+//!   ([`crate::dse::engine_sweep`]) amortize it across every
+//!   (threshold × pinj) point. The tables hold the *same* `n_msgs` /
+//!   `msg_bits` / `msg_vh` the draw loop used to recompute, so every
+//!   coin flips at the same stream position with the same stakes.
+//! * Draws are independent streams (`Pcg32::seeded(draw_seed(seed,
+//!   d))`), so [`StochasticEngine::workers`] may fan them out on
+//!   [`crate::util::threadpool::parallel_map_with`]; per-draw partials
+//!   fold in draw-index order, so the f64 accumulation order — and
+//!   therefore every output bit — is independent of the worker count.
+//! * [`EvalEngine::evaluate_totals_prepared`] skips trace assembly for
+//!   callers that only price ([`crate::dse::engine_sweep`] discards
+//!   every trace); the RNG stream and the totals arithmetic are
+//!   untouched, only the `TraceSample` bookkeeping is elided.
 //!
 //! The [`EvalBackend`] value (`analytical` |
 //! `stochastic:draws[:seed]`) is the axis threaded through
@@ -33,15 +59,18 @@
 //!
 //! CAUTION: `python/tools/cost_mirror.py` mirrors both engines (and
 //! the trace arithmetic) bit-exactly — checked by
-//! `mirror_checks_engine.py`; keep them in sync.
+//! `mirror_checks_engine.py` and, against the committed goldens in
+//! `tests/goldens/stoch_engine.json`, by `mirror_checks_stoch.py`;
+//! keep them in sync.
 
 use crate::sim::cost::{CostTensors, HOP_BUCKETS};
 use crate::sim::delta::PreparedCosts;
 use crate::sim::policy::{evaluate_policy, LayerDecision};
-use crate::sim::stochastic::MESSAGE_BITS;
+use crate::sim::stochastic::message_partition;
 use crate::sim::EvalResult;
 use crate::util::anneal::derive_seed;
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::parallel_map_with;
 use anyhow::{bail, Result};
 
 /// One per-draw observation of one layer's wireless behaviour.
@@ -156,15 +185,22 @@ pub trait EvalEngine: Sync {
         wl_bw: f64,
     ) -> Result<EvalOutcome>;
 
-    /// [`Self::evaluate`] with a caller-held [`PreparedCosts`] for
+    /// Tabulate this backend's per-tensor work once, for reuse across
+    /// a whole decision grid via [`Self::evaluate_prepared`]. The
+    /// default prepares the analytical suffix sums (every backend can
+    /// at least carry them); backends with their own tables override.
+    fn prepare(&self, tensors: &CostTensors) -> PreparedEval {
+        PreparedEval::Analytical(PreparedCosts::new(tensors))
+    }
+
+    /// [`Self::evaluate`] with caller-held [`Self::prepare`] tables for
     /// `tensors`, so grid sweeps amortize the per-tensor preparation.
-    /// Backends that cannot exploit it (the stochastic engine prices
-    /// per message, not per suffix sum) fall back to `evaluate` —
-    /// results are identical either way; `prepared` MUST be built from
-    /// `tensors`.
+    /// Results are bit-identical either way; `prepared` MUST be built
+    /// from `tensors`. A backend handed another backend's variant falls
+    /// back to `evaluate` (correct, just unamortized).
     fn evaluate_prepared(
         &self,
-        prepared: &PreparedCosts,
+        prepared: &PreparedEval,
         tensors: &CostTensors,
         decisions: &[LayerDecision],
         wl_bw: f64,
@@ -172,6 +208,35 @@ pub trait EvalEngine: Sync {
         let _ = prepared;
         self.evaluate(tensors, decisions, wl_bw)
     }
+
+    /// Totals-only pricing: [`Self::evaluate_prepared`]'s
+    /// [`EvalResult`] without the trace. Backends that pay to assemble
+    /// traces ([`StochasticEngine`]) override this to skip that work —
+    /// the RNG stream and every total stay bit-identical — so grid
+    /// sweeps that discard traces ([`crate::dse::engine_sweep`]) stop
+    /// allocating O(layers × draws) samples per point.
+    fn evaluate_totals_prepared(
+        &self,
+        prepared: &PreparedEval,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalResult> {
+        Ok(self
+            .evaluate_prepared(prepared, tensors, decisions, wl_bw)?
+            .result)
+    }
+}
+
+/// Backend-specific per-tensor tables ([`EvalEngine::prepare`]): built
+/// once, reused across every decision vector priced against the same
+/// [`CostTensors`].
+#[derive(Debug, Clone)]
+pub enum PreparedEval {
+    /// Analytical suffix-sum tables ([`PreparedCosts`]).
+    Analytical(PreparedCosts),
+    /// Stochastic message-partition tables ([`PreparedStochastic`]).
+    Stochastic(PreparedStochastic),
 }
 
 /// The closed-form expected-value backend: bit-for-bit
@@ -202,11 +267,14 @@ impl EvalEngine for AnalyticalEngine {
 
     fn evaluate_prepared(
         &self,
-        prepared: &PreparedCosts,
+        prepared: &PreparedEval,
         tensors: &CostTensors,
         decisions: &[LayerDecision],
         wl_bw: f64,
     ) -> Result<EvalOutcome> {
+        let PreparedEval::Analytical(prep) = prepared else {
+            return self.evaluate(tensors, decisions, wl_bw);
+        };
         if decisions.len() != tensors.layers.len() {
             bail!(
                 "one offload decision per layer: got {} decisions for {} layers",
@@ -215,7 +283,7 @@ impl EvalEngine for AnalyticalEngine {
             );
         }
         Ok(EvalOutcome {
-            result: prepared.evaluate(decisions, wl_bw),
+            result: prep.evaluate(decisions, wl_bw),
             trace: None,
         })
     }
@@ -240,6 +308,14 @@ pub struct StochasticEngine {
     pub draws: usize,
     /// Base seed; draw `d` runs on `Pcg32::seeded(seed ^ d * phi64)`.
     pub seed: u64,
+    /// Worker threads for draw parallelism: `0` (and `1`) run every
+    /// draw inline on the caller's thread. Per-draw partials fold in
+    /// draw-index order, so the output is byte-identical for every
+    /// value — this knob trades wall-clock only. Campaign units keep
+    /// `0` (they already own the worker pool); `wisper run`, serve and
+    /// the feedback policy's refit pricing default to the scenario's
+    /// resolved worker count.
+    pub workers: usize,
 }
 
 impl Default for StochasticEngine {
@@ -247,6 +323,7 @@ impl Default for StochasticEngine {
         Self {
             draws: DEFAULT_DRAWS,
             seed: DEFAULT_SEED,
+            workers: 0,
         }
     }
 }
@@ -263,12 +340,190 @@ fn draw_seed(seed: u64, draw: usize) -> u64 {
     seed ^ (draw as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
-impl EvalEngine for StochasticEngine {
-    fn evaluate(
+/// One (layer, hop-bucket) cell of [`PreparedStochastic`]: what the
+/// draw loop does when the bucket is eligible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BucketPlan {
+    /// No eligible mass at this distance.
+    Empty,
+    /// Hop mass with no chop-able volume: move `pinj * e_vh` of
+    /// expectation, exactly what the analytical model does (no coin,
+    /// no RNG consumption).
+    Voidless { e_vh: f64 },
+    /// Real volume chopped into messages; each flips the layer's coin
+    /// and a winner moves `msg_bits` / `msg_vh`.
+    Messages {
+        n_msgs: u64,
+        msg_bits: f64,
+        msg_vh: f64,
+    },
+}
+
+/// The stochastic engine's per-tensor tables (sibling of
+/// [`PreparedCosts`]): the per-(layer, hop-bucket) message partition
+/// the sequential kernel used to recompute inside every draw of every
+/// grid point. Built once per [`CostTensors`] via
+/// [`crate::sim::stochastic::message_partition`] — the same formula the
+/// flow-level validation twin chops with — so every coin flips at the
+/// identical RNG-stream position with the identical stakes, and the
+/// output stays bit-for-bit that of the unprepared path.
+#[derive(Debug, Clone)]
+pub struct PreparedStochastic {
+    /// `buckets[layer][h]` plans hop distance `h + 1`.
+    buckets: Vec<[BucketPlan; HOP_BUCKETS]>,
+}
+
+impl PreparedStochastic {
+    pub fn new(t: &CostTensors) -> Self {
+        let buckets = t
+            .layers
+            .iter()
+            .map(|l| {
+                let mut row = [BucketPlan::Empty; HOP_BUCKETS];
+                for (h, plan) in row.iter_mut().enumerate() {
+                    let e_vh = l.elig_vol_hops[h];
+                    let e_v = l.elig_vol[h];
+                    *plan = if e_v <= 0.0 {
+                        if e_vh > 0.0 {
+                            BucketPlan::Voidless { e_vh }
+                        } else {
+                            BucketPlan::Empty
+                        }
+                    } else {
+                        let (n_msgs, msg_bits, msg_vh) = message_partition(e_v, e_vh);
+                        BucketPlan::Messages {
+                            n_msgs,
+                            msg_bits,
+                            msg_vh,
+                        }
+                    };
+                }
+                row
+            })
+            .collect();
+        Self { buckets }
+    }
+
+    /// Number of layers the tables were built for.
+    pub fn layers(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+/// One draw's independent contribution, folded in draw-index order by
+/// [`StochasticEngine`]'s kernel — the unit of draw parallelism.
+struct DrawPartial {
+    /// Per-layer bottleneck latency this draw.
+    lat: Vec<f64>,
+    /// Per-layer winning component index this draw.
+    kb: Vec<usize>,
+    /// Per-layer trace samples, when the caller wants the trace.
+    samples: Option<Vec<TraceSample>>,
+    draw_total: f64,
+    draw_wl: f64,
+}
+
+/// Price one draw against the prepared tables. Walks the identical RNG
+/// stream the sequential loop walked: [`Pcg32::coin_count`] consumes
+/// exactly `n_msgs` steps per eligible bucket, and a `pinj <= 0`
+/// message bucket consumes none (just like the skipped coin loop).
+#[allow(clippy::too_many_arguments)]
+fn draw_partial(
+    t: &CostTensors,
+    prep: &PreparedStochastic,
+    decisions: &[LayerDecision],
+    cutoffs: &[u64],
+    wl_bw: f64,
+    seed: u64,
+    d: usize,
+    want_trace: bool,
+) -> DrawPartial {
+    let nl = t.layers.len();
+    let mut rng = Pcg32::seeded(draw_seed(seed, d));
+    let mut out = DrawPartial {
+        lat: Vec::with_capacity(nl),
+        kb: Vec::with_capacity(nl),
+        samples: want_trace.then(|| Vec::with_capacity(nl)),
+        draw_total: 0.0,
+        draw_wl: 0.0,
+    };
+    for i in 0..nl {
+        let l = &t.layers[i];
+        let dec = decisions[i];
+        let dmin = (dec.threshold as usize).max(1);
+        let mut moved_vh = 0.0;
+        let mut wl_vol = 0.0;
+        let mut wl_msgs = 0u64;
+        for plan in prep.buckets[i].get(dmin - 1..).into_iter().flatten() {
+            match *plan {
+                BucketPlan::Empty => {}
+                BucketPlan::Voidless { e_vh } => {
+                    moved_vh += dec.pinj * e_vh;
+                }
+                BucketPlan::Messages {
+                    n_msgs,
+                    msg_bits,
+                    msg_vh,
+                } => {
+                    if dec.pinj <= 0.0 {
+                        continue;
+                    }
+                    let k = rng.coin_count(n_msgs, cutoffs[i]);
+                    // k separate adds, not k * msg_bits: f64 addition
+                    // is non-associative and the accumulation order is
+                    // part of the bit-exactness contract.
+                    for _ in 0..k {
+                        wl_vol += msg_bits;
+                        moved_vh += msg_vh;
+                    }
+                    wl_msgs += k;
+                }
+            }
+        }
+        let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
+        let t_wl = if wl_vol > 0.0 { wl_vol / wl_bw } else { 0.0 };
+        let comps = [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl];
+        let mut k_best = 0;
+        for k in 1..5 {
+            if comps[k] > comps[k_best] {
+                k_best = k;
+            }
+        }
+        let lat = comps[k_best];
+        out.lat.push(lat);
+        out.kb.push(k_best);
+        out.draw_total += lat;
+        out.draw_wl += wl_vol;
+        if let Some(samples) = &mut out.samples {
+            let t_wait = if wl_msgs > 0 {
+                t_wl * (wl_msgs - 1) as f64 / (2.0 * wl_msgs as f64)
+            } else {
+                0.0
+            };
+            samples.push(TraceSample {
+                wl_bits: wl_vol,
+                t_serialize: t_wl,
+                t_wait,
+                backoffs: wl_msgs.saturating_sub(1),
+                t_nop_residual: t_nop,
+            });
+        }
+    }
+    out
+}
+
+impl StochasticEngine {
+    /// The shared kernel behind every entry point: draws fan out on
+    /// `self.workers` threads (0/1 = inline), partials fold in
+    /// draw-index order — so every f64 add lands in the same order the
+    /// sequential loop performed it, for any worker count.
+    fn run(
         &self,
+        prep: &PreparedStochastic,
         t: &CostTensors,
         decisions: &[LayerDecision],
         wl_bw: f64,
+        want_trace: bool,
     ) -> Result<EvalOutcome> {
         if decisions.len() != t.layers.len() {
             bail!(
@@ -281,84 +536,40 @@ impl EvalEngine for StochasticEngine {
             bail!("stochastic engine needs at least one draw");
         }
         let nl = t.layers.len();
+        // Hoist each layer's coin threshold out of the message loop.
+        let cutoffs: Vec<u64> = decisions.iter().map(|dec| Pcg32::cutoff(dec.pinj)).collect();
+
+        let partials = parallel_map_with(self.draws, self.workers.max(1), || (), |_, d| {
+            draw_partial(t, prep, decisions, &cutoffs, wl_bw, self.seed, d, want_trace)
+        });
+
         let mut layer_lat_sum = vec![0.0f64; nl];
         // Latency attributed to each component per layer, across draws
         // (the per-draw bottleneck gets the draw's full layer latency).
         let mut comp_attr = vec![[0.0f64; 5]; nl];
-        let mut layers_trace: Vec<LayerTrace> = (0..nl)
-            .map(|_| LayerTrace {
-                samples: Vec::with_capacity(self.draws),
-            })
-            .collect();
+        let mut layers_trace: Vec<LayerTrace> = if want_trace {
+            (0..nl)
+                .map(|_| LayerTrace {
+                    samples: Vec::with_capacity(self.draws),
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let mut total_sum = 0.0;
         let mut wl_bits_sum = 0.0;
-
-        for d in 0..self.draws {
-            let mut rng = Pcg32::seeded(draw_seed(self.seed, d));
-            let mut draw_total = 0.0;
-            let mut draw_wl = 0.0;
+        for p in partials {
             for i in 0..nl {
-                let l = &t.layers[i];
-                let dec = decisions[i];
-                let dmin = (dec.threshold as usize).max(1);
-                let mut moved_vh = 0.0;
-                let mut wl_vol = 0.0;
-                let mut wl_msgs = 0u64;
-                for h in dmin..=HOP_BUCKETS {
-                    let e_vh = l.elig_vol_hops[h - 1];
-                    let e_v = l.elig_vol[h - 1];
-                    if e_v <= 0.0 {
-                        // Volume-less hop mass cannot be chopped into
-                        // messages; move its expectation (exactly what
-                        // the analytical model does).
-                        if e_vh > 0.0 {
-                            moved_vh += dec.pinj * e_vh;
-                        }
-                        continue;
-                    }
-                    if dec.pinj <= 0.0 {
-                        continue;
-                    }
-                    let n_msgs = (e_v / MESSAGE_BITS).ceil().max(1.0) as u64;
-                    let msg_bits = e_v / n_msgs as f64;
-                    let msg_vh = e_vh / n_msgs as f64;
-                    for _ in 0..n_msgs {
-                        if rng.coin(dec.pinj) {
-                            wl_vol += msg_bits;
-                            moved_vh += msg_vh;
-                            wl_msgs += 1;
-                        }
-                    }
-                }
-                let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
-                let t_wl = if wl_vol > 0.0 { wl_vol / wl_bw } else { 0.0 };
-                let comps = [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl];
-                let mut k_best = 0;
-                for k in 1..5 {
-                    if comps[k] > comps[k_best] {
-                        k_best = k;
-                    }
-                }
-                let lat = comps[k_best];
-                layer_lat_sum[i] += lat;
-                comp_attr[i][k_best] += lat;
-                draw_total += lat;
-                draw_wl += wl_vol;
-                let t_wait = if wl_msgs > 0 {
-                    t_wl * (wl_msgs - 1) as f64 / (2.0 * wl_msgs as f64)
-                } else {
-                    0.0
-                };
-                layers_trace[i].samples.push(TraceSample {
-                    wl_bits: wl_vol,
-                    t_serialize: t_wl,
-                    t_wait,
-                    backoffs: wl_msgs.saturating_sub(1),
-                    t_nop_residual: t_nop,
-                });
+                layer_lat_sum[i] += p.lat[i];
+                comp_attr[i][p.kb[i]] += p.lat[i];
             }
-            total_sum += draw_total;
-            wl_bits_sum += draw_wl;
+            if let Some(samples) = p.samples {
+                for (i, s) in samples.into_iter().enumerate() {
+                    layers_trace[i].samples.push(s);
+                }
+            }
+            total_sum += p.draw_total;
+            wl_bits_sum += p.draw_wl;
         }
 
         let dn = self.draws as f64;
@@ -394,11 +605,53 @@ impl EvalEngine for StochasticEngine {
         };
         Ok(EvalOutcome {
             result,
-            trace: Some(MessageTrace {
+            trace: want_trace.then(|| MessageTrace {
                 draws: self.draws,
                 layers: layers_trace,
             }),
         })
+    }
+}
+
+impl EvalEngine for StochasticEngine {
+    fn evaluate(
+        &self,
+        t: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        self.run(&PreparedStochastic::new(t), t, decisions, wl_bw, true)
+    }
+
+    fn prepare(&self, tensors: &CostTensors) -> PreparedEval {
+        PreparedEval::Stochastic(PreparedStochastic::new(tensors))
+    }
+
+    fn evaluate_prepared(
+        &self,
+        prepared: &PreparedEval,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        match prepared {
+            PreparedEval::Stochastic(prep) => self.run(prep, tensors, decisions, wl_bw, true),
+            _ => self.evaluate(tensors, decisions, wl_bw),
+        }
+    }
+
+    fn evaluate_totals_prepared(
+        &self,
+        prepared: &PreparedEval,
+        tensors: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalResult> {
+        let outcome = match prepared {
+            PreparedEval::Stochastic(prep) => self.run(prep, tensors, decisions, wl_bw, false)?,
+            _ => self.run(&PreparedStochastic::new(tensors), tensors, decisions, wl_bw, false)?,
+        };
+        Ok(outcome.result)
     }
 }
 
@@ -487,13 +740,24 @@ impl EvalBackend {
         }
     }
 
-    /// Instantiate the engine this backend names.
+    /// Instantiate the engine this backend names (draws run inline;
+    /// see [`Self::engine_with_workers`]).
     pub fn engine(&self) -> Box<dyn EvalEngine> {
+        self.engine_with_workers(0)
+    }
+
+    /// [`Self::engine`] with the stochastic engine's draw-parallel
+    /// worker count (`0` = inline; ignored by the analytical backend,
+    /// which has no draws). The output is byte-identical for every
+    /// value — `workers` trades wall-clock only.
+    pub fn engine_with_workers(&self, workers: usize) -> Box<dyn EvalEngine> {
         match *self {
             EvalBackend::Analytical => Box::new(AnalyticalEngine),
-            EvalBackend::Stochastic { draws, seed } => {
-                Box::new(StochasticEngine { draws, seed })
-            }
+            EvalBackend::Stochastic { draws, seed } => Box::new(StochasticEngine {
+                draws,
+                seed,
+                workers,
+            }),
         }
     }
 
@@ -502,9 +766,11 @@ impl EvalBackend {
     /// analytical (the closed form has no messages to observe).
     pub fn observer(&self) -> StochasticEngine {
         match *self {
-            EvalBackend::Stochastic { draws, seed } => {
-                StochasticEngine { draws, seed }
-            }
+            EvalBackend::Stochastic { draws, seed } => StochasticEngine {
+                draws,
+                seed,
+                workers: 0,
+            },
             EvalBackend::Analytical => StochasticEngine::default(),
         }
     }
@@ -594,7 +860,11 @@ mod tests {
         // evaluation; with a power-of-two draw count the averaging is
         // exact, so equality is bit-exact, not approximate.
         let t = tensors();
-        let e = StochasticEngine { draws: 4, seed: 9 };
+        let e = StochasticEngine {
+            draws: 4,
+            seed: 9,
+            ..Default::default()
+        };
         let out = e.evaluate(&t, &uniform(&t, 1, 0.0), 64e9).unwrap();
         let wired = evaluate_wired(&t);
         assert_eq!(out.result.total_s, wired.total_s);
@@ -611,15 +881,23 @@ mod tests {
     #[test]
     fn stochastic_is_deterministic_and_seed_sensitive() {
         let t = tensors();
-        let e = StochasticEngine { draws: 6, seed: 42 };
+        let e = StochasticEngine {
+            draws: 6,
+            seed: 42,
+            ..Default::default()
+        };
         let dec = uniform(&t, 1, 0.5);
         let a = e.evaluate(&t, &dec, 64e9).unwrap();
         let b = e.evaluate(&t, &dec, 64e9).unwrap();
         assert_eq!(a.result.total_s, b.result.total_s);
         assert_eq!(a.trace.unwrap().layers[0].samples, b.trace.unwrap().layers[0].samples);
-        let c = StochasticEngine { draws: 6, seed: 43 }
-            .evaluate(&t, &dec, 64e9)
-            .unwrap();
+        let c = StochasticEngine {
+            draws: 6,
+            seed: 43,
+            ..Default::default()
+        }
+        .evaluate(&t, &dec, 64e9)
+        .unwrap();
         assert_ne!(a.result.wl_bits, c.result.wl_bits);
     }
 
@@ -628,9 +906,13 @@ mod tests {
         let t = tensors();
         let dec = uniform(&t, 1, 0.5);
         let analytical = evaluate_policy(&t, &dec, 64e9);
-        let stoch = StochasticEngine { draws: 64, seed: 7 }
-            .evaluate(&t, &dec, 64e9)
-            .unwrap();
+        let stoch = StochasticEngine {
+            draws: 64,
+            seed: 7,
+            ..Default::default()
+        }
+        .evaluate(&t, &dec, 64e9)
+        .unwrap();
         // Per-layer max of means lower-bounds mean of maxes (Jensen).
         assert!(stoch.result.total_s >= analytical.total_s * 0.999);
         let rel = (stoch.result.total_s - analytical.total_s) / analytical.total_s;
@@ -645,9 +927,13 @@ mod tests {
     fn trace_arithmetic_invariants() {
         let t = tensors();
         let bw = 64e9;
-        let out = StochasticEngine { draws: 8, seed: 3 }
-            .evaluate(&t, &uniform(&t, 1, 0.6), bw)
-            .unwrap();
+        let out = StochasticEngine {
+            draws: 8,
+            seed: 3,
+            ..Default::default()
+        }
+        .evaluate(&t, &uniform(&t, 1, 0.6), bw)
+        .unwrap();
         let trace = out.trace.unwrap();
         let wired_nop0 = t.layers[0].nop_vol_hops / t.nop_agg_bw;
         for s in &trace.layers[0].samples {
@@ -662,6 +948,49 @@ mod tests {
         // The compute-bound layer never offloads... it has no eligible
         // volume, so serialization stays zero.
         assert_eq!(trace.layers[1].total_backoffs(), 0);
+    }
+
+    #[test]
+    fn workers_and_prepared_paths_are_bit_identical() {
+        let t = tensors();
+        let dec = uniform(&t, 1, 0.6);
+        let base = StochasticEngine {
+            draws: 8,
+            seed: 3,
+            workers: 0,
+        };
+        let a = base.evaluate(&t, &dec, 64e9).unwrap();
+        let at = a.trace.as_ref().unwrap();
+        for w in [1usize, 2, 4] {
+            let b = StochasticEngine { workers: w, ..base }
+                .evaluate(&t, &dec, 64e9)
+                .unwrap();
+            assert_eq!(a.result.total_s.to_bits(), b.result.total_s.to_bits());
+            assert_eq!(a.result.wl_bits.to_bits(), b.result.wl_bits.to_bits());
+            let bt = b.trace.as_ref().unwrap();
+            for (la, lb) in at.layers.iter().zip(&bt.layers) {
+                assert_eq!(la.samples, lb.samples, "workers={w}");
+            }
+        }
+        // Prepared entry points agree with the self-preparing one.
+        let prep = base.prepare(&t);
+        let c = base.evaluate_prepared(&prep, &t, &dec, 64e9).unwrap();
+        assert_eq!(a.result.total_s.to_bits(), c.result.total_s.to_bits());
+        assert_eq!(at.layers[0].samples, c.trace.unwrap().layers[0].samples);
+        // Totals-only skips the trace but moves every other bit alike.
+        let totals = base.evaluate_totals_prepared(&prep, &t, &dec, 64e9).unwrap();
+        assert_eq!(a.result.total_s.to_bits(), totals.total_s.to_bits());
+        assert_eq!(a.result.shares, totals.shares);
+        assert_eq!(a.result.bottleneck, totals.bottleneck);
+        assert_eq!(a.result.layer_latency, totals.layer_latency);
+        // A mismatched variant falls back to self-preparation.
+        let wrong = AnalyticalEngine.prepare(&t);
+        let d = base.evaluate_prepared(&wrong, &t, &dec, 64e9).unwrap();
+        assert_eq!(a.result.total_s.to_bits(), d.result.total_s.to_bits());
+        let dt = base
+            .evaluate_totals_prepared(&wrong, &t, &dec, 64e9)
+            .unwrap();
+        assert_eq!(a.result.total_s.to_bits(), dt.total_s.to_bits());
     }
 
     #[test]
@@ -716,8 +1045,12 @@ mod tests {
         let one = uniform(&t, 1, 0.4)[..1].to_vec();
         assert!(AnalyticalEngine.evaluate(&t, &one, 64e9).is_err());
         assert!(StochasticEngine::default().evaluate(&t, &one, 64e9).is_err());
-        assert!(StochasticEngine { draws: 0, seed: 0 }
-            .evaluate(&t, &uniform(&t, 1, 0.4), 64e9)
-            .is_err());
+        assert!(StochasticEngine {
+            draws: 0,
+            seed: 0,
+            ..Default::default()
+        }
+        .evaluate(&t, &uniform(&t, 1, 0.4), 64e9)
+        .is_err());
     }
 }

@@ -38,7 +38,13 @@
 //! re-prices only the layers an annealer move touches, bit-exact with
 //! the full evaluation by construction; and a *trajectory* layer
 //! (`util::benchkit` + `BENCH_delta_eval.json`) that persists the
-//! measured speedups so perf claims stay visible across PRs.
+//! measured speedups so perf claims stay visible across PRs. The
+//! stochastic engine has the same shape: its prepared layer is
+//! [`engine::PreparedStochastic`] (message partitions instead of
+//! suffix sums, built via [`engine::EvalEngine::prepare`]), its draws
+//! fan out on [`engine::StochasticEngine::workers`] threads with a
+//! draw-ordered fold, and its trajectory is `BENCH_stoch_engine.json`
+//! — all without moving a single output bit.
 
 pub mod cost;
 pub mod delta;
@@ -52,7 +58,8 @@ pub use cost::{CostTensors, LayerCosts, HOP_BUCKETS};
 pub use delta::{DeltaEvaluator, PreparedCosts, PreparedLayer};
 pub use engine::{
     AnalyticalEngine, EvalBackend, EvalEngine, EvalOutcome, LayerTrace,
-    MessageTrace, StochasticEngine, TraceSample,
+    MessageTrace, PreparedEval, PreparedStochastic, StochasticEngine,
+    TraceSample,
 };
 pub use policy::{
     best_static_pair, checked_speedup, controller_trajectory, decide_policy,

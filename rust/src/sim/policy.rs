@@ -458,6 +458,9 @@ pub struct FeedbackPolicy {
     pub iters: usize,
     /// Largest hop-distance threshold the greedy seed considers.
     pub max_threshold: u32,
+    /// Draw-parallel workers for the observer engine (0 = inline).
+    /// Observations and fits are byte-identical for every value.
+    pub workers: usize,
 }
 
 impl Default for FeedbackPolicy {
@@ -467,6 +470,7 @@ impl Default for FeedbackPolicy {
             seed: crate::sim::engine::DEFAULT_SEED,
             iters: 8,
             max_threshold: HOP_BUCKETS as u32,
+            workers: 0,
         }
     }
 }
@@ -494,6 +498,7 @@ impl FeedbackPolicy {
         let observer = StochasticEngine {
             draws: self.draws,
             seed: self.seed,
+            workers: self.workers,
         };
         let greedy = GreedyPerLayer {
             max_threshold: self.max_threshold,
@@ -554,6 +559,7 @@ impl OffloadPolicy for FeedbackPolicy {
         let observer = StochasticEngine {
             draws: self.draws,
             seed: self.seed,
+            workers: self.workers,
         };
         self.decide_with(t, wl_bw, &observer)
     }
@@ -691,14 +697,18 @@ pub fn decide_policy(
     thresholds: &[u32],
     pinjs: &[f64],
 ) -> Result<Vec<LayerDecision>> {
-    decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, &EvalBackend::Analytical)
+    decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, &EvalBackend::Analytical, 0)
 }
 
 /// [`decide_policy`] with an explicit evaluation backend. The backend
 /// only matters for [`PolicySpec::Feedback`] (whose observer takes the
 /// backend's stochastic parameters and whose best-of selection prices
 /// through the backend's engine); the closed-form policies decide
-/// identically on every backend.
+/// identically on every backend. `workers` fans the stochastic draws
+/// out ([`StochasticEngine::workers`]; 0 = inline) — decisions are
+/// byte-identical for every value, so campaign units pass 0 (they own
+/// the pool) and interactive paths pass the scenario's worker count.
+#[allow(clippy::too_many_arguments)]
 pub fn decide_policy_backend(
     spec: PolicySpec,
     t: &CostTensors,
@@ -706,6 +716,7 @@ pub fn decide_policy_backend(
     thresholds: &[u32],
     pinjs: &[f64],
     backend: &EvalBackend,
+    workers: usize,
 ) -> Result<Vec<LayerDecision>> {
     if thresholds.is_empty() || pinjs.is_empty() {
         bail!(
@@ -744,9 +755,10 @@ pub fn decide_policy_backend(
                 draws: observer.draws,
                 seed: observer.seed,
                 max_threshold: max_t,
+                workers,
                 ..FeedbackPolicy::default()
             }
-            .decide_with(t, wl_bw, backend.engine().as_ref())
+            .decide_with(t, wl_bw, backend.engine_with_workers(workers).as_ref())
         }
     }
 }
@@ -764,7 +776,7 @@ pub fn evaluate_policies(
     thresholds: &[u32],
     pinjs: &[f64],
 ) -> Result<Vec<PolicyEval>> {
-    evaluate_policies_backend(t, wl_bw, specs, thresholds, pinjs, &EvalBackend::Analytical)
+    evaluate_policies_backend(t, wl_bw, specs, thresholds, pinjs, &EvalBackend::Analytical, 0)
 }
 
 /// [`evaluate_policies`] priced through an explicit
@@ -772,6 +784,8 @@ pub fn evaluate_policies(
 /// [`decide_policy_backend`], outcomes from the backend's engine, and
 /// speedups are measured against the deterministic wired reference
 /// (identical on every backend — at zero offload no coin ever fires).
+/// `workers` fans stochastic draws out (0 = inline; outcomes are
+/// byte-identical for every value).
 pub fn evaluate_policies_backend(
     t: &CostTensors,
     wl_bw: f64,
@@ -779,6 +793,7 @@ pub fn evaluate_policies_backend(
     thresholds: &[u32],
     pinjs: &[f64],
     backend: &EvalBackend,
+    workers: usize,
 ) -> Result<Vec<PolicyEval>> {
     if thresholds.is_empty() || pinjs.is_empty() {
         bail!(
@@ -790,13 +805,13 @@ pub fn evaluate_policies_backend(
     if !(wl_bw.is_finite() && wl_bw > 0.0) {
         bail!("wireless bandwidth must be positive and finite, got {wl_bw}");
     }
-    let engine = backend.engine();
+    let engine = backend.engine_with_workers(workers);
     let wired = evaluate_wired(t).total_s;
     specs
         .iter()
         .map(|&spec| {
             let decisions =
-                decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, backend)?;
+                decide_policy_backend(spec, t, wl_bw, thresholds, pinjs, backend, workers)?;
             let result = engine.evaluate(t, &decisions, wl_bw)?.result;
             let speedup = checked_speedup(wired, result.total_s)?;
             Ok(PolicyEval {
@@ -1027,7 +1042,7 @@ mod tests {
         ] {
             let engine = backend.engine();
             let greedy =
-                decide_policy_backend(PolicySpec::Greedy, &t, 64e9, &ts, &ps, &backend)
+                decide_policy_backend(PolicySpec::Greedy, &t, 64e9, &ts, &ps, &backend, 0)
                     .unwrap();
             let feedback = decide_policy_backend(
                 PolicySpec::Feedback,
@@ -1036,6 +1051,7 @@ mod tests {
                 &ts,
                 &ps,
                 &backend,
+                0,
             )
             .unwrap();
             let tg = engine.evaluate(&t, &greedy, 64e9).unwrap().result.total_s;

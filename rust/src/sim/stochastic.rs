@@ -31,6 +31,18 @@ use anyhow::Result;
 /// Jensen's inequality, and finer messages shrink that gap.)
 pub const MESSAGE_BITS: f64 = 8.0 * 1024.0;
 
+/// Chop a volume into [`MESSAGE_BITS`]-sized messages: `(n_msgs,
+/// msg_bits, msg_vol_hops)`. The ONE partition formula shared by the
+/// flow-level twin here and the tensor-level
+/// [`crate::sim::engine::PreparedStochastic`] tables — both models must
+/// agree on message granularity bit-for-bit, so neither spells it
+/// twice.
+#[inline]
+pub fn message_partition(vol_bits: f64, vol_hops: f64) -> (u64, f64, f64) {
+    let n_msgs = (vol_bits / MESSAGE_BITS).ceil().max(1.0) as u64;
+    (n_msgs, vol_bits / n_msgs as f64, vol_hops / n_msgs as f64)
+}
+
 /// Run the stochastic hybrid simulation.
 pub fn simulate(
     wl: &Workload,
@@ -62,9 +74,8 @@ pub fn simulate(
             // Chop into messages and flip per message. A message that
             // goes wireless removes its share of the wired volume.hops
             // and loads its payload onto the shared medium once.
-            let n_msgs = (flow.vol_bits / MESSAGE_BITS).ceil().max(1.0) as u64;
-            let msg_bits = flow.vol_bits / n_msgs as f64;
-            let msg_vol_hops = path.vol_hops / n_msgs as f64;
+            let (n_msgs, msg_bits, msg_vol_hops) =
+                message_partition(flow.vol_bits, path.vol_hops);
             let mut wired_msgs = 0u64;
             for _ in 0..n_msgs {
                 let d = wireless::decide(w, flow, path.max_hops, Some(&mut rng));

@@ -288,6 +288,32 @@ pub fn write_chains(
     write_json(path, &chains_json(records))
 }
 
+/// The `BENCH_stoch_engine.json` document, combining both axes of the
+/// stochastic-engine payoff (`benches/stoch_engine.rs`): a `grid`
+/// section (bench name -> `{iters_per_sec, speedup_vs_full}` — grid
+/// points/sec of the prepared, totals-only sweep over the per-point
+/// full-trace evaluation it replaced) and a `draw_scaling` section
+/// (bench name -> `{workers, units_per_sec, speedup_vs_one,
+/// efficiency}` — draws/sec at 1/2/4 workers).
+pub fn stoch_engine_json(
+    grid: &[BenchRecord],
+    scaling: &[ScalingRecord],
+) -> Json {
+    Json::Obj(vec![
+        ("grid".into(), trajectory_json(grid)),
+        ("draw_scaling".into(), scaling_json(scaling)),
+    ])
+}
+
+/// Persist the stochastic-engine payoff (see [`stoch_engine_json`]).
+pub fn write_stoch_engine(
+    path: &Path,
+    grid: &[BenchRecord],
+    scaling: &[ScalingRecord],
+) -> std::io::Result<()> {
+    write_json(path, &stoch_engine_json(grid, scaling))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -376,6 +402,27 @@ mod tests {
         assert_eq!(e.get("chains").unwrap().as_f64(), Some(4.0));
         assert_eq!(e.get("iters_per_sec").unwrap().as_f64(), Some(3600.0));
         assert_eq!(e.get("speedup_vs_single").unwrap().as_f64(), Some(3.6));
+    }
+
+    #[test]
+    fn stoch_engine_doc_has_both_sections() {
+        let grid = vec![BenchRecord {
+            name: "stoch_grid/googlenet".into(),
+            iters_per_sec: 500.0,
+            speedup_vs_full: 2.5,
+        }];
+        let scaling =
+            vec![ScalingRecord::from_throughput("stoch_draws/googlenet/4", 4, 32.0, 10.0)];
+        let doc = Json::parse(&stoch_engine_json(&grid, &scaling).render()).unwrap();
+        let g = doc.get("grid").unwrap().get("stoch_grid/googlenet").unwrap();
+        assert_eq!(g.get("speedup_vs_full").unwrap().as_f64(), Some(2.5));
+        let s = doc
+            .get("draw_scaling")
+            .unwrap()
+            .get("stoch_draws/googlenet/4")
+            .unwrap();
+        assert_eq!(s.get("workers").unwrap().as_f64(), Some(4.0));
+        assert_eq!(s.get("speedup_vs_one").unwrap().as_f64(), Some(3.2));
     }
 
     #[test]

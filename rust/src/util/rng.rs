@@ -36,6 +36,14 @@ pub struct Pcg32 {
 impl Pcg32 {
     pub const DEFAULT_STREAM: u64 = 0xDA3E_39CB_94B9_5BDB;
 
+    /// The LCG multiplier (O'Neill's 64-bit constant) — shared by the
+    /// stepper and the [`Self::advance`] jump-ahead.
+    const MULT: u64 = 6_364_136_223_846_793_005;
+
+    /// Integer cutoff meaning "every coin wins" ([`Self::cutoff`] of
+    /// any `p >= 1`): `next_u32()` is always below `2^32`.
+    pub const COIN_ONE: u64 = 1 << 32;
+
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut rng = Self {
             state: 0,
@@ -64,9 +72,7 @@ impl Pcg32 {
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
-        self.state = old
-            .wrapping_mul(6_364_136_223_846_793_005)
-            .wrapping_add(self.inc);
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
         let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
         let rot = (old >> 59) as u32;
         xorshifted.rotate_right(rot)
@@ -82,6 +88,76 @@ impl Pcg32 {
     #[inline]
     pub fn coin(&mut self, p: f64) -> bool {
         self.next_f64() < p
+    }
+
+    /// Hoist [`Self::coin`]'s threshold out of a loop: the integer
+    /// cutoff such that `next_u32() as u64 < cutoff` is the *identical*
+    /// predicate to `coin(p)`.
+    ///
+    /// `coin(p)` tests `u / 2^32 < p`; scaling both sides by `2^32` is
+    /// exact in f64 (a power-of-two exponent shift), so the test is
+    /// `u < p * 2^32` — and for integer `u` that is `u < ceil(p * 2^32)`
+    /// (when `p * 2^32` is an integer the ceiling is itself; otherwise
+    /// `u <= floor` iff `u < ceil`). Clamped so `p <= 0` never wins and
+    /// `p >= 1` always does ([`Self::COIN_ONE`]).
+    #[inline]
+    pub fn cutoff(p: f64) -> u64 {
+        if p <= 0.0 {
+            0
+        } else if p >= 1.0 {
+            Self::COIN_ONE
+        } else {
+            (p * 4_294_967_296.0).ceil() as u64
+        }
+    }
+
+    /// [`Self::coin`] with a precomputed [`Self::cutoff`]: same stream,
+    /// same outcome, no per-call f64 convert/divide/compare.
+    #[inline]
+    pub fn coin_at(&mut self, cutoff: u64) -> bool {
+        (self.next_u32() as u64) < cutoff
+    }
+
+    /// Jump the stream forward `delta` steps in O(log delta) (Brown's
+    /// LCG square-and-multiply) — bit-identical to `delta` calls of
+    /// [`Self::next_u32`] with the outputs discarded.
+    pub fn advance(&mut self, delta: u64) {
+        let mut acc_mult: u64 = 1;
+        let mut acc_plus: u64 = 0;
+        let mut cur_mult = Self::MULT;
+        let mut cur_plus = self.inc;
+        let mut d = delta;
+        while d > 0 {
+            if d & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            d >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+    }
+
+    /// Batched coin: how many of the next `n` coins at `cutoff` win,
+    /// consuming exactly `n` RNG steps — the same stream `n` calls of
+    /// [`Self::coin_at`] would walk, counted branchlessly. Degenerate
+    /// cutoffs (never/always win) know their count, so the stream is
+    /// jumped with [`Self::advance`] instead of walked.
+    pub fn coin_count(&mut self, n: u64, cutoff: u64) -> u64 {
+        if cutoff == 0 {
+            self.advance(n);
+            return 0;
+        }
+        if cutoff >= Self::COIN_ONE {
+            self.advance(n);
+            return n;
+        }
+        let mut hits = 0u64;
+        for _ in 0..n {
+            hits += ((self.next_u32() as u64) < cutoff) as u64;
+        }
+        hits
     }
 
     /// Uniform integer in [0, n).
@@ -156,6 +232,64 @@ mod tests {
         for _ in 0..1000 {
             let v = rng.next_f64();
             assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn coin_count_consumes_the_exact_coin_stream() {
+        // The whole point of the batched API: identical hit counts AND
+        // identical stream position to n sequential coin(p) calls —
+        // including the p <= 0 / p >= 1 edges, where the count is known
+        // and the stream is jumped rather than walked.
+        for &p in &[-0.5, 0.0, 1e-300, 1e-12, 0.1, 0.3, 0.6, 0.999_999, 1.0, 1.5] {
+            for &n in &[0u64, 1, 2, 7, 100, 1000] {
+                for &seed in &[0u64, 1, 0x5EED, u64::MAX] {
+                    let mut a = Pcg32::seeded(seed);
+                    let mut b = Pcg32::seeded(seed);
+                    let sequential = (0..n).filter(|_| a.coin(p)).count() as u64;
+                    let batched = b.coin_count(n, Pcg32::cutoff(p));
+                    assert_eq!(sequential, batched, "count p={p} n={n} seed={seed}");
+                    assert_eq!(a.next_u32(), b.next_u32(), "stream p={p} n={n} seed={seed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coin_at_matches_coin() {
+        for &p in &[0.0, 0.25, 0.5, 0.75, 1.0] {
+            let mut a = Pcg32::seeded(13);
+            let mut b = Pcg32::seeded(13);
+            let cutoff = Pcg32::cutoff(p);
+            for _ in 0..256 {
+                assert_eq!(a.coin(p), b.coin_at(cutoff));
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_edges() {
+        assert_eq!(Pcg32::cutoff(0.0), 0);
+        assert_eq!(Pcg32::cutoff(-1.0), 0);
+        assert_eq!(Pcg32::cutoff(f64::NEG_INFINITY), 0);
+        assert_eq!(Pcg32::cutoff(1.0), Pcg32::COIN_ONE);
+        assert_eq!(Pcg32::cutoff(2.0), Pcg32::COIN_ONE);
+        // 0.5 * 2^32 is exact: the cutoff is exactly half the range.
+        assert_eq!(Pcg32::cutoff(0.5), 1u64 << 31);
+        // The smallest positive p still wins when u == 0.
+        assert_eq!(Pcg32::cutoff(f64::MIN_POSITIVE), 1);
+    }
+
+    #[test]
+    fn advance_matches_sequential_stepping() {
+        for &n in &[0u64, 1, 2, 3, 17, 255, 1000, 123_456] {
+            let mut a = Pcg32::seeded(99);
+            let mut b = Pcg32::seeded(99);
+            for _ in 0..n {
+                a.next_u32();
+            }
+            b.advance(n);
+            assert_eq!(a.next_u32(), b.next_u32(), "advance({n})");
         }
     }
 }

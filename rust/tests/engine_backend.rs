@@ -105,6 +105,7 @@ fn feedback_dominates_greedy_on_all_paper_workloads() {
             &thresholds,
             &pinjs,
             &backend,
+            0,
         )
         .unwrap();
         let feedback = decide_policy_backend(
@@ -114,6 +115,7 @@ fn feedback_dominates_greedy_on_all_paper_workloads() {
             &thresholds,
             &pinjs,
             &backend,
+            0,
         )
         .unwrap();
         let tg = engine.evaluate(&p.tensors, &greedy, 64e9).unwrap().result.total_s;
@@ -143,10 +145,14 @@ fn stochastic_engine_converges_on_paper_workloads() {
         let n = p.tensors.layers.len();
         let dec = uniform(n, 1, 0.4);
         let analytical = evaluate_policy(&p.tensors, &dec, 64e9);
-        let stoch = StochasticEngine { draws: 24, seed: 0x5EED }
-            .evaluate(&p.tensors, &dec, 64e9)
-            .unwrap()
-            .result;
+        let stoch = StochasticEngine {
+            draws: 24,
+            seed: 0x5EED,
+            ..Default::default()
+        }
+        .evaluate(&p.tensors, &dec, 64e9)
+        .unwrap()
+        .result;
         assert!(
             stoch.total_s >= analytical.total_s * 0.995,
             "{name}: stochastic {} below analytical {}",

@@ -1,0 +1,328 @@
+//! Golden-file regeneration for the stochastic-engine invariance suite
+//! (`tests/stoch_invariance.rs`) and the Python mirror check
+//! (`python/tools/mirror_checks_stoch.py`).
+//!
+//! The goldens freeze the stochastic engine's exact output (f64 bit
+//! patterns, not decimal renderings) so any refactor of the evaluation
+//! kernel — tabulation, draw parallelism, trace skipping — can be
+//! asserted byte-identical to the sequential reference that produced
+//! them. Regeneration is deliberately `#[ignore]`d: run
+//!
+//! ```text
+//! cargo test --test gen_goldens -- --ignored
+//! ```
+//!
+//! and commit the diff ONLY when the engine's output is *meant* to
+//! change (which breaks the bit-exactness contract and must be called
+//! out loudly in the PR). After a pure-performance refactor the
+//! regeneration must be a no-op: `git diff --exit-code rust/tests/goldens`.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::dse::{CampaignSpec, CampaignWorkload};
+use wisper::mapping::layer_sequential;
+use wisper::runtime::Runtime;
+use wisper::sim::cost::{build_tensors, CostTensors, LayerCosts};
+use wisper::sim::engine::{EvalBackend, EvalEngine, StochasticEngine};
+use wisper::sim::policy::LayerDecision;
+use wisper::workloads::build;
+
+fn goldens_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens")
+}
+
+fn bits(x: f64) -> String {
+    format!("\"0x{:016X}\"", x.to_bits())
+}
+
+fn bits_arr(xs: impl IntoIterator<Item = f64>) -> String {
+    let inner: Vec<String> = xs.into_iter().map(bits).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+fn int_arr(xs: impl IntoIterator<Item = usize>) -> String {
+    let inner: Vec<String> = xs.into_iter().map(|x| x.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+/// The synthetic two-layer tensor set the engine unit tests use: one
+/// layer with a message-heavy bucket AND a volume-less bucket (the
+/// expectation-mass path), one compute-bound layer with no eligible
+/// volume. Spelled in decimal in the JSON — every literal here parses
+/// to the identical f64 in Rust and Python (correctly-rounded decimal
+/// conversion), so both sides rebuild the same inputs.
+fn synthetic_tensors() -> CostTensors {
+    let mut l0 = LayerCosts {
+        t_comp: 1.0e-6,
+        t_dram: 0.5e-6,
+        nop_vol_hops: 10.0e6,
+        ..Default::default()
+    };
+    l0.elig_vol_hops[0] = 2.0e6;
+    l0.elig_vol[0] = 2.0e6;
+    l0.elig_vol_hops[3] = 8.0e6;
+    l0.elig_vol[3] = 0.2e6;
+    let l1 = LayerCosts {
+        t_comp: 5.0e-6,
+        t_dram: 1.0e-6,
+        nop_vol_hops: 1.0e6,
+        ..Default::default()
+    };
+    CostTensors {
+        layers: vec![l0, l1],
+        nop_agg_bw: 1.0e12,
+    }
+}
+
+fn tensors_json(t: &CostTensors) -> String {
+    let mut s = String::from("{\"nop_agg_bw\": 1.0e12, \"layers\": [");
+    for (i, l) in t.layers.iter().enumerate() {
+        if i > 0 {
+            s.push_str(", ");
+        }
+        let f = |x: f64| format!("{x:e}");
+        let arr = |xs: &[f64]| {
+            let inner: Vec<String> = xs.iter().map(|x| f(*x)).collect();
+            format!("[{}]", inner.join(", "))
+        };
+        let _ = write!(
+            s,
+            "{{\"t_comp\": {}, \"t_dram\": {}, \"t_noc\": {}, \
+             \"nop_vol_hops\": {}, \"elig_vol_hops\": {}, \"elig_vol\": {}}}",
+            f(l.t_comp),
+            f(l.t_dram),
+            f(l.t_noc),
+            f(l.nop_vol_hops),
+            arr(&l.elig_vol_hops),
+            arr(&l.elig_vol),
+        );
+    }
+    s.push_str("]}");
+    s
+}
+
+struct Case {
+    name: &'static str,
+    /// `Some(name)` rebuilds tensors from the named paper workload
+    /// (layer-sequential mapping, default criteria — what the mirror's
+    /// `build_tensors(wl, layer_sequential(wl, pkg), pkg)` builds);
+    /// `None` uses the synthetic set, spelled inline.
+    workload: Option<&'static str>,
+    decisions: Vec<LayerDecision>,
+    wl_bw: f64,
+    draws: usize,
+    seed: u64,
+    /// Record every TraceSample's bit pattern (small cases only).
+    full_trace: bool,
+}
+
+fn decisions_json(decisions: &[LayerDecision]) -> String {
+    let inner: Vec<String> = decisions
+        .iter()
+        .map(|d| format!("[{}, {:e}]", d.threshold, d.pinj))
+        .collect();
+    format!("[{}]", inner.join(", "))
+}
+
+#[test]
+#[ignore = "golden regeneration tool; run explicitly and review the diff"]
+fn gen_stoch_engine_goldens() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let w = WirelessConfig::default();
+
+    let synth = synthetic_tensors();
+    let mk_tensors = |name: &str| {
+        let wl = build(name).unwrap();
+        let m = layer_sequential(&wl, &pkg);
+        build_tensors(&wl, &m, &pkg, &w).unwrap()
+    };
+
+    let uniform = |t: &CostTensors, d: u32, p: f64| {
+        vec![LayerDecision { threshold: d, pinj: p }; t.layers.len()]
+    };
+    // Cycling decisions: thresholds 1..=4, pinj through a quartet that
+    // includes the 0.0 (skip) and 1.0 (every-coin-wins) edges.
+    let varied = |t: &CostTensors| {
+        let ps = [0.15, 0.45, 1.0, 0.0];
+        (0..t.layers.len())
+            .map(|i| LayerDecision {
+                threshold: (i % 4 + 1) as u32,
+                pinj: ps[i % 4],
+            })
+            .collect::<Vec<_>>()
+    };
+
+    let zfnet = mk_tensors("zfnet");
+    let googlenet = mk_tensors("googlenet");
+    let cases = vec![
+        Case {
+            name: "synthetic/u1_p0.6",
+            workload: None,
+            decisions: uniform(&synth, 1, 0.6),
+            wl_bw: 64e9,
+            draws: 8,
+            seed: 3,
+            full_trace: true,
+        },
+        Case {
+            name: "synthetic/u2_p1.0",
+            workload: None,
+            decisions: uniform(&synth, 2, 1.0),
+            wl_bw: 96e9,
+            draws: 4,
+            seed: 7,
+            full_trace: true,
+        },
+        Case {
+            name: "zfnet/u1_p0.4",
+            workload: Some("zfnet"),
+            decisions: uniform(&zfnet, 1, 0.4),
+            wl_bw: 64e9,
+            draws: 6,
+            seed: 42,
+            full_trace: false,
+        },
+        Case {
+            name: "googlenet/varied",
+            workload: Some("googlenet"),
+            decisions: varied(&googlenet),
+            wl_bw: 96e9,
+            draws: 4,
+            seed: 0xBEEF,
+            full_trace: false,
+        },
+    ];
+
+    let mut out = String::from("{\n  \"cases\": [\n");
+    for (ci, c) in cases.iter().enumerate() {
+        let t = match c.workload {
+            Some(name) => mk_tensors(name),
+            None => synthetic_tensors(),
+        };
+        let engine = StochasticEngine {
+            draws: c.draws,
+            seed: c.seed,
+            ..Default::default()
+        };
+        let o = engine.evaluate(&t, &c.decisions, c.wl_bw).unwrap();
+        let r = &o.result;
+        let trace = o.trace.as_ref().expect("stochastic engine traces");
+
+        let mut s = String::from("    {\n");
+        let _ = writeln!(s, "      \"name\": \"{}\",", c.name);
+        match c.workload {
+            Some(name) => {
+                let _ = writeln!(s, "      \"workload\": \"{name}\",");
+            }
+            None => {
+                let _ = writeln!(s, "      \"tensors\": {},", tensors_json(&t));
+            }
+        }
+        let _ = writeln!(s, "      \"decisions\": {},", decisions_json(&c.decisions));
+        let _ = writeln!(s, "      \"wl_bw\": {:e},", c.wl_bw);
+        let _ = writeln!(s, "      \"draws\": {},", c.draws);
+        let _ = writeln!(s, "      \"seed\": {},", c.seed);
+        let _ = writeln!(s, "      \"total_s\": {},", bits(r.total_s));
+        let _ = writeln!(s, "      \"wl_bits\": {},", bits(r.wl_bits));
+        let _ = writeln!(s, "      \"shares\": {},", bits_arr(r.shares.iter().copied()));
+        let _ = writeln!(s, "      \"bottleneck\": {},", int_arr(r.bottleneck.iter().copied()));
+        let _ = writeln!(
+            s,
+            "      \"layer_latency\": {},",
+            bits_arr(r.layer_latency.iter().copied())
+        );
+        let _ = writeln!(s, "      \"total_backoffs\": {},", trace.total_backoffs());
+        let _ = writeln!(s, "      \"mean_wait_s\": {},", bits(trace.mean_wait_s()));
+        let _ = writeln!(
+            s,
+            "      \"mean_serialize\": {},",
+            bits_arr(trace.layers.iter().map(|l| l.mean_serialize()))
+        );
+        let _ = writeln!(
+            s,
+            "      \"mean_nop_residual\": {},",
+            bits_arr(trace.layers.iter().map(|l| l.mean_nop_residual()))
+        );
+        if c.full_trace {
+            // trace_samples[layer][draw] = [wl_bits, t_serialize,
+            // t_wait, backoffs, t_nop_residual] with floats as bits.
+            let mut ts = String::from("[");
+            for (i, lt) in trace.layers.iter().enumerate() {
+                if i > 0 {
+                    ts.push_str(", ");
+                }
+                let rows: Vec<String> = lt
+                    .samples
+                    .iter()
+                    .map(|smp| {
+                        format!(
+                            "[{}, {}, {}, {}, {}]",
+                            bits(smp.wl_bits),
+                            bits(smp.t_serialize),
+                            bits(smp.t_wait),
+                            smp.backoffs,
+                            bits(smp.t_nop_residual)
+                        )
+                    })
+                    .collect();
+                let _ = write!(ts, "[{}]", rows.join(", "));
+            }
+            ts.push(']');
+            let _ = writeln!(s, "      \"trace_samples\": {ts}");
+        } else {
+            let _ = writeln!(s, "      \"trace_samples\": null");
+        }
+        s.push_str("    }");
+        if ci + 1 < cases.len() {
+            s.push(',');
+        }
+        s.push('\n');
+        out.push_str(&s);
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(goldens_dir().join("stoch_engine.json"), out).unwrap();
+}
+
+#[test]
+#[ignore = "golden regeneration tool; run explicitly and review the diff"]
+fn gen_stoch_campaign_golden() {
+    // A small but real stochastic campaign: two workloads x two
+    // bandwidths on the paper grid, per-workload derived seeds
+    // (EvalBackend::for_workload), policies riding along. The rendered
+    // summary JSON is the byte-level contract `stoch_invariance.rs`
+    // locks the campaign path to.
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let w = WirelessConfig::default();
+    let names = ["zfnet", "alexnet"];
+    let tensors: Vec<CostTensors> = names
+        .iter()
+        .map(|n| {
+            let wl = build(n).unwrap();
+            let m = layer_sequential(&wl, &pkg);
+            build_tensors(&wl, &m, &pkg, &w).unwrap()
+        })
+        .collect();
+    let workloads: Vec<CampaignWorkload> = names
+        .iter()
+        .zip(&tensors)
+        .map(|(n, t)| CampaignWorkload {
+            name: n.to_string(),
+            tensors: t,
+            t_wired: None,
+            comap: None,
+        })
+        .collect();
+    let spec = CampaignSpec {
+        backend: EvalBackend::Stochastic {
+            draws: 8,
+            seed: 0x5EED,
+        },
+        workers: 2,
+        ..CampaignSpec::default()
+    };
+    let r = wisper::dse::run_campaign(&workloads, &spec, Runtime::native).unwrap();
+    let text = r.to_json().render();
+    std::fs::write(goldens_dir().join("stoch_campaign.json"), text).unwrap();
+}

@@ -1,0 +1,666 @@
+//! Bit-exactness invariance suite for the stochastic evaluation engine.
+//!
+//! The tabulated, draw-parallel [`StochasticEngine`] is a pure
+//! performance refactor: for every worker count and for the prepared
+//! and totals-only entry points, its output must be *byte-identical*
+//! to the sequential engine it replaced. This suite pins that contract
+//! three ways:
+//!
+//! 1. A **frozen reference** — the pre-refactor sequential evaluate
+//!    loop, carried verbatim as a test-local engine — is compared
+//!    bitwise against the new engine at workers ∈ {0, 1, 2, 4} on all
+//!    15 paper workloads (per-workload seeds derived exactly as
+//!    campaigns derive them, via [`EvalBackend::for_workload`]).
+//! 2. The committed goldens (`tests/goldens/stoch_engine.json`, f64
+//!    bit patterns; regenerate with `cargo test --test gen_goldens --
+//!    --ignored`) lock the engine across *sessions*: a refactor that
+//!    moves a single mantissa bit fails here even if it is
+//!    self-consistent.
+//! 3. A real stochastic campaign renders byte-identical JSON at
+//!    workers 1 and 4, and every per-unit sweep inside it matches the
+//!    frozen reference on the unit's derived seed stream.
+
+use anyhow::{bail, Result};
+use wisper::arch::Package;
+use wisper::config::{ArchConfig, WirelessConfig};
+use wisper::dse::{engine_sweep, run_campaign, CampaignSpec, CampaignWorkload, SweepResult};
+use wisper::mapping::layer_sequential;
+use wisper::report::Json;
+use wisper::runtime::Runtime;
+use wisper::sim::cost::{build_tensors, CostTensors, LayerCosts};
+use wisper::sim::engine::{
+    EvalBackend, EvalEngine, EvalOutcome, LayerTrace, MessageTrace, StochasticEngine,
+    TraceSample,
+};
+use wisper::sim::policy::LayerDecision;
+use wisper::sim::stochastic::MESSAGE_BITS;
+use wisper::sim::{EvalResult, HOP_BUCKETS};
+use wisper::util::rng::Pcg32;
+use wisper::workloads::{build, WORKLOAD_NAMES};
+
+// ---------------------------------------------------------------------------
+// The frozen pre-refactor engine, verbatim.
+// ---------------------------------------------------------------------------
+
+/// Per-draw seed derivation — identical to the engine's (golden-ratio
+/// XOR fold; draw 0 uses the base seed unchanged).
+fn draw_seed(seed: u64, draw: usize) -> u64 {
+    seed ^ (draw as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The sequential `StochasticEngine::evaluate` body exactly as it
+/// existed before the tabulated, draw-parallel rewrite. DO NOT "clean
+/// this up" or share code with the engine — its entire value is being
+/// an independent copy of the old accumulation order.
+struct SequentialReference {
+    draws: usize,
+    seed: u64,
+}
+
+impl EvalEngine for SequentialReference {
+    // Only `evaluate` is implemented; the trait's default `prepare` /
+    // `evaluate_prepared` / `evaluate_totals_prepared` fall back to it,
+    // which is precisely the pre-refactor behavior of every prepared
+    // call site (e.g. `engine_sweep` evaluated point-by-point).
+    fn evaluate(
+        &self,
+        t: &CostTensors,
+        decisions: &[LayerDecision],
+        wl_bw: f64,
+    ) -> Result<EvalOutcome> {
+        if decisions.len() != t.layers.len() {
+            bail!(
+                "one offload decision per layer: got {} decisions for {} layers",
+                decisions.len(),
+                t.layers.len()
+            );
+        }
+        if self.draws == 0 {
+            bail!("stochastic engine needs at least one draw");
+        }
+        let nl = t.layers.len();
+        let mut layer_lat_sum = vec![0.0f64; nl];
+        let mut comp_attr = vec![[0.0f64; 5]; nl];
+        let mut layers_trace: Vec<LayerTrace> = (0..nl)
+            .map(|_| LayerTrace {
+                samples: Vec::with_capacity(self.draws),
+            })
+            .collect();
+        let mut total_sum = 0.0;
+        let mut wl_bits_sum = 0.0;
+
+        for d in 0..self.draws {
+            let mut rng = Pcg32::seeded(draw_seed(self.seed, d));
+            let mut draw_total = 0.0;
+            let mut draw_wl = 0.0;
+            for i in 0..nl {
+                let l = &t.layers[i];
+                let dec = decisions[i];
+                let dmin = (dec.threshold as usize).max(1);
+                let mut moved_vh = 0.0;
+                let mut wl_vol = 0.0;
+                let mut wl_msgs = 0u64;
+                for h in dmin..=HOP_BUCKETS {
+                    let e_vh = l.elig_vol_hops[h - 1];
+                    let e_v = l.elig_vol[h - 1];
+                    if e_v <= 0.0 {
+                        if e_vh > 0.0 {
+                            moved_vh += dec.pinj * e_vh;
+                        }
+                        continue;
+                    }
+                    if dec.pinj <= 0.0 {
+                        continue;
+                    }
+                    let n_msgs = (e_v / MESSAGE_BITS).ceil().max(1.0) as u64;
+                    let msg_bits = e_v / n_msgs as f64;
+                    let msg_vh = e_vh / n_msgs as f64;
+                    for _ in 0..n_msgs {
+                        if rng.coin(dec.pinj) {
+                            wl_vol += msg_bits;
+                            moved_vh += msg_vh;
+                            wl_msgs += 1;
+                        }
+                    }
+                }
+                let t_nop = (l.nop_vol_hops - moved_vh).max(0.0) / t.nop_agg_bw;
+                let t_wl = if wl_vol > 0.0 { wl_vol / wl_bw } else { 0.0 };
+                let comps = [l.t_comp, l.t_dram, l.t_noc, t_nop, t_wl];
+                let mut k_best = 0;
+                for k in 1..5 {
+                    if comps[k] > comps[k_best] {
+                        k_best = k;
+                    }
+                }
+                let lat = comps[k_best];
+                layer_lat_sum[i] += lat;
+                comp_attr[i][k_best] += lat;
+                draw_total += lat;
+                draw_wl += wl_vol;
+                let t_wait = if wl_msgs > 0 {
+                    t_wl * (wl_msgs - 1) as f64 / (2.0 * wl_msgs as f64)
+                } else {
+                    0.0
+                };
+                layers_trace[i].samples.push(TraceSample {
+                    wl_bits: wl_vol,
+                    t_serialize: t_wl,
+                    t_wait,
+                    backoffs: wl_msgs.saturating_sub(1),
+                    t_nop_residual: t_nop,
+                });
+            }
+            total_sum += draw_total;
+            wl_bits_sum += draw_wl;
+        }
+
+        let dn = self.draws as f64;
+        let mut shares = [0.0f64; 5];
+        for attr in &comp_attr {
+            for k in 0..5 {
+                shares[k] += attr[k];
+            }
+        }
+        if total_sum > 0.0 {
+            for s in &mut shares {
+                *s /= total_sum;
+            }
+        }
+        let bottleneck = comp_attr
+            .iter()
+            .map(|attr| {
+                let mut k_best = 0;
+                for k in 1..5 {
+                    if attr[k] > attr[k_best] {
+                        k_best = k;
+                    }
+                }
+                k_best
+            })
+            .collect();
+        let result = EvalResult {
+            total_s: total_sum / dn,
+            shares,
+            wl_bits: wl_bits_sum / dn,
+            bottleneck,
+            layer_latency: layer_lat_sum.iter().map(|x| x / dn).collect(),
+        };
+        Ok(EvalOutcome {
+            result,
+            trace: Some(MessageTrace {
+                draws: self.draws,
+                layers: layers_trace,
+            }),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise comparison helpers (f64 equality via to_bits: -0.0 != 0.0,
+// and a NaN would fail loudly instead of comparing unequal silently).
+// ---------------------------------------------------------------------------
+
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(
+        a.to_bits(),
+        b.to_bits(),
+        "{what}: {a:?} (0x{:016X}) != {b:?} (0x{:016X})",
+        a.to_bits(),
+        b.to_bits()
+    );
+}
+
+fn assert_result_eq(a: &EvalResult, b: &EvalResult, ctx: &str) {
+    assert_bits(a.total_s, b.total_s, &format!("{ctx}: total_s"));
+    assert_bits(a.wl_bits, b.wl_bits, &format!("{ctx}: wl_bits"));
+    for k in 0..5 {
+        assert_bits(a.shares[k], b.shares[k], &format!("{ctx}: shares[{k}]"));
+    }
+    assert_eq!(a.bottleneck, b.bottleneck, "{ctx}: bottleneck");
+    assert_eq!(
+        a.layer_latency.len(),
+        b.layer_latency.len(),
+        "{ctx}: layer count"
+    );
+    for (i, (x, y)) in a.layer_latency.iter().zip(&b.layer_latency).enumerate() {
+        assert_bits(*x, *y, &format!("{ctx}: layer_latency[{i}]"));
+    }
+}
+
+fn assert_outcome_eq(a: &EvalOutcome, b: &EvalOutcome, ctx: &str) {
+    assert_result_eq(&a.result, &b.result, ctx);
+    let (ta, tb) = (
+        a.trace.as_ref().expect("stochastic outcomes trace"),
+        b.trace.as_ref().expect("stochastic outcomes trace"),
+    );
+    assert_eq!(ta.draws, tb.draws, "{ctx}: trace draws");
+    assert_eq!(ta.layers.len(), tb.layers.len(), "{ctx}: trace layers");
+    for (i, (la, lb)) in ta.layers.iter().zip(&tb.layers).enumerate() {
+        assert_eq!(
+            la.samples.len(),
+            lb.samples.len(),
+            "{ctx}: layer {i} sample count"
+        );
+        for (d, (sa, sb)) in la.samples.iter().zip(&lb.samples).enumerate() {
+            let at = format!("{ctx}: layer {i} draw {d}");
+            assert_bits(sa.wl_bits, sb.wl_bits, &format!("{at}: wl_bits"));
+            assert_bits(sa.t_serialize, sb.t_serialize, &format!("{at}: t_serialize"));
+            assert_bits(sa.t_wait, sb.t_wait, &format!("{at}: t_wait"));
+            assert_eq!(sa.backoffs, sb.backoffs, "{at}: backoffs");
+            assert_bits(
+                sa.t_nop_residual,
+                sb.t_nop_residual,
+                &format!("{at}: t_nop_residual"),
+            );
+        }
+    }
+}
+
+fn assert_sweep_eq(a: &SweepResult, b: &SweepResult, ctx: &str) {
+    assert_bits(a.t_wired, b.t_wired, &format!("{ctx}: t_wired"));
+    assert_eq!(a.best, b.best, "{ctx}: best index");
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: point count");
+    for (i, (pa, pb)) in a.points.iter().zip(&b.points).enumerate() {
+        let at = format!("{ctx}: point {i}");
+        assert_eq!(pa.threshold, pb.threshold, "{at}: threshold");
+        assert_bits(pa.pinj, pb.pinj, &format!("{at}: pinj"));
+        assert_bits(pa.wl_bw, pb.wl_bw, &format!("{at}: wl_bw"));
+        assert_bits(pa.total_s, pb.total_s, &format!("{at}: total_s"));
+        assert_bits(pa.speedup, pb.speedup, &format!("{at}: speedup"));
+        assert_bits(pa.wl_bits, pb.wl_bits, &format!("{at}: wl_bits"));
+        for k in 0..5 {
+            assert_bits(pa.shares[k], pb.shares[k], &format!("{at}: shares[{k}]"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Input construction (shared with gen_goldens.rs by convention: the
+// same layer-sequential mapping + default wireless criteria the Python
+// mirror rebuilds).
+// ---------------------------------------------------------------------------
+
+fn paper_tensors(pkg: &Package, name: &str) -> CostTensors {
+    let wl = build(name).unwrap();
+    let m = layer_sequential(&wl, pkg);
+    build_tensors(&wl, &m, pkg, &WirelessConfig::default()).unwrap()
+}
+
+fn uniform(t: &CostTensors, threshold: u32, pinj: f64) -> Vec<LayerDecision> {
+    vec![LayerDecision { threshold, pinj }; t.layers.len()]
+}
+
+/// Cycling decisions touching both coin edges (pinj 0.0 and 1.0) and
+/// every paper threshold — the same quartet the goldens use.
+fn varied(t: &CostTensors) -> Vec<LayerDecision> {
+    let ps = [0.15, 0.45, 1.0, 0.0];
+    (0..t.layers.len())
+        .map(|i| LayerDecision {
+            threshold: (i % 4 + 1) as u32,
+            pinj: ps[i % 4],
+        })
+        .collect()
+}
+
+fn derived(backend: &EvalBackend, workload: &str) -> (usize, u64) {
+    match backend.for_workload(workload) {
+        EvalBackend::Stochastic { draws, seed } => (draws, seed),
+        EvalBackend::Analytical => unreachable!("stochastic backend expected"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Frozen-reference bit-identity across worker counts.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_matches_frozen_reference_on_all_paper_workloads() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let base = EvalBackend::Stochastic {
+        draws: 4,
+        seed: 0x5EED,
+    };
+    for name in WORKLOAD_NAMES {
+        let t = paper_tensors(&pkg, name);
+        let (draws, seed) = derived(&base, name);
+        let reference = SequentialReference { draws, seed };
+        for decisions in [uniform(&t, 1, 0.4), varied(&t)] {
+            let want = reference.evaluate(&t, &decisions, 64e9).unwrap();
+            for workers in [0usize, 1, 2, 4] {
+                let engine = StochasticEngine {
+                    draws,
+                    seed,
+                    workers,
+                };
+                let got = engine.evaluate(&t, &decisions, 64e9).unwrap();
+                assert_outcome_eq(&got, &want, &format!("{name} workers={workers}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn threshold_beyond_buckets_matches_reference() {
+    // dmin > HOP_BUCKETS makes the bucket range empty: no RNG is
+    // consumed and the layer stays wired. The tabulated engine reaches
+    // this through a sliced `get(dmin - 1..)`, so pin the equivalence.
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let t = paper_tensors(&pkg, "zfnet");
+    let decisions = uniform(&t, HOP_BUCKETS as u32 + 3, 0.7);
+    let want = SequentialReference { draws: 3, seed: 11 }
+        .evaluate(&t, &decisions, 64e9)
+        .unwrap();
+    for workers in [0usize, 2] {
+        let got = StochasticEngine {
+            draws: 3,
+            seed: 11,
+            workers,
+        }
+        .evaluate(&t, &decisions, 64e9)
+        .unwrap();
+        assert_outcome_eq(&got, &want, &format!("threshold>buckets workers={workers}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Prepared / totals-only entry points.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prepared_and_totals_paths_are_bit_identical() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    for name in ["zfnet", "googlenet", "resnet50"] {
+        let t = paper_tensors(&pkg, name);
+        let decisions = varied(&t);
+        for workers in [0usize, 2] {
+            let engine = StochasticEngine {
+                draws: 5,
+                seed: 0xABCD,
+                workers,
+            };
+            let plain = engine.evaluate(&t, &decisions, 96e9).unwrap();
+            let prep = engine.prepare(&t);
+            let prepared = engine
+                .evaluate_prepared(&prep, &t, &decisions, 96e9)
+                .unwrap();
+            assert_outcome_eq(&prepared, &plain, &format!("{name} prepared w={workers}"));
+            let totals = engine
+                .evaluate_totals_prepared(&prep, &t, &decisions, 96e9)
+                .unwrap();
+            assert_result_eq(&totals, &plain.result, &format!("{name} totals w={workers}"));
+        }
+    }
+}
+
+#[test]
+fn engine_sweep_matches_pre_refactor_per_point_evaluation() {
+    // `engine_sweep` now prepares once and prices totals-only; before
+    // the refactor it called `evaluate` per grid point. The frozen
+    // reference (default trait methods = per-point evaluate) IS that
+    // old behavior, so the two sweeps must agree bitwise.
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let thresholds = [1u32, 2, 3, 4];
+    let pinjs = [0.10, 0.40, 0.80];
+    for name in ["zfnet", "googlenet"] {
+        let t = paper_tensors(&pkg, name);
+        let new = engine_sweep(
+            &t,
+            &thresholds,
+            &pinjs,
+            64e9,
+            &StochasticEngine {
+                draws: 6,
+                seed: 0x5EED,
+                workers: 2,
+            },
+        )
+        .unwrap();
+        let old = engine_sweep(
+            &t,
+            &thresholds,
+            &pinjs,
+            64e9,
+            &SequentialReference {
+                draws: 6,
+                seed: 0x5EED,
+            },
+        )
+        .unwrap();
+        assert_sweep_eq(&new, &old, name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Committed goldens (cross-session lock).
+// ---------------------------------------------------------------------------
+
+fn golden_doc() -> Json {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/goldens/stoch_engine.json");
+    Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap()
+}
+
+fn bits_of(j: &Json, what: &str) -> u64 {
+    let s = j
+        .as_str()
+        .unwrap_or_else(|| panic!("{what}: expected \"0x...\" bit string"));
+    u64::from_str_radix(s.trim_start_matches("0x"), 16)
+        .unwrap_or_else(|_| panic!("{what}: bad bit string {s:?}"))
+}
+
+fn assert_golden_bits(x: f64, j: &Json, what: &str) {
+    let want = bits_of(j, what);
+    assert_eq!(
+        x.to_bits(),
+        want,
+        "{what}: got {x:?} (0x{:016X}), golden 0x{want:016X}",
+        x.to_bits()
+    );
+}
+
+fn tensors_from_json(j: &Json) -> CostTensors {
+    let f = |o: &Json, k: &str| o.get(k).and_then(Json::as_f64).unwrap();
+    let arr8 = |o: &Json, k: &str| {
+        let items = o.get(k).and_then(Json::as_arr).unwrap();
+        let mut out = [0.0f64; HOP_BUCKETS];
+        assert_eq!(items.len(), HOP_BUCKETS, "{k}: bucket count");
+        for (slot, v) in out.iter_mut().zip(items) {
+            *slot = v.as_f64().unwrap();
+        }
+        out
+    };
+    let layers = j
+        .get("layers")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|l| LayerCosts {
+            t_comp: f(l, "t_comp"),
+            t_dram: f(l, "t_dram"),
+            t_noc: f(l, "t_noc"),
+            nop_vol_hops: f(l, "nop_vol_hops"),
+            elig_vol_hops: arr8(l, "elig_vol_hops"),
+            elig_vol: arr8(l, "elig_vol"),
+        })
+        .collect();
+    CostTensors {
+        layers,
+        nop_agg_bw: f(j, "nop_agg_bw"),
+    }
+}
+
+#[test]
+fn committed_goldens_lock_the_engine_output() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let doc = golden_doc();
+    let cases = doc.get("cases").and_then(Json::as_arr).unwrap();
+    assert!(!cases.is_empty(), "golden file has no cases");
+    for c in cases {
+        let name = c.get("name").and_then(Json::as_str).unwrap().to_string();
+        let t = match c.get("workload").and_then(Json::as_str) {
+            Some(wl) => paper_tensors(&pkg, wl),
+            None => tensors_from_json(c.get("tensors").unwrap()),
+        };
+        let decisions: Vec<LayerDecision> = c
+            .get("decisions")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|d| {
+                let pair = d.as_arr().unwrap();
+                LayerDecision {
+                    threshold: pair[0].as_f64().unwrap() as u32,
+                    pinj: pair[1].as_f64().unwrap(),
+                }
+            })
+            .collect();
+        let wl_bw = c.get("wl_bw").and_then(Json::as_f64).unwrap();
+        let draws = c.get("draws").and_then(Json::as_f64).unwrap() as usize;
+        let seed = c.get("seed").and_then(Json::as_f64).unwrap() as u64;
+        for workers in [0usize, 2] {
+            let ctx = format!("{name} workers={workers}");
+            let o = StochasticEngine {
+                draws,
+                seed,
+                workers,
+            }
+            .evaluate(&t, &decisions, wl_bw)
+            .unwrap();
+            let r = &o.result;
+            let trace = o.trace.as_ref().unwrap();
+            assert_golden_bits(r.total_s, c.get("total_s").unwrap(), &format!("{ctx}: total_s"));
+            assert_golden_bits(r.wl_bits, c.get("wl_bits").unwrap(), &format!("{ctx}: wl_bits"));
+            let shares = c.get("shares").and_then(Json::as_arr).unwrap();
+            for (k, g) in shares.iter().enumerate() {
+                assert_golden_bits(r.shares[k], g, &format!("{ctx}: shares[{k}]"));
+            }
+            let bn: Vec<usize> = c
+                .get("bottleneck")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as usize)
+                .collect();
+            assert_eq!(r.bottleneck, bn, "{ctx}: bottleneck");
+            let lat = c.get("layer_latency").and_then(Json::as_arr).unwrap();
+            assert_eq!(r.layer_latency.len(), lat.len(), "{ctx}: layer count");
+            for (i, g) in lat.iter().enumerate() {
+                assert_golden_bits(r.layer_latency[i], g, &format!("{ctx}: layer_latency[{i}]"));
+            }
+            assert_eq!(
+                trace.total_backoffs() as f64,
+                c.get("total_backoffs").and_then(Json::as_f64).unwrap(),
+                "{ctx}: total_backoffs"
+            );
+            assert_golden_bits(
+                trace.mean_wait_s(),
+                c.get("mean_wait_s").unwrap(),
+                &format!("{ctx}: mean_wait_s"),
+            );
+            let ser = c.get("mean_serialize").and_then(Json::as_arr).unwrap();
+            let nop = c.get("mean_nop_residual").and_then(Json::as_arr).unwrap();
+            for (i, lt) in trace.layers.iter().enumerate() {
+                assert_golden_bits(
+                    lt.mean_serialize(),
+                    &ser[i],
+                    &format!("{ctx}: mean_serialize[{i}]"),
+                );
+                assert_golden_bits(
+                    lt.mean_nop_residual(),
+                    &nop[i],
+                    &format!("{ctx}: mean_nop_residual[{i}]"),
+                );
+            }
+            if let Some(samples) = c.get("trace_samples").and_then(Json::as_arr) {
+                assert_eq!(samples.len(), trace.layers.len(), "{ctx}: trace layer count");
+                for (i, (lt, rows)) in trace.layers.iter().zip(samples).enumerate() {
+                    let rows = rows.as_arr().unwrap();
+                    assert_eq!(lt.samples.len(), rows.len(), "{ctx}: layer {i} draws");
+                    for (d, (smp, row)) in lt.samples.iter().zip(rows).enumerate() {
+                        let row = row.as_arr().unwrap();
+                        let at = format!("{ctx}: layer {i} draw {d}");
+                        assert_golden_bits(smp.wl_bits, &row[0], &format!("{at}: wl_bits"));
+                        assert_golden_bits(
+                            smp.t_serialize,
+                            &row[1],
+                            &format!("{at}: t_serialize"),
+                        );
+                        assert_golden_bits(smp.t_wait, &row[2], &format!("{at}: t_wait"));
+                        assert_eq!(
+                            smp.backoffs as f64,
+                            row[3].as_f64().unwrap(),
+                            "{at}: backoffs"
+                        );
+                        assert_golden_bits(
+                            smp.t_nop_residual,
+                            &row[4],
+                            &format!("{at}: t_nop_residual"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Campaign-level invariance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stochastic_campaign_json_is_worker_invariant_and_matches_reference() {
+    let pkg = Package::new(ArchConfig::default()).unwrap();
+    let names = ["zfnet", "alexnet"];
+    let tensors: Vec<CostTensors> =
+        names.iter().map(|n| paper_tensors(&pkg, n)).collect();
+    let workloads: Vec<CampaignWorkload> = names
+        .iter()
+        .zip(&tensors)
+        .map(|(n, t)| CampaignWorkload {
+            name: n.to_string(),
+            tensors: t,
+            t_wired: None,
+            comap: None,
+        })
+        .collect();
+    let mk_spec = |workers: usize| CampaignSpec {
+        backend: EvalBackend::Stochastic {
+            draws: 8,
+            seed: 0x5EED,
+        },
+        workers,
+        ..CampaignSpec::default()
+    };
+    let r1 = run_campaign(&workloads, &mk_spec(1), Runtime::native).unwrap();
+    let r4 = run_campaign(&workloads, &mk_spec(4), Runtime::native).unwrap();
+    assert_eq!(
+        r1.to_json().render(),
+        r4.to_json().render(),
+        "campaign JSON must be byte-identical across worker counts"
+    );
+
+    // Every per-unit sweep must match the frozen sequential reference
+    // on the unit's workload-derived seed stream — campaigns evaluate
+    // through `EvalBackend::for_workload`, and the prepared totals-only
+    // path inside `engine_sweep` must not move a bit relative to the
+    // pre-refactor per-point evaluation.
+    let spec = mk_spec(1);
+    for (w, t) in r1.workloads.iter().zip(&tensors) {
+        let (draws, seed) = derived(&spec.backend, &w.name);
+        for b in &w.per_bw {
+            let reference = engine_sweep(
+                t,
+                &spec.thresholds,
+                &spec.pinjs,
+                b.bandwidth,
+                &SequentialReference { draws, seed },
+            )
+            .unwrap();
+            assert_sweep_eq(
+                &b.sweep,
+                &reference,
+                &format!("{} bw={:.0e}", w.name, b.bandwidth),
+            );
+        }
+    }
+}
